@@ -1,0 +1,88 @@
+//! Full §V evaluation in one run: regenerates the paper's tables/figures
+//! at a reduced but meaningful scale and prints the headline comparison
+//! (hybrid cutting plane vs radix-sort baseline). `make bench` / the
+//! criterion-style benches in `rust/benches/` run the bigger sweeps; this
+//! example is the one-command smoke of the whole evaluation, recorded in
+//! EXPERIMENTS.md.
+
+use cp_select::harness::{self, report, Backend, Runner, TableConfig};
+use cp_select::runtime::Runtime;
+use cp_select::select::DType;
+
+fn main() -> cp_select::Result<()> {
+    // Substrate choice: host by default — its reduction:sort cost balance
+    // matches the paper's GPU (EXPERIMENTS.md "substrate calibration");
+    // set CP_EVAL_BACKEND=device to run over the PJRT artifacts instead.
+    let dir = Runtime::default_dir();
+    let want_device = std::env::var("CP_EVAL_BACKEND").as_deref() == Ok("device");
+    let device = want_device && dir.join("manifest.json").exists();
+    let backend = if device {
+        Backend::Device { artifacts_dir: dir, flavor: cp_select::runtime::Flavor::Jnp }
+    } else {
+        Backend::Host
+    };
+    let mut runner = Runner::new(backend)?;
+    println!(
+        "full evaluation on {} backend\n",
+        if device { "PJRT device" } else { "host" }
+    );
+
+    // Tables I & II (reduced sweep) + Fig 2/3 CSVs
+    for dtype in [DType::F32, DType::F64] {
+        let cfg = TableConfig {
+            dtype,
+            log2_sizes: vec![13, 15, 17, 19],
+            instances: 2,
+            reps: 2,
+            ..Default::default()
+        };
+        let table = harness::run_table(&mut runner, &cfg)?;
+        println!("{}", report::table_markdown(&table));
+        let stem = format!("example_table_{}", dtype.name());
+        report::write_result(std::path::Path::new("results"), &format!("{stem}.csv"),
+                             &report::table_csv(&table))?;
+
+        // headline: hybrid vs sort at the largest size of this sweep
+        let sort_row = table.rows.iter().find(|r| r.label.contains("Radix")).unwrap();
+        let hyb_row = table.rows.iter().find(|r| r.label.contains("Cutting Plane")).unwrap();
+        if let (Some(s), Some(h)) = (sort_row.ms.last().copied().flatten(),
+                                     hyb_row.ms.last().copied().flatten()) {
+            println!(
+                "headline ({}, n=2^19): sort {:.2} ms vs hybrid {:.2} ms -> {:.2}x\n",
+                dtype.name(),
+                s,
+                h,
+                s / h
+            );
+        }
+    }
+
+    // Fig 4 trace
+    let trace = harness::trace_fig4(4096, 42)?;
+    report::write_result(
+        std::path::Path::new("results"),
+        "example_fig4_trace.csv",
+        &report::trace_csv(&trace),
+    )?;
+    println!("fig 4: cutting plane converged in {} iterations (trace written)",
+             trace.last().map(|t| t.iter).unwrap_or(0));
+
+    // Fig 5 sweep
+    let pts = harness::outlier_sweep_fig5(&mut runner, 1 << 15, &[1e3, 1e7, 1e11], DType::F64, 7)?;
+    report::write_result(
+        std::path::Path::new("results"),
+        "example_fig5.csv",
+        &report::outlier_csv(&pts),
+    )?;
+    println!("\nfig 5 (outlier sensitivity, probes per magnitude):");
+    for m in ["cutting-plane", "bisection", "brent-min"] {
+        let series: Vec<String> = pts
+            .iter()
+            .filter(|p| p.method == m)
+            .map(|p| format!("{:.0e}:{}", p.magnitude, p.probes))
+            .collect();
+        println!("  {m:>14}: {}", series.join("  "));
+    }
+    println!("\nall outputs under results/");
+    Ok(())
+}

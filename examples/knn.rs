@@ -1,0 +1,135 @@
+//! kNN via order statistics (paper §VI, application 2; DESIGN.md E11).
+//!
+//! Device path: distances computed by the AOT `dists` artifact (L1 Pallas
+//! kernel), the k-th order statistic found by the cutting plane over the
+//! device-resident distance vector, and the prediction read from one
+//! `knn_weighted_sum` thresholded reduction — no sort anywhere.
+
+use std::rc::Rc;
+
+use cp_select::knn::KnnModel;
+use cp_select::regression::HostSelector;
+use cp_select::runtime::{DeviceEvaluator, Kernel, Runtime};
+use cp_select::select::{self, DType, Method};
+use cp_select::stats::Rng;
+
+fn device_knn_predict(
+    rt: &Rc<Runtime>,
+    x_flat: &[f64],
+    f: &[f64],
+    q: &[f64],
+    n: usize,
+    p: usize,
+    k: usize,
+) -> cp_select::Result<f64> {
+    // distances on device
+    let bucket = rt.manifest.bucket_for(Kernel::Dists, rt.flavor, DType::F64, n)?;
+    let exe = rt.executable(Kernel::Dists, rt.flavor, DType::F64, bucket, Some(p))?;
+    let xb = rt.upload_matrix(x_flat, n, p, DType::F64, bucket)?;
+    let qb = rt.upload_vector(q, DType::F64, p)?;
+    let out = exe.run(&[&xb, &qb])?;
+    let mut d = cp_select::runtime::client::literal_vec_f64(&out[0], DType::F64)?;
+    d.truncate(n);
+
+    // k-th order statistic of d via cutting plane (device reductions)
+    let mut ev = DeviceEvaluator::upload(rt, &d, DType::F64)?;
+    let t = select::order_statistic(&mut ev, k, Method::CuttingPlane)?.value;
+
+    // thresholded weighted reduction on device
+    let kb = rt
+        .manifest
+        .bucket_for(Kernel::KnnWeightedSum, rt.flavor, DType::F64, n)?;
+    let exe = rt.executable(Kernel::KnnWeightedSum, rt.flavor, DType::F64, kb, None)?;
+    let db = rt.upload_vector(&d, DType::F64, kb)?;
+    let fb = rt.upload_vector(f, DType::F64, kb)?;
+    let tb = rt.upload_scalar(t, DType::F64)?;
+    let nv = rt.upload_i32(n as i32)?;
+    let out = exe.run(&[&db, &fb, &tb, &nv])?;
+    let swf = cp_select::runtime::client::literal_scalar_f64(&out[0], DType::F64)?;
+    let sw = cp_select::runtime::client::literal_scalar_f64(&out[1], DType::F64)?;
+    Ok(swf / sw)
+}
+
+fn main() -> cp_select::Result<()> {
+    let n = 4096;
+    let p = 8;
+    let k = 12;
+    let mut rng = Rng::seeded(77);
+
+    // target: f(x) = sum of sin over the first 3 coordinates
+    let mut rows = Vec::with_capacity(n);
+    let mut f = Vec::with_capacity(n);
+    for _ in 0..n {
+        let row: Vec<f64> = (0..p).map(|_| rng.range(0.0, 2.0)).collect();
+        f.push(row[..3].iter().map(|v| v.sin()).sum::<f64>());
+        rows.push(row);
+    }
+    let model = KnnModel::new(rows.clone(), f.clone())?;
+    let mut sel = HostSelector::default();
+
+    let queries: Vec<Vec<f64>> =
+        (0..20).map(|_| (0..p).map(|_| rng.range(0.3, 1.7)).collect()).collect();
+
+    // host path
+    let t0 = std::time::Instant::now();
+    let mut host_err = 0.0;
+    for q in &queries {
+        let pred = model.predict_regression(q, k, &mut sel)?;
+        let truth: f64 = q[..3].iter().map(|v| v.sin()).sum();
+        host_err += (pred - truth).abs();
+    }
+    println!(
+        "host kNN   : mean|err| = {:.4} over {} queries ({:.1} ms)",
+        host_err / queries.len() as f64,
+        queries.len(),
+        t0.elapsed().as_secs_f64() * 1e3
+    );
+
+    // device path
+    let dir = Runtime::default_dir();
+    if dir.join("manifest.json").exists() {
+        let rt = Runtime::new(&dir)?;
+        let x_flat: Vec<f64> = rows.iter().flatten().copied().collect();
+        let t0 = std::time::Instant::now();
+        let mut dev_err = 0.0;
+        let mut agree = 0.0f64;
+        for q in &queries {
+            let pred = device_knn_predict(&rt, &x_flat, &f, q, n, p, k)?;
+            let truth: f64 = q[..3].iter().map(|v| v.sin()).sum();
+            dev_err += (pred - truth).abs();
+            let host_pred = model.predict_regression(q, k, &mut sel)?;
+            agree = agree.max((pred - host_pred).abs());
+        }
+        println!(
+            "device kNN : mean|err| = {:.4} over {} queries ({:.1} ms); \
+             max host/device disagreement = {:.2e}",
+            dev_err / queries.len() as f64,
+            queries.len(),
+            t0.elapsed().as_secs_f64() * 1e3,
+            agree
+        );
+    } else {
+        println!("device kNN : skipped (run `make artifacts`)");
+    }
+
+    // classification demo
+    let mut xs = Vec::new();
+    let mut labels = Vec::new();
+    for _ in 0..500 {
+        let c = rng.below(3) as f64;
+        let center = c * 4.0;
+        xs.push(vec![center + rng.normal() * 0.6, center + rng.normal() * 0.6]);
+        labels.push(c);
+    }
+    let clf = KnnModel::new(xs, labels)?;
+    let mut correct = 0;
+    for trial in 0..60 {
+        let c = (trial % 3) as f64;
+        let q = [c * 4.0 + rng.normal() * 0.4, c * 4.0 + rng.normal() * 0.4];
+        if clf.predict_class(&q, 9, &mut sel)? == c as i64 {
+            correct += 1;
+        }
+    }
+    println!("classification: {correct}/60 correct on 3 gaussian blobs (k=9)");
+    Ok(())
+}

@@ -1,0 +1,51 @@
+//! Quickstart: compute a median on the device runtime in a dozen lines.
+//!
+//! ```bash
+//! make artifacts                       # once: AOT-lower the kernels
+//! cargo run --release --example quickstart
+//! ```
+//!
+//! Falls back to the host oracle when artifacts are missing, so the example
+//! always runs.
+
+use cp_select::runtime::{DeviceEvaluator, Runtime};
+use cp_select::select::{self, Evaluator, HostEvaluator, Method};
+use cp_select::stats::{Distribution, Rng};
+
+fn main() -> cp_select::Result<()> {
+    // 1) get some data (pretend it was produced on the device, as in the
+    //    paper's regression workload)
+    let mut rng = Rng::seeded(7);
+    let data = Distribution::HalfNormal.sample_vec(&mut rng, 1 << 20);
+
+    // 2) build an evaluator: device-backed if artifacts exist
+    let dir = Runtime::default_dir();
+    let mut ev: Box<dyn Evaluator> = if dir.join("manifest.json").exists() {
+        let rt = Runtime::new(&dir)?;
+        println!("backend: PJRT {} (artifacts: {})", rt.platform(), dir.display());
+        Box::new(DeviceEvaluator::upload(&rt, &data, select::DType::F64)?)
+    } else {
+        println!("backend: host oracle (run `make artifacts` for the device path)");
+        Box::new(HostEvaluator::new(&data))
+    };
+
+    // 3) median by the paper's hybrid method (cutting plane + copy_if +
+    //    radix sort of the surviving pivot interval)
+    let t0 = std::time::Instant::now();
+    let r = select::median(ev.as_mut(), Method::Hybrid)?;
+    println!(
+        "median of {} samples = {:.6} ({} device reductions, {:.2} ms)",
+        data.len(),
+        r.value,
+        r.probes,
+        t0.elapsed().as_secs_f64() * 1e3
+    );
+
+    // 4) arbitrary order statistics / quantiles through the same evaluator
+    for q in [0.01, 0.25, 0.75, 0.99] {
+        let k = ((q * data.len() as f64).ceil() as usize).clamp(1, data.len());
+        let r = select::order_statistic(ev.as_mut(), k, Method::CuttingPlane)?;
+        println!("q{:>4}: x_({k}) = {:.6}", (q * 100.0) as u32, r.value);
+    }
+    Ok(())
+}

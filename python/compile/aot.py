@@ -1,0 +1,255 @@
+"""AOT pipeline: lower every Layer-2 graph to HLO text + manifest.json.
+
+Interchange format is HLO **text**, not a serialized ``HloModuleProto``:
+jax >= 0.5 emits protos with 64-bit instruction ids which the runtime's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Run once via ``make artifacts``. The rust runtime loads artifacts lazily by
+``(kernel, flavor, dtype, n, p)`` key through ``manifest.json``; python never
+appears on the request path.
+
+Usage:
+    python -m compile.aot --out ../artifacts [--min-log2n 12] [--max-log2n 25]
+                          [--report] [--force]
+"""
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+import time
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp  # noqa: E402
+from jax._src.lib import xla_client as xc  # noqa: E402
+
+from . import model  # noqa: E402
+
+DTYPE_NAMES = {"float32": "f32", "float64": "f64", "int32": "i32"}
+JNP_DTYPES = {"f32": jnp.float32, "f64": jnp.float64, "i32": jnp.int32}
+
+# Matrix kernels are emitted for this regression dimension (explanatory
+# variables + intercept). The paper's examples are low-dimensional.
+DEFAULT_P = 8
+
+MANIFEST_VERSION = 2
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the 0.5.1-safe path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def hlo_op_report(text: str) -> dict:
+    """Crude op histogram of an HLO module — used by --report to verify the
+    L2 graphs stay fused (no duplicated passes over x)."""
+    ops = {}
+    for line in text.splitlines():
+        line = line.strip()
+        if "=" not in line or line.startswith(("HloModule", "ENTRY", "//", "%")):
+            pass
+        body = line.split("=", 1)[-1].strip()
+        # e.g. "f32[4096]{0} add(f32[4096]{0} ..." -> "add"
+        parts = body.split("(", 1)
+        if len(parts) == 2:
+            head = parts[0].split()
+            if head:
+                op = head[-1]
+                if op.isidentifier():
+                    ops[op] = ops.get(op, 0) + 1
+    return ops
+
+
+def spec_args(sig):
+    out = []
+    for shape, dtype in sig:
+        out.append(jax.ShapeDtypeStruct(shape, JNP_DTYPES[DTYPE_NAMES.get(dtype, dtype)]))
+    return out
+
+
+def entry_plan(min_log2n: int, max_log2n: int, p: int,
+               small_max_log2n: int, matrix_max_log2n: int,
+               pallas_max_log2n: int = 16):
+    """Enumerate (kernel, flavor, dtype, n, p) artifact entries.
+
+    The ``jnp`` flavor (XLA-fused single-pass reduce) is the runtime default
+    on the CPU substrate. The ``pallas`` flavor — the authored TPU kernel,
+    interpret-lowered — is emitted for buckets up to ``pallas_max_log2n``:
+    interpret mode exists for correctness and the flavor ablation, not for
+    wallclock (DESIGN.md §2, §6.4).
+    """
+    vec_buckets = [1 << k for k in range(min_log2n, max_log2n + 1)]
+    small_buckets = [1 << k for k in range(min_log2n, min(small_max_log2n, max_log2n) + 1)]
+    mat_buckets = [1 << k for k in range(min_log2n, min(matrix_max_log2n, max_log2n) + 1)]
+    pallas_cap = 1 << pallas_max_log2n
+    dtypes = ["f32", "f64"]
+
+    plan = []
+    for dt in dtypes:
+        for n in vec_buckets:
+            plan.append(("fused_objective", "jnp", dt, n, None))
+            plan.append(("minmaxsum", "jnp", dt, n, None))
+            plan.append(("neighbors", "jnp", dt, n, None))
+            plan.append(("interval_count", "jnp", dt, n, None))
+            if n <= pallas_cap:
+                plan.append(("fused_objective", "pallas", dt, n, None))
+                plan.append(("minmaxsum", "pallas", dt, n, None))
+                plan.append(("neighbors", "pallas", dt, n, None))
+        for n in small_buckets:
+            plan.append(("threshold_stats", "jnp", dt, n, None))
+            plan.append(("knn_weighted_sum", "jnp", dt, n, None))
+        for n in mat_buckets:
+            plan.append(("residuals", "jnp", dt, n, p))
+            plan.append(("lms_probe", "jnp", dt, n, p))
+            plan.append(("dists", "jnp", dt, n, p))
+            if n <= pallas_cap:
+                plan.append(("residuals", "pallas", dt, n, p))
+                plan.append(("lms_probe", "pallas", dt, n, p))
+                plan.append(("dists", "pallas", dt, n, p))
+    return plan
+
+
+def build_signature(kernel, dtype, n, p):
+    _, sig_builder, kind = model.REGISTRY[kernel]
+    if kind == "matrix":
+        return sig_builder(n, p, dtype)
+    return sig_builder(n, dtype)
+
+
+def artifact_filename(kernel, flavor, dtype, n, p):
+    stem = f"{kernel}.{flavor}.{dtype}.n{n}"
+    if p is not None:
+        stem += f".p{p}"
+    return stem + ".hlo.txt"
+
+
+def lower_entry(kernel, flavor, dtype, n, p):
+    fn, _, _ = model.build(kernel, flavor)
+    sig = build_signature(kernel, dtype, n, p)
+    args = spec_args(sig)
+    lowered = jax.jit(fn).lower(*args)
+    return to_hlo_text(lowered), sig
+
+
+def output_spec(kernel, dtype, n, p):
+    """Abstract-eval the graph to record output shapes/dtypes in the manifest."""
+    fn, _, _ = model.build(kernel, "jnp")
+    sig = build_signature(kernel, dtype, n, p)
+    out = jax.eval_shape(fn, *spec_args(sig))
+    specs = []
+    for o in out:
+        name = DTYPE_NAMES.get(o.dtype.name, o.dtype.name)
+        specs.append({"dtype": name, "shape": list(o.shape)})
+    return specs
+
+
+def plan_digest(plan) -> str:
+    h = hashlib.sha256()
+    for e in plan:
+        h.update(repr(e).encode())
+    # Key source files participate in the digest so edits retrigger builds.
+    here = os.path.dirname(os.path.abspath(__file__))
+    for rel in ("model.py", "kernels/reductions.py", "kernels/regression.py",
+                "kernels/ref.py", "aot.py"):
+        with open(os.path.join(here, rel), "rb") as f:
+            h.update(f.read())
+    return h.hexdigest()
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--min-log2n", type=int, default=12)
+    ap.add_argument("--max-log2n", type=int, default=25)
+    ap.add_argument("--small-max-log2n", type=int, default=21,
+                    help="cap for threshold_stats / knn_weighted_sum buckets")
+    ap.add_argument("--matrix-max-log2n", type=int, default=20,
+                    help="cap for residuals / lms_probe / dists buckets")
+    ap.add_argument("--pallas-max-log2n", type=int, default=16,
+                    help="largest bucket also emitted in the pallas flavor")
+    ap.add_argument("--p", type=int, default=DEFAULT_P)
+    ap.add_argument("--report", action="store_true",
+                    help="print an HLO op histogram per artifact")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args(argv)
+
+    out_dir = os.path.abspath(args.out)
+    os.makedirs(out_dir, exist_ok=True)
+    manifest_path = os.path.join(out_dir, "manifest.json")
+
+    plan = entry_plan(args.min_log2n, args.max_log2n, args.p,
+                      args.small_max_log2n, args.matrix_max_log2n,
+                      args.pallas_max_log2n)
+    digest = plan_digest(plan)
+
+    if not args.force and os.path.exists(manifest_path):
+        try:
+            with open(manifest_path) as f:
+                old = json.load(f)
+            if old.get("digest") == digest and all(
+                os.path.exists(os.path.join(out_dir, e["path"]))
+                for e in old.get("entries", [])
+            ):
+                print(f"artifacts up to date ({len(old['entries'])} entries), "
+                      f"nothing to do")
+                return 0
+        except (json.JSONDecodeError, KeyError, OSError):
+            pass  # rebuild on any manifest damage
+
+    entries = []
+    t0 = time.time()
+    for i, (kernel, flavor, dtype, n, p) in enumerate(plan):
+        fname = artifact_filename(kernel, flavor, dtype, n, p)
+        path = os.path.join(out_dir, fname)
+        text, sig = lower_entry(kernel, flavor, dtype, n, p)
+        with open(path, "w") as f:
+            f.write(text)
+        inputs = [{"dtype": DTYPE_NAMES.get(dt, dt), "shape": list(shape)}
+                  for shape, dt in sig]
+        entries.append({
+            "kernel": kernel,
+            "flavor": flavor,
+            "dtype": dtype,
+            "n": n,
+            "p": p,
+            "path": fname,
+            "inputs": inputs,
+            "outputs": output_spec(kernel, dtype, n, p),
+        })
+        if args.report:
+            ops = hlo_op_report(text)
+            interesting = {k: v for k, v in sorted(ops.items())
+                           if k in ("add", "multiply", "subtract", "compare",
+                                    "select", "reduce", "while", "fusion",
+                                    "dynamic-slice", "dot", "convert")}
+            print(f"{fname}: {interesting}")
+        if (i + 1) % 25 == 0:
+            print(f"  lowered {i + 1}/{len(plan)} "
+                  f"({time.time() - t0:.1f}s)", file=sys.stderr)
+
+    manifest = {
+        "version": MANIFEST_VERSION,
+        "digest": digest,
+        "default_p": args.p,
+        "min_log2n": args.min_log2n,
+        "max_log2n": args.max_log2n,
+        "entries": entries,
+    }
+    with open(manifest_path, "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {len(entries)} artifacts + manifest to {out_dir} "
+          f"in {time.time() - t0:.1f}s")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,44 @@
+"""Layer-1 Pallas kernels for cp-select.
+
+Every kernel here is the TPU-shaped (Pallas) implementation of one device
+primitive the paper needs (Beliakov 2011, GPU median via convex minimization):
+
+- ``fused_objective`` — the paper's ``thrust::transform_reduce`` computing the
+  sufficient statistics of the convex objective f(y) = sum |x_i - y| and its
+  subgradient in a single pass (Fig. 1 of the paper).
+- ``minmaxsum``       — the single fused reduction that seeds Kelley's cutting
+  plane with y_L = x_(1), y_R = x_(n) and sum(x) (Section IV).
+- ``neighbors``       — exact-median fixup: largest x_i <= y, smallest
+  x_i >= y, and rank counts (footnote 1 of the paper).
+- ``interval_count``  — pivot-interval occupancy for the hybrid method.
+- ``threshold_stats`` — LTS rho-trick reduction (Section VI, Eq. 4).
+- ``residuals``       — |X @ theta - y| for the regression application.
+- ``dists``           — squared distances for the kNN application.
+- ``knn_weighted_sum``— weighted kNN prediction as a thresholded reduction.
+
+All kernels are lowered with ``interpret=True`` (CPU-PJRT substrate; a real
+TPU lowering would produce Mosaic custom-calls). Correctness oracle:
+``kernels/ref.py``; pytest compares them under hypothesis sweeps.
+"""
+
+from . import ref  # noqa: F401
+from .reductions import (  # noqa: F401
+    fused_objective,
+    minmaxsum,
+    neighbors,
+    interval_count,
+    threshold_stats,
+)
+from .regression import residuals, dists, knn_weighted_sum  # noqa: F401
+
+__all__ = [
+    "fused_objective",
+    "minmaxsum",
+    "neighbors",
+    "interval_count",
+    "threshold_stats",
+    "residuals",
+    "dists",
+    "knn_weighted_sum",
+    "ref",
+]

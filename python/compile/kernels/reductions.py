@@ -1,0 +1,364 @@
+"""Fused transform-reduce Pallas kernels (Layer 1).
+
+The paper's single device primitive is a fused transform-reduce over the
+device-resident array ``x`` against a scalar probe ``y`` (Fig. 1 in the
+paper, implemented there with ``thrust::transform_reduce``). Here each
+kernel is a Pallas grid over VMEM-sized blocks of ``x``; per-block partial
+reductions run on the VPU and are accumulated across sequential grid steps
+into scalar output refs (the TPU analogue of the paper's shared-memory
+partial sums + final combine).
+
+Padding convention: arrays are padded up to the artifact's bucket size; a
+scalar ``n_valid`` masks the tail via a global-index comparison, so the pad
+value itself is never observed.
+
+All ``pallas_call``s use ``interpret=True``: the CPU PJRT plugin cannot run
+Mosaic custom-calls, so the kernels lower to plain HLO (see DESIGN.md
+"Hardware adaptation").
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# One VMEM block: 64Ki f32 = 256 KiB (f64: 512 KiB), far below the ~16 MiB
+# VMEM budget so a real TPU lowering could double-buffer HBM->VMEM streams.
+DEFAULT_BLOCK = 65536
+
+
+def _block_for(n: int, block: int | None = None) -> int:
+    b = block or DEFAULT_BLOCK
+    b = min(b, n)
+    if n % b != 0:
+        raise ValueError(f"n={n} must be a multiple of the block size {b}")
+    return b
+
+
+def _scalar_spec():
+    # Scalar operands/outputs travel as shape-(1,) arrays pinned to block 0
+    # for every grid step (the accumulator trick relies on this).
+    return pl.BlockSpec((1,), lambda i: (0,))
+
+
+def _valid_mask(pid, block, n_valid):
+    idx = pid * block + jax.lax.iota(jnp.int32, block)
+    return idx < n_valid
+
+
+# ---------------------------------------------------------------------------
+# fused_objective
+# ---------------------------------------------------------------------------
+
+
+def _fused_objective_kernel(x_ref, y_ref, nv_ref, slo_ref, shi_ref, clt_ref,
+                            ceq_ref, cgt_ref, *, block):
+    pid = pl.program_id(0)
+    x = x_ref[...]
+    y = y_ref[0]
+    valid = _valid_mask(pid, block, nv_ref[0])
+
+    d = x - y
+    lt = valid & (d < 0)
+    gt = valid & (d > 0)
+    eq = valid & (d == 0)
+
+    # Branchless selects: the paper notes Eq. (2) introduces "only minimal
+    # branching"; on the VPU these are lane-wise selects, no divergence.
+    zero = jnp.zeros((), dtype=x.dtype)
+    slo = jnp.sum(jnp.where(lt, -d, zero))
+    shi = jnp.sum(jnp.where(gt, d, zero))
+    clt = jnp.sum(lt.astype(jnp.int32))
+    ceq = jnp.sum(eq.astype(jnp.int32))
+    cgt = jnp.sum(gt.astype(jnp.int32))
+
+    @pl.when(pid == 0)
+    def _init():
+        slo_ref[0] = zero
+        shi_ref[0] = zero
+        clt_ref[0] = jnp.zeros((), jnp.int32)
+        ceq_ref[0] = jnp.zeros((), jnp.int32)
+        cgt_ref[0] = jnp.zeros((), jnp.int32)
+
+    slo_ref[0] = slo_ref[0] + slo
+    shi_ref[0] = shi_ref[0] + shi
+    clt_ref[0] = clt_ref[0] + clt
+    ceq_ref[0] = ceq_ref[0] + ceq
+    cgt_ref[0] = cgt_ref[0] + cgt
+
+
+def fused_objective(x, y, n_valid, *, block=None):
+    """Sufficient statistics of the convex selection objective at probe y.
+
+    Returns ``(s_lo, s_hi, c_lt, c_eq, c_gt)`` where
+
+    - ``s_lo = sum_{x_i < y} (y - x_i)``  (counted over valid entries only)
+    - ``s_hi = sum_{x_i > y} (x_i - y)``
+    - ``c_lt/c_eq/c_gt``: counts of valid ``x_i`` <,==,> ``y`` (int32).
+
+    The host composes, for any order statistic k (Eqs. 1-2 of the paper):
+    ``f(y) = (k - 1/2) * s_lo + (n - k + 1/2) * s_hi`` and the subgradient
+    interval from the counts. For the median both weights are n/2-ish and
+    ``f = s_lo + s_hi``.
+    """
+    n = x.shape[0]
+    block = _block_for(n, block)
+    dt = x.dtype
+    y = jnp.asarray(y, dt).reshape((1,))
+    n_valid = jnp.asarray(n_valid, jnp.int32).reshape((1,))
+    kernel = functools.partial(_fused_objective_kernel, block=block)
+    out = pl.pallas_call(
+        kernel,
+        grid=(n // block,),
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            _scalar_spec(),
+            _scalar_spec(),
+        ],
+        out_specs=[_scalar_spec()] * 5,
+        out_shape=[
+            jax.ShapeDtypeStruct((1,), dt),
+            jax.ShapeDtypeStruct((1,), dt),
+            jax.ShapeDtypeStruct((1,), jnp.int32),
+            jax.ShapeDtypeStruct((1,), jnp.int32),
+            jax.ShapeDtypeStruct((1,), jnp.int32),
+        ],
+        interpret=True,
+    )(x, y, n_valid)
+    return tuple(out)
+
+
+# ---------------------------------------------------------------------------
+# minmaxsum
+# ---------------------------------------------------------------------------
+
+
+def _minmaxsum_kernel(x_ref, nv_ref, min_ref, max_ref, sum_ref, *, block):
+    pid = pl.program_id(0)
+    x = x_ref[...]
+    valid = _valid_mask(pid, block, nv_ref[0])
+    dt = x.dtype
+    pinf = jnp.array(jnp.inf, dt)
+    ninf = jnp.array(-jnp.inf, dt)
+    zero = jnp.zeros((), dt)
+
+    bmin = jnp.min(jnp.where(valid, x, pinf))
+    bmax = jnp.max(jnp.where(valid, x, ninf))
+    bsum = jnp.sum(jnp.where(valid, x, zero))
+
+    @pl.when(pid == 0)
+    def _init():
+        min_ref[0] = pinf
+        max_ref[0] = ninf
+        sum_ref[0] = zero
+
+    min_ref[0] = jnp.minimum(min_ref[0], bmin)
+    max_ref[0] = jnp.maximum(max_ref[0], bmax)
+    sum_ref[0] = sum_ref[0] + bsum
+
+
+def minmaxsum(x, n_valid, *, block=None):
+    """Single-pass ``(min, max, sum)`` — seeds the cutting plane (paper §IV).
+
+    The paper stresses that ``y_L = x_(1)``, ``y_R = x_(n)`` and ``sum(x)``
+    come out of *one* reduction (then ``f`` and ``g`` at the ends are closed
+    form: ``g(y_L) = -n + 2``, ``f(y_L) = sum(x) - n*y_L``, ...), so Algorithm
+    1 costs ``maxit + 1`` reductions total.
+    """
+    n = x.shape[0]
+    block = _block_for(n, block)
+    dt = x.dtype
+    n_valid = jnp.asarray(n_valid, jnp.int32).reshape((1,))
+    kernel = functools.partial(_minmaxsum_kernel, block=block)
+    out = pl.pallas_call(
+        kernel,
+        grid=(n // block,),
+        in_specs=[pl.BlockSpec((block,), lambda i: (i,)), _scalar_spec()],
+        out_specs=[_scalar_spec()] * 3,
+        out_shape=[jax.ShapeDtypeStruct((1,), dt)] * 3,
+        interpret=True,
+    )(x, n_valid)
+    return tuple(out)
+
+
+# ---------------------------------------------------------------------------
+# neighbors
+# ---------------------------------------------------------------------------
+
+
+def _neighbors_kernel(x_ref, y_ref, nv_ref, lo_ref, hi_ref, cle_ref, *, block):
+    pid = pl.program_id(0)
+    x = x_ref[...]
+    y = y_ref[0]
+    valid = _valid_mask(pid, block, nv_ref[0])
+    dt = x.dtype
+    pinf = jnp.array(jnp.inf, dt)
+    ninf = jnp.array(-jnp.inf, dt)
+
+    le = valid & (x <= y)
+    ge = valid & (x >= y)
+    blo = jnp.max(jnp.where(le, x, ninf))      # largest x_i <= y
+    bhi = jnp.min(jnp.where(ge, x, pinf))      # smallest x_i >= y
+    bcle = jnp.sum(le.astype(jnp.int32))
+
+    @pl.when(pid == 0)
+    def _init():
+        lo_ref[0] = ninf
+        hi_ref[0] = pinf
+        cle_ref[0] = jnp.zeros((), jnp.int32)
+
+    lo_ref[0] = jnp.maximum(lo_ref[0], blo)
+    hi_ref[0] = jnp.minimum(hi_ref[0], bhi)
+    cle_ref[0] = cle_ref[0] + bcle
+
+
+def neighbors(x, y, n_valid, *, block=None):
+    """Exact-value fixup reduction (paper footnote 1).
+
+    Returns ``(lower, upper, c_le)``: the largest valid ``x_i <= y`` (−inf if
+    none), the smallest valid ``x_i >= y`` (+inf if none), and
+    ``count(x_i <= y)``. Once the cutting plane converges to an approximate
+    minimizer ỹ, one such reduction pins the *exact* order statistic and lets
+    the host verify its rank.
+    """
+    n = x.shape[0]
+    block = _block_for(n, block)
+    dt = x.dtype
+    y = jnp.asarray(y, dt).reshape((1,))
+    n_valid = jnp.asarray(n_valid, jnp.int32).reshape((1,))
+    kernel = functools.partial(_neighbors_kernel, block=block)
+    out = pl.pallas_call(
+        kernel,
+        grid=(n // block,),
+        in_specs=[pl.BlockSpec((block,), lambda i: (i,)), _scalar_spec(),
+                  _scalar_spec()],
+        out_specs=[_scalar_spec()] * 3,
+        out_shape=[
+            jax.ShapeDtypeStruct((1,), dt),
+            jax.ShapeDtypeStruct((1,), dt),
+            jax.ShapeDtypeStruct((1,), jnp.int32),
+        ],
+        interpret=True,
+    )(x, y, n_valid)
+    return tuple(out)
+
+
+# ---------------------------------------------------------------------------
+# interval_count
+# ---------------------------------------------------------------------------
+
+
+def _interval_count_kernel(x_ref, lo_ref_in, hi_ref_in, nv_ref, cle_ref,
+                           cin_ref, cge_ref, *, block):
+    pid = pl.program_id(0)
+    x = x_ref[...]
+    lo = lo_ref_in[0]
+    hi = hi_ref_in[0]
+    valid = _valid_mask(pid, block, nv_ref[0])
+
+    le = valid & (x <= lo)
+    inside = valid & (x > lo) & (x < hi)
+    ge = valid & (x >= hi)
+    ble = jnp.sum(le.astype(jnp.int32))
+    bin_ = jnp.sum(inside.astype(jnp.int32))
+    bge = jnp.sum(ge.astype(jnp.int32))
+
+    @pl.when(pid == 0)
+    def _init():
+        cle_ref[0] = jnp.zeros((), jnp.int32)
+        cin_ref[0] = jnp.zeros((), jnp.int32)
+        cge_ref[0] = jnp.zeros((), jnp.int32)
+
+    cle_ref[0] = cle_ref[0] + ble
+    cin_ref[0] = cin_ref[0] + bin_
+    cge_ref[0] = cge_ref[0] + bge
+
+
+def interval_count(x, lo, hi, n_valid, *, block=None):
+    """Occupancy of the open pivot interval ``]lo, hi[`` (hybrid method §IV).
+
+    Returns int32 ``(c_le, c_in, c_ge)`` = counts of valid ``x_i <= lo``,
+    ``lo < x_i < hi`` and ``x_i >= hi``. ``c_le`` is the paper's ``m`` (rank
+    offset into the compacted array z); ``c_in`` is ``|z|``, used to decide
+    when CP iterations stop paying for themselves.
+    """
+    n = x.shape[0]
+    block = _block_for(n, block)
+    dt = x.dtype
+    lo = jnp.asarray(lo, dt).reshape((1,))
+    hi = jnp.asarray(hi, dt).reshape((1,))
+    n_valid = jnp.asarray(n_valid, jnp.int32).reshape((1,))
+    kernel = functools.partial(_interval_count_kernel, block=block)
+    out = pl.pallas_call(
+        kernel,
+        grid=(n // block,),
+        in_specs=[pl.BlockSpec((block,), lambda i: (i,)), _scalar_spec(),
+                  _scalar_spec(), _scalar_spec()],
+        out_specs=[_scalar_spec()] * 3,
+        out_shape=[jax.ShapeDtypeStruct((1,), jnp.int32)] * 3,
+        interpret=True,
+    )(x, lo, hi, n_valid)
+    return tuple(out)
+
+
+# ---------------------------------------------------------------------------
+# threshold_stats (LTS rho-trick, paper §VI Eq. 4)
+# ---------------------------------------------------------------------------
+
+
+def _threshold_stats_kernel(r_ref, t_ref, nv_ref, ssq_ref, clt_ref, ceq_ref,
+                            *, block):
+    pid = pl.program_id(0)
+    r = r_ref[...]
+    t = t_ref[0]
+    valid = _valid_mask(pid, block, nv_ref[0])
+    dt = r.dtype
+    zero = jnp.zeros((), dt)
+
+    lt = valid & (r < t)
+    eq = valid & (r == t)
+    bssq = jnp.sum(jnp.where(lt, r * r, zero))
+    bclt = jnp.sum(lt.astype(jnp.int32))
+    bceq = jnp.sum(eq.astype(jnp.int32))
+
+    @pl.when(pid == 0)
+    def _init():
+        ssq_ref[0] = zero
+        clt_ref[0] = jnp.zeros((), jnp.int32)
+        ceq_ref[0] = jnp.zeros((), jnp.int32)
+
+    ssq_ref[0] = ssq_ref[0] + bssq
+    clt_ref[0] = clt_ref[0] + bclt
+    ceq_ref[0] = ceq_ref[0] + bceq
+
+
+def threshold_stats(r, t, n_valid, *, block=None):
+    """LTS trimmed-sum statistics (paper Eq. 4).
+
+    Returns ``(ssq_below, c_lt, c_eq)``: the sum of ``r_i**2`` over valid
+    ``r_i < t``, and the counts of ``r_i < t`` / ``r_i == t``. With
+    ``t = Med(|r|)`` the host forms the exact sum of the ``h`` smallest
+    squared residuals as ``ssq_below + a * t**2`` with ``a = h - c_lt``,
+    replacing the partial sort the LTS definition appears to require.
+    """
+    n = r.shape[0]
+    block = _block_for(n, block)
+    dt = r.dtype
+    t = jnp.asarray(t, dt).reshape((1,))
+    n_valid = jnp.asarray(n_valid, jnp.int32).reshape((1,))
+    kernel = functools.partial(_threshold_stats_kernel, block=block)
+    out = pl.pallas_call(
+        kernel,
+        grid=(n // block,),
+        in_specs=[pl.BlockSpec((block,), lambda i: (i,)), _scalar_spec(),
+                  _scalar_spec()],
+        out_specs=[_scalar_spec()] * 3,
+        out_shape=[
+            jax.ShapeDtypeStruct((1,), dt),
+            jax.ShapeDtypeStruct((1,), jnp.int32),
+            jax.ShapeDtypeStruct((1,), jnp.int32),
+        ],
+        interpret=True,
+    )(r, t, n_valid)
+    return tuple(out)

@@ -1,0 +1,131 @@
+"""Pure-jnp oracle for every Layer-1 kernel.
+
+These are the ground-truth implementations the Pallas kernels are tested
+against (pytest + hypothesis), and also the ``jnp`` artifact flavor that the
+rust runtime executes by default on the CPU substrate (DESIGN.md §6.4): a
+single **variadic** ``lax.reduce`` makes each probe one fused pass over x,
+which is the practical roofline of this backend (measured 11x faster than
+the naive five-reduction formulation; see EXPERIMENTS.md §Perf/L2).
+
+Each function has exactly the same signature and padding/masking semantics
+as its Pallas twin in ``reductions.py`` / ``regression.py``.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def _mask(x, n_valid):
+    idx = jax.lax.iota(jnp.int32, x.shape[0])
+    return idx < jnp.asarray(n_valid, jnp.int32).reshape(())
+
+
+def _reduce1(operands, inits, combiners):
+    """Variadic single-pass reduction; returns shape-(1,) arrays."""
+    def comp(a, b):
+        return tuple(c(u, v) for c, u, v in zip(combiners, a, b))
+    out = jax.lax.reduce(tuple(operands), tuple(inits), comp, (0,))
+    return tuple(o.reshape((1,)) for o in out)
+
+
+def fused_objective(x, y, n_valid):
+    y = jnp.asarray(y, x.dtype).reshape(())
+    valid = _mask(x, n_valid)
+    d = x - y
+    lt = valid & (d < 0)
+    gt = valid & (d > 0)
+    eq = valid & (d == 0)
+    zero = jnp.zeros((), x.dtype)
+    add = jnp.add
+    return _reduce1(
+        (jnp.where(lt, -d, zero), jnp.where(gt, d, zero),
+         lt.astype(jnp.int32), eq.astype(jnp.int32), gt.astype(jnp.int32)),
+        (zero, zero, jnp.int32(0), jnp.int32(0), jnp.int32(0)),
+        (add, add, add, add, add),
+    )
+
+
+def minmaxsum(x, n_valid):
+    valid = _mask(x, n_valid)
+    dt = x.dtype
+    pinf = jnp.array(jnp.inf, dt)
+    ninf = jnp.array(-jnp.inf, dt)
+    zero = jnp.zeros((), dt)
+    return _reduce1(
+        (jnp.where(valid, x, pinf), jnp.where(valid, x, ninf),
+         jnp.where(valid, x, zero)),
+        (pinf, ninf, zero),
+        (jnp.minimum, jnp.maximum, jnp.add),
+    )
+
+
+def neighbors(x, y, n_valid):
+    y = jnp.asarray(y, x.dtype).reshape(())
+    valid = _mask(x, n_valid)
+    dt = x.dtype
+    pinf = jnp.array(jnp.inf, dt)
+    ninf = jnp.array(-jnp.inf, dt)
+    le = valid & (x <= y)
+    ge = valid & (x >= y)
+    return _reduce1(
+        (jnp.where(le, x, ninf), jnp.where(ge, x, pinf),
+         le.astype(jnp.int32)),
+        (ninf, pinf, jnp.int32(0)),
+        (jnp.maximum, jnp.minimum, jnp.add),
+    )
+
+
+def interval_count(x, lo, hi, n_valid):
+    lo = jnp.asarray(lo, x.dtype).reshape(())
+    hi = jnp.asarray(hi, x.dtype).reshape(())
+    valid = _mask(x, n_valid)
+    le = valid & (x <= lo)
+    inside = valid & (x > lo) & (x < hi)
+    ge = valid & (x >= hi)
+    add = jnp.add
+    return _reduce1(
+        (le.astype(jnp.int32), inside.astype(jnp.int32),
+         ge.astype(jnp.int32)),
+        (jnp.int32(0), jnp.int32(0), jnp.int32(0)),
+        (add, add, add),
+    )
+
+
+def threshold_stats(r, t, n_valid):
+    t = jnp.asarray(t, r.dtype).reshape(())
+    valid = _mask(r, n_valid)
+    zero = jnp.zeros((), r.dtype)
+    lt = valid & (r < t)
+    eq = valid & (r == t)
+    add = jnp.add
+    return _reduce1(
+        (jnp.where(lt, r * r, zero), lt.astype(jnp.int32),
+         eq.astype(jnp.int32)),
+        (zero, jnp.int32(0), jnp.int32(0)),
+        (add, add, add),
+    )
+
+
+def residuals(X, y, theta):
+    return jnp.abs(X @ theta - y)
+
+
+def dists(X, q):
+    diff = X - q[None, :]
+    return jnp.sum(diff * diff, axis=1)
+
+
+def knn_weighted_sum(d, f, t, n_valid):
+    t = jnp.asarray(t, d.dtype).reshape(())
+    valid = _mask(d, n_valid)
+    dt = d.dtype
+    zero = jnp.zeros((), dt)
+    one = jnp.ones((), dt)
+    keep = valid & (d <= t)
+    w = jnp.where(keep, one / (one + d), zero)
+    add = jnp.add
+    return _reduce1(
+        (w * jnp.where(keep, f, zero), w, keep.astype(jnp.int32)),
+        (zero, zero, jnp.int32(0)),
+        (add, add, add),
+    )

@@ -1,0 +1,172 @@
+"""Regression / kNN Pallas kernels (Layer 1).
+
+These feed the paper's two applications (Section VI): high-breakdown robust
+regression (LMS/LTS need ``|X @ theta - y|`` recomputed for every candidate
+``theta``) and kNN (squared distances to a query point). Both keep the bulk
+data device-resident; only scalars (probes, medians, predictions) cross to
+the host, which is the paper's multi-GPU argument in miniature.
+
+The matvec tiles are shaped for the MXU model: a ``(block, p)`` VMEM tile of
+``X`` against a ``(p,)`` replicated ``theta`` (p is small — regression
+dimension), with the row-block grid streaming HBM->VMEM.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .reductions import _scalar_spec, _valid_mask
+
+DEFAULT_ROW_BLOCK = 8192
+
+
+def _row_block_for(n: int, block: int | None = None) -> int:
+    b = block or DEFAULT_ROW_BLOCK
+    b = min(b, n)
+    if n % b != 0:
+        raise ValueError(f"n={n} must be a multiple of the row block {b}")
+    return b
+
+
+# ---------------------------------------------------------------------------
+# residuals: r = |X @ theta - y|
+# ---------------------------------------------------------------------------
+
+
+def _residuals_kernel(x_ref, y_ref, theta_ref, r_ref):
+    x = x_ref[...]            # (block, p) VMEM tile
+    theta = theta_ref[...]    # (p,) replicated across the grid
+    y = y_ref[...]            # (block,)
+    # MXU-shaped contraction; p is tiny so this is effectively a fused
+    # multiply-add across lanes, but the same BlockSpec scales to larger p.
+    pred = jax.lax.dot_general(
+        x, theta, (((1,), (0,)), ((), ())),
+        preferred_element_type=x.dtype,
+    )
+    r_ref[...] = jnp.abs(pred - y)
+
+
+def residuals(X, y, theta, *, block=None):
+    """Absolute residuals ``|X @ theta - y|`` (paper §VI, Eq. 3).
+
+    Output stays on-device: it is the input of ``fused_objective`` (median of
+    residuals for LMS) or ``threshold_stats`` (LTS trimmed sum). Padding rows
+    of ``X``/``y`` are zeros, producing ``r = 0`` pads that downstream
+    kernels mask out via their own ``n_valid``.
+    """
+    n, p = X.shape
+    block = _row_block_for(n, block)
+    out = pl.pallas_call(
+        _residuals_kernel,
+        grid=(n // block,),
+        in_specs=[
+            pl.BlockSpec((block, p), lambda i: (i, 0)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((p,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), X.dtype),
+        interpret=True,
+    )(X, y, theta)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# dists: squared Euclidean distances to a query
+# ---------------------------------------------------------------------------
+
+
+def _dists_kernel(x_ref, q_ref, d_ref):
+    x = x_ref[...]        # (block, p)
+    q = q_ref[...]        # (p,)
+    diff = x - q[None, :]
+    d_ref[...] = jnp.sum(diff * diff, axis=1)
+
+
+def dists(X, q, *, block=None):
+    """Squared Euclidean distances ``d_i = ||X_i - q||^2`` (paper §VI, kNN).
+
+    The k-th order statistic of ``d`` (found by the cutting plane on the
+    host) then acts as the neighbourhood threshold for ``knn_weighted_sum``.
+    """
+    n, p = X.shape
+    block = _row_block_for(n, block)
+    out = pl.pallas_call(
+        _dists_kernel,
+        grid=(n // block,),
+        in_specs=[
+            pl.BlockSpec((block, p), lambda i: (i, 0)),
+            pl.BlockSpec((p,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), X.dtype),
+        interpret=True,
+    )(X, q)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# knn_weighted_sum: thresholded inverse-distance-weighted reduction
+# ---------------------------------------------------------------------------
+
+
+def _knn_sum_kernel(d_ref, f_ref, t_ref, nv_ref, swf_ref, sw_ref, cnt_ref,
+                    *, block):
+    pid = pl.program_id(0)
+    d = d_ref[...]
+    f = f_ref[...]
+    t = t_ref[0]
+    valid = _valid_mask(pid, block, nv_ref[0])
+    dt = d.dtype
+    zero = jnp.zeros((), dt)
+    one = jnp.ones((), dt)
+
+    # Indicator adapted from the paper's rho (Eq. 4): keep d_i <= d_(k).
+    keep = valid & (d <= t)
+    w = jnp.where(keep, one / (one + d), zero)  # decreasing in distance
+    bswf = jnp.sum(w * jnp.where(keep, f, zero))
+    bsw = jnp.sum(w)
+    bcnt = jnp.sum(keep.astype(jnp.int32))
+
+    @pl.when(pid == 0)
+    def _init():
+        swf_ref[0] = zero
+        sw_ref[0] = zero
+        cnt_ref[0] = jnp.zeros((), jnp.int32)
+
+    swf_ref[0] = swf_ref[0] + bswf
+    sw_ref[0] = sw_ref[0] + bsw
+    cnt_ref[0] = cnt_ref[0] + bcnt
+
+
+def knn_weighted_sum(d, f, t, n_valid, *, block=None):
+    """Weighted kNN prediction pieces (paper §VI).
+
+    Returns ``(sum_wf, sum_w, count)`` over valid points with ``d_i <= t``
+    where ``w_i = 1 / (1 + d_i)``. The host forms the kNN regression
+    prediction ``sum_wf / sum_w``; ``count`` verifies that ``t`` really was
+    the k-th order statistic of ``d``.
+    """
+    n = d.shape[0]
+    block = _row_block_for(n, block)
+    dt = d.dtype
+    t = jnp.asarray(t, dt).reshape((1,))
+    n_valid = jnp.asarray(n_valid, jnp.int32).reshape((1,))
+    kernel = functools.partial(_knn_sum_kernel, block=block)
+    out = pl.pallas_call(
+        kernel,
+        grid=(n // block,),
+        in_specs=[pl.BlockSpec((block,), lambda i: (i,)),
+                  pl.BlockSpec((block,), lambda i: (i,)),
+                  _scalar_spec(), _scalar_spec()],
+        out_specs=[_scalar_spec()] * 3,
+        out_shape=[
+            jax.ShapeDtypeStruct((1,), dt),
+            jax.ShapeDtypeStruct((1,), dt),
+            jax.ShapeDtypeStruct((1,), jnp.int32),
+        ],
+        interpret=True,
+    )(d, f, t, n_valid)
+    return tuple(out)

@@ -1,0 +1,205 @@
+"""Layer-2 JAX compute graphs for cp-select.
+
+Composes the Layer-1 kernels into the exact computations the rust
+coordinator executes per probe. Each public builder returns a function of
+concrete example shapes ready for ``jax.jit(...).lower(...)`` in ``aot.py``.
+
+Flavors:
+- ``pallas`` — the TPU-shaped Pallas kernels (interpret-lowered for the CPU
+  substrate). Default for the hot kernels.
+- ``jnp``    — the pure-jnp oracle, which XLA fuses aggressively; used as the
+  L1/L2 performance ablation and for auxiliary kernels.
+
+Everything here runs at build time only (``make artifacts``); nothing in this
+package is imported by the runtime.
+"""
+
+import functools
+
+import jax.numpy as jnp
+
+from . import kernels
+from .kernels import ref
+
+_FLAVORS = ("pallas", "jnp")
+
+
+def _impl(flavor: str, name: str):
+    if flavor not in _FLAVORS:
+        raise ValueError(f"unknown flavor {flavor!r}, expected one of {_FLAVORS}")
+    mod = kernels if flavor == "pallas" else ref
+    return getattr(mod, name)
+
+
+# --- probe graphs (one device round-trip per cutting-plane iteration) -----
+
+
+def objective_probe(flavor: str = "pallas"):
+    """(x, y, n_valid) -> (s_lo, s_hi, c_lt, c_eq, c_gt).
+
+    One cutting-plane / bisection / Brent iteration = one execution of this
+    graph. The host composes f and the subgradient interval for any k.
+    """
+    fn = _impl(flavor, "fused_objective")
+
+    def probe(x, y, n_valid):
+        return fn(x, y, n_valid)
+
+    return probe
+
+
+def init_stats(flavor: str = "pallas"):
+    """(x, n_valid) -> (min, max, sum): Algorithm 1 step 0 in one reduction."""
+    fn = _impl(flavor, "minmaxsum")
+
+    def init(x, n_valid):
+        return fn(x, n_valid)
+
+    return init
+
+
+def neighbors_probe(flavor: str = "pallas"):
+    """(x, y, n_valid) -> (lower, upper, c_le): exact-rank fixup."""
+    fn = _impl(flavor, "neighbors")
+
+    def probe(x, y, n_valid):
+        return fn(x, y, n_valid)
+
+    return probe
+
+
+def interval_probe(flavor: str = "jnp"):
+    """(x, lo, hi, n_valid) -> (c_le, c_in, c_ge): pivot-interval occupancy."""
+    fn = _impl(flavor, "interval_count")
+
+    def probe(x, lo, hi, n_valid):
+        return fn(x, lo, hi, n_valid)
+
+    return probe
+
+
+def threshold_probe(flavor: str = "jnp"):
+    """(r, t, n_valid) -> (ssq_below, c_lt, c_eq): LTS rho-trick."""
+    fn = _impl(flavor, "threshold_stats")
+
+    def probe(r, t, n_valid):
+        return fn(r, t, n_valid)
+
+    return probe
+
+
+# --- application graphs ----------------------------------------------------
+
+
+def residuals_graph(flavor: str = "pallas"):
+    """(X, y, theta) -> |X @ theta - y| kept on device."""
+    fn = _impl(flavor, "residuals")
+
+    def graph(X, y, theta):
+        return (fn(X, y, theta),)
+
+    return graph
+
+
+def lms_probe(flavor: str = "pallas"):
+    """(X, y, theta, t, n_valid) -> objective stats of |X@theta - y| at t.
+
+    The fully fused regression probe: residuals are recomputed on-device and
+    reduced against the probe ``t`` in a single HLO module, so evaluating the
+    LMS criterion for a candidate theta never materializes residuals on the
+    host (DESIGN.md §6.3).
+    """
+    res = _impl(flavor, "residuals")
+    obj = _impl(flavor, "fused_objective")
+
+    def probe(X, y, theta, t, n_valid):
+        r = res(X, y, theta)
+        return obj(r, t, n_valid)
+
+    return probe
+
+
+def dists_graph(flavor: str = "pallas"):
+    """(X, q) -> squared distances, kept on device for OS_k selection."""
+    fn = _impl(flavor, "dists")
+
+    def graph(X, q):
+        return (fn(X, q),)
+
+    return graph
+
+
+def knn_sum_graph(flavor: str = "jnp"):
+    """(d, f, t, n_valid) -> (sum_wf, sum_w, count)."""
+    fn = _impl(flavor, "knn_weighted_sum")
+
+    def graph(d, f, t, n_valid):
+        return fn(d, f, t, n_valid)
+
+    return graph
+
+
+# --- registry used by aot.py ------------------------------------------------
+
+# name -> (builder, signature builder). Signatures are produced from the
+# bucket parameters (n, p, dtype) by aot.py.
+
+
+def sig_vector_probe(n, dtype):
+    """x[n], y[1], n_valid[1]."""
+    return [((n,), dtype), ((1,), dtype), ((1,), "int32")]
+
+
+def sig_vector_only(n, dtype):
+    return [((n,), dtype), ((1,), "int32")]
+
+
+def sig_interval(n, dtype):
+    return [((n,), dtype), ((1,), dtype), ((1,), dtype), ((1,), "int32")]
+
+
+def sig_residuals(n, p, dtype):
+    return [((n, p), dtype), ((n,), dtype), ((p,), dtype)]
+
+
+def sig_lms(n, p, dtype):
+    return [((n, p), dtype), ((n,), dtype), ((p,), dtype), ((1,), dtype),
+            ((1,), "int32")]
+
+
+def sig_dists(n, p, dtype):
+    return [((n, p), dtype), ((p,), dtype)]
+
+
+def sig_knn_sum(n, dtype):
+    return [((n,), dtype), ((n,), dtype), ((1,), dtype), ((1,), "int32")]
+
+
+REGISTRY = {
+    # vector probes, emitted per (dtype, n-bucket, flavor)
+    "fused_objective": (objective_probe, sig_vector_probe, "vector"),
+    "minmaxsum": (init_stats, sig_vector_only, "vector"),
+    "neighbors": (neighbors_probe, sig_vector_probe, "vector"),
+    "interval_count": (interval_probe, sig_interval, "vector"),
+    "threshold_stats": (threshold_probe, sig_vector_probe, "vector"),
+    "knn_weighted_sum": (knn_sum_graph, sig_knn_sum, "vector"),
+    # matrix graphs, emitted per (dtype, n-bucket, p)
+    "residuals": (residuals_graph, sig_residuals, "matrix"),
+    "lms_probe": (lms_probe, sig_lms, "matrix"),
+    "dists": (dists_graph, sig_dists, "matrix"),
+}
+
+
+def build(name: str, flavor: str):
+    builder, sig, kind = REGISTRY[name]
+    fn = builder(flavor)
+
+    @functools.wraps(fn)
+    def tupled(*args):
+        out = fn(*args)
+        return tuple(out) if isinstance(out, (tuple, list)) else (out,)
+
+    return tupled, sig, kind
+
+
+DTYPES = {"float32": jnp.float32, "float64": jnp.float64, "int32": jnp.int32}

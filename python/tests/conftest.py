@@ -1,0 +1,13 @@
+import os
+import sys
+
+import jax
+
+# f64 artifacts and tests require x64; set before any kernel import.
+jax.config.update("jax_enable_x64", True)
+
+# Make `compile` importable when pytest is invoked from python/ or repo root.
+_HERE = os.path.dirname(os.path.abspath(__file__))
+_PY_ROOT = os.path.dirname(_HERE)
+if _PY_ROOT not in sys.path:
+    sys.path.insert(0, _PY_ROOT)

@@ -1,0 +1,335 @@
+"""Pallas kernels vs the pure-jnp oracle — the core L1 correctness signal.
+
+Hypothesis sweeps shapes, dtypes, probe positions and data distributions
+(including the paper's adversarial cases: huge outliers, constant arrays,
+pre-sorted data, duplicated medians) and asserts exact/allclose agreement
+between the interpret-mode Pallas kernels and ``ref.py``.
+"""
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+import compile.kernels as K
+from compile.kernels import ref
+
+DTYPES = [np.float32, np.float64]
+SIZES = [128, 4096, 8192]
+
+
+def _assert_outputs_close(got, want, rtol):
+    assert len(got) == len(want)
+    for g, w in zip(got, want):
+        g = np.asarray(g)
+        w = np.asarray(w)
+        assert g.dtype == w.dtype, (g.dtype, w.dtype)
+        if np.issubdtype(g.dtype, np.integer):
+            np.testing.assert_array_equal(g, w)
+        else:
+            np.testing.assert_allclose(g, w, rtol=rtol)
+
+
+def _rtol(dtype):
+    # f32 tolerance allows for accumulation-order differences between the
+    # blocked pallas reduction and XLA's lax.reduce tree at n ~ 8192 with
+    # probe magnitudes up to 1e9 (sums reach ~1e13).
+    return 5e-4 if dtype == np.float32 else 1e-11
+
+
+# ---------------------------------------------------------------------------
+# deterministic sweeps
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("n", SIZES)
+@pytest.mark.parametrize("dist", ["uniform", "normal", "halfnormal",
+                                  "mixture", "constant", "sorted",
+                                  "outlier1e9"])
+def test_fused_objective_matches_ref(dtype, n, dist):
+    rng = np.random.default_rng(hash((n, dist)) % 2**32)
+    x = _make(rng, n, dist, dtype)
+    nv = n - 7 if n > 16 else n
+    for y in [float(np.median(x[:nv])), 0.0, float(x[0]), -1e9, 1e9]:
+        got = K.fused_objective(jnp.asarray(x), y, nv, block=min(n, 1024))
+        want = ref.fused_objective(jnp.asarray(x), y, nv)
+        _assert_outputs_close(got, want, _rtol(dtype))
+
+
+def _make(rng, n, dist, dtype):
+    if dist == "uniform":
+        x = rng.uniform(0, 1, n)
+    elif dist == "normal":
+        x = rng.normal(0, 1, n)
+    elif dist == "halfnormal":
+        x = np.abs(rng.normal(0, 1, n))
+    elif dist == "mixture":
+        k = n // 3
+        x = np.concatenate([rng.normal(100, 1, k), rng.normal(0, 1, n - k)])
+        rng.shuffle(x)
+    elif dist == "constant":
+        x = np.full(n, 3.25)
+    elif dist == "sorted":
+        x = np.sort(rng.normal(0, 1, n))
+    elif dist == "outlier1e9":
+        x = rng.normal(0, 1, n)
+        x[rng.integers(0, n)] = 1e9
+    else:
+        raise AssertionError(dist)
+    return x.astype(dtype)
+
+
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("n", SIZES)
+def test_minmaxsum_matches_ref(dtype, n):
+    rng = np.random.default_rng(n)
+    x = rng.normal(0, 10, n).astype(dtype)
+    nv = n - 3
+    got = K.minmaxsum(jnp.asarray(x), nv, block=min(n, 1024))
+    want = ref.minmaxsum(jnp.asarray(x), nv)
+    _assert_outputs_close(got, want, _rtol(dtype))
+    # cross-check against numpy directly on the valid prefix
+    np.testing.assert_allclose(float(got[0][0]), x[:nv].min(), rtol=_rtol(dtype))
+    np.testing.assert_allclose(float(got[1][0]), x[:nv].max(), rtol=_rtol(dtype))
+
+
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("n", [256, 4096])
+def test_neighbors_matches_ref_and_numpy(dtype, n):
+    rng = np.random.default_rng(n + 1)
+    x = rng.normal(0, 1, n).astype(dtype)
+    nv = n - 5
+    for y in [float(np.median(x[:nv])), float(x[3]), -100.0, 100.0]:
+        got = K.neighbors(jnp.asarray(x), y, nv, block=min(n, 512))
+        want = ref.neighbors(jnp.asarray(x), y, nv)
+        _assert_outputs_close(got, want, _rtol(dtype))
+        lo, hi, c_le = (np.asarray(v)[0] for v in got)
+        v = x[:nv]
+        le = v[v <= y]
+        ge = v[v >= y]
+        assert lo == (le.max() if le.size else -np.inf)
+        assert hi == (ge.min() if ge.size else np.inf)
+        assert c_le == le.size
+
+
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_interval_count_matches_ref(dtype):
+    n = 4096
+    rng = np.random.default_rng(7)
+    x = rng.normal(0, 1, n).astype(dtype)
+    nv = n - 9
+    for lo, hi in [(-0.5, 0.5), (0.0, 0.0), (-10, 10), (2, 1)]:
+        got = K.interval_count(jnp.asarray(x), lo, hi, nv, block=512)
+        want = ref.interval_count(jnp.asarray(x), lo, hi, nv)
+        _assert_outputs_close(got, want, 0)
+        c_le, c_in, c_ge = (int(np.asarray(v)[0]) for v in got)
+        v = x[:nv]
+        assert c_le == int((v <= lo).sum())
+        assert c_in == int(((v > lo) & (v < hi)).sum())
+        assert c_ge == int((v >= hi).sum())
+
+
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_threshold_stats_matches_ref(dtype):
+    n = 4096
+    rng = np.random.default_rng(11)
+    r = np.abs(rng.normal(0, 1, n)).astype(dtype)
+    nv = n - 13
+    t = float(np.median(r[:nv]))
+    got = K.threshold_stats(jnp.asarray(r), t, nv, block=512)
+    want = ref.threshold_stats(jnp.asarray(r), t, nv)
+    _assert_outputs_close(got, want, _rtol(dtype))
+    v = r[:nv]
+    np.testing.assert_allclose(
+        float(np.asarray(got[0])[0]),
+        float((v[v < t] ** 2).sum()),
+        rtol=10 * _rtol(dtype),
+    )
+
+
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("p", [2, 8])
+def test_residuals_matches_ref(dtype, p):
+    n = 2048
+    rng = np.random.default_rng(p)
+    X = rng.normal(size=(n, p)).astype(dtype)
+    y = rng.normal(size=n).astype(dtype)
+    th = rng.normal(size=p).astype(dtype)
+    got = K.residuals(jnp.asarray(X), jnp.asarray(y), jnp.asarray(th),
+                      block=256)
+    want = ref.residuals(jnp.asarray(X), jnp.asarray(y), jnp.asarray(th))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=10 * _rtol(dtype))
+
+
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("p", [2, 8])
+def test_dists_matches_ref_and_numpy(dtype, p):
+    n = 2048
+    rng = np.random.default_rng(p + 100)
+    X = rng.normal(size=(n, p)).astype(dtype)
+    q = rng.normal(size=p).astype(dtype)
+    got = np.asarray(K.dists(jnp.asarray(X), jnp.asarray(q), block=256))
+    want = np.asarray(ref.dists(jnp.asarray(X), jnp.asarray(q)))
+    np.testing.assert_allclose(got, want, rtol=10 * _rtol(dtype))
+    np.testing.assert_allclose(got, ((X - q) ** 2).sum(axis=1),
+                               rtol=50 * _rtol(dtype))
+
+
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_knn_weighted_sum_matches_ref(dtype):
+    n = 2048
+    rng = np.random.default_rng(42)
+    d = np.abs(rng.normal(0, 1, n)).astype(dtype)
+    f = rng.normal(0, 1, n).astype(dtype)
+    nv = n - 17
+    t = float(np.partition(d[:nv], 32)[32])  # 33rd order statistic
+    got = K.knn_weighted_sum(jnp.asarray(d), jnp.asarray(f), t, nv, block=256)
+    want = ref.knn_weighted_sum(jnp.asarray(d), jnp.asarray(f), t, nv)
+    _assert_outputs_close(got, want, 10 * _rtol(dtype))
+    assert int(np.asarray(got[2])[0]) == int((d[:nv] <= t).sum())
+
+
+# ---------------------------------------------------------------------------
+# hypothesis sweeps
+# ---------------------------------------------------------------------------
+
+# allow_subnormal=False: XLA CPU flushes denormals to zero, which is an
+# accepted substrate behaviour, not a kernel bug.
+finite = st.floats(allow_nan=False, allow_infinity=False,
+                   allow_subnormal=False,
+                   min_value=-1e12, max_value=1e12, width=64)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    data=st.lists(finite, min_size=1, max_size=300),
+    probe=finite,
+    dtype=st.sampled_from(DTYPES),
+)
+def test_fused_objective_hypothesis(data, probe, dtype):
+    nv = len(data)
+    n = 1
+    while n < max(nv, 8):
+        n *= 2
+    x = np.zeros(n, dtype=dtype)
+    x[:nv] = np.asarray(data, dtype=dtype)
+    got = K.fused_objective(jnp.asarray(x), probe, nv, block=min(n, 64))
+    want = ref.fused_objective(jnp.asarray(x), probe, nv)
+    _assert_outputs_close(got, want, 1e-4 if dtype == np.float32 else 1e-9)
+    # count invariant: every valid element lands in exactly one bucket
+    c = sum(int(np.asarray(got[i])[0]) for i in (2, 3, 4))
+    assert c == nv
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    data=st.lists(finite, min_size=1, max_size=300),
+    dtype=st.sampled_from(DTYPES),
+)
+def test_minmaxsum_hypothesis(data, dtype):
+    nv = len(data)
+    n = 1
+    while n < max(nv, 8):
+        n *= 2
+    x = np.zeros(n, dtype=dtype)
+    x[:nv] = np.asarray(data, dtype=dtype)
+    got = K.minmaxsum(jnp.asarray(x), nv, block=min(n, 64))
+    want = ref.minmaxsum(jnp.asarray(x), nv)
+    _assert_outputs_close(got, want, 1e-4 if dtype == np.float32 else 1e-9)
+    assert float(np.asarray(got[0])[0]) == x[:nv].min()
+    assert float(np.asarray(got[1])[0]) == x[:nv].max()
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    data=st.lists(finite, min_size=2, max_size=200),
+    frac=st.floats(min_value=0.0, max_value=1.0),
+)
+def test_neighbors_brackets_probe(data, frac):
+    """lower <= y <= upper always, and ranks are consistent."""
+    nv = len(data)
+    n = 1
+    while n < max(nv, 8):
+        n *= 2
+    x = np.zeros(n)
+    x[:nv] = np.asarray(data)
+    v = x[:nv]
+    y = float(v.min() + frac * (v.max() - v.min()))
+    lo, hi, c_le = (np.asarray(o)[0]
+                    for o in K.neighbors(jnp.asarray(x), y, nv,
+                                         block=min(n, 64)))
+    assert lo <= y <= hi
+    assert 0 <= c_le <= nv
+    if c_le > 0:
+        # lower is the c_le-th smallest element (1-indexed)
+        assert lo == np.sort(v)[int(c_le) - 1]
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    data=st.lists(finite, min_size=1, max_size=200),
+    lo=finite,
+    hi=finite,
+)
+def test_interval_count_hypothesis(data, lo, hi):
+    nv = len(data)
+    n = 1
+    while n < max(nv, 8):
+        n *= 2
+    x = np.zeros(n)
+    x[:nv] = np.asarray(data)
+    got = K.interval_count(jnp.asarray(x), lo, hi, nv, block=min(n, 64))
+    want = ref.interval_count(jnp.asarray(x), lo, hi, nv)
+    _assert_outputs_close(got, want, 0)
+    v = x[:nv]
+    c_le, c_in, c_ge = (int(np.asarray(o)[0]) for o in got)
+    assert c_le == int((v <= lo).sum())
+    assert c_in == int(((v > lo) & (v < hi)).sum())
+    # partition invariant when lo < hi
+    if lo < hi:
+        assert c_le + c_in + c_ge == nv
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    data=st.lists(st.floats(min_value=0, max_value=1e6, allow_nan=False,
+                            allow_subnormal=False), min_size=1, max_size=200),
+    t=st.floats(min_value=0, max_value=1e6, allow_nan=False),
+)
+def test_threshold_stats_hypothesis(data, t):
+    nv = len(data)
+    n = 1
+    while n < max(nv, 8):
+        n *= 2
+    r = np.zeros(n)
+    r[:nv] = np.asarray(data)
+    got = K.threshold_stats(jnp.asarray(r), t, nv, block=min(n, 64))
+    want = ref.threshold_stats(jnp.asarray(r), t, nv)
+    _assert_outputs_close(got, want, 1e-9)
+    v = r[:nv]
+    np.testing.assert_allclose(
+        float(np.asarray(got[0])[0]), float((v[v < t] ** 2).sum()), rtol=1e-9
+    )
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n=st.integers(min_value=1, max_value=120),
+    p=st.integers(min_value=1, max_value=12),
+    seed=st.integers(min_value=0, max_value=2**31),
+)
+def test_residuals_hypothesis_shapes(n, p, seed):
+    rng = np.random.default_rng(seed)
+    # pad rows to a pallas-friendly multiple
+    nn = max(8, 1 << (n - 1).bit_length())
+    X = np.zeros((nn, p))
+    X[:n] = rng.normal(size=(n, p))
+    y = np.zeros(nn)
+    y[:n] = rng.normal(size=n)
+    th = rng.normal(size=p)
+    got = np.asarray(K.residuals(jnp.asarray(X), jnp.asarray(y), jnp.asarray(th),
+                                 block=min(nn, 32)))
+    want = np.abs(X @ th - y)
+    np.testing.assert_allclose(got, want, rtol=1e-9, atol=1e-12)

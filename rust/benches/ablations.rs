@@ -1,0 +1,134 @@
+//! E5/E8/E9/E12 — design-choice ablations:
+//!
+//! - `trace`       (E5, Fig 4): cutting-plane iterate trace;
+//! - `hybrid_sweep`(E8, §IV): CP iteration budget vs |z| and phase times —
+//!   reproduces the paper's "7 iterations at n=2^25 leaves |z| < 2^19";
+//! - `primitives`  (E9, §V.B): cost of one fused reduction per size/dtype,
+//!   measured download cost, and the modeled paper-PCIe transfer;
+//! - `shards`      (E12, §V.D): group-probe cost vs shard count;
+//! - `flavor`      (DESIGN §6.4): pallas-interpret vs jnp-fused artifact.
+
+mod common;
+
+use std::time::Instant;
+
+use cp_select::device::{shard_data, ShardedEvaluator, TransferModel};
+use cp_select::harness::{hybrid_sweep, report, trace_fig4};
+use cp_select::runtime::{DeviceEvaluator, Flavor, Runtime};
+use cp_select::select::{DType, Evaluator, HostEvaluator};
+use cp_select::stats::{Distribution, Rng};
+
+fn main() {
+    common::describe("ablations (E5 trace, E8 hybrid, E9 primitives, E12 shards)");
+    let dir = common::results_dir();
+
+    // --- E5: Fig 4 trace -------------------------------------------------
+    let trace = trace_fig4(4096, 42).expect("trace");
+    report::write_result(&dir, "fig4_trace.csv", &report::trace_csv(&trace)).unwrap();
+    println!("E5 fig4: {} trace rows, final bracket width {:.3e}",
+        trace.len(),
+        trace.last().map(|t| t.y_r - t.y_l).unwrap_or(0.0));
+
+    // --- E8: hybrid budget sweep ------------------------------------------
+    let n = 1 << common::env_usize("CP_BENCH_LOG2N", if common::fast() { 14 } else { 20 });
+    let mut runner = common::runner();
+    let budgets = [0usize, 2, 4, 5, 7, 9, 11, 14];
+    let pts = hybrid_sweep(&mut runner, n, &budgets, DType::F64, 9).expect("sweep");
+    report::write_result(&dir, "hybrid_sweep.csv", &report::hybrid_sweep_csv(&pts)).unwrap();
+    println!("\nE8 hybrid budget sweep (n={n}):");
+    println!("{:>8} {:>10} {:>9} {:>9} {:>9} {:>9}", "cp_iters", "|z|", "cp ms", "copy ms", "sort ms", "total");
+    for p in &pts {
+        println!(
+            "{:>8} {:>10} {:>9.2} {:>9.2} {:>9.2} {:>9.2}",
+            p.cp_iters, p.z_len, p.cp_ms, p.copy_ms, p.sort_ms, p.total_ms
+        );
+    }
+    // paper's qualitative claim: |z| shrinks geometrically with the budget
+    assert!(pts.first().unwrap().z_len > pts.last().unwrap().z_len);
+
+    // --- E9: primitive costs ----------------------------------------------
+    println!("\nE9 primitives (one fused reduction; measured download; modeled PCIe):");
+    let have_device = Runtime::default_dir().join("manifest.json").exists();
+    let rt = have_device.then(|| Runtime::new(&Runtime::default_dir()).unwrap());
+    let mut rng = Rng::seeded(11);
+    let max_log2 = common::env_usize("CP_BENCH_MAX_LOG2N", if common::fast() { 15 } else { 21 });
+    println!("{:>9} {:>6} {:>14} {:>14} {:>14} {:>16}", "n", "dtype", "host probe ms", "device probe ms", "download ms", "paper-PCIe ms");
+    for log2n in (13..=max_log2).step_by(2) {
+        let n = 1usize << log2n;
+        let data = Distribution::Uniform.sample_vec(&mut rng, n);
+        for dtype in [DType::F32, DType::F64] {
+            let mut host = match dtype {
+                DType::F64 => HostEvaluator::new(&data),
+                DType::F32 => HostEvaluator::new_f32(&data),
+            };
+            let t0 = Instant::now();
+            let reps = 5;
+            for i in 0..reps {
+                host.probe(0.1 + i as f64 * 0.01).unwrap();
+            }
+            let host_ms = t0.elapsed().as_secs_f64() * 1e3 / reps as f64;
+
+            let (dev_ms, dl_ms) = if let Some(rt) = &rt {
+                let mut dev = DeviceEvaluator::upload(rt, &data, dtype).unwrap();
+                dev.probe(0.1).unwrap(); // compile + warm
+                let t0 = Instant::now();
+                for i in 0..reps {
+                    dev.probe(0.1 + i as f64 * 0.01).unwrap();
+                }
+                let dev_ms = t0.elapsed().as_secs_f64() * 1e3 / reps as f64;
+                let t0 = Instant::now();
+                let _ = dev.download().unwrap();
+                (dev_ms, t0.elapsed().as_secs_f64() * 1e3)
+            } else {
+                (f64::NAN, f64::NAN)
+            };
+            let bytes = if dtype == DType::F64 { 8 } else { 4 };
+            let pcie = TransferModel::paper_pcie().cost(n, bytes).as_secs_f64() * 1e3;
+            println!(
+                "{:>9} {:>6} {:>14.3} {:>14.3} {:>14.3} {:>16.2}",
+                n,
+                dtype.name(),
+                host_ms,
+                dev_ms,
+                dl_ms,
+                pcie
+            );
+        }
+    }
+
+    // --- E12: shard scaling ------------------------------------------------
+    println!("\nE12 shard scaling (group probe over host shards, n=2^20):");
+    let data = Distribution::Normal.sample_vec(&mut rng, 1 << 20);
+    for shards in [1usize, 2, 4, 8, 16] {
+        let evs: Vec<HostEvaluator> =
+            shard_data(&data, shards).into_iter().map(HostEvaluator::new).collect();
+        let mut group = ShardedEvaluator::new(evs).unwrap();
+        let t0 = Instant::now();
+        for i in 0..5 {
+            group.probe(i as f64 * 0.1).unwrap();
+        }
+        let ms = t0.elapsed().as_secs_f64() * 1e3 / 5.0;
+        println!("  shards={shards:>2}: {ms:.3} ms/probe, combine traffic = {} scalars", shards * 5);
+    }
+
+    // --- flavor ablation -----------------------------------------------------
+    if let Some(rt) = &rt {
+        println!("\nflavor ablation (fused_objective artifact, n=2^16 f32):");
+        let data = Distribution::Uniform.sample_vec(&mut rng, 1 << 16);
+        for flavor in [Flavor::Jnp, Flavor::Pallas] {
+            let mut dev =
+                DeviceEvaluator::upload_with_flavor(rt, &data, DType::F32, flavor).unwrap();
+            dev.probe(0.5).unwrap();
+            let t0 = Instant::now();
+            for i in 0..5 {
+                dev.probe(0.3 + 0.01 * i as f64).unwrap();
+            }
+            println!(
+                "  {:>6}: {:.3} ms/probe",
+                flavor.name(),
+                t0.elapsed().as_secs_f64() * 1e3 / 5.0
+            );
+        }
+        println!("  (pallas = interpret-lowered authored kernel — correctness artifact, not a TPU wallclock proxy)");
+    }
+}

@@ -1,0 +1,135 @@
+//! E10/E11 — the §VI applications as benchmarks:
+//!
+//! - LMS/LTS robust regression: breakdown curve (estimation error vs
+//!   contamination) and wall time, demonstrating the selection workload
+//!   (hundreds of medians) the paper accelerates;
+//! - the LTS ρ-trick vs explicit partial sort (the paper's "cheaper method
+//!   based on the median");
+//! - kNN throughput via OS_k thresholds vs a full-sort kNN.
+
+mod common;
+
+use std::time::Instant;
+
+use cp_select::knn::KnnModel;
+use cp_select::regression::{
+    lms, lts, ols, trimmed_sum_via_median, ContaminatedLinear, HostSelector, LmsOptions,
+    LtsOptions,
+};
+use cp_select::stats::Rng;
+
+fn max_err(a: &[f64], b: &[f64]) -> f64 {
+    a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f64::max)
+}
+
+fn main() {
+    common::describe("applications (E10 regression, E11 kNN)");
+    let fast = common::fast();
+    let n = if fast { 500 } else { 2000 };
+
+    // --- E10: breakdown curve ---------------------------------------------
+    println!("E10 breakdown: estimation error vs contamination (n={n}, p=4):");
+    println!("{:>7} {:>10} {:>10} {:>10} {:>12} {:>12}", "contam", "OLS err", "LMS err", "LTS err", "LMS ms", "LTS ms");
+    let mut rng = Rng::seeded(2011);
+    for contam in [0.0, 0.1, 0.2, 0.3, 0.4, 0.45] {
+        let d = ContaminatedLinear { n, p: 4, contamination: contam, sigma: 0.2, ..Default::default() }
+            .generate(&mut rng);
+        let x = d.design();
+        let mut sel = HostSelector::default();
+        let e_ols = max_err(&ols(&x, &d.y).unwrap(), &d.theta);
+        let t0 = Instant::now();
+        let subsets = if fast { 100 } else { 700 };
+        let f_lms = lms(&x, &d.y, &LmsOptions { subsets, ..Default::default() }, &mut sel).unwrap();
+        let t_lms = t0.elapsed().as_secs_f64() * 1e3;
+        let t0 = Instant::now();
+        let f_lts = lts(&x, &d.y, &LtsOptions::default(), &mut sel).unwrap();
+        let t_lts = t0.elapsed().as_secs_f64() * 1e3;
+        println!(
+            "{:>7.2} {:>10.3} {:>10.3} {:>10.3} {:>12.1} {:>12.1}",
+            contam,
+            e_ols,
+            max_err(&f_lms.theta, &d.theta),
+            max_err(&f_lts.theta, &d.theta),
+            t_lms,
+            t_lts
+        );
+    }
+
+    // --- LTS rho-trick vs partial sort -------------------------------------
+    println!("\nLTS objective: rho-trick (selection + threshold) vs full sort:");
+    let mut rng = Rng::seeded(7);
+    for log2n in [14usize, 16, 18] {
+        let nn = 1usize << log2n;
+        let r: Vec<f64> = (0..nn).map(|_| rng.normal().abs()).collect();
+        let h = cp_select::util::lts_h(nn);
+        let mut sel = HostSelector::default();
+        let t0 = Instant::now();
+        let via_med = trimmed_sum_via_median(&r, h, &mut sel).unwrap();
+        let t_med = t0.elapsed().as_secs_f64() * 1e3;
+        let t0 = Instant::now();
+        let mut sorted = r.clone();
+        sorted.sort_by(|a, b| a.total_cmp(b));
+        let via_sort: f64 = sorted[..h].iter().map(|v| v * v).sum();
+        let t_sort = t0.elapsed().as_secs_f64() * 1e3;
+        assert!((via_med - via_sort).abs() <= 1e-9 * via_sort);
+        println!(
+            "  n=2^{log2n}: rho-trick {t_med:.2} ms vs sort {t_sort:.2} ms ({:.1}x)",
+            t_sort / t_med
+        );
+    }
+
+    // --- E11: kNN throughput ------------------------------------------------
+    println!("\nE11 kNN: OS_k threshold vs full sort per query:");
+    let nn = if fast { 2000 } else { 20_000 };
+    let p = 8;
+    let mut rows = Vec::with_capacity(nn);
+    let mut f = Vec::with_capacity(nn);
+    for _ in 0..nn {
+        let row: Vec<f64> = (0..p).map(|_| rng.range(0.0, 2.0)).collect();
+        f.push(row.iter().map(|v| v.sin()).sum::<f64>());
+        rows.push(row);
+    }
+    let model = KnnModel::new(rows, f).unwrap();
+    let mut sel = HostSelector::default();
+    let queries: Vec<Vec<f64>> =
+        (0..if fast { 10 } else { 50 }).map(|_| (0..p).map(|_| rng.range(0.2, 1.8)).collect()).collect();
+    let k = 15;
+
+    let t0 = Instant::now();
+    let mut preds = Vec::new();
+    for q in &queries {
+        preds.push(model.predict_regression(q, k, &mut sel).unwrap());
+    }
+    let t_os = t0.elapsed().as_secs_f64() * 1e3 / queries.len() as f64;
+
+    // full-sort baseline kNN
+    let t0 = Instant::now();
+    let mut preds_sort = Vec::new();
+    for q in &queries {
+        let mut d: Vec<(f64, f64)> = model
+            .distances(q)
+            .into_iter()
+            .zip(model.f.iter().copied())
+            .collect();
+        d.sort_by(|a, b| a.0.total_cmp(&b.0));
+        let (mut swf, mut sw) = (0.0, 0.0);
+        let t = d[k - 1].0;
+        for &(di, fi) in &d {
+            if di > t {
+                break;
+            }
+            let w = 1.0 / (1.0 + di);
+            swf += w * fi;
+            sw += w;
+        }
+        preds_sort.push(swf / sw);
+    }
+    let t_sort = t0.elapsed().as_secs_f64() * 1e3 / queries.len() as f64;
+    for (a, b) in preds.iter().zip(&preds_sort) {
+        assert!((a - b).abs() < 1e-9, "kNN selection vs sort mismatch");
+    }
+    println!(
+        "  n={nn} k={k}: OS_k {t_os:.3} ms/query vs sort {t_sort:.3} ms/query ({:.1}x)",
+        t_sort / t_os
+    );
+}

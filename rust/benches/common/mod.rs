@@ -1,0 +1,51 @@
+//! Shared bench plumbing: backend pick, env-var scale knobs, output paths.
+//!
+//! All benches honor:
+//! - `CP_SELECT_ARTIFACTS` — artifacts dir (device backend when present);
+//! - `CP_BENCH_BACKEND=host|device` — force a backend;
+//! - `CP_BENCH_MAX_LOG2N` — cap the size sweep (default varies per bench);
+//! - `CP_BENCH_FAST=1` — minimal sweep for CI smoke.
+
+use cp_select::harness::{Backend, Runner};
+use cp_select::runtime::{Flavor, Runtime};
+
+pub fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+pub fn fast() -> bool {
+    std::env::var("CP_BENCH_FAST").map(|v| v == "1").unwrap_or(false)
+}
+
+pub fn backend() -> Backend {
+    // Default: the host substrate. Its fused-reduction : sort cost ratio
+    // (~1:76 at 2^23 f64) matches the paper's Tesla C2050 (~1:75), so the
+    // table *shapes* reproduce faithfully. The PJRT device backend
+    // (CP_BENCH_BACKEND=device) exercises the AOT path, but xla_extension
+    // 0.5.1's scalar CPU reduce skews the balance to ~1:7 — see
+    // EXPERIMENTS.md "substrate calibration".
+    let dir = Runtime::default_dir();
+    let have = dir.join("manifest.json").exists();
+    match std::env::var("CP_BENCH_BACKEND").as_deref() {
+        Ok("device") if have => Backend::Device { artifacts_dir: dir, flavor: Flavor::Jnp },
+        _ => Backend::Host,
+    }
+}
+
+pub fn runner() -> Runner {
+    Runner::new(backend()).expect("backend init")
+}
+
+pub fn results_dir() -> std::path::PathBuf {
+    std::path::PathBuf::from(
+        std::env::var("CP_BENCH_OUT").unwrap_or_else(|_| "results".to_string()),
+    )
+}
+
+pub fn describe(name: &str) {
+    let b = match backend() {
+        Backend::Host => "host".to_string(),
+        Backend::Device { .. } => "pjrt-device".to_string(),
+    };
+    println!("=== bench {name} (backend: {b}{}) ===", if fast() { ", FAST" } else { "" });
+}

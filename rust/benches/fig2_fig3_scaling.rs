@@ -1,0 +1,49 @@
+//! E3/E4 — Figures 2 & 3: log-log scaling series for both dtypes.
+//!
+//! Emits `results/fig2_float.csv` and `results/fig3_double.csv` with
+//! method,n,ms series ready for log-log plotting, plus a textual slope
+//! check: past the crossover, every method should scale ~O(n) (the paper's
+//! observation that from n = 2^23 the curves differ only by constants).
+
+mod common;
+
+use cp_select::harness::{report, run_table, TableConfig};
+use cp_select::select::DType;
+
+fn slope_check(table: &cp_select::harness::Table) {
+    // fit log(ms) vs log(n) slope over the last three sizes per method
+    for row in &table.rows {
+        let pts: Vec<(f64, f64)> = table
+            .sizes
+            .iter()
+            .zip(&row.ms)
+            .filter_map(|(&n, v)| v.map(|ms| ((n as f64).ln(), ms.ln())))
+            .collect();
+        if pts.len() < 3 {
+            continue;
+        }
+        let tail = &pts[pts.len() - 3..];
+        let slope = (tail[2].1 - tail[0].1) / (tail[2].0 - tail[0].0);
+        println!("  {:<38} tail slope ≈ {slope:.2}", row.label);
+    }
+}
+
+fn main() {
+    common::describe("fig2_fig3_scaling (paper Figs 2-3)");
+    let max = common::env_usize("CP_BENCH_MAX_LOG2N", if common::fast() { 15 } else { 21 }) as u32;
+    let mut runner = common::runner();
+    for (dtype, name) in [(DType::F32, "fig2_float"), (DType::F64, "fig3_double")] {
+        let cfg = TableConfig {
+            dtype,
+            log2_sizes: (13..=max).collect(), // every power for smooth curves
+            instances: if common::fast() { 1 } else { 2 },
+            reps: if common::fast() { 1 } else { 2 },
+            ..Default::default()
+        };
+        let table = run_table(&mut runner, &cfg).expect("run");
+        let csv = report::table_csv(&table);
+        report::write_result(&common::results_dir(), &format!("{name}.csv"), &csv).unwrap();
+        println!("{name}: {} series points", csv.lines().count() - 1);
+        slope_check(&table);
+    }
+}

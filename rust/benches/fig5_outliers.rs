@@ -1,0 +1,62 @@
+//! E6 — Figure 5: outlier (in)sensitivity.
+//!
+//! One element of a normal sample is set to 10^3 … 10^13; for each
+//! magnitude we record iterations, device reductions, and time for the
+//! cutting plane vs bisection vs both Brent variants. The paper's claim:
+//! bisection/Brent degrade with log(range) while the cutting plane's first
+//! cut eliminates the outlier's linear piece. Also runs the E7 ablation
+//! (1e20 magnitudes with the log-transform guard).
+
+mod common;
+
+use cp_select::harness::{outlier_sweep_fig5, report};
+use cp_select::select::cutting_plane::CpOptions;
+use cp_select::select::transform::select_transformed;
+use cp_select::select::DType;
+use cp_select::stats::{sorted_median, Distribution, Rng};
+
+fn main() {
+    common::describe("fig5_outliers (paper Fig 5 + §V.D transform)");
+    let n = 1 << common::env_usize("CP_BENCH_LOG2N", if common::fast() { 13 } else { 17 });
+    let mut runner = common::runner();
+    let mags = [1e3, 1e5, 1e7, 1e9, 1e11, 1e13];
+    let pts = outlier_sweep_fig5(&mut runner, n, &mags, DType::F64, 1234).expect("sweep");
+    let csv = report::outlier_csv(&pts);
+    report::write_result(&common::results_dir(), "fig5_outliers.csv", &csv).unwrap();
+
+    println!("probes per method as the outlier grows (n={n}):");
+    println!("{:>10} {:>14} {:>10} {:>10} {:>10}", "magnitude", "cutting-plane", "bisection", "brent-min", "brent-root");
+    for &m in &mags {
+        let get = |name: &str| {
+            pts.iter()
+                .find(|p| p.magnitude == m && p.method == name)
+                .map(|p| p.probes)
+                .unwrap_or(0)
+        };
+        println!(
+            "{:>10.0e} {:>14} {:>10} {:>10} {:>10}",
+            m,
+            get("cutting-plane"),
+            get("bisection"),
+            get("brent-min"),
+            get("brent-root")
+        );
+    }
+    assert!(pts.iter().all(|p| p.correct), "all methods must stay exact");
+
+    // E7: extreme 1e20 magnitudes need the monotone transform (paper §V.D)
+    let mut rng = Rng::seeded(5);
+    let mut data = Distribution::HalfNormal.sample_vec(&mut rng, n.min(1 << 16) | 1);
+    data[0] = 1e20;
+    data[1] = 7e20;
+    let k = cp_select::util::median_rank(data.len());
+    let oracle = sorted_median(&data);
+    let (guarded, out) = select_transformed(&data, k, &CpOptions::default()).expect("transform");
+    println!(
+        "\nE7 transform guard @1e20: exact={} ({} iterations); oracle {:.9}",
+        guarded == oracle,
+        out.iterations,
+        oracle
+    );
+    assert_eq!(guarded, oracle);
+}

@@ -1,0 +1,38 @@
+//! E1 — Table I: mean time per method, dtype *float*, n = 2^13 … 2^max.
+//!
+//! Regenerates the paper's Table I protocol (9 distributions, averaged)
+//! on this substrate and writes `results/table1_float.{md,csv}`. The Fig. 2
+//! series is the same data (see fig2_fig3_scaling).
+
+mod common;
+
+use cp_select::harness::{report, run_table, TableConfig};
+use cp_select::select::DType;
+
+fn main() {
+    common::describe("table1_float (paper Table I / Fig 2)");
+    let max = common::env_usize("CP_BENCH_MAX_LOG2N", if common::fast() { 15 } else { 21 }) as u32;
+    let cfg = TableConfig {
+        dtype: DType::F32,
+        log2_sizes: (13..=max).step_by(2).collect(),
+        instances: if common::fast() { 1 } else { 3 },
+        reps: if common::fast() { 1 } else { 3 },
+        ..Default::default()
+    };
+    let mut runner = common::runner();
+    let table = run_table(&mut runner, &cfg).expect("table run");
+    let md = report::table_markdown(&table);
+    println!("{md}");
+    let dir = common::results_dir();
+    report::write_result(&dir, "table1_float.md", &md).unwrap();
+    report::write_result(&dir, "table1_float.csv", &report::table_csv(&table)).unwrap();
+
+    // headline check: hybrid vs the sort baseline at the largest n
+    let sort = table.rows.iter().find(|r| r.label.contains("Radix")).unwrap();
+    let hyb = table.rows.iter().find(|r| r.label.contains("Cutting")).unwrap();
+    if let (Some(s), Some(h)) =
+        (sort.ms.last().copied().flatten(), hyb.ms.last().copied().flatten())
+    {
+        println!("table1 headline: n=2^{max} f32 sort {s:.2} ms vs hybrid {h:.2} ms = {:.2}x", s / h);
+    }
+}

@@ -1,0 +1,37 @@
+//! E2 — Table II: mean time per method, dtype *double*.
+//!
+//! Same protocol as table1_float with f64 storage; the paper's key
+//! observation is the larger sort-vs-cutting-plane gap (8 radix key passes
+//! instead of 4, while reduction cost only doubles its bandwidth).
+
+mod common;
+
+use cp_select::harness::{report, run_table, TableConfig};
+use cp_select::select::DType;
+
+fn main() {
+    common::describe("table2_double (paper Table II / Fig 3)");
+    let max = common::env_usize("CP_BENCH_MAX_LOG2N", if common::fast() { 15 } else { 21 }) as u32;
+    let cfg = TableConfig {
+        dtype: DType::F64,
+        log2_sizes: (13..=max).step_by(2).collect(),
+        instances: if common::fast() { 1 } else { 3 },
+        reps: if common::fast() { 1 } else { 3 },
+        ..Default::default()
+    };
+    let mut runner = common::runner();
+    let table = run_table(&mut runner, &cfg).expect("table run");
+    let md = report::table_markdown(&table);
+    println!("{md}");
+    let dir = common::results_dir();
+    report::write_result(&dir, "table2_double.md", &md).unwrap();
+    report::write_result(&dir, "table2_double.csv", &report::table_csv(&table)).unwrap();
+
+    let sort = table.rows.iter().find(|r| r.label.contains("Radix")).unwrap();
+    let hyb = table.rows.iter().find(|r| r.label.contains("Cutting")).unwrap();
+    if let (Some(s), Some(h)) =
+        (sort.ms.last().copied().flatten(), hyb.ms.last().copied().flatten())
+    {
+        println!("table2 headline: n=2^{max} f64 sort {s:.2} ms vs hybrid {h:.2} ms = {:.2}x", s / h);
+    }
+}

@@ -1,0 +1,185 @@
+//! Configuration system: a TOML-subset parser and the typed [`Config`].
+//!
+//! serde/toml are unavailable offline (DESIGN.md §7); the parser supports
+//! the subset a deployment config needs: `[sections]`, `key = value` with
+//! strings, integers, floats, booleans, and homogeneous scalar arrays,
+//! plus `#` comments.
+
+pub mod toml;
+
+use std::path::{Path, PathBuf};
+
+use crate::runtime::Flavor;
+use crate::select::{DType, Method};
+use crate::{Error, Result};
+use toml::TomlDoc;
+
+/// Runtime configuration for the coordinator and harness.
+#[derive(Debug, Clone)]
+pub struct Config {
+    /// Where AOT artifacts live.
+    pub artifacts_dir: PathBuf,
+    /// Hot-kernel flavor: `jnp` (XLA-fused, default) or `pallas`.
+    pub kernel_flavor: Flavor,
+    /// Default selection method for service requests.
+    pub default_method: Method,
+    /// Default value dtype.
+    pub dtype: DType,
+    /// Simulated device shards.
+    pub shards: usize,
+    /// Service worker threads (each owns one shard's runtime).
+    pub workers: usize,
+    /// Max queued requests before callers block.
+    pub queue_depth: usize,
+    /// Hybrid CP iterations before compaction (paper: 7).
+    pub hybrid_cp_iters: usize,
+    /// Apply the log-transform guard automatically for extreme ranges.
+    pub guard_extremes: bool,
+    /// Benchmark repetitions per measurement.
+    pub bench_reps: usize,
+    /// Benchmark instances per distribution (paper: 10 × 10).
+    pub bench_instances: usize,
+    /// Largest log2(n) the benches sweep.
+    pub bench_max_log2n: u32,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config {
+            artifacts_dir: PathBuf::from("artifacts"),
+            kernel_flavor: Flavor::Jnp,
+            default_method: Method::Hybrid,
+            dtype: DType::F64,
+            shards: 1,
+            workers: 1,
+            queue_depth: 1024,
+            hybrid_cp_iters: 7,
+            guard_extremes: true,
+            bench_reps: 3,
+            bench_instances: 3,
+            bench_max_log2n: 22,
+        }
+    }
+}
+
+impl Config {
+    /// Load from a TOML file; missing keys fall back to defaults.
+    pub fn load(path: &Path) -> Result<Config> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| Error::io(path.display().to_string(), e))?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Config> {
+        let doc = TomlDoc::parse(text)?;
+        let mut c = Config::default();
+        if let Some(v) = doc.get_str("runtime", "artifacts_dir")? {
+            c.artifacts_dir = PathBuf::from(v);
+        }
+        if let Some(v) = doc.get_str("runtime", "kernel_flavor")? {
+            c.kernel_flavor = Flavor::from_name(&v)
+                .ok_or_else(|| Error::Parse(format!("unknown kernel_flavor {v:?}")))?;
+        }
+        if let Some(v) = doc.get_str("select", "method")? {
+            c.default_method = Method::from_name(&v)
+                .ok_or_else(|| Error::Parse(format!("unknown method {v:?}")))?;
+        }
+        if let Some(v) = doc.get_str("select", "dtype")? {
+            c.dtype = DType::from_name(&v)
+                .ok_or_else(|| Error::Parse(format!("unknown dtype {v:?}")))?;
+        }
+        if let Some(v) = doc.get_int("select", "hybrid_cp_iters")? {
+            c.hybrid_cp_iters = v as usize;
+        }
+        if let Some(v) = doc.get_bool("select", "guard_extremes")? {
+            c.guard_extremes = v;
+        }
+        if let Some(v) = doc.get_int("service", "shards")? {
+            c.shards = (v as usize).max(1);
+        }
+        if let Some(v) = doc.get_int("service", "workers")? {
+            c.workers = (v as usize).max(1);
+        }
+        if let Some(v) = doc.get_int("service", "queue_depth")? {
+            c.queue_depth = (v as usize).max(1);
+        }
+        if let Some(v) = doc.get_int("bench", "reps")? {
+            c.bench_reps = (v as usize).max(1);
+        }
+        if let Some(v) = doc.get_int("bench", "instances")? {
+            c.bench_instances = (v as usize).max(1);
+        }
+        if let Some(v) = doc.get_int("bench", "max_log2n")? {
+            c.bench_max_log2n = v as u32;
+        }
+        Ok(c)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_sane() {
+        let c = Config::default();
+        assert_eq!(c.default_method, Method::Hybrid);
+        assert_eq!(c.hybrid_cp_iters, 7);
+        assert_eq!(c.kernel_flavor, Flavor::Jnp);
+    }
+
+    #[test]
+    fn parses_full_document() {
+        let c = Config::parse(
+            r#"
+            # cp-select deployment config
+            [runtime]
+            artifacts_dir = "/data/artifacts"
+            kernel_flavor = "pallas"
+
+            [select]
+            method = "cutting-plane"
+            dtype = "f32"
+            hybrid_cp_iters = 9
+            guard_extremes = false
+
+            [service]
+            shards = 4
+            workers = 2
+            queue_depth = 64
+
+            [bench]
+            reps = 5
+            instances = 10
+            max_log2n = 25
+            "#,
+        )
+        .unwrap();
+        assert_eq!(c.artifacts_dir, PathBuf::from("/data/artifacts"));
+        assert_eq!(c.kernel_flavor, Flavor::Pallas);
+        assert_eq!(c.default_method, Method::CuttingPlane);
+        assert_eq!(c.dtype, DType::F32);
+        assert_eq!(c.hybrid_cp_iters, 9);
+        assert!(!c.guard_extremes);
+        assert_eq!(c.shards, 4);
+        assert_eq!(c.workers, 2);
+        assert_eq!(c.queue_depth, 64);
+        assert_eq!(c.bench_reps, 5);
+        assert_eq!(c.bench_instances, 10);
+        assert_eq!(c.bench_max_log2n, 25);
+    }
+
+    #[test]
+    fn partial_document_keeps_defaults() {
+        let c = Config::parse("[service]\nshards = 2\n").unwrap();
+        assert_eq!(c.shards, 2);
+        assert_eq!(c.default_method, Method::Hybrid);
+    }
+
+    #[test]
+    fn rejects_bad_values() {
+        assert!(Config::parse("[select]\nmethod = \"warp-speed\"\n").is_err());
+        assert!(Config::parse("[select]\ndtype = \"f16\"\n").is_err());
+        assert!(Config::parse("[runtime]\nkernel_flavor = \"cuda\"\n").is_err());
+    }
+}

@@ -1,0 +1,203 @@
+//! Minimal TOML-subset parser (sections, scalars, arrays, comments).
+
+use std::collections::BTreeMap;
+
+use crate::{Error, Result};
+
+/// A parsed scalar value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<TomlValue>),
+}
+
+/// Parsed document: section -> key -> value. Top-level keys live under "".
+#[derive(Debug, Default)]
+pub struct TomlDoc {
+    sections: BTreeMap<String, BTreeMap<String, TomlValue>>,
+}
+
+impl TomlDoc {
+    pub fn parse(text: &str) -> Result<TomlDoc> {
+        let mut doc = TomlDoc::default();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('[') {
+                let name = rest.strip_suffix(']').ok_or_else(|| {
+                    Error::Parse(format!("line {}: unterminated section header", lineno + 1))
+                })?;
+                section = name.trim().to_string();
+                doc.sections.entry(section.clone()).or_default();
+                continue;
+            }
+            let (key, value) = line.split_once('=').ok_or_else(|| {
+                Error::Parse(format!("line {}: expected `key = value`", lineno + 1))
+            })?;
+            let v = parse_value(value.trim())
+                .map_err(|e| Error::Parse(format!("line {}: {e}", lineno + 1)))?;
+            doc.sections
+                .entry(section.clone())
+                .or_default()
+                .insert(key.trim().to_string(), v);
+        }
+        Ok(doc)
+    }
+
+    pub fn get(&self, section: &str, key: &str) -> Option<&TomlValue> {
+        self.sections.get(section)?.get(key)
+    }
+
+    pub fn get_str(&self, section: &str, key: &str) -> Result<Option<String>> {
+        match self.get(section, key) {
+            None => Ok(None),
+            Some(TomlValue::Str(s)) => Ok(Some(s.clone())),
+            Some(v) => Err(Error::Parse(format!("{section}.{key}: expected string, got {v:?}"))),
+        }
+    }
+
+    pub fn get_int(&self, section: &str, key: &str) -> Result<Option<i64>> {
+        match self.get(section, key) {
+            None => Ok(None),
+            Some(TomlValue::Int(i)) => Ok(Some(*i)),
+            Some(v) => Err(Error::Parse(format!("{section}.{key}: expected integer, got {v:?}"))),
+        }
+    }
+
+    pub fn get_float(&self, section: &str, key: &str) -> Result<Option<f64>> {
+        match self.get(section, key) {
+            None => Ok(None),
+            Some(TomlValue::Float(f)) => Ok(Some(*f)),
+            Some(TomlValue::Int(i)) => Ok(Some(*i as f64)),
+            Some(v) => Err(Error::Parse(format!("{section}.{key}: expected float, got {v:?}"))),
+        }
+    }
+
+    pub fn get_bool(&self, section: &str, key: &str) -> Result<Option<bool>> {
+        match self.get(section, key) {
+            None => Ok(None),
+            Some(TomlValue::Bool(b)) => Ok(Some(*b)),
+            Some(v) => Err(Error::Parse(format!("{section}.{key}: expected bool, got {v:?}"))),
+        }
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // respect # inside quoted strings
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> std::result::Result<TomlValue, String> {
+    if s.is_empty() {
+        return Err("empty value".into());
+    }
+    if let Some(body) = s.strip_prefix('"') {
+        let body = body.strip_suffix('"').ok_or("unterminated string")?;
+        return Ok(TomlValue::Str(body.replace("\\\"", "\"").replace("\\\\", "\\")));
+    }
+    if s == "true" {
+        return Ok(TomlValue::Bool(true));
+    }
+    if s == "false" {
+        return Ok(TomlValue::Bool(false));
+    }
+    if let Some(body) = s.strip_prefix('[') {
+        let body = body.strip_suffix(']').ok_or("unterminated array")?;
+        let mut out = Vec::new();
+        let body = body.trim();
+        if !body.is_empty() {
+            for item in body.split(',') {
+                let item = item.trim();
+                if item.is_empty() {
+                    continue; // trailing comma
+                }
+                out.push(parse_value(item)?);
+            }
+        }
+        return Ok(TomlValue::Array(out));
+    }
+    if let Ok(i) = s.replace('_', "").parse::<i64>() {
+        return Ok(TomlValue::Int(i));
+    }
+    if let Ok(f) = s.replace('_', "").parse::<f64>() {
+        return Ok(TomlValue::Float(f));
+    }
+    Err(format!("cannot parse value {s:?}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_scalars() {
+        let d = TomlDoc::parse(
+            "top = 1\n[a]\nx = \"hi\" # comment\ny = -3\nz = 2.5\nw = true\n[b]\narr = [1, 2, 3]\n",
+        )
+        .unwrap();
+        assert_eq!(d.get_int("", "top").unwrap(), Some(1));
+        assert_eq!(d.get_str("a", "x").unwrap(), Some("hi".into()));
+        assert_eq!(d.get_int("a", "y").unwrap(), Some(-3));
+        assert_eq!(d.get_float("a", "z").unwrap(), Some(2.5));
+        assert_eq!(d.get_bool("a", "w").unwrap(), Some(true));
+        assert_eq!(
+            d.get("b", "arr"),
+            Some(&TomlValue::Array(vec![
+                TomlValue::Int(1),
+                TomlValue::Int(2),
+                TomlValue::Int(3)
+            ]))
+        );
+    }
+
+    #[test]
+    fn missing_keys_are_none() {
+        let d = TomlDoc::parse("[a]\nx = 1\n").unwrap();
+        assert_eq!(d.get_int("a", "missing").unwrap(), None);
+        assert_eq!(d.get_int("nope", "x").unwrap(), None);
+    }
+
+    #[test]
+    fn type_mismatch_is_error() {
+        let d = TomlDoc::parse("[a]\nx = 1\n").unwrap();
+        assert!(d.get_str("a", "x").is_err());
+        assert!(d.get_bool("a", "x").is_err());
+        // int coerces to float deliberately
+        assert_eq!(d.get_float("a", "x").unwrap(), Some(1.0));
+    }
+
+    #[test]
+    fn hash_inside_string_is_not_comment() {
+        let d = TomlDoc::parse("[a]\nx = \"with # hash\"\n").unwrap();
+        assert_eq!(d.get_str("a", "x").unwrap(), Some("with # hash".into()));
+    }
+
+    #[test]
+    fn bad_lines_error_with_lineno() {
+        let e = TomlDoc::parse("[a]\nnonsense\n").unwrap_err();
+        assert!(e.to_string().contains("line 2"), "{e}");
+        assert!(TomlDoc::parse("[unterminated\n").is_err());
+        assert!(TomlDoc::parse("x = \n").is_err());
+        assert!(TomlDoc::parse("x = [1, 2\n").is_err());
+    }
+
+    #[test]
+    fn underscores_in_numbers() {
+        let d = TomlDoc::parse("n = 33_554_432\n").unwrap();
+        assert_eq!(d.get_int("", "n").unwrap(), Some(33554432));
+    }
+}

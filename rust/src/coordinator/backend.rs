@@ -1,0 +1,147 @@
+//! Dataset backends: where uploaded arrays live and how probes execute.
+//!
+//! A backend instance is **thread-confined** (PJRT handles are not Send);
+//! the service constructs one per worker thread through a `Send + Sync`
+//! factory. Datasets are sticky to their worker — exactly how a real
+//! router pins a user's KV-cache/array to one accelerator.
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::rc::Rc;
+use std::sync::Arc;
+
+use crate::runtime::{DeviceEvaluator, Flavor, Runtime};
+use crate::select::objective::{DType, Evaluator, HostEvaluator};
+use crate::{Error, Result};
+
+/// Per-worker dataset store + evaluator factory.
+pub trait DatasetBackend {
+    fn upload(&mut self, id: u64, data: &[f64], dtype: DType) -> Result<()>;
+    fn evaluator(&mut self, id: u64) -> Result<&mut dyn Evaluator>;
+    fn drop_dataset(&mut self, id: u64);
+    fn dataset_len(&self, id: u64) -> Option<usize>;
+    /// Human-readable backend kind (metrics / logs).
+    fn kind(&self) -> &'static str;
+}
+
+/// Factory invoked inside each worker thread.
+pub type BackendFactory = Arc<dyn Fn(usize) -> Result<Box<dyn DatasetBackend>> + Send + Sync>;
+
+/// Host-memory backend (the CPU oracle; also useful for tests).
+#[derive(Default)]
+pub struct HostBackend {
+    datasets: HashMap<u64, HostEvaluator>,
+}
+
+impl HostBackend {
+    pub fn factory() -> BackendFactory {
+        Arc::new(|_worker| Ok(Box::<HostBackend>::default() as Box<dyn DatasetBackend>))
+    }
+}
+
+impl DatasetBackend for HostBackend {
+    fn upload(&mut self, id: u64, data: &[f64], dtype: DType) -> Result<()> {
+        let ev = match dtype {
+            DType::F64 => HostEvaluator::new(data),
+            DType::F32 => HostEvaluator::new_f32(data),
+        };
+        self.datasets.insert(id, ev);
+        Ok(())
+    }
+
+    fn evaluator(&mut self, id: u64) -> Result<&mut dyn Evaluator> {
+        self.datasets
+            .get_mut(&id)
+            .map(|e| e as &mut dyn Evaluator)
+            .ok_or_else(|| Error::Service(format!("unknown dataset {id}")))
+    }
+
+    fn drop_dataset(&mut self, id: u64) {
+        self.datasets.remove(&id);
+    }
+
+    fn dataset_len(&self, id: u64) -> Option<usize> {
+        self.datasets.get(&id).map(|e| e.n())
+    }
+
+    fn kind(&self) -> &'static str {
+        "host"
+    }
+}
+
+/// PJRT device backend: one runtime per worker thread, datasets uploaded
+/// once as device buffers.
+pub struct DeviceBackend {
+    rt: Rc<Runtime>,
+    datasets: HashMap<u64, DeviceEvaluator>,
+}
+
+impl DeviceBackend {
+    pub fn new(artifacts_dir: &std::path::Path, flavor: Flavor) -> Result<Self> {
+        Ok(DeviceBackend {
+            rt: Runtime::with_flavor(artifacts_dir, flavor)?,
+            datasets: HashMap::new(),
+        })
+    }
+
+    pub fn factory(artifacts_dir: PathBuf, flavor: Flavor) -> BackendFactory {
+        Arc::new(move |_worker| {
+            Ok(Box::new(DeviceBackend::new(&artifacts_dir, flavor)?) as Box<dyn DatasetBackend>)
+        })
+    }
+}
+
+impl DatasetBackend for DeviceBackend {
+    fn upload(&mut self, id: u64, data: &[f64], dtype: DType) -> Result<()> {
+        let ev = DeviceEvaluator::upload(&self.rt, data, dtype)?;
+        self.datasets.insert(id, ev);
+        Ok(())
+    }
+
+    fn evaluator(&mut self, id: u64) -> Result<&mut dyn Evaluator> {
+        self.datasets
+            .get_mut(&id)
+            .map(|e| e as &mut dyn Evaluator)
+            .ok_or_else(|| Error::Service(format!("unknown dataset {id}")))
+    }
+
+    fn drop_dataset(&mut self, id: u64) {
+        self.datasets.remove(&id);
+    }
+
+    fn dataset_len(&self, id: u64) -> Option<usize> {
+        self.datasets.get(&id).map(|e| e.n())
+    }
+
+    fn kind(&self) -> &'static str {
+        "pjrt-device"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn host_backend_roundtrip() {
+        let mut b = HostBackend::default();
+        b.upload(1, &[3.0, 1.0, 2.0], DType::F64).unwrap();
+        assert_eq!(b.dataset_len(1), Some(3));
+        let ev = b.evaluator(1).unwrap();
+        assert_eq!(ev.n(), 3);
+        assert!(b.evaluator(99).is_err());
+        b.drop_dataset(1);
+        assert!(b.evaluator(1).is_err());
+        assert_eq!(b.kind(), "host");
+    }
+
+    #[test]
+    fn factory_builds_independent_stores() {
+        let f = HostBackend::factory();
+        let mut a = f(0).unwrap();
+        let b = f(1).unwrap();
+        a.upload(7, &[1.0], DType::F64).unwrap();
+        assert_eq!(a.dataset_len(7), Some(1));
+        assert_eq!(b.dataset_len(7), None);
+    }
+}

@@ -1,0 +1,169 @@
+//! Capacity management: LRU eviction over dataset backends.
+//!
+//! Device memory is finite (the paper's 3 GB Tesla C2050 fits one 2²⁷ f64
+//! array with little slack); a serving deployment needs a bound on resident
+//! datasets per worker. [`LruBackend`] wraps any [`DatasetBackend`] and
+//! evicts the least-recently-used dataset when the cap is exceeded —
+//! queries for an evicted dataset fail with a clear "re-upload" error,
+//! which the client can act on (the usual cache-miss contract).
+
+use std::collections::VecDeque;
+
+use super::backend::DatasetBackend;
+use crate::select::objective::{DType, Evaluator};
+use crate::{Error, Result};
+
+pub struct LruBackend {
+    inner: Box<dyn DatasetBackend>,
+    /// Most-recent at the back.
+    order: VecDeque<u64>,
+    capacity: usize,
+    evictions: u64,
+}
+
+impl LruBackend {
+    pub fn new(inner: Box<dyn DatasetBackend>, capacity: usize) -> Self {
+        assert!(capacity >= 1);
+        LruBackend { inner, order: VecDeque::new(), capacity, evictions: 0 }
+    }
+
+    pub fn evictions(&self) -> u64 {
+        self.evictions
+    }
+
+    pub fn resident(&self) -> usize {
+        self.order.len()
+    }
+
+    fn touch(&mut self, id: u64) {
+        if let Some(pos) = self.order.iter().position(|&d| d == id) {
+            self.order.remove(pos);
+        }
+        self.order.push_back(id);
+    }
+
+    fn evict_to_fit(&mut self) {
+        while self.order.len() > self.capacity {
+            if let Some(victim) = self.order.pop_front() {
+                self.inner.drop_dataset(victim);
+                self.evictions += 1;
+            }
+        }
+    }
+}
+
+impl DatasetBackend for LruBackend {
+    fn upload(&mut self, id: u64, data: &[f64], dtype: DType) -> Result<()> {
+        self.inner.upload(id, data, dtype)?;
+        self.touch(id);
+        self.evict_to_fit();
+        Ok(())
+    }
+
+    fn evaluator(&mut self, id: u64) -> Result<&mut dyn Evaluator> {
+        if !self.order.contains(&id) {
+            return Err(Error::Service(format!(
+                "dataset {id} not resident (evicted or never uploaded); re-upload it"
+            )));
+        }
+        self.touch(id);
+        self.inner.evaluator(id)
+    }
+
+    fn drop_dataset(&mut self, id: u64) {
+        if let Some(pos) = self.order.iter().position(|&d| d == id) {
+            self.order.remove(pos);
+        }
+        self.inner.drop_dataset(id);
+    }
+
+    fn dataset_len(&self, id: u64) -> Option<usize> {
+        if self.order.contains(&id) {
+            self.inner.dataset_len(id)
+        } else {
+            None
+        }
+    }
+
+    fn kind(&self) -> &'static str {
+        "lru"
+    }
+}
+
+/// Wrap a backend factory with an LRU cap (applied per worker).
+pub fn lru_factory(
+    inner: super::backend::BackendFactory,
+    capacity: usize,
+) -> super::backend::BackendFactory {
+    std::sync::Arc::new(move |worker| {
+        Ok(Box::new(LruBackend::new(inner(worker)?, capacity)) as Box<dyn DatasetBackend>)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::backend::HostBackend;
+    use crate::coordinator::{KSpec, SelectionService};
+    use crate::select::Method;
+
+    fn lru(cap: usize) -> LruBackend {
+        LruBackend::new(Box::<HostBackend>::default(), cap)
+    }
+
+    #[test]
+    fn evicts_least_recently_used() {
+        let mut b = lru(2);
+        b.upload(1, &[1.0], DType::F64).unwrap();
+        b.upload(2, &[2.0], DType::F64).unwrap();
+        b.evaluator(1).unwrap(); // 1 is now most recent
+        b.upload(3, &[3.0], DType::F64).unwrap(); // evicts 2
+        assert_eq!(b.evictions(), 1);
+        assert!(b.evaluator(2).is_err());
+        assert!(b.evaluator(1).is_ok());
+        assert!(b.evaluator(3).is_ok());
+        assert_eq!(b.resident(), 2);
+    }
+
+    #[test]
+    fn reupload_after_eviction_works() {
+        let mut b = lru(1);
+        b.upload(1, &[1.0, 2.0, 3.0], DType::F64).unwrap();
+        b.upload(2, &[4.0], DType::F64).unwrap(); // evicts 1
+        assert!(b.evaluator(1).is_err());
+        b.upload(1, &[1.0, 2.0, 3.0], DType::F64).unwrap(); // evicts 2
+        assert_eq!(b.evaluator(1).unwrap().n(), 3);
+        assert_eq!(b.evictions(), 2);
+    }
+
+    #[test]
+    fn explicit_drop_frees_slot() {
+        let mut b = lru(2);
+        b.upload(1, &[1.0], DType::F64).unwrap();
+        b.upload(2, &[2.0], DType::F64).unwrap();
+        b.drop_dataset(1);
+        assert_eq!(b.resident(), 1);
+        b.upload(3, &[3.0], DType::F64).unwrap();
+        assert_eq!(b.evictions(), 0); // no eviction needed
+        assert_eq!(b.dataset_len(1), None);
+        assert_eq!(b.dataset_len(3), Some(1));
+    }
+
+    #[test]
+    fn lru_through_the_service() {
+        let svc = SelectionService::start(
+            1,
+            16,
+            Method::Hybrid,
+            lru_factory(HostBackend::factory(), 2),
+        )
+        .unwrap();
+        let a = svc.upload(vec![1.0, 2.0, 3.0], DType::F64).unwrap();
+        let b = svc.upload(vec![4.0, 5.0, 6.0], DType::F64).unwrap();
+        let c = svc.upload(vec![7.0, 8.0, 9.0], DType::F64).unwrap(); // evicts a
+        assert!(svc.query(a, KSpec::Median).is_err());
+        assert_eq!(svc.query(b, KSpec::Median).unwrap().value, 5.0);
+        assert_eq!(svc.query(c, KSpec::Median).unwrap().value, 8.0);
+        svc.shutdown();
+    }
+}

@@ -1,0 +1,156 @@
+//! Service observability: lock-free counters and a log-bucketed latency
+//! histogram, in the style of a serving router's metrics endpoint.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+/// Log₂-bucketed latency histogram: bucket i covers [2^i, 2^(i+1)) µs.
+const BUCKETS: usize = 32;
+
+#[derive(Debug, Default)]
+pub struct Metrics {
+    pub requests: AtomicU64,
+    pub uploads: AtomicU64,
+    pub queries: AtomicU64,
+    pub errors: AtomicU64,
+    pub probes: AtomicU64,
+    pub batched: AtomicU64,
+    latency_us: [AtomicU64; BUCKETS],
+    latency_sum_us: AtomicU64,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record_latency(&self, d: Duration) {
+        let us = d.as_micros().max(1) as u64;
+        let bucket = (63 - us.leading_zeros() as usize).min(BUCKETS - 1);
+        self.latency_us[bucket].fetch_add(1, Ordering::Relaxed);
+        self.latency_sum_us.fetch_add(us, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.latency_us.iter().map(|b| b.load(Ordering::Relaxed)).sum()
+    }
+
+    pub fn mean_latency_us(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            return 0.0;
+        }
+        self.latency_sum_us.load(Ordering::Relaxed) as f64 / n as f64
+    }
+
+    /// Approximate quantile from bucket boundaries (upper bound).
+    pub fn latency_quantile_us(&self, q: f64) -> u64 {
+        let n = self.count();
+        if n == 0 {
+            return 0;
+        }
+        let target = ((q.clamp(0.0, 1.0) * n as f64).ceil() as u64).max(1);
+        let mut seen = 0;
+        for (i, b) in self.latency_us.iter().enumerate() {
+            seen += b.load(Ordering::Relaxed);
+            if seen >= target {
+                return 1u64 << (i + 1);
+            }
+        }
+        u64::MAX
+    }
+
+    pub fn snapshot(&self) -> Snapshot {
+        Snapshot {
+            requests: self.requests.load(Ordering::Relaxed),
+            uploads: self.uploads.load(Ordering::Relaxed),
+            queries: self.queries.load(Ordering::Relaxed),
+            errors: self.errors.load(Ordering::Relaxed),
+            probes: self.probes.load(Ordering::Relaxed),
+            batched: self.batched.load(Ordering::Relaxed),
+            mean_latency_us: self.mean_latency_us(),
+            p50_us: self.latency_quantile_us(0.5),
+            p99_us: self.latency_quantile_us(0.99),
+        }
+    }
+}
+
+/// Point-in-time metrics view.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Snapshot {
+    pub requests: u64,
+    pub uploads: u64,
+    pub queries: u64,
+    pub errors: u64,
+    pub probes: u64,
+    pub batched: u64,
+    pub mean_latency_us: f64,
+    pub p50_us: u64,
+    pub p99_us: u64,
+}
+
+impl std::fmt::Display for Snapshot {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "requests={} uploads={} queries={} errors={} probes={} batched={} \
+             latency(mean={:.0}us p50<{}us p99<{}us)",
+            self.requests,
+            self.uploads,
+            self.queries,
+            self.errors,
+            self.probes,
+            self.batched,
+            self.mean_latency_us,
+            self.p50_us,
+            self.p99_us
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let m = Metrics::new();
+        m.requests.fetch_add(3, Ordering::Relaxed);
+        m.errors.fetch_add(1, Ordering::Relaxed);
+        let s = m.snapshot();
+        assert_eq!(s.requests, 3);
+        assert_eq!(s.errors, 1);
+    }
+
+    #[test]
+    fn latency_histogram_quantiles() {
+        let m = Metrics::new();
+        for _ in 0..90 {
+            m.record_latency(Duration::from_micros(100)); // bucket ~[64,128)
+        }
+        for _ in 0..10 {
+            m.record_latency(Duration::from_millis(10)); // ~[8192,16384)
+        }
+        assert_eq!(m.count(), 100);
+        assert!(m.latency_quantile_us(0.5) <= 256);
+        assert!(m.latency_quantile_us(0.99) >= 8192);
+        let mean = m.mean_latency_us();
+        assert!((mean - (90.0 * 100.0 + 10.0 * 10_000.0) / 100.0).abs() < 50.0);
+    }
+
+    #[test]
+    fn empty_histogram() {
+        let m = Metrics::new();
+        assert_eq!(m.latency_quantile_us(0.99), 0);
+        assert_eq!(m.mean_latency_us(), 0.0);
+    }
+
+    #[test]
+    fn snapshot_displays() {
+        let m = Metrics::new();
+        m.record_latency(Duration::from_micros(5));
+        let s = format!("{}", m.snapshot());
+        assert!(s.contains("requests=0"));
+        assert!(s.contains("latency"));
+    }
+}

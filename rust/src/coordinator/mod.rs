@@ -1,0 +1,16 @@
+//! Layer-3 coordinator: the selection service (router + sticky workers +
+//! micro-batching), dataset backends, and metrics.
+//!
+//! This is the runtime a downstream system embeds: upload device-resident
+//! arrays once, then issue many order-statistic queries (the LMS/LTS and
+//! kNN applications are exactly such workloads).
+
+pub mod backend;
+pub mod eviction;
+pub mod metrics;
+pub mod service;
+
+pub use backend::{BackendFactory, DatasetBackend, DeviceBackend, HostBackend};
+pub use eviction::{lru_factory, LruBackend};
+pub use metrics::{Metrics, Snapshot};
+pub use service::{DatasetId, KSpec, QueryResult, SelectionService};

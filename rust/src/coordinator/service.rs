@@ -1,0 +1,463 @@
+//! The selection service: a router + worker pool in the style of a serving
+//! frontend (vllm-project/router is the reference shape).
+//!
+//! - Datasets are uploaded once and pinned to a worker (consistent
+//!   `id % workers` routing) — the device keeps the array resident, as in
+//!   the paper's setting where x is *produced* on the GPU.
+//! - Queries for a dataset are dispatched to its worker over a bounded
+//!   channel (backpressure) and answered through per-request reply
+//!   channels.
+//! - Workers micro-batch: they drain whatever is queued and group queries
+//!   by dataset, so repeated medians of the same array (the LMS/LTS inner
+//!   loop!) reuse the resident buffer back-to-back.
+//! - PJRT handles are thread-confined; each worker builds its own backend
+//!   via the [`BackendFactory`].
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use super::backend::BackendFactory;
+use super::metrics::Metrics;
+use crate::select::objective::DType;
+use crate::select::{self, Method};
+use crate::{Error, Result};
+
+/// What to select.
+#[derive(Debug, Clone, Copy)]
+pub enum KSpec {
+    /// The paper's median, `x_([(n+1)/2])`.
+    Median,
+    /// Explicit 1-indexed rank.
+    Rank(usize),
+    /// Quantile in [0, 1] (rank = ceil(q·n) clamped to [1, n]).
+    Quantile(f64),
+}
+
+impl KSpec {
+    pub fn rank_for(&self, n: usize) -> Result<usize> {
+        match *self {
+            KSpec::Median => Ok(crate::util::median_rank(n)),
+            KSpec::Rank(k) => {
+                if k == 0 || k > n {
+                    Err(crate::invalid_arg!("rank {k} out of range for n={n}"))
+                } else {
+                    Ok(k)
+                }
+            }
+            KSpec::Quantile(q) => {
+                if !(0.0..=1.0).contains(&q) {
+                    return Err(crate::invalid_arg!("quantile {q} outside [0,1]"));
+                }
+                Ok(((q * n as f64).ceil() as usize).clamp(1, n))
+            }
+        }
+    }
+}
+
+/// Answer to a query.
+#[derive(Debug, Clone)]
+pub struct QueryResult {
+    pub value: f64,
+    pub k: usize,
+    pub method: Method,
+    pub probes: u64,
+    pub iterations: usize,
+    pub wall: std::time::Duration,
+}
+
+pub type DatasetId = u64;
+
+enum Request {
+    Upload {
+        id: DatasetId,
+        data: Arc<Vec<f64>>,
+        dtype: DType,
+        reply: SyncSender<Result<()>>,
+    },
+    Query {
+        id: DatasetId,
+        k: KSpec,
+        method: Method,
+        reply: SyncSender<Result<QueryResult>>,
+    },
+    Drop {
+        id: DatasetId,
+    },
+    Shutdown,
+}
+
+/// Handle to a running selection service.
+pub struct SelectionService {
+    worker_txs: Vec<SyncSender<Request>>,
+    workers: Vec<JoinHandle<()>>,
+    next_id: AtomicU64,
+    pub metrics: Arc<Metrics>,
+    default_method: Method,
+}
+
+impl SelectionService {
+    /// Start `workers` threads, each owning a backend from `factory`.
+    pub fn start(
+        workers: usize,
+        queue_depth: usize,
+        default_method: Method,
+        factory: BackendFactory,
+    ) -> Result<SelectionService> {
+        if workers == 0 {
+            return Err(crate::invalid_arg!("need at least one worker"));
+        }
+        let metrics = Arc::new(Metrics::new());
+        let mut worker_txs = Vec::with_capacity(workers);
+        let mut handles = Vec::with_capacity(workers);
+        for w in 0..workers {
+            let (tx, rx) = sync_channel::<Request>(queue_depth);
+            let factory = factory.clone();
+            let metrics = metrics.clone();
+            let handle = std::thread::Builder::new()
+                .name(format!("cp-select-worker-{w}"))
+                .spawn(move || worker_loop(w, rx, factory, metrics))
+                .map_err(|e| Error::Service(format!("spawn failed: {e}")))?;
+            worker_txs.push(tx);
+            handles.push(handle);
+        }
+        Ok(SelectionService {
+            worker_txs,
+            workers: handles,
+            next_id: AtomicU64::new(1),
+            metrics,
+            default_method,
+        })
+    }
+
+    fn route(&self, id: DatasetId) -> &SyncSender<Request> {
+        &self.worker_txs[(id as usize) % self.worker_txs.len()]
+    }
+
+    /// Upload a dataset; returns its id. Blocks until the device holds it.
+    pub fn upload(&self, data: Vec<f64>, dtype: DType) -> Result<DatasetId> {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        self.metrics.requests.fetch_add(1, Ordering::Relaxed);
+        let (reply, rx) = sync_channel(1);
+        self.route(id)
+            .send(Request::Upload { id, data: Arc::new(data), dtype, reply })
+            .map_err(|_| Error::Service("worker channel closed".into()))?;
+        recv_reply(&rx)??;
+        self.metrics.uploads.fetch_add(1, Ordering::Relaxed);
+        Ok(id)
+    }
+
+    /// Blocking query with the service default method.
+    pub fn query(&self, id: DatasetId, k: KSpec) -> Result<QueryResult> {
+        self.query_with(id, k, self.default_method)
+    }
+
+    /// Blocking query with an explicit method.
+    pub fn query_with(&self, id: DatasetId, k: KSpec, method: Method) -> Result<QueryResult> {
+        recv_reply(&self.query_async(id, k, method)?)?
+    }
+
+    /// Fire a query and return the reply channel (for concurrent clients).
+    pub fn query_async(
+        &self,
+        id: DatasetId,
+        k: KSpec,
+        method: Method,
+    ) -> Result<Receiver<Result<QueryResult>>> {
+        self.metrics.requests.fetch_add(1, Ordering::Relaxed);
+        let (reply, rx) = sync_channel(1);
+        self.route(id)
+            .send(Request::Query { id, k, method, reply })
+            .map_err(|_| Error::Service("worker channel closed".into()))?;
+        Ok(rx)
+    }
+
+    /// Drop a dataset (fire-and-forget).
+    pub fn drop_dataset(&self, id: DatasetId) -> Result<()> {
+        self.route(id)
+            .send(Request::Drop { id })
+            .map_err(|_| Error::Service("worker channel closed".into()))
+    }
+
+    /// Graceful shutdown: drain queues, join workers.
+    pub fn shutdown(mut self) {
+        for tx in &self.worker_txs {
+            let _ = tx.send(Request::Shutdown);
+        }
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for SelectionService {
+    fn drop(&mut self) {
+        for tx in &self.worker_txs {
+            let _ = tx.send(Request::Shutdown);
+        }
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn recv_reply<T>(rx: &Receiver<T>) -> Result<T> {
+    rx.recv().map_err(|_| Error::Service("worker dropped the reply channel".into()))
+}
+
+fn worker_loop(
+    worker_idx: usize,
+    rx: Receiver<Request>,
+    factory: BackendFactory,
+    metrics: Arc<Metrics>,
+) {
+    let mut backend = match factory(worker_idx) {
+        Ok(b) => b,
+        Err(e) => {
+            // Fail every request with a clear error rather than panicking.
+            while let Ok(req) = rx.recv() {
+                match req {
+                    Request::Upload { reply, .. } => {
+                        let _ = reply.send(Err(Error::Service(format!(
+                            "backend init failed: {e}"
+                        ))));
+                    }
+                    Request::Query { reply, .. } => {
+                        let _ = reply.send(Err(Error::Service(format!(
+                            "backend init failed: {e}"
+                        ))));
+                    }
+                    Request::Shutdown => return,
+                    Request::Drop { .. } => {}
+                }
+            }
+            return;
+        }
+    };
+
+    // Micro-batching: drain the queue, group queries by dataset so a burst
+    // of medians against the same resident array runs back-to-back.
+    let mut batch: Vec<Request> = Vec::new();
+    'outer: loop {
+        batch.clear();
+        match rx.recv() {
+            Ok(r) => batch.push(r),
+            Err(_) => break,
+        }
+        while let Ok(r) = rx.try_recv() {
+            batch.push(r);
+            if batch.len() >= 64 {
+                break;
+            }
+        }
+        if batch.len() > 1 {
+            metrics.batched.fetch_add(batch.len() as u64 - 1, Ordering::Relaxed);
+            // Stable grouping by dataset id for queries.
+            batch.sort_by_key(|r| match r {
+                Request::Upload { id, .. } => (0u8, *id),
+                Request::Drop { id } => (1, *id),
+                Request::Query { id, .. } => (2, *id),
+                Request::Shutdown => (3, u64::MAX),
+            });
+        }
+        for req in batch.drain(..) {
+            match req {
+                Request::Upload { id, data, dtype, reply } => {
+                    let r = backend.upload(id, &data, dtype);
+                    if r.is_err() {
+                        metrics.errors.fetch_add(1, Ordering::Relaxed);
+                    }
+                    let _ = reply.send(r);
+                }
+                Request::Drop { id } => backend.drop_dataset(id),
+                Request::Query { id, k, method, reply } => {
+                    let t0 = Instant::now();
+                    let out = run_query(backend.as_mut(), id, k, method);
+                    let wall = t0.elapsed();
+                    metrics.queries.fetch_add(1, Ordering::Relaxed);
+                    metrics.record_latency(wall);
+                    match &out {
+                        Ok(q) => {
+                            metrics.probes.fetch_add(q.probes, Ordering::Relaxed);
+                        }
+                        Err(_) => {
+                            metrics.errors.fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
+                    let _ = reply.send(out.map(|mut q| {
+                        q.wall = wall;
+                        q
+                    }));
+                }
+                Request::Shutdown => break 'outer,
+            }
+        }
+    }
+}
+
+fn run_query(
+    backend: &mut dyn super::backend::DatasetBackend,
+    id: DatasetId,
+    k: KSpec,
+    method: Method,
+) -> Result<QueryResult> {
+    let n = backend
+        .dataset_len(id)
+        .ok_or_else(|| Error::Service(format!("unknown dataset {id}")))?;
+    let rank = k.rank_for(n)?;
+    let ev = backend.evaluator(id)?;
+    let r = select::order_statistic(ev, rank, method)?;
+    Ok(QueryResult {
+        value: r.value,
+        k: rank,
+        method,
+        probes: r.probes,
+        iterations: r.iterations,
+        wall: std::time::Duration::ZERO, // filled by the worker loop
+    })
+}
+
+/// Batch-of-datasets convenience: a `HashMap` of names to ids.
+pub struct NamedDatasets {
+    pub ids: HashMap<String, DatasetId>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::backend::HostBackend;
+    use crate::stats::{sorted_median, sorted_order_statistic, Distribution, Rng};
+
+    fn start_host(workers: usize) -> SelectionService {
+        SelectionService::start(workers, 64, Method::Hybrid, HostBackend::factory()).unwrap()
+    }
+
+    #[test]
+    fn upload_query_roundtrip() {
+        let svc = start_host(1);
+        let mut rng = Rng::seeded(171);
+        let data = Distribution::Normal.sample_vec(&mut rng, 2001);
+        let want = sorted_median(&data);
+        let id = svc.upload(data, DType::F64).unwrap();
+        let r = svc.query(id, KSpec::Median).unwrap();
+        assert_eq!(r.value, want);
+        assert_eq!(r.k, 1001);
+        assert!(r.wall > std::time::Duration::ZERO);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn rank_and_quantile_specs() {
+        let svc = start_host(2);
+        let data: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        let id = svc.upload(data, DType::F64).unwrap();
+        assert_eq!(svc.query(id, KSpec::Rank(1)).unwrap().value, 1.0);
+        assert_eq!(svc.query(id, KSpec::Rank(100)).unwrap().value, 100.0);
+        assert_eq!(svc.query(id, KSpec::Quantile(0.25)).unwrap().value, 25.0);
+        assert_eq!(svc.query(id, KSpec::Quantile(1.0)).unwrap().value, 100.0);
+        assert!(svc.query(id, KSpec::Rank(0)).is_err());
+        assert!(svc.query(id, KSpec::Quantile(1.5)).is_err());
+        svc.shutdown();
+    }
+
+    #[test]
+    fn methods_agree_through_service() {
+        let svc = start_host(2);
+        let mut rng = Rng::seeded(172);
+        let data = Distribution::Mixture1.sample_vec(&mut rng, 999);
+        let want = sorted_order_statistic(&data, 250);
+        let id = svc.upload(data, DType::F64).unwrap();
+        for m in [Method::CuttingPlane, Method::Hybrid, Method::Bisection, Method::Quickselect] {
+            let r = svc.query_with(id, KSpec::Rank(250), m).unwrap();
+            assert_eq!(r.value, want, "{}", m.name());
+        }
+        svc.shutdown();
+    }
+
+    #[test]
+    fn unknown_dataset_errors_and_counts() {
+        let svc = start_host(1);
+        assert!(svc.query(42, KSpec::Median).is_err());
+        assert_eq!(svc.metrics.snapshot().errors, 1);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn concurrent_clients_many_datasets() {
+        let svc = Arc::new(start_host(4));
+        let mut rng = Rng::seeded(173);
+        let mut wants = Vec::new();
+        let mut ids = Vec::new();
+        for i in 0..12 {
+            let d = Distribution::ALL[i % 9].sample_vec(&mut rng, 500 + i * 37);
+            wants.push(sorted_median(&d));
+            ids.push(svc.upload(d, DType::F64).unwrap());
+        }
+        let mut handles = Vec::new();
+        for (chunk_start, chunk) in ids.chunks(3).enumerate() {
+            let svc = svc.clone();
+            let chunk: Vec<_> = chunk.to_vec();
+            handles.push(std::thread::spawn(move || {
+                chunk
+                    .iter()
+                    .map(|&id| (chunk_start, svc.query(id, KSpec::Median).unwrap().value))
+                    .collect::<Vec<_>>()
+            }));
+        }
+        let mut got = Vec::new();
+        for h in handles {
+            got.extend(h.join().unwrap());
+        }
+        assert_eq!(got.len(), 12);
+        for (i, (_, v)) in got.iter().enumerate() {
+            // order within chunks preserved: map back via position
+            let idx = (i / 3) * 3 + (i % 3);
+            assert_eq!(*v, wants[idx]);
+        }
+        let snap = svc.metrics.snapshot();
+        assert_eq!(snap.queries, 12);
+        assert_eq!(snap.uploads, 12);
+        Arc::try_unwrap(svc).ok().map(|s| s.shutdown());
+    }
+
+    #[test]
+    fn burst_queries_get_batched() {
+        let svc = start_host(1);
+        let data: Vec<f64> = (0..1000).map(|i| (i * 7919 % 997) as f64).collect();
+        let id = svc.upload(data.clone(), DType::F64).unwrap();
+        // fire a burst asynchronously, then collect
+        let mut rxs = Vec::new();
+        for k in 1..=32 {
+            rxs.push((k, svc.query_async(id, KSpec::Rank(k * 30), Method::CuttingPlane).unwrap()));
+        }
+        for (k, rx) in rxs {
+            let r = rx.recv().unwrap().unwrap();
+            assert_eq!(r.value, sorted_order_statistic(&data, k * 30));
+        }
+        svc.shutdown();
+    }
+
+    #[test]
+    fn drop_dataset_frees_it() {
+        let svc = start_host(1);
+        let id = svc.upload(vec![1.0, 2.0, 3.0], DType::F64).unwrap();
+        assert_eq!(svc.query(id, KSpec::Median).unwrap().value, 2.0);
+        svc.drop_dataset(id).unwrap();
+        // allow the worker to process the drop
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        assert!(svc.query(id, KSpec::Median).is_err());
+        svc.shutdown();
+    }
+
+    #[test]
+    fn f32_datasets() {
+        let svc = start_host(1);
+        let id = svc.upload(vec![0.1, 0.2, 0.3], DType::F32).unwrap();
+        let r = svc.query(id, KSpec::Median).unwrap();
+        assert!((r.value - 0.2f32 as f64).abs() < 1e-9);
+        svc.shutdown();
+    }
+}

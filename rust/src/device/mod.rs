@@ -1,0 +1,244 @@
+//! Simulated multi-device substrate (DESIGN.md S5).
+//!
+//! The paper's §V.D argument: sorting across GPUs moves bulk data between
+//! devices, while the minimization approach runs *independent reductions
+//! per device* and combines a handful of scalars on the host. We model a
+//! device group as a set of shards, each behind its own [`Evaluator`];
+//! [`ShardedEvaluator`] performs the scalar combine exactly as the paper
+//! describes (partial sums added on the CPU).
+//!
+//! An optional [`TransferModel`] charges simulated interconnect time for
+//! data that *would* cross PCIe on the paper's testbed (the real CPU
+//! substrate memcpy is nearly free, which would hide the transfer-cost
+//! structure of Tables I–II; the harness reports both).
+
+pub mod transfer;
+
+pub use transfer::TransferModel;
+
+use crate::select::objective::{
+    DType, Evaluator, InitStats, IntervalCounts, Neighbors, ProbeStats,
+};
+use crate::Result;
+
+/// Evenly shard a data vector for `devices` simulated devices.
+pub fn shard_data(data: &[f64], devices: usize) -> Vec<&[f64]> {
+    assert!(devices >= 1);
+    let n = data.len();
+    let base = n / devices;
+    let extra = n % devices;
+    let mut out = Vec::with_capacity(devices);
+    let mut start = 0;
+    for i in 0..devices {
+        let len = base + usize::from(i < extra);
+        out.push(&data[start..start + len]);
+        start += len;
+    }
+    out
+}
+
+/// Combines per-shard evaluators into one logical device group.
+///
+/// Every probe fans out to all shards and merges the sufficient statistics
+/// — O(shards) scalars of "interconnect" traffic per reduction, matching
+/// the paper's multi-GPU communication pattern.
+pub struct ShardedEvaluator<E: Evaluator> {
+    shards: Vec<E>,
+    probes: u64,
+}
+
+impl<E: Evaluator> ShardedEvaluator<E> {
+    pub fn new(shards: Vec<E>) -> Result<Self> {
+        if shards.is_empty() {
+            return Err(crate::invalid_arg!("need at least one shard"));
+        }
+        let dt = shards[0].dtype();
+        if shards.iter().any(|s| s.dtype() != dt) {
+            return Err(crate::invalid_arg!("shards must share a dtype"));
+        }
+        Ok(ShardedEvaluator { shards, probes: 0 })
+    }
+
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Total per-shard device reductions (probes() reports logical group
+    /// reductions; this exposes the fan-out for tests).
+    pub fn shard_probes(&self) -> u64 {
+        self.shards.iter().map(|s| s.probes()).sum()
+    }
+}
+
+impl<E: Evaluator> Evaluator for ShardedEvaluator<E> {
+    fn n(&self) -> usize {
+        self.shards.iter().map(|s| s.n()).sum()
+    }
+
+    fn dtype(&self) -> DType {
+        self.shards[0].dtype()
+    }
+
+    fn init_stats(&mut self) -> Result<InitStats> {
+        self.probes += 1;
+        let mut acc: Option<InitStats> = None;
+        for s in &mut self.shards {
+            let v = s.init_stats()?;
+            acc = Some(match acc {
+                None => v,
+                Some(a) => a.merge(&v),
+            });
+        }
+        Ok(acc.unwrap())
+    }
+
+    fn probe(&mut self, y: f64) -> Result<ProbeStats> {
+        self.probes += 1;
+        let mut acc = ProbeStats { s_lo: 0.0, s_hi: 0.0, c_lt: 0, c_eq: 0, c_gt: 0 };
+        for s in &mut self.shards {
+            acc = acc.merge(&s.probe(y)?);
+        }
+        Ok(acc)
+    }
+
+    fn neighbors(&mut self, y: f64) -> Result<Neighbors> {
+        self.probes += 1;
+        let mut acc = Neighbors { lower: f64::NEG_INFINITY, upper: f64::INFINITY, c_le: 0 };
+        for s in &mut self.shards {
+            acc = acc.merge(&s.neighbors(y)?);
+        }
+        Ok(acc)
+    }
+
+    fn interval(&mut self, lo: f64, hi: f64) -> Result<IntervalCounts> {
+        self.probes += 1;
+        let mut acc = IntervalCounts { c_le: 0, c_in: 0, c_ge: 0 };
+        for s in &mut self.shards {
+            acc = acc.merge(&s.interval(lo, hi)?);
+        }
+        Ok(acc)
+    }
+
+    fn compact(&mut self, lo: f64, hi: f64) -> Result<Vec<f64>> {
+        // Each shard compacts locally; only the survivors (1–5% of n after
+        // the CP phase) cross the interconnect — the paper's key point.
+        let mut out = Vec::new();
+        for s in &mut self.shards {
+            out.extend(s.compact(lo, hi)?);
+        }
+        Ok(out)
+    }
+
+    fn download(&mut self) -> Result<Vec<f64>> {
+        let mut out = Vec::with_capacity(self.n());
+        for s in &mut self.shards {
+            out.extend(s.download()?);
+        }
+        Ok(out)
+    }
+
+    fn probes(&self) -> u64 {
+        self.probes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::select::objective::HostEvaluator;
+    use crate::select::{self, Method};
+    use crate::stats::{sorted_median, Distribution, Rng};
+
+    fn sharded(data: &[f64], k: usize) -> ShardedEvaluator<HostEvaluator> {
+        let shards = shard_data(data, k)
+            .into_iter()
+            .map(HostEvaluator::new)
+            .collect();
+        ShardedEvaluator::new(shards).unwrap()
+    }
+
+    #[test]
+    fn shard_split_covers_everything() {
+        let data: Vec<f64> = (0..103).map(|i| i as f64).collect();
+        for devices in [1, 2, 3, 7, 8] {
+            let shards = shard_data(&data, devices);
+            assert_eq!(shards.len(), devices);
+            let total: usize = shards.iter().map(|s| s.len()).sum();
+            assert_eq!(total, 103);
+            let lens: Vec<usize> = shards.iter().map(|s| s.len()).collect();
+            let (mn, mx) = (lens.iter().min().unwrap(), lens.iter().max().unwrap());
+            assert!(mx - mn <= 1, "{lens:?}");
+        }
+    }
+
+    #[test]
+    fn sharded_probe_equals_whole() {
+        let mut rng = Rng::seeded(111);
+        let data = Distribution::Mixture2.sample_vec(&mut rng, 1003);
+        let mut whole = HostEvaluator::new(&data);
+        for devices in [1, 2, 4, 8] {
+            let mut sh = sharded(&data, devices);
+            for y in [-5.0, 0.7, 50.0, 101.0] {
+                let a = sh.probe(y).unwrap();
+                let b = whole.probe(y).unwrap();
+                // counts are exact; sums may differ by accumulation order
+                assert_eq!((a.c_lt, a.c_eq, a.c_gt), (b.c_lt, b.c_eq, b.c_gt));
+                assert!((a.s_lo - b.s_lo).abs() <= 1e-9 * b.s_lo.abs().max(1.0));
+                assert!((a.s_hi - b.s_hi).abs() <= 1e-9 * b.s_hi.abs().max(1.0));
+            }
+            let (ia, ib) = (sh.init_stats().unwrap(), whole.init_stats().unwrap());
+            assert_eq!((ia.min, ia.max), (ib.min, ib.max));
+            assert!((ia.sum - ib.sum).abs() <= 1e-9 * ib.sum.abs().max(1.0));
+            assert_eq!(sh.neighbors(0.5).unwrap(), whole.neighbors(0.5).unwrap());
+            assert_eq!(
+                sh.interval(0.0, 1.0).unwrap(),
+                whole.interval(0.0, 1.0).unwrap()
+            );
+        }
+    }
+
+    #[test]
+    fn median_identical_across_shard_counts() {
+        let mut rng = Rng::seeded(112);
+        let data = Distribution::HalfNormal.sample_vec(&mut rng, 4096);
+        let want = sorted_median(&data);
+        for devices in [1, 2, 3, 5, 8] {
+            let mut sh = sharded(&data, devices);
+            let got = select::median(&mut sh, Method::CuttingPlane).unwrap();
+            assert_eq!(got.value, want, "devices={devices}");
+            let mut sh = sharded(&data, devices);
+            let got = select::median(&mut sh, Method::Hybrid).unwrap();
+            assert_eq!(got.value, want, "hybrid devices={devices}");
+        }
+    }
+
+    #[test]
+    fn group_probe_counter_is_logical() {
+        let mut rng = Rng::seeded(113);
+        let data = Distribution::Normal.sample_vec(&mut rng, 512);
+        let mut sh = sharded(&data, 4);
+        sh.probe(0.0).unwrap();
+        sh.probe(1.0).unwrap();
+        assert_eq!(sh.probes(), 2);
+        assert_eq!(sh.shard_probes(), 8); // 2 logical × 4 shards
+    }
+
+    #[test]
+    fn compact_gathers_across_shards() {
+        let data: Vec<f64> = (0..100).map(|i| i as f64).collect();
+        let mut sh = sharded(&data, 3);
+        let z = sh.compact(10.0, 20.0).unwrap();
+        let mut z = z;
+        z.sort_by(|a, b| a.total_cmp(b));
+        let want: Vec<f64> = (11..20).map(|i| i as f64).collect();
+        assert_eq!(z, want);
+    }
+
+    #[test]
+    fn rejects_empty_or_mixed() {
+        assert!(ShardedEvaluator::<HostEvaluator>::new(vec![]).is_err());
+        let a = HostEvaluator::new(&[1.0]);
+        let b = HostEvaluator::new_f32(&[2.0]);
+        assert!(ShardedEvaluator::new(vec![a, b]).is_err());
+    }
+}

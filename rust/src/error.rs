@@ -1,0 +1,133 @@
+//! Crate-wide error type.
+
+use std::fmt;
+
+/// Unified error for the coordinator, runtime, and applications.
+#[derive(Debug, thiserror::Error)]
+pub enum Error {
+    /// PJRT / XLA runtime failures (compile, execute, transfer).
+    #[error("xla runtime: {0}")]
+    Xla(String),
+
+    /// Artifact store problems: missing manifest, missing bucket, bad entry.
+    #[error("artifact: {0}")]
+    Artifact(String),
+
+    /// Manifest / config parse errors.
+    #[error("parse: {0}")]
+    Parse(String),
+
+    /// Invalid argument from a caller (k out of range, empty input, ...).
+    #[error("invalid argument: {0}")]
+    InvalidArg(String),
+
+    /// An algorithm failed to converge or hit an internal inconsistency.
+    #[error("algorithm: {0}")]
+    Algorithm(String),
+
+    /// Coordinator/service failures (queue closed, worker died, ...).
+    #[error("service: {0}")]
+    Service(String),
+
+    /// I/O errors with path context.
+    #[error("io: {path}: {source}")]
+    Io {
+        path: String,
+        #[source]
+        source: std::io::Error,
+    },
+}
+
+impl Error {
+    pub fn io(path: impl Into<String>, source: std::io::Error) -> Self {
+        Error::Io { path: path.into(), source }
+    }
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e.to_string())
+    }
+}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Helper to build `Error::InvalidArg` with format args.
+#[macro_export]
+macro_rules! invalid_arg {
+    ($($t:tt)*) => { $crate::Error::InvalidArg(format!($($t)*)) };
+}
+
+/// Helper to build `Error::Algorithm` with format args.
+#[macro_export]
+macro_rules! algo_err {
+    ($($t:tt)*) => { $crate::Error::Algorithm(format!($($t)*)) };
+}
+
+impl fmt::Display for ErrorKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let s = match self {
+            ErrorKind::Xla => "xla",
+            ErrorKind::Artifact => "artifact",
+            ErrorKind::Parse => "parse",
+            ErrorKind::InvalidArg => "invalid-arg",
+            ErrorKind::Algorithm => "algorithm",
+            ErrorKind::Service => "service",
+            ErrorKind::Io => "io",
+        };
+        f.write_str(s)
+    }
+}
+
+/// Coarse error classification used by service metrics.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ErrorKind {
+    Xla,
+    Artifact,
+    Parse,
+    InvalidArg,
+    Algorithm,
+    Service,
+    Io,
+}
+
+impl Error {
+    pub fn kind(&self) -> ErrorKind {
+        match self {
+            Error::Xla(_) => ErrorKind::Xla,
+            Error::Artifact(_) => ErrorKind::Artifact,
+            Error::Parse(_) => ErrorKind::Parse,
+            Error::InvalidArg(_) => ErrorKind::InvalidArg,
+            Error::Algorithm(_) => ErrorKind::Algorithm,
+            Error::Service(_) => ErrorKind::Service,
+            Error::Io { .. } => ErrorKind::Io,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kinds_roundtrip() {
+        let e = Error::Artifact("missing".into());
+        assert_eq!(e.kind(), ErrorKind::Artifact);
+        assert_eq!(e.to_string(), "artifact: missing");
+        assert_eq!(ErrorKind::Artifact.to_string(), "artifact");
+    }
+
+    #[test]
+    fn macros_build_errors() {
+        let e = invalid_arg!("k={} out of range", 7);
+        assert!(matches!(e, Error::InvalidArg(_)));
+        let e = algo_err!("diverged after {} iters", 3);
+        assert!(matches!(e, Error::Algorithm(_)));
+    }
+
+    #[test]
+    fn io_error_keeps_path() {
+        let e = Error::io("/tmp/x", std::io::Error::new(std::io::ErrorKind::NotFound, "nope"));
+        assert!(e.to_string().contains("/tmp/x"));
+    }
+}

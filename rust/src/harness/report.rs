@@ -1,0 +1,158 @@
+//! Rendering: markdown tables (paper layout) and CSV series (Figs 2/3/5).
+
+use std::io::Write;
+use std::path::Path;
+
+use super::{HybridSweepPoint, OutlierPoint, Table};
+use crate::select::TracePoint;
+use crate::{Error, Result};
+
+fn fmt_ms(v: Option<f64>) -> String {
+    match v {
+        None => "—".to_string(),
+        Some(ms) if ms >= 100.0 => format!("{ms:.0}"),
+        Some(ms) if ms >= 1.0 => format!("{ms:.2}"),
+        Some(ms) => format!("{ms:.3}"),
+    }
+}
+
+/// Render a [`Table`] as github-flavored markdown in the paper's layout
+/// (methods as rows, sizes as columns, phase breakdowns indented).
+pub fn table_markdown(t: &Table) -> String {
+    let mut s = String::new();
+    s.push_str(&format!("### {}\n\n", t.title));
+    s.push_str("| Method |");
+    for n in &t.sizes {
+        s.push_str(&format!(" n=2^{} |", n.trailing_zeros()));
+    }
+    s.push('\n');
+    s.push_str("|---|");
+    for _ in &t.sizes {
+        s.push_str("---:|");
+    }
+    s.push('\n');
+    for row in &t.rows {
+        s.push_str(&format!("| **{}** |", row.label));
+        for v in &row.ms {
+            s.push_str(&format!(" {} |", fmt_ms(*v)));
+        }
+        s.push('\n');
+        for (phase, vals) in &row.phases {
+            s.push_str(&format!("| &nbsp;&nbsp;– {phase} |"));
+            for v in vals {
+                s.push_str(&format!(" {} |", fmt_ms(*v)));
+            }
+            s.push('\n');
+        }
+    }
+    s
+}
+
+/// CSV series for Figs 2/3: method,n,ms.
+pub fn table_csv(t: &Table) -> String {
+    let mut s = String::from("method,n,ms\n");
+    for row in &t.rows {
+        for (n, v) in t.sizes.iter().zip(&row.ms) {
+            if let Some(ms) = v {
+                s.push_str(&format!("{},{},{:.6}\n", row.label.replace(',', ";"), n, ms));
+            }
+        }
+    }
+    s
+}
+
+/// CSV for the Fig. 4 trace.
+pub fn trace_csv(trace: &[TracePoint]) -> String {
+    let mut s = String::from("iter,y,f,g,y_l,y_r,width\n");
+    for p in trace {
+        s.push_str(&format!(
+            "{},{:.17e},{:.17e},{:.17e},{:.17e},{:.17e},{:.17e}\n",
+            p.iter,
+            p.y,
+            p.f,
+            p.g,
+            p.y_l,
+            p.y_r,
+            p.y_r - p.y_l
+        ));
+    }
+    s
+}
+
+/// CSV for the Fig. 5 sweep.
+pub fn outlier_csv(points: &[OutlierPoint]) -> String {
+    let mut s = String::from("magnitude,method,iterations,probes,ms,correct\n");
+    for p in points {
+        s.push_str(&format!(
+            "{:.1e},{},{},{},{:.4},{}\n",
+            p.magnitude, p.method, p.iterations, p.probes, p.ms, p.correct
+        ));
+    }
+    s
+}
+
+/// CSV for the hybrid-budget ablation.
+pub fn hybrid_sweep_csv(points: &[HybridSweepPoint]) -> String {
+    let mut s = String::from("cp_iters,z_len,cp_ms,copy_ms,sort_ms,total_ms\n");
+    for p in points {
+        s.push_str(&format!(
+            "{},{},{:.4},{:.4},{:.4},{:.4}\n",
+            p.cp_iters, p.z_len, p.cp_ms, p.copy_ms, p.sort_ms, p.total_ms
+        ));
+    }
+    s
+}
+
+/// Write a string artifact under `results/`, creating the directory.
+pub fn write_result(dir: &Path, name: &str, content: &str) -> Result<std::path::PathBuf> {
+    std::fs::create_dir_all(dir).map_err(|e| Error::io(dir.display().to_string(), e))?;
+    let path = dir.join(name);
+    let mut f = std::fs::File::create(&path)
+        .map_err(|e| Error::io(path.display().to_string(), e))?;
+    f.write_all(content.as_bytes())
+        .map_err(|e| Error::io(path.display().to_string(), e))?;
+    Ok(path)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::harness::MethodRow;
+
+    fn sample_table() -> Table {
+        Table {
+            title: "Test".into(),
+            sizes: vec![1024, 4096],
+            rows: vec![MethodRow {
+                label: "Hybrid".into(),
+                ms: vec![Some(1.234), None],
+                phases: vec![("cp_iterations".into(), vec![Some(0.5), None])],
+            }],
+        }
+    }
+
+    #[test]
+    fn markdown_has_structure() {
+        let md = table_markdown(&sample_table());
+        assert!(md.contains("| Method |"));
+        assert!(md.contains("n=2^10"));
+        assert!(md.contains("**Hybrid**"));
+        assert!(md.contains("– cp_iterations"));
+        assert!(md.contains("—")); // missing cell marker
+    }
+
+    #[test]
+    fn csv_skips_missing() {
+        let csv = table_csv(&sample_table());
+        assert_eq!(csv.lines().count(), 2); // header + one data point
+        assert!(csv.contains("Hybrid,1024,1.234"));
+    }
+
+    #[test]
+    fn write_result_creates_dir(){
+        let dir = std::env::temp_dir().join(format!("cp_select_test_{}", std::process::id()));
+        let p = write_result(&dir, "x.csv", "a,b\n").unwrap();
+        assert!(p.exists());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,192 @@
+//! k-nearest-neighbor regression & classification via order statistics
+//! (paper §VI, application 2).
+//!
+//! Instead of sorting the n distances per query, the k-th order statistic
+//! `d_(k)` (found by the cutting plane in a handful of reductions) acts as
+//! a neighborhood threshold; the prediction is then one thresholded
+//! weighted reduction — the same ρ-function adaptation the paper describes
+//! for Eq. (4). Device twin: kernels `dists` + `knn_weighted_sum`.
+
+use crate::regression::MedianSelector;
+use crate::{invalid_arg, Result};
+
+/// A kNN model over host data (device variant in `examples/knn.rs`).
+#[derive(Debug, Clone)]
+pub struct KnnModel {
+    /// Points, row-major n × p.
+    pub x: Vec<Vec<f64>>,
+    /// Regression targets (or class labels as f64 for classification).
+    pub f: Vec<f64>,
+}
+
+impl KnnModel {
+    pub fn new(x: Vec<Vec<f64>>, f: Vec<f64>) -> Result<Self> {
+        if x.is_empty() || x.len() != f.len() {
+            return Err(invalid_arg!("need equally many points and targets"));
+        }
+        let p = x[0].len();
+        if x.iter().any(|r| r.len() != p) {
+            return Err(invalid_arg!("ragged point dimensions"));
+        }
+        Ok(KnnModel { x, f })
+    }
+
+    pub fn n(&self) -> usize {
+        self.x.len()
+    }
+
+    /// Squared distances to a query (the device `dists` kernel).
+    pub fn distances(&self, q: &[f64]) -> Vec<f64> {
+        self.x
+            .iter()
+            .map(|row| {
+                row.iter()
+                    .zip(q)
+                    .map(|(a, b)| {
+                        let d = a - b;
+                        d * d
+                    })
+                    .sum()
+            })
+            .collect()
+    }
+
+    /// Inverse-distance-weighted kNN regression: the k-th order statistic
+    /// of the distances is the neighborhood radius; prediction is a single
+    /// thresholded reduction (device `knn_weighted_sum` kernel).
+    pub fn predict_regression(
+        &self,
+        q: &[f64],
+        k: usize,
+        selector: &mut dyn MedianSelector,
+    ) -> Result<f64> {
+        let d = self.distances(q);
+        let t = self.threshold(&d, k, selector)?;
+        let (mut swf, mut sw, mut count) = (0.0, 0.0, 0usize);
+        for (&di, &fi) in d.iter().zip(&self.f) {
+            if di <= t {
+                let w = 1.0 / (1.0 + di);
+                swf += w * fi;
+                sw += w;
+                count += 1;
+            }
+        }
+        debug_assert!(count >= k);
+        Ok(swf / sw)
+    }
+
+    /// Majority-vote classification over the selected neighborhood.
+    pub fn predict_class(
+        &self,
+        q: &[f64],
+        k: usize,
+        selector: &mut dyn MedianSelector,
+    ) -> Result<i64> {
+        let d = self.distances(q);
+        let t = self.threshold(&d, k, selector)?;
+        let mut votes: std::collections::BTreeMap<i64, usize> = Default::default();
+        for (&di, &fi) in d.iter().zip(&self.f) {
+            if di <= t {
+                *votes.entry(fi.round() as i64).or_default() += 1;
+            }
+        }
+        Ok(votes
+            .into_iter()
+            .max_by_key(|&(_, c)| c)
+            .map(|(label, _)| label)
+            .expect("non-empty neighborhood"))
+    }
+
+    fn threshold(
+        &self,
+        d: &[f64],
+        k: usize,
+        selector: &mut dyn MedianSelector,
+    ) -> Result<f64> {
+        if k == 0 || k > self.n() {
+            return Err(invalid_arg!("k={k} out of range for n={}", self.n()));
+        }
+        selector.order_statistic(d, k)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::regression::HostSelector;
+    use crate::stats::Rng;
+
+    fn grid_model() -> KnnModel {
+        // f(x) = 2 x0 + x1 on a grid
+        let mut x = Vec::new();
+        let mut f = Vec::new();
+        for i in 0..20 {
+            for j in 0..20 {
+                let (a, b) = (i as f64 / 10.0, j as f64 / 10.0);
+                x.push(vec![a, b]);
+                f.push(2.0 * a + b);
+            }
+        }
+        KnnModel::new(x, f).unwrap()
+    }
+
+    #[test]
+    fn regression_approximates_smooth_function() {
+        let m = grid_model();
+        let mut sel = HostSelector::default();
+        for q in [[0.55, 0.55], [1.0, 0.3], [1.77, 1.9]] {
+            let pred = m.predict_regression(&q, 8, &mut sel).unwrap();
+            let truth = 2.0 * q[0] + q[1];
+            assert!((pred - truth).abs() < 0.15, "q={q:?} pred={pred} truth={truth}");
+        }
+    }
+
+    #[test]
+    fn neighborhood_contains_at_least_k() {
+        let m = grid_model();
+        let mut sel = HostSelector::default();
+        let d = m.distances(&[0.5, 0.5]);
+        for k in [1, 5, 40] {
+            let t = sel.order_statistic(&d, k).unwrap();
+            let inside = d.iter().filter(|&&x| x <= t).count();
+            assert!(inside >= k, "k={k} inside={inside}");
+        }
+    }
+
+    #[test]
+    fn classification_two_blobs() {
+        let mut rng = Rng::seeded(161);
+        let mut x = Vec::new();
+        let mut f = Vec::new();
+        for _ in 0..100 {
+            x.push(vec![rng.normal() * 0.5, rng.normal() * 0.5]);
+            f.push(0.0);
+            x.push(vec![5.0 + rng.normal() * 0.5, 5.0 + rng.normal() * 0.5]);
+            f.push(1.0);
+        }
+        let m = KnnModel::new(x, f).unwrap();
+        let mut sel = HostSelector::default();
+        assert_eq!(m.predict_class(&[0.2, -0.1], 9, &mut sel).unwrap(), 0);
+        assert_eq!(m.predict_class(&[5.1, 4.8], 9, &mut sel).unwrap(), 1);
+    }
+
+    #[test]
+    fn exact_point_query() {
+        let m = grid_model();
+        let mut sel = HostSelector::default();
+        // k=1 at an exact grid point returns that point's value
+        let pred = m.predict_regression(&[1.0, 1.0], 1, &mut sel).unwrap();
+        assert!((pred - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn rejects_bad_input() {
+        assert!(KnnModel::new(vec![], vec![]).is_err());
+        assert!(KnnModel::new(vec![vec![1.0]], vec![1.0, 2.0]).is_err());
+        assert!(KnnModel::new(vec![vec![1.0], vec![1.0, 2.0]], vec![1.0, 2.0]).is_err());
+        let m = grid_model();
+        let mut sel = HostSelector::default();
+        assert!(m.predict_regression(&[0.0, 0.0], 0, &mut sel).is_err());
+        assert!(m.predict_regression(&[0.0, 0.0], 100000, &mut sel).is_err());
+    }
+}

@@ -1,0 +1,45 @@
+//! # cp-select
+//!
+//! Production-grade reproduction of **Beliakov (2011), "Parallel calculation
+//! of the median and order statistics on GPUs with application to robust
+//! regression"** as a three-layer Rust + JAX + Pallas stack:
+//!
+//! - **Layer 3 (this crate)** — the coordinator: selection algorithms
+//!   (Kelley's cutting plane, bisection, Brent, quickselect, radix-sort
+//!   baselines, the hybrid method), the selection service, simulated
+//!   multi-device sharding, robust regression (LMS/LTS) and kNN
+//!   applications, plus the benchmark harness regenerating every table and
+//!   figure of the paper.
+//! - **Runtime** — [`runtime`] loads AOT-compiled HLO artifacts (emitted once
+//!   by `python/compile/aot.py`) through the PJRT C API and executes them
+//!   with device-resident buffers. Python never runs on the request path.
+//! - **Layers 1–2** — Pallas kernels + JAX graphs live in `python/compile/`;
+//!   see DESIGN.md for the architecture and the hardware-adaptation notes.
+//!
+//! ## Quick start
+//!
+//! ```no_run
+//! use cp_select::select::{self, Method};
+//! use cp_select::stats::{Distribution, Rng};
+//!
+//! let mut rng = Rng::seeded(42);
+//! let data = Distribution::Normal.sample_vec(&mut rng, 1 << 20);
+//! let mut ev = select::HostEvaluator::new(&data);
+//! let res = select::median(&mut ev, Method::CuttingPlane).unwrap();
+//! println!("median = {} in {} probes", res.value, res.probes);
+//! ```
+
+pub mod config;
+pub mod coordinator;
+pub mod device;
+pub mod error;
+pub mod harness;
+pub mod knn;
+pub mod regression;
+pub mod runtime;
+pub mod select;
+pub mod stats;
+pub mod testkit;
+pub mod util;
+
+pub use error::{Error, Result};

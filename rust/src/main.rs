@@ -1,0 +1,421 @@
+//! `cp-select` — command-line front end for the coordinator.
+//!
+//! Subcommands (hand-rolled parser; clap is unavailable offline):
+//!
+//! ```text
+//! cp-select info                          runtime + artifact inventory
+//! cp-select select   [opts]               one median/OS query
+//! cp-select bench-table [opts]            regenerate Table I/II + Fig 2/3
+//! cp-select trace    [opts]               Fig 4 iteration trace
+//! cp-select outliers [opts]               Fig 5 sensitivity sweep
+//! cp-select hybrid-sweep [opts]           §IV iteration-budget ablation
+//! cp-select serve-demo [opts]             drive the selection service
+//! cp-select regress  [opts]               LMS/LTS robust-regression demo
+//! cp-select knn      [opts]               kNN demo
+//! ```
+//!
+//! Common options: `--config FILE`, `--backend host|device`,
+//! `--artifacts DIR`, `--dtype f32|f64`, `--n N`, `--method NAME`,
+//! `--dist NAME`, `--seed S`, `--out DIR`.
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use cp_select::config::Config;
+use cp_select::coordinator::{HostBackend, KSpec, SelectionService};
+use cp_select::harness::{self, report, Backend, Runner, TableConfig};
+use cp_select::regression::{self, HostSelector};
+use cp_select::runtime::{Flavor, Runtime};
+use cp_select::select::{DType, Method};
+use cp_select::stats::{Distribution, Rng};
+use cp_select::Result;
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match run(args) {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+struct Opts {
+    flags: HashMap<String, String>,
+}
+
+impl Opts {
+    fn parse(args: &[String]) -> Result<Opts> {
+        let mut flags = HashMap::new();
+        let mut it = args.iter();
+        while let Some(a) = it.next() {
+            let Some(key) = a.strip_prefix("--") else {
+                return Err(cp_select::invalid_arg!("unexpected argument {a:?}"));
+            };
+            let val = it
+                .next()
+                .ok_or_else(|| cp_select::invalid_arg!("--{key} needs a value"))?;
+            flags.insert(key.to_string(), val.clone());
+        }
+        Ok(Opts { flags })
+    }
+
+    fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    fn usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| cp_select::invalid_arg!("--{key}: bad integer {v:?}")),
+        }
+    }
+
+    fn u64(&self, key: &str, default: u64) -> Result<u64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| cp_select::invalid_arg!("--{key}: bad integer {v:?}")),
+        }
+    }
+
+    fn config(&self) -> Result<Config> {
+        let mut cfg = match self.get("config") {
+            Some(path) => Config::load(std::path::Path::new(path))?,
+            None => Config::default(),
+        };
+        if let Some(dir) = self.get("artifacts") {
+            cfg.artifacts_dir = PathBuf::from(dir);
+        } else if cfg.artifacts_dir == PathBuf::from("artifacts") {
+            cfg.artifacts_dir = Runtime::default_dir();
+        }
+        if let Some(d) = self.get("dtype") {
+            cfg.dtype = DType::from_name(d)
+                .ok_or_else(|| cp_select::invalid_arg!("--dtype: {d:?}"))?;
+        }
+        if let Some(m) = self.get("method") {
+            cfg.default_method = Method::from_name(m)
+                .ok_or_else(|| cp_select::invalid_arg!("--method: {m:?}"))?;
+        }
+        Ok(cfg)
+    }
+
+    fn runner(&self, cfg: &Config) -> Result<Runner> {
+        match self.get("backend").unwrap_or("host") {
+            "host" => Runner::new(Backend::Host),
+            "device" => Runner::new(Backend::Device {
+                artifacts_dir: cfg.artifacts_dir.clone(),
+                flavor: cfg.kernel_flavor,
+            }),
+            other => Err(cp_select::invalid_arg!("--backend: {other:?} (host|device)")),
+        }
+    }
+
+    fn dist(&self) -> Result<Distribution> {
+        let name = self.get("dist").unwrap_or("normal");
+        Distribution::from_name(name)
+            .ok_or_else(|| cp_select::invalid_arg!("--dist: unknown {name:?}"))
+    }
+
+    fn out_dir(&self) -> PathBuf {
+        PathBuf::from(self.get("out").unwrap_or("results"))
+    }
+}
+
+fn run(args: Vec<String>) -> Result<()> {
+    let Some((cmd, rest)) = args.split_first() else {
+        print_usage();
+        return Ok(());
+    };
+    let opts = Opts::parse(rest)?;
+    match cmd.as_str() {
+        "info" => cmd_info(&opts),
+        "select" => cmd_select(&opts),
+        "bench-table" => cmd_bench_table(&opts),
+        "trace" => cmd_trace(&opts),
+        "outliers" => cmd_outliers(&opts),
+        "hybrid-sweep" => cmd_hybrid_sweep(&opts),
+        "serve-demo" => cmd_serve_demo(&opts),
+        "regress" => cmd_regress(&opts),
+        "knn" => cmd_knn(&opts),
+        "help" | "--help" | "-h" => {
+            print_usage();
+            Ok(())
+        }
+        other => Err(cp_select::invalid_arg!("unknown subcommand {other:?}")),
+    }
+}
+
+fn print_usage() {
+    println!(
+        "cp-select — parallel median/order statistics via convex minimization\n\
+         (reproduction of Beliakov 2011; see README.md)\n\n\
+         subcommands: info select bench-table trace outliers hybrid-sweep\n\
+         \x20             serve-demo regress knn\n\
+         common flags: --config F --backend host|device --artifacts DIR\n\
+         \x20             --dtype f32|f64 --n N --method M --dist D --seed S --out DIR"
+    );
+}
+
+fn cmd_info(opts: &Opts) -> Result<()> {
+    let cfg = opts.config()?;
+    println!("cp-select {}", env!("CARGO_PKG_VERSION"));
+    println!("artifacts dir: {}", cfg.artifacts_dir.display());
+    match Runtime::with_flavor(&cfg.artifacts_dir, cfg.kernel_flavor) {
+        Ok(rt) => {
+            println!("pjrt platform: {}", rt.platform());
+            println!("artifacts: {} entries", rt.manifest.entries.len());
+            let max = rt
+                .manifest
+                .max_bucket(cp_select::runtime::Kernel::FusedObjective, Flavor::Jnp, cfg.dtype);
+            println!("largest fused_objective bucket ({}): {:?}", cfg.dtype.name(), max);
+        }
+        Err(e) => println!("runtime unavailable: {e}"),
+    }
+    println!("methods: {}", Method::ALL.map(|m| m.name()).join(" "));
+    println!("distributions: {}", Distribution::ALL.map(|d| d.name()).join(" "));
+    Ok(())
+}
+
+fn cmd_select(opts: &Opts) -> Result<()> {
+    let cfg = opts.config()?;
+    let n = opts.usize("n", 1 << 20)?;
+    let seed = opts.u64("seed", 42)?;
+    let k = opts.usize("k", cp_select::util::median_rank(n))?;
+    let mut rng = Rng::seeded(seed);
+    let data = opts.dist()?.sample_vec(&mut rng, n);
+    let mut runner = opts.runner(&cfg)?;
+    let mut ev = runner.evaluator(&data, cfg.dtype)?;
+    let t0 = std::time::Instant::now();
+    let r = cp_select::select::order_statistic(ev.as_mut(), k, cfg.default_method)?;
+    let ms = t0.elapsed().as_secs_f64() * 1e3;
+    println!(
+        "n={n} k={k} method={} dtype={} value={:.12} probes={} iters={} time={ms:.3}ms",
+        r.method.name(),
+        cfg.dtype.name(),
+        r.value,
+        r.probes,
+        r.iterations
+    );
+    for (phase, t) in r.phases.phases() {
+        println!("  phase {phase}: {t:.3}ms");
+    }
+    Ok(())
+}
+
+fn cmd_bench_table(opts: &Opts) -> Result<()> {
+    let cfg = opts.config()?;
+    let max_log2 = opts.usize("max-log2n", cfg.bench_max_log2n as usize)? as u32;
+    let min_log2 = opts.usize("min-log2n", 13)? as u32;
+    let table_cfg = TableConfig {
+        dtype: cfg.dtype,
+        log2_sizes: (min_log2..=max_log2).step_by(2).collect(),
+        instances: opts.usize("instances", cfg.bench_instances)?,
+        reps: opts.usize("reps", cfg.bench_reps)?,
+        seed: opts.u64("seed", 0xD15EA5E)?,
+        ..Default::default()
+    };
+    let mut runner = opts.runner(&cfg)?;
+    let table = harness::run_table(&mut runner, &table_cfg)?;
+    let md = report::table_markdown(&table);
+    println!("{md}");
+    let out = opts.out_dir();
+    let stem = format!(
+        "table_{}_{}",
+        cfg.dtype.name(),
+        if runner.is_device() { "device" } else { "host" }
+    );
+    report::write_result(&out, &format!("{stem}.md"), &md)?;
+    report::write_result(&out, &format!("{stem}.csv"), &report::table_csv(&table))?;
+    println!("wrote {out:?}/{stem}.{{md,csv}}");
+    Ok(())
+}
+
+fn cmd_trace(opts: &Opts) -> Result<()> {
+    let n = opts.usize("n", 4096)?;
+    let seed = opts.u64("seed", 42)?;
+    let trace = harness::trace_fig4(n, seed)?;
+    let csv = report::trace_csv(&trace);
+    print!("{csv}");
+    let p = report::write_result(&opts.out_dir(), "fig4_trace.csv", &csv)?;
+    println!("wrote {}", p.display());
+    Ok(())
+}
+
+fn cmd_outliers(opts: &Opts) -> Result<()> {
+    let cfg = opts.config()?;
+    let n = opts.usize("n", 1 << 16)?;
+    let seed = opts.u64("seed", 42)?;
+    let mut runner = opts.runner(&cfg)?;
+    let mags = [1e3, 1e5, 1e7, 1e9, 1e11, 1e13];
+    let pts = harness::outlier_sweep_fig5(&mut runner, n, &mags, cfg.dtype, seed)?;
+    let csv = report::outlier_csv(&pts);
+    print!("{csv}");
+    let p = report::write_result(&opts.out_dir(), "fig5_outliers.csv", &csv)?;
+    println!("wrote {}", p.display());
+    Ok(())
+}
+
+fn cmd_hybrid_sweep(opts: &Opts) -> Result<()> {
+    let cfg = opts.config()?;
+    let n = opts.usize("n", 1 << 20)?;
+    let seed = opts.u64("seed", 42)?;
+    let mut runner = opts.runner(&cfg)?;
+    let budgets = [0, 2, 4, 5, 7, 9, 11, 14];
+    let pts = harness::hybrid_sweep(&mut runner, n, &budgets, cfg.dtype, seed)?;
+    let csv = report::hybrid_sweep_csv(&pts);
+    print!("{csv}");
+    let p = report::write_result(&opts.out_dir(), "hybrid_sweep.csv", &csv)?;
+    println!("wrote {}", p.display());
+    Ok(())
+}
+
+fn cmd_serve_demo(opts: &Opts) -> Result<()> {
+    let cfg = opts.config()?;
+    let n = opts.usize("n", 1 << 16)?;
+    let queries = opts.usize("queries", 64)?;
+    let seed = opts.u64("seed", 42)?;
+    // The service demo uses the host backend by default; `--backend device`
+    // builds per-worker PJRT runtimes.
+    let factory = match opts.get("backend").unwrap_or("host") {
+        "device" => cp_select::coordinator::DeviceBackend::factory(
+            cfg.artifacts_dir.clone(),
+            cfg.kernel_flavor,
+        ),
+        _ => HostBackend::factory(),
+    };
+    let svc = SelectionService::start(cfg.workers, cfg.queue_depth, cfg.default_method, factory)?;
+    let mut rng = Rng::seeded(seed);
+    let mut ids = Vec::new();
+    for d in [Distribution::Normal, Distribution::HalfNormal, Distribution::Mixture1] {
+        let data = d.sample_vec(&mut rng, n);
+        ids.push(svc.upload(data, cfg.dtype)?);
+    }
+    let t0 = std::time::Instant::now();
+    let mut rxs = Vec::new();
+    for q in 0..queries {
+        let id = ids[q % ids.len()];
+        let spec = match q % 3 {
+            0 => KSpec::Median,
+            1 => KSpec::Quantile(0.25),
+            _ => KSpec::Quantile(0.9),
+        };
+        rxs.push(svc.query_async(id, spec, cfg.default_method)?);
+    }
+    let mut ok = 0;
+    for rx in rxs {
+        if rx
+            .recv()
+            .map_err(|_| cp_select::Error::Service("reply dropped".into()))?
+            .is_ok()
+        {
+            ok += 1;
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    println!(
+        "served {ok}/{queries} queries over {} datasets (n={n}) in {:.3}s ({:.1} qps)",
+        ids.len(),
+        wall,
+        queries as f64 / wall
+    );
+    println!("metrics: {}", svc.metrics.snapshot());
+    svc.shutdown();
+    Ok(())
+}
+
+fn cmd_regress(opts: &Opts) -> Result<()> {
+    let n = opts.usize("n", 2000)?;
+    let p = opts.usize("p", 4)?;
+    let seed = opts.u64("seed", 42)?;
+    let contamination = opts
+        .get("contamination")
+        .map(|v| v.parse::<f64>().unwrap_or(0.3))
+        .unwrap_or(0.3);
+    let mut rng = Rng::seeded(seed);
+    let data = regression::ContaminatedLinear { n, p, contamination, ..Default::default() }
+        .generate(&mut rng);
+    let x = data.design();
+    let mut sel = HostSelector::default();
+
+    let t0 = std::time::Instant::now();
+    let theta_ols = regression::ols(&x, &data.y)?;
+    let t_ols = t0.elapsed();
+    let t0 = std::time::Instant::now();
+    let fit_lms = regression::lms(&x, &data.y, &regression::LmsOptions::default(), &mut sel)?;
+    let t_lms = t0.elapsed();
+    let t0 = std::time::Instant::now();
+    let fit_lts = regression::lts(&x, &data.y, &regression::LtsOptions::default(), &mut sel)?;
+    let t_lts = t0.elapsed();
+
+    let err = |th: &[f64]| {
+        th.iter()
+            .zip(&data.theta)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f64, f64::max)
+    };
+    println!("n={n} p={p} contamination={contamination}");
+    println!("true theta: {:?}", data.theta);
+    println!(
+        "OLS   err={:.4} time={:?}  (breaks: expected with outliers)",
+        err(&theta_ols),
+        t_ols
+    );
+    println!(
+        "LMS   err={:.4} med|r|={:.4} candidates={} time={:?}",
+        err(&fit_lms.theta),
+        fit_lms.med_abs_residual,
+        fit_lms.candidates,
+        t_lms
+    );
+    println!(
+        "LTS   err={:.4} objective={:.4} h={} time={:?}",
+        err(&fit_lts.theta),
+        fit_lts.objective,
+        fit_lts.h,
+        t_lts
+    );
+    Ok(())
+}
+
+fn cmd_knn(opts: &Opts) -> Result<()> {
+    let n = opts.usize("n", 5000)?;
+    let k = opts.usize("k", 15)?;
+    let seed = opts.u64("seed", 42)?;
+    let mut rng = Rng::seeded(seed);
+    // f(x) = sin(2x0) + x1 on [0,2]²
+    let mut x = Vec::with_capacity(n);
+    let mut f = Vec::with_capacity(n);
+    for _ in 0..n {
+        let a = rng.range(0.0, 2.0);
+        let b = rng.range(0.0, 2.0);
+        x.push(vec![a, b]);
+        f.push((2.0 * a).sin() + b);
+    }
+    let model = cp_select::knn::KnnModel::new(x, f)?;
+    let mut sel = HostSelector::default();
+    let mut worst: f64 = 0.0;
+    let mut sum = 0.0;
+    let queries = 50;
+    let t0 = std::time::Instant::now();
+    for _ in 0..queries {
+        let q = [rng.range(0.2, 1.8), rng.range(0.2, 1.8)];
+        let pred = model.predict_regression(&q, k, &mut sel)?;
+        let truth = (2.0 * q[0]).sin() + q[1];
+        let e = (pred - truth).abs();
+        worst = worst.max(e);
+        sum += e;
+    }
+    println!(
+        "kNN regression: n={n} k={k} queries={queries} mean|err|={:.4} max|err|={:.4} time={:?}",
+        sum / queries as f64,
+        worst,
+        t0.elapsed()
+    );
+    Ok(())
+}

@@ -1,0 +1,138 @@
+//! Synthetic contaminated regression data (paper §VI setting).
+//!
+//! Linear model y = Xθ + ε with standard-normal design and noise, plus a
+//! configurable fraction of contamination: vertical outliers (wild y) and
+//! bad leverage points (wild x *and* y), the classic breakdown stressors
+//! from Rousseeuw & Leroy.
+
+use crate::stats::Rng;
+use crate::util::linalg::Mat;
+
+/// A generated regression problem with ground truth.
+#[derive(Debug, Clone)]
+pub struct RegressionData {
+    /// Design matrix rows (n × p, last column = 1 for the intercept).
+    pub x: Vec<Vec<f64>>,
+    pub y: Vec<f64>,
+    /// True coefficient vector (length p).
+    pub theta: Vec<f64>,
+    /// Indices of contaminated observations.
+    pub outliers: Vec<usize>,
+}
+
+impl RegressionData {
+    pub fn n(&self) -> usize {
+        self.y.len()
+    }
+
+    pub fn p(&self) -> usize {
+        self.theta.len()
+    }
+
+    pub fn design(&self) -> Mat {
+        Mat::from_rows(&self.x).expect("non-empty design")
+    }
+
+    /// Row-major flattened design (device upload format).
+    pub fn x_flat(&self) -> Vec<f64> {
+        self.x.iter().flatten().copied().collect()
+    }
+}
+
+/// Generator for contaminated linear data.
+#[derive(Debug, Clone)]
+pub struct ContaminatedLinear {
+    pub n: usize,
+    /// Number of coefficients including the intercept.
+    pub p: usize,
+    /// Fraction of contaminated points (0.0–0.5 sensible).
+    pub contamination: f64,
+    /// Noise standard deviation.
+    pub sigma: f64,
+    /// Magnitude of vertical outliers.
+    pub outlier_shift: f64,
+    /// Fraction of the contamination that also gets leverage (wild x).
+    pub leverage_fraction: f64,
+}
+
+impl Default for ContaminatedLinear {
+    fn default() -> Self {
+        ContaminatedLinear {
+            n: 1000,
+            p: 4,
+            contamination: 0.3,
+            sigma: 1.0,
+            outlier_shift: 100.0,
+            leverage_fraction: 0.5,
+        }
+    }
+}
+
+impl ContaminatedLinear {
+    pub fn generate(&self, rng: &mut Rng) -> RegressionData {
+        assert!(self.p >= 1 && self.n > self.p);
+        // true theta in [-3, 3]
+        let theta: Vec<f64> = (0..self.p).map(|_| rng.range(-3.0, 3.0)).collect();
+        let mut x = Vec::with_capacity(self.n);
+        let mut y = Vec::with_capacity(self.n);
+        for _ in 0..self.n {
+            let mut row: Vec<f64> = (0..self.p - 1).map(|_| rng.normal()).collect();
+            row.push(1.0); // intercept
+            let clean: f64 = row.iter().zip(&theta).map(|(a, b)| a * b).sum();
+            y.push(clean + self.sigma * rng.normal());
+            x.push(row);
+        }
+        // contaminate
+        let n_bad = (self.contamination * self.n as f64).round() as usize;
+        let outliers = rng.sample_indices(self.n, n_bad);
+        for &i in &outliers {
+            y[i] = self.outlier_shift + 5.0 * rng.normal();
+            if rng.f64() < self.leverage_fraction {
+                for v in x[i].iter_mut().take(self.p - 1) {
+                    *v = 10.0 + rng.normal(); // bad leverage
+                }
+            }
+        }
+        RegressionData { x, y, theta, outliers }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_and_intercept() {
+        let mut rng = Rng::seeded(121);
+        let d = ContaminatedLinear { n: 200, p: 3, ..Default::default() }.generate(&mut rng);
+        assert_eq!(d.n(), 200);
+        assert_eq!(d.p(), 3);
+        assert!(d.x.iter().all(|r| r.len() == 3 && r[2] == 1.0));
+        assert_eq!(d.x_flat().len(), 600);
+    }
+
+    #[test]
+    fn contamination_count() {
+        let mut rng = Rng::seeded(122);
+        let d = ContaminatedLinear { n: 1000, contamination: 0.25, ..Default::default() }
+            .generate(&mut rng);
+        assert_eq!(d.outliers.len(), 250);
+        // outliers really are far from the clean model
+        for &i in &d.outliers {
+            let clean: f64 = d.x[i].iter().zip(&d.theta).map(|(a, b)| a * b).sum();
+            assert!((d.y[i] - clean).abs() > 10.0, "row {i} not contaminated");
+        }
+    }
+
+    #[test]
+    fn zero_contamination_is_clean() {
+        let mut rng = Rng::seeded(123);
+        let d = ContaminatedLinear { n: 100, contamination: 0.0, sigma: 0.0, ..Default::default() }
+            .generate(&mut rng);
+        assert!(d.outliers.is_empty());
+        for i in 0..d.n() {
+            let clean: f64 = d.x[i].iter().zip(&d.theta).map(|(a, b)| a * b).sum();
+            assert!((d.y[i] - clean).abs() < 1e-12);
+        }
+    }
+}

@@ -1,0 +1,274 @@
+//! Least Trimmed Squares with the paper's median-threshold ρ-trick (Eq. 4).
+//!
+//! LTS minimizes the sum of the h smallest squared residuals. The paper's
+//! §VI observation: that sum needs **no partial sort** — with
+//! `med = Med(|r|)` (here generalized to the h-th order statistic) and the
+//! counts `b_L = #{|r_i| < t}`, `b = #{|r_i| = t}`, the trimmed sum is
+//!
+//! ```text
+//!   Σ_{|r_i| < t} r_i²  +  a·t²,   a = h − b_L  (0 ≤ a ≤ b)
+//! ```
+//!
+//! — one threshold reduction after one selection. [`trimmed_sum_via_median`]
+//! implements exactly that; the C-step refinement (Rousseeuw & Van Driessen
+//! FAST-LTS) uses it as the objective.
+
+use super::estimators::{ols, residuals};
+use super::MedianSelector;
+use crate::stats::Rng;
+use crate::util::linalg::Mat;
+use crate::{invalid_arg, Result};
+
+#[derive(Debug, Clone)]
+pub struct LtsOptions {
+    /// Random starts (elemental OLS seeds).
+    pub starts: usize,
+    /// C-steps per start.
+    pub c_steps: usize,
+    pub seed: u64,
+    /// Trim count; default = the paper's h (see `util::lts_h`).
+    pub h: Option<usize>,
+}
+
+impl Default for LtsOptions {
+    fn default() -> Self {
+        LtsOptions { starts: 20, c_steps: 12, seed: 0xBEEF, h: None }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct LtsFit {
+    pub theta: Vec<f64>,
+    /// Sum of the h smallest squared residuals.
+    pub objective: f64,
+    pub h: usize,
+    pub c_steps_taken: usize,
+}
+
+/// The paper's Eq. (4): trimmed sum of squares from a selection + a
+/// threshold pass — no sorting.
+pub fn trimmed_sum_via_median(
+    abs_r: &[f64],
+    h: usize,
+    selector: &mut dyn MedianSelector,
+) -> Result<f64> {
+    let n = abs_r.len();
+    if h == 0 || h > n {
+        return Err(invalid_arg!("h={h} out of range for n={n}"));
+    }
+    let t = selector.order_statistic(abs_r, h)?;
+    // threshold pass (device kernel `threshold_stats` mirrors this)
+    let mut ssq_below = 0.0;
+    let mut b_l = 0usize;
+    for &v in abs_r {
+        if v < t {
+            ssq_below += v * v;
+            b_l += 1;
+        }
+    }
+    let a = h - b_l; // duplicates of the threshold to include
+    Ok(ssq_below + a as f64 * t * t)
+}
+
+/// Fit LTS via multi-start C-steps.
+pub fn lts(
+    x: &Mat,
+    y: &[f64],
+    opts: &LtsOptions,
+    selector: &mut dyn MedianSelector,
+) -> Result<LtsFit> {
+    let n = x.rows;
+    let p = x.cols;
+    if y.len() != n || n <= p {
+        return Err(invalid_arg!("bad shapes: n={n}, p={p}, y={}", y.len()));
+    }
+    let h = opts.h.unwrap_or_else(|| crate::util::lts_h(n)).clamp(p + 1, n);
+    let mut rng = Rng::seeded(opts.seed);
+    let mut best: Option<LtsFit> = None;
+
+    for _ in 0..opts.starts {
+        // seed: OLS on a random (p+1)-subset
+        let idx = rng.sample_indices(n, p + 1);
+        let rows: Vec<Vec<f64>> = idx
+            .iter()
+            .map(|&i| (0..p).map(|j| x.at(i, j)).collect())
+            .collect();
+        let rhs: Vec<f64> = idx.iter().map(|&i| y[i]).collect();
+        let sub = Mat::from_rows(&rows)?;
+        let Some(mut theta) = crate::util::linalg::qr_solve(&sub, &rhs) else {
+            continue;
+        };
+
+        let mut prev_obj = f64::INFINITY;
+        let mut steps = 0;
+        for _ in 0..opts.c_steps {
+            // C-step: keep the h smallest |r|, refit OLS on them.
+            let abs_r: Vec<f64> = residuals(x, &theta, y).iter().map(|v| v.abs()).collect();
+            let t = selector.order_statistic(&abs_r, h)?;
+            let mut rows = Vec::with_capacity(h);
+            let mut rhs = Vec::with_capacity(h);
+            // include |r| < t fully, then pad with == t up to h
+            let mut taken = 0;
+            for (i, &v) in abs_r.iter().enumerate() {
+                if v < t && taken < h {
+                    rows.push((0..p).map(|j| x.at(i, j)).collect::<Vec<f64>>());
+                    rhs.push(y[i]);
+                    taken += 1;
+                }
+            }
+            for (i, &v) in abs_r.iter().enumerate() {
+                if v == t && taken < h {
+                    rows.push((0..p).map(|j| x.at(i, j)).collect::<Vec<f64>>());
+                    rhs.push(y[i]);
+                    taken += 1;
+                }
+            }
+            let sub = Mat::from_rows(&rows)?;
+            let Some(next) = ols(&sub, &rhs).ok() else { break };
+            theta = next;
+            steps += 1;
+
+            let abs_r: Vec<f64> = residuals(x, &theta, y).iter().map(|v| v.abs()).collect();
+            let obj = trimmed_sum_via_median(&abs_r, h, selector)?;
+            if obj >= prev_obj - 1e-12 {
+                break;
+            }
+            prev_obj = obj;
+        }
+
+        let abs_r: Vec<f64> = residuals(x, &theta, y).iter().map(|v| v.abs()).collect();
+        let objective = trimmed_sum_via_median(&abs_r, h, selector)?;
+        if best.as_ref().map_or(true, |b| objective < b.objective) {
+            best = Some(LtsFit { theta, objective, h, c_steps_taken: steps });
+        }
+    }
+
+    best.ok_or_else(|| crate::algo_err!("all LTS starts degenerate"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::regression::data::ContaminatedLinear;
+    use crate::regression::estimators::ols;
+    use crate::regression::HostSelector;
+    use crate::stats::Rng;
+
+    fn max_err(a: &[f64], b: &[f64]) -> f64 {
+        a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f64::max)
+    }
+
+    #[test]
+    fn trimmed_sum_matches_partial_sort_definition() {
+        let mut rng = Rng::seeded(151);
+        let mut sel = HostSelector::default();
+        for n in [5usize, 10, 101, 1000] {
+            let r: Vec<f64> = (0..n).map(|_| rng.normal().abs()).collect();
+            for h in [1, n / 2, crate::util::lts_h(n), n] {
+                let got = trimmed_sum_via_median(&r, h, &mut sel).unwrap();
+                let mut sorted = r.clone();
+                sorted.sort_by(|a, b| a.total_cmp(b));
+                let want: f64 = sorted[..h].iter().map(|v| v * v).sum();
+                assert!(
+                    (got - want).abs() <= 1e-9 * want.max(1.0),
+                    "n={n} h={h}: {got} vs {want}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn trimmed_sum_with_duplicate_threshold() {
+        let r = vec![1.0, 2.0, 2.0, 2.0, 3.0, 9.0];
+        let mut sel = HostSelector::default();
+        // h = 4: 1 + 2+2+2 squared = 1 + 12 = 13
+        let got = trimmed_sum_via_median(&r, 4, &mut sel).unwrap();
+        assert!((got - 13.0).abs() < 1e-12);
+        // h = 2: 1 + 4
+        let got = trimmed_sum_via_median(&r, 2, &mut sel).unwrap();
+        assert!((got - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn survives_30_percent_contamination() {
+        let mut rng = Rng::seeded(152);
+        let d = ContaminatedLinear {
+            n: 400,
+            p: 3,
+            contamination: 0.3,
+            sigma: 0.1,
+            ..Default::default()
+        }
+        .generate(&mut rng);
+        let mut sel = HostSelector::default();
+        let fit = lts(&d.design(), &d.y, &LtsOptions::default(), &mut sel).unwrap();
+        assert!(
+            max_err(&fit.theta, &d.theta) < 0.5,
+            "LTS failed: {:?} vs {:?}",
+            fit.theta,
+            d.theta
+        );
+        let theta_ols = ols(&d.design(), &d.y).unwrap();
+        assert!(max_err(&theta_ols, &d.theta) > max_err(&fit.theta, &d.theta));
+    }
+
+    #[test]
+    fn lts_beats_lms_statistical_efficiency() {
+        // LTS is known to be more efficient than LMS on clean-ish data;
+        // sanity check on moderate contamination with shared selector.
+        let mut rng = Rng::seeded(153);
+        let d = ContaminatedLinear {
+            n: 500,
+            p: 3,
+            contamination: 0.2,
+            sigma: 0.2,
+            ..Default::default()
+        }
+        .generate(&mut rng);
+        let mut sel = HostSelector::default();
+        let lts_fit = lts(&d.design(), &d.y, &LtsOptions::default(), &mut sel).unwrap();
+        let lms_fit = crate::regression::lms(
+            &d.design(),
+            &d.y,
+            &crate::regression::LmsOptions { subsets: 300, ..Default::default() },
+            &mut sel,
+        )
+        .unwrap();
+        let e_lts = max_err(&lts_fit.theta, &d.theta);
+        let e_lms = max_err(&lms_fit.theta, &d.theta);
+        assert!(e_lts < 0.5 && e_lms < 0.5, "lts {e_lts} lms {e_lms}");
+    }
+
+    #[test]
+    fn objective_decreases_monotonically_under_c_steps() {
+        // C-step theory: each step cannot increase the trimmed objective
+        let mut rng = Rng::seeded(154);
+        let d = ContaminatedLinear { n: 200, p: 3, contamination: 0.2, ..Default::default() }
+            .generate(&mut rng);
+        let mut sel = HostSelector::default();
+        let fit1 = lts(
+            &d.design(),
+            &d.y,
+            &LtsOptions { starts: 5, c_steps: 1, seed: 7, ..Default::default() },
+            &mut sel,
+        )
+        .unwrap();
+        let fit8 = lts(
+            &d.design(),
+            &d.y,
+            &LtsOptions { starts: 5, c_steps: 8, seed: 7, ..Default::default() },
+            &mut sel,
+        )
+        .unwrap();
+        assert!(fit8.objective <= fit1.objective + 1e-9);
+    }
+
+    #[test]
+    fn h_defaults_to_paper_convention() {
+        let mut rng = Rng::seeded(155);
+        let d = ContaminatedLinear { n: 101, p: 2, ..Default::default() }.generate(&mut rng);
+        let mut sel = HostSelector::default();
+        let fit = lts(&d.design(), &d.y, &LtsOptions::default(), &mut sel).unwrap();
+        assert_eq!(fit.h, 51); // (101+1)/2
+    }
+}

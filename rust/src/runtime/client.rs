@@ -1,0 +1,217 @@
+//! PJRT runtime: load HLO-text artifacts, compile once, execute many.
+//!
+//! Mirrors `/opt/xla-example/load_hlo/`: `HloModuleProto::from_text_file`
+//! (text is the 0.5.1-safe interchange) → `XlaComputation::from_proto` →
+//! `client.compile` → `execute_b` with device-resident buffers.
+//!
+//! PJRT handles wrap raw pointers and are **not Send**: the coordinator
+//! gives each simulated device its own OS thread owning a `Runtime`
+//! (see `coordinator::service`), which is also how a real accelerator
+//! stream executor is driven.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+use crate::runtime::manifest::{ArtifactEntry, Flavor, Kernel, Manifest};
+use crate::select::DType;
+use crate::{Error, Result};
+
+/// A compiled artifact with its I/O spec.
+pub struct Executable {
+    pub entry: ArtifactEntry,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Executable {
+    /// Execute with device buffers; returns the untupled output literals.
+    pub fn run(&self, args: &[&xla::PjRtBuffer]) -> Result<Vec<xla::Literal>> {
+        if args.len() != self.entry.inputs.len() {
+            return Err(Error::Xla(format!(
+                "{}: expected {} inputs, got {}",
+                self.entry.kernel.name(),
+                self.entry.inputs.len(),
+                args.len()
+            )));
+        }
+        let out = self.exe.execute_b(args)?;
+        let first = out
+            .into_iter()
+            .next()
+            .and_then(|r| r.into_iter().next())
+            .ok_or_else(|| Error::Xla("executable returned no outputs".into()))?;
+        // aot.py lowers with return_tuple=True: one tuple-shaped buffer.
+        let lit = first.to_literal_sync()?;
+        Ok(lit.to_tuple()?)
+    }
+}
+
+/// Owns the PJRT client, the manifest, and a lazy executable cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    cache: RefCell<HashMap<(Kernel, Flavor, DType, usize, Option<usize>), Rc<Executable>>>,
+    /// Default flavor for hot kernels (config `kernel_flavor`).
+    pub flavor: Flavor,
+    /// Compile counter (observability / tests).
+    compiles: RefCell<u64>,
+}
+
+impl Runtime {
+    /// Load the manifest and start a CPU PJRT client.
+    pub fn new(artifacts_dir: &Path) -> Result<Rc<Runtime>> {
+        Self::with_flavor(artifacts_dir, Flavor::Jnp)
+    }
+
+    pub fn with_flavor(artifacts_dir: &Path, flavor: Flavor) -> Result<Rc<Runtime>> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Rc::new(Runtime {
+            client,
+            manifest,
+            cache: RefCell::new(HashMap::new()),
+            flavor,
+            compiles: RefCell::new(0),
+        }))
+    }
+
+    /// Default artifacts directory: `$CP_SELECT_ARTIFACTS` or `./artifacts`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var_os("CP_SELECT_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| PathBuf::from("artifacts"))
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn compiles(&self) -> u64 {
+        *self.compiles.borrow()
+    }
+
+    /// Fetch (compiling lazily) the executable for an artifact key.
+    pub fn executable(
+        &self,
+        kernel: Kernel,
+        flavor: Flavor,
+        dtype: DType,
+        n: usize,
+        p: Option<usize>,
+    ) -> Result<Rc<Executable>> {
+        let key = (kernel, flavor, dtype, n, p);
+        if let Some(e) = self.cache.borrow().get(&key) {
+            return Ok(e.clone());
+        }
+        let entry = self.manifest.entry(kernel, flavor, dtype, n, p)?.clone();
+        let path = entry.path.to_string_lossy().to_string();
+        let proto = xla::HloModuleProto::from_text_file(&path)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        *self.compiles.borrow_mut() += 1;
+        let e = Rc::new(Executable { entry, exe });
+        self.cache.borrow_mut().insert(key, e.clone());
+        Ok(e)
+    }
+
+    /// Upload an f64 slice as a device buffer in the given dtype, padded to
+    /// `bucket` elements (pad value is masked out by `n_valid` kernels).
+    pub fn upload_vector(
+        &self,
+        data: &[f64],
+        dtype: DType,
+        bucket: usize,
+    ) -> Result<xla::PjRtBuffer> {
+        debug_assert!(bucket >= data.len());
+        match dtype {
+            DType::F64 => {
+                let mut padded = Vec::with_capacity(bucket);
+                padded.extend_from_slice(data);
+                padded.resize(bucket, 0.0);
+                Ok(self.client.buffer_from_host_buffer(&padded, &[bucket], None)?)
+            }
+            DType::F32 => {
+                let mut padded: Vec<f32> = Vec::with_capacity(bucket);
+                padded.extend(data.iter().map(|&v| v as f32));
+                padded.resize(bucket, 0.0);
+                Ok(self.client.buffer_from_host_buffer(&padded, &[bucket], None)?)
+            }
+        }
+    }
+
+    /// Upload a raw f32 slice (no conversion).
+    pub fn upload_f32(&self, data: &[f32], bucket: usize) -> Result<xla::PjRtBuffer> {
+        let mut padded: Vec<f32> = Vec::with_capacity(bucket);
+        padded.extend_from_slice(data);
+        padded.resize(bucket, 0.0);
+        Ok(self.client.buffer_from_host_buffer(&padded, &[bucket], None)?)
+    }
+
+    /// Upload a scalar as a shape-(1,) buffer in the value dtype.
+    pub fn upload_scalar(&self, v: f64, dtype: DType) -> Result<xla::PjRtBuffer> {
+        match dtype {
+            DType::F64 => Ok(self.client.buffer_from_host_buffer(&[v], &[1], None)?),
+            DType::F32 => {
+                Ok(self.client.buffer_from_host_buffer(&[v as f32], &[1], None)?)
+            }
+        }
+    }
+
+    /// Upload an i32 scalar (n_valid).
+    pub fn upload_i32(&self, v: i32) -> Result<xla::PjRtBuffer> {
+        Ok(self.client.buffer_from_host_buffer(&[v], &[1], None)?)
+    }
+
+    /// Upload an f64 matrix (row-major `n × p`) in the value dtype, padding
+    /// rows with zeros up to `bucket`.
+    pub fn upload_matrix(
+        &self,
+        data: &[f64],
+        n: usize,
+        p: usize,
+        dtype: DType,
+        bucket: usize,
+    ) -> Result<xla::PjRtBuffer> {
+        debug_assert_eq!(data.len(), n * p);
+        match dtype {
+            DType::F64 => {
+                let mut padded = Vec::with_capacity(bucket * p);
+                padded.extend_from_slice(data);
+                padded.resize(bucket * p, 0.0);
+                Ok(self
+                    .client
+                    .buffer_from_host_buffer(&padded, &[bucket, p], None)?)
+            }
+            DType::F32 => {
+                let mut padded: Vec<f32> = Vec::with_capacity(bucket * p);
+                padded.extend(data.iter().map(|&v| v as f32));
+                padded.resize(bucket * p, 0.0);
+                Ok(self
+                    .client
+                    .buffer_from_host_buffer(&padded, &[bucket, p], None)?)
+            }
+        }
+    }
+}
+
+/// Read a scalar f64 out of an output literal (any float dtype).
+pub fn literal_scalar_f64(lit: &xla::Literal, dtype: DType) -> Result<f64> {
+    match dtype {
+        DType::F64 => Ok(lit.to_vec::<f64>()?[0]),
+        DType::F32 => Ok(lit.to_vec::<f32>()?[0] as f64),
+    }
+}
+
+/// Read a scalar i32 (counts).
+pub fn literal_scalar_i32(lit: &xla::Literal) -> Result<i64> {
+    Ok(lit.to_vec::<i32>()?[0] as i64)
+}
+
+/// Download a float vector literal as f64.
+pub fn literal_vec_f64(lit: &xla::Literal, dtype: DType) -> Result<Vec<f64>> {
+    match dtype {
+        DType::F64 => Ok(lit.to_vec::<f64>()?),
+        DType::F32 => Ok(lit.to_vec::<f32>()?.into_iter().map(|v| v as f64).collect()),
+    }
+}

@@ -1,0 +1,350 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` (which
+//! writes it) and the rust runtime (which loads artifacts by key).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::select::DType;
+use crate::util::json::Json;
+use crate::{Error, Result};
+
+/// The kernels the AOT pipeline emits (DESIGN.md S1/S3).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Kernel {
+    FusedObjective,
+    MinMaxSum,
+    Neighbors,
+    IntervalCount,
+    ThresholdStats,
+    KnnWeightedSum,
+    Residuals,
+    LmsProbe,
+    Dists,
+}
+
+impl Kernel {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Kernel::FusedObjective => "fused_objective",
+            Kernel::MinMaxSum => "minmaxsum",
+            Kernel::Neighbors => "neighbors",
+            Kernel::IntervalCount => "interval_count",
+            Kernel::ThresholdStats => "threshold_stats",
+            Kernel::KnnWeightedSum => "knn_weighted_sum",
+            Kernel::Residuals => "residuals",
+            Kernel::LmsProbe => "lms_probe",
+            Kernel::Dists => "dists",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<Kernel> {
+        use Kernel::*;
+        Some(match s {
+            "fused_objective" => FusedObjective,
+            "minmaxsum" => MinMaxSum,
+            "neighbors" => Neighbors,
+            "interval_count" => IntervalCount,
+            "threshold_stats" => ThresholdStats,
+            "knn_weighted_sum" => KnnWeightedSum,
+            "residuals" => Residuals,
+            "lms_probe" => LmsProbe,
+            "dists" => Dists,
+            _ => return None,
+        })
+    }
+}
+
+/// Artifact flavor: authored Pallas kernel (interpret-lowered) or the
+/// XLA-fused jnp reference (runtime default on the CPU substrate).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Flavor {
+    Pallas,
+    Jnp,
+}
+
+impl Flavor {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Flavor::Pallas => "pallas",
+            Flavor::Jnp => "jnp",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<Flavor> {
+        match s {
+            "pallas" => Some(Flavor::Pallas),
+            "jnp" => Some(Flavor::Jnp),
+            _ => None,
+        }
+    }
+}
+
+/// Tensor spec (dtype + shape) of an artifact input/output.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TensorSpec {
+    pub dtype: String,
+    pub shape: Vec<usize>,
+}
+
+/// One compiled-graph artifact.
+#[derive(Debug, Clone)]
+pub struct ArtifactEntry {
+    pub kernel: Kernel,
+    pub flavor: Flavor,
+    pub dtype: DType,
+    pub n: usize,
+    pub p: Option<usize>,
+    pub path: PathBuf,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// Lookup key: (kernel, flavor, dtype, n, p).
+pub type Key = (Kernel, Flavor, &'static str, usize, Option<usize>);
+
+/// Parsed manifest with bucket lookup.
+#[derive(Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub entries: Vec<ArtifactEntry>,
+    /// (kernel, flavor, dtype) -> sorted available vector buckets.
+    buckets: BTreeMap<(Kernel, Flavor, String), Vec<usize>>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| Error::io(path.display().to_string(), e))?;
+        Self::parse(dir, &text)
+    }
+
+    pub fn parse(dir: &Path, text: &str) -> Result<Manifest> {
+        let j = Json::parse(text)?;
+        let version = j.get("version")?.as_usize()?;
+        if version != 2 {
+            return Err(Error::Artifact(format!(
+                "manifest version {version} unsupported (expected 2); \
+                 re-run `make artifacts`"
+            )));
+        }
+        let mut entries = Vec::new();
+        for e in j.get("entries")?.as_arr()? {
+            let kernel_name = e.get("kernel")?.as_str()?;
+            let kernel = Kernel::from_name(kernel_name).ok_or_else(|| {
+                Error::Artifact(format!("unknown kernel {kernel_name:?} in manifest"))
+            })?;
+            let flavor_name = e.get("flavor")?.as_str()?;
+            let flavor = Flavor::from_name(flavor_name).ok_or_else(|| {
+                Error::Artifact(format!("unknown flavor {flavor_name:?}"))
+            })?;
+            let dtype_name = e.get("dtype")?.as_str()?;
+            let dtype = DType::from_name(dtype_name).ok_or_else(|| {
+                Error::Artifact(format!("unknown dtype {dtype_name:?}"))
+            })?;
+            let parse_specs = |field: &str| -> Result<Vec<TensorSpec>> {
+                let mut out = Vec::new();
+                for s in e.get(field)?.as_arr()? {
+                    let shape = s
+                        .get("shape")?
+                        .as_arr()?
+                        .iter()
+                        .map(|d| d.as_usize())
+                        .collect::<Result<Vec<_>>>()?;
+                    out.push(TensorSpec {
+                        dtype: s.get("dtype")?.as_str()?.to_string(),
+                        shape,
+                    });
+                }
+                Ok(out)
+            };
+            entries.push(ArtifactEntry {
+                kernel,
+                flavor,
+                dtype,
+                n: e.get("n")?.as_usize()?,
+                p: match e.get_opt("p") {
+                    Some(v) => Some(v.as_usize()?),
+                    None => None,
+                },
+                path: dir.join(e.get("path")?.as_str()?),
+                inputs: parse_specs("inputs")?,
+                outputs: parse_specs("outputs")?,
+            });
+        }
+        let mut buckets: BTreeMap<(Kernel, Flavor, String), Vec<usize>> = BTreeMap::new();
+        for e in &entries {
+            buckets
+                .entry((e.kernel, e.flavor, e.dtype.name().to_string()))
+                .or_default()
+                .push(e.n);
+        }
+        for v in buckets.values_mut() {
+            v.sort_unstable();
+            v.dedup();
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), entries, buckets })
+    }
+
+    /// Smallest available bucket >= n for this kernel/flavor/dtype.
+    pub fn bucket_for(
+        &self,
+        kernel: Kernel,
+        flavor: Flavor,
+        dtype: DType,
+        n: usize,
+    ) -> Result<usize> {
+        let key = (kernel, flavor, dtype.name().to_string());
+        let bs = self.buckets.get(&key).ok_or_else(|| {
+            Error::Artifact(format!(
+                "no artifacts for {}/{}/{} — re-run `make artifacts`",
+                kernel.name(),
+                flavor.name(),
+                dtype.name()
+            ))
+        })?;
+        bs.iter().copied().find(|&b| b >= n).ok_or_else(|| {
+            Error::Artifact(format!(
+                "n={n} exceeds the largest {}/{}/{} bucket ({}); raise \
+                 --max-log2n in `make artifacts`",
+                kernel.name(),
+                flavor.name(),
+                dtype.name(),
+                bs.last().copied().unwrap_or(0)
+            ))
+        })
+    }
+
+    /// Exact entry lookup.
+    pub fn entry(
+        &self,
+        kernel: Kernel,
+        flavor: Flavor,
+        dtype: DType,
+        n: usize,
+        p: Option<usize>,
+    ) -> Result<&ArtifactEntry> {
+        self.entries
+            .iter()
+            .find(|e| {
+                e.kernel == kernel
+                    && e.flavor == flavor
+                    && e.dtype == dtype
+                    && e.n == n
+                    && e.p == p
+            })
+            .ok_or_else(|| {
+                Error::Artifact(format!(
+                    "missing artifact {}/{}/{}/n{}{}",
+                    kernel.name(),
+                    flavor.name(),
+                    dtype.name(),
+                    n,
+                    p.map(|p| format!("/p{p}")).unwrap_or_default()
+                ))
+            })
+    }
+
+    /// Largest bucket available (used to size benchmark sweeps).
+    pub fn max_bucket(&self, kernel: Kernel, flavor: Flavor, dtype: DType) -> Option<usize> {
+        self.buckets
+            .get(&(kernel, flavor, dtype.name().to_string()))
+            .and_then(|v| v.last().copied())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 2,
+      "digest": "abc",
+      "default_p": 8,
+      "min_log2n": 12,
+      "max_log2n": 13,
+      "entries": [
+        {"kernel": "fused_objective", "flavor": "jnp", "dtype": "f64",
+         "n": 4096, "p": null, "path": "a.hlo.txt",
+         "inputs": [{"dtype": "f64", "shape": [4096]},
+                    {"dtype": "f64", "shape": [1]},
+                    {"dtype": "i32", "shape": [1]}],
+         "outputs": [{"dtype": "f64", "shape": [1]}]},
+        {"kernel": "fused_objective", "flavor": "jnp", "dtype": "f64",
+         "n": 8192, "p": null, "path": "b.hlo.txt",
+         "inputs": [], "outputs": []},
+        {"kernel": "residuals", "flavor": "pallas", "dtype": "f32",
+         "n": 4096, "p": 8, "path": "c.hlo.txt",
+         "inputs": [], "outputs": []}
+      ]
+    }"#;
+
+    #[test]
+    fn parses_and_indexes() {
+        let m = Manifest::parse(Path::new("/tmp/arts"), SAMPLE).unwrap();
+        assert_eq!(m.entries.len(), 3);
+        assert_eq!(
+            m.bucket_for(Kernel::FusedObjective, Flavor::Jnp, DType::F64, 5000)
+                .unwrap(),
+            8192
+        );
+        assert_eq!(
+            m.bucket_for(Kernel::FusedObjective, Flavor::Jnp, DType::F64, 4096)
+                .unwrap(),
+            4096
+        );
+        assert!(m
+            .bucket_for(Kernel::FusedObjective, Flavor::Jnp, DType::F64, 9000)
+            .is_err());
+        assert!(m
+            .bucket_for(Kernel::Neighbors, Flavor::Jnp, DType::F64, 10)
+            .is_err());
+    }
+
+    #[test]
+    fn entry_lookup_with_p() {
+        let m = Manifest::parse(Path::new("/x"), SAMPLE).unwrap();
+        let e = m
+            .entry(Kernel::Residuals, Flavor::Pallas, DType::F32, 4096, Some(8))
+            .unwrap();
+        assert_eq!(e.path, Path::new("/x/c.hlo.txt"));
+        assert!(m
+            .entry(Kernel::Residuals, Flavor::Pallas, DType::F32, 4096, Some(4))
+            .is_err());
+    }
+
+    #[test]
+    fn rejects_wrong_version() {
+        let bad = SAMPLE.replace("\"version\": 2", "\"version\": 1");
+        assert!(Manifest::parse(Path::new("/x"), &bad).is_err());
+    }
+
+    #[test]
+    fn input_specs_roundtrip() {
+        let m = Manifest::parse(Path::new("/x"), SAMPLE).unwrap();
+        let e = &m.entries[0];
+        assert_eq!(e.inputs.len(), 3);
+        assert_eq!(e.inputs[0].shape, vec![4096]);
+        assert_eq!(e.inputs[2].dtype, "i32");
+    }
+
+    #[test]
+    fn kernel_flavor_names_roundtrip() {
+        for k in [
+            Kernel::FusedObjective,
+            Kernel::MinMaxSum,
+            Kernel::Neighbors,
+            Kernel::IntervalCount,
+            Kernel::ThresholdStats,
+            Kernel::KnnWeightedSum,
+            Kernel::Residuals,
+            Kernel::LmsProbe,
+            Kernel::Dists,
+        ] {
+            assert_eq!(Kernel::from_name(k.name()), Some(k));
+        }
+        for f in [Flavor::Pallas, Flavor::Jnp] {
+            assert_eq!(Flavor::from_name(f.name()), Some(f));
+        }
+    }
+}

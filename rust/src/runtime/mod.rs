@@ -1,0 +1,15 @@
+//! PJRT runtime layer: artifact manifest, executable cache, and the
+//! device-backed [`Evaluator`](crate::select::Evaluator).
+//!
+//! Build-time contract: `make artifacts` runs `python/compile/aot.py`,
+//! which lowers the Layer-2 JAX graphs (calling the Layer-1 Pallas kernels)
+//! to HLO text plus `manifest.json`. This module is the only place the
+//! coordinator touches XLA; everything above it sees the `Evaluator` trait.
+
+pub mod client;
+pub mod evaluator;
+pub mod manifest;
+
+pub use client::{Executable, Runtime};
+pub use evaluator::DeviceEvaluator;
+pub use manifest::{ArtifactEntry, Flavor, Kernel, Manifest};

@@ -1,0 +1,136 @@
+//! Bisection on the subgradient inclusion `0 ∈ ∂f(y)` (paper §III).
+//!
+//! The classical root-finding baseline: halve the value interval, keep the
+//! half whose endpoint subgradients bracket zero. Iteration count is
+//! `O(log r)` with `r = x_(n) − x_(1)` — *unbounded* in the data range,
+//! which is exactly the sensitivity to large outliers the paper demonstrates
+//! in Fig. 5 (and our `fig5_outliers` bench reproduces).
+
+use super::exact;
+use super::objective::{Evaluator, ObjectiveSpec};
+use crate::util::PhaseTimer;
+use crate::Result;
+
+#[derive(Debug, Clone)]
+pub struct BisectOptions {
+    pub max_iters: usize,
+    /// Relative bracket-width tolerance.
+    pub tol: f64,
+}
+
+impl Default for BisectOptions {
+    fn default() -> Self {
+        // ~52 halvings resolve any f64 bracket to adjacent floats, but an
+        // outlier-stretched range needs many more to *reach* the bulk.
+        BisectOptions { max_iters: 200, tol: 1e-12 }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct BisectOutcome {
+    pub value: f64,
+    pub iterations: usize,
+    pub phases: PhaseTimer,
+}
+
+/// Bisection for the k-th smallest element; exact via rank resolution.
+pub fn bisection(
+    ev: &mut dyn Evaluator,
+    k: usize,
+    opts: &BisectOptions,
+) -> Result<BisectOutcome> {
+    let n = ev.n();
+    let spec = ObjectiveSpec::order(n, k)?;
+    let mut phases = PhaseTimer::new();
+
+    let init = phases.time("iterations", || ev.init_stats())?;
+    let (mut lo, mut hi) = (init.min, init.max);
+    if lo == hi || k == 1 || k == n {
+        let v = if k == n { hi } else if k == 1 { lo } else { lo };
+        return Ok(BisectOutcome { value: v, iterations: 0, phases });
+    }
+
+    let mut iterations = 0;
+    let mut mid = 0.5 * (lo + hi);
+    while iterations < opts.max_iters {
+        mid = 0.5 * (lo + hi);
+        if mid <= lo || mid >= hi {
+            break; // adjacent floats
+        }
+        let s = phases.time("iterations", || ev.probe(mid))?;
+        iterations += 1;
+        if spec.is_optimal(&s) {
+            break;
+        }
+        if spec.answer_above(&s) {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+        if (hi - lo) <= opts.tol * lo.abs().max(hi.abs()).max(1.0) {
+            break;
+        }
+    }
+
+    let value = phases.time("exact_fixup", || exact::resolve(ev, k, mid))?;
+    Ok(BisectOutcome { value, iterations, phases })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::select::objective::HostEvaluator;
+    use crate::stats::{sorted_median, sorted_order_statistic, Distribution, Rng};
+    use crate::util::median_rank;
+
+    #[test]
+    fn matches_oracle_across_distributions() {
+        let mut rng = Rng::seeded(31);
+        for d in Distribution::ALL {
+            let data = d.sample_vec(&mut rng, 2048);
+            let mut ev = HostEvaluator::new(&data);
+            let out = bisection(&mut ev, median_rank(2048), &BisectOptions::default()).unwrap();
+            assert_eq!(out.value, sorted_median(&data), "{}", d.name());
+        }
+    }
+
+    #[test]
+    fn order_statistics_random_k() {
+        let mut rng = Rng::seeded(32);
+        let data = Distribution::Mixture1.sample_vec(&mut rng, 1000);
+        for k in [1, 7, 333, 500, 999, 1000] {
+            let mut ev = HostEvaluator::new(&data);
+            let out = bisection(&mut ev, k, &BisectOptions::default()).unwrap();
+            assert_eq!(out.value, sorted_order_statistic(&data, k), "k={k}");
+        }
+    }
+
+    #[test]
+    fn iteration_count_grows_with_range_fig5() {
+        // the paper's Fig. 5 pathology: iterations scale with log(range)
+        let mut rng = Rng::seeded(33);
+        let base = Distribution::Normal.sample_vec(&mut rng, 4096);
+        let mut prev = 0usize;
+        let mut grew = 0;
+        for mag in [1e3, 1e6, 1e9, 1e12] {
+            let mut data = base.clone();
+            data[0] = mag;
+            let mut ev = HostEvaluator::new(&data);
+            let out = bisection(&mut ev, 2048, &BisectOptions::default()).unwrap();
+            assert_eq!(out.value, sorted_median(&data));
+            if out.iterations > prev {
+                grew += 1;
+            }
+            prev = out.iterations;
+        }
+        assert!(grew >= 3, "bisection should need more iterations as the outlier grows");
+    }
+
+    #[test]
+    fn constant_array() {
+        let mut ev = HostEvaluator::new(&[2.0; 100]);
+        let out = bisection(&mut ev, 50, &BisectOptions::default()).unwrap();
+        assert_eq!(out.value, 2.0);
+        assert_eq!(out.iterations, 0);
+    }
+}

@@ -1,0 +1,309 @@
+//! Brent's method, in both roles the paper evaluates:
+//!
+//! - [`brent_minimize`] — Numerical-Recipes-style minimization of f
+//!   (parabolic interpolation with golden-section fallback);
+//! - [`brent_root`] — Brent–Dekker root finding on the subgradient
+//!   `g(y) = w_lo·c_lt − w_hi·c_gt` (inverse-quadratic / secant with
+//!   bisection fallback).
+//!
+//! Both degrade on outlier-stretched data (paper Fig. 5): f is exactly
+//! linear over most of the range, parabolic/quadratic fits degenerate, and
+//! the methods fall back to their slow golden/bisection safeguards.
+
+use super::exact;
+use super::objective::{Evaluator, ObjectiveSpec};
+use crate::util::PhaseTimer;
+use crate::Result;
+
+const GOLD: f64 = 0.381_966_011_250_105; // 1 - (√5−1)/2
+
+#[derive(Debug, Clone)]
+pub struct BrentOptions {
+    pub max_iters: usize,
+    pub tol: f64,
+}
+
+impl Default for BrentOptions {
+    fn default() -> Self {
+        BrentOptions { max_iters: 200, tol: 1e-12 }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct BrentOutcome {
+    pub value: f64,
+    pub iterations: usize,
+    pub phases: PhaseTimer,
+}
+
+/// Brent minimization of the selection objective.
+pub fn brent_minimize(
+    ev: &mut dyn Evaluator,
+    k: usize,
+    opts: &BrentOptions,
+) -> Result<BrentOutcome> {
+    let n = ev.n();
+    let spec = ObjectiveSpec::order(n, k)?;
+    let mut phases = PhaseTimer::new();
+
+    let init = phases.time("iterations", || ev.init_stats())?;
+    let (mut a, mut b) = (init.min, init.max);
+    if a == b || k == 1 || k == n {
+        let v = if k == n { b } else { a };
+        return Ok(BrentOutcome { value: v, iterations: 0, phases });
+    }
+
+    // NR brent: x = best, w = second best, v = previous w.
+    let mut x = a + GOLD * (b - a);
+    let mut fx = spec.f(&phases.time("iterations", || ev.probe(x))?);
+    let (mut w, mut v) = (x, x);
+    let (mut fw, mut fv) = (fx, fx);
+    let mut d: f64 = 0.0;
+    let mut e: f64 = 0.0;
+    let mut iterations = 1;
+
+    while iterations < opts.max_iters {
+        let xm = 0.5 * (a + b);
+        let tol1 = opts.tol * x.abs().max(1.0);
+        let tol2 = 2.0 * tol1;
+        if (x - xm).abs() <= tol2 - 0.5 * (b - a) {
+            break;
+        }
+        let mut use_golden = true;
+        if e.abs() > tol1 {
+            // parabolic fit through (x,fx), (w,fw), (v,fv)
+            let r = (x - w) * (fx - fv);
+            let mut q = (x - v) * (fx - fw);
+            let mut p = (x - v) * q - (x - w) * r;
+            q = 2.0 * (q - r);
+            if q > 0.0 {
+                p = -p;
+            }
+            q = q.abs();
+            let etemp = e;
+            e = d;
+            if p.abs() < (0.5 * q * etemp).abs() && p > q * (a - x) && p < q * (b - x) {
+                d = p / q;
+                let u = x + d;
+                if u - a < tol2 || b - u < tol2 {
+                    d = if xm >= x { tol1 } else { -tol1 };
+                }
+                use_golden = false;
+            }
+        }
+        if use_golden {
+            e = if x >= xm { a - x } else { b - x };
+            d = GOLD * e;
+        }
+        let u = if d.abs() >= tol1 {
+            x + d
+        } else if d >= 0.0 {
+            x + tol1
+        } else {
+            x - tol1
+        };
+        let su = phases.time("iterations", || ev.probe(u))?;
+        iterations += 1;
+        let fu = spec.f(&su);
+        if spec.is_optimal(&su) {
+            x = u;
+            break;
+        }
+        if fu <= fx {
+            if u >= x {
+                a = x;
+            } else {
+                b = x;
+            }
+            v = w;
+            fv = fw;
+            w = x;
+            fw = fx;
+            x = u;
+            fx = fu;
+        } else {
+            if u < x {
+                a = u;
+            } else {
+                b = u;
+            }
+            if fu <= fw || w == x {
+                v = w;
+                fv = fw;
+                w = u;
+                fw = fu;
+            } else if fu <= fv || v == x || v == w {
+                v = u;
+                fv = fu;
+            }
+        }
+    }
+
+    let value = phases.time("exact_fixup", || exact::resolve(ev, k, x))?;
+    Ok(BrentOutcome { value, iterations, phases })
+}
+
+/// Brent–Dekker root finding on the subgradient point value.
+pub fn brent_root(
+    ev: &mut dyn Evaluator,
+    k: usize,
+    opts: &BrentOptions,
+) -> Result<BrentOutcome> {
+    let n = ev.n();
+    let spec = ObjectiveSpec::order(n, k)?;
+    let mut phases = PhaseTimer::new();
+
+    let init = phases.time("iterations", || ev.init_stats())?;
+    if init.min == init.max || k == 1 || k == n {
+        let v = if k == n { init.max } else { init.min };
+        return Ok(BrentOutcome { value: v, iterations: 0, phases });
+    }
+
+    // g at the seeds, closed form (duplicate-safe edges).
+    let seed = spec.seed(&init);
+    let (mut a, mut b) = (seed.y_l, seed.y_r);
+    let (mut fa, mut fb) = (seed.g_l, seed.g_r);
+    let (mut c, mut fc) = (a, fa);
+    let (mut d, mut e) = (b - a, b - a);
+    let mut iterations = 0;
+
+    while iterations < opts.max_iters {
+        if (fb > 0.0 && fc > 0.0) || (fb < 0.0 && fc < 0.0) {
+            c = a;
+            fc = fa;
+            d = b - a;
+            e = d;
+        }
+        if fc.abs() < fb.abs() {
+            a = b;
+            b = c;
+            c = a;
+            fa = fb;
+            fb = fc;
+            fc = fa;
+        }
+        let tol1 = 2.0 * f64::EPSILON * b.abs() + 0.5 * opts.tol;
+        let xm = 0.5 * (c - b);
+        if xm.abs() <= tol1 || fb == 0.0 {
+            break;
+        }
+        if e.abs() >= tol1 && fa.abs() > fb.abs() {
+            // inverse quadratic / secant
+            let s = fb / fa;
+            let (mut p, mut q);
+            if a == c {
+                p = 2.0 * xm * s;
+                q = 1.0 - s;
+            } else {
+                let qq = fa / fc;
+                let r = fb / fc;
+                p = s * (2.0 * xm * qq * (qq - r) - (b - a) * (r - 1.0));
+                q = (qq - 1.0) * (r - 1.0) * (s - 1.0);
+            }
+            if p > 0.0 {
+                q = -q;
+            }
+            p = p.abs();
+            let min1 = 3.0 * xm * q - (tol1 * q).abs();
+            let min2 = (e * q).abs();
+            if 2.0 * p < min1.min(min2) {
+                e = d;
+                d = p / q;
+            } else {
+                d = xm;
+                e = d;
+            }
+        } else {
+            d = xm;
+            e = d;
+        }
+        a = b;
+        fa = fb;
+        if d.abs() > tol1 {
+            b += d;
+        } else {
+            b += if xm >= 0.0 { tol1 } else { -tol1 };
+        }
+        let sb = phases.time("iterations", || ev.probe(b))?;
+        iterations += 1;
+        if spec.is_optimal(&sb) {
+            break;
+        }
+        fb = spec.g_point(&sb);
+        if fb == 0.0 {
+            break;
+        }
+    }
+
+    let value = phases.time("exact_fixup", || exact::resolve(ev, k, b))?;
+    Ok(BrentOutcome { value, iterations, phases })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::select::objective::HostEvaluator;
+    use crate::stats::{sorted_median, sorted_order_statistic, Distribution, Rng};
+    use crate::util::median_rank;
+
+    #[test]
+    fn minimize_matches_oracle() {
+        let mut rng = Rng::seeded(51);
+        for d in Distribution::ALL {
+            let data = d.sample_vec(&mut rng, 2000);
+            let mut ev = HostEvaluator::new(&data);
+            let out = brent_minimize(&mut ev, median_rank(2000), &BrentOptions::default()).unwrap();
+            assert_eq!(out.value, sorted_median(&data), "{}", d.name());
+        }
+    }
+
+    #[test]
+    fn root_matches_oracle() {
+        let mut rng = Rng::seeded(52);
+        for d in Distribution::ALL {
+            let data = d.sample_vec(&mut rng, 2000);
+            let mut ev = HostEvaluator::new(&data);
+            let out = brent_root(&mut ev, median_rank(2000), &BrentOptions::default()).unwrap();
+            assert_eq!(out.value, sorted_median(&data), "{}", d.name());
+        }
+    }
+
+    #[test]
+    fn root_order_statistics() {
+        let mut rng = Rng::seeded(53);
+        let data = Distribution::Beta25.sample_vec(&mut rng, 777);
+        for k in [1, 2, 100, 389, 776, 777] {
+            let mut ev = HostEvaluator::new(&data);
+            let out = brent_root(&mut ev, k, &BrentOptions::default()).unwrap();
+            assert_eq!(out.value, sorted_order_statistic(&data, k), "k={k}");
+        }
+    }
+
+    #[test]
+    fn outliers_inflate_brent_iterations_fig5() {
+        let mut rng = Rng::seeded(54);
+        let base = Distribution::Normal.sample_vec(&mut rng, 4096);
+        let mut clean = base.clone();
+        let mut ev = HostEvaluator::new(&clean);
+        let clean_iters =
+            brent_minimize(&mut ev, 2048, &BrentOptions::default()).unwrap().iterations;
+        clean[0] = 1e12;
+        let mut ev = HostEvaluator::new(&clean);
+        let dirty = brent_minimize(&mut ev, 2048, &BrentOptions::default()).unwrap();
+        assert_eq!(dirty.value, sorted_median(&clean));
+        assert!(
+            dirty.iterations > clean_iters,
+            "outlier should slow Brent: {} vs {}",
+            dirty.iterations,
+            clean_iters
+        );
+    }
+
+    #[test]
+    fn constant_data() {
+        let mut ev = HostEvaluator::new(&[7.0; 64]);
+        assert_eq!(brent_minimize(&mut ev, 32, &BrentOptions::default()).unwrap().value, 7.0);
+        let mut ev = HostEvaluator::new(&[7.0; 64]);
+        assert_eq!(brent_root(&mut ev, 32, &BrentOptions::default()).unwrap().value, 7.0);
+    }
+}

@@ -1,0 +1,412 @@
+//! Kelley's cutting plane method (Algorithm 1 of the paper).
+//!
+//! Iteratively builds a piecewise-linear lower model of the convex objective
+//! from (f, subgradient) pairs; in 1-D the model minimizer is the
+//! intersection of the two bracketing tangents:
+//!
+//! ```text
+//!   t = (f_R − f_L + y_L·g_L − y_R·g_R) / (g_L − g_R)
+//! ```
+//!
+//! The bracket [y_L, y_R] always contains the minimizer; each iteration
+//! costs exactly one fused device reduction. Seeding uses a single
+//! (min, max, sum) reduction with closed-form f/g at the extremes (§IV), so
+//! total cost is `maxit + 1` reductions — the paper's complexity claim,
+//! asserted by our tests via the evaluator's probe counter.
+//!
+//! Unlike bisection/golden/Brent, the cut exploits both convexity and the
+//! subgradient, which is why it is insensitive to extreme outliers (Fig. 5):
+//! one evaluation eliminates the entire linear piece between an outlier and
+//! the bulk of the data.
+
+use super::exact;
+use super::objective::{Evaluator, ObjectiveSpec};
+use crate::util::PhaseTimer;
+use crate::{algo_err, Result};
+
+/// Tuning knobs for Algorithm 1.
+#[derive(Debug, Clone)]
+pub struct CpOptions {
+    /// Upper bound on iterations (paper: < 30 suffice for n ≤ 2²⁵ at
+    /// tolerance 1e-12).
+    pub max_iters: usize,
+    /// Stop when the bracket width falls below `tol_f · max(1, |y|)`.
+    pub tol_f: f64,
+    /// Stop when |g(t)| ≤ tol_g (0 disables; g = 0 always stops).
+    pub tol_g: f64,
+    /// Record per-iteration state (Fig. 4 trace).
+    pub trace: bool,
+    /// Stop early after this many iterations without exact resolution —
+    /// used by the hybrid method, which takes the bracket and sorts the
+    /// surviving pivot interval instead.
+    pub stop_after: Option<usize>,
+}
+
+impl Default for CpOptions {
+    fn default() -> Self {
+        CpOptions {
+            max_iters: 60,
+            tol_f: 1e-12,
+            tol_g: 0.0,
+            trace: false,
+            stop_after: None,
+        }
+    }
+}
+
+/// One row of the Fig. 4 trace.
+#[derive(Debug, Clone, Copy)]
+pub struct TracePoint {
+    pub iter: usize,
+    pub y: f64,
+    pub f: f64,
+    pub g: f64,
+    pub y_l: f64,
+    pub y_r: f64,
+}
+
+/// Outcome of a cutting-plane run.
+#[derive(Debug, Clone)]
+pub struct CpOutcome {
+    /// Exact order statistic if resolution ran, else the approximation.
+    pub value: f64,
+    /// Final bracket (contains the k-th order statistic).
+    pub bracket: (f64, f64),
+    /// Number of cut iterations executed (excludes the seed reduction).
+    pub iterations: usize,
+    /// True iff `value` is the exact data value of rank k.
+    pub exact: bool,
+    pub trace: Vec<TracePoint>,
+    pub phases: PhaseTimer,
+}
+
+/// Run Algorithm 1 for the k-th smallest element.
+///
+/// When `opts.stop_after` is `None`, the approximate minimizer is refined to
+/// the exact order statistic via `exact::resolve`. With `stop_after = m`,
+/// iteration stops early and the (bracket, iterations) are returned for the
+/// hybrid path.
+pub fn cutting_plane(
+    ev: &mut dyn Evaluator,
+    k: usize,
+    opts: &CpOptions,
+) -> Result<CpOutcome> {
+    let n = ev.n();
+    let spec = ObjectiveSpec::order(n, k)?;
+    let mut phases = PhaseTimer::new();
+    let mut trace = Vec::new();
+
+    // --- step 0: one fused (min, max, sum) reduction seeds everything.
+    let init = phases.time("cp_iterations", || ev.init_stats())?;
+    let seed = spec.seed(&init);
+    let (mut y_l, mut y_r) = (seed.y_l, seed.y_r);
+    let (mut f_l, mut g_l) = (seed.f_l, seed.g_l);
+    let (mut f_r, mut g_r) = (seed.f_r, seed.g_r);
+
+    if opts.trace {
+        trace.push(TracePoint { iter: 0, y: y_l, f: f_l, g: g_l, y_l, y_r });
+        trace.push(TracePoint { iter: 0, y: y_r, f: f_r, g: g_r, y_l, y_r });
+    }
+
+    // Degenerate cases: constant array, or extreme ranks.
+    if y_l == y_r {
+        return Ok(CpOutcome {
+            value: y_l,
+            bracket: (y_l, y_r),
+            iterations: 0,
+            exact: true,
+            trace,
+            phases,
+        });
+    }
+    if k == 1 || k == n {
+        let v = if k == 1 { y_l } else { y_r };
+        return Ok(CpOutcome {
+            value: v,
+            bracket: (v, v),
+            iterations: 0,
+            exact: true,
+            trace,
+            phases,
+        });
+    }
+
+    let budget = opts.stop_after.unwrap_or(opts.max_iters).min(opts.max_iters);
+    let mut iterations = 0;
+    let mut approx = 0.5 * (y_l + y_r);
+    let mut optimal_at = None;
+
+    while iterations < budget {
+        // Model minimizer (Algorithm 1, step 1.1) with a bisection guard:
+        // denominators can collapse once f is flat to double precision.
+        let denom = g_l - g_r;
+        let mut t = if denom.abs() > 0.0 {
+            (f_r - f_l + y_l * g_l - y_r * g_r) / denom
+        } else {
+            0.5 * (y_l + y_r)
+        };
+        if !t.is_finite() || t <= y_l || t >= y_r {
+            t = 0.5 * (y_l + y_r);
+            if t <= y_l || t >= y_r {
+                break; // bracket exhausted to adjacent floats
+            }
+        }
+
+        let s = phases.time("cp_iterations", || ev.probe(t))?;
+        iterations += 1;
+        let f_t = spec.f(&s);
+        let g_t = spec.g_point(&s);
+        if opts.trace {
+            trace.push(TracePoint { iter: iterations, y: t, f: f_t, g: g_t, y_l, y_r });
+        }
+        approx = t;
+
+        // Stopping criteria (step 1.3).
+        if spec.is_optimal(&s) {
+            optimal_at = Some(t);
+            break;
+        }
+        if opts.tol_g > 0.0 && g_t.abs() <= opts.tol_g {
+            break;
+        }
+
+        // Bracket update (step 1.4).
+        if g_t < 0.0 {
+            y_l = t;
+            f_l = f_t;
+            g_l = g_t;
+        } else {
+            y_r = t;
+            f_r = f_t;
+            g_r = g_t;
+        }
+
+        if (y_r - y_l) <= opts.tol_f * y_l.abs().max(y_r.abs()).max(1.0) {
+            break;
+        }
+    }
+
+    if g_l >= 0.0 || g_r <= 0.0 {
+        // The bracket invariant g(y_L) < 0 < g(y_R) must hold throughout.
+        return Err(algo_err!(
+            "cutting plane lost its bracket invariant: g_l={g_l} g_r={g_r}"
+        ));
+    }
+
+    if opts.stop_after.is_some() {
+        return Ok(CpOutcome {
+            value: optimal_at.unwrap_or(approx),
+            bracket: (y_l, y_r),
+            iterations,
+            exact: false,
+            trace,
+            phases,
+        });
+    }
+
+    // Exact fixup (paper footnote 1): typically 1–2 extra reductions; the
+    // converged bracket seeds the rank bisection so even the slow path
+    // stays cheap.
+    let start = optimal_at.unwrap_or(approx);
+    let value = phases.time("exact_fixup", || {
+        exact::resolve_with_bracket(ev, k, start, Some((y_l, y_r)))
+    })?;
+    Ok(CpOutcome {
+        value,
+        bracket: (y_l, y_r),
+        iterations,
+        exact: true,
+        trace,
+        phases,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::select::objective::HostEvaluator;
+    use crate::stats::{sorted_median, sorted_order_statistic, Distribution, Rng};
+    use crate::util::median_rank;
+
+    fn median_of(data: &[f64]) -> CpOutcome {
+        let mut ev = HostEvaluator::new(data);
+        cutting_plane(&mut ev, median_rank(data.len()), &CpOptions::default()).unwrap()
+    }
+
+    #[test]
+    fn exact_median_small() {
+        let data = [9.0, 1.0, 5.0, 3.0, 7.0];
+        let out = median_of(&data);
+        assert_eq!(out.value, 5.0);
+        assert!(out.exact);
+    }
+
+    #[test]
+    fn matches_sort_oracle_all_distributions() {
+        let mut rng = Rng::seeded(21);
+        for d in Distribution::ALL {
+            for n in [5usize, 64, 1001, 4096] {
+                let data = d.sample_vec(&mut rng, n);
+                let out = median_of(&data);
+                assert_eq!(out.value, sorted_median(&data), "{} n={n}", d.name());
+            }
+        }
+    }
+
+    #[test]
+    fn arbitrary_order_statistics() {
+        let mut rng = Rng::seeded(22);
+        let data = Distribution::Normal.sample_vec(&mut rng, 999);
+        for k in [1usize, 2, 10, 250, 500, 750, 998, 999] {
+            let mut ev = HostEvaluator::new(&data);
+            let out = cutting_plane(&mut ev, k, &CpOptions::default()).unwrap();
+            assert_eq!(out.value, sorted_order_statistic(&data, k), "k={k}");
+        }
+    }
+
+    #[test]
+    fn few_iterations_even_at_large_n() {
+        // paper: under 30 iterations for n up to 32M at tol 1e-12
+        let mut rng = Rng::seeded(23);
+        let data = Distribution::Uniform.sample_vec(&mut rng, 1 << 18);
+        let out = median_of(&data);
+        assert!(out.iterations <= 40, "{} iterations", out.iterations);
+        assert_eq!(out.value, sorted_median(&data));
+    }
+
+    #[test]
+    fn insensitive_to_huge_outliers_fig5() {
+        // Fig. 5: CP stays usable as one element grows to 1e9 (mild growth
+        // from f-precision erosion is expected — see §V.D — but it must be
+        // far below bisection's log2(range) blowup, asserted below).
+        let mut rng = Rng::seeded(24);
+        let base = Distribution::Normal.sample_vec(&mut rng, 4096);
+        let mut iters = Vec::new();
+        for mag in [1e3, 1e6, 1e9] {
+            let mut data = base.clone();
+            data[0] = mag;
+            let out = median_of(&data);
+            assert_eq!(out.value, sorted_median(&data), "mag={mag}");
+            iters.push(out.iterations);
+        }
+        let spread = iters.iter().max().unwrap() - iters.iter().min().unwrap();
+        assert!(spread <= 20, "iteration counts vary too much: {iters:?}");
+    }
+
+    #[test]
+    fn beats_bisection_on_outliers_fig5() {
+        // the comparative Fig. 5 claim: at extreme magnitudes CP needs far
+        // fewer probes than bisection on the same data.
+        let mut rng = Rng::seeded(29);
+        let mut data = Distribution::Normal.sample_vec(&mut rng, 4096);
+        data[0] = 1e12;
+        let want = sorted_median(&data);
+
+        let mut ev_cp = HostEvaluator::new(&data);
+        let cp = cutting_plane(&mut ev_cp, 2048, &CpOptions::default()).unwrap();
+        assert_eq!(cp.value, want);
+
+        let mut ev_bi = HostEvaluator::new(&data);
+        let bi = crate::select::bisection::bisection(
+            &mut ev_bi,
+            2048,
+            &crate::select::bisection::BisectOptions::default(),
+        )
+        .unwrap();
+        assert_eq!(bi.value, want);
+
+        assert!(
+            ev_cp.probes() < ev_bi.probes(),
+            "cp {} probes vs bisection {}",
+            ev_cp.probes(),
+            ev_bi.probes()
+        );
+    }
+
+    #[test]
+    fn probe_budget_is_maxit_plus_one_plus_fixup() {
+        let mut rng = Rng::seeded(25);
+        let data = Distribution::Normal.sample_vec(&mut rng, 8192);
+        let mut ev = HostEvaluator::new(&data);
+        let out = cutting_plane(&mut ev, 4096, &CpOptions::default()).unwrap();
+        // seed (1) + iterations + exact fixup (a handful of probe/neighbor
+        // pairs). The paper's "maxit + 1 reductions" claim allows the fixup
+        // loop as footnote-1 extra work.
+        assert!(
+            ev.probes() <= out.iterations as u64 + 1 + 12,
+            "probes={} iters={}",
+            ev.probes(),
+            out.iterations
+        );
+    }
+
+    #[test]
+    fn stop_after_returns_valid_bracket() {
+        let mut rng = Rng::seeded(26);
+        let data = Distribution::HalfNormal.sample_vec(&mut rng, 8192);
+        let k = median_rank(data.len());
+        let mut ev = HostEvaluator::new(&data);
+        let out = cutting_plane(
+            &mut ev,
+            k,
+            &CpOptions { stop_after: Some(7), ..CpOptions::default() },
+        )
+        .unwrap();
+        assert!(out.iterations <= 7);
+        assert!(!out.exact);
+        let med = sorted_median(&data);
+        assert!(
+            out.bracket.0 <= med && med <= out.bracket.1,
+            "bracket {:?} excludes median {med}",
+            out.bracket
+        );
+        // the paper: after ~7 iterations the pivot interval is small
+        let inside = data
+            .iter()
+            .filter(|&&x| x > out.bracket.0 && x < out.bracket.1)
+            .count();
+        assert!(inside * 4 <= data.len(), "pivot interval still holds {inside}");
+    }
+
+    #[test]
+    fn trace_records_bracket_shrinkage() {
+        let mut rng = Rng::seeded(27);
+        let data = Distribution::Beta25.sample_vec(&mut rng, 2048);
+        let mut ev = HostEvaluator::new(&data);
+        let out = cutting_plane(
+            &mut ev,
+            1024,
+            &CpOptions { trace: true, ..CpOptions::default() },
+        )
+        .unwrap();
+        assert!(out.trace.len() >= 3);
+        // bracket widths are non-increasing over the trace
+        let widths: Vec<f64> = out.trace.iter().map(|t| t.y_r - t.y_l).collect();
+        for w in widths.windows(2) {
+            assert!(w[1] <= w[0] + 1e-15, "{widths:?}");
+        }
+    }
+
+    #[test]
+    fn constant_and_tiny_arrays() {
+        assert_eq!(median_of(&[4.0, 4.0, 4.0, 4.0]).value, 4.0);
+        assert_eq!(median_of(&[1.0]).value, 1.0);
+        assert_eq!(median_of(&[2.0, 1.0]).value, 1.0); // lower median
+        let mut ev = HostEvaluator::new(&[5.0, -3.0]);
+        let out = cutting_plane(&mut ev, 2, &CpOptions::default()).unwrap();
+        assert_eq!(out.value, 5.0);
+    }
+
+    #[test]
+    fn duplicates_at_median() {
+        let data = [1.0, 2.0, 2.0, 2.0, 2.0, 2.0, 9.0];
+        assert_eq!(median_of(&data).value, 2.0);
+    }
+
+    #[test]
+    fn mixture3_with_mass_at_ten() {
+        let mut rng = Rng::seeded(28);
+        let data = Distribution::Mixture3.sample_vec(&mut rng, 4097);
+        assert_eq!(median_of(&data).value, sorted_median(&data));
+    }
+}

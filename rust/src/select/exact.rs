@@ -1,0 +1,254 @@
+//! Exact-rank resolution from an approximate minimizer.
+//!
+//! The cutting plane (and every other convex-minimization method) converges
+//! to an approximation ỹ of the order statistic; the paper (footnote 1)
+//! finishes with one more reduction selecting the largest `x_i ≤ ỹ`. With
+//! duplicates, even-n flat regions, and far-off starting points this needs
+//! care; we use rank-guided value bisection:
+//!
+//! 1. probe ỹ — if `c_lt < k ≤ c_lt + c_eq` the probe *is* the k-th
+//!    smallest (one reduction, the common case after convergence);
+//! 2. otherwise bracket the answer between values with ranks straddling k
+//!    and bisect; whenever the bracket is plausibly tight, a `neighbors`
+//!    reduction snaps to the largest data value `≤ hi`, verified by rank.
+//!
+//! Every query is a device reduction; the counter tests assert the common
+//! path stays within a handful of probes.
+
+use super::objective::Evaluator;
+use crate::{algo_err, Result};
+
+/// Hard cap on bisection steps. Value bisection over the f64 range reaches
+/// adjacent floats in ≲ 2100 halvings; snap checks fire long before.
+const MAX_STEPS: usize = 4096;
+
+/// Bisection rounds between snap attempts.
+const SNAP_EVERY: usize = 8;
+
+/// Resolve the exact k-th smallest element starting from the approximation
+/// `y`. Returns the exact order statistic (a data value).
+pub fn resolve(ev: &mut dyn Evaluator, k: usize, y: f64) -> Result<f64> {
+    resolve_with_bracket(ev, k, y, None)
+}
+
+/// Like [`resolve`], seeded with a value bracket known (or strongly
+/// believed) to contain the k-th order statistic — e.g. the cutting-plane
+/// bracket. A stale bracket still terminates correctly: bisection collapses
+/// onto the boundary and the rank-verified snap rejects wrong values.
+pub fn resolve_with_bracket(
+    ev: &mut dyn Evaluator,
+    k: usize,
+    y: f64,
+    bracket: Option<(f64, f64)>,
+) -> Result<f64> {
+    let n = ev.n();
+    if k == 0 || k > n {
+        return Err(crate::invalid_arg!("k={k} out of range for n={n}"));
+    }
+    let y = if y.is_nan() { 0.0 } else { y };
+
+    // Fast path: the approximation already has rank k.
+    let s = ev.probe(y)?;
+    if rank_ok(&s, k) {
+        // rank_ok with c_eq > 0 means the probe equals a data value in the
+        // array's dtype — return the canonical (dtype-quantized) value.
+        return Ok(ev.canon(y));
+    }
+
+    // Establish a rank bracket: c_le(lo) < k <= c_le(hi).
+    let (lo, hi);
+    if let Some((bl, bh)) = bracket {
+        if (s.c_lt + s.c_eq) as usize >= k {
+            lo = bl.min(y);
+            hi = y.min(bh);
+        } else {
+            lo = y.max(bl);
+            hi = bh.max(y);
+        }
+        if !lo.is_finite() || !hi.is_finite() || lo >= hi {
+            return resolve_with_bracket(ev, k, y, None);
+        }
+    } else if (s.c_lt + s.c_eq) as usize >= k {
+        let init = ev.init_stats()?;
+        hi = y.min(init.max);
+        lo = f64::next_down(init.min); // c_le = 0 < k
+        if init.min >= hi {
+            // y is at/below the minimum; answer must be the minimum itself
+            return snap(ev, k, init.min);
+        }
+    } else {
+        let init = ev.init_stats()?;
+        lo = y.max(f64::next_down(init.min));
+        hi = init.max; // c_le = n >= k
+        if lo >= hi {
+            return snap(ev, k, init.max);
+        }
+    }
+
+    let out = bisect_resolve(ev, k, lo, hi);
+    if out.is_err() && bracket.is_some() {
+        // Stale bracket hint — retry against the full data range.
+        return resolve_with_bracket(ev, k, y, None);
+    }
+    out
+}
+
+fn bisect_resolve(ev: &mut dyn Evaluator, k: usize, mut lo: f64, mut hi: f64) -> Result<f64> {
+    for step in 0..MAX_STEPS {
+        // Periodic snap: one neighbors reduction often finishes the job.
+        if step % SNAP_EVERY == SNAP_EVERY - 1 {
+            if let Some(v) = try_snap(ev, k, hi)? {
+                return Ok(v);
+            }
+        }
+        let mid = 0.5 * (lo + hi);
+        if !(mid > lo && mid < hi) {
+            // Bracket reached adjacent floats.
+            return snap(ev, k, hi);
+        }
+        let s = ev.probe(mid)?;
+        if rank_ok(&s, k) {
+            return Ok(ev.canon(mid));
+        }
+        if ((s.c_lt + s.c_eq) as usize) < k {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+    }
+    Err(algo_err!("exact resolution did not converge (k={k})"))
+}
+
+#[inline]
+fn rank_ok(s: &super::objective::ProbeStats, k: usize) -> bool {
+    (s.c_lt as usize) < k && k <= (s.c_lt + s.c_eq) as usize
+}
+
+/// The candidate answer is the largest data value ≤ hi; verify by rank.
+fn try_snap(ev: &mut dyn Evaluator, k: usize, hi: f64) -> Result<Option<f64>> {
+    let nb = ev.neighbors(hi)?;
+    if !nb.lower.is_finite() {
+        return Ok(None);
+    }
+    let s = ev.probe(nb.lower)?;
+    if rank_ok(&s, k) {
+        return Ok(Some(nb.lower));
+    }
+    Ok(None)
+}
+
+fn snap(ev: &mut dyn Evaluator, k: usize, hi: f64) -> Result<f64> {
+    if let Some(v) = try_snap(ev, k, hi)? {
+        return Ok(v);
+    }
+    // hi itself may sit just below the answer (rounding at adjacent
+    // floats): look one data value up.
+    let nb = ev.neighbors(hi)?;
+    if nb.upper.is_finite() {
+        let s = ev.probe(nb.upper)?;
+        if rank_ok(&s, k) {
+            return Ok(nb.upper);
+        }
+    }
+    Err(algo_err!("rank snap failed near {hi} (k={k})"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::select::objective::HostEvaluator;
+    use crate::stats::{sorted_order_statistic, Distribution, Rng};
+
+    #[test]
+    fn resolves_from_nearby_point() {
+        let data = [5.0, 1.0, 9.0, 3.0, 7.0];
+        for k in 1..=5 {
+            let want = sorted_order_statistic(&data, k);
+            for start in [want, want - 0.4, want + 0.4, 0.0, 10.0] {
+                let mut ev = HostEvaluator::new(&data);
+                let got = resolve(&mut ev, k, start).unwrap();
+                assert_eq!(got, want, "k={k} start={start}");
+            }
+        }
+    }
+
+    #[test]
+    fn resolves_with_heavy_duplicates() {
+        let data = [2.0, 2.0, 2.0, 2.0, 1.0, 3.0, 2.0, 2.0];
+        for k in 1..=8 {
+            let want = sorted_order_statistic(&data, k);
+            let mut ev = HostEvaluator::new(&data);
+            assert_eq!(resolve(&mut ev, k, 2.0).unwrap(), want, "k={k}");
+        }
+    }
+
+    #[test]
+    fn resolves_even_n_flat_region() {
+        // even n: starting inside the flat [x_(n/2), x_(n/2+1)] region
+        let data = [1.0, 2.0, 8.0, 9.0];
+        let mut ev = HostEvaluator::new(&data);
+        assert_eq!(resolve(&mut ev, 2, 5.0).unwrap(), 2.0);
+        let mut ev = HostEvaluator::new(&data);
+        assert_eq!(resolve(&mut ev, 3, 5.0).unwrap(), 8.0);
+    }
+
+    #[test]
+    fn random_fuzz_against_sort() {
+        let mut rng = Rng::seeded(11);
+        for trial in 0..100 {
+            let n = 1 + rng.below(300);
+            let d = Distribution::ALL[trial % 9];
+            let data = d.sample_vec(&mut rng, n);
+            let k = 1 + rng.below(n);
+            let want = sorted_order_statistic(&data, k);
+            let start = data[rng.below(n)] + rng.range(-0.5, 0.5);
+            let mut ev = HostEvaluator::new(&data);
+            let got = resolve(&mut ev, k, start).unwrap();
+            assert_eq!(got, want, "trial={trial} n={n} k={k}");
+        }
+    }
+
+    #[test]
+    fn cheap_when_start_is_converged() {
+        // post-cutting-plane case: the start has rank k already, or is one
+        // value off — must resolve in a handful of reductions.
+        let mut rng = Rng::seeded(12);
+        let data = Distribution::Normal.sample_vec(&mut rng, 4096);
+        let want = sorted_order_statistic(&data, 2048);
+        let mut ev = HostEvaluator::new(&data);
+        let got = resolve(&mut ev, 2048, want + 1e-9).unwrap();
+        assert_eq!(got, want);
+        assert!(ev.probes() <= 24, "{} probes", ev.probes());
+    }
+
+    #[test]
+    fn extreme_start_positions() {
+        let data = [4.0, -2.0, 6.5];
+        let mut ev = HostEvaluator::new(&data);
+        assert_eq!(resolve(&mut ev, 1, 1e18).unwrap(), -2.0);
+        let mut ev = HostEvaluator::new(&data);
+        assert_eq!(resolve(&mut ev, 3, -1e18).unwrap(), 6.5);
+        let mut ev = HostEvaluator::new(&data);
+        assert_eq!(resolve(&mut ev, 2, f64::INFINITY).unwrap(), 4.0);
+    }
+
+    #[test]
+    fn huge_outlier_data() {
+        let mut rng = Rng::seeded(13);
+        let mut data = Distribution::Normal.sample_vec(&mut rng, 1001);
+        data[0] = 1e18;
+        data[1] = -1e18;
+        for k in [1, 2, 500, 501, 1000, 1001] {
+            let want = sorted_order_statistic(&data, k);
+            let mut ev = HostEvaluator::new(&data);
+            assert_eq!(resolve(&mut ev, k, 0.0).unwrap(), want, "k={k}");
+        }
+    }
+
+    #[test]
+    fn rejects_bad_k() {
+        let mut ev = HostEvaluator::new(&[1.0]);
+        assert!(resolve(&mut ev, 0, 0.0).is_err());
+        assert!(resolve(&mut ev, 2, 0.0).is_err());
+    }
+}

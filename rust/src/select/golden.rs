@@ -1,0 +1,137 @@
+//! Golden-section minimization of the objective (paper §III, method 2).
+//!
+//! Uses only objective *values* — no subgradients — so it cannot skip the
+//! flat linear pieces created by outliers; the paper found it uniformly
+//! inferior to Brent and excluded it from the final comparison. We keep it
+//! as an ablation baseline.
+
+use super::exact;
+use super::objective::{Evaluator, ObjectiveSpec};
+use crate::util::PhaseTimer;
+use crate::Result;
+
+const INV_PHI: f64 = 0.618_033_988_749_894_9; // (√5 − 1)/2
+
+#[derive(Debug, Clone)]
+pub struct GoldenOptions {
+    pub max_iters: usize,
+    pub tol: f64,
+}
+
+impl Default for GoldenOptions {
+    fn default() -> Self {
+        GoldenOptions { max_iters: 300, tol: 1e-12 }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct GoldenOutcome {
+    pub value: f64,
+    pub iterations: usize,
+    pub phases: PhaseTimer,
+}
+
+pub fn golden_section(
+    ev: &mut dyn Evaluator,
+    k: usize,
+    opts: &GoldenOptions,
+) -> Result<GoldenOutcome> {
+    let n = ev.n();
+    let spec = ObjectiveSpec::order(n, k)?;
+    let mut phases = PhaseTimer::new();
+
+    let init = phases.time("iterations", || ev.init_stats())?;
+    let (mut a, mut b) = (init.min, init.max);
+    if a == b || k == 1 || k == n {
+        let v = if k == n { b } else { a };
+        return Ok(GoldenOutcome { value: v, iterations: 0, phases });
+    }
+
+    let mut c = b - INV_PHI * (b - a);
+    let mut d = a + INV_PHI * (b - a);
+    let mut fc = spec.f(&phases.time("iterations", || ev.probe(c))?);
+    let mut fd = spec.f(&phases.time("iterations", || ev.probe(d))?);
+    let mut iterations = 2;
+
+    while iterations < opts.max_iters {
+        if (b - a) <= opts.tol * a.abs().max(b.abs()).max(1.0) {
+            break;
+        }
+        if fc < fd {
+            b = d;
+            d = c;
+            fd = fc;
+            c = b - INV_PHI * (b - a);
+            if c >= d {
+                break; // interval exhausted
+            }
+            fc = spec.f(&phases.time("iterations", || ev.probe(c))?);
+        } else {
+            a = c;
+            c = d;
+            fc = fd;
+            d = a + INV_PHI * (b - a);
+            if d <= c {
+                break;
+            }
+            fd = spec.f(&phases.time("iterations", || ev.probe(d))?);
+        }
+        iterations += 1;
+    }
+
+    let approx = 0.5 * (a + b);
+    let value = phases.time("exact_fixup", || exact::resolve(ev, k, approx))?;
+    Ok(GoldenOutcome { value, iterations, phases })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::select::objective::HostEvaluator;
+    use crate::stats::{sorted_median, Distribution, Rng};
+    use crate::util::median_rank;
+
+    #[test]
+    fn matches_oracle() {
+        let mut rng = Rng::seeded(41);
+        for d in [Distribution::Uniform, Distribution::Normal, Distribution::Mixture1] {
+            let data = d.sample_vec(&mut rng, 1024);
+            let mut ev = HostEvaluator::new(&data);
+            let out =
+                golden_section(&mut ev, median_rank(1024), &GoldenOptions::default()).unwrap();
+            assert_eq!(out.value, sorted_median(&data), "{}", d.name());
+        }
+    }
+
+    #[test]
+    fn needs_more_probes_than_cutting_plane() {
+        // the paper's rationale for discarding golden section
+        let mut rng = Rng::seeded(42);
+        let data = Distribution::Normal.sample_vec(&mut rng, 8192);
+        let k = median_rank(8192);
+
+        let mut ev_g = HostEvaluator::new(&data);
+        golden_section(&mut ev_g, k, &GoldenOptions::default()).unwrap();
+        let mut ev_c = HostEvaluator::new(&data);
+        crate::select::cutting_plane::cutting_plane(
+            &mut ev_c,
+            k,
+            &crate::select::cutting_plane::CpOptions::default(),
+        )
+        .unwrap();
+        assert!(
+            ev_g.probes() > ev_c.probes(),
+            "golden {} probes vs cp {}",
+            ev_g.probes(),
+            ev_c.probes()
+        );
+    }
+
+    #[test]
+    fn duplicate_heavy_data() {
+        let data = [3.0, 3.0, 3.0, 1.0, 9.0, 3.0, 3.0];
+        let mut ev = HostEvaluator::new(&data);
+        let out = golden_section(&mut ev, 4, &GoldenOptions::default()).unwrap();
+        assert_eq!(out.value, 3.0);
+    }
+}

@@ -1,0 +1,238 @@
+//! The paper's headline method (§IV, last part): a few cutting-plane
+//! iterations shrink the pivot interval, then `copy_if` compacts the
+//! survivors into a small array `z` which is radix sorted; the answer is
+//! read out of `z` at the rank offset `k − m` with `m = #{x ≤ y_L}`.
+//!
+//! The number of CP iterations trades reduction cost against compaction +
+//! sort cost; the paper empirically stops after 7 iterations at n = 2²⁵
+//! (pivot interval under 2¹⁹ elements). `hybrid_sweep` in the ablations
+//! bench reproduces that tuning curve.
+
+use super::cutting_plane::{cutting_plane, CpOptions};
+use super::exact;
+use super::objective::{DType, Evaluator};
+use super::radix::{radix_sort_f32, radix_sort_f64};
+use crate::util::PhaseTimer;
+use crate::{algo_err, Result};
+
+#[derive(Debug, Clone)]
+pub struct HybridOptions {
+    /// CP iterations before switching to compaction + sort (paper: 7).
+    pub cp_iters: usize,
+    /// Safety valve: if the pivot interval still holds more than this
+    /// fraction of the data, keep cutting (up to `max_extra` more rounds).
+    pub max_fraction: f64,
+    pub max_extra: usize,
+}
+
+impl Default for HybridOptions {
+    fn default() -> Self {
+        HybridOptions { cp_iters: 7, max_fraction: 0.25, max_extra: 20 }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct HybridOutcome {
+    pub value: f64,
+    pub cp_iterations: usize,
+    /// |z| — elements compacted and sorted.
+    pub z_len: usize,
+    pub phases: PhaseTimer,
+}
+
+/// Hybrid cutting-plane + compaction + radix-sort selection.
+pub fn hybrid_select(
+    ev: &mut dyn Evaluator,
+    k: usize,
+    opts: &HybridOptions,
+) -> Result<HybridOutcome> {
+    let n = ev.n();
+    let mut phases = PhaseTimer::new();
+
+    // Phase 1: bounded cutting plane.
+    let mut budget = opts.cp_iters;
+    let mut extra_rounds = 0;
+    let (mut bracket, mut cp_iterations, mut maybe_exact);
+    loop {
+        let cp = cutting_plane(
+            ev,
+            k,
+            &CpOptions { stop_after: Some(budget), ..CpOptions::default() },
+        )?;
+        phases.merge(&cp.phases);
+        bracket = cp.bracket;
+        cp_iterations = cp.iterations;
+        maybe_exact = if cp.exact { Some(cp.value) } else { None };
+
+        if maybe_exact.is_some() {
+            break;
+        }
+        // Peek at the interval occupancy; one extra reduction.
+        let ic = phases.time("cp_iterations", || ev.interval(bracket.0, bracket.1))?;
+        if (ic.c_in as f64) <= opts.max_fraction * n as f64
+            || extra_rounds >= opts.max_extra
+        {
+            break;
+        }
+        extra_rounds += 1;
+        budget += 4;
+    }
+
+    if let Some(v) = maybe_exact {
+        return Ok(HybridOutcome { value: v, cp_iterations, z_len: 0, phases });
+    }
+
+    let (y_l, y_r) = bracket;
+
+    // Phase 2: occupancy + compaction (the paper's copy_if).
+    let ic = phases.time("copy_if", || ev.interval(y_l, y_r))?;
+    let m = ic.c_le as usize;
+
+    if k <= m {
+        // Only possible when y_L is still the initial minimum with
+        // multiplicity >= k (CP updates keep #{x <= y_L} < k otherwise).
+        return Ok(HybridOutcome {
+            value: phases.time("exact_fixup", || exact::resolve(ev, k, y_l))?,
+            cp_iterations,
+            z_len: 0,
+            phases,
+        });
+    }
+    if k > m + ic.c_in as usize {
+        // Answer sits at or beyond y_R (duplicates at the boundary).
+        return Ok(HybridOutcome {
+            value: phases.time("exact_fixup", || exact::resolve(ev, k, y_r))?,
+            cp_iterations,
+            z_len: 0,
+            phases,
+        });
+    }
+
+    let mut z = phases.time("copy_if", || ev.compact(y_l, y_r))?;
+    if z.len() != ic.c_in as usize {
+        return Err(algo_err!(
+            "compaction returned {} elements, interval count said {}",
+            z.len(),
+            ic.c_in
+        ));
+    }
+
+    // Phase 3: radix sort of z (key width follows the array dtype).
+    let idx = k - m - 1;
+    let value = phases.time("sort_z", || match ev.dtype() {
+        DType::F64 => {
+            radix_sort_f64(&mut z);
+            z[idx]
+        }
+        DType::F32 => {
+            let mut zf: Vec<f32> = z.iter().map(|&v| v as f32).collect();
+            radix_sort_f32(&mut zf);
+            zf[idx] as f64
+        }
+    });
+
+    Ok(HybridOutcome { value, cp_iterations, z_len: z.len(), phases })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::select::objective::HostEvaluator;
+    use crate::stats::{sorted_median, sorted_order_statistic, Distribution, Rng};
+    use crate::util::median_rank;
+
+    #[test]
+    fn matches_oracle_all_distributions() {
+        let mut rng = Rng::seeded(81);
+        for d in Distribution::ALL {
+            for n in [128usize, 1000, 8192] {
+                let data = d.sample_vec(&mut rng, n);
+                let mut ev = HostEvaluator::new(&data);
+                let out =
+                    hybrid_select(&mut ev, median_rank(n), &HybridOptions::default()).unwrap();
+                assert_eq!(out.value, sorted_median(&data), "{} n={n}", d.name());
+            }
+        }
+    }
+
+    #[test]
+    fn z_is_small_after_default_iterations() {
+        // paper: after 7 iterations z is typically 1-5% of n
+        let mut rng = Rng::seeded(82);
+        let n = 1 << 16;
+        let data = Distribution::Uniform.sample_vec(&mut rng, n);
+        let mut ev = HostEvaluator::new(&data);
+        let out = hybrid_select(&mut ev, median_rank(n), &HybridOptions::default()).unwrap();
+        assert!(
+            out.z_len <= n / 4,
+            "pivot interval too large: {} of {n}",
+            out.z_len
+        );
+    }
+
+    #[test]
+    fn random_order_statistics() {
+        let mut rng = Rng::seeded(83);
+        for _ in 0..30 {
+            let n = 64 + rng.below(4000);
+            let d = Distribution::ALL[rng.below(9)];
+            let data = d.sample_vec(&mut rng, n);
+            let k = 1 + rng.below(n);
+            let mut ev = HostEvaluator::new(&data);
+            let out = hybrid_select(&mut ev, k, &HybridOptions::default()).unwrap();
+            assert_eq!(out.value, sorted_order_statistic(&data, k), "{} n={n} k={k}", d.name());
+        }
+    }
+
+    #[test]
+    fn f32_dtype_path() {
+        let mut rng = Rng::seeded(84);
+        let data = Distribution::Normal.sample_vec(&mut rng, 4096);
+        let mut ev = HostEvaluator::new_f32(&data);
+        let out = hybrid_select(&mut ev, 2048, &HybridOptions::default()).unwrap();
+        // oracle on the rounded data
+        let rounded: Vec<f64> = data.iter().map(|&v| v as f32 as f64).collect();
+        assert_eq!(out.value, sorted_order_statistic(&rounded, 2048));
+    }
+
+    #[test]
+    fn heavy_duplicates_and_boundaries() {
+        let mut data = vec![5.0; 1000];
+        data.extend(std::iter::repeat(1.0).take(500));
+        data.extend(std::iter::repeat(9.0).take(500));
+        let mut rng = Rng::seeded(85);
+        rng.shuffle(&mut data);
+        for k in [1, 500, 501, 1000, 1500, 1501, 2000] {
+            let mut ev = HostEvaluator::new(&data);
+            let out = hybrid_select(&mut ev, k, &HybridOptions::default()).unwrap();
+            assert_eq!(out.value, sorted_order_statistic(&data, k), "k={k}");
+        }
+    }
+
+    #[test]
+    fn few_cp_iterations_forces_large_z() {
+        let mut rng = Rng::seeded(86);
+        let data = Distribution::Normal.sample_vec(&mut rng, 8192);
+        let mut ev = HostEvaluator::new(&data);
+        let out = hybrid_select(
+            &mut ev,
+            4096,
+            &HybridOptions { cp_iters: 2, max_fraction: 1.0, max_extra: 0 },
+        )
+        .unwrap();
+        assert_eq!(out.value, sorted_median(&data));
+        // with only 2 cuts the pivot interval is big — still correct
+        assert!(out.z_len > 0);
+    }
+
+    #[test]
+    fn outlier_data_still_exact() {
+        let mut rng = Rng::seeded(87);
+        let mut data = Distribution::HalfNormal.sample_vec(&mut rng, 4096);
+        data[0] = 1e9;
+        data[1] = -1e9;
+        let mut ev = HostEvaluator::new(&data);
+        let out = hybrid_select(&mut ev, 2048, &HybridOptions::default()).unwrap();
+        assert_eq!(out.value, sorted_order_statistic(&data, 2048));
+    }
+}

@@ -1,0 +1,244 @@
+//! Selection algorithms — the paper's contribution and every baseline.
+//!
+//! | paper method (Tables I–II)    | implementation                        |
+//! |-------------------------------|---------------------------------------|
+//! | Radix Sort (on GPU)           | [`radix::sort_select_f64`] baseline   |
+//! | Quickselect (on CPU)          | [`quickselect::quickselect`] + download phase |
+//! | Quickselect (on GPU)          | [`gpu_model::GpuQuickselectModel`]    |
+//! | Cutting Plane (total)         | [`hybrid::hybrid_select`] (CP+copy_if+sort) |
+//! | Bisection                     | [`bisection::bisection`]              |
+//! | Brent's minimization          | [`brent::brent_minimize`]             |
+//! | Brent's nonlinear eqn         | [`brent::brent_root`]                 |
+//! | (excluded: golden section)    | [`golden::golden_section`] (ablation) |
+//!
+//! All probe-based methods drive the [`Evaluator`] abstraction and therefore
+//! run unchanged against the host oracle, the PJRT device runtime, or the
+//! sharded multi-device simulation.
+
+pub mod bisection;
+pub mod brent;
+pub mod cutting_plane;
+pub mod exact;
+pub mod golden;
+pub mod gpu_model;
+pub mod hybrid;
+pub mod objective;
+pub mod quickselect;
+pub mod radix;
+pub mod transform;
+pub mod weighted;
+
+pub use cutting_plane::{CpOptions, CpOutcome, TracePoint};
+pub use hybrid::{HybridOptions, HybridOutcome};
+pub use objective::{
+    DType, Evaluator, HostEvaluator, InitStats, IntervalCounts, Neighbors, ObjectiveSpec,
+    ProbeStats,
+};
+
+use crate::util::PhaseTimer;
+use crate::Result;
+
+/// Selection method identifier (CLI / config / harness facing).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Method {
+    /// Pure cutting plane to convergence + exact fixup.
+    CuttingPlane,
+    /// The paper's headline hybrid: CP + copy_if + radix sort of z.
+    Hybrid,
+    Bisection,
+    BrentMinimize,
+    BrentRoot,
+    GoldenSection,
+    /// Host quickselect on downloaded data (the CPU baseline).
+    Quickselect,
+    /// Deterministic median-of-medians on downloaded data.
+    Bfprt,
+    /// Full radix sort on downloaded data, index k.
+    SortRadix,
+}
+
+impl Method {
+    pub const ALL: [Method; 9] = [
+        Method::CuttingPlane,
+        Method::Hybrid,
+        Method::Bisection,
+        Method::BrentMinimize,
+        Method::BrentRoot,
+        Method::GoldenSection,
+        Method::Quickselect,
+        Method::Bfprt,
+        Method::SortRadix,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Method::CuttingPlane => "cutting-plane",
+            Method::Hybrid => "hybrid",
+            Method::Bisection => "bisection",
+            Method::BrentMinimize => "brent-min",
+            Method::BrentRoot => "brent-root",
+            Method::GoldenSection => "golden",
+            Method::Quickselect => "quickselect",
+            Method::Bfprt => "bfprt",
+            Method::SortRadix => "sort-radix",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<Method> {
+        Method::ALL.iter().copied().find(|m| m.name() == s)
+    }
+
+    /// Probe-based methods never leave the device; data-movement methods
+    /// download the array first (the paper's "copy to CPU" cost).
+    pub fn needs_download(&self) -> bool {
+        matches!(self, Method::Quickselect | Method::Bfprt | Method::SortRadix)
+    }
+}
+
+/// Unified result of any selection run.
+#[derive(Debug, Clone)]
+pub struct SelectResult {
+    pub value: f64,
+    pub method: Method,
+    pub k: usize,
+    /// Main-loop iterations (0 for download-based methods).
+    pub iterations: usize,
+    /// Device reductions issued.
+    pub probes: u64,
+    pub phases: PhaseTimer,
+}
+
+/// Compute the k-th smallest element with the chosen method.
+pub fn order_statistic(
+    ev: &mut dyn Evaluator,
+    k: usize,
+    method: Method,
+) -> Result<SelectResult> {
+    let probes0 = ev.probes();
+    let (value, iterations, mut phases) = match method {
+        Method::CuttingPlane => {
+            let o = cutting_plane::cutting_plane(ev, k, &CpOptions::default())?;
+            (o.value, o.iterations, o.phases)
+        }
+        Method::Hybrid => {
+            let o = hybrid::hybrid_select(ev, k, &HybridOptions::default())?;
+            (o.value, o.cp_iterations, o.phases)
+        }
+        Method::Bisection => {
+            let o = bisection::bisection(ev, k, &bisection::BisectOptions::default())?;
+            (o.value, o.iterations, o.phases)
+        }
+        Method::BrentMinimize => {
+            let o = brent::brent_minimize(ev, k, &brent::BrentOptions::default())?;
+            (o.value, o.iterations, o.phases)
+        }
+        Method::BrentRoot => {
+            let o = brent::brent_root(ev, k, &brent::BrentOptions::default())?;
+            (o.value, o.iterations, o.phases)
+        }
+        Method::GoldenSection => {
+            let o = golden::golden_section(ev, k, &golden::GoldenOptions::default())?;
+            (o.value, o.iterations, o.phases)
+        }
+        Method::Quickselect => {
+            let mut phases = PhaseTimer::new();
+            let mut data = phases.time("copy_to_host", || ev.download())?;
+            let v = phases.time("algorithm", || quickselect::quickselect(&mut data, k));
+            (v, 0, phases)
+        }
+        Method::Bfprt => {
+            let mut phases = PhaseTimer::new();
+            let mut data = phases.time("copy_to_host", || ev.download())?;
+            let v = phases.time("algorithm", || quickselect::bfprt(&mut data, k));
+            (v, 0, phases)
+        }
+        Method::SortRadix => {
+            let mut phases = PhaseTimer::new();
+            let data = phases.time("copy_to_host", || ev.download())?;
+            let v = phases.time("algorithm", || match ev.dtype() {
+                DType::F64 => radix::sort_select_f64(&data, k),
+                DType::F32 => {
+                    let f: Vec<f32> = data.iter().map(|&x| x as f32).collect();
+                    radix::sort_select_f32(&f, k) as f64
+                }
+            });
+            (v, 0, phases)
+        }
+    };
+    let _ = &mut phases;
+    Ok(SelectResult {
+        value,
+        method,
+        k,
+        iterations,
+        probes: ev.probes() - probes0,
+        phases,
+    })
+}
+
+/// Median with the paper's index convention `x_([(n+1)/2])`.
+pub fn median(ev: &mut dyn Evaluator, method: Method) -> Result<SelectResult> {
+    let k = crate::util::median_rank(ev.n());
+    order_statistic(ev, k, method)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stats::{sorted_median, sorted_order_statistic, Distribution, Rng};
+
+    #[test]
+    fn every_method_matches_oracle() {
+        let mut rng = Rng::seeded(101);
+        let data = Distribution::Mixture4.sample_vec(&mut rng, 3001);
+        let want = sorted_median(&data);
+        for m in Method::ALL {
+            let mut ev = HostEvaluator::new(&data);
+            let got = median(&mut ev, m).unwrap();
+            assert_eq!(got.value, want, "{}", m.name());
+            assert_eq!(got.method, m);
+        }
+    }
+
+    #[test]
+    fn every_method_arbitrary_k() {
+        let mut rng = Rng::seeded(102);
+        let data = Distribution::Uniform.sample_vec(&mut rng, 500);
+        for k in [1, 17, 250, 499, 500] {
+            let want = sorted_order_statistic(&data, k);
+            for m in Method::ALL {
+                let mut ev = HostEvaluator::new(&data);
+                let got = order_statistic(&mut ev, k, m).unwrap();
+                assert_eq!(got.value, want, "{} k={k}", m.name());
+            }
+        }
+    }
+
+    #[test]
+    fn method_names_roundtrip() {
+        for m in Method::ALL {
+            assert_eq!(Method::from_name(m.name()), Some(m));
+        }
+        assert_eq!(Method::from_name("nope"), None);
+    }
+
+    #[test]
+    fn download_methods_report_copy_phase() {
+        let mut rng = Rng::seeded(103);
+        let data = Distribution::Normal.sample_vec(&mut rng, 10_000);
+        let mut ev = HostEvaluator::new(&data);
+        let r = median(&mut ev, Method::Quickselect).unwrap();
+        assert!(r.phases.get_ms("algorithm") >= 0.0);
+        assert_eq!(r.probes, 0, "quickselect must not issue device reductions");
+    }
+
+    #[test]
+    fn probe_methods_count_reductions() {
+        let mut rng = Rng::seeded(104);
+        let data = Distribution::Normal.sample_vec(&mut rng, 10_000);
+        let mut ev = HostEvaluator::new(&data);
+        let r = median(&mut ev, Method::CuttingPlane).unwrap();
+        assert!(r.probes >= 2, "cp must issue reductions, got {}", r.probes);
+        assert!(r.probes <= 60, "cp issued too many: {}", r.probes);
+    }
+}

@@ -1,0 +1,737 @@
+//! The convex selection objective and the `Evaluator` abstraction.
+//!
+//! Eq. (1) of the paper: `Med(x) = argmin_y f(y) = argmin_y Σ|x_i − y|`.
+//! Eq. (2) generalizes to any order statistic with the piecewise-linear
+//! penalty `u_k`. One device reduction returns the *sufficient statistics*
+//! of x against a probe y:
+//!
+//! ```text
+//!   s_lo = Σ_{x_i < y} (y − x_i)     c_lt = #{x_i < y}
+//!   s_hi = Σ_{x_i > y} (x_i − y)     c_eq = #{x_i = y},  c_gt = #{x_i > y}
+//! ```
+//!
+//! from which the host composes, for the k-th smallest element,
+//!
+//! ```text
+//!   f(y)  = w_lo·s_lo + w_hi·s_hi,     w_lo = (n−k+½)·2/n,  w_hi = (k−½)·2/n
+//!   ∂f(y) = [w_lo·c_lt − w_hi·(c_gt+c_eq),  w_lo·(c_lt+c_eq) − w_hi·c_gt]
+//! ```
+//!
+//! (the 2/n normalization makes the median case coincide exactly with
+//! Eq. (1): w_lo = w_hi = 1). The weights are arranged so the minimizer is
+//! the k-th **smallest** element: `0 ∈ ∂f(y)` ⇔ `c_lt ≤ k−1 ∧ c_lt+c_eq ≥ k`
+//! — i.e. the subgradient test *is* the rank test, which is what makes every
+//! probe-based algorithm exact rather than approximate.
+//!
+//! `Evaluator` is the only interface the algorithms see; it is implemented
+//! by [`HostEvaluator`] (CPU oracle), `runtime::DeviceEvaluator` (PJRT
+//! artifacts) and `device::ShardedEvaluator` (multi-device combine).
+
+use crate::{invalid_arg, Result};
+
+/// Sufficient statistics of one probe (one fused device reduction).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ProbeStats {
+    pub s_lo: f64,
+    pub s_hi: f64,
+    pub c_lt: u64,
+    pub c_eq: u64,
+    pub c_gt: u64,
+}
+
+impl ProbeStats {
+    pub fn n(&self) -> u64 {
+        self.c_lt + self.c_eq + self.c_gt
+    }
+
+    /// Count of elements ≤ y.
+    pub fn c_le(&self) -> u64 {
+        self.c_lt + self.c_eq
+    }
+
+    /// Combine statistics from two shards (paper §V.D: partial sums from
+    /// several GPUs are added on the CPU).
+    pub fn merge(&self, other: &ProbeStats) -> ProbeStats {
+        ProbeStats {
+            s_lo: self.s_lo + other.s_lo,
+            s_hi: self.s_hi + other.s_hi,
+            c_lt: self.c_lt + other.c_lt,
+            c_eq: self.c_eq + other.c_eq,
+            c_gt: self.c_gt + other.c_gt,
+        }
+    }
+}
+
+/// Result of the seed reduction (Algorithm 1, step 0).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct InitStats {
+    pub min: f64,
+    pub max: f64,
+    pub sum: f64,
+}
+
+impl InitStats {
+    pub fn merge(&self, other: &InitStats) -> InitStats {
+        InitStats {
+            min: self.min.min(other.min),
+            max: self.max.max(other.max),
+            sum: self.sum + other.sum,
+        }
+    }
+}
+
+/// Result of the neighbor reduction (exact-rank fixup, paper footnote 1).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Neighbors {
+    /// Largest x_i ≤ y (−inf if none).
+    pub lower: f64,
+    /// Smallest x_i ≥ y (+inf if none).
+    pub upper: f64,
+    /// #{x_i ≤ y}.
+    pub c_le: u64,
+}
+
+impl Neighbors {
+    pub fn merge(&self, other: &Neighbors) -> Neighbors {
+        Neighbors {
+            lower: self.lower.max(other.lower),
+            upper: self.upper.min(other.upper),
+            c_le: self.c_le + other.c_le,
+        }
+    }
+}
+
+/// Pivot-interval occupancy (hybrid method).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct IntervalCounts {
+    /// #{x_i ≤ lo}  — the paper's rank offset m.
+    pub c_le: u64,
+    /// #{lo < x_i < hi} — |z|.
+    pub c_in: u64,
+    /// #{x_i ≥ hi}.
+    pub c_ge: u64,
+}
+
+impl IntervalCounts {
+    pub fn merge(&self, other: &IntervalCounts) -> IntervalCounts {
+        IntervalCounts {
+            c_le: self.c_le + other.c_le,
+            c_in: self.c_in + other.c_in,
+            c_ge: self.c_ge + other.c_ge,
+        }
+    }
+}
+
+/// Value dtype of the device-resident array.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DType {
+    F32,
+    F64,
+}
+
+impl DType {
+    pub fn name(&self) -> &'static str {
+        match self {
+            DType::F32 => "f32",
+            DType::F64 => "f64",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<DType> {
+        match s {
+            "f32" => Some(DType::F32),
+            "f64" => Some(DType::F64),
+            _ => None,
+        }
+    }
+}
+
+/// The device abstraction every selection algorithm drives.
+///
+/// One call = one parallel reduction on the device (or a host pass for the
+/// oracle). `probes()` exposes the reduction counter used to verify the
+/// paper's complexity claims (`maxit + 1` reductions for Algorithm 1).
+pub trait Evaluator {
+    /// Number of (valid) elements.
+    fn n(&self) -> usize;
+
+    /// Value dtype of the backing array.
+    fn dtype(&self) -> DType;
+
+    /// Fused (min, max, sum) — Algorithm 1 step 0.
+    fn init_stats(&mut self) -> Result<InitStats>;
+
+    /// Fused objective statistics at probe y.
+    fn probe(&mut self, y: f64) -> Result<ProbeStats>;
+
+    /// Neighbor values + rank at y.
+    fn neighbors(&mut self, y: f64) -> Result<Neighbors>;
+
+    /// Occupancy of the open interval ]lo, hi[.
+    fn interval(&mut self, lo: f64, hi: f64) -> Result<IntervalCounts>;
+
+    /// Stream-compact elements in the open interval ]lo, hi[ (the paper's
+    /// `copy_if`). On the device backend this runs against the host mirror
+    /// (static-shape XLA cannot express compaction — DESIGN.md §7).
+    fn compact(&mut self, lo: f64, hi: f64) -> Result<Vec<f64>>;
+
+    /// Full download of the array (the "copy to CPU" phase of the
+    /// quickselect-on-CPU baseline).
+    fn download(&mut self) -> Result<Vec<f64>>;
+
+    /// Total number of device reductions issued so far.
+    fn probes(&self) -> u64;
+
+    /// Canonicalize a probe value through the array dtype: an f32-backed
+    /// evaluator compares in f32, so any value reported as *equal to data*
+    /// must be quantized to f32 to be the data value itself.
+    fn canon(&self, y: f64) -> f64 {
+        match self.dtype() {
+            DType::F64 => y,
+            DType::F32 => y as f32 as f64,
+        }
+    }
+}
+
+/// Weighted objective for the k-th smallest of n (Eqs. 1–2).
+#[derive(Debug, Clone, Copy)]
+pub struct ObjectiveSpec {
+    pub n: usize,
+    pub k: usize,
+    /// Weight on s_lo (elements below the probe).
+    pub w_lo: f64,
+    /// Weight on s_hi (elements above the probe).
+    pub w_hi: f64,
+}
+
+impl ObjectiveSpec {
+    /// Objective whose minimizer is the k-th smallest of n elements
+    /// (1-indexed). The median (`k = [(n+1)/2]`) yields unit weights —
+    /// exactly Eq. (1).
+    pub fn order(n: usize, k: usize) -> Result<Self> {
+        if n == 0 || k == 0 || k > n {
+            return Err(invalid_arg!("order statistic k={k} out of range for n={n}"));
+        }
+        let nf = n as f64;
+        let kf = k as f64;
+        Ok(ObjectiveSpec {
+            n,
+            k,
+            w_lo: (nf - kf + 0.5) * 2.0 / nf,
+            w_hi: (kf - 0.5) * 2.0 / nf,
+        })
+    }
+
+    /// The paper's median spec.
+    pub fn median(n: usize) -> Result<Self> {
+        Self::order(n, crate::util::median_rank(n))
+    }
+
+    /// Objective value at the probe.
+    pub fn f(&self, s: &ProbeStats) -> f64 {
+        self.w_lo * s.s_lo + self.w_hi * s.s_hi
+    }
+
+    /// Subgradient interval ∂f(y) = [g_lo, g_hi].
+    pub fn g(&self, s: &ProbeStats) -> (f64, f64) {
+        let lo = self.w_lo * s.c_lt as f64 - self.w_hi * (s.c_gt + s.c_eq) as f64;
+        let hi = self.w_lo * (s.c_lt + s.c_eq) as f64 - self.w_hi * s.c_gt as f64;
+        (lo, hi)
+    }
+
+    /// A single representative subgradient (0 if the probe is optimal).
+    pub fn g_point(&self, s: &ProbeStats) -> f64 {
+        let (lo, hi) = self.g(s);
+        if lo <= 0.0 && 0.0 <= hi {
+            0.0
+        } else if hi < 0.0 {
+            hi
+        } else {
+            lo
+        }
+    }
+
+    /// `0 ∈ ∂f(y)` ⇔ y has rank k (ties included) ⇔ probe is a minimizer.
+    pub fn is_optimal(&self, s: &ProbeStats) -> bool {
+        (s.c_lt as usize) <= self.k - 1 && (s.c_lt + s.c_eq) as usize >= self.k
+    }
+
+    /// Should the bracket move right (answer strictly above the probe)?
+    pub fn answer_above(&self, s: &ProbeStats) -> bool {
+        ((s.c_lt + s.c_eq) as usize) < self.k
+    }
+
+    /// Closed-form seed values at the data extremes from one (min,max,sum)
+    /// reduction — paper §IV: g(y_L), f(y_L), g(y_R), f(y_R) without extra
+    /// passes. Subgradients use the duplicate-safe edge −w_hi(n−1) /
+    /// +w_lo(n−1) (valid for any multiplicity of the extremes).
+    pub fn seed(&self, init: &InitStats) -> SeedValues {
+        let nf = self.n as f64;
+        SeedValues {
+            y_l: init.min,
+            y_r: init.max,
+            f_l: self.w_hi * (init.sum - nf * init.min),
+            g_l: -self.w_hi * (nf - 1.0),
+            f_r: self.w_lo * (nf * init.max - init.sum),
+            g_r: self.w_lo * (nf - 1.0),
+        }
+    }
+}
+
+/// Seed state for the cutting plane (Algorithm 1, step 0).
+#[derive(Debug, Clone, Copy)]
+pub struct SeedValues {
+    pub y_l: f64,
+    pub y_r: f64,
+    pub f_l: f64,
+    pub g_l: f64,
+    pub f_r: f64,
+    pub g_r: f64,
+}
+
+// ---------------------------------------------------------------------------
+// HostEvaluator — the CPU oracle backend
+// ---------------------------------------------------------------------------
+
+/// Backing storage in the array's native dtype (affects radix-sort key
+/// width and the device-transfer volume, mirroring the paper's
+/// float/double split).
+#[derive(Debug, Clone)]
+enum HostData {
+    F32(Vec<f32>),
+    F64(Vec<f64>),
+}
+
+/// CPU implementation of [`Evaluator`]: single fused pass per probe, f64
+/// accumulators regardless of storage dtype.
+///
+/// The probe loop is branchless (`min`/`max` selects + boolean counts) and
+/// 4-way unrolled so LLVM autovectorizes it — measured 14× over the naive
+/// branchy loop at n = 2²² (EXPERIMENTS.md §Perf/L3). This is the paper's
+/// "no divergence" point materialized on the CPU substrate.
+#[derive(Debug, Clone)]
+pub struct HostEvaluator {
+    data: HostData,
+    probes: u64,
+}
+
+macro_rules! probe_kernel {
+    ($data:expr, $y:expr) => {{
+        let y = $y;
+        let mut slo = [0.0f64; 4];
+        let mut shi = [0.0f64; 4];
+        let mut clt = [0u64; 4];
+        let mut cgt = [0u64; 4];
+        let mut ceq = [0u64; 4];
+        let mut chunks = $data.chunks_exact(4);
+        for c in &mut chunks {
+            // branchless lane-wise selects; autovectorizes
+            for l in 0..4 {
+                let d = c[l] as f64 - y;
+                slo[l] -= d.min(0.0);
+                shi[l] += d.max(0.0);
+                clt[l] += (d < 0.0) as u64;
+                cgt[l] += (d > 0.0) as u64;
+                ceq[l] += (d == 0.0) as u64;
+            }
+        }
+        let mut a = ProbeStats {
+            s_lo: slo.iter().sum(),
+            s_hi: shi.iter().sum(),
+            c_lt: clt.iter().sum(),
+            c_eq: ceq.iter().sum(),
+            c_gt: cgt.iter().sum(),
+        };
+        for &x in chunks.remainder() {
+            let d = x as f64 - y;
+            if d < 0.0 {
+                a.s_lo -= d;
+                a.c_lt += 1;
+            } else if d > 0.0 {
+                a.s_hi += d;
+                a.c_gt += 1;
+            } else if d == 0.0 {
+                a.c_eq += 1;
+            }
+        }
+        a
+    }};
+}
+
+macro_rules! interval_kernel {
+    ($data:expr, $lo:expr, $hi:expr) => {{
+        let (lo, hi) = ($lo, $hi);
+        let mut cle = [0u64; 4];
+        let mut cin = [0u64; 4];
+        let mut cge = [0u64; 4];
+        let mut chunks = $data.chunks_exact(4);
+        for c in &mut chunks {
+            for l in 0..4 {
+                let x = c[l] as f64;
+                cle[l] += (x <= lo) as u64;
+                cin[l] += ((x > lo) & (x < hi)) as u64;
+                cge[l] += (x >= hi) as u64;
+            }
+        }
+        let mut a = IntervalCounts {
+            c_le: cle.iter().sum(),
+            c_in: cin.iter().sum(),
+            c_ge: cge.iter().sum(),
+        };
+        for &x in chunks.remainder() {
+            let x = x as f64;
+            if x <= lo {
+                a.c_le += 1;
+            } else if x < hi {
+                a.c_in += 1;
+            } else {
+                a.c_ge += 1;
+            }
+        }
+        a
+    }};
+}
+
+macro_rules! neighbors_kernel {
+    ($data:expr, $y:expr) => {{
+        let y = $y;
+        let mut lo = [f64::NEG_INFINITY; 4];
+        let mut hi = [f64::INFINITY; 4];
+        let mut cle = [0u64; 4];
+        let mut chunks = $data.chunks_exact(4);
+        for c in &mut chunks {
+            for l in 0..4 {
+                let x = c[l] as f64;
+                let le = x <= y;
+                lo[l] = lo[l].max(if le { x } else { f64::NEG_INFINITY });
+                hi[l] = hi[l].min(if x >= y { x } else { f64::INFINITY });
+                cle[l] += le as u64;
+            }
+        }
+        let mut a = Neighbors {
+            lower: lo.iter().cloned().fold(f64::NEG_INFINITY, f64::max),
+            upper: hi.iter().cloned().fold(f64::INFINITY, f64::min),
+            c_le: cle.iter().sum(),
+        };
+        for &x in chunks.remainder() {
+            let x = x as f64;
+            if x <= y {
+                a.lower = a.lower.max(x);
+                a.c_le += 1;
+            }
+            if x >= y {
+                a.upper = a.upper.min(x);
+            }
+        }
+        a
+    }};
+}
+
+macro_rules! minmaxsum_kernel {
+    ($data:expr) => {{
+        let mut mn = [f64::INFINITY; 4];
+        let mut mx = [f64::NEG_INFINITY; 4];
+        let mut sm = [0.0f64; 4];
+        let mut chunks = $data.chunks_exact(4);
+        for c in &mut chunks {
+            for l in 0..4 {
+                let x = c[l] as f64;
+                mn[l] = mn[l].min(x);
+                mx[l] = mx[l].max(x);
+                sm[l] += x;
+            }
+        }
+        let mut a = InitStats {
+            min: mn.iter().cloned().fold(f64::INFINITY, f64::min),
+            max: mx.iter().cloned().fold(f64::NEG_INFINITY, f64::max),
+            sum: sm.iter().sum(),
+        };
+        for &x in chunks.remainder() {
+            let x = x as f64;
+            a.min = a.min.min(x);
+            a.max = a.max.max(x);
+            a.sum += x;
+        }
+        a
+    }};
+}
+
+impl HostEvaluator {
+    /// f64 storage.
+    pub fn new(data: &[f64]) -> Self {
+        Self { data: HostData::F64(data.to_vec()), probes: 0 }
+    }
+
+    /// f32 storage (values rounded to f32, as on a single-precision device).
+    pub fn new_f32(data: &[f64]) -> Self {
+        Self {
+            data: HostData::F32(data.iter().map(|&v| v as f32).collect()),
+            probes: 0,
+        }
+    }
+
+    pub fn from_f32(data: Vec<f32>) -> Self {
+        Self { data: HostData::F32(data), probes: 0 }
+    }
+
+    pub fn into_f64_vec(self) -> Vec<f64> {
+        match self.data {
+            HostData::F64(v) => v,
+            HostData::F32(v) => v.into_iter().map(|x| x as f64).collect(),
+        }
+    }
+
+}
+
+impl Evaluator for HostEvaluator {
+    fn n(&self) -> usize {
+        match &self.data {
+            HostData::F64(v) => v.len(),
+            HostData::F32(v) => v.len(),
+        }
+    }
+
+    fn dtype(&self) -> DType {
+        match &self.data {
+            HostData::F64(_) => DType::F64,
+            HostData::F32(_) => DType::F32,
+        }
+    }
+
+    fn init_stats(&mut self) -> Result<InitStats> {
+        if self.n() == 0 {
+            return Err(invalid_arg!("empty input"));
+        }
+        self.probes += 1;
+        Ok(match &self.data {
+            HostData::F64(v) => minmaxsum_kernel!(v),
+            HostData::F32(v) => minmaxsum_kernel!(v),
+        })
+    }
+
+    fn probe(&mut self, y: f64) -> Result<ProbeStats> {
+        self.probes += 1;
+        let y = self.canon(y); // f32 storage compares in f32, like a device
+        // NaN differences fall through uncounted in both the unrolled and
+        // the remainder loop — matching the device kernels, whose
+        // comparisons are all false on NaN.
+        Ok(match &self.data {
+            HostData::F64(v) => probe_kernel!(v, y),
+            HostData::F32(v) => probe_kernel!(v, y),
+        })
+    }
+
+    fn neighbors(&mut self, y: f64) -> Result<Neighbors> {
+        self.probes += 1;
+        let y = self.canon(y);
+        Ok(match &self.data {
+            HostData::F64(v) => neighbors_kernel!(v, y),
+            HostData::F32(v) => neighbors_kernel!(v, y),
+        })
+    }
+
+    fn interval(&mut self, lo: f64, hi: f64) -> Result<IntervalCounts> {
+        self.probes += 1;
+        let (lo, hi) = (self.canon(lo), self.canon(hi));
+        Ok(match &self.data {
+            HostData::F64(v) => interval_kernel!(v, lo, hi),
+            HostData::F32(v) => interval_kernel!(v, lo, hi),
+        })
+    }
+
+    fn compact(&mut self, lo: f64, hi: f64) -> Result<Vec<f64>> {
+        let (lo, hi) = (self.canon(lo), self.canon(hi));
+        // Branchless stream compaction (predicated write-index advance):
+        // 8× over the push loop at n = 2²² (EXPERIMENTS.md §Perf/L3).
+        let mut out = vec![0.0f64; self.n()];
+        let mut idx = 0usize;
+        match &self.data {
+            HostData::F64(v) => {
+                for &x in v {
+                    out[idx] = x;
+                    idx += ((x > lo) & (x < hi)) as usize;
+                }
+            }
+            HostData::F32(v) => {
+                for &x in v {
+                    let x = x as f64;
+                    out[idx] = x;
+                    idx += ((x > lo) & (x < hi)) as usize;
+                }
+            }
+        }
+        out.truncate(idx);
+        Ok(out)
+    }
+
+    fn download(&mut self) -> Result<Vec<f64>> {
+        Ok(match &self.data {
+            HostData::F64(v) => v.clone(),
+            HostData::F32(v) => v.iter().map(|&x| x as f64).collect(),
+        })
+    }
+
+    fn probes(&self) -> u64 {
+        self.probes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(data: &[f64]) -> HostEvaluator {
+        HostEvaluator::new(data)
+    }
+
+    #[test]
+    fn probe_stats_basic() {
+        let mut e = ev(&[1.0, 2.0, 3.0, 4.0, 5.0]);
+        let s = e.probe(3.0).unwrap();
+        assert_eq!(s, ProbeStats { s_lo: 3.0, s_hi: 3.0, c_lt: 2, c_eq: 1, c_gt: 2 });
+        assert_eq!(s.c_le(), 3);
+        assert_eq!(s.n(), 5);
+    }
+
+    #[test]
+    fn median_objective_is_eq1() {
+        let spec = ObjectiveSpec::median(5).unwrap();
+        assert_eq!(spec.k, 3);
+        assert!((spec.w_lo - 1.0).abs() < 1e-15);
+        assert!((spec.w_hi - 1.0).abs() < 1e-15);
+        let mut e = ev(&[1.0, 2.0, 3.0, 4.0, 5.0]);
+        let s = e.probe(3.0).unwrap();
+        // f(3) = |1-3|+|2-3|+0+|4-3|+|5-3| = 6
+        assert!((spec.f(&s) - 6.0).abs() < 1e-12);
+        assert!(spec.is_optimal(&s));
+        assert_eq!(spec.g_point(&s), 0.0);
+    }
+
+    #[test]
+    fn subgradient_sign_tracks_rank() {
+        let data = [10.0, 20.0, 30.0, 40.0];
+        for k in 1..=4 {
+            let spec = ObjectiveSpec::order(4, k).unwrap();
+            let mut e = ev(&data);
+            for (y, below) in [(5.0, true), (15.0, k > 1), (25.0, k > 2), (35.0, k > 3), (45.0, false)] {
+                let s = e.probe(y).unwrap();
+                assert_eq!(spec.answer_above(&s), below, "k={k} y={y}");
+            }
+            // optimality exactly at the k-th element
+            for (i, &v) in data.iter().enumerate() {
+                let s = e.probe(v).unwrap();
+                assert_eq!(spec.is_optimal(&s), i + 1 == k, "k={k} v={v}");
+            }
+        }
+    }
+
+    #[test]
+    fn optimality_with_duplicates() {
+        let data = [1.0, 2.0, 2.0, 2.0, 7.0];
+        let mut e = ev(&data);
+        let s = e.probe(2.0).unwrap();
+        for k in 2..=4 {
+            let spec = ObjectiveSpec::order(5, k).unwrap();
+            assert!(spec.is_optimal(&s), "k={k}");
+        }
+        assert!(!ObjectiveSpec::order(5, 1).unwrap().is_optimal(&s));
+        assert!(!ObjectiveSpec::order(5, 5).unwrap().is_optimal(&s));
+    }
+
+    #[test]
+    fn seed_matches_direct_evaluation() {
+        let data = [3.0, -1.0, 4.0, 1.5, 9.0, 2.5];
+        let n = data.len();
+        let spec = ObjectiveSpec::median(n).unwrap();
+        let mut e = ev(&data);
+        let init = e.init_stats().unwrap();
+        let seed = spec.seed(&init);
+        assert_eq!(seed.y_l, -1.0);
+        assert_eq!(seed.y_r, 9.0);
+        // f at the extremes equals the directly probed objective
+        let s_l = e.probe(seed.y_l).unwrap();
+        let s_r = e.probe(seed.y_r).unwrap();
+        assert!((seed.f_l - spec.f(&s_l)).abs() < 1e-9, "{} vs {}", seed.f_l, spec.f(&s_l));
+        assert!((seed.f_r - spec.f(&s_r)).abs() < 1e-9);
+        // seed subgradients are valid: within the true subdifferential
+        let (gl_lo, gl_hi) = spec.g(&s_l);
+        assert!(seed.g_l >= gl_lo - 1e-12 && seed.g_l <= gl_hi + 1e-12);
+        let (gr_lo, gr_hi) = spec.g(&s_r);
+        assert!(seed.g_r >= gr_lo - 1e-12 && seed.g_r <= gr_hi + 1e-12);
+    }
+
+    #[test]
+    fn seed_subgradient_valid_with_duplicate_extremes() {
+        let data = [1.0, 1.0, 1.0, 5.0, 9.0, 9.0];
+        let spec = ObjectiveSpec::median(6).unwrap();
+        let mut e = ev(&data);
+        let init = e.init_stats().unwrap();
+        let seed = spec.seed(&init);
+        let s_l = e.probe(1.0).unwrap();
+        let (lo, hi) = spec.g(&s_l);
+        assert!(seed.g_l >= lo && seed.g_l <= hi, "{} not in [{lo},{hi}]", seed.g_l);
+        let s_r = e.probe(9.0).unwrap();
+        let (lo, hi) = spec.g(&s_r);
+        assert!(seed.g_r >= lo && seed.g_r <= hi);
+    }
+
+    #[test]
+    fn neighbors_and_interval() {
+        let mut e = ev(&[1.0, 3.0, 3.0, 8.0]);
+        let nb = e.neighbors(4.0).unwrap();
+        assert_eq!(nb, Neighbors { lower: 3.0, upper: 8.0, c_le: 3 });
+        let nb = e.neighbors(3.0).unwrap();
+        assert_eq!(nb, Neighbors { lower: 3.0, upper: 3.0, c_le: 3 });
+        let ic = e.interval(1.0, 8.0).unwrap();
+        assert_eq!(ic, IntervalCounts { c_le: 1, c_in: 2, c_ge: 1 });
+        assert_eq!(e.compact(1.0, 8.0).unwrap(), vec![3.0, 3.0]);
+    }
+
+    #[test]
+    fn f32_storage_rounds_values() {
+        let mut e = HostEvaluator::new_f32(&[0.1, 0.2, 0.3]);
+        assert_eq!(e.dtype(), DType::F32);
+        let s = e.probe(0.1f32 as f64).unwrap();
+        assert_eq!(s.c_eq, 1);
+    }
+
+    #[test]
+    fn merge_combines_shard_stats() {
+        let mut a = ev(&[1.0, 2.0]);
+        let mut b = ev(&[3.0, 4.0]);
+        let mut whole = ev(&[1.0, 2.0, 3.0, 4.0]);
+        let y = 2.5;
+        let m = a.probe(y).unwrap().merge(&b.probe(y).unwrap());
+        assert_eq!(m, whole.probe(y).unwrap());
+        let m = a
+            .init_stats()
+            .unwrap()
+            .merge(&b.init_stats().unwrap());
+        assert_eq!(m, whole.init_stats().unwrap());
+        let m = a.neighbors(y).unwrap().merge(&b.neighbors(y).unwrap());
+        assert_eq!(m, whole.neighbors(y).unwrap());
+        let m = a
+            .interval(1.5, 3.5)
+            .unwrap()
+            .merge(&b.interval(1.5, 3.5).unwrap());
+        assert_eq!(m, whole.interval(1.5, 3.5).unwrap());
+    }
+
+    #[test]
+    fn probe_counter_increments() {
+        let mut e = ev(&[1.0, 2.0]);
+        assert_eq!(e.probes(), 0);
+        e.probe(0.0).unwrap();
+        e.init_stats().unwrap();
+        e.neighbors(0.0).unwrap();
+        e.interval(0.0, 1.0).unwrap();
+        assert_eq!(e.probes(), 4);
+    }
+
+    #[test]
+    fn order_spec_rejects_bad_k() {
+        assert!(ObjectiveSpec::order(5, 0).is_err());
+        assert!(ObjectiveSpec::order(5, 6).is_err());
+        assert!(ObjectiveSpec::order(0, 1).is_err());
+    }
+}

@@ -1,0 +1,196 @@
+//! Serial selection baselines: Hoare quickselect (median-of-3, three-way
+//! partition) and the BFPRT median-of-medians algorithm (deterministic
+//! O(n)), both operating on host-resident data.
+//!
+//! These reproduce the paper's "Quickselect (on CPU)" row; the time spent
+//! downloading the array from the device is charged separately by the
+//! harness (the paper's "copy to CPU" sub-row).
+
+/// k-th smallest (1-indexed) via iterative three-way quickselect.
+/// Operates on a scratch copy the caller provides (mutated in place).
+pub fn quickselect(data: &mut [f64], k: usize) -> f64 {
+    assert!(k >= 1 && k <= data.len(), "k={k} n={}", data.len());
+    let mut lo = 0usize;
+    let mut hi = data.len();
+    let mut rank = k - 1; // 0-indexed within [lo, hi)
+    loop {
+        let len = hi - lo;
+        if len <= 16 {
+            let s = &mut data[lo..hi];
+            insertion_sort(s);
+            return s[rank];
+        }
+        let pivot = median_of_3(data, lo, lo + len / 2, hi - 1);
+        // three-way partition (Dutch national flag) of [lo, hi)
+        let (mut i, mut j, mut p) = (lo, lo, hi);
+        while j < p {
+            if data[j] < pivot {
+                data.swap(i, j);
+                i += 1;
+                j += 1;
+            } else if data[j] > pivot {
+                p -= 1;
+                data.swap(j, p);
+            } else {
+                j += 1;
+            }
+        }
+        let n_lt = i - lo;
+        let n_eq = p - i;
+        if rank < n_lt {
+            hi = i;
+        } else if rank < n_lt + n_eq {
+            return pivot;
+        } else {
+            rank -= n_lt + n_eq;
+            lo = p;
+        }
+    }
+}
+
+fn insertion_sort(s: &mut [f64]) {
+    for i in 1..s.len() {
+        let mut j = i;
+        while j > 0 && s[j - 1] > s[j] {
+            s.swap(j - 1, j);
+            j -= 1;
+        }
+    }
+}
+
+fn median_of_3(d: &[f64], a: usize, b: usize, c: usize) -> f64 {
+    let (x, y, z) = (d[a], d[b], d[c]);
+    if (x <= y && y <= z) || (z <= y && y <= x) {
+        y
+    } else if (y <= x && x <= z) || (z <= x && x <= y) {
+        x
+    } else {
+        z
+    }
+}
+
+/// BFPRT median-of-medians: deterministic worst-case O(n) selection.
+pub fn bfprt(data: &mut [f64], k: usize) -> f64 {
+    assert!(k >= 1 && k <= data.len());
+    let n = data.len();
+    bfprt_range(data, 0, n, k - 1)
+}
+
+fn bfprt_range(data: &mut [f64], lo: usize, hi: usize, rank: usize) -> f64 {
+    loop {
+        let len = hi - lo;
+        if len <= 32 {
+            let s = &mut data[lo..hi];
+            insertion_sort(s);
+            return s[rank];
+        }
+        let pivot = median_of_medians(data, lo, hi);
+        let (mut i, mut j, mut p) = (lo, lo, hi);
+        while j < p {
+            if data[j] < pivot {
+                data.swap(i, j);
+                i += 1;
+                j += 1;
+            } else if data[j] > pivot {
+                p -= 1;
+                data.swap(j, p);
+            } else {
+                j += 1;
+            }
+        }
+        let n_lt = i - lo;
+        let n_eq = p - i;
+        if rank < n_lt {
+            return bfprt_range(data, lo, i, rank);
+        } else if rank < n_lt + n_eq {
+            return pivot;
+        } else {
+            return bfprt_range(data, p, hi, rank - n_lt - n_eq);
+        }
+    }
+}
+
+fn median_of_medians(data: &mut [f64], lo: usize, hi: usize) -> f64 {
+    let mut medians: Vec<f64> = Vec::with_capacity((hi - lo + 4) / 5);
+    let mut i = lo;
+    while i < hi {
+        let end = (i + 5).min(hi);
+        let g = &mut data[i..end];
+        insertion_sort(g);
+        medians.push(g[g.len() / 2]);
+        i = end;
+    }
+    let m = medians.len();
+    bfprt_range(&mut medians, 0, m, m / 2)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stats::{sorted_order_statistic, Distribution, Rng};
+
+    #[test]
+    fn quickselect_matches_sort() {
+        let mut rng = Rng::seeded(61);
+        for d in Distribution::ALL {
+            let data = d.sample_vec(&mut rng, 3001);
+            for k in [1, 2, 1500, 1501, 3000, 3001] {
+                let want = sorted_order_statistic(&data, k);
+                let mut scratch = data.clone();
+                assert_eq!(quickselect(&mut scratch, k), want, "{} k={k}", d.name());
+            }
+        }
+    }
+
+    #[test]
+    fn bfprt_matches_sort() {
+        let mut rng = Rng::seeded(62);
+        for d in [Distribution::Uniform, Distribution::Mixture3, Distribution::Normal] {
+            let data = d.sample_vec(&mut rng, 2500);
+            for k in [1, 1250, 2500] {
+                let want = sorted_order_statistic(&data, k);
+                let mut scratch = data.clone();
+                assert_eq!(bfprt(&mut scratch, k), want, "{} k={k}", d.name());
+            }
+        }
+    }
+
+    #[test]
+    fn adversarial_patterns() {
+        for pattern in ["sorted", "reverse", "constant", "organ"] {
+            let n = 1024usize;
+            let data: Vec<f64> = match pattern {
+                "sorted" => (0..n).map(|i| i as f64).collect(),
+                "reverse" => (0..n).rev().map(|i| i as f64).collect(),
+                "constant" => vec![5.0; n],
+                _ => (0..n).map(|i| (i.min(n - i)) as f64).collect(),
+            };
+            for k in [1, n / 2, n] {
+                let want = sorted_order_statistic(&data, k);
+                let mut s = data.clone();
+                assert_eq!(quickselect(&mut s, k), want, "{pattern} k={k}");
+                let mut s = data.clone();
+                assert_eq!(bfprt(&mut s, k), want, "{pattern} bfprt k={k}");
+            }
+        }
+    }
+
+    #[test]
+    fn tiny_inputs() {
+        assert_eq!(quickselect(&mut [3.0], 1), 3.0);
+        assert_eq!(quickselect(&mut [3.0, 1.0], 1), 1.0);
+        assert_eq!(quickselect(&mut [3.0, 1.0], 2), 3.0);
+        assert_eq!(bfprt(&mut [3.0, 1.0, 2.0], 2), 2.0);
+    }
+
+    #[test]
+    fn duplicates_heavy() {
+        let mut rng = Rng::seeded(63);
+        let data: Vec<f64> = (0..5000).map(|_| (rng.below(7)) as f64).collect();
+        for k in [1, 2500, 5000] {
+            let want = sorted_order_statistic(&data, k);
+            let mut s = data.clone();
+            assert_eq!(quickselect(&mut s, k), want);
+        }
+    }
+}

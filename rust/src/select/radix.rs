@@ -1,0 +1,192 @@
+//! LSD radix sort on order-preserving float keys — the "GPU radix sort"
+//! baseline substrate (DESIGN.md §7).
+//!
+//! Matches the algorithm family of Satish–Harris–Garland / Merrill–Grimshaw
+//! (the paper's references [29], [20]): fixed 8-bit digits, one counting
+//! pass per digit, ping-pong buffers. Like the GPU original, cost scales
+//! with key width — 4 passes for f32 vs 8 for f64 — which reproduces the
+//! paper's float/double performance split for the sort baseline.
+
+use crate::util::{f32_key, f64_key, key_f32, key_f64};
+
+const RADIX_BITS: u32 = 8;
+const BUCKETS: usize = 1 << RADIX_BITS;
+
+/// Sort f64s ascending (total order; NaNs last).
+///
+/// Perf (EXPERIMENTS.md §Perf/L3): all 8 digit histograms are gathered in
+/// a single read pass (instead of one counting pass per digit), and
+/// uniform-digit passes are skipped — the common case for data with a
+/// narrow exponent range.
+pub fn radix_sort_f64(data: &mut Vec<f64>) {
+    let n = data.len();
+    if n <= 1 {
+        return;
+    }
+    let mut keys: Vec<u64> = data.iter().map(|&v| f64_key(v)).collect();
+    let mut tmp = vec![0u64; n];
+
+    // one histogram pass for all 8 digits
+    let mut counts = [[0usize; BUCKETS]; 8];
+    for &k in &keys {
+        for (pass, c) in counts.iter_mut().enumerate() {
+            c[((k >> (pass as u32 * RADIX_BITS)) & 0xFF) as usize] += 1;
+        }
+    }
+
+    for (pass, c) in counts.iter().enumerate() {
+        if c.iter().any(|&b| b == n) {
+            continue; // all keys share this digit — skip the scatter
+        }
+        let shift = pass as u32 * RADIX_BITS;
+        let mut offsets = [0usize; BUCKETS];
+        let mut acc = 0;
+        for (o, &b) in offsets.iter_mut().zip(c) {
+            *o = acc;
+            acc += b;
+        }
+        for &k in &keys {
+            let b = ((k >> shift) & 0xFF) as usize;
+            tmp[offsets[b]] = k;
+            offsets[b] += 1;
+        }
+        std::mem::swap(&mut keys, &mut tmp);
+    }
+    for (d, k) in data.iter_mut().zip(&keys) {
+        *d = key_f64(*k);
+    }
+}
+
+/// Sort f32s ascending (total order; NaNs last).
+pub fn radix_sort_f32(data: &mut Vec<f32>) {
+    let n = data.len();
+    if n <= 1 {
+        return;
+    }
+    let mut keys: Vec<u32> = data.iter().map(|&v| f32_key(v)).collect();
+    let mut tmp = vec![0u32; n];
+
+    let mut counts = [[0usize; BUCKETS]; 4];
+    for &k in &keys {
+        for (pass, c) in counts.iter_mut().enumerate() {
+            c[((k >> (pass as u32 * RADIX_BITS)) & 0xFF) as usize] += 1;
+        }
+    }
+
+    for (pass, c) in counts.iter().enumerate() {
+        if c.iter().any(|&b| b == n) {
+            continue;
+        }
+        let shift = pass as u32 * RADIX_BITS;
+        let mut offsets = [0usize; BUCKETS];
+        let mut acc = 0;
+        for (o, &b) in offsets.iter_mut().zip(c) {
+            *o = acc;
+            acc += b;
+        }
+        for &k in &keys {
+            let b = ((k >> shift) & 0xFF) as usize;
+            tmp[offsets[b]] = k;
+            offsets[b] += 1;
+        }
+        std::mem::swap(&mut keys, &mut tmp);
+    }
+    for (d, k) in data.iter_mut().zip(&keys) {
+        *d = key_f32(*k);
+    }
+}
+
+/// Full-sort selection baseline: sort everything, index the k-th element.
+/// This is the paper's "Radix Sort (on GPU)" method row.
+pub fn sort_select_f64(data: &[f64], k: usize) -> f64 {
+    assert!(k >= 1 && k <= data.len());
+    let mut v = data.to_vec();
+    radix_sort_f64(&mut v);
+    v[k - 1]
+}
+
+/// f32 variant (4 key passes — the paper's float advantage).
+pub fn sort_select_f32(data: &[f32], k: usize) -> f32 {
+    assert!(k >= 1 && k <= data.len());
+    let mut v = data.to_vec();
+    radix_sort_f32(&mut v);
+    v[k - 1]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stats::{Distribution, Rng};
+
+    #[test]
+    fn sorts_like_std_f64() {
+        let mut rng = Rng::seeded(71);
+        for d in Distribution::ALL {
+            let mut a = d.sample_vec(&mut rng, 3000);
+            let mut b = a.clone();
+            radix_sort_f64(&mut a);
+            b.sort_by(|x, y| x.total_cmp(y));
+            assert_eq!(a, b, "{}", d.name());
+        }
+    }
+
+    #[test]
+    fn sorts_like_std_f32() {
+        let mut rng = Rng::seeded(72);
+        let mut a: Vec<f32> = (0..5000).map(|_| rng.normal() as f32).collect();
+        let mut b = a.clone();
+        radix_sort_f32(&mut a);
+        b.sort_by(|x, y| x.total_cmp(y));
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn handles_signs_zeros_infinities() {
+        let mut v = vec![0.0, -0.0, 1.0, -1.0, f64::INFINITY, f64::NEG_INFINITY, 1e-310, -1e-310];
+        radix_sort_f64(&mut v);
+        assert_eq!(v[0], f64::NEG_INFINITY);
+        assert_eq!(*v.last().unwrap(), f64::INFINITY);
+        assert!(v.windows(2).all(|w| w[0].total_cmp(&w[1]).is_le()));
+    }
+
+    #[test]
+    fn nans_sort_last() {
+        let mut v = vec![3.0, f64::NAN, 1.0, 2.0];
+        radix_sort_f64(&mut v);
+        assert_eq!(&v[..3], &[1.0, 2.0, 3.0]);
+        assert!(v[3].is_nan());
+    }
+
+    #[test]
+    fn sort_select_matches_oracle() {
+        let mut rng = Rng::seeded(73);
+        let data = Distribution::Mixture2.sample_vec(&mut rng, 999);
+        for k in [1, 500, 999] {
+            assert_eq!(
+                sort_select_f64(&data, k),
+                crate::stats::sorted_order_statistic(&data, k)
+            );
+        }
+    }
+
+    #[test]
+    fn skip_pass_optimization_preserves_order() {
+        // all values share high bytes -> several passes are skipped
+        let mut v: Vec<f64> = (0..1000).map(|i| 1000.0 + i as f64 * 1e-6).collect();
+        let mut b = v.clone();
+        let mut rng = Rng::seeded(74);
+        rng.shuffle(&mut v);
+        radix_sort_f64(&mut v);
+        b.sort_by(|x, y| x.total_cmp(y));
+        assert_eq!(v, b);
+    }
+
+    #[test]
+    fn empty_and_single() {
+        let mut v: Vec<f64> = vec![];
+        radix_sort_f64(&mut v);
+        let mut v = vec![42.0];
+        radix_sort_f64(&mut v);
+        assert_eq!(v, [42.0]);
+    }
+}

@@ -1,0 +1,137 @@
+//! Monotone-transform guard for extreme magnitudes (paper §V.D).
+//!
+//! When elements reach ~1e20, `Σ|x_i − y|` loses the bulk terms to floating
+//! point absorption. Order statistics are invariant under increasing maps,
+//! so the paper computes the median of `F(x)` with `F(t) = log(1 + t −
+//! x_(1))` and inverts. We implement the transform as an evaluator wrapper:
+//! probes are made in transformed space, and the final exact value is
+//! mapped back through F⁻¹ — then *snapped to the original data* with one
+//! extra neighbors reduction, so no precision is lost to the round trip.
+
+use super::exact;
+use super::objective::Evaluator;
+use crate::select::cutting_plane::{cutting_plane, CpOptions, CpOutcome};
+use crate::Result;
+
+/// F(t) = log1p(t − min) and its inverse, anchored at the data minimum.
+#[derive(Debug, Clone, Copy)]
+pub struct LogTransform {
+    pub min: f64,
+}
+
+impl LogTransform {
+    pub fn forward(&self, t: f64) -> f64 {
+        (t - self.min).max(0.0).ln_1p()
+    }
+
+    pub fn inverse(&self, v: f64) -> f64 {
+        v.exp_m1() + self.min
+    }
+}
+
+/// Decide whether the guard is worth applying: the paper's failure mode
+/// needs a range so wide that `max - min` rounds the bulk away.
+pub fn needs_transform(min: f64, max: f64) -> bool {
+    // Heuristic: range exceeding ~2^53 times the bulk scale means doubles
+    // absorb unit-scale terms entirely.
+    (max - min).abs() > 1e15 * min.abs().max(1.0)
+}
+
+/// Median / order statistic through the log transform.
+///
+/// Host-side: transforms a copy of the data, runs the cutting plane in
+/// transformed space, maps the result back and snaps to the nearest
+/// original data value by rank.
+pub fn select_transformed(
+    data: &[f64],
+    k: usize,
+    opts: &CpOptions,
+) -> Result<(f64, CpOutcome)> {
+    let min = data.iter().copied().fold(f64::INFINITY, f64::min);
+    let tr = LogTransform { min };
+    let tdata: Vec<f64> = data.iter().map(|&t| tr.forward(t)).collect();
+    let mut tev = super::objective::HostEvaluator::new(&tdata);
+    let out = cutting_plane(&mut tev, k, opts)?;
+    let back = tr.inverse(out.value);
+    // Snap to the exact original value: the transform+inverse round trip
+    // can be off by a few ulps, so resolve the rank on the original data.
+    let mut ev = super::objective::HostEvaluator::new(data);
+    let exactv = exact::resolve(&mut ev, k, back)?;
+    Ok((exactv, out))
+}
+
+/// Convenience: evaluator-level rank resolution after an external
+/// transformed solve (used by the device path, which uploads transformed
+/// data and snaps against the untransformed buffer).
+pub fn snap_to_rank(ev: &mut dyn Evaluator, k: usize, approx: f64) -> Result<f64> {
+    exact::resolve(ev, k, approx)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stats::{sorted_median, sorted_order_statistic, Distribution, Rng};
+    use crate::util::median_rank;
+
+    #[test]
+    fn transform_roundtrip() {
+        let tr = LogTransform { min: -3.0 };
+        for t in [-3.0, 0.0, 1.0, 1e6, 1e18] {
+            let v = tr.inverse(tr.forward(t));
+            assert!((v - t).abs() <= 1e-9 * t.abs().max(1.0), "{t} -> {v}");
+        }
+    }
+
+    #[test]
+    fn forward_is_monotone() {
+        let tr = LogTransform { min: 0.0 };
+        let pts = [0.0, 1e-6, 1.0, 100.0, 1e10, 1e20];
+        for w in pts.windows(2) {
+            assert!(tr.forward(w[0]) < tr.forward(w[1]));
+        }
+    }
+
+    #[test]
+    fn median_with_1e20_outliers() {
+        // the paper's §V.D stress case: plain summation in f64 absorbs the
+        // bulk; through the transform the median is still exact.
+        let mut rng = Rng::seeded(91);
+        let mut data = Distribution::HalfNormal.sample_vec(&mut rng, 4095);
+        data[0] = 1e20;
+        data[1] = 3e20;
+        data[2] = 7e19;
+        let want = sorted_median(&data);
+        let (got, out) =
+            select_transformed(&data, median_rank(data.len()), &CpOptions::default()).unwrap();
+        assert_eq!(got, want);
+        assert!(out.iterations < 60);
+    }
+
+    #[test]
+    fn matches_plain_path_on_benign_data() {
+        let mut rng = Rng::seeded(92);
+        let data = Distribution::Normal.sample_vec(&mut rng, 2048);
+        let k = 1024;
+        let (got, _) = select_transformed(&data, k, &CpOptions::default()).unwrap();
+        assert_eq!(got, sorted_order_statistic(&data, k));
+    }
+
+    #[test]
+    fn needs_transform_heuristic() {
+        assert!(!needs_transform(0.0, 1.0));
+        assert!(!needs_transform(-100.0, 100.0));
+        assert!(needs_transform(0.0, 1e20));
+        assert!(!needs_transform(1e20, 1.0000001e20)); // huge but narrow
+    }
+
+    #[test]
+    fn negative_bulk_with_positive_monsters() {
+        let mut rng = Rng::seeded(93);
+        let mut data: Vec<f64> = (0..999).map(|_| rng.normal() - 5.0).collect();
+        data.push(1e21);
+        let want = sorted_median(&data);
+        let (got, _) =
+            select_transformed(&data, median_rank(data.len()), &CpOptions::default()).unwrap();
+        assert_eq!(got, want);
+    }
+}

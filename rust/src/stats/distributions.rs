@@ -1,0 +1,199 @@
+//! The paper's nine test distributions (§V.A) and the §V.D outlier regimes.
+//!
+//! 1. Uniform U(0,1)                       6. Mixture 2: 50% N(0,1)+1, 50% N(100,1)
+//! 2. Normal N(0,1)                        7. Mixture 3: 90% |N(0,1)|, 10% == 10
+//! 3. Half-normal |N(0,1)|                 8. Mixture 4: 66.6% |N(0,1)|, 33.3% N(100,1)
+//! 4. Beta(2,5)                            9. Mixture 5: 50% |N(0,1)|+1, 50% N(100,1)
+//! 5. Mixture 1: 66.6% N(0,1), 33.3% N(100,1)
+//!
+//! Half-normal mixtures model regression residuals with outliers — the
+//! paper's motivating application.
+
+use super::rng::Rng;
+
+/// One of the paper's §V.A data distributions.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Distribution {
+    Uniform,
+    Normal,
+    HalfNormal,
+    Beta25,
+    Mixture1,
+    Mixture2,
+    Mixture3,
+    Mixture4,
+    Mixture5,
+}
+
+impl Distribution {
+    /// All nine, in the paper's order.
+    pub const ALL: [Distribution; 9] = [
+        Distribution::Uniform,
+        Distribution::Normal,
+        Distribution::HalfNormal,
+        Distribution::Beta25,
+        Distribution::Mixture1,
+        Distribution::Mixture2,
+        Distribution::Mixture3,
+        Distribution::Mixture4,
+        Distribution::Mixture5,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Distribution::Uniform => "uniform",
+            Distribution::Normal => "normal",
+            Distribution::HalfNormal => "halfnormal",
+            Distribution::Beta25 => "beta25",
+            Distribution::Mixture1 => "mixture1",
+            Distribution::Mixture2 => "mixture2",
+            Distribution::Mixture3 => "mixture3",
+            Distribution::Mixture4 => "mixture4",
+            Distribution::Mixture5 => "mixture5",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<Self> {
+        Self::ALL.iter().copied().find(|d| d.name() == s)
+    }
+
+    /// Draw one sample.
+    pub fn sample(&self, rng: &mut Rng) -> f64 {
+        match self {
+            Distribution::Uniform => rng.f64(),
+            Distribution::Normal => rng.normal(),
+            Distribution::HalfNormal => rng.normal().abs(),
+            Distribution::Beta25 => rng.beta(2.0, 5.0),
+            Distribution::Mixture1 => {
+                if rng.f64() < 2.0 / 3.0 {
+                    rng.normal()
+                } else {
+                    100.0 + rng.normal()
+                }
+            }
+            Distribution::Mixture2 => {
+                if rng.f64() < 0.5 {
+                    rng.normal() + 1.0
+                } else {
+                    100.0 + rng.normal()
+                }
+            }
+            Distribution::Mixture3 => {
+                if rng.f64() < 0.9 {
+                    rng.normal().abs()
+                } else {
+                    10.0
+                }
+            }
+            Distribution::Mixture4 => {
+                if rng.f64() < 2.0 / 3.0 {
+                    rng.normal().abs()
+                } else {
+                    100.0 + rng.normal()
+                }
+            }
+            Distribution::Mixture5 => {
+                if rng.f64() < 0.5 {
+                    rng.normal().abs() + 1.0
+                } else {
+                    100.0 + rng.normal()
+                }
+            }
+        }
+    }
+
+    /// Sample a full vector.
+    pub fn sample_vec(&self, rng: &mut Rng, n: usize) -> Vec<f64> {
+        (0..n).map(|_| self.sample(rng)).collect()
+    }
+}
+
+/// Outlier injection for the §V.D sensitivity experiments: set `count`
+/// random elements to `magnitude`.
+#[derive(Debug, Clone, Copy)]
+pub struct OutlierSpec {
+    pub magnitude: f64,
+    pub count: usize,
+}
+
+impl OutlierSpec {
+    pub fn inject(&self, rng: &mut Rng, data: &mut [f64]) {
+        for _ in 0..self.count {
+            let i = rng.below(data.len());
+            data[i] = self.magnitude;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stats::sorted_median;
+
+    #[test]
+    fn names_roundtrip() {
+        for d in Distribution::ALL {
+            assert_eq!(Distribution::from_name(d.name()), Some(d));
+        }
+        assert_eq!(Distribution::from_name("bogus"), None);
+    }
+
+    #[test]
+    fn uniform_median_near_half() {
+        let mut rng = Rng::seeded(1);
+        let v = Distribution::Uniform.sample_vec(&mut rng, 50_000);
+        assert!((sorted_median(&v) - 0.5).abs() < 0.01);
+    }
+
+    #[test]
+    fn halfnormal_is_nonnegative() {
+        let mut rng = Rng::seeded(2);
+        let v = Distribution::HalfNormal.sample_vec(&mut rng, 10_000);
+        assert!(v.iter().all(|&x| x >= 0.0));
+        // median of |N(0,1)| is ~0.6745
+        assert!((sorted_median(&v) - 0.6745).abs() < 0.03);
+    }
+
+    #[test]
+    fn mixture1_is_bimodal() {
+        let mut rng = Rng::seeded(3);
+        let v = Distribution::Mixture1.sample_vec(&mut rng, 30_000);
+        let hi = v.iter().filter(|&&x| x > 50.0).count() as f64 / v.len() as f64;
+        assert!((hi - 1.0 / 3.0).abs() < 0.02, "hi fraction {hi}");
+        // median stays in the bulk (2/3 below 50)
+        assert!(sorted_median(&v) < 10.0);
+    }
+
+    #[test]
+    fn mixture2_median_near_boundary() {
+        // 50/50 mixture: lower median sits at the top of the N(1,1) bulk
+        let mut rng = Rng::seeded(4);
+        let v = Distribution::Mixture2.sample_vec(&mut rng, 30_000);
+        let m = sorted_median(&v);
+        assert!(m > 1.0 && m < 20.0, "median {m}");
+    }
+
+    #[test]
+    fn mixture3_duplicates_at_ten() {
+        let mut rng = Rng::seeded(5);
+        let v = Distribution::Mixture3.sample_vec(&mut rng, 10_000);
+        let tens = v.iter().filter(|&&x| x == 10.0).count();
+        assert!(tens > 800 && tens < 1200, "{tens}");
+    }
+
+    #[test]
+    fn beta_bounded() {
+        let mut rng = Rng::seeded(6);
+        let v = Distribution::Beta25.sample_vec(&mut rng, 10_000);
+        assert!(v.iter().all(|&x| (0.0..=1.0).contains(&x)));
+    }
+
+    #[test]
+    fn outlier_injection_replaces_elements() {
+        let mut rng = Rng::seeded(7);
+        let mut v = vec![0.0; 1000];
+        OutlierSpec { magnitude: 1e9, count: 5 }.inject(&mut rng, &mut v);
+        let big = v.iter().filter(|&&x| x == 1e9).count();
+        assert!(big >= 1 && big <= 5); // collisions possible
+    }
+}

@@ -1,0 +1,43 @@
+//! Data-generation substrate: deterministic RNG and the paper's nine test
+//! distributions (§V.A), plus outlier injection for the §V.D experiments.
+
+pub mod distributions;
+pub mod rng;
+pub mod robust;
+
+pub use distributions::{Distribution, OutlierSpec};
+pub use rng::Rng;
+
+/// Exact (sort-based) k-th order statistic, 1-indexed — the test oracle.
+pub fn sorted_order_statistic(data: &[f64], k: usize) -> f64 {
+    assert!(k >= 1 && k <= data.len());
+    let mut v = data.to_vec();
+    v.sort_by(|a, b| a.total_cmp(b));
+    v[k - 1]
+}
+
+/// Exact lower median, `x_([(n+1)/2])` — the paper's definition.
+pub fn sorted_median(data: &[f64]) -> f64 {
+    sorted_order_statistic(data, crate::util::median_rank(data.len()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn order_statistic_oracle() {
+        let v = [5.0, 1.0, 4.0, 2.0, 3.0];
+        assert_eq!(sorted_order_statistic(&v, 1), 1.0);
+        assert_eq!(sorted_order_statistic(&v, 3), 3.0);
+        assert_eq!(sorted_order_statistic(&v, 5), 5.0);
+        assert_eq!(sorted_median(&v), 3.0);
+    }
+
+    #[test]
+    fn even_n_uses_lower_median() {
+        let v = [4.0, 1.0, 3.0, 2.0];
+        // [(4+1)/2] = 2 -> x_(2) = 2
+        assert_eq!(sorted_median(&v), 2.0);
+    }
+}

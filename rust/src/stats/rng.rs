@@ -1,0 +1,233 @@
+//! PCG64 (XSL-RR 128/64) pseudo-random generator.
+//!
+//! Deterministic, seedable, dependency-free. All experiments in the harness
+//! derive their streams from explicit seeds so every table/figure is exactly
+//! reproducible run-to-run.
+
+/// PCG XSL-RR 128/64.
+#[derive(Debug, Clone)]
+pub struct Rng {
+    state: u128,
+    inc: u128,
+}
+
+const MUL: u128 = 0x2360_ed05_1fc6_5da4_4385_df64_9fcc_f645;
+
+impl Rng {
+    /// Create from a 64-bit seed (stream constant fixed).
+    pub fn seeded(seed: u64) -> Self {
+        let mut r = Rng {
+            state: 0,
+            inc: ((seed as u128) << 1) | 1,
+        };
+        r.state = r.state.wrapping_mul(MUL).wrapping_add(r.inc);
+        r.state = r.state.wrapping_add(0x853c_49e6_748f_ea9b_da3e_39cb_94b9_5bdb ^ (seed as u128));
+        r.state = r.state.wrapping_mul(MUL).wrapping_add(r.inc);
+        r
+    }
+
+    /// Derive an independent child stream (for shards / parallel workers).
+    pub fn split(&mut self, tag: u64) -> Rng {
+        let s = self.next_u64() ^ tag.rotate_left(17);
+        Rng::seeded(s)
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_mul(MUL).wrapping_add(self.inc);
+        let rot = (self.state >> 122) as u32;
+        let xored = ((self.state >> 64) as u64) ^ (self.state as u64);
+        xored.rotate_right(rot)
+    }
+
+    /// Uniform in [0, 1).
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in [lo, hi).
+    #[inline]
+    pub fn range(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.f64()
+    }
+
+    /// Uniform integer in [0, n).
+    #[inline]
+    pub fn below(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        // Lemire's multiply-shift rejection-free approximation is fine here
+        // (bench/test usage, not cryptography).
+        ((self.next_u64() as u128 * n as u128) >> 64) as usize
+    }
+
+    /// Standard normal via Box–Muller (cached second value dropped for
+    /// simplicity; one transcendental pair per draw).
+    #[inline]
+    pub fn normal(&mut self) -> f64 {
+        let u1 = (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64);
+        let u1 = u1.max(1e-300); // avoid log(0)
+        let u2 = self.f64();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+    }
+
+    /// Gamma(shape a >= 1e-3) via Marsaglia–Tsang; used for Beta sampling.
+    pub fn gamma(&mut self, a: f64) -> f64 {
+        if a < 1.0 {
+            // boost: Gamma(a) = Gamma(a+1) * U^(1/a)
+            let g = self.gamma(a + 1.0);
+            let u = self.f64().max(1e-300);
+            return g * u.powf(1.0 / a);
+        }
+        let d = a - 1.0 / 3.0;
+        let c = 1.0 / (9.0 * d).sqrt();
+        loop {
+            let x = self.normal();
+            let v = (1.0 + c * x).powi(3);
+            if v <= 0.0 {
+                continue;
+            }
+            let u = self.f64().max(1e-300);
+            if u.ln() < 0.5 * x * x + d - d * v + d * v.ln() {
+                return d * v;
+            }
+        }
+    }
+
+    /// Beta(a, b).
+    pub fn beta(&mut self, a: f64, b: f64) -> f64 {
+        let x = self.gamma(a);
+        let y = self.gamma(b);
+        x / (x + y)
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, v: &mut [T]) {
+        for i in (1..v.len()).rev() {
+            let j = self.below(i + 1);
+            v.swap(i, j);
+        }
+    }
+
+    /// Sample `k` distinct indices from [0, n) (partial Fisher–Yates).
+    pub fn sample_indices(&mut self, n: usize, k: usize) -> Vec<usize> {
+        assert!(k <= n);
+        // For small k relative to n use rejection, else shuffle.
+        if k * 4 < n {
+            let mut out = Vec::with_capacity(k);
+            while out.len() < k {
+                let c = self.below(n);
+                if !out.contains(&c) {
+                    out.push(c);
+                }
+            }
+            out
+        } else {
+            let mut idx: Vec<usize> = (0..n).collect();
+            self.shuffle(&mut idx);
+            idx.truncate(k);
+            idx
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut a = Rng::seeded(7);
+        let mut b = Rng::seeded(7);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_diverge() {
+        let mut a = Rng::seeded(1);
+        let mut b = Rng::seeded(2);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert_eq!(same, 0);
+    }
+
+    #[test]
+    fn uniform_mean_and_bounds() {
+        let mut r = Rng::seeded(3);
+        let n = 100_000;
+        let mut s = 0.0;
+        for _ in 0..n {
+            let v = r.f64();
+            assert!((0.0..1.0).contains(&v));
+            s += v;
+        }
+        let mean = s / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean={mean}");
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::seeded(4);
+        let n = 200_000;
+        let (mut s, mut s2) = (0.0, 0.0);
+        for _ in 0..n {
+            let v = r.normal();
+            s += v;
+            s2 += v * v;
+        }
+        let mean = s / n as f64;
+        let var = s2 / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.02, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.03, "var={var}");
+    }
+
+    #[test]
+    fn beta_2_5_mean() {
+        let mut r = Rng::seeded(5);
+        let n = 100_000;
+        let mut s = 0.0;
+        for _ in 0..n {
+            let v = r.beta(2.0, 5.0);
+            assert!((0.0..=1.0).contains(&v));
+            s += v;
+        }
+        // E[Beta(2,5)] = 2/7
+        assert!((s / n as f64 - 2.0 / 7.0).abs() < 0.01);
+    }
+
+    #[test]
+    fn below_is_in_range_and_roughly_uniform() {
+        let mut r = Rng::seeded(6);
+        let mut counts = [0usize; 10];
+        for _ in 0..100_000 {
+            counts[r.below(10)] += 1;
+        }
+        for c in counts {
+            assert!((8_000..12_000).contains(&c), "{counts:?}");
+        }
+    }
+
+    #[test]
+    fn sample_indices_distinct() {
+        let mut r = Rng::seeded(8);
+        for (n, k) in [(100, 3), (10, 9), (10, 10), (1000, 100)] {
+            let s = r.sample_indices(n, k);
+            assert_eq!(s.len(), k);
+            let mut u = s.clone();
+            u.sort_unstable();
+            u.dedup();
+            assert_eq!(u.len(), k);
+            assert!(s.iter().all(|&i| i < n));
+        }
+    }
+
+    #[test]
+    fn split_streams_are_independent() {
+        let mut base = Rng::seeded(9);
+        let mut a = base.split(1);
+        let mut b = base.split(2);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert!(same <= 1);
+    }
+}

@@ -1,0 +1,240 @@
+//! Robust scale and location estimators built on the selection machinery.
+//!
+//! The paper's applications consume these: the MAD (median absolute
+//! deviation, the paper's ref [26] Rousseeuw–Croux subject), trimmed means,
+//! and the IQR. Each costs O(1) selections — exactly the workload the
+//! cutting-plane backend accelerates — and works through any
+//! [`MedianSelector`](crate::regression::MedianSelector).
+
+use crate::regression::MedianSelector;
+use crate::util::median_rank;
+use crate::{invalid_arg, Result};
+
+/// Consistency factor making MAD estimate σ for normal data.
+pub const MAD_NORMAL_CONSISTENCY: f64 = 1.4826;
+
+/// Median absolute deviation: `MAD = Med(|x_i − Med(x)|)`.
+///
+/// Two selections + one elementwise map (on the device backend the map is
+/// one fused kernel and the deviations never leave the accelerator).
+pub fn mad(x: &[f64], selector: &mut dyn MedianSelector) -> Result<f64> {
+    if x.is_empty() {
+        return Err(invalid_arg!("empty input"));
+    }
+    let med = selector.median(x)?;
+    let dev: Vec<f64> = x.iter().map(|&v| (v - med).abs()).collect();
+    selector.median(&dev)
+}
+
+/// Normal-consistent robust σ estimate.
+pub fn mad_sigma(x: &[f64], selector: &mut dyn MedianSelector) -> Result<f64> {
+    Ok(MAD_NORMAL_CONSISTENCY * mad(x, selector)?)
+}
+
+/// Interquartile range via two order statistics.
+pub fn iqr(x: &[f64], selector: &mut dyn MedianSelector) -> Result<f64> {
+    let n = x.len();
+    if n < 4 {
+        return Err(invalid_arg!("need n >= 4 for IQR"));
+    }
+    let k25 = ((0.25 * n as f64).ceil() as usize).clamp(1, n);
+    let k75 = ((0.75 * n as f64).ceil() as usize).clamp(1, n);
+    Ok(selector.order_statistic(x, k75)? - selector.order_statistic(x, k25)?)
+}
+
+/// α-trimmed mean: average of the values between the α- and (1−α)-order
+/// statistics, computed with two selections plus one thresholded pass (the
+/// same pattern as the paper's LTS ρ-trick).
+pub fn trimmed_mean(
+    x: &[f64],
+    alpha: f64,
+    selector: &mut dyn MedianSelector,
+) -> Result<f64> {
+    let n = x.len();
+    if n == 0 {
+        return Err(invalid_arg!("empty input"));
+    }
+    if !(0.0..0.5).contains(&alpha) {
+        return Err(invalid_arg!("alpha {alpha} outside [0, 0.5)"));
+    }
+    let cut = (alpha * n as f64).floor() as usize;
+    if cut == 0 {
+        return Ok(x.iter().sum::<f64>() / n as f64);
+    }
+    let lo = selector.order_statistic(x, cut + 1)?;
+    let hi = selector.order_statistic(x, n - cut)?;
+    // one pass: sum strictly-interior values and count boundary duplicates
+    let (mut sum, mut count) = (0.0, 0usize);
+    let (mut n_lo, mut n_hi) = (0usize, 0usize);
+    for &v in x {
+        if v > lo && v < hi {
+            sum += v;
+            count += 1;
+        } else if v == lo {
+            n_lo += 1;
+        } else if v == hi {
+            n_hi += 1;
+        }
+    }
+    // include the right multiplicity of the boundary values so exactly
+    // n − 2·cut values participate
+    let below = x.iter().filter(|&&v| v < lo).count();
+    let take_lo = (cut + 1).saturating_sub(below).min(n_lo).min(n - 2 * cut);
+    let mut remaining = n - 2 * cut - count - take_lo.min(n - 2 * cut);
+    let take_hi = remaining.min(n_hi);
+    remaining -= take_hi;
+    if remaining != 0 {
+        // duplicates straddle both cuts; fall back to the exact definition
+        let mut v = x.to_vec();
+        v.sort_by(|a, b| a.total_cmp(b));
+        let inner = &v[cut..n - cut];
+        return Ok(inner.iter().sum::<f64>() / inner.len() as f64);
+    }
+    sum += lo * take_lo as f64 + hi * take_hi as f64;
+    count += take_lo + take_hi;
+    Ok(sum / count as f64)
+}
+
+/// Winsorized mean: clamp to the [α, 1−α] order statistics, then average.
+pub fn winsorized_mean(
+    x: &[f64],
+    alpha: f64,
+    selector: &mut dyn MedianSelector,
+) -> Result<f64> {
+    let n = x.len();
+    if n == 0 {
+        return Err(invalid_arg!("empty input"));
+    }
+    if !(0.0..0.5).contains(&alpha) {
+        return Err(invalid_arg!("alpha {alpha} outside [0, 0.5)"));
+    }
+    let cut = (alpha * n as f64).floor() as usize;
+    if cut == 0 {
+        return Ok(x.iter().sum::<f64>() / n as f64);
+    }
+    let lo = selector.order_statistic(x, cut + 1)?;
+    let hi = selector.order_statistic(x, n - cut)?;
+    Ok(x.iter().map(|&v| v.clamp(lo, hi)).sum::<f64>() / n as f64)
+}
+
+/// Standardized robust z-scores: `(x − Med) / (1.4826·MAD)`; the classic
+/// outlier detector the regression RLS step uses.
+pub fn robust_zscores(x: &[f64], selector: &mut dyn MedianSelector) -> Result<Vec<f64>> {
+    let med = selector.median(x)?;
+    let sigma = mad_sigma(x, selector)?;
+    if sigma <= 0.0 {
+        return Err(invalid_arg!("MAD is zero — degenerate sample"));
+    }
+    Ok(x.iter().map(|&v| (v - med) / sigma).collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::regression::HostSelector;
+    use crate::stats::{sorted_median, Distribution, Rng};
+    use crate::util;
+
+    fn sel() -> HostSelector {
+        HostSelector::default()
+    }
+
+    #[test]
+    fn mad_of_normal_estimates_sigma() {
+        let mut rng = Rng::seeded(221);
+        let x: Vec<f64> = (0..50_000).map(|_| 3.0 * rng.normal() + 10.0).collect();
+        let s = mad_sigma(&x, &mut sel()).unwrap();
+        assert!((s - 3.0).abs() < 0.05, "sigma estimate {s}");
+    }
+
+    #[test]
+    fn mad_ignores_30_percent_outliers() {
+        let mut rng = Rng::seeded(222);
+        let mut x: Vec<f64> = (0..10_000).map(|_| rng.normal()).collect();
+        for i in 0..3000 {
+            x[i] = 1e6 + rng.normal();
+        }
+        let s = mad_sigma(&x, &mut sel()).unwrap();
+        assert!(s < 10.0, "MAD blown up by outliers: {s}");
+    }
+
+    #[test]
+    fn mad_matches_direct_definition() {
+        let mut rng = Rng::seeded(223);
+        let x = Distribution::Mixture1.sample_vec(&mut rng, 1001);
+        let got = mad(&x, &mut sel()).unwrap();
+        let med = sorted_median(&x);
+        let dev: Vec<f64> = x.iter().map(|&v| (v - med).abs()).collect();
+        assert_eq!(got, sorted_median(&dev));
+    }
+
+    #[test]
+    fn iqr_on_uniform() {
+        let mut rng = Rng::seeded(224);
+        let x = Distribution::Uniform.sample_vec(&mut rng, 40_000);
+        let got = iqr(&x, &mut sel()).unwrap();
+        assert!((got - 0.5).abs() < 0.01, "IQR {got}");
+    }
+
+    #[test]
+    fn trimmed_mean_matches_sorted_definition() {
+        let mut rng = Rng::seeded(225);
+        for trial in 0..40 {
+            let n = 8 + rng.below(500);
+            let x = Distribution::ALL[trial % 9].sample_vec(&mut rng, n);
+            for alpha in [0.05, 0.1, 0.25] {
+                let got = trimmed_mean(&x, alpha, &mut sel()).unwrap();
+                let mut v = x.clone();
+                v.sort_by(|a, b| a.total_cmp(b));
+                let cut = (alpha * n as f64).floor() as usize;
+                let inner = &v[cut..n - cut];
+                let want = inner.iter().sum::<f64>() / inner.len() as f64;
+                assert!(
+                    (got - want).abs() <= 1e-9 * want.abs().max(1.0),
+                    "trial {trial} n={n} alpha={alpha}: {got} vs {want}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn trimmed_mean_heavy_duplicates() {
+        let x = vec![1.0, 2.0, 2.0, 2.0, 2.0, 2.0, 2.0, 9.0];
+        let got = trimmed_mean(&x, 0.25, &mut sel()).unwrap();
+        // sorted: cut 2 from each side -> [2,2,2,2] -> mean 2
+        assert_eq!(got, 2.0);
+    }
+
+    #[test]
+    fn winsorized_mean_bounds_outliers() {
+        let mut rng = Rng::seeded(226);
+        let mut x: Vec<f64> = (0..1000).map(|_| rng.normal()).collect();
+        x[0] = 1e9;
+        let got = winsorized_mean(&x, 0.05, &mut sel()).unwrap();
+        assert!(got.abs() < 0.5, "winsorized mean {got}");
+    }
+
+    #[test]
+    fn zscores_flag_outliers() {
+        let mut rng = Rng::seeded(227);
+        let mut x: Vec<f64> = (0..2000).map(|_| rng.normal()).collect();
+        x[7] = 50.0;
+        let z = robust_zscores(&x, &mut sel()).unwrap();
+        assert!(z[7] > 10.0);
+        let flagged = z.iter().filter(|v| v.abs() > 3.5).count();
+        assert!(flagged < 20, "too many false positives: {flagged}");
+    }
+
+    #[test]
+    fn degenerate_inputs() {
+        assert!(mad(&[], &mut sel()).is_err());
+        assert!(iqr(&[1.0, 2.0], &mut sel()).is_err());
+        assert!(trimmed_mean(&[1.0], 0.6, &mut sel()).is_err());
+        assert!(robust_zscores(&[5.0; 10], &mut sel()).is_err()); // MAD = 0
+        // alpha = 0 is the plain mean
+        let m = trimmed_mean(&[1.0, 2.0, 3.0], 0.0, &mut sel()).unwrap();
+        assert!((m - 2.0).abs() < 1e-12);
+        let _ = util::median_rank(1);
+        let _ = median_rank(2);
+    }
+}

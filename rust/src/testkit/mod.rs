@@ -1,0 +1,218 @@
+//! Property-testing mini-framework (proptest is unavailable offline —
+//! DESIGN.md §7).
+//!
+//! Provides seeded generators over the paper's data regimes and a
+//! `forall`-style runner with failure shrinking: on a counterexample the
+//! runner tries to shrink the input vector (halving, then element
+//! simplification) before reporting, so failures are small and actionable.
+
+use crate::stats::{Distribution, Rng};
+
+/// A generated selection-problem case.
+#[derive(Debug, Clone)]
+pub struct Case {
+    pub data: Vec<f64>,
+    pub k: usize,
+    pub label: String,
+}
+
+/// Configurable case generator.
+#[derive(Debug, Clone)]
+pub struct CaseGen {
+    pub min_n: usize,
+    pub max_n: usize,
+    /// Probability of injecting huge outliers (paper §V.D regime).
+    pub outlier_prob: f64,
+    /// Probability of heavy duplication.
+    pub dup_prob: f64,
+}
+
+impl Default for CaseGen {
+    fn default() -> Self {
+        CaseGen { min_n: 1, max_n: 600, outlier_prob: 0.25, dup_prob: 0.25 }
+    }
+}
+
+impl CaseGen {
+    pub fn generate(&self, rng: &mut Rng) -> Case {
+        let n = self.min_n + rng.below(self.max_n - self.min_n + 1);
+        let dist = Distribution::ALL[rng.below(9)];
+        let mut data = dist.sample_vec(rng, n);
+        let mut label = dist.name().to_string();
+        if rng.f64() < self.dup_prob && n >= 4 {
+            // duplicate a random value across a random span
+            let v = data[rng.below(n)];
+            let reps = 1 + rng.below(n / 2);
+            for _ in 0..reps {
+                let i = rng.below(n);
+                data[i] = v;
+            }
+            label.push_str("+dups");
+        }
+        if rng.f64() < self.outlier_prob {
+            let mag = [1e6, 1e9, 1e12, -1e9][rng.below(4)];
+            let count = 1 + rng.below(3.min(n));
+            for _ in 0..count {
+                let i = rng.below(n);
+                data[i] = mag;
+            }
+            label.push_str("+outliers");
+        }
+        let k = 1 + rng.below(n);
+        Case { data, k, label }
+    }
+}
+
+/// Outcome of a property run.
+#[derive(Debug)]
+pub enum PropResult {
+    Ok { cases: usize },
+    Failed { case: Case, message: String, shrunk: bool },
+}
+
+/// Run `prop` over `cases` generated cases; shrink on failure.
+///
+/// `prop` returns `Err(msg)` to signal a counterexample.
+pub fn forall(
+    seed: u64,
+    cases: usize,
+    gen: &CaseGen,
+    mut prop: impl FnMut(&Case) -> Result<(), String>,
+) -> PropResult {
+    let mut rng = Rng::seeded(seed);
+    for _ in 0..cases {
+        let case = gen.generate(&mut rng);
+        if let Err(message) = prop(&case) {
+            let (case, shrunk) = shrink(case, &mut prop);
+            return PropResult::Failed { case, message, shrunk };
+        }
+    }
+    PropResult::Ok { cases }
+}
+
+/// Assert-style wrapper for tests.
+pub fn check(seed: u64, cases: usize, gen: &CaseGen, prop: impl FnMut(&Case) -> Result<(), String>) {
+    match forall(seed, cases, gen, prop) {
+        PropResult::Ok { .. } => {}
+        PropResult::Failed { case, message, shrunk } => {
+            panic!(
+                "property failed ({}): {message}\n  n={} k={} label={} data={:?}",
+                if shrunk { "shrunk" } else { "unshrunk" },
+                case.data.len(),
+                case.k,
+                case.label,
+                &case.data[..case.data.len().min(24)]
+            );
+        }
+    }
+}
+
+fn shrink(
+    mut case: Case,
+    prop: &mut impl FnMut(&Case) -> Result<(), String>,
+) -> (Case, bool) {
+    let mut shrunk = false;
+    // 1) halve the vector while the failure persists
+    loop {
+        if case.data.len() <= 1 {
+            break;
+        }
+        let half = case.data.len() / 2;
+        let mut tried = false;
+        for keep_front in [true, false] {
+            let data: Vec<f64> = if keep_front {
+                case.data[..half].to_vec()
+            } else {
+                case.data[half..].to_vec()
+            };
+            if data.is_empty() {
+                continue;
+            }
+            let k = case.k.min(data.len());
+            let cand = Case { data, k, label: case.label.clone() };
+            if prop(&cand).is_err() {
+                case = cand;
+                shrunk = true;
+                tried = true;
+                break;
+            }
+        }
+        if !tried {
+            break;
+        }
+    }
+    // 2) simplify elements toward 0/1 while the failure persists
+    for i in 0..case.data.len() {
+        for candidate in [0.0, 1.0] {
+            if case.data[i] == candidate {
+                continue;
+            }
+            let mut cand = case.clone();
+            cand.data[i] = candidate;
+            if prop(&cand).is_err() {
+                case = cand;
+                shrunk = true;
+            }
+        }
+    }
+    (case, shrunk)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let r = forall(1, 50, &CaseGen::default(), |c| {
+            if c.k >= 1 && c.k <= c.data.len() {
+                Ok(())
+            } else {
+                Err("k out of range".into())
+            }
+        });
+        assert!(matches!(r, PropResult::Ok { cases: 50 }));
+    }
+
+    #[test]
+    fn failing_property_shrinks() {
+        // fail whenever the vector contains a value > 100
+        let r = forall(
+            2,
+            200,
+            &CaseGen { outlier_prob: 1.0, ..Default::default() },
+            |c| {
+                if c.data.iter().any(|&v| v.abs() > 100.0) {
+                    Err("big value".into())
+                } else {
+                    Ok(())
+                }
+            },
+        );
+        match r {
+            PropResult::Failed { case, shrunk, .. } => {
+                assert!(shrunk);
+                // shrinking should get us to a tiny case
+                assert!(case.data.len() <= 8, "shrunk to {} elems", case.data.len());
+            }
+            _ => panic!("property should have failed"),
+        }
+    }
+
+    #[test]
+    fn generator_respects_bounds() {
+        let gen = CaseGen { min_n: 5, max_n: 9, ..Default::default() };
+        let mut rng = Rng::seeded(3);
+        for _ in 0..100 {
+            let c = gen.generate(&mut rng);
+            assert!((5..=9).contains(&c.data.len()));
+            assert!(c.k >= 1 && c.k <= c.data.len());
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn check_panics_on_failure() {
+        check(4, 50, &CaseGen::default(), |_| Err("always".into()));
+    }
+}

@@ -1,0 +1,134 @@
+//! Order-preserving integer keys for IEEE-754 floats.
+//!
+//! The radix-sort substrate (DESIGN.md S8) sorts floats by mapping them to
+//! unsigned keys whose integer order equals the floats' total order: flip
+//! all bits of negatives, flip only the sign bit of non-negatives. This is
+//! the standard trick used by GPU radix sorts (Satish/Harris/Garland 2009,
+//! the paper's reference [29]).
+//!
+//! NaNs sort above +inf (same as `f64::total_cmp`); -0.0 sorts below +0.0.
+
+/// Map an `f32` to a `u32` whose unsigned order matches float total order.
+#[inline(always)]
+pub fn f32_key(v: f32) -> u32 {
+    let b = v.to_bits();
+    if b & 0x8000_0000 != 0 {
+        !b
+    } else {
+        b ^ 0x8000_0000
+    }
+}
+
+/// Inverse of [`f32_key`].
+#[inline(always)]
+pub fn key_f32(k: u32) -> f32 {
+    let b = if k & 0x8000_0000 != 0 {
+        k ^ 0x8000_0000
+    } else {
+        !k
+    };
+    f32::from_bits(b)
+}
+
+/// Map an `f64` to a `u64` whose unsigned order matches float total order.
+#[inline(always)]
+pub fn f64_key(v: f64) -> u64 {
+    let b = v.to_bits();
+    if b & 0x8000_0000_0000_0000 != 0 {
+        !b
+    } else {
+        b ^ 0x8000_0000_0000_0000
+    }
+}
+
+/// Inverse of [`f64_key`].
+#[inline(always)]
+pub fn key_f64(k: u64) -> f64 {
+    let b = if k & 0x8000_0000_0000_0000 != 0 {
+        k ^ 0x8000_0000_0000_0000
+    } else {
+        !k
+    };
+    f64::from_bits(b)
+}
+
+/// Total-order comparator for `f64` (delegates to the std total order).
+#[inline(always)]
+pub fn total_cmp_f64(a: &f64, b: &f64) -> std::cmp::Ordering {
+    a.total_cmp(b)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f64_key_orders_like_total_cmp() {
+        let vals = [
+            f64::NEG_INFINITY,
+            -1e300,
+            -1.0,
+            -1e-300,
+            -0.0,
+            0.0,
+            1e-300,
+            1.0,
+            1e300,
+            f64::INFINITY,
+        ];
+        for w in vals.windows(2) {
+            assert!(f64_key(w[0]) < f64_key(w[1]), "{} !< {}", w[0], w[1]);
+        }
+        // except -0.0 vs 0.0 which are distinct keys but equal floats
+        assert!(f64_key(-0.0) < f64_key(0.0));
+    }
+
+    #[test]
+    fn f32_key_orders_like_total_cmp() {
+        let vals = [
+            f32::NEG_INFINITY,
+            -3.3e38,
+            -2.0,
+            -0.0,
+            0.0,
+            5.0e-40,
+            2.0,
+            3.3e38,
+            f32::INFINITY,
+        ];
+        for w in vals.windows(2) {
+            assert!(f32_key(w[0]) <= f32_key(w[1]));
+        }
+    }
+
+    #[test]
+    fn keys_roundtrip() {
+        for v in [-1234.5f64, -0.0, 0.0, 1e-9, 7.25, f64::INFINITY, f64::NEG_INFINITY] {
+            assert_eq!(key_f64(f64_key(v)).to_bits(), v.to_bits());
+        }
+        for v in [-1234.5f32, -0.0, 0.0, 1e-9, 7.25] {
+            assert_eq!(key_f32(f32_key(v)).to_bits(), v.to_bits());
+        }
+    }
+
+    #[test]
+    fn nan_sorts_last() {
+        assert!(f64_key(f64::NAN) > f64_key(f64::INFINITY));
+    }
+
+    #[test]
+    fn random_pairs_consistent_with_total_cmp() {
+        let mut s = 0x12345678u64;
+        let mut next = move || {
+            s ^= s << 13;
+            s ^= s >> 7;
+            s ^= s << 17;
+            f64::from_bits(s & 0x7FEF_FFFF_FFFF_FFFF) * if s & 1 == 0 { 1.0 } else { -1.0 }
+        };
+        for _ in 0..10_000 {
+            let (a, b) = (next(), next());
+            let ka = f64_key(a).cmp(&f64_key(b));
+            assert_eq!(ka, a.total_cmp(&b), "a={a} b={b}");
+        }
+    }
+}

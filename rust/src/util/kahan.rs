@@ -1,0 +1,82 @@
+//! Kahan–Babuška compensated summation.
+//!
+//! The paper (§V.D) discusses catastrophic loss of precision in `Σ|x_i - y|`
+//! when single elements reach ~1e20. The device side addresses this with the
+//! monotone log-transform (see `select::transform`); on the host side every
+//! accumulation in the evaluators uses compensated summation so the CPU
+//! oracle is trustworthy even on adversarial data.
+
+/// Neumaier's improved Kahan summation.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct KahanSum {
+    sum: f64,
+    comp: f64,
+}
+
+impl KahanSum {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    #[inline(always)]
+    pub fn add(&mut self, v: f64) {
+        let t = self.sum + v;
+        if self.sum.abs() >= v.abs() {
+            self.comp += (self.sum - t) + v;
+        } else {
+            self.comp += (v - t) + self.sum;
+        }
+        self.sum = t;
+    }
+
+    #[inline(always)]
+    pub fn value(&self) -> f64 {
+        self.sum + self.comp
+    }
+}
+
+impl std::iter::FromIterator<f64> for KahanSum {
+    fn from_iter<I: IntoIterator<Item = f64>>(iter: I) -> Self {
+        let mut k = KahanSum::new();
+        for v in iter {
+            k.add(v);
+        }
+        k
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_on_small_ints() {
+        let k: KahanSum = (0..1000).map(|i| i as f64).collect();
+        assert_eq!(k.value(), 499_500.0);
+    }
+
+    #[test]
+    fn survives_large_cancellation() {
+        // naive summation loses the 1.0 terms entirely
+        let mut k = KahanSum::new();
+        k.add(1e20);
+        for _ in 0..1000 {
+            k.add(1.0);
+        }
+        k.add(-1e20);
+        assert_eq!(k.value(), 1000.0);
+    }
+
+    #[test]
+    fn paper_scenario_outlier_1e20() {
+        // f(y) = sum |x_i - y| with one 1e20 outlier and 1e5 unit terms:
+        // naive f32/f64 summation would report the unit terms as 0.
+        let mut k = KahanSum::new();
+        k.add(1e20);
+        for i in 0..100_000 {
+            k.add(0.5 + (i % 7) as f64 * 0.1);
+        }
+        let bulk: f64 = (0..100_000).map(|i| 0.5 + (i % 7) as f64 * 0.1).sum();
+        assert!((k.value() - (1e20 + bulk)).abs() <= 1e4); // vs ~6e4 bulk
+    }
+}

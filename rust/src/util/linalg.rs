@@ -1,0 +1,336 @@
+//! Dense linear-algebra substrate for the regression application.
+//!
+//! The paper's LMS/LTS search repeatedly solves tiny p×p systems (elemental
+//! subsets) and one final least-squares refit. We implement column-major
+//! dense matrices with Cholesky and Householder-QR solvers — no external
+//! BLAS in this offline environment (DESIGN.md S17).
+
+use crate::{invalid_arg, Result};
+
+/// Dense column-major matrix.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    data: Vec<f64>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_rows(rows: &[Vec<f64>]) -> Result<Self> {
+        let r = rows.len();
+        if r == 0 {
+            return Err(invalid_arg!("empty matrix"));
+        }
+        let c = rows[0].len();
+        if rows.iter().any(|row| row.len() != c) {
+            return Err(invalid_arg!("ragged rows"));
+        }
+        let mut m = Mat::zeros(r, c);
+        for (i, row) in rows.iter().enumerate() {
+            for (j, &v) in row.iter().enumerate() {
+                m[(i, j)] = v;
+            }
+        }
+        Ok(m)
+    }
+
+    #[inline(always)]
+    pub fn at(&self, i: usize, j: usize) -> f64 {
+        self.data[j * self.rows + i]
+    }
+
+    pub fn col(&self, j: usize) -> &[f64] {
+        &self.data[j * self.rows..(j + 1) * self.rows]
+    }
+
+    /// y = A * x
+    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.cols);
+        let mut y = vec![0.0; self.rows];
+        for j in 0..self.cols {
+            let c = self.col(j);
+            let xj = x[j];
+            for (yi, &cij) in y.iter_mut().zip(c) {
+                *yi += cij * xj;
+            }
+        }
+        y
+    }
+
+    /// Gram matrix AᵀA (p×p) and Aᵀb, the normal equations.
+    pub fn normal_eqs(&self, b: &[f64]) -> (Mat, Vec<f64>) {
+        assert_eq!(b.len(), self.rows);
+        let p = self.cols;
+        let mut g = Mat::zeros(p, p);
+        let mut atb = vec![0.0; p];
+        for j in 0..p {
+            let cj = self.col(j);
+            atb[j] = cj.iter().zip(b).map(|(a, b)| a * b).sum();
+            for k in j..p {
+                let ck = self.col(k);
+                let s: f64 = cj.iter().zip(ck).map(|(a, b)| a * b).sum();
+                g[(j, k)] = s;
+                g[(k, j)] = s;
+            }
+        }
+        (g, atb)
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for Mat {
+    type Output = f64;
+    #[inline(always)]
+    fn index(&self, (i, j): (usize, usize)) -> &f64 {
+        &self.data[j * self.rows + i]
+    }
+}
+
+impl std::ops::IndexMut<(usize, usize)> for Mat {
+    #[inline(always)]
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f64 {
+        &mut self.data[j * self.rows + i]
+    }
+}
+
+/// Solve the SPD system `A x = b` in place via Cholesky. Returns `None` if
+/// `A` is not positive definite (within a tiny pivot tolerance).
+pub fn cholesky_solve(a: &Mat, b: &[f64]) -> Option<Vec<f64>> {
+    let n = a.rows;
+    if a.cols != n || b.len() != n {
+        return None;
+    }
+    let mut l = a.clone();
+    // factor: L L^T, lower triangle of l
+    for j in 0..n {
+        let mut d = l[(j, j)];
+        for k in 0..j {
+            d -= l[(j, k)] * l[(j, k)];
+        }
+        if d <= 1e-300 {
+            return None;
+        }
+        let dj = d.sqrt();
+        l[(j, j)] = dj;
+        for i in j + 1..n {
+            let mut s = l[(i, j)];
+            for k in 0..j {
+                s -= l[(i, k)] * l[(j, k)];
+            }
+            l[(i, j)] = s / dj;
+        }
+    }
+    // forward substitution: L y = b
+    let mut y = b.to_vec();
+    for i in 0..n {
+        for k in 0..i {
+            y[i] -= l[(i, k)] * y[k];
+        }
+        y[i] /= l[(i, i)];
+    }
+    // back substitution: L^T x = y
+    for i in (0..n).rev() {
+        for k in i + 1..n {
+            y[i] -= l[(k, i)] * y[k];
+        }
+        y[i] /= l[(i, i)];
+    }
+    Some(y)
+}
+
+/// Least-squares solve `min ||A x - b||` via Householder QR.
+/// Works for rows >= cols; returns `None` on rank deficiency.
+pub fn qr_solve(a: &Mat, b: &[f64]) -> Option<Vec<f64>> {
+    let (m, n) = (a.rows, a.cols);
+    if m < n || b.len() != m {
+        return None;
+    }
+    let mut r = a.clone();
+    let mut rhs = b.to_vec();
+    for j in 0..n {
+        // Householder vector for column j
+        let mut norm = 0.0;
+        for i in j..m {
+            norm += r[(i, j)] * r[(i, j)];
+        }
+        let norm = norm.sqrt();
+        if norm < 1e-300 {
+            return None;
+        }
+        let alpha = if r[(j, j)] > 0.0 { -norm } else { norm };
+        let mut v = vec![0.0; m - j];
+        v[0] = r[(j, j)] - alpha;
+        for i in j + 1..m {
+            v[i - j] = r[(i, j)];
+        }
+        let vtv: f64 = v.iter().map(|x| x * x).sum();
+        if vtv < 1e-300 {
+            return None;
+        }
+        r[(j, j)] = alpha;
+        for i in j + 1..m {
+            r[(i, j)] = 0.0;
+        }
+        // apply H = I - 2 v v^T / v^T v to remaining columns + rhs
+        for k in j + 1..n {
+            let mut dot = 0.0;
+            for i in j..m {
+                dot += v[i - j] * r[(i, k)];
+            }
+            let f = 2.0 * dot / vtv;
+            for i in j..m {
+                r[(i, k)] -= f * v[i - j];
+            }
+        }
+        let mut dot = 0.0;
+        for i in j..m {
+            dot += v[i - j] * rhs[i];
+        }
+        let f = 2.0 * dot / vtv;
+        for i in j..m {
+            rhs[i] -= f * v[i - j];
+        }
+    }
+    // back substitution on the n×n upper triangle
+    let mut x = vec![0.0; n];
+    for i in (0..n).rev() {
+        let mut s = rhs[i];
+        for k in i + 1..n {
+            s -= r[(i, k)] * x[k];
+        }
+        if r[(i, i)].abs() < 1e-300 {
+            return None;
+        }
+        x[i] = s / r[(i, i)];
+    }
+    Some(x)
+}
+
+/// Solve a small square system `A x = b` by partial-pivot Gaussian
+/// elimination (used for p×p elemental fits, where A is not SPD).
+pub fn gauss_solve(a: &Mat, b: &[f64]) -> Option<Vec<f64>> {
+    let n = a.rows;
+    if a.cols != n || b.len() != n {
+        return None;
+    }
+    let mut m = a.clone();
+    let mut x = b.to_vec();
+    for col in 0..n {
+        // pivot
+        let mut piv = col;
+        for i in col + 1..n {
+            if m[(i, col)].abs() > m[(piv, col)].abs() {
+                piv = i;
+            }
+        }
+        if m[(piv, col)].abs() < 1e-12 {
+            return None;
+        }
+        if piv != col {
+            for j in 0..n {
+                let t = m[(col, j)];
+                m[(col, j)] = m[(piv, j)];
+                m[(piv, j)] = t;
+            }
+            x.swap(col, piv);
+        }
+        let d = m[(col, col)];
+        for i in col + 1..n {
+            let f = m[(i, col)] / d;
+            if f == 0.0 {
+                continue;
+            }
+            for j in col..n {
+                m[(i, j)] -= f * m[(col, j)];
+            }
+            x[i] -= f * x[col];
+        }
+    }
+    for i in (0..n).rev() {
+        let mut s = x[i];
+        for j in i + 1..n {
+            s -= m[(i, j)] * x[j];
+        }
+        x[i] = s / m[(i, i)];
+    }
+    Some(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn approx(a: &[f64], b: &[f64], tol: f64) {
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(b) {
+            assert!((x - y).abs() < tol, "{a:?} vs {b:?}");
+        }
+    }
+
+    #[test]
+    fn matvec_known() {
+        let a = Mat::from_rows(&[vec![1.0, 2.0], vec![3.0, 4.0], vec![5.0, 6.0]]).unwrap();
+        approx(&a.matvec(&[1.0, -1.0]), &[-1.0, -1.0, -1.0], 1e-12);
+    }
+
+    #[test]
+    fn cholesky_solves_spd() {
+        let a = Mat::from_rows(&[vec![4.0, 2.0], vec![2.0, 3.0]]).unwrap();
+        let x = cholesky_solve(&a, &[8.0, 7.0]).unwrap();
+        approx(&x, &[1.25, 1.5], 1e-12);
+    }
+
+    #[test]
+    fn cholesky_rejects_indefinite() {
+        let a = Mat::from_rows(&[vec![1.0, 2.0], vec![2.0, 1.0]]).unwrap();
+        assert!(cholesky_solve(&a, &[1.0, 1.0]).is_none());
+    }
+
+    #[test]
+    fn qr_least_squares_overdetermined() {
+        // fit y = 2x + 1 exactly through 4 points
+        let a = Mat::from_rows(&[
+            vec![0.0, 1.0],
+            vec![1.0, 1.0],
+            vec![2.0, 1.0],
+            vec![3.0, 1.0],
+        ])
+        .unwrap();
+        let b = [1.0, 3.0, 5.0, 7.0];
+        let x = qr_solve(&a, &b).unwrap();
+        approx(&x, &[2.0, 1.0], 1e-10);
+    }
+
+    #[test]
+    fn qr_matches_normal_equations() {
+        // random-ish well-conditioned system
+        let rows: Vec<Vec<f64>> = (0..20)
+            .map(|i| {
+                let t = i as f64 * 0.37;
+                vec![t.sin(), t.cos(), 1.0]
+            })
+            .collect();
+        let a = Mat::from_rows(&rows).unwrap();
+        let b: Vec<f64> = (0..20).map(|i| (i as f64 * 0.11).cos()).collect();
+        let x_qr = qr_solve(&a, &b).unwrap();
+        let (g, atb) = a.normal_eqs(&b);
+        let x_ne = cholesky_solve(&g, &atb).unwrap();
+        approx(&x_qr, &x_ne, 1e-8);
+    }
+
+    #[test]
+    fn gauss_solves_general() {
+        let a = Mat::from_rows(&[vec![0.0, 2.0], vec![3.0, 1.0]]).unwrap();
+        let x = gauss_solve(&a, &[4.0, 5.0]).unwrap();
+        approx(&x, &[1.0, 2.0], 1e-12);
+    }
+
+    #[test]
+    fn gauss_rejects_singular() {
+        let a = Mat::from_rows(&[vec![1.0, 2.0], vec![2.0, 4.0]]).unwrap();
+        assert!(gauss_solve(&a, &[1.0, 2.0]).is_none());
+    }
+}

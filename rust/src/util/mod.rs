@@ -1,0 +1,63 @@
+//! Shared low-level utilities: float ordering keys, compensated summation,
+//! timers, tiny JSON parser, and the dense linear-algebra substrate.
+
+pub mod fkey;
+pub mod json;
+pub mod kahan;
+pub mod linalg;
+pub mod timer;
+
+pub use fkey::{f32_key, f64_key, key_f32, key_f64, total_cmp_f64};
+pub use kahan::KahanSum;
+pub use timer::{PhaseTimer, Stopwatch};
+
+/// Round `n` up to the next power of two (n >= 1).
+pub fn next_pow2(n: usize) -> usize {
+    n.next_power_of_two()
+}
+
+/// Integer part of (n+1)/2 — the paper's median index (1-based), `Med(x) =
+/// x_([(n+1)/2])`.
+pub fn median_rank(n: usize) -> usize {
+    (n + 1) / 2
+}
+
+/// The LTS trim count: h = [(n+p)/2] in Rousseeuw's formulation; the paper's
+/// §VI uses h = (n+1)/2 for odd n and n/2 for even n (p folded elsewhere).
+pub fn lts_h(n: usize) -> usize {
+    if n % 2 == 1 {
+        (n + 1) / 2
+    } else {
+        n / 2
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn median_rank_matches_paper_formula() {
+        assert_eq!(median_rank(1), 1);
+        assert_eq!(median_rank(2), 1);
+        assert_eq!(median_rank(3), 2);
+        assert_eq!(median_rank(4), 2);
+        assert_eq!(median_rank(5), 3);
+        assert_eq!(median_rank(8192), 4096);
+    }
+
+    #[test]
+    fn next_pow2_basics() {
+        assert_eq!(next_pow2(1), 1);
+        assert_eq!(next_pow2(3), 4);
+        assert_eq!(next_pow2(4096), 4096);
+        assert_eq!(next_pow2(4097), 8192);
+    }
+
+    #[test]
+    fn lts_h_parity() {
+        assert_eq!(lts_h(5), 3);
+        assert_eq!(lts_h(6), 3);
+        assert_eq!(lts_h(101), 51);
+    }
+}

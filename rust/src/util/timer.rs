@@ -1,0 +1,117 @@
+//! Phase timers used to reproduce the paper's per-phase table rows
+//! ("CP iterations", "copy_if", "Radix sort of z"; "copy to CPU",
+//! "algorithm").
+
+use std::collections::BTreeMap;
+use std::time::{Duration, Instant};
+
+/// Simple stopwatch.
+#[derive(Debug, Clone, Copy)]
+pub struct Stopwatch {
+    start: Instant,
+}
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Self { start: Instant::now() }
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    pub fn elapsed_ms(&self) -> f64 {
+        self.start.elapsed().as_secs_f64() * 1e3
+    }
+
+    pub fn restart(&mut self) -> Duration {
+        let e = self.start.elapsed();
+        self.start = Instant::now();
+        e
+    }
+}
+
+/// Accumulates named phase durations; phases may recur (durations add up).
+#[derive(Debug, Clone, Default)]
+pub struct PhaseTimer {
+    phases: BTreeMap<&'static str, Duration>,
+}
+
+impl PhaseTimer {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Time a closure under the given phase name.
+    pub fn time<T>(&mut self, phase: &'static str, f: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let out = f();
+        self.record(phase, t0.elapsed());
+        out
+    }
+
+    pub fn record(&mut self, phase: &'static str, d: Duration) {
+        *self.phases.entry(phase).or_default() += d;
+    }
+
+    pub fn get_ms(&self, phase: &str) -> f64 {
+        self.phases
+            .get(phase)
+            .map(|d| d.as_secs_f64() * 1e3)
+            .unwrap_or(0.0)
+    }
+
+    pub fn total_ms(&self) -> f64 {
+        self.phases.values().map(|d| d.as_secs_f64() * 1e3).sum()
+    }
+
+    pub fn phases(&self) -> impl Iterator<Item = (&'static str, f64)> + '_ {
+        self.phases.iter().map(|(k, v)| (*k, v.as_secs_f64() * 1e3))
+    }
+
+    /// Merge another timer's phases into this one.
+    pub fn merge(&mut self, other: &PhaseTimer) {
+        for (k, v) in &other.phases {
+            *self.phases.entry(k).or_default() += *v;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn phases_accumulate() {
+        let mut t = PhaseTimer::new();
+        t.record("a", Duration::from_millis(2));
+        t.record("a", Duration::from_millis(3));
+        t.record("b", Duration::from_millis(1));
+        assert!((t.get_ms("a") - 5.0).abs() < 1e-9);
+        assert!((t.total_ms() - 6.0).abs() < 1e-9);
+        assert_eq!(t.get_ms("missing"), 0.0);
+    }
+
+    #[test]
+    fn time_closure_records_something() {
+        let mut t = PhaseTimer::new();
+        let v = t.time("work", || {
+            std::thread::sleep(Duration::from_millis(2));
+            42
+        });
+        assert_eq!(v, 42);
+        assert!(t.get_ms("work") >= 1.0);
+    }
+
+    #[test]
+    fn merge_sums() {
+        let mut a = PhaseTimer::new();
+        a.record("x", Duration::from_millis(1));
+        let mut b = PhaseTimer::new();
+        b.record("x", Duration::from_millis(2));
+        b.record("y", Duration::from_millis(4));
+        a.merge(&b);
+        assert!((a.get_ms("x") - 3.0).abs() < 1e-9);
+        assert!((a.get_ms("y") - 4.0).abs() < 1e-9);
+    }
+}

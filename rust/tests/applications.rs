@@ -1,0 +1,213 @@
+//! Application-level integration: robust regression + kNN through device
+//! artifacts (when present) and the host selector; cross-layer consistency.
+
+use cp_select::regression::{
+    lms, lts, ols, ContaminatedLinear, HostSelector, LmsOptions, LtsOptions,
+};
+use cp_select::runtime::{DeviceEvaluator, Kernel, Runtime};
+use cp_select::select::{self, DType, Method};
+use cp_select::stats::{sorted_median, Rng};
+
+fn artifacts() -> Option<std::path::PathBuf> {
+    let dir = Runtime::default_dir();
+    dir.join("manifest.json").exists().then_some(dir)
+}
+
+fn max_err(a: &[f64], b: &[f64]) -> f64 {
+    a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f64::max)
+}
+
+#[test]
+fn breakdown_story_holds() {
+    // the paper's qualitative §VI result: OLS breaks at 30% contamination,
+    // LMS and LTS recover the true model.
+    let mut rng = Rng::seeded(401);
+    let d = ContaminatedLinear { n: 600, p: 4, contamination: 0.3, sigma: 0.15, ..Default::default() }
+        .generate(&mut rng);
+    let x = d.design();
+    let mut sel = HostSelector::default();
+    let e_ols = max_err(&ols(&x, &d.y).unwrap(), &d.theta);
+    let e_lms = max_err(
+        &lms(&x, &d.y, &LmsOptions::default(), &mut sel).unwrap().theta,
+        &d.theta,
+    );
+    let e_lts = max_err(&lts(&x, &d.y, &LtsOptions::default(), &mut sel).unwrap().theta, &d.theta);
+    assert!(e_ols > 1.0, "OLS should break: {e_ols}");
+    assert!(e_lms < 0.5, "LMS should survive: {e_lms}");
+    assert!(e_lts < 0.5, "LTS should survive: {e_lts}");
+}
+
+#[test]
+fn lms_selector_backends_agree() {
+    // Scoring the same subsets with different median methods must produce
+    // the same winner (medians are exact under every method).
+    let mut rng = Rng::seeded(402);
+    let d = ContaminatedLinear { n: 300, p: 3, contamination: 0.25, ..Default::default() }
+        .generate(&mut rng);
+    let x = d.design();
+    let opts = LmsOptions { subsets: 120, adjust_intercept: false, ..Default::default() };
+    let mut sel_a = HostSelector { method: Method::Hybrid };
+    let mut sel_b = HostSelector { method: Method::Bisection };
+    let fit_a = lms(&x, &d.y, &opts, &mut sel_a).unwrap();
+    let fit_b = lms(&x, &d.y, &opts, &mut sel_b).unwrap();
+    assert_eq!(fit_a.theta, fit_b.theta);
+    assert_eq!(fit_a.med_abs_residual, fit_b.med_abs_residual);
+}
+
+#[test]
+fn device_residual_pipeline_matches_host() {
+    let Some(dir) = artifacts() else {
+        eprintln!("SKIP: no artifacts");
+        return;
+    };
+    let rt = Runtime::new(&dir).unwrap();
+    let mut rng = Rng::seeded(403);
+    let p = 8;
+    let d = ContaminatedLinear { n: 2000, p, contamination: 0.2, ..Default::default() }
+        .generate(&mut rng);
+    let theta: Vec<f64> = (0..p).map(|i| 0.3 * i as f64 - 1.0).collect();
+
+    // host residuals
+    let x = d.design();
+    let host_r: Vec<f64> = cp_select::regression::residuals(&x, &theta, &d.y)
+        .iter()
+        .map(|v| v.abs())
+        .collect();
+
+    // device residuals via the AOT artifact
+    let n = d.n();
+    let bucket = rt.manifest.bucket_for(Kernel::Residuals, rt.flavor, DType::F64, n).unwrap();
+    let exe = rt
+        .executable(Kernel::Residuals, rt.flavor, DType::F64, bucket, Some(p))
+        .unwrap();
+    let xb = rt.upload_matrix(&d.x_flat(), n, p, DType::F64, bucket).unwrap();
+    let yb = rt.upload_vector(&d.y, DType::F64, bucket).unwrap();
+    let tb = rt.upload_vector(&theta, DType::F64, p).unwrap();
+    let out = exe.run(&[&xb, &yb, &tb]).unwrap();
+    let mut dev_r =
+        cp_select::runtime::client::literal_vec_f64(&out[0], DType::F64).unwrap();
+    dev_r.truncate(n);
+
+    for (a, b) in host_r.iter().zip(&dev_r) {
+        assert!((a - b).abs() <= 1e-9 * b.abs().max(1.0));
+    }
+
+    // median of residuals on device == host oracle
+    let want = sorted_median(&dev_r);
+    let mut ev = DeviceEvaluator::upload(&rt, &dev_r, DType::F64).unwrap();
+    let got = select::median(&mut ev, Method::CuttingPlane).unwrap();
+    assert_eq!(got.value, want);
+}
+
+#[test]
+fn device_lms_probe_fused_graph_matches_composed() {
+    // the fused lms_probe artifact == residuals artifact + fused_objective
+    let Some(dir) = artifacts() else {
+        eprintln!("SKIP: no artifacts");
+        return;
+    };
+    let rt = Runtime::new(&dir).unwrap();
+    let mut rng = Rng::seeded(404);
+    let p = 8;
+    let n = 1500;
+    let d = ContaminatedLinear { n, p, contamination: 0.1, ..Default::default() }
+        .generate(&mut rng);
+    let theta: Vec<f64> = (0..p).map(|i| 0.1 * (i as f64 + 1.0)).collect();
+    let t = 0.9;
+
+    let bucket = rt.manifest.bucket_for(Kernel::LmsProbe, rt.flavor, DType::F64, n).unwrap();
+    let exe = rt
+        .executable(Kernel::LmsProbe, rt.flavor, DType::F64, bucket, Some(p))
+        .unwrap();
+    let xb = rt.upload_matrix(&d.x_flat(), n, p, DType::F64, bucket).unwrap();
+    let yb = rt.upload_vector(&d.y, DType::F64, bucket).unwrap();
+    let thb = rt.upload_vector(&theta, DType::F64, p).unwrap();
+    let tb = rt.upload_scalar(t, DType::F64).unwrap();
+    let nv = rt.upload_i32(n as i32).unwrap();
+    let out = exe.run(&[&xb, &yb, &thb, &tb, &nv]).unwrap();
+    assert_eq!(out.len(), 5);
+    let s_lo = cp_select::runtime::client::literal_scalar_f64(&out[0], DType::F64).unwrap();
+    let c_lt = cp_select::runtime::client::literal_scalar_i32(&out[2]).unwrap();
+
+    // composed host reference
+    let x = d.design();
+    let abs_r: Vec<f64> = cp_select::regression::residuals(&x, &theta, &d.y)
+        .iter()
+        .map(|v| v.abs())
+        .collect();
+    let mut ev = cp_select::select::HostEvaluator::new(&abs_r);
+    let s = cp_select::select::objective::Evaluator::probe(&mut ev, t).unwrap();
+    assert_eq!(c_lt as u64, s.c_lt);
+    assert!((s_lo - s.s_lo).abs() <= 1e-9 * s.s_lo.max(1.0));
+}
+
+#[test]
+fn knn_device_kernels_match_host_model() {
+    let Some(dir) = artifacts() else {
+        eprintln!("SKIP: no artifacts");
+        return;
+    };
+    let rt = Runtime::new(&dir).unwrap();
+    let mut rng = Rng::seeded(405);
+    let (n, p, k) = (1000, 8, 7);
+    let mut rows = Vec::new();
+    let mut fvals = Vec::new();
+    for _ in 0..n {
+        let row: Vec<f64> = (0..p).map(|_| rng.range(0.0, 1.0)).collect();
+        fvals.push(row.iter().sum::<f64>());
+        rows.push(row);
+    }
+    let model = cp_select::knn::KnnModel::new(rows.clone(), fvals.clone()).unwrap();
+    let mut sel = HostSelector::default();
+    let q: Vec<f64> = (0..p).map(|_| 0.5).collect();
+    let host_pred = model.predict_regression(&q, k, &mut sel).unwrap();
+
+    // device: dists -> OS_k -> knn_weighted_sum
+    let bucket = rt.manifest.bucket_for(Kernel::Dists, rt.flavor, DType::F64, n).unwrap();
+    let exe = rt.executable(Kernel::Dists, rt.flavor, DType::F64, bucket, Some(p)).unwrap();
+    let x_flat: Vec<f64> = rows.iter().flatten().copied().collect();
+    let xb = rt.upload_matrix(&x_flat, n, p, DType::F64, bucket).unwrap();
+    let qb = rt.upload_vector(&q, DType::F64, p).unwrap();
+    let out = exe.run(&[&xb, &qb]).unwrap();
+    let mut dists = cp_select::runtime::client::literal_vec_f64(&out[0], DType::F64).unwrap();
+    dists.truncate(n);
+
+    let mut ev = DeviceEvaluator::upload(&rt, &dists, DType::F64).unwrap();
+    let t = select::order_statistic(&mut ev, k, Method::CuttingPlane).unwrap().value;
+
+    let kb = rt
+        .manifest
+        .bucket_for(Kernel::KnnWeightedSum, rt.flavor, DType::F64, n)
+        .unwrap();
+    let exe = rt
+        .executable(Kernel::KnnWeightedSum, rt.flavor, DType::F64, kb, None)
+        .unwrap();
+    let db = rt.upload_vector(&dists, DType::F64, kb).unwrap();
+    let fb = rt.upload_vector(&fvals, DType::F64, kb).unwrap();
+    let tb = rt.upload_scalar(t, DType::F64).unwrap();
+    let nv = rt.upload_i32(n as i32).unwrap();
+    let out = exe.run(&[&db, &fb, &tb, &nv]).unwrap();
+    let swf = cp_select::runtime::client::literal_scalar_f64(&out[0], DType::F64).unwrap();
+    let sw = cp_select::runtime::client::literal_scalar_f64(&out[1], DType::F64).unwrap();
+    let count = cp_select::runtime::client::literal_scalar_i32(&out[2]).unwrap();
+
+    assert!(count as usize >= k);
+    let dev_pred = swf / sw;
+    assert!(
+        (dev_pred - host_pred).abs() <= 1e-9 * host_pred.abs().max(1.0),
+        "device {dev_pred} vs host {host_pred}"
+    );
+}
+
+#[test]
+fn lts_rho_trick_equals_sorted_definition_large() {
+    let mut rng = Rng::seeded(406);
+    let r: Vec<f64> = (0..50_000).map(|_| rng.normal().abs()).collect();
+    let h = cp_select::util::lts_h(r.len());
+    let mut sel = HostSelector::default();
+    let got = cp_select::regression::trimmed_sum_via_median(&r, h, &mut sel).unwrap();
+    let mut sorted = r.clone();
+    sorted.sort_by(|a, b| a.total_cmp(b));
+    let want: f64 = sorted[..h].iter().map(|v| v * v).sum();
+    assert!((got - want).abs() <= 1e-9 * want);
+}

@@ -1,0 +1,197 @@
+//! Property-based suites over the selection stack (testkit harness —
+//! DESIGN.md §9).
+
+use cp_select::select::cutting_plane::{cutting_plane, CpOptions};
+use cp_select::select::hybrid::{hybrid_select, HybridOptions};
+use cp_select::select::{self, Evaluator, HostEvaluator, Method, ObjectiveSpec};
+use cp_select::stats::{sorted_order_statistic, Rng};
+use cp_select::testkit::{check, Case, CaseGen};
+
+fn oracle(c: &Case) -> f64 {
+    sorted_order_statistic(&c.data, c.k)
+}
+
+#[test]
+fn prop_every_probe_method_matches_sort_oracle() {
+    for (i, method) in [
+        Method::CuttingPlane,
+        Method::Hybrid,
+        Method::Bisection,
+        Method::BrentMinimize,
+        Method::BrentRoot,
+        Method::GoldenSection,
+    ]
+    .into_iter()
+    .enumerate()
+    {
+        check(1000 + i as u64, 120, &CaseGen::default(), |c| {
+            let mut ev = HostEvaluator::new(&c.data);
+            let got = select::order_statistic(&mut ev, c.k, method)
+                .map_err(|e| format!("{method:?}: {e}"))?;
+            if got.value == oracle(c) {
+                Ok(())
+            } else {
+                Err(format!("{method:?}: got {} want {}", got.value, oracle(c)))
+            }
+        });
+    }
+}
+
+#[test]
+fn prop_download_methods_match_sort_oracle() {
+    for (i, method) in [Method::Quickselect, Method::Bfprt, Method::SortRadix]
+        .into_iter()
+        .enumerate()
+    {
+        check(2000 + i as u64, 120, &CaseGen::default(), |c| {
+            let mut ev = HostEvaluator::new(&c.data);
+            let got = select::order_statistic(&mut ev, c.k, method)
+                .map_err(|e| format!("{method:?}: {e}"))?;
+            (got.value == oracle(c))
+                .then_some(())
+                .ok_or_else(|| format!("{method:?} mismatch"))
+        });
+    }
+}
+
+#[test]
+fn prop_permutation_invariance() {
+    // Eq. (1) is permutation invariant; so must be every probe method.
+    check(3000, 80, &CaseGen::default(), |c| {
+        let mut ev = HostEvaluator::new(&c.data);
+        let a = select::order_statistic(&mut ev, c.k, Method::CuttingPlane)
+            .map_err(|e| e.to_string())?;
+        let mut shuffled = c.data.clone();
+        let mut rng = Rng::seeded(c.data.len() as u64);
+        rng.shuffle(&mut shuffled);
+        let mut ev = HostEvaluator::new(&shuffled);
+        let b = select::order_statistic(&mut ev, c.k, Method::CuttingPlane)
+            .map_err(|e| e.to_string())?;
+        (a.value == b.value)
+            .then_some(())
+            .ok_or_else(|| format!("permutation changed result: {} vs {}", a.value, b.value))
+    });
+}
+
+#[test]
+fn prop_monotone_transform_commutes() {
+    // OS_k(F(x)) == F(OS_k(x)) for increasing F (paper §V.D identity).
+    check(4000, 60, &CaseGen { outlier_prob: 0.0, ..Default::default() }, |c| {
+        let f = |t: f64| (t * 0.5).atan() * 3.0 + 0.1 * t; // strictly increasing
+        let mapped: Vec<f64> = c.data.iter().map(|&t| f(t)).collect();
+        let want = f(oracle(c));
+        let mut ev = HostEvaluator::new(&mapped);
+        let got = select::order_statistic(&mut ev, c.k, Method::CuttingPlane)
+            .map_err(|e| e.to_string())?;
+        ((got.value - want).abs() <= 1e-9 * want.abs().max(1.0))
+            .then_some(())
+            .ok_or_else(|| format!("transform mismatch: {} vs {}", got.value, want))
+    });
+}
+
+#[test]
+fn prop_cutting_plane_bracket_always_contains_answer() {
+    check(5000, 100, &CaseGen::default(), |c| {
+        let mut ev = HostEvaluator::new(&c.data);
+        let out = cutting_plane(
+            &mut ev,
+            c.k,
+            &CpOptions { stop_after: Some(4), ..CpOptions::default() },
+        )
+        .map_err(|e| e.to_string())?;
+        let ans = oracle(c);
+        if out.exact {
+            return (out.value == ans)
+                .then_some(())
+                .ok_or_else(|| "early exact value wrong".to_string());
+        }
+        (out.bracket.0 <= ans && ans <= out.bracket.1)
+            .then_some(())
+            .ok_or_else(|| format!("bracket {:?} excludes {ans}", out.bracket))
+    });
+}
+
+#[test]
+fn prop_subgradient_interval_is_monotone_in_y() {
+    // g is the subdifferential of a convex function: intervals are ordered
+    // and non-decreasing along y.
+    check(6000, 60, &CaseGen { outlier_prob: 0.0, ..Default::default() }, |c| {
+        let n = c.data.len();
+        let spec = ObjectiveSpec::order(n, c.k).map_err(|e| e.to_string())?;
+        let mut ev = HostEvaluator::new(&c.data);
+        let mut prev = f64::NEG_INFINITY;
+        let lo = c.data.iter().cloned().fold(f64::INFINITY, f64::min) - 1.0;
+        let hi = c.data.iter().cloned().fold(f64::NEG_INFINITY, f64::max) + 1.0;
+        for i in 0..=20 {
+            let y = lo + (hi - lo) * i as f64 / 20.0;
+            let s = ev.probe(y).map_err(|e| e.to_string())?;
+            let (g_lo, g_hi) = spec.g(&s);
+            if g_lo > g_hi + 1e-9 {
+                return Err(format!("inverted subgradient interval at y={y}"));
+            }
+            if g_hi < prev - 1e-9 {
+                return Err(format!("subgradient decreased at y={y}"));
+            }
+            prev = g_lo.max(prev);
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_hybrid_matches_oracle() {
+    check(7000, 80, &CaseGen::default(), |c| {
+        let mut ev = HostEvaluator::new(&c.data);
+        let out = hybrid_select(&mut ev, c.k, &HybridOptions::default())
+            .map_err(|e| e.to_string())?;
+        (out.value == oracle(c))
+            .then_some(())
+            .ok_or_else(|| format!("hybrid {} vs oracle {}", out.value, oracle(c)))
+    });
+}
+
+#[test]
+fn prop_f32_storage_matches_f32_oracle() {
+    check(8000, 80, &CaseGen { outlier_prob: 0.1, ..Default::default() }, |c| {
+        let rounded: Vec<f64> = c.data.iter().map(|&v| v as f32 as f64).collect();
+        let want = sorted_order_statistic(&rounded, c.k);
+        let mut ev = HostEvaluator::new_f32(&c.data);
+        let got = select::order_statistic(&mut ev, c.k, Method::Hybrid)
+            .map_err(|e| e.to_string())?;
+        (got.value == want)
+            .then_some(())
+            .ok_or_else(|| format!("f32 mismatch: {} vs {}", got.value, want))
+    });
+}
+
+#[test]
+fn prop_probe_counts_partition_n() {
+    check(9000, 80, &CaseGen::default(), |c| {
+        let mut ev = HostEvaluator::new(&c.data);
+        let mut rng = Rng::seeded(c.k as u64);
+        for _ in 0..5 {
+            let y = rng.range(-200.0, 200.0);
+            let s = ev.probe(y).map_err(|e| e.to_string())?;
+            if (s.c_lt + s.c_eq + s.c_gt) as usize != c.data.len() {
+                return Err(format!("counts don't partition n at y={y}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_sharded_equals_single_device() {
+    use cp_select::device::{shard_data, ShardedEvaluator};
+    check(9500, 60, &CaseGen { min_n: 4, ..Default::default() }, |c| {
+        let shards = 1 + c.data.len() % 5;
+        let evs: Vec<HostEvaluator> =
+            shard_data(&c.data, shards).into_iter().map(HostEvaluator::new).collect();
+        let mut group = ShardedEvaluator::new(evs).map_err(|e| e.to_string())?;
+        let got = select::order_statistic(&mut group, c.k, Method::CuttingPlane)
+            .map_err(|e| e.to_string())?;
+        (got.value == oracle(c))
+            .then_some(())
+            .ok_or_else(|| format!("sharded({shards}) {} vs {}", got.value, oracle(c)))
+    });
+}

@@ -1,0 +1,180 @@
+//! Integration tests over the PJRT runtime + AOT artifacts.
+//!
+//! These need `artifacts/` (built by `make artifacts`); they are skipped
+//! with a notice when the manifest is missing so `cargo test` stays green
+//! on a fresh checkout.
+
+use cp_select::runtime::{DeviceEvaluator, Flavor, Kernel, Runtime};
+use cp_select::select::{self, DType, Evaluator, HostEvaluator, Method};
+use cp_select::stats::{sorted_median, sorted_order_statistic, Distribution, Rng};
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let dir = Runtime::default_dir();
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: no artifacts at {dir:?} (run `make artifacts`)");
+        None
+    }
+}
+
+macro_rules! require_artifacts {
+    () => {
+        match artifacts_dir() {
+            Some(d) => d,
+            None => return,
+        }
+    };
+}
+
+#[test]
+fn device_probe_matches_host() {
+    let dir = require_artifacts!();
+    let rt = Runtime::new(&dir).unwrap();
+    let mut rng = Rng::seeded(201);
+    let data = Distribution::Mixture1.sample_vec(&mut rng, 5000); // pads to 8192
+    let mut dev = DeviceEvaluator::upload(&rt, &data, DType::F64).unwrap();
+    let mut host = HostEvaluator::new(&data);
+    for y in [-3.0, 0.0, 0.77, 50.0, 101.0, 1e9] {
+        let a = dev.probe(y).unwrap();
+        let b = host.probe(y).unwrap();
+        assert_eq!((a.c_lt, a.c_eq, a.c_gt), (b.c_lt, b.c_eq, b.c_gt), "y={y}");
+        assert!((a.s_lo - b.s_lo).abs() <= 1e-6 * b.s_lo.abs().max(1.0), "y={y}");
+        assert!((a.s_hi - b.s_hi).abs() <= 1e-6 * b.s_hi.abs().max(1.0), "y={y}");
+    }
+}
+
+#[test]
+fn device_init_neighbors_interval_match_host() {
+    let dir = require_artifacts!();
+    let rt = Runtime::new(&dir).unwrap();
+    let mut rng = Rng::seeded(202);
+    let data = Distribution::HalfNormal.sample_vec(&mut rng, 4096);
+    let mut dev = DeviceEvaluator::upload(&rt, &data, DType::F64).unwrap();
+    let mut host = HostEvaluator::new(&data);
+
+    let (a, b) = (dev.init_stats().unwrap(), host.init_stats().unwrap());
+    assert_eq!((a.min, a.max), (b.min, b.max));
+    assert!((a.sum - b.sum).abs() <= 1e-9 * b.sum.abs());
+
+    let (a, b) = (dev.neighbors(0.7).unwrap(), host.neighbors(0.7).unwrap());
+    assert_eq!(a, b);
+
+    let (a, b) = (
+        dev.interval(0.2, 1.4).unwrap(),
+        host.interval(0.2, 1.4).unwrap(),
+    );
+    assert_eq!(a, b);
+
+    // compaction + download
+    let mut z = dev.compact(0.2, 1.4).unwrap();
+    let mut zh = host.compact(0.2, 1.4).unwrap();
+    z.sort_by(|x, y| x.total_cmp(y));
+    zh.sort_by(|x, y| x.total_cmp(y));
+    assert_eq!(z, zh);
+    assert_eq!(dev.download().unwrap(), data);
+}
+
+#[test]
+fn device_median_every_method() {
+    let dir = require_artifacts!();
+    let rt = Runtime::new(&dir).unwrap();
+    let mut rng = Rng::seeded(203);
+    for dist in [Distribution::Uniform, Distribution::Mixture3, Distribution::Beta25] {
+        let data = dist.sample_vec(&mut rng, 3000);
+        let want = sorted_median(&data);
+        for m in [
+            Method::CuttingPlane,
+            Method::Hybrid,
+            Method::Bisection,
+            Method::BrentRoot,
+            Method::Quickselect,
+            Method::SortRadix,
+        ] {
+            let mut dev = DeviceEvaluator::upload(&rt, &data, DType::F64).unwrap();
+            let r = select::median(&mut dev, m).unwrap();
+            assert_eq!(r.value, want, "{} on {}", m.name(), dist.name());
+        }
+    }
+}
+
+#[test]
+fn device_f32_median_quantizes_like_host_f32() {
+    let dir = require_artifacts!();
+    let rt = Runtime::new(&dir).unwrap();
+    let mut rng = Rng::seeded(204);
+    let data = Distribution::Normal.sample_vec(&mut rng, 4096);
+    let rounded: Vec<f64> = data.iter().map(|&v| v as f32 as f64).collect();
+    let want = sorted_median(&rounded);
+    let mut dev = DeviceEvaluator::upload(&rt, &data, DType::F32).unwrap();
+    let r = select::median(&mut dev, Method::CuttingPlane).unwrap();
+    assert_eq!(r.value, want);
+}
+
+#[test]
+fn device_order_statistics_random_k() {
+    let dir = require_artifacts!();
+    let rt = Runtime::new(&dir).unwrap();
+    let mut rng = Rng::seeded(205);
+    let data = Distribution::Mixture2.sample_vec(&mut rng, 6000);
+    for k in [1usize, 2, 1500, 3000, 5999, 6000] {
+        let want = sorted_order_statistic(&data, k);
+        let mut dev = DeviceEvaluator::upload(&rt, &data, DType::F64).unwrap();
+        let r = select::order_statistic(&mut dev, k, Method::Hybrid).unwrap();
+        assert_eq!(r.value, want, "k={k}");
+    }
+}
+
+#[test]
+fn pallas_flavor_agrees_with_jnp_flavor() {
+    let dir = require_artifacts!();
+    let mut rng = Rng::seeded(206);
+    let data = Distribution::Uniform.sample_vec(&mut rng, 2048);
+    let rt = Runtime::new(&dir).unwrap();
+    let mut a = DeviceEvaluator::upload_with_flavor(&rt, &data, DType::F64, Flavor::Jnp).unwrap();
+    let mut b =
+        DeviceEvaluator::upload_with_flavor(&rt, &data, DType::F64, Flavor::Pallas).unwrap();
+    for y in [0.1, 0.5, 0.9] {
+        let (sa, sb) = (a.probe(y).unwrap(), b.probe(y).unwrap());
+        assert_eq!((sa.c_lt, sa.c_eq, sa.c_gt), (sb.c_lt, sb.c_eq, sb.c_gt));
+        assert!((sa.s_lo - sb.s_lo).abs() <= 1e-9 * sb.s_lo.abs().max(1.0));
+    }
+}
+
+#[test]
+fn executable_cache_compiles_once() {
+    let dir = require_artifacts!();
+    let rt = Runtime::new(&dir).unwrap();
+    let mut rng = Rng::seeded(207);
+    let data = Distribution::Normal.sample_vec(&mut rng, 1024);
+    let mut dev = DeviceEvaluator::upload(&rt, &data, DType::F64).unwrap();
+    for _ in 0..5 {
+        dev.probe(0.0).unwrap();
+    }
+    // fused_objective compiled exactly once despite 5 probes
+    assert_eq!(rt.compiles(), 1, "compiles={}", rt.compiles());
+    dev.init_stats().unwrap();
+    assert_eq!(rt.compiles(), 2);
+}
+
+#[test]
+fn missing_artifact_is_a_clean_error() {
+    let dir = require_artifacts!();
+    let rt = Runtime::new(&dir).unwrap();
+    // bucket larger than anything emitted
+    let err = rt
+        .manifest
+        .bucket_for(Kernel::FusedObjective, Flavor::Jnp, DType::F64, 1 << 30)
+        .unwrap_err();
+    let msg = err.to_string();
+    assert!(msg.contains("max-log2n") || msg.contains("bucket"), "{msg}");
+}
+
+#[test]
+fn bad_manifest_fails_loud() {
+    let tmp = std::env::temp_dir().join(format!("cp_select_badman_{}", std::process::id()));
+    std::fs::create_dir_all(&tmp).unwrap();
+    std::fs::write(tmp.join("manifest.json"), "{ not json").unwrap();
+    assert!(Runtime::new(&tmp).is_err());
+    std::fs::remove_dir_all(&tmp).ok();
+}
