@@ -1,0 +1,39 @@
+//! BENCH_select.json — the machine-readable perf-trajectory artifact:
+//! method × n × fused reductions × wall-ms for the probe-based methods,
+//! plus the coordinator coalescing experiment (8 concurrent same-dataset
+//! medians vs 8 sequential runs). Future PRs diff this file to track both
+//! the pass-count and wall-clock trajectories.
+//!
+//! Writes to `CP_BENCH_OUT` (default `results/`); run the CLI's
+//! `bench-select` from the repo root to refresh the committed copy.
+
+mod common;
+
+use cp_select::harness::{self, report};
+use cp_select::select::DType;
+
+fn main() {
+    common::describe("select_json (BENCH_select.json perf trajectory)");
+    let mut runner = common::runner();
+    let max = common::env_usize("CP_BENCH_MAX_LOG2N", if common::fast() { 16 } else { 20 }) as u32;
+    let sizes: Vec<u32> = (14..=max).step_by(2).collect();
+    let bench = harness::bench_select(&mut runner, &sizes, 42, DType::F64).expect("bench");
+    let json = report::select_bench_json(
+        &bench,
+        "f64",
+        if runner.is_device() { "pjrt-device" } else { "host" },
+    );
+    print!("{json}");
+    let p = report::write_result(&common::results_dir(), "BENCH_select.json", &json).unwrap();
+    println!("wrote {}", p.display());
+
+    // the acceptance property this artifact exists to track
+    let c = &bench.coordinator;
+    assert!(
+        c.concurrent_fused_reductions < c.sequential_fused_reductions,
+        "coalescing regressed: {} concurrent vs {} sequential fused reductions",
+        c.concurrent_fused_reductions,
+        c.sequential_fused_reductions
+    );
+    assert!(bench.rows.iter().all(|r| r.exact), "a method returned an inexact result");
+}

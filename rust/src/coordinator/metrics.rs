@@ -15,6 +15,9 @@ pub struct Metrics {
     pub errors: AtomicU64,
     pub probes: AtomicU64,
     pub batched: AtomicU64,
+    /// Queries answered through shared probe-ladder rounds (coalesced
+    /// same-dataset batches — see `service::solve_group`).
+    pub coalesced: AtomicU64,
     latency_us: [AtomicU64; BUCKETS],
     latency_sum_us: AtomicU64,
 }
@@ -68,6 +71,7 @@ impl Metrics {
             errors: self.errors.load(Ordering::Relaxed),
             probes: self.probes.load(Ordering::Relaxed),
             batched: self.batched.load(Ordering::Relaxed),
+            coalesced: self.coalesced.load(Ordering::Relaxed),
             mean_latency_us: self.mean_latency_us(),
             p50_us: self.latency_quantile_us(0.5),
             p99_us: self.latency_quantile_us(0.99),
@@ -84,6 +88,7 @@ pub struct Snapshot {
     pub errors: u64,
     pub probes: u64,
     pub batched: u64,
+    pub coalesced: u64,
     pub mean_latency_us: f64,
     pub p50_us: u64,
     pub p99_us: u64,
@@ -94,13 +99,14 @@ impl std::fmt::Display for Snapshot {
         write!(
             f,
             "requests={} uploads={} queries={} errors={} probes={} batched={} \
-             latency(mean={:.0}us p50<{}us p99<{}us)",
+             coalesced={} latency(mean={:.0}us p50<{}us p99<{}us)",
             self.requests,
             self.uploads,
             self.queries,
             self.errors,
             self.probes,
             self.batched,
+            self.coalesced,
             self.mean_latency_us,
             self.p50_us,
             self.p99_us

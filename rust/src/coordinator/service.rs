@@ -10,10 +10,17 @@
 //! - Workers micro-batch: they drain whatever is queued and group queries
 //!   by dataset, so repeated medians of the same array (the LMS/LTS inner
 //!   loop!) reuse the resident buffer back-to-back.
+//! - Queued probe-based queries against the **same** dataset coalesce into
+//!   shared `probe_many` rounds: a probe's sufficient statistics are
+//!   rank-independent, so one fused ladder pass serves every queued `k`
+//!   simultaneously — N concurrent medians of one resident array cost
+//!   ~one ladder pass per iteration instead of N
+//!   ([`SelectionService::query_many`] requests this explicitly; drained
+//!   singles coalesce opportunistically).
 //! - PJRT handles are thread-confined; each worker builds its own backend
 //!   via the [`BackendFactory`].
 
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
 use std::sync::Arc;
@@ -63,6 +70,13 @@ impl KSpec {
 pub struct QueryResult {
     pub value: f64,
     pub k: usize,
+    /// The method that actually answered. Queries coalesced into shared
+    /// same-dataset ladder rounds (explicit `query_many`, or probe-based
+    /// singles drained in one batch) report [`Method::Multisection`]
+    /// regardless of the requested method — the value is the same exact
+    /// order statistic either way, but `probes`/`iterations` describe the
+    /// shared rounds (probes is this query's amortized share; the group's
+    /// shares sum to the real total).
     pub method: Method,
     pub probes: u64,
     pub iterations: usize,
@@ -83,6 +97,15 @@ enum Request {
         k: KSpec,
         method: Method,
         reply: SyncSender<Result<QueryResult>>,
+    },
+    /// A client-side batch: all specs resolve against one dataset in
+    /// shared fused ladder rounds (all-or-nothing reply; the requested
+    /// method is validated client-side and the rounds always run on the
+    /// shared multisection engine, so it isn't carried here).
+    QueryMany {
+        id: DatasetId,
+        specs: Vec<KSpec>,
+        reply: SyncSender<Result<Vec<QueryResult>>>,
     },
     Drop {
         id: DatasetId,
@@ -160,6 +183,37 @@ impl SelectionService {
         recv_reply(&self.query_async(id, k, method)?)?
     }
 
+    /// Solve many order statistics of one dataset in **shared** fused
+    /// ladder rounds: one `probe_many` pass per iteration serves every
+    /// spec, so N same-dataset queries cost ~one run instead of N.
+    /// Results align positionally with `specs` and report
+    /// [`Method::Multisection`] — the engine the shared rounds run on —
+    /// whatever `method` was requested (it is validated to be probe-based;
+    /// download methods have no passes to share). All-or-nothing: any
+    /// invalid spec fails the whole call.
+    pub fn query_many(
+        &self,
+        id: DatasetId,
+        specs: Vec<KSpec>,
+        method: Method,
+    ) -> Result<Vec<QueryResult>> {
+        if specs.is_empty() {
+            return Ok(Vec::new());
+        }
+        if method.needs_download() {
+            return Err(crate::invalid_arg!(
+                "query_many requires a probe-based method, got {}",
+                method.name()
+            ));
+        }
+        self.metrics.requests.fetch_add(1, Ordering::Relaxed);
+        let (reply, rx) = sync_channel(1);
+        self.route(id)
+            .send(Request::QueryMany { id, specs, reply })
+            .map_err(|_| Error::Service("worker channel closed".into()))?;
+        recv_reply(&rx)?
+    }
+
     /// Fire a query and return the reply channel (for concurrent clients).
     pub fn query_async(
         &self,
@@ -230,6 +284,11 @@ fn worker_loop(
                             "backend init failed: {e}"
                         ))));
                     }
+                    Request::QueryMany { reply, .. } => {
+                        let _ = reply.send(Err(Error::Service(format!(
+                            "backend init failed: {e}"
+                        ))));
+                    }
                     Request::Shutdown => return,
                     Request::Drop { .. } => {}
                 }
@@ -255,15 +314,18 @@ fn worker_loop(
         }
         if batch.len() > 1 {
             metrics.batched.fetch_add(batch.len() as u64 - 1, Ordering::Relaxed);
-            // Stable grouping by dataset id for queries.
+            // Stable grouping by dataset id for queries (adjacency is what
+            // the coalescing scan below keys on).
             batch.sort_by_key(|r| match r {
                 Request::Upload { id, .. } => (0u8, *id),
                 Request::Drop { id } => (1, *id),
                 Request::Query { id, .. } => (2, *id),
+                Request::QueryMany { id, .. } => (2, *id),
                 Request::Shutdown => (3, u64::MAX),
             });
         }
-        for req in batch.drain(..) {
+        let mut queue: VecDeque<Request> = batch.drain(..).collect();
+        while let Some(req) = queue.pop_front() {
             match req {
                 Request::Upload { id, data, dtype, reply } => {
                     let r = backend.upload(id, &data, dtype);
@@ -274,26 +336,177 @@ fn worker_loop(
                 }
                 Request::Drop { id } => backend.drop_dataset(id),
                 Request::Query { id, k, method, reply } => {
-                    let t0 = Instant::now();
-                    let out = run_query(backend.as_mut(), id, k, method);
-                    let wall = t0.elapsed();
-                    metrics.queries.fetch_add(1, Ordering::Relaxed);
-                    metrics.record_latency(wall);
-                    match &out {
-                        Ok(q) => {
-                            metrics.probes.fetch_add(q.probes, Ordering::Relaxed);
-                        }
-                        Err(_) => {
-                            metrics.errors.fetch_add(1, Ordering::Relaxed);
+                    // Coalesce the drained run of probe-based queries
+                    // against the same resident dataset into shared
+                    // probe_many rounds.
+                    let mut group: Vec<(KSpec, Method, SyncSender<Result<QueryResult>>)> =
+                        Vec::new();
+                    if !method.needs_download() {
+                        while matches!(
+                            queue.front(),
+                            Some(Request::Query { id: qid, method: qm, .. })
+                                if *qid == id && !qm.needs_download()
+                        ) {
+                            if let Some(Request::Query { k, method, reply, .. }) =
+                                queue.pop_front()
+                            {
+                                group.push((k, method, reply));
+                            }
                         }
                     }
-                    let _ = reply.send(out.map(|mut q| {
-                        q.wall = wall;
-                        q
-                    }));
+                    if group.is_empty() {
+                        answer_single(backend.as_mut(), id, k, method, &reply, &metrics);
+                    } else {
+                        group.insert(0, (k, method, reply));
+                        metrics.coalesced.fetch_add(group.len() as u64, Ordering::Relaxed);
+                        let t0 = Instant::now();
+                        let specs: Vec<KSpec> = group.iter().map(|(s, _, _)| *s).collect();
+                        let results = solve_group(backend.as_mut(), id, &specs);
+                        let wall = t0.elapsed();
+                        for ((_, _, reply), mut r) in group.into_iter().zip(results) {
+                            account(&metrics, wall, &mut r);
+                            let _ = reply.send(r);
+                        }
+                    }
+                }
+                Request::QueryMany { id, specs, reply } => {
+                    let t0 = Instant::now();
+                    let results = solve_group(backend.as_mut(), id, &specs);
+                    let wall = t0.elapsed();
+                    if results.len() > 1 {
+                        metrics.coalesced.fetch_add(results.len() as u64, Ordering::Relaxed);
+                    }
+                    let mut ok = Vec::with_capacity(results.len());
+                    let mut first_err = None;
+                    for mut r in results {
+                        account(&metrics, wall, &mut r);
+                        match r {
+                            Ok(q) => ok.push(q),
+                            Err(e) => {
+                                if first_err.is_none() {
+                                    first_err = Some(e);
+                                }
+                            }
+                        }
+                    }
+                    let _ = reply.send(match first_err {
+                        None => Ok(ok),
+                        Some(e) => Err(e),
+                    });
                 }
                 Request::Shutdown => break 'outer,
             }
+        }
+    }
+}
+
+/// Per-result service accounting shared by every reply path: count the
+/// query, record latency, attribute probes/errors, stamp the wall time.
+fn account(metrics: &Metrics, wall: std::time::Duration, r: &mut Result<QueryResult>) {
+    metrics.queries.fetch_add(1, Ordering::Relaxed);
+    metrics.record_latency(wall);
+    match r {
+        Ok(q) => {
+            q.wall = wall;
+            metrics.probes.fetch_add(q.probes, Ordering::Relaxed);
+        }
+        Err(_) => {
+            metrics.errors.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+}
+
+fn answer_single(
+    backend: &mut dyn super::backend::DatasetBackend,
+    id: DatasetId,
+    k: KSpec,
+    method: Method,
+    reply: &SyncSender<Result<QueryResult>>,
+    metrics: &Metrics,
+) {
+    let t0 = Instant::now();
+    let mut out = run_query(backend, id, k, method);
+    account(metrics, t0.elapsed(), &mut out);
+    let _ = reply.send(out);
+}
+
+/// Answer a group of same-dataset specs through shared fused ladder rounds
+/// (`select::multisection::multi_order_statistics`). Per-item results align
+/// positionally; an invalid spec fails only its own slot, and the shared
+/// reduction count is distributed across the group so per-query `probes`
+/// still sum to the real total.
+fn solve_group(
+    backend: &mut dyn super::backend::DatasetBackend,
+    id: DatasetId,
+    specs: &[KSpec],
+) -> Vec<Result<QueryResult>> {
+    let n = match backend.dataset_len(id) {
+        Some(n) => n,
+        None => {
+            return specs
+                .iter()
+                .map(|_| Err(Error::Service(format!("unknown dataset {id}"))))
+                .collect();
+        }
+    };
+    let ranks: Vec<Result<usize>> = specs.iter().map(|k| k.rank_for(n)).collect();
+    let valid: Vec<usize> = ranks.iter().filter_map(|r| r.as_ref().ok().copied()).collect();
+    let solved: Result<(Vec<f64>, usize, u64)> = if valid.is_empty() {
+        Ok((Vec::new(), 0, 0))
+    } else {
+        (|| {
+            let ev = backend.evaluator(id)?;
+            let probes0 = ev.probes();
+            let out = select::multisection::multi_order_statistics(
+                ev,
+                &valid,
+                &select::MultisectOptions::default(),
+            )?;
+            Ok((out.values, out.passes, ev.probes() - probes0))
+        })()
+    };
+    match solved {
+        Ok((values, passes, total)) => {
+            let m = valid.len().max(1) as u64;
+            let base = total / m;
+            let mut rem = total % m;
+            let mut vi = 0usize;
+            ranks
+                .into_iter()
+                .map(|r| match r {
+                    Err(e) => Err(e),
+                    Ok(rank) => {
+                        let value = values[vi];
+                        vi += 1;
+                        let probes = base
+                            + if rem > 0 {
+                                rem -= 1;
+                                1
+                            } else {
+                                0
+                            };
+                        Ok(QueryResult {
+                            value,
+                            k: rank,
+                            // what actually ran (see QueryResult::method)
+                            method: Method::Multisection,
+                            probes,
+                            iterations: passes,
+                            wall: std::time::Duration::ZERO, // filled by the worker loop
+                        })
+                    }
+                })
+                .collect()
+        }
+        Err(e) => {
+            let msg = e.to_string();
+            ranks
+                .into_iter()
+                .map(|r| match r {
+                    Err(e) => Err(e),
+                    Ok(_) => Err(Error::Service(msg.clone())),
+                })
+                .collect()
         }
     }
 }
@@ -437,6 +650,86 @@ mod tests {
             let r = rx.recv().unwrap().unwrap();
             assert_eq!(r.value, sorted_order_statistic(&data, k * 30));
         }
+        svc.shutdown();
+    }
+
+    #[test]
+    fn eight_concurrent_medians_share_ladder_passes() {
+        let svc = start_host(1);
+        let mut rng = Rng::seeded(175);
+        let data = Distribution::Normal.sample_vec(&mut rng, 1 << 14);
+        let want = sorted_median(&data);
+        let id = svc.upload(data, DType::F64).unwrap();
+
+        // baseline: 8 sequential runs, each paying its own passes
+        let seq0 = svc.metrics.snapshot().probes;
+        for _ in 0..8 {
+            let r = svc.query_with(id, KSpec::Median, Method::Multisection).unwrap();
+            assert_eq!(r.value, want);
+        }
+        let sequential = svc.metrics.snapshot().probes - seq0;
+
+        // coalesced: the same 8 queries ride shared probe-ladder rounds
+        let c0 = svc.metrics.snapshot().probes;
+        let rs = svc
+            .query_many(id, vec![KSpec::Median; 8], Method::Multisection)
+            .unwrap();
+        assert_eq!(rs.len(), 8);
+        for r in &rs {
+            assert_eq!(r.value, want);
+            assert_eq!(r.k, 1 << 13);
+        }
+        let coalesced = svc.metrics.snapshot().probes - c0;
+        assert!(
+            coalesced < sequential,
+            "8 coalesced medians used {coalesced} fused reductions, \
+             8 sequential used {sequential}"
+        );
+        assert_eq!(svc.metrics.snapshot().coalesced, 8);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn query_many_mixed_quantiles_are_exact() {
+        let svc = start_host(2);
+        let mut rng = Rng::seeded(176);
+        let data = Distribution::Mixture3.sample_vec(&mut rng, 3001);
+        let mut sorted = data.clone();
+        sorted.sort_by(|a, b| a.total_cmp(b));
+        let id = svc.upload(data, DType::F64).unwrap();
+        let specs = vec![
+            KSpec::Rank(1),
+            KSpec::Quantile(0.1),
+            KSpec::Median,
+            KSpec::Quantile(0.9),
+            KSpec::Rank(3001),
+        ];
+        let rs = svc.query_many(id, specs, Method::Multisection).unwrap();
+        assert_eq!(rs.len(), 5);
+        for r in &rs {
+            assert_eq!(r.value, sorted[r.k - 1], "k={}", r.k);
+        }
+        // per-query probes sum to the real shared total, so the metric
+        // stays meaningful under coalescing
+        let total: u64 = rs.iter().map(|r| r.probes).sum();
+        assert!(total > 0);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn query_many_rejects_bad_specs_and_methods() {
+        let svc = start_host(1);
+        let id = svc.upload((1..=50).map(|i| i as f64).collect(), DType::F64).unwrap();
+        assert!(svc
+            .query_many(id, vec![KSpec::Median, KSpec::Rank(0)], Method::CuttingPlane)
+            .is_err());
+        assert!(svc
+            .query_many(id, vec![KSpec::Median], Method::Quickselect)
+            .is_err());
+        assert!(svc.query_many(id, vec![], Method::CuttingPlane).unwrap().is_empty());
+        assert!(svc.query_many(99, vec![KSpec::Median], Method::CuttingPlane).is_err());
+        // the service still works after the failed batches
+        assert_eq!(svc.query(id, KSpec::Median).unwrap().value, 25.0);
         svc.shutdown();
     }
 

@@ -41,7 +41,9 @@ pub fn shard_data(data: &[f64], devices: usize) -> Vec<&[f64]> {
 ///
 /// Every probe fans out to all shards and merges the sufficient statistics
 /// — O(shards) scalars of "interconnect" traffic per reduction, matching
-/// the paper's multi-GPU communication pattern.
+/// the paper's multi-GPU communication pattern. Batched probes
+/// (`probe_many`) forward the whole ladder in one round-trip per shard, so
+/// a p-probe pass costs one combine round instead of p.
 pub struct ShardedEvaluator<E: Evaluator> {
     shards: Vec<E>,
     probes: u64,
@@ -97,6 +99,25 @@ impl<E: Evaluator> Evaluator for ShardedEvaluator<E> {
         let mut acc = ProbeStats { s_lo: 0.0, s_hi: 0.0, c_lt: 0, c_eq: 0, c_gt: 0 };
         for s in &mut self.shards {
             acc = acc.merge(&s.probe(y)?);
+        }
+        Ok(acc)
+    }
+
+    fn probe_many(&mut self, ys: &[f64]) -> Result<Vec<ProbeStats>> {
+        if ys.is_empty() {
+            return Ok(Vec::new());
+        }
+        // The whole ladder travels in ONE round-trip per shard: the group
+        // pays O(shards · |ys|) scalars of combine traffic per *pass*
+        // instead of per probe, and one logical fused reduction overall.
+        self.probes += 1;
+        let zero = ProbeStats { s_lo: 0.0, s_hi: 0.0, c_lt: 0, c_eq: 0, c_gt: 0 };
+        let mut acc = vec![zero; ys.len()];
+        for s in &mut self.shards {
+            let part = s.probe_many(ys)?;
+            for (a, b) in acc.iter_mut().zip(&part) {
+                *a = a.merge(b);
+            }
         }
         Ok(acc)
     }
@@ -221,6 +242,44 @@ mod tests {
         sh.probe(1.0).unwrap();
         assert_eq!(sh.probes(), 2);
         assert_eq!(sh.shard_probes(), 8); // 2 logical × 4 shards
+    }
+
+    #[test]
+    fn sharded_probe_many_equals_whole_and_counts_one_round() {
+        let mut rng = Rng::seeded(114);
+        let data = Distribution::Mixture4.sample_vec(&mut rng, 1031);
+        let ys = [-2.0, 0.3, 0.3, 1.7, 95.0, 104.0];
+        let mut whole = HostEvaluator::new(&data);
+        let want = whole.probe_many(&ys).unwrap();
+        for devices in [1, 2, 3, 8] {
+            let mut sh = sharded(&data, devices);
+            let got = sh.probe_many(&ys).unwrap();
+            assert_eq!(got.len(), want.len());
+            for (i, (a, b)) in got.iter().zip(&want).enumerate() {
+                assert_eq!(
+                    (a.c_lt, a.c_eq, a.c_gt),
+                    (b.c_lt, b.c_eq, b.c_gt),
+                    "devices={devices} probe {i}"
+                );
+                assert!((a.s_lo - b.s_lo).abs() <= 1e-9 * b.s_lo.abs().max(1.0));
+                assert!((a.s_hi - b.s_hi).abs() <= 1e-9 * b.s_hi.abs().max(1.0));
+            }
+            // one logical fused round, one batch round-trip per shard
+            assert_eq!(sh.probes(), 1, "devices={devices}");
+            assert_eq!(sh.shard_probes(), devices as u64);
+        }
+    }
+
+    #[test]
+    fn multisection_runs_sharded() {
+        let mut rng = Rng::seeded(115);
+        let data = Distribution::Beta25.sample_vec(&mut rng, 4099);
+        let want = sorted_median(&data);
+        for devices in [2, 5] {
+            let mut sh = sharded(&data, devices);
+            let got = select::median(&mut sh, Method::Multisection).unwrap();
+            assert_eq!(got.value, want, "devices={devices}");
+        }
     }
 
     #[test]

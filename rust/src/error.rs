@@ -1,41 +1,61 @@
 //! Crate-wide error type.
+//!
+//! Hand-implemented `Display`/`Error` (thiserror is unavailable in the
+//! offline build environment).
 
 use std::fmt;
 
+use crate::xla;
+
 /// Unified error for the coordinator, runtime, and applications.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum Error {
     /// PJRT / XLA runtime failures (compile, execute, transfer).
-    #[error("xla runtime: {0}")]
     Xla(String),
 
     /// Artifact store problems: missing manifest, missing bucket, bad entry.
-    #[error("artifact: {0}")]
     Artifact(String),
 
     /// Manifest / config parse errors.
-    #[error("parse: {0}")]
     Parse(String),
 
     /// Invalid argument from a caller (k out of range, empty input, ...).
-    #[error("invalid argument: {0}")]
     InvalidArg(String),
 
     /// An algorithm failed to converge or hit an internal inconsistency.
-    #[error("algorithm: {0}")]
     Algorithm(String),
 
     /// Coordinator/service failures (queue closed, worker died, ...).
-    #[error("service: {0}")]
     Service(String),
 
     /// I/O errors with path context.
-    #[error("io: {path}: {source}")]
     Io {
         path: String,
-        #[source]
         source: std::io::Error,
     },
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Xla(m) => write!(f, "xla runtime: {m}"),
+            Error::Artifact(m) => write!(f, "artifact: {m}"),
+            Error::Parse(m) => write!(f, "parse: {m}"),
+            Error::InvalidArg(m) => write!(f, "invalid argument: {m}"),
+            Error::Algorithm(m) => write!(f, "algorithm: {m}"),
+            Error::Service(m) => write!(f, "service: {m}"),
+            Error::Io { path, source } => write!(f, "io: {path}: {source}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io { source, .. } => Some(source),
+            _ => None,
+        }
+    }
 }
 
 impl Error {

@@ -320,6 +320,113 @@ pub fn outlier_sweep_fig5(
     Ok(out)
 }
 
+/// One row of the `BENCH_select.json` perf-trajectory artifact
+/// (method × n × fused reductions × wall-ms).
+#[derive(Debug, Clone)]
+pub struct SelectBenchRow {
+    pub method: &'static str,
+    pub n: usize,
+    /// Fused reductions issued — the paper's cost unit (a `probe_many`
+    /// ladder counts once on natively batched evaluators).
+    pub fused_reductions: u64,
+    pub iterations: usize,
+    pub wall_ms: f64,
+    pub exact: bool,
+}
+
+/// The coordinator-coalescing experiment: the same 8 median queries against
+/// one resident dataset, shared-ladder vs sequential.
+#[derive(Debug, Clone)]
+pub struct CoordinatorBench {
+    pub queries: usize,
+    pub concurrent_fused_reductions: u64,
+    pub sequential_fused_reductions: u64,
+}
+
+#[derive(Debug, Clone)]
+pub struct SelectBench {
+    pub rows: Vec<SelectBenchRow>,
+    pub coordinator: CoordinatorBench,
+}
+
+/// Probe-based methods tracked by the perf-trajectory bench.
+pub fn bench_select_methods() -> Vec<Method> {
+    vec![
+        Method::CuttingPlane,
+        Method::Multisection,
+        Method::Bisection,
+        Method::Hybrid,
+    ]
+}
+
+/// Drive the probe-based methods across sizes and the coordinator
+/// coalescing experiment; the result serializes to `BENCH_select.json`
+/// (see `report::select_bench_json`) so future changes can track the
+/// passes/wall trajectory.
+pub fn bench_select(
+    runner: &mut Runner,
+    log2_sizes: &[u32],
+    seed: u64,
+    dtype: DType,
+) -> Result<SelectBench> {
+    let mut rng = Rng::seeded(seed);
+    let mut rows = Vec::new();
+    for &b in log2_sizes {
+        let n = 1usize << b;
+        let data = Distribution::Uniform.sample_vec(&mut rng, n);
+        let k = crate::util::median_rank(n);
+        let want = crate::stats::sorted_order_statistic(&data, k);
+        for m in bench_select_methods() {
+            let mut ev = runner.evaluator(&data, dtype)?;
+            let t0 = Instant::now();
+            let r = select::order_statistic(ev.as_mut(), k, m)?;
+            rows.push(SelectBenchRow {
+                method: m.name(),
+                n,
+                fused_reductions: r.probes,
+                iterations: r.iterations,
+                wall_ms: t0.elapsed().as_secs_f64() * 1e3,
+                exact: r.value == want
+                    || (dtype == DType::F32 && (r.value - want).abs() <= want.abs() * 1e-6),
+            });
+        }
+    }
+
+    // Coordinator coalescing: 8 concurrent same-dataset medians must cost
+    // strictly fewer total fused reductions than 8 sequential runs.
+    let n = 1usize << 14;
+    let data = Distribution::Uniform.sample_vec(&mut rng, n);
+    let svc = crate::coordinator::SelectionService::start(
+        1,
+        64,
+        Method::Multisection,
+        crate::coordinator::HostBackend::factory(),
+    )?;
+    let id = svc.upload(data, DType::F64)?;
+    let s0 = svc.metrics.snapshot().probes;
+    for _ in 0..8 {
+        svc.query_with(id, crate::coordinator::KSpec::Median, Method::Multisection)?;
+    }
+    let sequential = svc.metrics.snapshot().probes - s0;
+    let c0 = svc.metrics.snapshot().probes;
+    svc.query_many(
+        id,
+        vec![crate::coordinator::KSpec::Median; 8],
+        Method::Multisection,
+    )?;
+    let concurrent = svc.metrics.snapshot().probes - c0;
+    svc.shutdown();
+
+    Ok(SelectBench {
+        rows,
+        coordinator: CoordinatorBench {
+            queries: 8,
+            concurrent_fused_reductions: concurrent,
+            sequential_fused_reductions: sequential,
+        },
+    })
+}
+
 /// §IV ablation: hybrid iteration budget vs |z| and phase times.
 #[derive(Debug, Clone)]
 pub struct HybridSweepPoint {
@@ -403,6 +510,28 @@ mod tests {
             .unwrap();
         let labels: Vec<&str> = hybrid.phases.iter().map(|(l, _)| l.as_str()).collect();
         assert!(labels.contains(&"cp_iterations"), "{labels:?}");
+    }
+
+    #[test]
+    fn bench_select_emits_valid_json_and_coalescing_wins() {
+        let mut runner = Runner::new(Backend::Host).unwrap();
+        let b = bench_select(&mut runner, &[10, 12], 7, DType::F64).unwrap();
+        assert_eq!(b.rows.len(), 8); // 4 methods × 2 sizes
+        assert!(b.rows.iter().all(|r| r.exact), "{:?}", b.rows);
+        assert!(
+            b.coordinator.concurrent_fused_reductions
+                < b.coordinator.sequential_fused_reductions,
+            "{:?}",
+            b.coordinator
+        );
+        let json = report::select_bench_json(&b, "f64", "host");
+        let parsed = crate::util::json::Json::parse(&json).unwrap();
+        assert_eq!(
+            parsed.get("schema").unwrap().as_str().unwrap(),
+            "cp-select/bench_select/v1"
+        );
+        assert_eq!(parsed.get("rows").unwrap().as_arr().unwrap().len(), 8);
+        assert!(parsed.get("coordinator").unwrap().get("queries").unwrap().as_usize().unwrap() == 8);
     }
 
     #[test]

@@ -3,7 +3,7 @@
 use std::io::Write;
 use std::path::Path;
 
-use super::{HybridSweepPoint, OutlierPoint, Table};
+use super::{HybridSweepPoint, OutlierPoint, SelectBench, Table};
 use crate::select::TracePoint;
 use crate::{Error, Result};
 
@@ -100,6 +100,44 @@ pub fn hybrid_sweep_csv(points: &[HybridSweepPoint]) -> String {
             p.cp_iters, p.z_len, p.cp_ms, p.copy_ms, p.sort_ms, p.total_ms
         ));
     }
+    s
+}
+
+/// Machine-readable `BENCH_select.json` (hand-rolled writer; serde is
+/// unavailable offline). Schema `cp-select/bench_select/v1`:
+/// method × n × fused reductions × wall-ms rows plus the coordinator
+/// coalescing counts, so future PRs can diff the perf trajectory.
+pub fn select_bench_json(b: &SelectBench, dtype: &str, backend: &str) -> String {
+    let mut s = String::from("{\n");
+    s.push_str("  \"schema\": \"cp-select/bench_select/v1\",\n");
+    s.push_str(&format!("  \"backend\": \"{backend}\",\n"));
+    s.push_str(&format!("  \"dtype\": \"{dtype}\",\n"));
+    s.push_str("  \"rows\": [\n");
+    for (i, r) in b.rows.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"method\": \"{}\", \"n\": {}, \"fused_reductions\": {}, \
+             \"iterations\": {}, \"wall_ms\": {:.4}, \"exact\": {}}}{}\n",
+            r.method,
+            r.n,
+            r.fused_reductions,
+            r.iterations,
+            r.wall_ms,
+            r.exact,
+            if i + 1 < b.rows.len() { "," } else { "" }
+        ));
+    }
+    s.push_str("  ],\n");
+    // the coordinator experiment always runs on the host backend (its
+    // counts are substrate-independent), whatever the rows were measured on
+    s.push_str(&format!(
+        "  \"coordinator\": {{\"backend\": \"host\", \"queries\": {}, \
+         \"concurrent_fused_reductions\": {}, \
+         \"sequential_fused_reductions\": {}}}\n",
+        b.coordinator.queries,
+        b.coordinator.concurrent_fused_reductions,
+        b.coordinator.sequential_fused_reductions
+    ));
+    s.push_str("}\n");
     s
 }
 

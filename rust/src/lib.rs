@@ -16,6 +16,38 @@
 //! - **Layers 1–2** — Pallas kernels + JAX graphs live in `python/compile/`;
 //!   see DESIGN.md for the architecture and the hardware-adaptation notes.
 //!
+//! ## Batched multi-probe evaluation (probes per pass)
+//!
+//! The paper's central observation is that selection cost on an accelerator
+//! is dominated by the number of **full passes** (fused reductions) over the
+//! array, not by the per-element work inside a pass. The [`select::Evaluator`]
+//! trait therefore exposes two granularities:
+//!
+//! - [`select::Evaluator::probe`] — one probe, one pass (Algorithm 1's unit);
+//! - [`select::Evaluator::probe_many`] — a sorted *probe ladder* evaluated in
+//!   a **single fused pass**: each element is binned against the ladder and
+//!   per-probe [`select::ProbeStats`] are recovered by prefix-summing the bin
+//!   partials. One pass buys `p` probes' worth of information.
+//!
+//! "Probes per pass" is a first-class axis of the system:
+//!
+//! - [`select::multisection`] generalizes bisection to `p` probes per pass,
+//!   converging in `log_{p+1}(range/tol)` passes instead of `log_2` — with
+//!   `p = 15`, a 2²² array resolves in ≲ ⌈log₁₆(2·range/ε)⌉ passes;
+//! - the cutting plane fuses its Kelley model minimizer with its bisection
+//!   safeguard into one two-probe ladder per iteration, keeping the paper's
+//!   `maxit + 1` reduction budget while shrinking the bracket by both cuts;
+//! - [`device::ShardedEvaluator`] forwards whole ladders per shard
+//!   round-trip (one scalar-combine round per *batch*, not per probe);
+//! - the [`coordinator`] coalesces concurrent queries against the same
+//!   resident dataset into shared `probe_many` rounds: the sufficient
+//!   statistics of a probe are rank-independent, so one ladder pass serves
+//!   every queued `k` simultaneously (`SelectionService::query_many`).
+//!
+//! The tradeoff: wider ladders cost more per-element compare work per pass
+//! (still memory-bound for small `p` on the host) in exchange for fewer
+//! passes; `p` is tunable per method via its options struct.
+//!
 //! ## Quick start
 //!
 //! ```no_run
@@ -41,5 +73,6 @@ pub mod select;
 pub mod stats;
 pub mod testkit;
 pub mod util;
+pub mod xla;
 
 pub use error::{Error, Result};

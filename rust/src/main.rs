@@ -137,6 +137,7 @@ fn run(args: Vec<String>) -> Result<()> {
         "info" => cmd_info(&opts),
         "select" => cmd_select(&opts),
         "bench-table" => cmd_bench_table(&opts),
+        "bench-select" => cmd_bench_select(&opts),
         "trace" => cmd_trace(&opts),
         "outliers" => cmd_outliers(&opts),
         "hybrid-sweep" => cmd_hybrid_sweep(&opts),
@@ -155,8 +156,8 @@ fn print_usage() {
     println!(
         "cp-select — parallel median/order statistics via convex minimization\n\
          (reproduction of Beliakov 2011; see README.md)\n\n\
-         subcommands: info select bench-table trace outliers hybrid-sweep\n\
-         \x20             serve-demo regress knn\n\
+         subcommands: info select bench-table bench-select trace outliers\n\
+         \x20             hybrid-sweep serve-demo regress knn\n\
          common flags: --config F --backend host|device --artifacts DIR\n\
          \x20             --dtype f32|f64 --n N --method M --dist D --seed S --out DIR"
     );
@@ -233,6 +234,34 @@ fn cmd_bench_table(opts: &Opts) -> Result<()> {
     report::write_result(&out, &format!("{stem}.md"), &md)?;
     report::write_result(&out, &format!("{stem}.csv"), &report::table_csv(&table))?;
     println!("wrote {out:?}/{stem}.{{md,csv}}");
+    Ok(())
+}
+
+fn cmd_bench_select(opts: &Opts) -> Result<()> {
+    // Emits the machine-readable BENCH_select.json perf-trajectory artifact
+    // (method × n × fused reductions × wall-ms + coordinator coalescing).
+    // Default output is the current directory so a repo-root invocation
+    // refreshes the committed BENCH_select.json.
+    let cfg = opts.config()?;
+    let max_log2 = opts.usize("max-log2n", 20)? as u32;
+    let min_log2 = opts.usize("min-log2n", 14)? as u32;
+    let sizes: Vec<u32> = (min_log2..=max_log2).step_by(2).collect();
+    let mut runner = opts.runner(&cfg)?;
+    let bench = harness::bench_select(&mut runner, &sizes, opts.u64("seed", 42)?, cfg.dtype)?;
+    let json = report::select_bench_json(
+        &bench,
+        cfg.dtype.name(),
+        if runner.is_device() { "pjrt-device" } else { "host" },
+    );
+    print!("{json}");
+    let out = PathBuf::from(opts.get("out").unwrap_or("."));
+    let p = report::write_result(&out, "BENCH_select.json", &json)?;
+    println!("wrote {}", p.display());
+    let c = &bench.coordinator;
+    println!(
+        "coordinator: {} coalesced queries = {} fused reductions vs {} sequential",
+        c.queries, c.concurrent_fused_reductions, c.sequential_fused_reductions
+    );
     Ok(())
 }
 

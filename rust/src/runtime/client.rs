@@ -16,6 +16,7 @@ use std::rc::Rc;
 
 use crate::runtime::manifest::{ArtifactEntry, Flavor, Kernel, Manifest};
 use crate::select::DType;
+use crate::xla;
 use crate::{Error, Result};
 
 /// A compiled artifact with its I/O spec.

@@ -13,6 +13,7 @@ use crate::runtime::manifest::{Flavor, Kernel};
 use crate::select::objective::{
     DType, Evaluator, InitStats, IntervalCounts, Neighbors, ProbeStats,
 };
+use crate::xla;
 use crate::{Error, Result};
 
 pub struct DeviceEvaluator {
@@ -129,6 +130,22 @@ impl DeviceEvaluator {
     }
 }
 
+fn parse_probe_stats(out: &[xla::Literal], dtype: DType) -> Result<ProbeStats> {
+    if out.len() != 5 {
+        return Err(Error::Xla(format!(
+            "fused_objective returned {} outputs",
+            out.len()
+        )));
+    }
+    Ok(ProbeStats {
+        s_lo: literal_scalar_f64(&out[0], dtype)?,
+        s_hi: literal_scalar_f64(&out[1], dtype)?,
+        c_lt: literal_scalar_i32(&out[2])? as u64,
+        c_eq: literal_scalar_i32(&out[3])? as u64,
+        c_gt: literal_scalar_i32(&out[4])? as u64,
+    })
+}
+
 impl Evaluator for DeviceEvaluator {
     fn n(&self) -> usize {
         self.n
@@ -152,19 +169,34 @@ impl Evaluator for DeviceEvaluator {
 
     fn probe(&mut self, y: f64) -> Result<ProbeStats> {
         let out = self.run_probe_kernel(Kernel::FusedObjective, self.flavor, &[y])?;
-        if out.len() != 5 {
-            return Err(Error::Xla(format!(
-                "fused_objective returned {} outputs",
-                out.len()
-            )));
+        parse_probe_stats(&out, self.dtype)
+    }
+
+    fn probe_many(&mut self, ys: &[f64]) -> Result<Vec<ProbeStats>> {
+        if ys.is_empty() {
+            return Ok(Vec::new());
         }
-        Ok(ProbeStats {
-            s_lo: literal_scalar_f64(&out[0], self.dtype)?,
-            s_hi: literal_scalar_f64(&out[1], self.dtype)?,
-            c_lt: literal_scalar_i32(&out[2])? as u64,
-            c_eq: literal_scalar_i32(&out[3])? as u64,
-            c_gt: literal_scalar_i32(&out[4])? as u64,
-        })
+        // Forward the whole ladder in one batch round-trip: resolve the
+        // executable once, upload every probe scalar up front, then launch
+        // back-to-back against the resident buffer with no interleaved
+        // host work. The AOT artifact set has no fused ladder kernel yet
+        // (ROADMAP open item), so each launch is still a real device
+        // reduction and is counted as one — unlike the host oracle, which
+        // sweeps the whole ladder in a single pass.
+        let exe = self
+            .rt
+            .executable(Kernel::FusedObjective, self.flavor, self.dtype, self.bucket, None)?;
+        let mut scalar_bufs = Vec::with_capacity(ys.len());
+        for &y in ys {
+            scalar_bufs.push(self.rt.upload_scalar(y, self.dtype)?);
+        }
+        let mut raw = Vec::with_capacity(ys.len());
+        for sb in &scalar_bufs {
+            let args = [&self.buf, sb, &self.nv_buf];
+            self.probes += 1;
+            raw.push(exe.run(&args)?);
+        }
+        raw.iter().map(|out| parse_probe_stats(out, self.dtype)).collect()
     }
 
     fn neighbors(&mut self, y: f64) -> Result<Neighbors> {

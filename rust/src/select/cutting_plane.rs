@@ -9,10 +9,19 @@
 //! ```
 //!
 //! The bracket [y_L, y_R] always contains the minimizer; each iteration
-//! costs exactly one fused device reduction. Seeding uses a single
-//! (min, max, sum) reduction with closed-form f/g at the extremes (§IV), so
-//! total cost is `maxit + 1` reductions — the paper's complexity claim,
-//! asserted by our tests via the evaluator's probe counter.
+//! costs exactly one fused device reduction. Since the batched-probe
+//! engine landed, that one reduction is a **two-probe ladder**
+//! (`probe_many`): the Kelley model minimizer and the bisection midpoint
+//! safeguard are evaluated in the same fused pass, so every iteration gets
+//! both the superlinear model cut and a guaranteed ≥ half-bracket shrink.
+//! Seeding uses a single (min, max, sum) reduction with closed-form f/g at
+//! the extremes (§IV), so total cost is `maxit + 1` reductions — the
+//! paper's complexity claim, asserted by our tests via the evaluator's
+//! probe counter. Caveat: that budget holds on evaluators with a native
+//! fused `probe_many` (host oracle, sharded groups); the PJRT device
+//! backend has no ladder artifact yet and honestly counts the pair as two
+//! launches (up to `2·maxit + 1` device reductions) until the
+//! `fused_ladder` kernel lands (ROADMAP open item).
 //!
 //! Unlike bisection/golden/Brent, the cut exploits both convexity and the
 //! subgradient, which is why it is insensitive to extreme outliers (Fig. 5):
@@ -136,49 +145,73 @@ pub fn cutting_plane(
     let mut approx = 0.5 * (y_l + y_r);
     let mut optimal_at = None;
 
-    while iterations < budget {
-        // Model minimizer (Algorithm 1, step 1.1) with a bisection guard:
-        // denominators can collapse once f is flat to double precision.
+    'outer: while iterations < budget {
+        // Fused candidate pair, ONE probe-ladder pass per iteration: the
+        // Kelley model minimizer (step 1.1) and the bisection midpoint
+        // safeguard travel together through `probe_many`. The model cut
+        // keeps the outlier-insensitive superlinear step (Fig. 5); the
+        // midpoint guarantees ≥ half-bracket progress per pass; the pass
+        // budget stays the paper's `maxit + 1` reductions.
         let denom = g_l - g_r;
-        let mut t = if denom.abs() > 0.0 {
+        let t_model = if denom.abs() > 0.0 {
             (f_r - f_l + y_l * g_l - y_r * g_r) / denom
         } else {
-            0.5 * (y_l + y_r)
+            f64::NAN // flat model: fall back to the midpoint alone
         };
-        if !t.is_finite() || t <= y_l || t >= y_r {
-            t = 0.5 * (y_l + y_r);
-            if t <= y_l || t >= y_r {
-                break; // bracket exhausted to adjacent floats
-            }
+        let t_mid = 0.5 * (y_l + y_r);
+        let mut cands = [0.0f64; 2];
+        let mut m = 0;
+        if t_model.is_finite() && t_model > y_l && t_model < y_r {
+            cands[m] = t_model;
+            m += 1;
         }
+        if t_mid > y_l && t_mid < y_r && (m == 0 || t_mid != cands[0]) {
+            cands[m] = t_mid;
+            m += 1;
+        }
+        if m == 0 {
+            break; // bracket exhausted to adjacent floats
+        }
+        cands[..m].sort_by(|a, b| a.total_cmp(b));
 
-        let s = phases.time("cp_iterations", || ev.probe(t))?;
+        let stats = phases.time("cp_iterations", || ev.probe_many(&cands[..m]))?;
         iterations += 1;
-        let f_t = spec.f(&s);
-        let g_t = spec.g_point(&s);
-        if opts.trace {
-            trace.push(TracePoint { iter: iterations, y: t, f: f_t, g: g_t, y_l, y_r });
-        }
-        approx = t;
 
-        // Stopping criteria (step 1.3).
-        if spec.is_optimal(&s) {
-            optimal_at = Some(t);
-            break;
-        }
-        if opts.tol_g > 0.0 && g_t.abs() <= opts.tol_g {
-            break;
-        }
+        let mut f_best = f64::INFINITY;
+        for (&t, s) in cands[..m].iter().zip(&stats) {
+            let f_t = spec.f(s);
+            let g_t = spec.g_point(s);
+            if opts.trace {
+                trace.push(TracePoint { iter: iterations, y: t, f: f_t, g: g_t, y_l, y_r });
+            }
+            if f_t < f_best {
+                f_best = f_t;
+                approx = t;
+            }
 
-        // Bracket update (step 1.4).
-        if g_t < 0.0 {
-            y_l = t;
-            f_l = f_t;
-            g_l = g_t;
-        } else {
-            y_r = t;
-            f_r = f_t;
-            g_r = g_t;
+            // Stopping criteria (step 1.3), per candidate.
+            if spec.is_optimal(s) {
+                optimal_at = Some(t);
+                break 'outer;
+            }
+            if opts.tol_g > 0.0 && g_t.abs() <= opts.tol_g {
+                break 'outer;
+            }
+
+            // Bracket update (step 1.4) — skip a candidate an earlier cut
+            // of this same pass has already pushed out of the bracket.
+            if t <= y_l || t >= y_r {
+                continue;
+            }
+            if g_t < 0.0 {
+                y_l = t;
+                f_l = f_t;
+                g_l = g_t;
+            } else {
+                y_r = t;
+                f_r = f_t;
+                g_r = g_t;
+            }
         }
 
         if (y_r - y_l) <= opts.tol_f * y_l.abs().max(y_r.abs()).max(1.0) {

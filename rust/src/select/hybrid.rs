@@ -10,7 +10,7 @@
 
 use super::cutting_plane::{cutting_plane, CpOptions};
 use super::exact;
-use super::objective::{DType, Evaluator};
+use super::objective::{DType, Evaluator, IntervalCounts};
 use super::radix::{radix_sort_f32, radix_sort_f64};
 use crate::util::PhaseTimer;
 use crate::{algo_err, Result};
@@ -53,6 +53,7 @@ pub fn hybrid_select(
     let mut budget = opts.cp_iters;
     let mut extra_rounds = 0;
     let (mut bracket, mut cp_iterations, mut maybe_exact);
+    let mut peeked: Option<IntervalCounts> = None;
     loop {
         let cp = cutting_plane(
             ev,
@@ -72,6 +73,9 @@ pub fn hybrid_select(
         if (ic.c_in as f64) <= opts.max_fraction * n as f64
             || extra_rounds >= opts.max_extra
         {
+            // The bracket can't change between here and phase 2: keep the
+            // counts so copy_if doesn't re-issue the same reduction.
+            peeked = Some(ic);
             break;
         }
         extra_rounds += 1;
@@ -84,8 +88,12 @@ pub fn hybrid_select(
 
     let (y_l, y_r) = bracket;
 
-    // Phase 2: occupancy + compaction (the paper's copy_if).
-    let ic = phases.time("copy_if", || ev.interval(y_l, y_r))?;
+    // Phase 2: occupancy (reusing the loop's peek) + compaction (the
+    // paper's copy_if).
+    let ic = match peeked {
+        Some(ic) => ic,
+        None => phases.time("copy_if", || ev.interval(y_l, y_r))?,
+    };
     let m = ic.c_le as usize;
 
     if k <= m {

@@ -10,6 +10,7 @@
 //! | Brent's minimization          | [`brent::brent_minimize`]             |
 //! | Brent's nonlinear eqn         | [`brent::brent_root`]                 |
 //! | (excluded: golden section)    | [`golden::golden_section`] (ablation) |
+//! | (beyond the paper) p-section  | [`multisection::multisection`] — p probes per fused pass |
 //!
 //! All probe-based methods drive the [`Evaluator`] abstraction and therefore
 //! run unchanged against the host oracle, the PJRT device runtime, or the
@@ -22,6 +23,7 @@ pub mod exact;
 pub mod golden;
 pub mod gpu_model;
 pub mod hybrid;
+pub mod multisection;
 pub mod objective;
 pub mod quickselect;
 pub mod radix;
@@ -30,6 +32,7 @@ pub mod weighted;
 
 pub use cutting_plane::{CpOptions, CpOutcome, TracePoint};
 pub use hybrid::{HybridOptions, HybridOutcome};
+pub use multisection::{MultiOutcome, MultisectOptions, MultisectOutcome};
 pub use objective::{
     DType, Evaluator, HostEvaluator, InitStats, IntervalCounts, Neighbors, ObjectiveSpec,
     ProbeStats,
@@ -46,6 +49,9 @@ pub enum Method {
     /// The paper's headline hybrid: CP + copy_if + radix sort of z.
     Hybrid,
     Bisection,
+    /// p-section: batched bisection probing p points per fused pass
+    /// (log_{p+1} passes instead of log_2).
+    Multisection,
     BrentMinimize,
     BrentRoot,
     GoldenSection,
@@ -58,10 +64,11 @@ pub enum Method {
 }
 
 impl Method {
-    pub const ALL: [Method; 9] = [
+    pub const ALL: [Method; 10] = [
         Method::CuttingPlane,
         Method::Hybrid,
         Method::Bisection,
+        Method::Multisection,
         Method::BrentMinimize,
         Method::BrentRoot,
         Method::GoldenSection,
@@ -75,6 +82,7 @@ impl Method {
             Method::CuttingPlane => "cutting-plane",
             Method::Hybrid => "hybrid",
             Method::Bisection => "bisection",
+            Method::Multisection => "multisection",
             Method::BrentMinimize => "brent-min",
             Method::BrentRoot => "brent-root",
             Method::GoldenSection => "golden",
@@ -115,7 +123,7 @@ pub fn order_statistic(
     method: Method,
 ) -> Result<SelectResult> {
     let probes0 = ev.probes();
-    let (value, iterations, mut phases) = match method {
+    let (value, iterations, phases) = match method {
         Method::CuttingPlane => {
             let o = cutting_plane::cutting_plane(ev, k, &CpOptions::default())?;
             (o.value, o.iterations, o.phases)
@@ -127,6 +135,10 @@ pub fn order_statistic(
         Method::Bisection => {
             let o = bisection::bisection(ev, k, &bisection::BisectOptions::default())?;
             (o.value, o.iterations, o.phases)
+        }
+        Method::Multisection => {
+            let o = multisection::multisection(ev, k, &MultisectOptions::default())?;
+            (o.value, o.passes, o.phases)
         }
         Method::BrentMinimize => {
             let o = brent::brent_minimize(ev, k, &brent::BrentOptions::default())?;
@@ -165,7 +177,6 @@ pub fn order_statistic(
             (v, 0, phases)
         }
     };
-    let _ = &mut phases;
     Ok(SelectResult {
         value,
         method,

@@ -1,0 +1,477 @@
+//! p-section: generalized bisection probing `p` points per fused pass.
+//!
+//! Bisection needs `log₂(range/ε)` passes because each pass asks one rank
+//! question. With batched multi-probe evaluation
+//! ([`Evaluator::probe_many`]) one pass can ask `p` questions at once: the
+//! bracket is divided into `p + 1` equal segments, the whole probe ladder
+//! is evaluated in a **single fused reduction**, and the rank test
+//! (`c_le < k`?) localizes the answer to one segment — so the bracket
+//! shrinks by `p + 1` per pass and convergence takes
+//! `log_{p+1}(range/ε)` passes. With the default `p = 15` that is 4× fewer
+//! passes than bisection for the same tolerance (16× shrink per pass), at
+//! the cost of `p` compares per element per pass — a good trade whenever
+//! passes (reductions) dominate, which is the paper's central premise.
+//!
+//! This is the successive-binning idea of Tibshirani (2008) and the
+//! multi-pivot batching of Azzini et al. (2023) expressed through the
+//! evaluator abstraction; see PAPERS.md.
+//!
+//! [`multi_order_statistics`] extends the same ladder sharing across
+//! *queries*: the sufficient statistics of a probe are rank-independent, so
+//! one fused ladder pass serves any number of concurrent `k`s against the
+//! same array. The coordinator uses it to coalesce queued same-dataset
+//! queries (`coordinator::SelectionService::query_many`).
+
+use std::collections::HashMap;
+
+use super::exact;
+use super::objective::{Evaluator, ObjectiveSpec};
+use crate::util::PhaseTimer;
+use crate::Result;
+
+#[derive(Debug, Clone)]
+pub struct MultisectOptions {
+    /// Probes per fused pass; the bracket shrinks by `probes_per_pass + 1`
+    /// each pass (1 degenerates to plain bisection).
+    pub probes_per_pass: usize,
+    /// Hard cap on ladder passes.
+    pub max_passes: usize,
+    /// Relative bracket-width tolerance (same meaning as bisection's).
+    pub tol: f64,
+}
+
+impl Default for MultisectOptions {
+    fn default() -> Self {
+        MultisectOptions { probes_per_pass: 15, max_passes: 64, tol: 1e-12 }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct MultisectOutcome {
+    pub value: f64,
+    /// Fused ladder passes executed — each is ONE device reduction.
+    pub passes: usize,
+    pub phases: PhaseTimer,
+}
+
+/// Evenly spaced interior ladder for the open bracket `(lo, hi)`.
+fn ladder_points(lo: f64, hi: f64, p: usize) -> Vec<f64> {
+    let width = hi - lo;
+    let mut ys = Vec::with_capacity(p);
+    for i in 1..=p {
+        let y = lo + width * i as f64 / (p + 1) as f64;
+        // strictly interior and strictly increasing (guards float collapse
+        // once the bracket nears adjacent representable values)
+        if y > lo && y < hi && ys.last().map_or(true, |&prev| y > prev) {
+            ys.push(y);
+        }
+    }
+    ys
+}
+
+/// p-section for the k-th smallest element; exact via rank resolution.
+pub fn multisection(
+    ev: &mut dyn Evaluator,
+    k: usize,
+    opts: &MultisectOptions,
+) -> Result<MultisectOutcome> {
+    let n = ev.n();
+    let spec = ObjectiveSpec::order(n, k)?;
+    let mut phases = PhaseTimer::new();
+
+    let init = phases.time("iterations", || ev.init_stats())?;
+    let (mut lo, mut hi) = (init.min, init.max);
+    if lo == hi || k == 1 || k == n {
+        let v = if k == n { hi } else { lo };
+        return Ok(MultisectOutcome { value: v, passes: 0, phases });
+    }
+
+    let p = opts.probes_per_pass.max(1);
+    let mut passes = 0;
+    let mut resolved = None;
+    while passes < opts.max_passes {
+        let ys = ladder_points(lo, hi, p);
+        if ys.is_empty() {
+            break; // bracket exhausted to adjacent floats
+        }
+        let stats = phases.time("iterations", || ev.probe_many(&ys))?;
+        passes += 1;
+        for (y, s) in ys.iter().zip(&stats) {
+            if spec.is_optimal(s) {
+                // 0 ∈ ∂f at a probe forces c_eq ≥ 1: the (canonicalized)
+                // probe IS the data value of rank k.
+                resolved = Some(ev.canon(*y));
+                break;
+            }
+            if spec.answer_above(s) {
+                if *y > lo {
+                    lo = *y;
+                }
+            } else if *y < hi {
+                hi = *y;
+            }
+        }
+        if resolved.is_some() {
+            break;
+        }
+        if (hi - lo) <= opts.tol * lo.abs().max(hi.abs()).max(1.0) {
+            break;
+        }
+    }
+
+    if let Some(value) = resolved {
+        return Ok(MultisectOutcome { value, passes, phases });
+    }
+    let mid = 0.5 * (lo + hi);
+    let value = phases.time("exact_fixup", || {
+        exact::resolve_with_bracket(ev, k, mid, Some((lo, hi)))
+    })?;
+    Ok(MultisectOutcome { value, passes, phases })
+}
+
+/// Result of a shared multi-query run.
+#[derive(Debug, Clone)]
+pub struct MultiOutcome {
+    /// Exact order statistics, positionally aligned with the input `ks`.
+    pub values: Vec<f64>,
+    /// Shared fused ladder passes (excludes the one shared seed reduction
+    /// and the per-query exact-fixup tail).
+    pub passes: usize,
+}
+
+/// Solve many order statistics of one array with **shared** ladder passes.
+///
+/// All queries see every probe of every pass: the sufficient statistics of
+/// a probe y are properties of (data, y) alone, so each query applies its
+/// own rank test to the same [`super::objective::ProbeStats`]. N queries on
+/// one resident array therefore cost ~one probe-ladder pass per iteration
+/// instead of N (identical brackets — e.g. N concurrent medians — collapse
+/// to literally the same ladder).
+pub fn multi_order_statistics(
+    ev: &mut dyn Evaluator,
+    ks: &[usize],
+    opts: &MultisectOptions,
+) -> Result<MultiOutcome> {
+    let n = ev.n();
+    if ks.is_empty() {
+        return Ok(MultiOutcome { values: Vec::new(), passes: 0 });
+    }
+    let specs: Vec<ObjectiveSpec> = ks
+        .iter()
+        .map(|&k| ObjectiveSpec::order(n, k))
+        .collect::<Result<Vec<_>>>()?;
+
+    let init = ev.init_stats()?; // one shared seed reduction
+    struct Q {
+        lo: f64,
+        hi: f64,
+        done: Option<f64>,
+    }
+    let mut qs: Vec<Q> = ks
+        .iter()
+        .map(|&k| {
+            let done = if init.min == init.max || k == 1 {
+                Some(init.min)
+            } else if k == n {
+                Some(init.max)
+            } else {
+                None
+            };
+            Q { lo: init.min, hi: init.max, done }
+        })
+        .collect();
+
+    let p_total = opts.probes_per_pass.max(1);
+    // Identical ranks (e.g. N concurrent medians) have identical answers:
+    // resolve the fixup tail once per distinct rank.
+    let mut memo: HashMap<usize, f64> = HashMap::new();
+    let mut passes = 0;
+    while passes < opts.max_passes {
+        let unresolved: Vec<usize> = (0..qs.len()).filter(|&i| qs[i].done.is_none()).collect();
+        if unresolved.is_empty() {
+            break;
+        }
+        // Distribute the pass budget over *distinct* open brackets, so N
+        // identical queries (e.g. N concurrent medians) ride one
+        // full-resolution ladder instead of splitting the budget N ways.
+        let mut brackets: Vec<(f64, f64)> = Vec::new();
+        for &i in &unresolved {
+            let b = (qs[i].lo, qs[i].hi);
+            if !brackets.contains(&b) {
+                brackets.push(b);
+            }
+        }
+        let per_b = (p_total / brackets.len()).max(1);
+        let mut ys: Vec<f64> = Vec::new();
+        for &(lo, hi) in &brackets {
+            ys.extend(ladder_points(lo, hi, per_b));
+        }
+        ys.sort_by(|a, b| a.total_cmp(b));
+        ys.dedup();
+        if ys.is_empty() {
+            break;
+        }
+        let stats = ev.probe_many(&ys)?; // ONE fused pass serves every query
+        passes += 1;
+        for &i in &unresolved {
+            {
+                let q = &mut qs[i];
+                let spec = &specs[i];
+                for (y, s) in ys.iter().zip(&stats) {
+                    if spec.is_optimal(s) {
+                        q.done = Some(ev.canon(*y));
+                        break;
+                    }
+                    if spec.answer_above(s) {
+                        if *y > q.lo {
+                            q.lo = *y;
+                        }
+                    } else if *y < q.hi {
+                        q.hi = *y;
+                    }
+                }
+            }
+            let (lo, hi, open) = {
+                let q = &qs[i];
+                (q.lo, q.hi, q.done.is_none())
+            };
+            if open && (hi - lo) <= opts.tol * lo.abs().max(hi.abs()).max(1.0) {
+                let v = match memo.get(&ks[i]) {
+                    Some(&v) => v,
+                    None => {
+                        let v = exact::resolve_with_bracket(
+                            ev,
+                            ks[i],
+                            0.5 * (lo + hi),
+                            Some((lo, hi)),
+                        )?;
+                        memo.insert(ks[i], v);
+                        v
+                    }
+                };
+                qs[i].done = Some(v);
+            }
+        }
+    }
+    // Pass budget exhausted with open queries: finish them individually.
+    for (i, q) in qs.iter_mut().enumerate() {
+        if q.done.is_none() {
+            let v = match memo.get(&ks[i]) {
+                Some(&v) => v,
+                None => {
+                    let v = exact::resolve_with_bracket(
+                        ev,
+                        ks[i],
+                        0.5 * (q.lo + q.hi),
+                        Some((q.lo, q.hi)),
+                    )?;
+                    memo.insert(ks[i], v);
+                    v
+                }
+            };
+            q.done = Some(v);
+        }
+    }
+    Ok(MultiOutcome {
+        values: qs.into_iter().map(|q| q.done.expect("resolved")).collect(),
+        passes,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::select::objective::HostEvaluator;
+    use crate::stats::{sorted_median, sorted_order_statistic, Distribution, Rng};
+    use crate::util::median_rank;
+
+    #[test]
+    fn matches_oracle_across_distributions() {
+        let mut rng = Rng::seeded(61);
+        for d in Distribution::ALL {
+            for n in [5usize, 64, 1001, 4096] {
+                let data = d.sample_vec(&mut rng, n);
+                let mut ev = HostEvaluator::new(&data);
+                let out =
+                    multisection(&mut ev, median_rank(n), &MultisectOptions::default()).unwrap();
+                assert_eq!(out.value, sorted_median(&data), "{} n={n}", d.name());
+            }
+        }
+    }
+
+    #[test]
+    fn order_statistics_random_k() {
+        let mut rng = Rng::seeded(62);
+        let data = Distribution::Mixture2.sample_vec(&mut rng, 1000);
+        for k in [1, 7, 333, 500, 999, 1000] {
+            let mut ev = HostEvaluator::new(&data);
+            let out = multisection(&mut ev, k, &MultisectOptions::default()).unwrap();
+            assert_eq!(out.value, sorted_order_statistic(&data, k), "k={k}");
+        }
+    }
+
+    #[test]
+    fn pass_count_beats_bisection_geometrically() {
+        // p probes per pass shrink the bracket by (p+1): passes scale like
+        // log_{p+1}(range/tol), so p = 15 needs ~1/4 of bisection's passes.
+        let mut rng = Rng::seeded(63);
+        let data = Distribution::Uniform.sample_vec(&mut rng, 1 << 14);
+        let k = median_rank(data.len());
+
+        let mut ev_ms = HostEvaluator::new(&data);
+        let ms = multisection(&mut ev_ms, k, &MultisectOptions::default()).unwrap();
+        assert_eq!(ms.value, sorted_median(&data));
+
+        let mut ev_bi = HostEvaluator::new(&data);
+        let bi = crate::select::bisection::bisection(
+            &mut ev_bi,
+            k,
+            &crate::select::bisection::BisectOptions::default(),
+        )
+        .unwrap();
+        assert!(
+            ms.passes * 3 <= bi.iterations,
+            "multisection {} passes vs bisection {} iterations",
+            ms.passes,
+            bi.iterations
+        );
+    }
+
+    #[test]
+    fn meets_the_log16_pass_bound_at_2_22() {
+        // Acceptance criterion: p = 15 probes/pass reaches the exact median
+        // of n = 2²² within ⌈log₁₆(range·2/ε)⌉ passes.
+        let mut rng = Rng::seeded(64);
+        let n = 1 << 22;
+        let data = Distribution::Uniform.sample_vec(&mut rng, n);
+        let opts = MultisectOptions::default();
+        let mut ev = HostEvaluator::new(&data);
+        let out = multisection(&mut ev, median_rank(n), &opts).unwrap();
+        assert_eq!(out.value, sorted_median(&data));
+        let range: f64 = 1.0; // U(0,1) support; observed range is tighter
+        let eps = opts.tol; // relative scale is 1 on this data
+        let bound = (range * 2.0 / eps).log(16.0).ceil() as usize;
+        assert!(
+            out.passes <= bound,
+            "{} passes exceeds the log16 bound {bound}",
+            out.passes
+        );
+        // seed + passes + a handful of fixup reductions (the analytic
+        // mirror run records exactly 1 + 10 + 10 on this seed)
+        assert!(
+            ev.probes() <= out.passes as u64 + 1 + 16,
+            "probes={} passes={}",
+            ev.probes(),
+            out.passes
+        );
+    }
+
+    #[test]
+    fn probes_per_pass_one_is_bisection() {
+        let mut rng = Rng::seeded(65);
+        let data = Distribution::Normal.sample_vec(&mut rng, 2048);
+        let mut ev = HostEvaluator::new(&data);
+        let out = multisection(
+            &mut ev,
+            1024,
+            &MultisectOptions { probes_per_pass: 1, ..Default::default() },
+        )
+        .unwrap();
+        assert_eq!(out.value, sorted_order_statistic(&data, 1024));
+    }
+
+    #[test]
+    fn constant_and_tiny_arrays() {
+        let mut ev = HostEvaluator::new(&[4.0; 7]);
+        let out = multisection(&mut ev, 3, &MultisectOptions::default()).unwrap();
+        assert_eq!(out.value, 4.0);
+        assert_eq!(out.passes, 0);
+        let mut ev = HostEvaluator::new(&[2.0, 1.0]);
+        let out = multisection(&mut ev, 2, &MultisectOptions::default()).unwrap();
+        assert_eq!(out.value, 2.0);
+    }
+
+    #[test]
+    fn heavy_duplicates() {
+        let mut data = vec![5.0; 1000];
+        data.extend(std::iter::repeat(1.0).take(500));
+        data.extend(std::iter::repeat(9.0).take(500));
+        let mut rng = Rng::seeded(66);
+        rng.shuffle(&mut data);
+        for k in [1, 500, 501, 1000, 1500, 1501, 2000] {
+            let mut ev = HostEvaluator::new(&data);
+            let out = multisection(&mut ev, k, &MultisectOptions::default()).unwrap();
+            assert_eq!(out.value, sorted_order_statistic(&data, k), "k={k}");
+        }
+    }
+
+    #[test]
+    fn outliers_only_cost_log16_of_the_stretch() {
+        let mut rng = Rng::seeded(67);
+        let mut data = Distribution::Normal.sample_vec(&mut rng, 4096);
+        data[0] = 1e12;
+        let mut ev = HostEvaluator::new(&data);
+        let out = multisection(&mut ev, 2048, &MultisectOptions::default()).unwrap();
+        assert_eq!(out.value, sorted_median(&data));
+        // bisection needs ~log2(1e12/1e-12·...) ≈ 90+ iterations here;
+        // p-section divides the same stretch by 16 per pass
+        assert!(out.passes <= 30, "{} passes", out.passes);
+    }
+
+    #[test]
+    fn multi_query_shares_ladder_passes() {
+        let mut rng = Rng::seeded(68);
+        let data = Distribution::HalfNormal.sample_vec(&mut rng, 8192);
+        let ks = [1usize, 512, 2048, 4096, 4097, 6000, 8000, 8192];
+        let mut ev = HostEvaluator::new(&data);
+        let out = multi_order_statistics(&mut ev, &ks, &MultisectOptions::default()).unwrap();
+        for (k, v) in ks.iter().zip(&out.values) {
+            assert_eq!(*v, sorted_order_statistic(&data, *k), "k={k}");
+        }
+        let shared = ev.probes();
+
+        // the same queries run one-by-one cost strictly more reductions
+        let mut total_individual = 0;
+        for &k in &ks {
+            let mut ev = HostEvaluator::new(&data);
+            multisection(&mut ev, k, &MultisectOptions::default()).unwrap();
+            total_individual += ev.probes();
+        }
+        assert!(
+            shared < total_individual,
+            "shared {shared} reductions vs {total_individual} individual"
+        );
+    }
+
+    #[test]
+    fn multi_query_identical_ks_cost_one_run() {
+        let mut rng = Rng::seeded(69);
+        let data = Distribution::Normal.sample_vec(&mut rng, 4096);
+        let want = sorted_median(&data);
+        let ks = [2048usize; 8];
+        let mut ev = HostEvaluator::new(&data);
+        let out = multi_order_statistics(&mut ev, &ks, &MultisectOptions::default()).unwrap();
+        assert!(out.values.iter().all(|&v| v == want));
+        let shared = ev.probes();
+        let mut ev1 = HostEvaluator::new(&data);
+        multisection(&mut ev1, 2048, &MultisectOptions::default()).unwrap();
+        // 8 identical queries ride the single query's ladder (identical
+        // brackets dedupe to one set of rungs; the fixup tail may replay
+        // per query, so allow a small additive slack)
+        assert!(
+            shared <= ev1.probes() + 16,
+            "shared {} vs single {}",
+            shared,
+            ev1.probes()
+        );
+    }
+
+    #[test]
+    fn multi_query_rejects_bad_k() {
+        let mut ev = HostEvaluator::new(&[1.0, 2.0]);
+        assert!(multi_order_statistics(&mut ev, &[0], &MultisectOptions::default()).is_err());
+        assert!(multi_order_statistics(&mut ev, &[3], &MultisectOptions::default()).is_err());
+        let out = multi_order_statistics(&mut ev, &[], &MultisectOptions::default()).unwrap();
+        assert!(out.values.is_empty());
+    }
+}

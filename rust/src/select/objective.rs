@@ -164,6 +164,25 @@ pub trait Evaluator {
     /// Fused objective statistics at probe y.
     fn probe(&mut self, y: f64) -> Result<ProbeStats>;
 
+    /// Fused objective statistics for a whole *probe ladder* in one batch.
+    ///
+    /// This is the "probes per pass" primitive: native implementations
+    /// ([`HostEvaluator`], `device::ShardedEvaluator`) evaluate the entire
+    /// ladder in a **single fused pass** over the data — binning each
+    /// element against the sorted ladder and recovering per-probe stats by
+    /// prefix-summing the bin partials — and count the batch as **one**
+    /// reduction in [`Evaluator::probes`]. The default implementation falls
+    /// back to sequential [`Evaluator::probe`] calls (costing `ys.len()`
+    /// passes), so foreign implementations stay correct even if they never
+    /// override it.
+    ///
+    /// Results are positionally aligned with `ys`; duplicate and unordered
+    /// probe values are fine (duplicates share one ladder rung). A NaN probe
+    /// yields all-zero stats, exactly like `probe(NaN)`.
+    fn probe_many(&mut self, ys: &[f64]) -> Result<Vec<ProbeStats>> {
+        ys.iter().map(|&y| self.probe(y)).collect()
+    }
+
     /// Neighbor values + rank at y.
     fn neighbors(&mut self, y: f64) -> Result<Neighbors>;
 
@@ -179,7 +198,9 @@ pub trait Evaluator {
     /// quickselect-on-CPU baseline).
     fn download(&mut self) -> Result<Vec<f64>>;
 
-    /// Total number of device reductions issued so far.
+    /// Total number of device reductions issued so far. A natively fused
+    /// [`Evaluator::probe_many`] batch counts as one reduction (it is one
+    /// pass over the data — the unit the paper's complexity claims count).
     fn probes(&self) -> u64;
 
     /// Canonicalize a probe value through the array dtype: an f32-backed
@@ -309,10 +330,52 @@ enum HostData {
 /// 4-way unrolled so LLVM autovectorizes it — measured 14× over the naive
 /// branchy loop at n = 2²² (EXPERIMENTS.md §Perf/L3). This is the paper's
 /// "no divergence" point materialized on the CPU substrate.
+///
+/// Every pass (`probe`, `probe_many`, `init_stats`, `neighbors`,
+/// `interval`) additionally fans out across cores with `std::thread::scope`
+/// chunking — each worker runs the same branchless kernel on a 4-aligned
+/// chunk and the partials combine through the same `merge` used for
+/// multi-device shards, so the chunked pass is bit-compatible in counts and
+/// tolerance-compatible in sums with a sharded run.
 #[derive(Debug, Clone)]
 pub struct HostEvaluator {
     data: HostData,
     probes: u64,
+    /// Worker threads per pass (1 = sequential; sized from n at build).
+    threads: usize,
+}
+
+/// Minimum elements per worker before a pass fans out across cores (a
+/// thread spawn costs tens of µs; below this the sequential sweep wins).
+const PAR_MIN_CHUNK: usize = 1 << 16;
+
+fn default_threads(n: usize) -> usize {
+    let hw = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
+    hw.min(n / PAR_MIN_CHUNK).max(1)
+}
+
+/// Run `map` over ≤ `threads` chunks of `data` (4-aligned for the unrolled
+/// kernels) in a thread scope and fold the partials with `merge`.
+fn par_reduce<T: Sync, R: Send>(
+    data: &[T],
+    threads: usize,
+    map: impl Fn(&[T]) -> R + Sync,
+    merge: impl Fn(R, R) -> R,
+) -> R {
+    let t = threads.max(1).min(data.len().max(1));
+    if t == 1 {
+        return map(data);
+    }
+    let chunk = ((data.len().div_ceil(t) + 3) & !3usize).max(4);
+    let partials: Vec<R> = std::thread::scope(|s| {
+        let map = &map;
+        let handles: Vec<_> = data.chunks(chunk).map(|c| s.spawn(move || map(c))).collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("host evaluator worker panicked"))
+            .collect()
+    });
+    partials.into_iter().reduce(merge).expect("at least one chunk")
 }
 
 macro_rules! probe_kernel {
@@ -456,10 +519,115 @@ macro_rules! minmaxsum_kernel {
     }};
 }
 
+/// Per-chunk partials of one fused ladder pass (`probe_many`): bin `j`
+/// holds the count/sum of elements in `(y_{j-1}, y_j]` against the sorted
+/// ladder, plus the per-rung equality count. Mergeable across chunks and
+/// shards like every other partial in the system.
+#[derive(Debug, Clone)]
+struct LadderPartial {
+    cnt: Vec<u64>,
+    sum: Vec<f64>,
+    eq: Vec<u64>,
+}
+
+impl LadderPartial {
+    fn zero(p: usize) -> LadderPartial {
+        LadderPartial { cnt: vec![0; p + 1], sum: vec![0.0; p + 1], eq: vec![0; p] }
+    }
+
+    fn merge(mut self, other: LadderPartial) -> LadderPartial {
+        for (a, b) in self.cnt.iter_mut().zip(&other.cnt) {
+            *a += b;
+        }
+        for (a, b) in self.sum.iter_mut().zip(&other.sum) {
+            *a += b;
+        }
+        for (a, b) in self.eq.iter_mut().zip(&other.eq) {
+            *a += b;
+        }
+        self
+    }
+}
+
+macro_rules! ladder_kernel {
+    ($data:expr, $ys:expr) => {{
+        let ys: &[f64] = $ys;
+        let p = ys.len();
+        let mut part = LadderPartial::zero(p);
+        for &x in $data {
+            let x = x as f64;
+            if x.is_nan() {
+                continue; // match probe(): NaN elements fall through uncounted
+            }
+            // Branchless ladder scan: b = #{y in ladder : y < x}, i.e. the
+            // bin (y_{b-1}, y_b] the element falls into. Linear in p, which
+            // is small (≲ 64) and vectorizes; a binary search would branch.
+            let mut b = 0usize;
+            for &y in ys {
+                b += (y < x) as usize;
+            }
+            part.cnt[b] += 1;
+            part.sum[b] += x;
+            if b < p && ys[b] == x {
+                part.eq[b] += 1;
+            }
+        }
+        part
+    }};
+}
+
+/// Recover per-probe sufficient statistics from the bin partials:
+/// `c_le(y_j) = Σ_{i≤j} cnt_i` by prefix summation, then
+/// `s_lo = y·c_lt − Σ_{x<y} x` and `s_hi = Σ_{x>y} x − y·c_gt`. The high
+/// side uses **suffix** sums (not `total − prefix`), so each side's
+/// rounding error scales only with its own mass — an outlier below a probe
+/// cannot cancel away that probe's s_hi. Counts are exact regardless; the
+/// sums carry the usual sum-then-subtract error bound `O(ε·Σ_side |x|)`,
+/// vs the sequential kernel's `O(ε·Σ_side |x−y|)`.
+fn compose_ladder(ys: &[f64], part: &LadderPartial) -> Vec<ProbeStats> {
+    let p = ys.len();
+    let mut c_gt_suf = vec![0u64; p];
+    let mut s_gt_suf = vec![0.0f64; p];
+    let mut cacc = 0u64;
+    let mut sacc = 0.0f64;
+    for j in (1..=p).rev() {
+        cacc += part.cnt[j];
+        sacc += part.sum[j];
+        c_gt_suf[j - 1] = cacc;
+        s_gt_suf[j - 1] = sacc;
+    }
+    let mut out = Vec::with_capacity(p);
+    let mut c_le = 0u64;
+    let mut sum_le = 0.0f64;
+    for (j, &y) in ys.iter().enumerate() {
+        c_le += part.cnt[j];
+        sum_le += part.sum[j];
+        let c_eq = part.eq[j];
+        let c_lt = c_le - c_eq;
+        let c_gt = c_gt_suf[j];
+        // (branch also avoids inf·0 = NaN for an infinite probe value)
+        let sum_lt = if c_eq == 0 { sum_le } else { sum_le - y * c_eq as f64 };
+        // Guard the empty sides: avoids inf·0 = NaN for infinite probes and
+        // keeps the mathematically-zero sums exactly zero.
+        let s_lo = if c_lt == 0 { 0.0 } else { (y * c_lt as f64 - sum_lt).max(0.0) };
+        let s_hi = if c_gt == 0 {
+            0.0
+        } else {
+            (s_gt_suf[j] - y * c_gt as f64).max(0.0)
+        };
+        out.push(ProbeStats { s_lo, s_hi, c_lt, c_eq, c_gt });
+    }
+    out
+}
+
 impl HostEvaluator {
     /// f64 storage.
     pub fn new(data: &[f64]) -> Self {
-        Self { data: HostData::F64(data.to_vec()), probes: 0 }
+        Self {
+            data: HostData::F64(data.to_vec()),
+            probes: 0,
+            threads: default_threads(data.len()),
+        }
     }
 
     /// f32 storage (values rounded to f32, as on a single-precision device).
@@ -467,11 +635,24 @@ impl HostEvaluator {
         Self {
             data: HostData::F32(data.iter().map(|&v| v as f32).collect()),
             probes: 0,
+            threads: default_threads(data.len()),
         }
     }
 
     pub fn from_f32(data: Vec<f32>) -> Self {
-        Self { data: HostData::F32(data), probes: 0 }
+        let threads = default_threads(data.len());
+        Self { data: HostData::F32(data), probes: 0, threads }
+    }
+
+    /// Override the per-pass worker count (tests force multi-threaded
+    /// chunking on small arrays; 1 restores the sequential sweep).
+    pub fn with_threads(mut self, threads: usize) -> Self {
+        self.threads = threads.max(1);
+        self
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
     }
 
     pub fn into_f64_vec(self) -> Vec<f64> {
@@ -503,39 +684,88 @@ impl Evaluator for HostEvaluator {
             return Err(invalid_arg!("empty input"));
         }
         self.probes += 1;
+        let t = self.threads;
         Ok(match &self.data {
-            HostData::F64(v) => minmaxsum_kernel!(v),
-            HostData::F32(v) => minmaxsum_kernel!(v),
+            HostData::F64(v) => {
+                par_reduce(v, t, |c| minmaxsum_kernel!(c), |a, b| a.merge(&b))
+            }
+            HostData::F32(v) => {
+                par_reduce(v, t, |c| minmaxsum_kernel!(c), |a, b| a.merge(&b))
+            }
         })
     }
 
     fn probe(&mut self, y: f64) -> Result<ProbeStats> {
         self.probes += 1;
         let y = self.canon(y); // f32 storage compares in f32, like a device
+        let t = self.threads;
         // NaN differences fall through uncounted in both the unrolled and
         // the remainder loop — matching the device kernels, whose
         // comparisons are all false on NaN.
         Ok(match &self.data {
-            HostData::F64(v) => probe_kernel!(v, y),
-            HostData::F32(v) => probe_kernel!(v, y),
+            HostData::F64(v) => par_reduce(v, t, |c| probe_kernel!(c, y), |a, b| a.merge(&b)),
+            HostData::F32(v) => par_reduce(v, t, |c| probe_kernel!(c, y), |a, b| a.merge(&b)),
         })
+    }
+
+    fn probe_many(&mut self, ys: &[f64]) -> Result<Vec<ProbeStats>> {
+        if ys.is_empty() {
+            return Ok(Vec::new());
+        }
+        self.probes += 1; // the whole ladder is ONE fused pass
+        let canon: Vec<f64> = ys.iter().map(|&y| self.canon(y)).collect();
+        let mut ladder: Vec<f64> = canon.iter().copied().filter(|y| !y.is_nan()).collect();
+        ladder.sort_by(|a, b| a.total_cmp(b));
+        ladder.dedup();
+        let zero = ProbeStats { s_lo: 0.0, s_hi: 0.0, c_lt: 0, c_eq: 0, c_gt: 0 };
+        if ladder.is_empty() {
+            return Ok(vec![zero; canon.len()]); // all-NaN ladder, like probe(NaN)
+        }
+        let t = self.threads;
+        let rungs = &ladder;
+        let part = match &self.data {
+            HostData::F64(v) => {
+                par_reduce(v, t, |c| ladder_kernel!(c, rungs), LadderPartial::merge)
+            }
+            HostData::F32(v) => {
+                par_reduce(v, t, |c| ladder_kernel!(c, rungs), LadderPartial::merge)
+            }
+        };
+        let stats = compose_ladder(&ladder, &part);
+        // Back to the caller's probe order; duplicates share one rung.
+        Ok(canon
+            .iter()
+            .map(|&y| {
+                if y.is_nan() {
+                    zero
+                } else {
+                    stats[ladder.partition_point(|&l| l < y)]
+                }
+            })
+            .collect())
     }
 
     fn neighbors(&mut self, y: f64) -> Result<Neighbors> {
         self.probes += 1;
         let y = self.canon(y);
+        let t = self.threads;
         Ok(match &self.data {
-            HostData::F64(v) => neighbors_kernel!(v, y),
-            HostData::F32(v) => neighbors_kernel!(v, y),
+            HostData::F64(v) => par_reduce(v, t, |c| neighbors_kernel!(c, y), |a, b| a.merge(&b)),
+            HostData::F32(v) => par_reduce(v, t, |c| neighbors_kernel!(c, y), |a, b| a.merge(&b)),
         })
     }
 
     fn interval(&mut self, lo: f64, hi: f64) -> Result<IntervalCounts> {
         self.probes += 1;
         let (lo, hi) = (self.canon(lo), self.canon(hi));
+        let t = self.threads;
         Ok(match &self.data {
-            HostData::F64(v) => interval_kernel!(v, lo, hi),
-            HostData::F32(v) => interval_kernel!(v, lo, hi),
+            HostData::F64(v) => {
+                par_reduce(v, t, |c| interval_kernel!(c, lo, hi), |a, b| a.merge(&b))
+            }
+            HostData::F32(v) => {
+                par_reduce(v, t, |c| interval_kernel!(c, lo, hi), |a, b| a.merge(&b))
+            }
         })
     }
 
@@ -733,5 +963,127 @@ mod tests {
         assert!(ObjectiveSpec::order(5, 0).is_err());
         assert!(ObjectiveSpec::order(5, 6).is_err());
         assert!(ObjectiveSpec::order(0, 1).is_err());
+    }
+
+    fn assert_stats_close(a: &ProbeStats, b: &ProbeStats, scale: f64, ctx: &str) {
+        assert_eq!((a.c_lt, a.c_eq, a.c_gt), (b.c_lt, b.c_eq, b.c_gt), "{ctx}");
+        let tol = 1e-9 * scale.max(1.0);
+        assert!((a.s_lo - b.s_lo).abs() <= tol, "{ctx}: s_lo {} vs {}", a.s_lo, b.s_lo);
+        assert!((a.s_hi - b.s_hi).abs() <= tol, "{ctx}: s_hi {} vs {}", a.s_hi, b.s_hi);
+    }
+
+    #[test]
+    fn probe_many_matches_sequential_probes() {
+        let data = [3.0, -1.0, 4.0, 1.5, 9.0, 2.5, 2.5, 2.5, -7.0];
+        // unsorted ladder with duplicates, data values, and out-of-range probes
+        let ys = [2.5, -100.0, 9.0, 2.5, 0.0, 100.0, 3.7];
+        let mut fused = ev(&data);
+        let batch = fused.probe_many(&ys).unwrap();
+        assert_eq!(batch.len(), ys.len());
+        let mut seq = ev(&data);
+        for (y, got) in ys.iter().zip(&batch) {
+            let want = seq.probe(*y).unwrap();
+            assert_stats_close(got, &want, 1e3, &format!("y={y}"));
+        }
+        assert_eq!(fused.probes(), 1, "whole ladder must be one fused pass");
+    }
+
+    #[test]
+    fn probe_many_f32_quantizes_like_probe() {
+        let data = [0.1, 0.2, 0.3, 0.2, 0.7];
+        let ys = [0.2, 0.1000000001, 0.65];
+        let mut fused = HostEvaluator::new_f32(&data);
+        let batch = fused.probe_many(&ys).unwrap();
+        let mut seq = HostEvaluator::new_f32(&data);
+        for (y, got) in ys.iter().zip(&batch) {
+            let want = seq.probe(*y).unwrap();
+            assert_stats_close(got, &want, 1.0, &format!("f32 y={y}"));
+        }
+        // 0.2 is a data value in f32: equality must be detected
+        assert_eq!(batch[0].c_eq, 2);
+    }
+
+    #[test]
+    fn probe_many_handles_nan_and_infinite_probes() {
+        let data = [1.0, 2.0, 3.0];
+        let mut e = ev(&data);
+        let batch = e.probe_many(&[f64::NAN, f64::INFINITY, f64::NEG_INFINITY]).unwrap();
+        let mut seq = ev(&data);
+        assert_eq!(batch[0], seq.probe(f64::NAN).unwrap());
+        assert_eq!(
+            (batch[1].c_lt, batch[1].c_eq, batch[1].c_gt),
+            (3, 0, 0),
+            "+inf probe sees everything below"
+        );
+        assert_eq!(batch[1].s_lo, f64::INFINITY);
+        assert_eq!(batch[1].s_hi, 0.0);
+        assert_eq!((batch[2].c_lt, batch[2].c_eq, batch[2].c_gt), (0, 0, 3));
+        assert_eq!(batch[2].s_lo, 0.0);
+        assert_eq!(batch[2].s_hi, f64::INFINITY);
+    }
+
+    #[test]
+    fn probe_many_skips_nan_data_like_probe() {
+        let data = [1.0, f64::NAN, 3.0, f64::NAN, 5.0];
+        let mut fused = ev(&data);
+        let batch = fused.probe_many(&[0.0, 3.0, 9.0]).unwrap();
+        let mut seq = ev(&data);
+        for (y, got) in [0.0, 3.0, 9.0].iter().zip(&batch) {
+            assert_eq!(*got, seq.probe(*y).unwrap(), "y={y}");
+        }
+    }
+
+    #[test]
+    fn forced_multithreading_matches_sequential() {
+        // deterministic pseudo-random data, small enough to run everywhere,
+        // forced onto 4 workers so the chunk/merge path actually executes
+        let data: Vec<f64> = (0u64..1003)
+            .map(|i| ((i * 2654435761 % 1000) as f64) / 10.0 - 40.0)
+            .collect();
+        let mut par = ev(&data).with_threads(4);
+        let mut seq = ev(&data).with_threads(1);
+        assert_eq!(par.threads(), 4);
+        for y in [-100.0, -3.5, 0.0, 17.3, 99.0] {
+            let a = par.probe(y).unwrap();
+            let b = seq.probe(y).unwrap();
+            assert_stats_close(&a, &b, 1e5, &format!("probe y={y}"));
+            assert_eq!(par.neighbors(y).unwrap(), seq.neighbors(y).unwrap(), "y={y}");
+        }
+        let (ia, ib) = (par.init_stats().unwrap(), seq.init_stats().unwrap());
+        assert_eq!((ia.min, ia.max), (ib.min, ib.max));
+        assert!((ia.sum - ib.sum).abs() <= 1e-9 * ib.sum.abs().max(1.0));
+        assert_eq!(par.interval(-3.0, 40.0).unwrap(), seq.interval(-3.0, 40.0).unwrap());
+        let ys = [-5.0, 0.0, 13.37, 55.5];
+        let ba = par.probe_many(&ys).unwrap();
+        let bb = seq.probe_many(&ys).unwrap();
+        for ((a, b), y) in ba.iter().zip(&bb).zip(&ys) {
+            assert_stats_close(a, b, 1e5, &format!("probe_many y={y}"));
+        }
+    }
+
+    #[test]
+    fn ladder_partials_merge_like_shards() {
+        // chunk-split ladder partials must match the unsplit pass exactly in
+        // counts — the same guarantee ProbeStats::merge gives across shards
+        let data: Vec<f64> = (0..257).map(|i| (i % 17) as f64).collect();
+        let ys = [0.0, 3.0, 8.5, 16.0];
+        let whole = ladder_kernel!(&data[..], &ys[..]);
+        let split = ladder_kernel!(&data[..100], &ys[..])
+            .merge(ladder_kernel!(&data[100..], &ys[..]));
+        assert_eq!(whole.cnt, split.cnt);
+        assert_eq!(whole.eq, split.eq);
+        for (a, b) in whole.sum.iter().zip(&split.sum) {
+            assert!((a - b).abs() <= 1e-9);
+        }
+        let sa = compose_ladder(&ys, &whole);
+        let sb = compose_ladder(&ys, &split);
+        assert_eq!(sa, sb);
+    }
+
+    #[test]
+    fn probe_many_empty_ladder() {
+        let mut e = ev(&[1.0, 2.0]);
+        assert!(e.probe_many(&[]).unwrap().is_empty());
+        assert_eq!(e.probes(), 0, "empty batch is not a pass");
     }
 }

@@ -1,0 +1,170 @@
+//! Property suites for the batched multi-probe engine: fused ladder
+//! equivalence, chunk/shard merge consistency, and multisection exactness.
+
+use cp_select::device::{shard_data, ShardedEvaluator};
+use cp_select::select::multisection::{
+    multi_order_statistics, multisection, MultisectOptions,
+};
+use cp_select::select::{self, Evaluator, HostEvaluator, Method, ProbeStats};
+use cp_select::stats::{sorted_order_statistic, Distribution, Rng};
+use cp_select::testkit::{check, Case, CaseGen};
+
+/// Counts must match exactly; sums to a tolerance that scales with the
+/// mass on each side (the fused composition's documented error bound).
+fn assert_equivalent(a: &ProbeStats, b: &ProbeStats, data: &[f64], y: f64, ctx: &str) {
+    assert_eq!(
+        (a.c_lt, a.c_eq, a.c_gt),
+        (b.c_lt, b.c_eq, b.c_gt),
+        "{ctx}: counts diverge at y={y}"
+    );
+    let mass: f64 = data.iter().filter(|x| x.is_finite()).map(|x| x.abs()).sum::<f64>()
+        + y.abs() * data.len() as f64;
+    for (ga, wa, name) in [(a.s_lo, b.s_lo, "s_lo"), (a.s_hi, b.s_hi, "s_hi")] {
+        if wa.is_infinite() {
+            assert_eq!(ga, wa, "{ctx}: {name} at y={y}");
+            continue;
+        }
+        let tol = 1e-12 * mass + 1e-9 * wa.abs().max(1.0);
+        assert!(
+            (ga - wa).abs() <= tol,
+            "{ctx}: {name} {ga} vs {wa} (tol {tol}) at y={y}"
+        );
+    }
+}
+
+fn random_ladder(rng: &mut Rng, c: &Case) -> Vec<f64> {
+    let n = c.data.len();
+    let mut ys = Vec::new();
+    for _ in 0..(1 + rng.below(9)) {
+        let y = match rng.below(4) {
+            0 => c.data[rng.below(n)],              // exact data value (dup-heavy)
+            1 => c.data[rng.below(n)] + rng.range(-0.5, 0.5),
+            2 => rng.range(-1e3, 1e3),
+            _ => *ys.last().unwrap_or(&0.0),        // duplicate probe
+        };
+        ys.push(y);
+    }
+    ys
+}
+
+#[test]
+fn prop_probe_many_equals_sequential_f64() {
+    let mut lrng = Rng::seeded(77);
+    check(10_000, 150, &CaseGen::default(), |c| {
+        let ys = random_ladder(&mut lrng, c);
+        let mut fused = HostEvaluator::new(&c.data);
+        let batch = fused.probe_many(&ys).map_err(|e| e.to_string())?;
+        let mut seq = HostEvaluator::new(&c.data);
+        for (y, got) in ys.iter().zip(&batch) {
+            let want = seq.probe(*y).map_err(|e| e.to_string())?;
+            assert_equivalent(got, &want, &c.data, *y, &c.label);
+        }
+        (fused.probes() == 1)
+            .then_some(())
+            .ok_or_else(|| format!("ladder cost {} passes, want 1", fused.probes()))
+    });
+}
+
+#[test]
+fn prop_probe_many_equals_sequential_f32() {
+    let mut lrng = Rng::seeded(78);
+    check(11_000, 120, &CaseGen::default(), |c| {
+        let ys = random_ladder(&mut lrng, c);
+        let mut fused = HostEvaluator::new_f32(&c.data);
+        let batch = fused.probe_many(&ys).map_err(|e| e.to_string())?;
+        let mut seq = HostEvaluator::new_f32(&c.data);
+        for (y, got) in ys.iter().zip(&batch) {
+            let want = seq.probe(*y).map_err(|e| e.to_string())?;
+            assert_equivalent(got, &want, &c.data, *y, &c.label);
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_ladder_merge_across_chunk_and_shard_splits() {
+    // A ladder pass over chunked threads and over shards must agree with
+    // the unsplit pass — counts exactly, sums within merge tolerance.
+    let mut lrng = Rng::seeded(79);
+    check(12_000, 100, &CaseGen { min_n: 2, ..Default::default() }, |c| {
+        let ys = random_ladder(&mut lrng, c);
+        let mut whole = HostEvaluator::new(&c.data);
+        let want = whole.probe_many(&ys).map_err(|e| e.to_string())?;
+
+        // forced thread chunking
+        let mut chunked = HostEvaluator::new(&c.data).with_threads(1 + c.data.len() % 4);
+        let got = chunked.probe_many(&ys).map_err(|e| e.to_string())?;
+        for ((a, b), y) in got.iter().zip(&want).zip(&ys) {
+            assert_equivalent(a, b, &c.data, *y, "chunked");
+        }
+
+        // shard split + ProbeStats::merge
+        let shards = 1 + c.data.len() % 5;
+        let evs: Vec<HostEvaluator> =
+            shard_data(&c.data, shards).into_iter().map(HostEvaluator::new).collect();
+        let mut group = ShardedEvaluator::new(evs).map_err(|e| e.to_string())?;
+        let got = group.probe_many(&ys).map_err(|e| e.to_string())?;
+        for ((a, b), y) in got.iter().zip(&want).zip(&ys) {
+            assert_equivalent(a, b, &c.data, *y, "sharded");
+        }
+        (group.probes() == 1)
+            .then_some(())
+            .ok_or_else(|| "sharded ladder must be one logical round".to_string())
+    });
+}
+
+#[test]
+fn prop_multisection_matches_sort_oracle() {
+    check(13_000, 150, &CaseGen::default(), |c| {
+        let mut ev = HostEvaluator::new(&c.data);
+        let out = multisection(&mut ev, c.k, &MultisectOptions::default())
+            .map_err(|e| e.to_string())?;
+        let want = sorted_order_statistic(&c.data, c.k);
+        (out.value == want)
+            .then_some(())
+            .ok_or_else(|| format!("multisection {} vs oracle {want}", out.value))
+    });
+}
+
+#[test]
+fn multisection_exact_for_every_k_in_the_matrix() {
+    // the same k-matrix `every_method_arbitrary_k` sweeps in select::tests
+    let mut rng = Rng::seeded(102);
+    let data = Distribution::Uniform.sample_vec(&mut rng, 500);
+    for k in [1, 17, 250, 499, 500] {
+        let want = sorted_order_statistic(&data, k);
+        let mut ev = HostEvaluator::new(&data);
+        let got = select::order_statistic(&mut ev, k, Method::Multisection).unwrap();
+        assert_eq!(got.value, want, "k={k}");
+        for p in [1usize, 2, 7, 31] {
+            let mut ev = HostEvaluator::new(&data);
+            let out = multisection(
+                &mut ev,
+                k,
+                &MultisectOptions { probes_per_pass: p, ..Default::default() },
+            )
+            .unwrap();
+            assert_eq!(out.value, want, "k={k} p={p}");
+        }
+    }
+}
+
+#[test]
+fn prop_multi_query_matches_per_query_runs() {
+    let mut lrng = Rng::seeded(80);
+    check(14_000, 60, &CaseGen { min_n: 2, ..Default::default() }, |c| {
+        let n = c.data.len();
+        let m = 1 + lrng.below(6);
+        let ks: Vec<usize> = (0..m).map(|_| 1 + lrng.below(n)).collect();
+        let mut ev = HostEvaluator::new(&c.data);
+        let out = multi_order_statistics(&mut ev, &ks, &MultisectOptions::default())
+            .map_err(|e| e.to_string())?;
+        for (k, v) in ks.iter().zip(&out.values) {
+            let want = sorted_order_statistic(&c.data, *k);
+            if *v != want {
+                return Err(format!("k={k}: {v} vs {want}"));
+            }
+        }
+        Ok(())
+    });
+}

@@ -178,3 +178,38 @@ fn bad_manifest_fails_loud() {
     assert!(Runtime::new(&tmp).is_err());
     std::fs::remove_dir_all(&tmp).ok();
 }
+
+#[test]
+fn device_probe_many_matches_host_ladder() {
+    let dir = require_artifacts!();
+    let rt = Runtime::new(&dir).unwrap();
+    let mut rng = Rng::seeded(208);
+    let data = Distribution::Mixture2.sample_vec(&mut rng, 3000);
+    let mut dev = DeviceEvaluator::upload(&rt, &data, DType::F64).unwrap();
+    let mut host = HostEvaluator::new(&data);
+    let ys = [-2.0, 0.5, 0.5, 1.4, 99.0, 103.0];
+    let a = dev.probe_many(&ys).unwrap();
+    let b = host.probe_many(&ys).unwrap();
+    assert_eq!(a.len(), b.len());
+    for (i, (da, hb)) in a.iter().zip(&b).enumerate() {
+        assert_eq!((da.c_lt, da.c_eq, da.c_gt), (hb.c_lt, hb.c_eq, hb.c_gt), "probe {i}");
+        assert!((da.s_lo - hb.s_lo).abs() <= 1e-6 * hb.s_lo.abs().max(1.0), "probe {i}");
+        assert!((da.s_hi - hb.s_hi).abs() <= 1e-6 * hb.s_hi.abs().max(1.0), "probe {i}");
+    }
+    // no ladder artifact yet: the batch runs as back-to-back launches and
+    // is honestly counted per launch (the host ladder counts once)
+    assert_eq!(dev.probes(), ys.len() as u64);
+    assert_eq!(host.probes(), 1);
+}
+
+#[test]
+fn multisection_on_device_backend() {
+    let dir = require_artifacts!();
+    let rt = Runtime::new(&dir).unwrap();
+    let mut rng = Rng::seeded(209);
+    let data = Distribution::HalfNormal.sample_vec(&mut rng, 4000);
+    let want = sorted_median(&data);
+    let mut dev = DeviceEvaluator::upload(&rt, &data, DType::F64).unwrap();
+    let r = select::median(&mut dev, Method::Multisection).unwrap();
+    assert_eq!(r.value, want);
+}
