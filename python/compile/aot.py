@@ -37,6 +37,11 @@ JNP_DTYPES = {"f32": jnp.float32, "f64": jnp.float64, "i32": jnp.int32}
 # variables + intercept). The paper's examples are low-dimensional.
 DEFAULT_P = 8
 
+# Ladder-width buckets for ``fused_ladder``: the runtime pads a probe
+# ladder to the nearest width by repeating the last rung, so a handful of
+# buckets covers every pass shape (multisection default is the widest).
+LADDER_WIDTHS = (3, 7, 15)
+
 MANIFEST_VERSION = 2
 
 
@@ -56,7 +61,7 @@ def hlo_op_report(text: str) -> dict:
     for line in text.splitlines():
         line = line.strip()
         if "=" not in line or line.startswith(("HloModule", "ENTRY", "//", "%")):
-            pass
+            continue
         body = line.split("=", 1)[-1].strip()
         # e.g. "f32[4096]{0} add(f32[4096]{0} ..." -> "add"
         parts = body.split("(", 1)
@@ -100,10 +105,14 @@ def entry_plan(min_log2n: int, max_log2n: int, p: int,
             plan.append(("minmaxsum", "jnp", dt, n, None))
             plan.append(("neighbors", "jnp", dt, n, None))
             plan.append(("interval_count", "jnp", dt, n, None))
+            for w in LADDER_WIDTHS:
+                plan.append(("fused_ladder", "jnp", dt, n, w))
             if n <= pallas_cap:
                 plan.append(("fused_objective", "pallas", dt, n, None))
                 plan.append(("minmaxsum", "pallas", dt, n, None))
                 plan.append(("neighbors", "pallas", dt, n, None))
+                for w in LADDER_WIDTHS:
+                    plan.append(("fused_ladder", "pallas", dt, n, w))
         for n in small_buckets:
             plan.append(("threshold_stats", "jnp", dt, n, None))
             plan.append(("knn_weighted_sum", "jnp", dt, n, None))
@@ -120,7 +129,7 @@ def entry_plan(min_log2n: int, max_log2n: int, p: int,
 
 def build_signature(kernel, dtype, n, p):
     _, sig_builder, kind = model.REGISTRY[kernel]
-    if kind == "matrix":
+    if kind in ("matrix", "ladder"):
         return sig_builder(n, p, dtype)
     return sig_builder(n, dtype)
 

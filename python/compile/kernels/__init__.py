@@ -6,6 +6,10 @@ primitive the paper needs (Beliakov 2011, GPU median via convex minimization):
 - ``fused_objective`` — the paper's ``thrust::transform_reduce`` computing the
   sufficient statistics of the convex objective f(y) = sum |x_i - y| and its
   subgradient in a single pass (Fig. 1 of the paper).
+- ``fused_ladder``    — the multi-probe generalization: one binned sweep
+  answers a whole sorted width-p probe ladder (per-rung ``fused_objective``
+  stats recovered by prefix/suffix summation of the bin partials), so one
+  multisection pass costs one device reduction.
 - ``minmaxsum``       — the single fused reduction that seeds Kelley's cutting
   plane with y_L = x_(1), y_R = x_(n) and sum(x) (Section IV).
 - ``neighbors``       — exact-median fixup: largest x_i <= y, smallest
@@ -23,6 +27,7 @@ TPU lowering would produce Mosaic custom-calls). Correctness oracle:
 
 from . import ref  # noqa: F401
 from .reductions import (  # noqa: F401
+    fused_ladder,
     fused_objective,
     minmaxsum,
     neighbors,
@@ -32,6 +37,7 @@ from .reductions import (  # noqa: F401
 from .regression import residuals, dists, knn_weighted_sum  # noqa: F401
 
 __all__ = [
+    "fused_ladder",
     "fused_objective",
     "minmaxsum",
     "neighbors",

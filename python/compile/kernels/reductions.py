@@ -69,9 +69,9 @@ def _fused_objective_kernel(x_ref, y_ref, nv_ref, slo_ref, shi_ref, clt_ref,
     zero = jnp.zeros((), dtype=x.dtype)
     slo = jnp.sum(jnp.where(lt, -d, zero))
     shi = jnp.sum(jnp.where(gt, d, zero))
-    clt = jnp.sum(lt.astype(jnp.int32))
-    ceq = jnp.sum(eq.astype(jnp.int32))
-    cgt = jnp.sum(gt.astype(jnp.int32))
+    clt = jnp.sum(lt, dtype=jnp.int32)
+    ceq = jnp.sum(eq, dtype=jnp.int32)
+    cgt = jnp.sum(gt, dtype=jnp.int32)
 
     @pl.when(pid == 0)
     def _init():
@@ -127,6 +127,112 @@ def fused_objective(x, y, n_valid, *, block=None):
         interpret=True,
     )(x, y, n_valid)
     return tuple(out)
+
+
+# ---------------------------------------------------------------------------
+# fused_ladder
+# ---------------------------------------------------------------------------
+
+
+def compose_ladder(ys, cnt, bsum, eq):
+    """Recover per-rung sufficient statistics from ladder bin partials.
+
+    ``cnt``/``bsum`` hold, per bin ``j``, the count/sum of valid elements in
+    ``(y_{j-1}, y_j]`` against the sorted ladder ``ys`` (bin ``p`` is the
+    overflow above the top rung); ``eq`` holds per-rung equality counts.
+    Mirrors ``HostEvaluator``'s ``compose_ladder``: the high side uses
+    **suffix** sums so each side's rounding error scales only with its own
+    mass, and empty sides are pinned to exactly zero (also avoids inf·0 for
+    infinite rungs). O(p) epilogue arithmetic — not a second data pass.
+    """
+    dt = bsum.dtype
+    c_le = jnp.cumsum(cnt, dtype=jnp.int32)[:-1]
+    sum_le = jnp.cumsum(bsum)[:-1]
+    c_gt = jnp.cumsum(cnt[::-1], dtype=jnp.int32)[::-1][1:]
+    s_gt = jnp.cumsum(bsum[::-1])[::-1][1:]
+    c_lt = c_le - eq
+    zero = jnp.zeros((), dt)
+    sum_lt = jnp.where(eq > 0, sum_le - ys * eq.astype(dt), sum_le)
+    s_lo = jnp.where(
+        c_lt > 0, jnp.maximum(ys * c_lt.astype(dt) - sum_lt, zero), zero
+    )
+    s_hi = jnp.where(
+        c_gt > 0, jnp.maximum(s_gt - ys * c_gt.astype(dt), zero), zero
+    )
+    return s_lo, s_hi, c_lt, eq, c_gt
+
+
+def _fused_ladder_kernel(x_ref, ys_ref, nv_ref, cnt_ref, sum_ref, eq_ref, *,
+                         block, p):
+    pid = pl.program_id(0)
+    x = x_ref[...]
+    ys = ys_ref[...]
+    valid = _valid_mask(pid, block, nv_ref[0])
+    dt = x.dtype
+    zero = jnp.zeros((), dt)
+
+    # Binned sweep (Tibshirani 2008's successive binning): each element's
+    # bin is the count of rungs strictly below it, so elements equal to a
+    # rung land in that rung's own bin. One compare ladder per element,
+    # branchless on the VPU.
+    b = jnp.sum((ys[:, None] < x[None, :]).astype(jnp.int32), axis=0,
+                dtype=jnp.int32)
+    oh = (b[None, :] == jax.lax.iota(jnp.int32, p + 1)[:, None]) & valid[None, :]
+    bcnt = jnp.sum(oh, axis=1, dtype=jnp.int32)
+    bsum = jnp.sum(jnp.where(oh, x[None, :], zero), axis=1)
+    beq = jnp.sum((x[None, :] == ys[:, None]) & valid[None, :], axis=1,
+                  dtype=jnp.int32)
+
+    @pl.when(pid == 0)
+    def _init():
+        cnt_ref[...] = jnp.zeros((p + 1,), jnp.int32)
+        sum_ref[...] = jnp.zeros((p + 1,), dt)
+        eq_ref[...] = jnp.zeros((p,), jnp.int32)
+
+    cnt_ref[...] = cnt_ref[...] + bcnt
+    sum_ref[...] = sum_ref[...] + bsum
+    eq_ref[...] = eq_ref[...] + beq
+
+
+def fused_ladder(x, ys, n_valid, *, block=None):
+    """Sufficient statistics at every rung of a sorted probe ladder.
+
+    The multi-probe analogue of ``fused_objective``: one binned sweep over
+    ``x`` answers the whole width-``p`` ladder ``ys`` (sorted ascending;
+    duplicate rungs allowed — the runtime pads short ladders by repeating
+    the last probe). Returns ``(s_lo, s_hi, c_lt, c_eq, c_gt)``, each shape
+    ``(p,)``, positionally aligned with ``ys`` — exactly the per-probe
+    outputs of ``fused_objective``, recovered from the bin partials by
+    prefix/suffix summation over ``p + 1`` scalars.
+    """
+    n = x.shape[0]
+    block = _block_for(n, block)
+    p = ys.shape[0]
+    dt = x.dtype
+    ys = jnp.asarray(ys, dt)
+    n_valid = jnp.asarray(n_valid, jnp.int32).reshape((1,))
+    kernel = functools.partial(_fused_ladder_kernel, block=block, p=p)
+    cnt, bsum, eq = pl.pallas_call(
+        kernel,
+        grid=(n // block,),
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((p,), lambda i: (0,)),
+            _scalar_spec(),
+        ],
+        out_specs=[
+            pl.BlockSpec((p + 1,), lambda i: (0,)),
+            pl.BlockSpec((p + 1,), lambda i: (0,)),
+            pl.BlockSpec((p,), lambda i: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((p + 1,), jnp.int32),
+            jax.ShapeDtypeStruct((p + 1,), dt),
+            jax.ShapeDtypeStruct((p,), jnp.int32),
+        ],
+        interpret=True,
+    )(x, ys, n_valid)
+    return compose_ladder(ys, cnt, bsum, eq)
 
 
 # ---------------------------------------------------------------------------
@@ -200,7 +306,7 @@ def _neighbors_kernel(x_ref, y_ref, nv_ref, lo_ref, hi_ref, cle_ref, *, block):
     ge = valid & (x >= y)
     blo = jnp.max(jnp.where(le, x, ninf))      # largest x_i <= y
     bhi = jnp.min(jnp.where(ge, x, pinf))      # smallest x_i >= y
-    bcle = jnp.sum(le.astype(jnp.int32))
+    bcle = jnp.sum(le, dtype=jnp.int32)
 
     @pl.when(pid == 0)
     def _init():
@@ -260,9 +366,9 @@ def _interval_count_kernel(x_ref, lo_ref_in, hi_ref_in, nv_ref, cle_ref,
     le = valid & (x <= lo)
     inside = valid & (x > lo) & (x < hi)
     ge = valid & (x >= hi)
-    ble = jnp.sum(le.astype(jnp.int32))
-    bin_ = jnp.sum(inside.astype(jnp.int32))
-    bge = jnp.sum(ge.astype(jnp.int32))
+    ble = jnp.sum(le, dtype=jnp.int32)
+    bin_ = jnp.sum(inside, dtype=jnp.int32)
+    bge = jnp.sum(ge, dtype=jnp.int32)
 
     @pl.when(pid == 0)
     def _init():
@@ -319,8 +425,8 @@ def _threshold_stats_kernel(r_ref, t_ref, nv_ref, ssq_ref, clt_ref, ceq_ref,
     lt = valid & (r < t)
     eq = valid & (r == t)
     bssq = jnp.sum(jnp.where(lt, r * r, zero))
-    bclt = jnp.sum(lt.astype(jnp.int32))
-    bceq = jnp.sum(eq.astype(jnp.int32))
+    bclt = jnp.sum(lt, dtype=jnp.int32)
+    bceq = jnp.sum(eq, dtype=jnp.int32)
 
     @pl.when(pid == 0)
     def _init():

@@ -45,6 +45,34 @@ def fused_objective(x, y, n_valid):
     )
 
 
+def fused_ladder(x, ys, n_valid):
+    """Per-rung ``fused_objective`` stats for a sorted width-p ladder.
+
+    One variadic reduction over the rung axis: the ``(p, n)`` compare plane
+    is XLA-fused into a single pass over ``x`` (p compares per element —
+    the probes-per-pass trade the multisection method is built on).
+    Outputs are each shape ``(p,)``, positionally aligned with ``ys``.
+    """
+    ys = jnp.asarray(ys, x.dtype)
+    valid = _mask(x, n_valid)[None, :]
+    d = x[None, :] - ys[:, None]
+    lt = valid & (d < 0)
+    gt = valid & (d > 0)
+    eq = valid & (d == 0)
+    zero = jnp.zeros((), x.dtype)
+    add = jnp.add
+
+    def comp(a, b):
+        return tuple(add(u, v) for u, v in zip(a, b))
+
+    return jax.lax.reduce(
+        (jnp.where(lt, -d, zero), jnp.where(gt, d, zero),
+         lt.astype(jnp.int32), eq.astype(jnp.int32), gt.astype(jnp.int32)),
+        (zero, zero, jnp.int32(0), jnp.int32(0), jnp.int32(0)),
+        comp, (1,),
+    )
+
+
 def minmaxsum(x, n_valid):
     valid = _mask(x, n_valid)
     dt = x.dtype

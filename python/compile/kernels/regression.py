@@ -128,7 +128,7 @@ def _knn_sum_kernel(d_ref, f_ref, t_ref, nv_ref, swf_ref, sw_ref, cnt_ref,
     w = jnp.where(keep, one / (one + d), zero)  # decreasing in distance
     bswf = jnp.sum(w * jnp.where(keep, f, zero))
     bsw = jnp.sum(w)
-    bcnt = jnp.sum(keep.astype(jnp.int32))
+    bcnt = jnp.sum(keep, dtype=jnp.int32)
 
     @pl.when(pid == 0)
     def _init():

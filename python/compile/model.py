@@ -48,6 +48,23 @@ def objective_probe(flavor: str = "pallas"):
     return probe
 
 
+def ladder_probe(flavor: str = "pallas"):
+    """(x, ys, n_valid) -> per-rung (s_lo, s_hi, c_lt, c_eq, c_gt).
+
+    One multisection pass = one execution of this graph: a whole sorted
+    width-p probe ladder is answered by a single binned reduction over x,
+    the device analogue of ``HostEvaluator::probe_many``. Emitted per
+    ladder-width bucket p ∈ LADDER_WIDTHS (aot.py); the runtime pads short
+    ladders to the nearest bucket by repeating the last rung.
+    """
+    fn = _impl(flavor, "fused_ladder")
+
+    def probe(x, ys, n_valid):
+        return fn(x, ys, n_valid)
+
+    return probe
+
+
 def init_stats(flavor: str = "pallas"):
     """(x, n_valid) -> (min, max, sum): Algorithm 1 step 0 in one reduction."""
     fn = _impl(flavor, "minmaxsum")
@@ -154,6 +171,11 @@ def sig_vector_only(n, dtype):
     return [((n,), dtype), ((1,), "int32")]
 
 
+def sig_ladder(n, p, dtype):
+    """x[n], ys[p] (sorted probe ladder), n_valid[1]."""
+    return [((n,), dtype), ((p,), dtype), ((1,), "int32")]
+
+
 def sig_interval(n, dtype):
     return [((n,), dtype), ((1,), dtype), ((1,), dtype), ((1,), "int32")]
 
@@ -178,6 +200,8 @@ def sig_knn_sum(n, dtype):
 REGISTRY = {
     # vector probes, emitted per (dtype, n-bucket, flavor)
     "fused_objective": (objective_probe, sig_vector_probe, "vector"),
+    # ladder probe, emitted per (dtype, n-bucket, ladder-width p, flavor)
+    "fused_ladder": (ladder_probe, sig_ladder, "ladder"),
     "minmaxsum": (init_stats, sig_vector_only, "vector"),
     "neighbors": (neighbors_probe, sig_vector_probe, "vector"),
     "interval_count": (interval_probe, sig_interval, "vector"),

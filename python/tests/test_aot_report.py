@@ -1,0 +1,52 @@
+"""Regression test for the ``hlo_op_report`` skip-check (bare ``pass`` bug).
+
+Header/comment lines that happen to contain ``=`` used to fall through the
+skip-check and pollute the op histogram; they must be skipped entirely.
+"""
+
+from compile import aot
+
+CANNED = """\
+HloModule jit_probe, entry_computation_layout={(f32[128]{0})->f32[1]{0}}, scheduler=list(x)
+
+region_0.5 {
+  Arg_0.6 = f32[] parameter(0)
+  Arg_1.7 = f32[] parameter(1)
+  ROOT add.8 = f32[] add(Arg_0.6, Arg_1.7)
+}
+
+// tuned config = custom(foo)
+ENTRY main.12 {
+  p0.1 = f32[128]{0} parameter(0)
+  c.2 = f32[] constant(0)
+  sub.3 = f32[128]{0} subtract(p0.1, p0.1)
+  %legacy.4 = f32[128]{0} multiply(sub.3, sub.3)
+  ROOT r.9 = f32[1]{0} reduce(sub.3, c.2), dimensions={0}, to_apply=region_0.5
+}
+"""
+
+
+def test_header_and_comment_lines_are_skipped():
+    ops = aot.hlo_op_report(CANNED)
+    # the bug counted "list" from the HloModule header and "custom" from
+    # the comment line; both must be absent now
+    assert "list" not in ops, ops
+    assert "custom" not in ops, ops
+    # %-prefixed legacy-style lines are in the skip list too
+    assert "multiply" not in ops, ops
+
+
+def test_instruction_lines_still_counted():
+    ops = aot.hlo_op_report(CANNED)
+    assert ops.get("add") == 1, ops
+    assert ops.get("subtract") == 1, ops
+    assert ops.get("reduce") == 1, ops
+    assert ops.get("parameter") == 3, ops
+
+
+def test_report_on_real_lowering_is_nonempty():
+    text, _ = aot.lower_entry("minmaxsum", "jnp", "f32", 128, None)
+    ops = aot.hlo_op_report(text)
+    # the fix must not empty the histogram on real modules
+    assert ops, "histogram empty on a real lowering"
+    assert ops.get("sort", 0) == 0

@@ -9,7 +9,9 @@ between the interpret-mode Pallas kernels and ``ref.py``.
 import numpy as np
 import pytest
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+
+pytest.importorskip("hypothesis", reason="hypothesis not installed")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 import compile.kernels as K
 from compile.kernels import ref

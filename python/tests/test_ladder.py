@@ -1,0 +1,118 @@
+"""fused_ladder (L1 + L2): binned multi-probe sweep vs per-probe oracle.
+
+The ladder kernel must agree rung-by-rung with sequential
+``fused_objective`` probes — including duplicate rungs (how the runtime
+pads short ladders), rungs equal to data values, and out-of-range rungs.
+"""
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+import compile.kernels as K
+from compile.kernels import ref
+from compile import aot, model
+
+DTYPES = [np.float32, np.float64]
+
+
+def _rtol(dtype):
+    return 5e-4 if dtype == np.float32 else 1e-9
+
+
+def _ladders(x, nv):
+    v = np.sort(x[:nv])
+    lo, hi = float(v[0]), float(v[-1])
+    return [
+        np.linspace(lo, hi, 7),                      # evenly spaced, in range
+        np.array([lo - 1e3, lo, float(np.median(v)), hi, hi + 1e3]),
+        np.array([float(v[3])] * 4 + [float(v[5])]),  # duplicate-heavy (pad style)
+        np.array([float(np.median(v))]),              # width 1
+    ]
+
+
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("flavor", ["pallas", "jnp"])
+@pytest.mark.parametrize("dist", ["normal", "constant", "duplicates"])
+def test_fused_ladder_matches_sequential_probes(dtype, flavor, dist):
+    n, nv = 2048, 2000
+    rng = np.random.default_rng(hash((dtype.__name__, dist)) % 2**32)
+    if dist == "normal":
+        x = rng.normal(0, 1, n)
+    elif dist == "constant":
+        x = np.full(n, 2.5)
+    else:
+        x = rng.integers(0, 9, n).astype(np.float64)
+    x = x.astype(dtype)
+    fn = K.fused_ladder if flavor == "pallas" else ref.fused_ladder
+    obj = K.fused_objective if flavor == "pallas" else ref.fused_objective
+    for ys in _ladders(x, nv):
+        ys = np.sort(ys).astype(dtype)
+        got = fn(jnp.asarray(x), jnp.asarray(ys), nv)
+        assert all(np.asarray(g).shape == (len(ys),) for g in got)
+        for j, y in enumerate(ys):
+            want = obj(jnp.asarray(x), float(y), nv)
+            for gi, wi in zip(got, want):
+                g = np.asarray(gi)[j]
+                w = np.asarray(wi)[0]
+                if np.issubdtype(np.asarray(gi).dtype, np.integer):
+                    assert g == w, f"rung {j} y={y}: {g} vs {w}"
+                else:
+                    np.testing.assert_allclose(
+                        g, w, rtol=_rtol(dtype), atol=10 * _rtol(dtype),
+                        err_msg=f"rung {j} y={y}",
+                    )
+
+
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_fused_ladder_flavors_agree(dtype):
+    n, nv = 4096, 4000
+    rng = np.random.default_rng(17)
+    x = rng.normal(0, 1, n).astype(dtype)
+    ys = np.sort(rng.normal(0, 1, 15)).astype(dtype)
+    got = K.fused_ladder(jnp.asarray(x), jnp.asarray(ys), nv,
+                         block=min(n, 1024))
+    want = ref.fused_ladder(jnp.asarray(x), jnp.asarray(ys), nv)
+    for g, w in zip(got, want):
+        g, w = np.asarray(g), np.asarray(w)
+        assert g.dtype == w.dtype
+        if np.issubdtype(g.dtype, np.integer):
+            np.testing.assert_array_equal(g, w)
+        else:
+            np.testing.assert_allclose(g, w, rtol=10 * _rtol(dtype),
+                                       atol=10 * _rtol(dtype))
+
+
+def test_fused_ladder_count_partition():
+    """Every valid element lands in exactly one of lt/eq/gt per rung."""
+    n, nv = 512, 500
+    rng = np.random.default_rng(3)
+    x = rng.normal(0, 1, n)
+    ys = np.sort(rng.normal(0, 1, 7))
+    s_lo, s_hi, c_lt, c_eq, c_gt = (
+        np.asarray(o) for o in K.fused_ladder(jnp.asarray(x), jnp.asarray(ys), nv)
+    )
+    assert (c_lt + c_eq + c_gt == nv).all()
+    # rank monotonicity along the sorted ladder
+    c_le = c_lt + c_eq
+    assert (np.diff(c_le) >= 0).all()
+    assert (s_lo >= 0).all() and (s_hi >= 0).all()
+
+
+def test_fused_ladder_lowers_and_plan_covers_widths():
+    text, sig = aot.lower_entry("fused_ladder", "jnp", "f64", 128, 7)
+    assert text.startswith("HloModule")
+    assert [s[0] for s in sig] == [(128,), (7,), (1,)]
+    ops = aot.hlo_op_report(text)
+    assert ops.get("sort", 0) == 0, ops
+    specs = aot.output_spec("fused_ladder", "f64", 128, 7)
+    assert [tuple(s["shape"]) for s in specs] == [(7,)] * 5
+    assert [s["dtype"] for s in specs] == ["f64", "f64", "i32", "i32", "i32"]
+
+    plan = aot.entry_plan(12, 13, 8, 12, 12, pallas_max_log2n=12)
+    widths = {e[4] for e in plan if e[0] == "fused_ladder" and e[1] == "jnp"}
+    assert widths == set(aot.LADDER_WIDTHS)
+    pal = {(e[3], e[4]) for e in plan
+           if e[0] == "fused_ladder" and e[1] == "pallas"}
+    assert pal == {(1 << 12, w) for w in aot.LADDER_WIDTHS}
+    assert model.REGISTRY["fused_ladder"][2] == "ladder"

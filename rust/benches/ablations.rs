@@ -36,7 +36,10 @@ fn main() {
     let pts = hybrid_sweep(&mut runner, n, &budgets, DType::F64, 9).expect("sweep");
     report::write_result(&dir, "hybrid_sweep.csv", &report::hybrid_sweep_csv(&pts)).unwrap();
     println!("\nE8 hybrid budget sweep (n={n}):");
-    println!("{:>8} {:>10} {:>9} {:>9} {:>9} {:>9}", "cp_iters", "|z|", "cp ms", "copy ms", "sort ms", "total");
+    println!(
+        "{:>8} {:>10} {:>9} {:>9} {:>9} {:>9}",
+        "cp_iters", "|z|", "cp ms", "copy ms", "sort ms", "total"
+    );
     for p in &pts {
         println!(
             "{:>8} {:>10} {:>9.2} {:>9.2} {:>9.2} {:>9.2}",
@@ -52,7 +55,10 @@ fn main() {
     let rt = have_device.then(|| Runtime::new(&Runtime::default_dir()).unwrap());
     let mut rng = Rng::seeded(11);
     let max_log2 = common::env_usize("CP_BENCH_MAX_LOG2N", if common::fast() { 15 } else { 21 });
-    println!("{:>9} {:>6} {:>14} {:>14} {:>14} {:>16}", "n", "dtype", "host probe ms", "device probe ms", "download ms", "paper-PCIe ms");
+    println!(
+        "{:>9} {:>6} {:>14} {:>14} {:>14} {:>16}",
+        "n", "dtype", "host probe ms", "device probe ms", "download ms", "paper-PCIe ms"
+    );
     for log2n in (13..=max_log2).step_by(2) {
         let n = 1usize << log2n;
         let data = Distribution::Uniform.sample_vec(&mut rng, n);
@@ -108,7 +114,10 @@ fn main() {
             group.probe(i as f64 * 0.1).unwrap();
         }
         let ms = t0.elapsed().as_secs_f64() * 1e3 / 5.0;
-        println!("  shards={shards:>2}: {ms:.3} ms/probe, combine traffic = {} scalars", shards * 5);
+        println!(
+            "  shards={shards:>2}: {ms:.3} ms/probe, combine traffic = {} scalars",
+            shards * 5
+        );
     }
 
     // --- flavor ablation -----------------------------------------------------
@@ -129,6 +138,9 @@ fn main() {
                 t0.elapsed().as_secs_f64() * 1e3 / 5.0
             );
         }
-        println!("  (pallas = interpret-lowered authored kernel — correctness artifact, not a TPU wallclock proxy)");
+        println!(
+            "  (pallas = interpret-lowered authored kernel — correctness artifact, \
+             not a TPU wallclock proxy)"
+        );
     }
 }

@@ -29,11 +29,20 @@ fn main() {
 
     // --- E10: breakdown curve ---------------------------------------------
     println!("E10 breakdown: estimation error vs contamination (n={n}, p=4):");
-    println!("{:>7} {:>10} {:>10} {:>10} {:>12} {:>12}", "contam", "OLS err", "LMS err", "LTS err", "LMS ms", "LTS ms");
+    println!(
+        "{:>7} {:>10} {:>10} {:>10} {:>12} {:>12}",
+        "contam", "OLS err", "LMS err", "LTS err", "LMS ms", "LTS ms"
+    );
     let mut rng = Rng::seeded(2011);
     for contam in [0.0, 0.1, 0.2, 0.3, 0.4, 0.45] {
-        let d = ContaminatedLinear { n, p: 4, contamination: contam, sigma: 0.2, ..Default::default() }
-            .generate(&mut rng);
+        let gen = ContaminatedLinear {
+            n,
+            p: 4,
+            contamination: contam,
+            sigma: 0.2,
+            ..Default::default()
+        };
+        let d = gen.generate(&mut rng);
         let x = d.design();
         let mut sel = HostSelector::default();
         let e_ols = max_err(&ols(&x, &d.y).unwrap(), &d.theta);
@@ -91,8 +100,9 @@ fn main() {
     }
     let model = KnnModel::new(rows, f).unwrap();
     let mut sel = HostSelector::default();
+    let nq = if fast { 10 } else { 50 };
     let queries: Vec<Vec<f64>> =
-        (0..if fast { 10 } else { 50 }).map(|_| (0..p).map(|_| rng.range(0.2, 1.8)).collect()).collect();
+        (0..nq).map(|_| (0..p).map(|_| rng.range(0.2, 1.8)).collect()).collect();
     let k = 15;
 
     let t0 = Instant::now();

@@ -25,7 +25,10 @@ fn main() {
     report::write_result(&common::results_dir(), "fig5_outliers.csv", &csv).unwrap();
 
     println!("probes per method as the outlier grows (n={n}):");
-    println!("{:>10} {:>14} {:>10} {:>10} {:>10}", "magnitude", "cutting-plane", "bisection", "brent-min", "brent-root");
+    println!(
+        "{:>10} {:>14} {:>10} {:>10} {:>10}",
+        "magnitude", "cutting-plane", "bisection", "brent-min", "brent-root"
+    );
     for &m in &mags {
         let get = |name: &str| {
             pts.iter()

@@ -9,8 +9,62 @@
 
 mod common;
 
-use cp_select::harness::{self, report};
+use cp_select::harness::{self, report, SelectBench};
 use cp_select::select::DType;
+use cp_select::util::json::Json;
+
+/// Regression gate: fused-reduction counts must not grow against the
+/// committed baseline (`CP_BENCH_BASELINE`, default `../BENCH_select.json`
+/// — the repo-root copy when the bench runs from `rust/`). Rows are matched
+/// on (method, n); rows absent from either side are skipped, so fast/full
+/// sweeps both check their overlap with the baseline.
+fn check_against_baseline(bench: &SelectBench) {
+    let path = std::env::var("CP_BENCH_BASELINE")
+        .unwrap_or_else(|_| "../BENCH_select.json".to_string());
+    let text = match std::fs::read_to_string(&path) {
+        Ok(t) => t,
+        Err(_) => {
+            println!("no baseline at {path}; skipping regression check");
+            return;
+        }
+    };
+    let base = Json::parse(&text).expect("baseline BENCH_select.json parses");
+    let mut checked = 0usize;
+    for b in base.get("rows").unwrap().as_arr().unwrap() {
+        let method = b.get("method").unwrap().as_str().unwrap();
+        let n = b.get("n").unwrap().as_usize().unwrap();
+        let baseline = b.get("fused_reductions").unwrap().as_usize().unwrap() as u64;
+        if let Some(r) = bench.rows.iter().find(|r| r.method == method && r.n == n) {
+            assert!(
+                r.fused_reductions <= baseline,
+                "fused reductions regressed for {method} n={n}: \
+                 {} > baseline {baseline}",
+                r.fused_reductions
+            );
+            checked += 1;
+        }
+    }
+    // Zero overlap means the gate checked nothing (renamed method, shifted
+    // size grid): fail loudly instead of passing vacuously.
+    assert!(
+        checked > 0,
+        "no (method, n) rows overlap the baseline at {path}; \
+         regenerate the committed BENCH_select.json"
+    );
+    let cbase = base
+        .get("coordinator")
+        .unwrap()
+        .get("concurrent_fused_reductions")
+        .unwrap()
+        .as_usize()
+        .unwrap() as u64;
+    assert!(
+        bench.coordinator.concurrent_fused_reductions <= cbase,
+        "coordinator coalescing regressed: {} > baseline {cbase}",
+        bench.coordinator.concurrent_fused_reductions
+    );
+    println!("regression check vs {path}: {checked} rows + coordinator within baseline");
+}
 
 fn main() {
     common::describe("select_json (BENCH_select.json perf trajectory)");
@@ -36,4 +90,5 @@ fn main() {
         c.sequential_fused_reductions
     );
     assert!(bench.rows.iter().all(|r| r.exact), "a method returned an inexact result");
+    check_against_baseline(&bench);
 }

@@ -33,6 +33,9 @@ fn main() {
     if let (Some(s), Some(h)) =
         (sort.ms.last().copied().flatten(), hyb.ms.last().copied().flatten())
     {
-        println!("table1 headline: n=2^{max} f32 sort {s:.2} ms vs hybrid {h:.2} ms = {:.2}x", s / h);
+        println!(
+            "table1 headline: n=2^{max} f32 sort {s:.2} ms vs hybrid {h:.2} ms = {:.2}x",
+            s / h
+        );
     }
 }

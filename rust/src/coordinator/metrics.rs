@@ -155,7 +155,7 @@ mod tests {
     fn snapshot_displays() {
         let m = Metrics::new();
         m.record_latency(Duration::from_micros(5));
-        let s = format!("{}", m.snapshot());
+        let s = m.snapshot().to_string();
         assert!(s.contains("requests=0"));
         assert!(s.contains("latency"));
     }

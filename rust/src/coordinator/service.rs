@@ -457,11 +457,10 @@ fn solve_group(
         (|| {
             let ev = backend.evaluator(id)?;
             let probes0 = ev.probes();
-            let out = select::multisection::multi_order_statistics(
-                ev,
-                &valid,
-                &select::MultisectOptions::default(),
-            )?;
+            // Shared rounds ride the evaluator's native ladder width (one
+            // fused_ladder launch per round on the device backend).
+            let opts = select::MultisectOptions::for_evaluator(&*ev);
+            let out = select::multisection::multi_order_statistics(ev, &valid, &opts)?;
             Ok((out.values, out.passes, ev.probes() - probes0))
         })()
     };
@@ -633,7 +632,9 @@ mod tests {
         let snap = svc.metrics.snapshot();
         assert_eq!(snap.queries, 12);
         assert_eq!(snap.uploads, 12);
-        Arc::try_unwrap(svc).ok().map(|s| s.shutdown());
+        if let Ok(s) = Arc::try_unwrap(svc) {
+            s.shutdown();
+        }
     }
 
     #[test]

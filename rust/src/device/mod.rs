@@ -22,9 +22,16 @@ use crate::select::objective::{
 use crate::Result;
 
 /// Evenly shard a data vector for `devices` simulated devices.
+///
+/// More devices than elements would manufacture empty shards, whose
+/// `InitStats` are poison (±inf min/max merge into every seed bracket) and
+/// which a real `DeviceEvaluator::upload` rejects outright — so the count
+/// is clamped: the result has `min(devices, n)` non-empty shards (and one
+/// empty shard only for empty input, which evaluator constructors reject).
 pub fn shard_data(data: &[f64], devices: usize) -> Vec<&[f64]> {
     assert!(devices >= 1);
     let n = data.len();
+    let devices = devices.min(n).max(1);
     let base = n / devices;
     let extra = n % devices;
     let mut out = Vec::with_capacity(devices);
@@ -53,6 +60,11 @@ impl<E: Evaluator> ShardedEvaluator<E> {
     pub fn new(shards: Vec<E>) -> Result<Self> {
         if shards.is_empty() {
             return Err(crate::invalid_arg!("need at least one shard"));
+        }
+        if shards.iter().any(|s| s.n() == 0) {
+            // An empty shard's InitStats (±inf min/max) would poison every
+            // merge; shard_data never produces one for non-empty input.
+            return Err(crate::invalid_arg!("empty shard (more devices than elements?)"));
         }
         let dt = shards[0].dtype();
         if shards.iter().any(|s| s.dtype() != dt) {
@@ -161,6 +173,12 @@ impl<E: Evaluator> Evaluator for ShardedEvaluator<E> {
     fn probes(&self) -> u64 {
         self.probes
     }
+
+    fn ladder_width_hint(&self) -> Option<usize> {
+        // Every shard sees the whole ladder, so the narrowest shard
+        // constrains the group (host shards report None = unconstrained).
+        self.shards.iter().filter_map(|s| s.ladder_width_hint()).min()
+    }
 }
 
 #[cfg(test)]
@@ -211,10 +229,7 @@ mod tests {
             assert_eq!((ia.min, ia.max), (ib.min, ib.max));
             assert!((ia.sum - ib.sum).abs() <= 1e-9 * ib.sum.abs().max(1.0));
             assert_eq!(sh.neighbors(0.5).unwrap(), whole.neighbors(0.5).unwrap());
-            assert_eq!(
-                sh.interval(0.0, 1.0).unwrap(),
-                whole.interval(0.0, 1.0).unwrap()
-            );
+            assert_eq!(sh.interval(0.0, 1.0).unwrap(), whole.interval(0.0, 1.0).unwrap());
         }
     }
 
@@ -299,5 +314,35 @@ mod tests {
         let a = HostEvaluator::new(&[1.0]);
         let b = HostEvaluator::new_f32(&[2.0]);
         assert!(ShardedEvaluator::new(vec![a, b]).is_err());
+    }
+
+    #[test]
+    fn more_devices_than_elements_clamps_to_nonempty_shards() {
+        // regression: devices > n used to produce empty shards whose
+        // InitStats (±inf) poisoned min/max merges
+        let data = [3.0, 1.0, 2.0];
+        let shards = shard_data(&data, 8);
+        assert_eq!(shards.len(), 3);
+        assert!(shards.iter().all(|s| !s.is_empty()));
+        let mut sh = sharded(&data, 8);
+        assert_eq!(sh.shard_count(), 3);
+        let init = sh.init_stats().unwrap();
+        assert_eq!((init.min, init.max), (1.0, 3.0));
+        assert!(init.min.is_finite() && init.max.is_finite());
+        let got = select::median(&mut sh, Method::Multisection).unwrap();
+        assert_eq!(got.value, 2.0);
+        // single element, many devices
+        let one = [7.0];
+        assert_eq!(shard_data(&one, 5).len(), 1);
+        let mut sh = sharded(&one, 5);
+        assert_eq!(sh.init_stats().unwrap().min, 7.0);
+    }
+
+    #[test]
+    fn rejects_empty_shard_directly() {
+        let a = HostEvaluator::new(&[1.0]);
+        let b = HostEvaluator::new(&[]);
+        let err = ShardedEvaluator::new(vec![a, b]).unwrap_err();
+        assert!(err.to_string().contains("empty shard"), "{err}");
     }
 }

@@ -347,6 +347,10 @@ pub struct CoordinatorBench {
 pub struct SelectBench {
     pub rows: Vec<SelectBenchRow>,
     pub coordinator: CoordinatorBench,
+    /// Native fused-ladder width advertised by the benched evaluator
+    /// (`None` on the host oracle): the adaptive probes-per-pass the
+    /// multisection rows actually ran with on a device backend.
+    pub ladder_width_hint: Option<usize>,
 }
 
 /// Probe-based methods tracked by the perf-trajectory bench.
@@ -371,11 +375,28 @@ pub fn bench_select(
 ) -> Result<SelectBench> {
     let mut rng = Rng::seeded(seed);
     let mut rows = Vec::new();
+    let mut ladder_width_hint = None;
     for &b in log2_sizes {
         let n = 1usize << b;
         let data = Distribution::Uniform.sample_vec(&mut rng, n);
         let k = crate::util::median_rank(n);
         let want = crate::stats::sorted_order_statistic(&data, k);
+        // Warm the executable cache (device backend: XLA compiles lazily)
+        // so the first measured method doesn't absorb compile time. The
+        // ladder warm-up uses the evaluator's full native width — the
+        // bucket multisection actually runs with — so the widest
+        // fused_ladder executable is compiled before any timed row.
+        {
+            let mut ev = runner.evaluator(&data, dtype)?;
+            let _ = ev.init_stats();
+            let _ = ev.probe(0.5);
+            ladder_width_hint = ev.ladder_width_hint();
+            let w = ladder_width_hint.unwrap_or(3);
+            let rungs: Vec<f64> = (1..=w).map(|i| i as f64 / (w + 1) as f64).collect();
+            let _ = ev.probe_many(&rungs);
+            let _ = ev.neighbors(0.5);
+            let _ = ev.interval(0.2, 0.8);
+        }
         for m in bench_select_methods() {
             let mut ev = runner.evaluator(&data, dtype)?;
             let t0 = Instant::now();
@@ -409,11 +430,7 @@ pub fn bench_select(
     }
     let sequential = svc.metrics.snapshot().probes - s0;
     let c0 = svc.metrics.snapshot().probes;
-    svc.query_many(
-        id,
-        vec![crate::coordinator::KSpec::Median; 8],
-        Method::Multisection,
-    )?;
+    svc.query_many(id, vec![crate::coordinator::KSpec::Median; 8], Method::Multisection)?;
     let concurrent = svc.metrics.snapshot().probes - c0;
     svc.shutdown();
 
@@ -424,6 +441,7 @@ pub fn bench_select(
             concurrent_fused_reductions: concurrent,
             sequential_fused_reductions: sequential,
         },
+        ladder_width_hint,
     })
 }
 
@@ -526,12 +544,13 @@ mod tests {
         );
         let json = report::select_bench_json(&b, "f64", "host");
         let parsed = crate::util::json::Json::parse(&json).unwrap();
-        assert_eq!(
-            parsed.get("schema").unwrap().as_str().unwrap(),
-            "cp-select/bench_select/v1"
-        );
+        assert_eq!(parsed.get("schema").unwrap().as_str().unwrap(), "cp-select/bench_select/v1");
+        // host oracle has no native ladder-width limit
+        assert!(b.ladder_width_hint.is_none());
+        assert!(json.contains("\"ladder_width_hint\": null"), "{json}");
         assert_eq!(parsed.get("rows").unwrap().as_arr().unwrap().len(), 8);
-        assert!(parsed.get("coordinator").unwrap().get("queries").unwrap().as_usize().unwrap() == 8);
+        let queries = parsed.get("coordinator").unwrap().get("queries").unwrap();
+        assert_eq!(queries.as_usize().unwrap(), 8);
     }
 
     #[test]

@@ -112,6 +112,10 @@ pub fn select_bench_json(b: &SelectBench, dtype: &str, backend: &str) -> String 
     s.push_str("  \"schema\": \"cp-select/bench_select/v1\",\n");
     s.push_str(&format!("  \"backend\": \"{backend}\",\n"));
     s.push_str(&format!("  \"dtype\": \"{dtype}\",\n"));
+    s.push_str(&format!(
+        "  \"ladder_width_hint\": {},\n",
+        b.ladder_width_hint.map_or("null".to_string(), |w| w.to_string())
+    ));
     s.push_str("  \"rows\": [\n");
     for (i, r) in b.rows.iter().enumerate() {
         s.push_str(&format!(
@@ -187,7 +191,7 @@ mod tests {
     }
 
     #[test]
-    fn write_result_creates_dir(){
+    fn write_result_creates_dir() {
         let dir = std::env::temp_dir().join(format!("cp_select_test_{}", std::process::id()));
         let p = write_result(&dir, "x.csv", "a,b\n").unwrap();
         assert!(p.exists());

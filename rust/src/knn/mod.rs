@@ -97,12 +97,7 @@ impl KnnModel {
             .expect("non-empty neighborhood"))
     }
 
-    fn threshold(
-        &self,
-        d: &[f64],
-        k: usize,
-        selector: &mut dyn MedianSelector,
-    ) -> Result<f64> {
+    fn threshold(&self, d: &[f64], k: usize, selector: &mut dyn MedianSelector) -> Result<f64> {
         if k == 0 || k > self.n() {
             return Err(invalid_arg!("k={k} out of range for n={}", self.n()));
         }

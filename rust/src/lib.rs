@@ -48,6 +48,34 @@
 //! (still memory-bound for small `p` on the host) in exchange for fewer
 //! passes; `p` is tunable per method via its options struct.
 //!
+//! ## The device ladder path and probe accounting
+//!
+//! The AOT artifact set carries a `fused_ladder(p)` kernel family (emitted
+//! per ladder-width bucket p ∈ {3, 7, 15} alongside the n buckets): one
+//! binned device sweep returns per-rung sufficient statistics for a whole
+//! sorted probe ladder, with prefix/suffix recovery of `(s_lo, s_hi)`
+//! folded into the same HLO module. `runtime::DeviceEvaluator::probe_many`
+//! sorts/dedups the (dtype-canonicalized) ladder, pads it up to the
+//! nearest width bucket by repeating the last rung, and launches **one**
+//! reduction per pass — chunking only when a ladder is wider than every
+//! bucket. `select::MultisectOptions::for_evaluator` closes the loop: it
+//! reads [`select::Evaluator::ladder_width_hint`] (the widest ladder
+//! artifact at the dataset's bucket) so multisection sizes its passes to
+//! exactly one launch each.
+//!
+//! **Accounting rules** (what [`select::Evaluator::probes`] counts, and
+//! what `BENCH_select.json` tracks as `fused_reductions`):
+//!
+//! 1. one `probe`/`init_stats`/`neighbors`/`interval` call = one reduction;
+//! 2. one natively-fused `probe_many` ladder = one reduction per width
+//!    chunk (one chunk in the common case) — on the host oracle, the
+//!    sharded group (logical count), *and* the device runtime with ladder
+//!    artifacts present;
+//! 3. without `fused_ladder` artifacts (a pre-ladder artifact set) the
+//!    device evaluator falls back to back-to-back `fused_objective`
+//!    launches and honestly counts one reduction per launch — counts are
+//!    never under-reported.
+//!
 //! ## Quick start
 //!
 //! ```no_run

@@ -171,10 +171,19 @@ fn cmd_info(opts: &Opts) -> Result<()> {
         Ok(rt) => {
             println!("pjrt platform: {}", rt.platform());
             println!("artifacts: {} entries", rt.manifest.entries.len());
-            let max = rt
-                .manifest
-                .max_bucket(cp_select::runtime::Kernel::FusedObjective, Flavor::Jnp, cfg.dtype);
+            let max = rt.manifest.max_bucket(
+                cp_select::runtime::Kernel::FusedObjective,
+                Flavor::Jnp,
+                cfg.dtype,
+                None,
+            );
             println!("largest fused_objective bucket ({}): {:?}", cfg.dtype.name(), max);
+            if let Some(n) = max {
+                println!(
+                    "fused_ladder widths at n={n}: {:?}",
+                    rt.manifest.ladder_widths(Flavor::Jnp, cfg.dtype, n)
+                );
+            }
         }
         Err(e) => println!("runtime unavailable: {e}"),
     }
@@ -390,11 +399,7 @@ fn cmd_regress(opts: &Opts) -> Result<()> {
     };
     println!("n={n} p={p} contamination={contamination}");
     println!("true theta: {:?}", data.theta);
-    println!(
-        "OLS   err={:.4} time={:?}  (breaks: expected with outliers)",
-        err(&theta_ols),
-        t_ols
-    );
+    println!("OLS   err={:.4} time={:?}  (breaks: expected with outliers)", err(&theta_ols), t_ols);
     println!(
         "LMS   err={:.4} med|r|={:.4} candidates={} time={:?}",
         err(&fit_lms.theta),

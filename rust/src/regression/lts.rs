@@ -138,7 +138,7 @@ pub fn lts(
 
         let abs_r: Vec<f64> = residuals(x, &theta, y).iter().map(|v| v.abs()).collect();
         let objective = trimmed_sum_via_median(&abs_r, h, selector)?;
-        if best.as_ref().map_or(true, |b| objective < b.objective) {
+        if best.as_ref().is_none_or(|b| objective < b.objective) {
             best = Some(LtsFit { theta, objective, h, c_steps_taken: steps });
         }
     }
@@ -169,10 +169,7 @@ mod tests {
                 let mut sorted = r.clone();
                 sorted.sort_by(|a, b| a.total_cmp(b));
                 let want: f64 = sorted[..h].iter().map(|v| v * v).sum();
-                assert!(
-                    (got - want).abs() <= 1e-9 * want.max(1.0),
-                    "n={n} h={h}: {got} vs {want}"
-                );
+                assert!((got - want).abs() <= 1e-9 * want.max(1.0), "n={n} h={h}: {got} vs {want}");
             }
         }
     }

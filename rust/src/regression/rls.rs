@@ -121,11 +121,7 @@ mod tests {
         let flagged: std::collections::BTreeSet<usize> =
             rls.outlier_idx.iter().copied().collect();
         let missed = truth.iter().filter(|i| !flagged.contains(i)).count();
-        assert!(
-            missed <= truth.len() / 20,
-            "missed {missed} of {} true outliers",
-            truth.len()
-        );
+        assert!(missed <= truth.len() / 20, "missed {missed} of {} true outliers", truth.len());
         assert_eq!(rls.inliers + rls.outlier_idx.len(), d.n());
     }
 

@@ -209,6 +209,11 @@ pub fn literal_scalar_i32(lit: &xla::Literal) -> Result<i64> {
     Ok(lit.to_vec::<i32>()?[0] as i64)
 }
 
+/// Download an i32 vector literal (per-rung ladder counts).
+pub fn literal_vec_i32(lit: &xla::Literal) -> Result<Vec<i32>> {
+    Ok(lit.to_vec::<i32>()?)
+}
+
 /// Download a float vector literal as f64.
 pub fn literal_vec_f64(lit: &xla::Literal, dtype: DType) -> Result<Vec<f64>> {
     match dtype {

@@ -8,7 +8,9 @@
 
 use std::rc::Rc;
 
-use crate::runtime::client::{literal_scalar_f64, literal_scalar_i32, Runtime};
+use crate::runtime::client::{
+    literal_scalar_f64, literal_scalar_i32, literal_vec_f64, literal_vec_i32, Runtime,
+};
 use crate::runtime::manifest::{Flavor, Kernel};
 use crate::select::objective::{
     DType, Evaluator, InitStats, IntervalCounts, Neighbors, ProbeStats,
@@ -49,7 +51,7 @@ impl DeviceEvaluator {
         }
         let bucket =
             rt.manifest
-                .bucket_for(Kernel::FusedObjective, flavor, dtype, data.len())?;
+                .bucket_for(Kernel::FusedObjective, flavor, dtype, data.len(), None)?;
         // All probe kernels must exist at this bucket; verify up front so a
         // missing artifact fails fast rather than mid-algorithm.
         for kernel in [Kernel::MinMaxSum, Kernel::Neighbors, Kernel::IntervalCount] {
@@ -108,6 +110,54 @@ impl DeviceEvaluator {
         self.flavor
     }
 
+    /// Whether this evaluator's artifact set has `fused_ladder` kernels at
+    /// its bucket (older artifact sets fall back to per-launch batches).
+    pub fn has_fused_ladder(&self) -> bool {
+        !self
+            .rt
+            .manifest
+            .ladder_widths(self.flavor, self.dtype, self.bucket)
+            .is_empty()
+    }
+
+    /// One `fused_ladder` launch over a ladder chunk padded to width `p`.
+    fn run_ladder_chunk(&mut self, chunk: &[f64], p: usize) -> Result<Vec<ProbeStats>> {
+        let mut rungs = chunk.to_vec();
+        let last = *rungs.last().expect("non-empty ladder chunk");
+        rungs.resize(p, last); // pad to the bucket by repeating the last probe
+        let exe = self.rt.executable(
+            Kernel::FusedLadder,
+            self.flavor,
+            self.dtype,
+            self.bucket,
+            Some(p),
+        )?;
+        let ys_buf = self.rt.upload_vector(&rungs, self.dtype, p)?;
+        let args = [&self.buf, &ys_buf, &self.nv_buf];
+        self.probes += 1; // the whole padded ladder is ONE device reduction
+        let out = exe.run(&args)?;
+        if out.len() != 5 {
+            return Err(Error::Xla(format!("fused_ladder returned {} outputs", out.len())));
+        }
+        let s_lo = literal_vec_f64(&out[0], self.dtype)?;
+        let s_hi = literal_vec_f64(&out[1], self.dtype)?;
+        let c_lt = literal_vec_i32(&out[2])?;
+        let c_eq = literal_vec_i32(&out[3])?;
+        let c_gt = literal_vec_i32(&out[4])?;
+        if s_lo.len() < chunk.len() {
+            return Err(Error::Xla(format!("fused_ladder p={} returned {} rungs", p, s_lo.len())));
+        }
+        Ok((0..chunk.len())
+            .map(|j| ProbeStats {
+                s_lo: s_lo[j],
+                s_hi: s_hi[j],
+                c_lt: c_lt[j] as u64,
+                c_eq: c_eq[j] as u64,
+                c_gt: c_gt[j] as u64,
+            })
+            .collect())
+    }
+
     fn run_probe_kernel(
         &mut self,
         kernel: Kernel,
@@ -132,10 +182,7 @@ impl DeviceEvaluator {
 
 fn parse_probe_stats(out: &[xla::Literal], dtype: DType) -> Result<ProbeStats> {
     if out.len() != 5 {
-        return Err(Error::Xla(format!(
-            "fused_objective returned {} outputs",
-            out.len()
-        )));
+        return Err(Error::Xla(format!("fused_objective returned {} outputs", out.len())));
     }
     Ok(ProbeStats {
         s_lo: literal_scalar_f64(&out[0], dtype)?,
@@ -176,27 +223,51 @@ impl Evaluator for DeviceEvaluator {
         if ys.is_empty() {
             return Ok(Vec::new());
         }
-        // Forward the whole ladder in one batch round-trip: resolve the
-        // executable once, upload every probe scalar up front, then launch
-        // back-to-back against the resident buffer with no interleaved
-        // host work. The AOT artifact set has no fused ladder kernel yet
-        // (ROADMAP open item), so each launch is still a real device
-        // reduction and is counted as one — unlike the host oracle, which
-        // sweeps the whole ladder in a single pass.
-        let exe = self
-            .rt
-            .executable(Kernel::FusedObjective, self.flavor, self.dtype, self.bucket, None)?;
-        let mut scalar_bufs = Vec::with_capacity(ys.len());
-        for &y in ys {
-            scalar_bufs.push(self.rt.upload_scalar(y, self.dtype)?);
+        let widest = self.rt.manifest.widest_ladder(self.flavor, self.dtype, self.bucket);
+        if widest.is_none() {
+            // No `fused_ladder` artifacts at this bucket (pre-ladder
+            // artifact set): forward the batch in one round-trip — resolve
+            // the executable once, upload every probe scalar up front, then
+            // launch back-to-back. Each launch is a real device reduction
+            // and is honestly counted as one.
+            let exe = self.rt.executable(
+                Kernel::FusedObjective,
+                self.flavor,
+                self.dtype,
+                self.bucket,
+                None,
+            )?;
+            let mut scalar_bufs = Vec::with_capacity(ys.len());
+            for &y in ys {
+                scalar_bufs.push(self.rt.upload_scalar(y, self.dtype)?);
+            }
+            let mut raw = Vec::with_capacity(ys.len());
+            for sb in &scalar_bufs {
+                let args = [&self.buf, sb, &self.nv_buf];
+                self.probes += 1;
+                raw.push(exe.run(&args)?);
+            }
+            return raw.iter().map(|out| parse_probe_stats(out, self.dtype)).collect();
         }
-        let mut raw = Vec::with_capacity(ys.len());
-        for sb in &scalar_bufs {
-            let args = [&self.buf, sb, &self.nv_buf];
-            self.probes += 1;
-            raw.push(exe.run(&args)?);
+        // Fused path: sort/dedup the (canonicalized) ladder exactly like
+        // the host oracle, pad each chunk up to the nearest width bucket by
+        // repeating the last probe, and run ONE `fused_ladder` reduction
+        // per chunk — so a whole multisection pass costs one launch and the
+        // probe counter matches the host/sharded accounting.
+        let widest = widest.expect("checked above");
+        let (canon, ladder) = crate::select::objective::fused_ladder_rungs(ys, self.dtype);
+        let mut stats = Vec::with_capacity(ladder.len());
+        for chunk in ladder.chunks(widest) {
+            let p = self
+                .rt
+                .manifest
+                .ladder_bucket(self.flavor, self.dtype, self.bucket, chunk.len())
+                .expect("ladder widths checked non-empty");
+            stats.extend(self.run_ladder_chunk(chunk, p)?);
         }
-        raw.iter().map(|out| parse_probe_stats(out, self.dtype)).collect()
+        // Back to the caller's probe order; duplicates share one rung,
+        // NaN probes get probe(NaN)'s all-zero stats.
+        Ok(crate::select::objective::ladder_stats_in_probe_order(&canon, &ladder, &stats))
     }
 
     fn neighbors(&mut self, y: f64) -> Result<Neighbors> {
@@ -243,6 +314,12 @@ impl Evaluator for DeviceEvaluator {
 
     fn probes(&self) -> u64 {
         self.probes
+    }
+
+    fn ladder_width_hint(&self) -> Option<usize> {
+        // Widest `fused_ladder` bucket at this n bucket: pass planners size
+        // their ladders from it so one pass maps to exactly one launch.
+        self.rt.manifest.widest_ladder(self.flavor, self.dtype, self.bucket)
     }
 }
 

@@ -12,6 +12,10 @@ use crate::{Error, Result};
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub enum Kernel {
     FusedObjective,
+    /// Multi-probe ladder reduction: per-rung `fused_objective` stats for a
+    /// sorted width-`p` ladder in one binned sweep (entries are keyed by
+    /// ladder width through the manifest `p` field).
+    FusedLadder,
     MinMaxSum,
     Neighbors,
     IntervalCount,
@@ -26,6 +30,7 @@ impl Kernel {
     pub fn name(&self) -> &'static str {
         match self {
             Kernel::FusedObjective => "fused_objective",
+            Kernel::FusedLadder => "fused_ladder",
             Kernel::MinMaxSum => "minmaxsum",
             Kernel::Neighbors => "neighbors",
             Kernel::IntervalCount => "interval_count",
@@ -41,6 +46,7 @@ impl Kernel {
         use Kernel::*;
         Some(match s {
             "fused_objective" => FusedObjective,
+            "fused_ladder" => FusedLadder,
             "minmaxsum" => MinMaxSum,
             "neighbors" => Neighbors,
             "interval_count" => IntervalCount,
@@ -107,8 +113,12 @@ pub type Key = (Kernel, Flavor, &'static str, usize, Option<usize>);
 pub struct Manifest {
     pub dir: PathBuf,
     pub entries: Vec<ArtifactEntry>,
-    /// (kernel, flavor, dtype) -> sorted available vector buckets.
-    buckets: BTreeMap<(Kernel, Flavor, String), Vec<usize>>,
+    /// (kernel, flavor, dtype, p) -> sorted available vector buckets. The
+    /// `p` component keeps same-kernel families emitted at different
+    /// parameters (regression dimension, ladder width) from aliasing.
+    buckets: BTreeMap<(Kernel, Flavor, String, Option<usize>), Vec<usize>>,
+    /// (flavor, dtype, n) -> sorted `fused_ladder` widths at that bucket.
+    ladders: BTreeMap<(Flavor, String, usize), Vec<usize>>,
 }
 
 impl Manifest {
@@ -172,35 +182,49 @@ impl Manifest {
                 outputs: parse_specs("outputs")?,
             });
         }
-        let mut buckets: BTreeMap<(Kernel, Flavor, String), Vec<usize>> = BTreeMap::new();
+        let mut buckets: BTreeMap<(Kernel, Flavor, String, Option<usize>), Vec<usize>> =
+            BTreeMap::new();
+        let mut ladders: BTreeMap<(Flavor, String, usize), Vec<usize>> = BTreeMap::new();
         for e in &entries {
             buckets
-                .entry((e.kernel, e.flavor, e.dtype.name().to_string()))
+                .entry((e.kernel, e.flavor, e.dtype.name().to_string(), e.p))
                 .or_default()
                 .push(e.n);
+            if e.kernel == Kernel::FusedLadder {
+                if let Some(p) = e.p {
+                    ladders
+                        .entry((e.flavor, e.dtype.name().to_string(), e.n))
+                        .or_default()
+                        .push(p);
+                }
+            }
         }
-        for v in buckets.values_mut() {
+        for v in buckets.values_mut().chain(ladders.values_mut()) {
             v.sort_unstable();
             v.dedup();
         }
-        Ok(Manifest { dir: dir.to_path_buf(), entries, buckets })
+        Ok(Manifest { dir: dir.to_path_buf(), entries, buckets, ladders })
     }
 
-    /// Smallest available bucket >= n for this kernel/flavor/dtype.
+    /// Smallest available bucket >= n for this kernel/flavor/dtype at the
+    /// given kernel parameter `p` (regression dimension / ladder width;
+    /// `None` for the plain vector kernels).
     pub fn bucket_for(
         &self,
         kernel: Kernel,
         flavor: Flavor,
         dtype: DType,
         n: usize,
+        p: Option<usize>,
     ) -> Result<usize> {
-        let key = (kernel, flavor, dtype.name().to_string());
+        let key = (kernel, flavor, dtype.name().to_string(), p);
         let bs = self.buckets.get(&key).ok_or_else(|| {
             Error::Artifact(format!(
-                "no artifacts for {}/{}/{} — re-run `make artifacts`",
+                "no artifacts for {}/{}/{}{} — re-run `make artifacts`",
                 kernel.name(),
                 flavor.name(),
-                dtype.name()
+                dtype.name(),
+                p.map(|p| format!("/p{p}")).unwrap_or_default()
             ))
         })?;
         bs.iter().copied().find(|&b| b >= n).ok_or_else(|| {
@@ -213,6 +237,37 @@ impl Manifest {
                 bs.last().copied().unwrap_or(0)
             ))
         })
+    }
+
+    /// Sorted `fused_ladder` widths available at this exact n bucket
+    /// (empty when the artifact set predates the ladder kernel family).
+    pub fn ladder_widths(&self, flavor: Flavor, dtype: DType, n: usize) -> &[usize] {
+        self.ladders
+            .get(&(flavor, dtype.name().to_string(), n))
+            .map(|v| v.as_slice())
+            .unwrap_or(&[])
+    }
+
+    /// Ladder-width bucket for a `want`-rung pass: the narrowest width
+    /// >= `want` (the runtime pads by repeating the last rung), falling
+    /// back to the widest available when the pass is wider than any bucket
+    /// (the caller then chunks the ladder). `None` when no ladder
+    /// artifacts exist at this n bucket.
+    pub fn ladder_bucket(
+        &self,
+        flavor: Flavor,
+        dtype: DType,
+        n: usize,
+        want: usize,
+    ) -> Option<usize> {
+        let ws = self.ladder_widths(flavor, dtype, n);
+        ws.iter().copied().find(|&w| w >= want).or_else(|| ws.last().copied())
+    }
+
+    /// Widest `fused_ladder` bucket at this n bucket — what an adaptive
+    /// probes-per-pass should use so one pass maps to one reduction.
+    pub fn widest_ladder(&self, flavor: Flavor, dtype: DType, n: usize) -> Option<usize> {
+        self.ladder_widths(flavor, dtype, n).last().copied()
     }
 
     /// Exact entry lookup.
@@ -246,9 +301,15 @@ impl Manifest {
     }
 
     /// Largest bucket available (used to size benchmark sweeps).
-    pub fn max_bucket(&self, kernel: Kernel, flavor: Flavor, dtype: DType) -> Option<usize> {
+    pub fn max_bucket(
+        &self,
+        kernel: Kernel,
+        flavor: Flavor,
+        dtype: DType,
+        p: Option<usize>,
+    ) -> Option<usize> {
         self.buckets
-            .get(&(kernel, flavor, dtype.name().to_string()))
+            .get(&(kernel, flavor, dtype.name().to_string(), p))
             .and_then(|v| v.last().copied())
     }
 }
@@ -275,6 +336,15 @@ mod tests {
          "inputs": [], "outputs": []},
         {"kernel": "residuals", "flavor": "pallas", "dtype": "f32",
          "n": 4096, "p": 8, "path": "c.hlo.txt",
+         "inputs": [], "outputs": []},
+        {"kernel": "fused_ladder", "flavor": "jnp", "dtype": "f64",
+         "n": 4096, "p": 3, "path": "d.hlo.txt",
+         "inputs": [], "outputs": []},
+        {"kernel": "fused_ladder", "flavor": "jnp", "dtype": "f64",
+         "n": 4096, "p": 7, "path": "e.hlo.txt",
+         "inputs": [], "outputs": []},
+        {"kernel": "fused_ladder", "flavor": "jnp", "dtype": "f64",
+         "n": 8192, "p": 7, "path": "f.hlo.txt",
          "inputs": [], "outputs": []}
       ]
     }"#;
@@ -282,23 +352,68 @@ mod tests {
     #[test]
     fn parses_and_indexes() {
         let m = Manifest::parse(Path::new("/tmp/arts"), SAMPLE).unwrap();
-        assert_eq!(m.entries.len(), 3);
+        assert_eq!(m.entries.len(), 6);
         assert_eq!(
-            m.bucket_for(Kernel::FusedObjective, Flavor::Jnp, DType::F64, 5000)
+            m.bucket_for(Kernel::FusedObjective, Flavor::Jnp, DType::F64, 5000, None)
                 .unwrap(),
             8192
         );
         assert_eq!(
-            m.bucket_for(Kernel::FusedObjective, Flavor::Jnp, DType::F64, 4096)
+            m.bucket_for(Kernel::FusedObjective, Flavor::Jnp, DType::F64, 4096, None)
                 .unwrap(),
             4096
         );
         assert!(m
-            .bucket_for(Kernel::FusedObjective, Flavor::Jnp, DType::F64, 9000)
+            .bucket_for(Kernel::FusedObjective, Flavor::Jnp, DType::F64, 9000, None)
             .is_err());
         assert!(m
-            .bucket_for(Kernel::Neighbors, Flavor::Jnp, DType::F64, 10)
+            .bucket_for(Kernel::Neighbors, Flavor::Jnp, DType::F64, 10, None)
             .is_err());
+    }
+
+    #[test]
+    fn bucket_lookup_is_p_aware() {
+        let m = Manifest::parse(Path::new("/tmp/arts"), SAMPLE).unwrap();
+        // residuals exist only at p=8: a p=4 request must not alias them
+        assert_eq!(
+            m.bucket_for(Kernel::Residuals, Flavor::Pallas, DType::F32, 100, Some(8))
+                .unwrap(),
+            4096
+        );
+        assert!(m
+            .bucket_for(Kernel::Residuals, Flavor::Pallas, DType::F32, 100, Some(4))
+            .is_err());
+        // ladder widths are distinct p families at one n bucket
+        assert_eq!(
+            m.bucket_for(Kernel::FusedLadder, Flavor::Jnp, DType::F64, 4096, Some(3))
+                .unwrap(),
+            4096
+        );
+        assert_eq!(
+            m.bucket_for(Kernel::FusedLadder, Flavor::Jnp, DType::F64, 5000, Some(7))
+                .unwrap(),
+            8192
+        );
+        assert!(m
+            .bucket_for(Kernel::FusedLadder, Flavor::Jnp, DType::F64, 5000, Some(3))
+            .is_err());
+    }
+
+    #[test]
+    fn ladder_width_lookup_and_fallback() {
+        let m = Manifest::parse(Path::new("/tmp/arts"), SAMPLE).unwrap();
+        assert_eq!(m.ladder_widths(Flavor::Jnp, DType::F64, 4096), &[3, 7]);
+        assert_eq!(m.ladder_widths(Flavor::Jnp, DType::F64, 8192), &[7]);
+        // no ladder artifacts at all for this flavor/dtype
+        assert!(m.ladder_widths(Flavor::Pallas, DType::F64, 4096).is_empty());
+        assert_eq!(m.ladder_bucket(Flavor::Pallas, DType::F64, 4096, 2), None);
+        // narrowest width >= want
+        assert_eq!(m.ladder_bucket(Flavor::Jnp, DType::F64, 4096, 2), Some(3));
+        assert_eq!(m.ladder_bucket(Flavor::Jnp, DType::F64, 4096, 4), Some(7));
+        // wider than every bucket: fall back to the widest (caller chunks)
+        assert_eq!(m.ladder_bucket(Flavor::Jnp, DType::F64, 4096, 64), Some(7));
+        assert_eq!(m.widest_ladder(Flavor::Jnp, DType::F64, 4096), Some(7));
+        assert_eq!(m.widest_ladder(Flavor::Jnp, DType::F32, 4096), None);
     }
 
     #[test]
@@ -332,6 +447,7 @@ mod tests {
     fn kernel_flavor_names_roundtrip() {
         for k in [
             Kernel::FusedObjective,
+            Kernel::FusedLadder,
             Kernel::MinMaxSum,
             Kernel::Neighbors,
             Kernel::IntervalCount,

@@ -34,11 +34,7 @@ pub struct BisectOutcome {
 }
 
 /// Bisection for the k-th smallest element; exact via rank resolution.
-pub fn bisection(
-    ev: &mut dyn Evaluator,
-    k: usize,
-    opts: &BisectOptions,
-) -> Result<BisectOutcome> {
+pub fn bisection(ev: &mut dyn Evaluator, k: usize, opts: &BisectOptions) -> Result<BisectOutcome> {
     let n = ev.n();
     let spec = ObjectiveSpec::order(n, k)?;
     let mut phases = PhaseTimer::new();

@@ -144,11 +144,7 @@ pub fn brent_minimize(
 }
 
 /// Brent–Dekker root finding on the subgradient point value.
-pub fn brent_root(
-    ev: &mut dyn Evaluator,
-    k: usize,
-    opts: &BrentOptions,
-) -> Result<BrentOutcome> {
+pub fn brent_root(ev: &mut dyn Evaluator, k: usize, opts: &BrentOptions) -> Result<BrentOutcome> {
     let n = ev.n();
     let spec = ObjectiveSpec::order(n, k)?;
     let mut phases = PhaseTimer::new();

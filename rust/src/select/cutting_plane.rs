@@ -95,11 +95,7 @@ pub struct CpOutcome {
 /// the exact order statistic via `exact::resolve`. With `stop_after = m`,
 /// iteration stops early and the (bracket, iterations) are returned for the
 /// hybrid path.
-pub fn cutting_plane(
-    ev: &mut dyn Evaluator,
-    k: usize,
-    opts: &CpOptions,
-) -> Result<CpOutcome> {
+pub fn cutting_plane(ev: &mut dyn Evaluator, k: usize, opts: &CpOptions) -> Result<CpOutcome> {
     let n = ev.n();
     let spec = ObjectiveSpec::order(n, k)?;
     let mut phases = PhaseTimer::new();
@@ -221,9 +217,7 @@ pub fn cutting_plane(
 
     if g_l >= 0.0 || g_r <= 0.0 {
         // The bracket invariant g(y_L) < 0 < g(y_R) must hold throughout.
-        return Err(algo_err!(
-            "cutting plane lost its bracket invariant: g_l={g_l} g_r={g_r}"
-        ));
+        return Err(algo_err!("cutting plane lost its bracket invariant: g_l={g_l} g_r={g_r}"));
     }
 
     if opts.stop_after.is_some() {
@@ -406,12 +400,8 @@ mod tests {
         let mut rng = Rng::seeded(27);
         let data = Distribution::Beta25.sample_vec(&mut rng, 2048);
         let mut ev = HostEvaluator::new(&data);
-        let out = cutting_plane(
-            &mut ev,
-            1024,
-            &CpOptions { trace: true, ..CpOptions::default() },
-        )
-        .unwrap();
+        let out = cutting_plane(&mut ev, 1024, &CpOptions { trace: true, ..CpOptions::default() })
+            .unwrap();
         assert!(out.trace.len() >= 3);
         // bracket widths are non-increasing over the trace
         let widths: Vec<f64> = out.trace.iter().map(|t| t.y_r - t.y_l).collect();

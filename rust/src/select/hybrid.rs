@@ -171,11 +171,7 @@ mod tests {
         let data = Distribution::Uniform.sample_vec(&mut rng, n);
         let mut ev = HostEvaluator::new(&data);
         let out = hybrid_select(&mut ev, median_rank(n), &HybridOptions::default()).unwrap();
-        assert!(
-            out.z_len <= n / 4,
-            "pivot interval too large: {} of {n}",
-            out.z_len
-        );
+        assert!(out.z_len <= n / 4, "pivot interval too large: {} of {n}", out.z_len);
     }
 
     #[test]

@@ -117,11 +117,7 @@ pub struct SelectResult {
 }
 
 /// Compute the k-th smallest element with the chosen method.
-pub fn order_statistic(
-    ev: &mut dyn Evaluator,
-    k: usize,
-    method: Method,
-) -> Result<SelectResult> {
+pub fn order_statistic(ev: &mut dyn Evaluator, k: usize, method: Method) -> Result<SelectResult> {
     let probes0 = ev.probes();
     let (value, iterations, phases) = match method {
         Method::CuttingPlane => {
@@ -137,7 +133,11 @@ pub fn order_statistic(
             (o.value, o.iterations, o.phases)
         }
         Method::Multisection => {
-            let o = multisection::multisection(ev, k, &MultisectOptions::default())?;
+            // Ladder width adapts to the evaluator: a device evaluator
+            // advertises its widest fused_ladder bucket so every pass is
+            // exactly one launch; the host default stays 15.
+            let opts = MultisectOptions::for_evaluator(&*ev);
+            let o = multisection::multisection(ev, k, &opts)?;
             (o.value, o.passes, o.phases)
         }
         Method::BrentMinimize => {

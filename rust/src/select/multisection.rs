@@ -46,6 +46,22 @@ impl Default for MultisectOptions {
     }
 }
 
+impl MultisectOptions {
+    /// Ladder-width-adapted options: when the evaluator advertises a
+    /// native fused-ladder width ([`Evaluator::ladder_width_hint`] — the
+    /// device runtime's widest `fused_ladder` artifact bucket), probe that
+    /// many points per pass so each pass is exactly one device reduction;
+    /// otherwise keep the static default (the host oracle sweeps any width
+    /// in one pass).
+    pub fn for_evaluator(ev: &dyn Evaluator) -> Self {
+        let mut opts = Self::default();
+        if let Some(w) = ev.ladder_width_hint() {
+            opts.probes_per_pass = w.max(1);
+        }
+        opts
+    }
+}
+
 #[derive(Debug, Clone)]
 pub struct MultisectOutcome {
     pub value: f64,
@@ -62,7 +78,7 @@ fn ladder_points(lo: f64, hi: f64, p: usize) -> Vec<f64> {
         let y = lo + width * i as f64 / (p + 1) as f64;
         // strictly interior and strictly increasing (guards float collapse
         // once the bracket nears adjacent representable values)
-        if y > lo && y < hi && ys.last().map_or(true, |&prev| y > prev) {
+        if y > lo && y < hi && ys.last().is_none_or(|&prev| y > prev) {
             ys.push(y);
         }
     }
@@ -351,11 +367,7 @@ mod tests {
         let range: f64 = 1.0; // U(0,1) support; observed range is tighter
         let eps = opts.tol; // relative scale is 1 on this data
         let bound = (range * 2.0 / eps).log(16.0).ceil() as usize;
-        assert!(
-            out.passes <= bound,
-            "{} passes exceeds the log16 bound {bound}",
-            out.passes
-        );
+        assert!(out.passes <= bound, "{} passes exceeds the log16 bound {bound}", out.passes);
         // seed + passes + a handful of fixup reductions (the analytic
         // mirror run records exactly 1 + 10 + 10 on this seed)
         assert!(
@@ -458,12 +470,7 @@ mod tests {
         // 8 identical queries ride the single query's ladder (identical
         // brackets dedupe to one set of rungs; the fixup tail may replay
         // per query, so allow a small additive slack)
-        assert!(
-            shared <= ev1.probes() + 16,
-            "shared {} vs single {}",
-            shared,
-            ev1.probes()
-        );
+        assert!(shared <= ev1.probes() + 16, "shared {} vs single {}", shared, ev1.probes());
     }
 
     #[test]

@@ -203,15 +203,65 @@ pub trait Evaluator {
     /// pass over the data — the unit the paper's complexity claims count).
     fn probes(&self) -> u64;
 
+    /// Widest probe ladder this evaluator answers in **one** fused
+    /// reduction, or `None` when there is no native limit (the host oracle
+    /// sweeps any width in a single pass). The device runtime reports its
+    /// widest `fused_ladder` artifact bucket; pass planners
+    /// (`MultisectOptions::for_evaluator`) size their ladders from this
+    /// hint so every pass maps to exactly one launch.
+    fn ladder_width_hint(&self) -> Option<usize> {
+        None
+    }
+
     /// Canonicalize a probe value through the array dtype: an f32-backed
     /// evaluator compares in f32, so any value reported as *equal to data*
     /// must be quantized to f32 to be the data value itself.
     fn canon(&self, y: f64) -> f64 {
-        match self.dtype() {
-            DType::F64 => y,
-            DType::F32 => y as f32 as f64,
-        }
+        canon_value(y, self.dtype())
     }
+}
+
+/// [`Evaluator::canon`] as a free function (shared by the fused-ladder
+/// helpers below, which run outside any evaluator borrow).
+pub(crate) fn canon_value(y: f64, dtype: DType) -> f64 {
+    match dtype {
+        DType::F64 => y,
+        DType::F32 => y as f32 as f64,
+    }
+}
+
+/// Shared prologue of natively-fused `probe_many` batches (host oracle and
+/// device runtime): canonicalize every probe through the array dtype, then
+/// build the deduplicated sorted ladder with NaN rungs dropped. Returns
+/// `(canonicalized probes, ladder)`; an empty ladder means every probe was
+/// NaN.
+pub(crate) fn fused_ladder_rungs(ys: &[f64], dtype: DType) -> (Vec<f64>, Vec<f64>) {
+    let canon: Vec<f64> = ys.iter().map(|&y| canon_value(y, dtype)).collect();
+    let mut ladder: Vec<f64> = canon.iter().copied().filter(|y| !y.is_nan()).collect();
+    ladder.sort_by(|a, b| a.total_cmp(b));
+    ladder.dedup();
+    (canon, ladder)
+}
+
+/// Shared epilogue: map per-rung `stats` (aligned with `ladder`) back to
+/// the caller's probe order. Duplicates share one rung; a NaN probe yields
+/// all-zero stats, exactly like `probe(NaN)`.
+pub(crate) fn ladder_stats_in_probe_order(
+    canon: &[f64],
+    ladder: &[f64],
+    stats: &[ProbeStats],
+) -> Vec<ProbeStats> {
+    let zero = ProbeStats { s_lo: 0.0, s_hi: 0.0, c_lt: 0, c_eq: 0, c_gt: 0 };
+    canon
+        .iter()
+        .map(|&y| {
+            if y.is_nan() {
+                zero
+            } else {
+                stats[ladder.partition_point(|&l| l < y)]
+            }
+        })
+        .collect()
 }
 
 /// Weighted objective for the k-th smallest of n (Eqs. 1–2).
@@ -713,13 +763,10 @@ impl Evaluator for HostEvaluator {
             return Ok(Vec::new());
         }
         self.probes += 1; // the whole ladder is ONE fused pass
-        let canon: Vec<f64> = ys.iter().map(|&y| self.canon(y)).collect();
-        let mut ladder: Vec<f64> = canon.iter().copied().filter(|y| !y.is_nan()).collect();
-        ladder.sort_by(|a, b| a.total_cmp(b));
-        ladder.dedup();
-        let zero = ProbeStats { s_lo: 0.0, s_hi: 0.0, c_lt: 0, c_eq: 0, c_gt: 0 };
+        let (canon, ladder) = fused_ladder_rungs(ys, self.dtype());
         if ladder.is_empty() {
-            return Ok(vec![zero; canon.len()]); // all-NaN ladder, like probe(NaN)
+            // all-NaN ladder, like probe(NaN)
+            return Ok(ladder_stats_in_probe_order(&canon, &ladder, &[]));
         }
         let t = self.threads;
         let rungs = &ladder;
@@ -733,16 +780,7 @@ impl Evaluator for HostEvaluator {
         };
         let stats = compose_ladder(&ladder, &part);
         // Back to the caller's probe order; duplicates share one rung.
-        Ok(canon
-            .iter()
-            .map(|&y| {
-                if y.is_nan() {
-                    zero
-                } else {
-                    stats[ladder.partition_point(|&l| l < y)]
-                }
-            })
-            .collect())
+        Ok(ladder_stats_in_probe_order(&canon, &ladder, &stats))
     }
 
     fn neighbors(&mut self, y: f64) -> Result<Neighbors> {
@@ -843,7 +881,9 @@ mod tests {
         for k in 1..=4 {
             let spec = ObjectiveSpec::order(4, k).unwrap();
             let mut e = ev(&data);
-            for (y, below) in [(5.0, true), (15.0, k > 1), (25.0, k > 2), (35.0, k > 3), (45.0, false)] {
+            let probes =
+                [(5.0, true), (15.0, k > 1), (25.0, k > 2), (35.0, k > 3), (45.0, false)];
+            for (y, below) in probes {
                 let s = e.probe(y).unwrap();
                 assert_eq!(spec.answer_above(&s), below, "k={k} y={y}");
             }

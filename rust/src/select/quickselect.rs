@@ -9,7 +9,7 @@
 /// k-th smallest (1-indexed) via iterative three-way quickselect.
 /// Operates on a scratch copy the caller provides (mutated in place).
 pub fn quickselect(data: &mut [f64], k: usize) -> f64 {
-    assert!(k >= 1 && k <= data.len(), "k={k} n={}", data.len());
+    assert!((1..=data.len()).contains(&k), "k={k} n={}", data.len());
     let mut lo = 0usize;
     let mut hi = data.len();
     let mut rank = k - 1; // 0-indexed within [lo, hi)
@@ -71,47 +71,45 @@ fn median_of_3(d: &[f64], a: usize, b: usize, c: usize) -> f64 {
 
 /// BFPRT median-of-medians: deterministic worst-case O(n) selection.
 pub fn bfprt(data: &mut [f64], k: usize) -> f64 {
-    assert!(k >= 1 && k <= data.len());
+    assert!((1..=data.len()).contains(&k));
     let n = data.len();
     bfprt_range(data, 0, n, k - 1)
 }
 
 fn bfprt_range(data: &mut [f64], lo: usize, hi: usize, rank: usize) -> f64 {
-    loop {
-        let len = hi - lo;
-        if len <= 32 {
-            let s = &mut data[lo..hi];
-            insertion_sort(s);
-            return s[rank];
-        }
-        let pivot = median_of_medians(data, lo, hi);
-        let (mut i, mut j, mut p) = (lo, lo, hi);
-        while j < p {
-            if data[j] < pivot {
-                data.swap(i, j);
-                i += 1;
-                j += 1;
-            } else if data[j] > pivot {
-                p -= 1;
-                data.swap(j, p);
-            } else {
-                j += 1;
-            }
-        }
-        let n_lt = i - lo;
-        let n_eq = p - i;
-        if rank < n_lt {
-            return bfprt_range(data, lo, i, rank);
-        } else if rank < n_lt + n_eq {
-            return pivot;
+    let len = hi - lo;
+    if len <= 32 {
+        let s = &mut data[lo..hi];
+        insertion_sort(s);
+        return s[rank];
+    }
+    let pivot = median_of_medians(data, lo, hi);
+    let (mut i, mut j, mut p) = (lo, lo, hi);
+    while j < p {
+        if data[j] < pivot {
+            data.swap(i, j);
+            i += 1;
+            j += 1;
+        } else if data[j] > pivot {
+            p -= 1;
+            data.swap(j, p);
         } else {
-            return bfprt_range(data, p, hi, rank - n_lt - n_eq);
+            j += 1;
         }
+    }
+    let n_lt = i - lo;
+    let n_eq = p - i;
+    if rank < n_lt {
+        bfprt_range(data, lo, i, rank)
+    } else if rank < n_lt + n_eq {
+        pivot
+    } else {
+        bfprt_range(data, p, hi, rank - n_lt - n_eq)
     }
 }
 
 fn median_of_medians(data: &mut [f64], lo: usize, hi: usize) -> f64 {
-    let mut medians: Vec<f64> = Vec::with_capacity((hi - lo + 4) / 5);
+    let mut medians: Vec<f64> = Vec::with_capacity((hi - lo).div_ceil(5));
     let mut i = lo;
     while i < hi {
         let end = (i + 5).min(hi);

@@ -99,7 +99,7 @@ pub fn radix_sort_f32(data: &mut Vec<f32>) {
 /// Full-sort selection baseline: sort everything, index the k-th element.
 /// This is the paper's "Radix Sort (on GPU)" method row.
 pub fn sort_select_f64(data: &[f64], k: usize) -> f64 {
-    assert!(k >= 1 && k <= data.len());
+    assert!((1..=data.len()).contains(&k));
     let mut v = data.to_vec();
     radix_sort_f64(&mut v);
     v[k - 1]
@@ -107,7 +107,7 @@ pub fn sort_select_f64(data: &[f64], k: usize) -> f64 {
 
 /// f32 variant (4 key passes — the paper's float advantage).
 pub fn sort_select_f32(data: &[f32], k: usize) -> f32 {
-    assert!(k >= 1 && k <= data.len());
+    assert!((1..=data.len()).contains(&k));
     let mut v = data.to_vec();
     radix_sort_f32(&mut v);
     v[k - 1]
@@ -162,10 +162,7 @@ mod tests {
         let mut rng = Rng::seeded(73);
         let data = Distribution::Mixture2.sample_vec(&mut rng, 999);
         for k in [1, 500, 999] {
-            assert_eq!(
-                sort_select_f64(&data, k),
-                crate::stats::sorted_order_statistic(&data, k)
-            );
+            assert_eq!(sort_select_f64(&data, k), crate::stats::sorted_order_statistic(&data, k));
         }
     }
 

@@ -42,11 +42,7 @@ pub fn needs_transform(min: f64, max: f64) -> bool {
 /// Host-side: transforms a copy of the data, runs the cutting plane in
 /// transformed space, maps the result back and snaps to the nearest
 /// original data value by rank.
-pub fn select_transformed(
-    data: &[f64],
-    k: usize,
-    opts: &CpOptions,
-) -> Result<(f64, CpOutcome)> {
+pub fn select_transformed(data: &[f64], k: usize, opts: &CpOptions) -> Result<(f64, CpOutcome)> {
     let min = data.iter().copied().fold(f64::INFINITY, f64::min);
     let tr = LogTransform { min };
     let tdata: Vec<f64> = data.iter().map(|&t| tr.forward(t)).collect();

@@ -290,14 +290,8 @@ mod tests {
         let x = [5.0, 1.0, 9.0, 3.0];
         let w = [1.0, 1.0, 1.0, 1.0];
         let mut ev = WeightedHostEvaluator::new(&x, &w).unwrap();
-        assert_eq!(
-            weighted_quantile(&mut ev, 1.0, &WeightedOptions::default()).unwrap(),
-            9.0
-        );
+        assert_eq!(weighted_quantile(&mut ev, 1.0, &WeightedOptions::default()).unwrap(), 9.0);
         let mut ev = WeightedHostEvaluator::new(&x, &w).unwrap();
-        assert_eq!(
-            weighted_quantile(&mut ev, 0.25, &WeightedOptions::default()).unwrap(),
-            1.0
-        );
+        assert_eq!(weighted_quantile(&mut ev, 0.25, &WeightedOptions::default()).unwrap(), 1.0);
     }
 }

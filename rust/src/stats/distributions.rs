@@ -194,6 +194,6 @@ mod tests {
         let mut v = vec![0.0; 1000];
         OutlierSpec { magnitude: 1e9, count: 5 }.inject(&mut rng, &mut v);
         let big = v.iter().filter(|&&x| x == 1e9).count();
-        assert!(big >= 1 && big <= 5); // collisions possible
+        assert!((1..=5).contains(&big)); // collisions possible
     }
 }

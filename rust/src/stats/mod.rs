@@ -10,7 +10,7 @@ pub use rng::Rng;
 
 /// Exact (sort-based) k-th order statistic, 1-indexed — the test oracle.
 pub fn sorted_order_statistic(data: &[f64], k: usize) -> f64 {
-    assert!(k >= 1 && k <= data.len());
+    assert!((1..=data.len()).contains(&k));
     let mut v = data.to_vec();
     v.sort_by(|a, b| a.total_cmp(b));
     v[k - 1]

@@ -45,11 +45,7 @@ pub fn iqr(x: &[f64], selector: &mut dyn MedianSelector) -> Result<f64> {
 /// α-trimmed mean: average of the values between the α- and (1−α)-order
 /// statistics, computed with two selections plus one thresholded pass (the
 /// same pattern as the paper's LTS ρ-trick).
-pub fn trimmed_mean(
-    x: &[f64],
-    alpha: f64,
-    selector: &mut dyn MedianSelector,
-) -> Result<f64> {
+pub fn trimmed_mean(x: &[f64], alpha: f64, selector: &mut dyn MedianSelector) -> Result<f64> {
     let n = x.len();
     if n == 0 {
         return Err(invalid_arg!("empty input"));
@@ -96,11 +92,7 @@ pub fn trimmed_mean(
 }
 
 /// Winsorized mean: clamp to the [α, 1−α] order statistics, then average.
-pub fn winsorized_mean(
-    x: &[f64],
-    alpha: f64,
-    selector: &mut dyn MedianSelector,
-) -> Result<f64> {
+pub fn winsorized_mean(x: &[f64], alpha: f64, selector: &mut dyn MedianSelector) -> Result<f64> {
     let n = x.len();
     if n == 0 {
         return Err(invalid_arg!("empty input"));

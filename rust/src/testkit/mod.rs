@@ -91,7 +91,12 @@ pub fn forall(
 }
 
 /// Assert-style wrapper for tests.
-pub fn check(seed: u64, cases: usize, gen: &CaseGen, prop: impl FnMut(&Case) -> Result<(), String>) {
+pub fn check(
+    seed: u64,
+    cases: usize,
+    gen: &CaseGen,
+    prop: impl FnMut(&Case) -> Result<(), String>,
+) {
     match forall(seed, cases, gen, prop) {
         PropResult::Ok { .. } => {}
         PropResult::Failed { case, message, shrunk } => {
@@ -107,10 +112,7 @@ pub fn check(seed: u64, cases: usize, gen: &CaseGen, prop: impl FnMut(&Case) -> 
     }
 }
 
-fn shrink(
-    mut case: Case,
-    prop: &mut impl FnMut(&Case) -> Result<(), String>,
-) -> (Case, bool) {
+fn shrink(mut case: Case, prop: &mut impl FnMut(&Case) -> Result<(), String>) -> (Case, bool) {
     let mut shrunk = false;
     // 1) halve the vector while the failure persists
     loop {
@@ -165,7 +167,7 @@ mod tests {
     #[test]
     fn passing_property_runs_all_cases() {
         let r = forall(1, 50, &CaseGen::default(), |c| {
-            if c.k >= 1 && c.k <= c.data.len() {
+            if (1..=c.data.len()).contains(&c.k) {
                 Ok(())
             } else {
                 Err("k out of range".into())
@@ -206,7 +208,7 @@ mod tests {
         for _ in 0..100 {
             let c = gen.generate(&mut rng);
             assert!((5..=9).contains(&c.data.len()));
-            assert!(c.k >= 1 && c.k <= c.data.len());
+            assert!((1..=c.data.len()).contains(&c.k));
         }
     }
 

@@ -26,10 +26,7 @@ impl Json {
         let v = p.value()?;
         p.ws();
         if p.i != p.b.len() {
-            return Err(Error::Parse(format!(
-                "trailing characters at byte {} of JSON input",
-                p.i
-            )));
+            return Err(Error::Parse(format!("trailing characters at byte {} of JSON input", p.i)));
         }
         Ok(v)
     }
@@ -300,10 +297,7 @@ mod tests {
         assert_eq!(e.get("kernel").unwrap().as_str().unwrap(), "fused_objective");
         assert!(e.get_opt("p").is_none());
         let inp = &e.get("inputs").unwrap().as_arr().unwrap()[0];
-        assert_eq!(
-            inp.get("shape").unwrap().as_arr().unwrap()[0].as_usize().unwrap(),
-            4096
-        );
+        assert_eq!(inp.get("shape").unwrap().as_arr().unwrap()[0].as_usize().unwrap(), 4096);
     }
 
     #[test]
@@ -311,10 +305,7 @@ mod tests {
         assert_eq!(Json::parse("true").unwrap(), Json::Bool(true));
         assert_eq!(Json::parse("null").unwrap(), Json::Null);
         assert_eq!(Json::parse("-12.5e2").unwrap(), Json::Num(-1250.0));
-        assert_eq!(
-            Json::parse(r#""a\nb\t\"c\" A""#).unwrap(),
-            Json::Str("a\nb\t\"c\" A".into())
-        );
+        assert_eq!(Json::parse(r#""a\nb\t\"c\" A""#).unwrap(), Json::Str("a\nb\t\"c\" A".into()));
     }
 
     #[test]

@@ -19,14 +19,14 @@ pub fn next_pow2(n: usize) -> usize {
 /// Integer part of (n+1)/2 — the paper's median index (1-based), `Med(x) =
 /// x_([(n+1)/2])`.
 pub fn median_rank(n: usize) -> usize {
-    (n + 1) / 2
+    n.div_ceil(2)
 }
 
 /// The LTS trim count: h = [(n+p)/2] in Rousseeuw's formulation; the paper's
 /// §VI uses h = (n+1)/2 for odd n and n/2 for even n (p folded elsewhere).
 pub fn lts_h(n: usize) -> usize {
     if n % 2 == 1 {
-        (n + 1) / 2
+        n.div_ceil(2)
     } else {
         n / 2
     }

@@ -22,15 +22,18 @@ fn breakdown_story_holds() {
     // the paper's qualitative §VI result: OLS breaks at 30% contamination,
     // LMS and LTS recover the true model.
     let mut rng = Rng::seeded(401);
-    let d = ContaminatedLinear { n: 600, p: 4, contamination: 0.3, sigma: 0.15, ..Default::default() }
-        .generate(&mut rng);
+    let gen = ContaminatedLinear {
+        n: 600,
+        p: 4,
+        contamination: 0.3,
+        sigma: 0.15,
+        ..Default::default()
+    };
+    let d = gen.generate(&mut rng);
     let x = d.design();
     let mut sel = HostSelector::default();
     let e_ols = max_err(&ols(&x, &d.y).unwrap(), &d.theta);
-    let e_lms = max_err(
-        &lms(&x, &d.y, &LmsOptions::default(), &mut sel).unwrap().theta,
-        &d.theta,
-    );
+    let e_lms = max_err(&lms(&x, &d.y, &LmsOptions::default(), &mut sel).unwrap().theta, &d.theta);
     let e_lts = max_err(&lts(&x, &d.y, &LtsOptions::default(), &mut sel).unwrap().theta, &d.theta);
     assert!(e_ols > 1.0, "OLS should break: {e_ols}");
     assert!(e_lms < 0.5, "LMS should survive: {e_lms}");
@@ -76,7 +79,10 @@ fn device_residual_pipeline_matches_host() {
 
     // device residuals via the AOT artifact
     let n = d.n();
-    let bucket = rt.manifest.bucket_for(Kernel::Residuals, rt.flavor, DType::F64, n).unwrap();
+    let bucket = rt
+        .manifest
+        .bucket_for(Kernel::Residuals, rt.flavor, DType::F64, n, Some(p))
+        .unwrap();
     let exe = rt
         .executable(Kernel::Residuals, rt.flavor, DType::F64, bucket, Some(p))
         .unwrap();
@@ -115,7 +121,10 @@ fn device_lms_probe_fused_graph_matches_composed() {
     let theta: Vec<f64> = (0..p).map(|i| 0.1 * (i as f64 + 1.0)).collect();
     let t = 0.9;
 
-    let bucket = rt.manifest.bucket_for(Kernel::LmsProbe, rt.flavor, DType::F64, n).unwrap();
+    let bucket = rt
+        .manifest
+        .bucket_for(Kernel::LmsProbe, rt.flavor, DType::F64, n, Some(p))
+        .unwrap();
     let exe = rt
         .executable(Kernel::LmsProbe, rt.flavor, DType::F64, bucket, Some(p))
         .unwrap();
@@ -163,7 +172,10 @@ fn knn_device_kernels_match_host_model() {
     let host_pred = model.predict_regression(&q, k, &mut sel).unwrap();
 
     // device: dists -> OS_k -> knn_weighted_sum
-    let bucket = rt.manifest.bucket_for(Kernel::Dists, rt.flavor, DType::F64, n).unwrap();
+    let bucket = rt
+        .manifest
+        .bucket_for(Kernel::Dists, rt.flavor, DType::F64, n, Some(p))
+        .unwrap();
     let exe = rt.executable(Kernel::Dists, rt.flavor, DType::F64, bucket, Some(p)).unwrap();
     let x_flat: Vec<f64> = rows.iter().flatten().copied().collect();
     let xb = rt.upload_matrix(&x_flat, n, p, DType::F64, bucket).unwrap();
@@ -177,7 +189,7 @@ fn knn_device_kernels_match_host_model() {
 
     let kb = rt
         .manifest
-        .bucket_for(Kernel::KnnWeightedSum, rt.flavor, DType::F64, n)
+        .bucket_for(Kernel::KnnWeightedSum, rt.flavor, DType::F64, n, None)
         .unwrap();
     let exe = rt
         .executable(Kernel::KnnWeightedSum, rt.flavor, DType::F64, kb, None)

@@ -25,10 +25,7 @@ fn assert_equivalent(a: &ProbeStats, b: &ProbeStats, data: &[f64], y: f64, ctx: 
             continue;
         }
         let tol = 1e-12 * mass + 1e-9 * wa.abs().max(1.0);
-        assert!(
-            (ga - wa).abs() <= tol,
-            "{ctx}: {name} {ga} vs {wa} (tol {tol}) at y={y}"
-        );
+        assert!((ga - wa).abs() <= tol, "{ctx}: {name} {ga} vs {wa} (tol {tol}) at y={y}");
     }
 }
 

@@ -64,10 +64,7 @@ fn device_backend_through_service() {
     let id = svc.upload(data, DType::F64).unwrap();
     assert_eq!(svc.query(id, KSpec::Median).unwrap().value, want_med);
     assert_eq!(svc.query(id, KSpec::Rank(2700)).unwrap().value, want_q9);
-    assert_eq!(
-        svc.query_with(id, KSpec::Median, Method::Hybrid).unwrap().value,
-        want_med
-    );
+    assert_eq!(svc.query_with(id, KSpec::Median, Method::Hybrid).unwrap().value, want_med);
     svc.shutdown();
 }
 

@@ -164,7 +164,7 @@ fn missing_artifact_is_a_clean_error() {
     // bucket larger than anything emitted
     let err = rt
         .manifest
-        .bucket_for(Kernel::FusedObjective, Flavor::Jnp, DType::F64, 1 << 30)
+        .bucket_for(Kernel::FusedObjective, Flavor::Jnp, DType::F64, 1 << 30, None)
         .unwrap_err();
     let msg = err.to_string();
     assert!(msg.contains("max-log2n") || msg.contains("bucket"), "{msg}");
@@ -196,10 +196,99 @@ fn device_probe_many_matches_host_ladder() {
         assert!((da.s_lo - hb.s_lo).abs() <= 1e-6 * hb.s_lo.abs().max(1.0), "probe {i}");
         assert!((da.s_hi - hb.s_hi).abs() <= 1e-6 * hb.s_hi.abs().max(1.0), "probe {i}");
     }
-    // no ladder artifact yet: the batch runs as back-to-back launches and
-    // is honestly counted per launch (the host ladder counts once)
-    assert_eq!(dev.probes(), ys.len() as u64);
     assert_eq!(host.probes(), 1);
+    if dev.has_fused_ladder() {
+        // fused_ladder artifacts present: the whole batch (5 distinct
+        // rungs, fits one width bucket) is ONE device reduction, matching
+        // the host/sharded accounting
+        assert_eq!(dev.probes(), 1, "ladder batch must cost one reduction");
+    } else {
+        // pre-ladder artifact set: back-to-back launches, honestly
+        // counted per launch
+        assert_eq!(dev.probes(), ys.len() as u64);
+    }
+}
+
+#[test]
+fn device_fused_ladder_matches_sequential_launches() {
+    // Parity: the fused_ladder output must equal sequential
+    // fused_objective launches rung by rung — duplicate-heavy ladders,
+    // padded widths, data-valued rungs, f32 and f64.
+    let dir = require_artifacts!();
+    let rt = Runtime::new(&dir).unwrap();
+    let mut rng = Rng::seeded(210);
+    let data = Distribution::Mixture4.sample_vec(&mut rng, 2500);
+    for dtype in [DType::F64, DType::F32] {
+        let mut dev = DeviceEvaluator::upload(&rt, &data, dtype).unwrap();
+        if !dev.has_fused_ladder() {
+            eprintln!("SKIP: no fused_ladder artifacts (pre-ladder set)");
+            return;
+        }
+        let tol = if dtype == DType::F32 { 1e-3 } else { 1e-6 };
+        let ladders: Vec<Vec<f64>> = vec![
+            vec![0.5],                                        // width 1, pads to 3
+            vec![data[0], data[1], data[0], 0.9, 1e6],        // dups + data rungs
+            (1..=15).map(|i| i as f64 / 16.0).collect(),      // full width
+            (1..=23).map(|i| i as f64 / 24.0 * 100.0).collect(), // wider: chunks
+        ];
+        for ys in &ladders {
+            let batch = dev.probe_many(ys).unwrap();
+            assert_eq!(batch.len(), ys.len());
+            // sequential launches on a fresh evaluator (probe() never
+            // touches the ladder path)
+            let mut seq = DeviceEvaluator::upload(&rt, &data, dtype).unwrap();
+            for (y, got) in ys.iter().zip(&batch) {
+                let want = seq.probe(*y).unwrap();
+                assert_eq!(
+                    (got.c_lt, got.c_eq, got.c_gt),
+                    (want.c_lt, want.c_eq, want.c_gt),
+                    "{} y={y}",
+                    dtype.name()
+                );
+                assert!(
+                    (got.s_lo - want.s_lo).abs() <= tol * want.s_lo.abs().max(1.0),
+                    "{} y={y}: s_lo {} vs {}",
+                    dtype.name(),
+                    got.s_lo,
+                    want.s_lo
+                );
+                assert!(
+                    (got.s_hi - want.s_hi).abs() <= tol * want.s_hi.abs().max(1.0),
+                    "{} y={y}: s_hi {} vs {}",
+                    dtype.name(),
+                    got.s_hi,
+                    want.s_hi
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn device_ladder_accounting_one_reduction_per_pass() {
+    let dir = require_artifacts!();
+    let rt = Runtime::new(&dir).unwrap();
+    let mut rng = Rng::seeded(211);
+    let data = Distribution::Uniform.sample_vec(&mut rng, 3000);
+    let mut dev = DeviceEvaluator::upload(&rt, &data, DType::F64).unwrap();
+    if !dev.has_fused_ladder() {
+        eprintln!("SKIP: no fused_ladder artifacts (pre-ladder set)");
+        return;
+    }
+    let widest = dev.ladder_width_hint().unwrap();
+    assert!(widest >= 2);
+    // one pass of `widest` distinct rungs = exactly one reduction
+    let ys: Vec<f64> = (1..=widest).map(|i| i as f64 / (widest + 1) as f64).collect();
+    let p0 = dev.probes();
+    dev.probe_many(&ys).unwrap();
+    assert_eq!(dev.probes() - p0, 1, "one ladder = one fused reduction");
+    // a ladder wider than every bucket chunks: ceil(len/widest) reductions
+    let wide: Vec<f64> = (1..=2 * widest + 1)
+        .map(|i| i as f64 / (2 * widest + 2) as f64)
+        .collect();
+    let p0 = dev.probes();
+    dev.probe_many(&wide).unwrap();
+    assert_eq!(dev.probes() - p0, wide.len().div_ceil(widest) as u64);
 }
 
 #[test]
@@ -212,4 +301,17 @@ fn multisection_on_device_backend() {
     let mut dev = DeviceEvaluator::upload(&rt, &data, DType::F64).unwrap();
     let r = select::median(&mut dev, Method::Multisection).unwrap();
     assert_eq!(r.value, want);
+    if dev.has_fused_ladder() {
+        // Acceptance: a device multisection reports `passes` fused
+        // reductions (one per ladder) — not passes × p. Budget: one seed
+        // reduction + one per pass + a short exact-fixup tail.
+        let passes = r.iterations as u64;
+        assert!(
+            r.probes <= passes + 1 + 16,
+            "probes={} passes={passes}: device pass must be one reduction",
+            r.probes
+        );
+        let p = dev.ladder_width_hint().unwrap() as u64;
+        assert!(r.probes < passes * p.max(2), "probes={} ≈ passes×p: ladder not fused", r.probes);
+    }
 }
