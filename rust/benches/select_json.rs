@@ -1,8 +1,10 @@
 //! BENCH_select.json — the machine-readable perf-trajectory artifact:
 //! method × n × fused reductions × wall-ms for the probe-based methods,
 //! plus the coordinator coalescing experiment (8 concurrent same-dataset
-//! medians vs 8 sequential runs). Future PRs diff this file to track both
-//! the pass-count and wall-clock trajectories.
+//! medians vs 8 sequential runs) and the time-windowed coalescing
+//! experiment (8 *independent* single-shot clients caught by one batching
+//! window). Future PRs diff this file to track both the pass-count and
+//! wall-clock trajectories.
 //!
 //! Writes to `CP_BENCH_OUT` (default `results/`); run the CLI's
 //! `bench-select` from the repo root to refresh the committed copy.
@@ -63,7 +65,17 @@ fn check_against_baseline(bench: &SelectBench) {
         "coordinator coalescing regressed: {} > baseline {cbase}",
         bench.coordinator.concurrent_fused_reductions
     );
-    println!("regression check vs {path}: {checked} rows + coordinator within baseline");
+    // window-coalescing counts (baselines written before the batching
+    // window landed lack the key; skip silently then)
+    if let Some(wbase) = base.get("window") {
+        let fbase = wbase.get("fused_reductions").unwrap().as_usize().unwrap() as u64;
+        assert!(
+            bench.window.fused_reductions <= fbase,
+            "window coalescing regressed: {} fused reductions > baseline {fbase}",
+            bench.window.fused_reductions
+        );
+    }
+    println!("regression check vs {path}: {checked} rows + coalescing within baseline");
 }
 
 fn main() {
@@ -81,7 +93,7 @@ fn main() {
     let p = report::write_result(&common::results_dir(), "BENCH_select.json", &json).unwrap();
     println!("wrote {}", p.display());
 
-    // the acceptance property this artifact exists to track
+    // the acceptance properties this artifact exists to track
     let c = &bench.coordinator;
     assert!(
         c.concurrent_fused_reductions < c.sequential_fused_reductions,
@@ -89,6 +101,26 @@ fn main() {
         c.concurrent_fused_reductions,
         c.sequential_fused_reductions
     );
+    // time-windowed coalescing: 8 independent single-shot query() clients
+    // must land in one batching window (coalesced >= 8) and cost strictly
+    // less than 8x the single-query multisection run
+    let w = &bench.window;
+    assert!(
+        w.coalesced >= w.queries as u64,
+        "batching window missed clients: coalesced {} < {} queries",
+        w.coalesced,
+        w.queries
+    );
+    let single = bench.rows.iter().find(|r| r.method == "multisection" && r.n == 16384);
+    if let Some(row) = single {
+        assert!(
+            w.fused_reductions < row.fused_reductions * w.queries as u64,
+            "window burst cost {} fused reductions, not below {} x {}",
+            w.fused_reductions,
+            w.queries,
+            row.fused_reductions
+        );
+    }
     assert!(bench.rows.iter().all(|r| r.exact), "a method returned an inexact result");
     check_against_baseline(&bench);
 }

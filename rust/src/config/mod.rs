@@ -31,6 +31,15 @@ pub struct Config {
     pub workers: usize,
     /// Max queued requests before callers block.
     pub queue_depth: usize,
+    /// Coordinator batching window in microseconds: a probe-based query at
+    /// the head of a batch holds the worker collecting this long, so
+    /// concurrent same-dataset queries coalesce into shared ladder rounds
+    /// (0 = drain-only). Deployment default is 200 µs; the *library*
+    /// default (`CoordinatorOptions::default`) stays 0 so embedding
+    /// `SelectionService::start` keeps its drain-only latency profile.
+    pub batch_window_us: u64,
+    /// Hard cap on requests collected into one planned batch.
+    pub batch_cap: usize,
     /// Hybrid CP iterations before compaction (paper: 7).
     pub hybrid_cp_iters: usize,
     /// Apply the log-transform guard automatically for extreme ranges.
@@ -53,6 +62,8 @@ impl Default for Config {
             shards: 1,
             workers: 1,
             queue_depth: 1024,
+            batch_window_us: 200,
+            batch_cap: 64,
             hybrid_cp_iters: 7,
             guard_extremes: true,
             bench_reps: 3,
@@ -103,6 +114,12 @@ impl Config {
         if let Some(v) = doc.get_int("service", "queue_depth")? {
             c.queue_depth = (v as usize).max(1);
         }
+        if let Some(v) = doc.get_int("service", "batch_window_us")? {
+            c.batch_window_us = v.max(0) as u64;
+        }
+        if let Some(v) = doc.get_int("service", "batch_cap")? {
+            c.batch_cap = (v as usize).max(1);
+        }
         if let Some(v) = doc.get_int("bench", "reps")? {
             c.bench_reps = (v as usize).max(1);
         }
@@ -126,6 +143,8 @@ mod tests {
         assert_eq!(c.default_method, Method::Hybrid);
         assert_eq!(c.hybrid_cp_iters, 7);
         assert_eq!(c.kernel_flavor, Flavor::Jnp);
+        assert_eq!(c.batch_window_us, 200);
+        assert_eq!(c.batch_cap, 64);
     }
 
     #[test]
@@ -147,6 +166,8 @@ mod tests {
             shards = 4
             workers = 2
             queue_depth = 64
+            batch_window_us = 750
+            batch_cap = 32
 
             [bench]
             reps = 5
@@ -164,6 +185,8 @@ mod tests {
         assert_eq!(c.shards, 4);
         assert_eq!(c.workers, 2);
         assert_eq!(c.queue_depth, 64);
+        assert_eq!(c.batch_window_us, 750);
+        assert_eq!(c.batch_cap, 32);
         assert_eq!(c.bench_reps, 5);
         assert_eq!(c.bench_instances, 10);
         assert_eq!(c.bench_max_log2n, 25);

@@ -18,7 +18,9 @@ use crate::{Error, Result};
 pub trait DatasetBackend {
     fn upload(&mut self, id: u64, data: &[f64], dtype: DType) -> Result<()>;
     fn evaluator(&mut self, id: u64) -> Result<&mut dyn Evaluator>;
-    fn drop_dataset(&mut self, id: u64);
+    /// Release a dataset; returns whether it was resident (the service's
+    /// synchronous drop ack reports an unknown id to the caller).
+    fn drop_dataset(&mut self, id: u64) -> bool;
     fn dataset_len(&self, id: u64) -> Option<usize>;
     /// Human-readable backend kind (metrics / logs).
     fn kind(&self) -> &'static str;
@@ -56,8 +58,8 @@ impl DatasetBackend for HostBackend {
             .ok_or_else(|| Error::Service(format!("unknown dataset {id}")))
     }
 
-    fn drop_dataset(&mut self, id: u64) {
-        self.datasets.remove(&id);
+    fn drop_dataset(&mut self, id: u64) -> bool {
+        self.datasets.remove(&id).is_some()
     }
 
     fn dataset_len(&self, id: u64) -> Option<usize> {
@@ -105,8 +107,8 @@ impl DatasetBackend for DeviceBackend {
             .ok_or_else(|| Error::Service(format!("unknown dataset {id}")))
     }
 
-    fn drop_dataset(&mut self, id: u64) {
-        self.datasets.remove(&id);
+    fn drop_dataset(&mut self, id: u64) -> bool {
+        self.datasets.remove(&id).is_some()
     }
 
     fn dataset_len(&self, id: u64) -> Option<usize> {
@@ -130,7 +132,8 @@ mod tests {
         let ev = b.evaluator(1).unwrap();
         assert_eq!(ev.n(), 3);
         assert!(b.evaluator(99).is_err());
-        b.drop_dataset(1);
+        assert!(b.drop_dataset(1), "dataset 1 was resident");
+        assert!(!b.drop_dataset(1), "second drop finds nothing");
         assert!(b.evaluator(1).is_err());
         assert_eq!(b.kind(), "host");
     }

@@ -70,11 +70,11 @@ impl DatasetBackend for LruBackend {
         self.inner.evaluator(id)
     }
 
-    fn drop_dataset(&mut self, id: u64) {
+    fn drop_dataset(&mut self, id: u64) -> bool {
         if let Some(pos) = self.order.iter().position(|&d| d == id) {
             self.order.remove(pos);
         }
-        self.inner.drop_dataset(id);
+        self.inner.drop_dataset(id)
     }
 
     fn dataset_len(&self, id: u64) -> Option<usize> {

@@ -27,6 +27,12 @@ impl Metrics {
         Self::default()
     }
 
+    /// Record one latency sample. The service records **one sample per
+    /// executed run**: a coalesced group of N queries shares one wall time
+    /// and contributes one sample (N samples of the same shared wall would
+    /// systematically inflate mean/p50/p99), so `count()` tracks runs
+    /// while `queries` tracks queries — under coalescing
+    /// `count() ≤ queries` by exactly the shared-run savings.
     pub fn record_latency(&self, d: Duration) {
         let us = d.as_micros().max(1) as u64;
         let bucket = (63 - us.leading_zeros() as usize).min(BUCKETS - 1);
@@ -34,6 +40,8 @@ impl Metrics {
         self.latency_sum_us.fetch_add(us, Ordering::Relaxed);
     }
 
+    /// Number of latency samples (= executed runs; see
+    /// [`Metrics::record_latency`]).
     pub fn count(&self) -> u64 {
         self.latency_us.iter().map(|b| b.load(Ordering::Relaxed)).sum()
     }
@@ -72,6 +80,7 @@ impl Metrics {
             probes: self.probes.load(Ordering::Relaxed),
             batched: self.batched.load(Ordering::Relaxed),
             coalesced: self.coalesced.load(Ordering::Relaxed),
+            latency_samples: self.count(),
             mean_latency_us: self.mean_latency_us(),
             p50_us: self.latency_quantile_us(0.5),
             p99_us: self.latency_quantile_us(0.99),
@@ -89,6 +98,9 @@ pub struct Snapshot {
     pub probes: u64,
     pub batched: u64,
     pub coalesced: u64,
+    /// Latency samples recorded — one per executed *run*, so strictly
+    /// fewer than `queries` when coalescing shares runs.
+    pub latency_samples: u64,
     pub mean_latency_us: f64,
     pub p50_us: u64,
     pub p99_us: u64,
@@ -99,7 +111,7 @@ impl std::fmt::Display for Snapshot {
         write!(
             f,
             "requests={} uploads={} queries={} errors={} probes={} batched={} \
-             coalesced={} latency(mean={:.0}us p50<{}us p99<{}us)",
+             coalesced={} latency(runs={} mean={:.0}us p50<{}us p99<{}us)",
             self.requests,
             self.uploads,
             self.queries,
@@ -107,6 +119,7 @@ impl std::fmt::Display for Snapshot {
             self.probes,
             self.batched,
             self.coalesced,
+            self.latency_samples,
             self.mean_latency_us,
             self.p50_us,
             self.p99_us

@@ -8,9 +8,10 @@
 pub mod backend;
 pub mod eviction;
 pub mod metrics;
+mod planner;
 pub mod service;
 
 pub use backend::{BackendFactory, DatasetBackend, DeviceBackend, HostBackend};
 pub use eviction::{lru_factory, LruBackend};
 pub use metrics::{Metrics, Snapshot};
-pub use service::{DatasetId, KSpec, QueryResult, SelectionService};
+pub use service::{CoordinatorOptions, DatasetId, KSpec, QueryResult, SelectionService};

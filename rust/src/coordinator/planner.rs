@@ -1,0 +1,236 @@
+//! Batch planner: turns one collected window of raw requests into an
+//! ordered execution plan.
+//!
+//! The worker loop used to stable-sort its drained batch by `(kind, id)`,
+//! which had two defects: a `Drop` sorted *ahead* of the queries that
+//! preceded it (an upload→query→drop sequence drained together failed the
+//! query with "unknown dataset"), and a `QueryMany` interleaved between
+//! probe-based singles broke the adjacency the coalescing scan keyed on.
+//! [`plan_batch`] replaces the sort with an explicit plan:
+//!
+//! - **Coalesce groups** — probe-based [`Request::Query`] singles and
+//!   [`Request::QueryMany`] specs against the *same* dataset merge into one
+//!   [`Step::Group`], anchored at the first member's arrival position. The
+//!   whole group solves through one shared `multi_order_statistics` ladder,
+//!   so every concurrent query of a dataset rides the same fused passes no
+//!   matter how its requests interleaved in the window.
+//! - **Per-dataset FIFO barriers** — uploads and drops mutate the dataset,
+//!   so they execute in arrival order relative to that dataset's queries
+//!   and *close* its open group (later probe queries start a fresh group
+//!   after the barrier). Download-method queries keep their arrival slot
+//!   but do not close the group: they only read, so probe queries on
+//!   either side may still share one ladder without changing any answer.
+//! - **Shutdown** never jumps the queue: the plan executes fully, then the
+//!   worker exits.
+
+use std::collections::HashMap;
+
+use super::service::{DatasetId, Request};
+
+/// One executable step of a planned batch, in execution order.
+pub(crate) enum Step {
+    Upload {
+        id: DatasetId,
+        data: std::sync::Arc<Vec<f64>>,
+        dtype: crate::select::objective::DType,
+        reply: std::sync::mpsc::SyncSender<crate::Result<()>>,
+    },
+    Drop {
+        id: DatasetId,
+        reply: Option<std::sync::mpsc::SyncSender<crate::Result<()>>>,
+    },
+    /// A download-method query (or any query that cannot share ladders).
+    Single {
+        id: DatasetId,
+        k: super::service::KSpec,
+        method: crate::select::Method,
+        reply: std::sync::mpsc::SyncSender<crate::Result<super::service::QueryResult>>,
+    },
+    /// Same-dataset probe-based queries unified into one shared-ladder run.
+    Group { id: DatasetId, members: Vec<GroupMember> },
+}
+
+/// A member of a coalesce group, in arrival order.
+pub(crate) enum GroupMember {
+    Single {
+        k: super::service::KSpec,
+        method: crate::select::Method,
+        reply: std::sync::mpsc::SyncSender<crate::Result<super::service::QueryResult>>,
+    },
+    Many {
+        specs: Vec<super::service::KSpec>,
+        reply: std::sync::mpsc::SyncSender<crate::Result<Vec<super::service::QueryResult>>>,
+    },
+}
+
+impl GroupMember {
+    /// Number of order-statistic specs this member contributes.
+    pub(crate) fn spec_count(&self) -> usize {
+        match self {
+            GroupMember::Single { .. } => 1,
+            GroupMember::Many { specs, .. } => specs.len(),
+        }
+    }
+}
+
+/// Build the execution plan for one collected batch. Returns the ordered
+/// steps and whether a shutdown request was seen (processed *after* every
+/// step so queued work is never abandoned).
+pub(crate) fn plan_batch(batch: Vec<Request>) -> (Vec<Step>, bool) {
+    let mut steps: Vec<Step> = Vec::new();
+    // Open coalesce group per dataset: id → index of its Group step.
+    let mut open: HashMap<DatasetId, usize> = HashMap::new();
+    let mut shutdown = false;
+    for req in batch {
+        match req {
+            Request::Upload { id, data, dtype, reply } => {
+                open.remove(&id);
+                steps.push(Step::Upload { id, data, dtype, reply });
+            }
+            Request::Drop { id, reply } => {
+                open.remove(&id);
+                steps.push(Step::Drop { id, reply });
+            }
+            Request::Query { id, k, method, reply } if method.needs_download() => {
+                steps.push(Step::Single { id, k, method, reply });
+            }
+            Request::Query { id, k, method, reply } => {
+                push_member(&mut steps, &mut open, id, GroupMember::Single { k, method, reply });
+            }
+            Request::QueryMany { id, specs, reply } => {
+                push_member(&mut steps, &mut open, id, GroupMember::Many { specs, reply });
+            }
+            Request::Shutdown => shutdown = true,
+        }
+    }
+    (steps, shutdown)
+}
+
+fn push_member(
+    steps: &mut Vec<Step>,
+    open: &mut HashMap<DatasetId, usize>,
+    id: DatasetId,
+    member: GroupMember,
+) {
+    if let Some(&i) = open.get(&id) {
+        if let Step::Group { members, .. } = &mut steps[i] {
+            members.push(member);
+            return;
+        }
+    }
+    open.insert(id, steps.len());
+    steps.push(Step::Group { id, members: vec![member] });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::service::{KSpec, QueryResult};
+    use crate::select::Method;
+    use crate::Result;
+    use std::sync::mpsc::sync_channel;
+
+    fn upload(id: DatasetId) -> Request {
+        let (reply, _rx) = sync_channel::<Result<()>>(1);
+        Request::Upload {
+            id,
+            data: std::sync::Arc::new(vec![1.0]),
+            dtype: crate::select::DType::F64,
+            reply,
+        }
+    }
+
+    fn drop_req(id: DatasetId) -> Request {
+        Request::Drop { id, reply: None }
+    }
+
+    fn query(id: DatasetId, method: Method) -> Request {
+        let (reply, _rx) = sync_channel::<Result<QueryResult>>(1);
+        Request::Query { id, k: KSpec::Median, method, reply }
+    }
+
+    fn query_many(id: DatasetId, n: usize) -> Request {
+        let (reply, _rx) = sync_channel::<Result<Vec<QueryResult>>>(1);
+        Request::QueryMany { id, specs: vec![KSpec::Median; n], reply }
+    }
+
+    fn kinds(steps: &[Step]) -> Vec<String> {
+        steps
+            .iter()
+            .map(|s| match s {
+                Step::Upload { id, .. } => format!("upload:{id}"),
+                Step::Drop { id, .. } => format!("drop:{id}"),
+                Step::Single { id, .. } => format!("single:{id}"),
+                Step::Group { id, members } => {
+                    let specs: usize = members.iter().map(|m| m.spec_count()).sum();
+                    format!("group:{id}x{specs}")
+                }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn drop_never_jumps_ahead_of_a_query() {
+        // The pre-planner sort keyed Drop at (1, id) ahead of Query at
+        // (2, id): this exact batch used to fail the query.
+        let (steps, shutdown) =
+            plan_batch(vec![upload(1), query(1, Method::Multisection), drop_req(1)]);
+        assert_eq!(kinds(&steps), ["upload:1", "group:1x1", "drop:1"]);
+        assert!(!shutdown);
+    }
+
+    #[test]
+    fn singles_and_many_merge_into_one_group() {
+        let (steps, _) = plan_batch(vec![
+            query(1, Method::Multisection),
+            query_many(1, 3),
+            query(1, Method::CuttingPlane),
+            query(2, Method::Multisection),
+        ]);
+        assert_eq!(kinds(&steps), ["group:1x5", "group:2x1"]);
+    }
+
+    #[test]
+    fn download_queries_keep_their_slot_without_closing_the_group() {
+        let (steps, _) = plan_batch(vec![
+            query(1, Method::Multisection),
+            query(1, Method::Quickselect),
+            query(1, Method::Multisection),
+        ]);
+        assert_eq!(kinds(&steps), ["group:1x2", "single:1"]);
+    }
+
+    #[test]
+    fn upload_and_drop_are_barriers_that_reopen_groups() {
+        let (steps, _) = plan_batch(vec![
+            query(1, Method::Multisection),
+            upload(1),
+            query(1, Method::Multisection),
+            drop_req(1),
+            query(1, Method::Multisection),
+        ]);
+        assert_eq!(
+            kinds(&steps),
+            ["group:1x1", "upload:1", "group:1x1", "drop:1", "group:1x1"]
+        );
+    }
+
+    #[test]
+    fn shutdown_runs_after_every_step() {
+        let (steps, shutdown) =
+            plan_batch(vec![query(1, Method::Multisection), Request::Shutdown, drop_req(1)]);
+        assert_eq!(kinds(&steps), ["group:1x1", "drop:1"]);
+        assert!(shutdown);
+    }
+
+    #[test]
+    fn independent_datasets_interleave_in_arrival_order() {
+        let (steps, _) = plan_batch(vec![
+            query(2, Method::Multisection),
+            query(1, Method::Multisection),
+            query(2, Method::Multisection),
+            drop_req(2),
+        ]);
+        assert_eq!(kinds(&steps), ["group:2x2", "group:1x1", "drop:2"]);
+    }
+}

@@ -7,28 +7,39 @@
 //! - Queries for a dataset are dispatched to its worker over a bounded
 //!   channel (backpressure) and answered through per-request reply
 //!   channels.
-//! - Workers micro-batch: they drain whatever is queued and group queries
-//!   by dataset, so repeated medians of the same array (the LMS/LTS inner
-//!   loop!) reuse the resident buffer back-to-back.
-//! - Queued probe-based queries against the **same** dataset coalesce into
-//!   shared `probe_many` rounds: a probe's sufficient statistics are
-//!   rank-independent, so one fused ladder pass serves every queued `k`
-//!   simultaneously — N concurrent medians of one resident array cost
-//!   ~one ladder pass per iteration instead of N
-//!   ([`SelectionService::query_many`] requests this explicitly; drained
-//!   singles coalesce opportunistically).
+//! - Workers batch over a **time window** ([`CoordinatorOptions`]): a
+//!   probe-based query at the head of a batch opens a window during which
+//!   the worker keeps collecting (`recv_timeout`) up to `batch_cap`
+//!   requests, so concurrent traffic that arrives within one window is
+//!   planned together — not just whatever happened to be sitting in the
+//!   queue. Uploads/drops start drain-only batches (no latency floor for
+//!   non-coalescible traffic), and the library default window is zero —
+//!   serving deployments opt in through `start_with` or the config.
+//! - Each collected window is turned into an execution plan by the batch
+//!   planner (`plan_batch`): probe-based `Query` singles **and**
+//!   `QueryMany` specs against the same dataset merge into one shared
+//!   `probe_many` ladder run — a probe's sufficient statistics are
+//!   rank-independent, so one fused ladder pass serves every collected `k`
+//!   simultaneously — while uploads/drops/download-method queries keep
+//!   per-dataset FIFO order.
+//! - Shared runs ride a per-worker measured [`PassCostModel`]: the ladder
+//!   width starts at the `BENCH_select.json`-seeded optimum (or the
+//!   device's native `fused_ladder` bucket) and refines online from the
+//!   worker's own pass timings.
 //! - PJRT handles are thread-confined; each worker builds its own backend
 //!   via the [`BackendFactory`].
 
-use std::collections::{HashMap, VecDeque};
+use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender, TryRecvError};
 use std::sync::Arc;
 use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use super::backend::BackendFactory;
 use super::metrics::Metrics;
+use super::planner::{plan_batch, GroupMember, Step};
+use crate::select::gpu_model::PassCostModel;
 use crate::select::objective::DType;
 use crate::select::{self, Method};
 use crate::{Error, Result};
@@ -72,20 +83,45 @@ pub struct QueryResult {
     pub k: usize,
     /// The method that actually answered. Queries coalesced into shared
     /// same-dataset ladder rounds (explicit `query_many`, or probe-based
-    /// singles drained in one batch) report [`Method::Multisection`]
-    /// regardless of the requested method — the value is the same exact
-    /// order statistic either way, but `probes`/`iterations` describe the
-    /// shared rounds (probes is this query's amortized share; the group's
-    /// shares sum to the real total).
+    /// singles collected in one batching window) report
+    /// [`Method::Multisection`] regardless of the requested method — the
+    /// value is the same exact order statistic either way, but
+    /// `probes`/`iterations` describe the shared rounds (probes is this
+    /// query's amortized share; the group's shares sum to the real total).
     pub method: Method,
     pub probes: u64,
     pub iterations: usize,
-    pub wall: std::time::Duration,
+    pub wall: Duration,
 }
 
 pub type DatasetId = u64;
 
-enum Request {
+/// Ingest batching knobs for [`SelectionService`] workers.
+#[derive(Debug, Clone, Copy)]
+pub struct CoordinatorOptions {
+    /// How long a worker holds the first request of a batch while more
+    /// traffic accumulates (coalescing catchment ↔ added latency floor).
+    /// The window only *opens* when the batch starts with a coalescible
+    /// probe-based query — uploads, drops and download-method queries
+    /// start drain-only batches, since holding them buys no sharing.
+    /// `Duration::ZERO` (the library default — no silent latency floor
+    /// for existing callers) degrades to drain-what's-queued
+    /// micro-batching; serving deployments opt in via
+    /// [`SelectionService::start_with`] or the config's `batch_window_us`
+    /// (whose deployment default is 200 µs).
+    pub batch_window: Duration,
+    /// Hard cap on requests collected into one planned batch; reaching it
+    /// closes the window immediately.
+    pub batch_cap: usize,
+}
+
+impl Default for CoordinatorOptions {
+    fn default() -> Self {
+        CoordinatorOptions { batch_window: Duration::ZERO, batch_cap: 64 }
+    }
+}
+
+pub(crate) enum Request {
     Upload {
         id: DatasetId,
         data: Arc<Vec<f64>>,
@@ -109,6 +145,9 @@ enum Request {
     },
     Drop {
         id: DatasetId,
+        /// `Some` when the client wants to block until the drop has been
+        /// processed ([`SelectionService::drop_dataset_sync`]).
+        reply: Option<SyncSender<Result<()>>>,
     },
     Shutdown,
 }
@@ -123,15 +162,38 @@ pub struct SelectionService {
 }
 
 impl SelectionService {
-    /// Start `workers` threads, each owning a backend from `factory`.
+    /// Start `workers` threads with the default batching window
+    /// ([`CoordinatorOptions::default`]); see
+    /// [`SelectionService::start_with`].
     pub fn start(
         workers: usize,
         queue_depth: usize,
         default_method: Method,
         factory: BackendFactory,
     ) -> Result<SelectionService> {
+        Self::start_with(
+            workers,
+            queue_depth,
+            default_method,
+            factory,
+            CoordinatorOptions::default(),
+        )
+    }
+
+    /// Start `workers` threads, each owning a backend from `factory` and
+    /// batching its ingest queue over `opts.batch_window`.
+    pub fn start_with(
+        workers: usize,
+        queue_depth: usize,
+        default_method: Method,
+        factory: BackendFactory,
+        opts: CoordinatorOptions,
+    ) -> Result<SelectionService> {
         if workers == 0 {
             return Err(crate::invalid_arg!("need at least one worker"));
+        }
+        if opts.batch_cap == 0 {
+            return Err(crate::invalid_arg!("batch_cap must be at least 1"));
         }
         let metrics = Arc::new(Metrics::new());
         let mut worker_txs = Vec::with_capacity(workers);
@@ -142,7 +204,7 @@ impl SelectionService {
             let metrics = metrics.clone();
             let handle = std::thread::Builder::new()
                 .name(format!("cp-select-worker-{w}"))
-                .spawn(move || worker_loop(w, rx, factory, metrics))
+                .spawn(move || worker_loop(w, rx, factory, metrics, opts))
                 .map_err(|e| Error::Service(format!("spawn failed: {e}")))?;
             worker_txs.push(tx);
             handles.push(handle);
@@ -232,8 +294,19 @@ impl SelectionService {
     /// Drop a dataset (fire-and-forget).
     pub fn drop_dataset(&self, id: DatasetId) -> Result<()> {
         self.route(id)
-            .send(Request::Drop { id })
+            .send(Request::Drop { id, reply: None })
             .map_err(|_| Error::Service("worker channel closed".into()))
+    }
+
+    /// Drop a dataset and block until the worker has processed the drop
+    /// (fire-and-forget gives an observer nothing to await). Errors when
+    /// the dataset was not resident on its worker.
+    pub fn drop_dataset_sync(&self, id: DatasetId) -> Result<()> {
+        let (reply, rx) = sync_channel(1);
+        self.route(id)
+            .send(Request::Drop { id, reply: Some(reply) })
+            .map_err(|_| Error::Service("worker channel closed".into()))?;
+        recv_reply(&rx)?
     }
 
     /// Graceful shutdown: drain queues, join workers.
@@ -262,11 +335,58 @@ fn recv_reply<T>(rx: &Receiver<T>) -> Result<T> {
     rx.recv().map_err(|_| Error::Service("worker dropped the reply channel".into()))
 }
 
+/// Collect one batch: the first request is already in `batch`; keep
+/// receiving until the window deadline passes, the cap fills, or a
+/// shutdown arrives. The window only opens when the batch starts with a
+/// coalescible probe-based query (holding an upload/drop/download query
+/// buys no sharing); otherwise — and with a zero window — this reduces to
+/// draining what is queued.
+fn collect_batch(rx: &Receiver<Request>, batch: &mut Vec<Request>, opts: &CoordinatorOptions) {
+    let window = match batch.last() {
+        Some(Request::Query { method, .. }) if !method.needs_download() => opts.batch_window,
+        Some(Request::QueryMany { .. }) => opts.batch_window,
+        _ => Duration::ZERO,
+    };
+    if matches!(batch.last(), Some(Request::Shutdown)) {
+        return;
+    }
+    let deadline = Instant::now() + window;
+    while batch.len() < opts.batch_cap {
+        match rx.try_recv() {
+            Ok(r) => {
+                let stop = matches!(r, Request::Shutdown);
+                batch.push(r);
+                if stop {
+                    return;
+                }
+                continue;
+            }
+            Err(TryRecvError::Disconnected) => return,
+            Err(TryRecvError::Empty) => {}
+        }
+        let now = Instant::now();
+        if now >= deadline {
+            return;
+        }
+        match rx.recv_timeout(deadline - now) {
+            Ok(r) => {
+                let stop = matches!(r, Request::Shutdown);
+                batch.push(r);
+                if stop {
+                    return;
+                }
+            }
+            Err(RecvTimeoutError::Timeout) | Err(RecvTimeoutError::Disconnected) => return,
+        }
+    }
+}
+
 fn worker_loop(
     worker_idx: usize,
     rx: Receiver<Request>,
     factory: BackendFactory,
     metrics: Arc<Metrics>,
+    opts: CoordinatorOptions,
 ) {
     let mut backend = match factory(worker_idx) {
         Ok(b) => b,
@@ -289,129 +409,162 @@ fn worker_loop(
                             "backend init failed: {e}"
                         ))));
                     }
+                    Request::Drop { reply, .. } => {
+                        if let Some(reply) = reply {
+                            let _ = reply.send(Err(Error::Service(format!(
+                                "backend init failed: {e}"
+                            ))));
+                        }
+                    }
                     Request::Shutdown => return,
-                    Request::Drop { .. } => {}
                 }
             }
             return;
         }
     };
 
-    // Micro-batching: drain the queue, group queries by dataset so a burst
-    // of medians against the same resident array runs back-to-back.
-    let mut batch: Vec<Request> = Vec::new();
-    'outer: loop {
-        batch.clear();
+    // Per-worker measured pass-cost model: starts at the trajectory seed,
+    // refines from this worker's own shared-run timings.
+    let mut cost_model = PassCostModel::seeded();
+    loop {
+        let mut batch: Vec<Request> = Vec::new();
         match rx.recv() {
             Ok(r) => batch.push(r),
             Err(_) => break,
         }
-        while let Ok(r) = rx.try_recv() {
-            batch.push(r);
-            if batch.len() >= 64 {
-                break;
-            }
-        }
+        collect_batch(&rx, &mut batch, &opts);
         if batch.len() > 1 {
             metrics.batched.fetch_add(batch.len() as u64 - 1, Ordering::Relaxed);
-            // Stable grouping by dataset id for queries (adjacency is what
-            // the coalescing scan below keys on).
-            batch.sort_by_key(|r| match r {
-                Request::Upload { id, .. } => (0u8, *id),
-                Request::Drop { id } => (1, *id),
-                Request::Query { id, .. } => (2, *id),
-                Request::QueryMany { id, .. } => (2, *id),
-                Request::Shutdown => (3, u64::MAX),
-            });
         }
-        let mut queue: VecDeque<Request> = batch.drain(..).collect();
-        while let Some(req) = queue.pop_front() {
-            match req {
-                Request::Upload { id, data, dtype, reply } => {
-                    let r = backend.upload(id, &data, dtype);
-                    if r.is_err() {
-                        metrics.errors.fetch_add(1, Ordering::Relaxed);
-                    }
-                    let _ = reply.send(r);
-                }
-                Request::Drop { id } => backend.drop_dataset(id),
-                Request::Query { id, k, method, reply } => {
-                    // Coalesce the drained run of probe-based queries
-                    // against the same resident dataset into shared
-                    // probe_many rounds.
-                    let mut group: Vec<(KSpec, Method, SyncSender<Result<QueryResult>>)> =
-                        Vec::new();
-                    if !method.needs_download() {
-                        while matches!(
-                            queue.front(),
-                            Some(Request::Query { id: qid, method: qm, .. })
-                                if *qid == id && !qm.needs_download()
-                        ) {
-                            if let Some(Request::Query { k, method, reply, .. }) =
-                                queue.pop_front()
-                            {
-                                group.push((k, method, reply));
+        let (steps, shutdown) = plan_batch(batch);
+        for step in steps {
+            execute_step(backend.as_mut(), step, &metrics, &mut cost_model);
+        }
+        if shutdown {
+            break;
+        }
+    }
+}
+
+/// Execute one planned step against the worker's backend.
+fn execute_step(
+    backend: &mut dyn super::backend::DatasetBackend,
+    step: Step,
+    metrics: &Metrics,
+    model: &mut PassCostModel,
+) {
+    match step {
+        Step::Upload { id, data, dtype, reply } => {
+            let r = backend.upload(id, &data, dtype);
+            if r.is_err() {
+                metrics.errors.fetch_add(1, Ordering::Relaxed);
+            }
+            let _ = reply.send(r);
+        }
+        Step::Drop { id, reply } => {
+            let existed = backend.drop_dataset(id);
+            if let Some(reply) = reply {
+                let _ = reply.send(if existed {
+                    Ok(())
+                } else {
+                    Err(Error::Service(format!("unknown dataset {id}")))
+                });
+            }
+        }
+        Step::Single { id, k, method, reply } => {
+            answer_single(backend, id, k, method, &reply, metrics);
+        }
+        Step::Group { id, members } => execute_group(backend, id, members, metrics, model),
+    }
+}
+
+/// Answer one coalesce group: a lone single runs its requested method; any
+/// larger (or `QueryMany`-bearing) group solves through shared fused
+/// ladder rounds and replies are distributed back in member order.
+fn execute_group(
+    backend: &mut dyn super::backend::DatasetBackend,
+    id: DatasetId,
+    members: Vec<GroupMember>,
+    metrics: &Metrics,
+    model: &mut PassCostModel,
+) {
+    if let [GroupMember::Single { .. }] = members.as_slice() {
+        if let Some(GroupMember::Single { k, method, reply }) = members.into_iter().next() {
+            answer_single(backend, id, k, method, &reply, metrics);
+        }
+        return;
+    }
+    let total_specs: usize = members.iter().map(|m| m.spec_count()).sum();
+    if total_specs == 0 {
+        // empty QueryMany is answered client-side; defensive only
+        for m in members {
+            if let GroupMember::Many { reply, .. } = m {
+                let _ = reply.send(Ok(Vec::new()));
+            }
+        }
+        return;
+    }
+    let specs: Vec<KSpec> = members
+        .iter()
+        .flat_map(|m| match m {
+            GroupMember::Single { k, .. } => std::slice::from_ref(k),
+            GroupMember::Many { specs, .. } => specs.as_slice(),
+        })
+        .copied()
+        .collect();
+    let t0 = Instant::now();
+    let mut results = solve_group(backend, id, &specs, model);
+    let wall = t0.elapsed();
+    if total_specs > 1 {
+        metrics.coalesced.fetch_add(total_specs as u64, Ordering::Relaxed);
+    }
+    account_run(metrics, wall, &mut results);
+    let mut it = results.into_iter();
+    for m in members {
+        match m {
+            GroupMember::Single { reply, .. } => {
+                let _ = reply.send(it.next().expect("one result per spec"));
+            }
+            GroupMember::Many { specs, reply } => {
+                let mut ok = Vec::with_capacity(specs.len());
+                let mut first_err = None;
+                for _ in 0..specs.len() {
+                    match it.next().expect("one result per spec") {
+                        Ok(q) => ok.push(q),
+                        Err(e) => {
+                            if first_err.is_none() {
+                                first_err = Some(e);
                             }
                         }
                     }
-                    if group.is_empty() {
-                        answer_single(backend.as_mut(), id, k, method, &reply, &metrics);
-                    } else {
-                        group.insert(0, (k, method, reply));
-                        metrics.coalesced.fetch_add(group.len() as u64, Ordering::Relaxed);
-                        let t0 = Instant::now();
-                        let specs: Vec<KSpec> = group.iter().map(|(s, _, _)| *s).collect();
-                        let results = solve_group(backend.as_mut(), id, &specs);
-                        let wall = t0.elapsed();
-                        for ((_, _, reply), mut r) in group.into_iter().zip(results) {
-                            account(&metrics, wall, &mut r);
-                            let _ = reply.send(r);
-                        }
-                    }
                 }
-                Request::QueryMany { id, specs, reply } => {
-                    let t0 = Instant::now();
-                    let results = solve_group(backend.as_mut(), id, &specs);
-                    let wall = t0.elapsed();
-                    if results.len() > 1 {
-                        metrics.coalesced.fetch_add(results.len() as u64, Ordering::Relaxed);
-                    }
-                    let mut ok = Vec::with_capacity(results.len());
-                    let mut first_err = None;
-                    for mut r in results {
-                        account(&metrics, wall, &mut r);
-                        match r {
-                            Ok(q) => ok.push(q),
-                            Err(e) => {
-                                if first_err.is_none() {
-                                    first_err = Some(e);
-                                }
-                            }
-                        }
-                    }
-                    let _ = reply.send(match first_err {
-                        None => Ok(ok),
-                        Some(e) => Err(e),
-                    });
-                }
-                Request::Shutdown => break 'outer,
+                let _ = reply.send(match first_err {
+                    None => Ok(ok),
+                    Some(e) => Err(e),
+                });
             }
         }
     }
 }
 
-/// Per-result service accounting shared by every reply path: count the
-/// query, record latency, attribute probes/errors, stamp the wall time.
-fn account(metrics: &Metrics, wall: std::time::Duration, r: &mut Result<QueryResult>) {
-    metrics.queries.fetch_add(1, Ordering::Relaxed);
+/// Per-run service accounting shared by every reply path: ONE latency
+/// sample per executed run — a coalesced group is one run, so recording
+/// its wall time once keeps the histogram a distribution over runs
+/// instead of N copies of each shared wall time inflating mean/p50/p99 —
+/// then per-query counting: every member counts toward `queries`,
+/// contributes its probe share, and is stamped with the run's wall time.
+fn account_run(metrics: &Metrics, wall: Duration, results: &mut [Result<QueryResult>]) {
     metrics.record_latency(wall);
-    match r {
-        Ok(q) => {
-            q.wall = wall;
-            metrics.probes.fetch_add(q.probes, Ordering::Relaxed);
-        }
-        Err(_) => {
-            metrics.errors.fetch_add(1, Ordering::Relaxed);
+    for r in results.iter_mut() {
+        metrics.queries.fetch_add(1, Ordering::Relaxed);
+        match r {
+            Ok(q) => {
+                q.wall = wall;
+                metrics.probes.fetch_add(q.probes, Ordering::Relaxed);
+            }
+            Err(_) => {
+                metrics.errors.fetch_add(1, Ordering::Relaxed);
+            }
         }
     }
 }
@@ -426,7 +579,7 @@ fn answer_single(
 ) {
     let t0 = Instant::now();
     let mut out = run_query(backend, id, k, method);
-    account(metrics, t0.elapsed(), &mut out);
+    account_run(metrics, t0.elapsed(), std::slice::from_mut(&mut out));
     let _ = reply.send(out);
 }
 
@@ -434,11 +587,13 @@ fn answer_single(
 /// (`select::multisection::multi_order_statistics`). Per-item results align
 /// positionally; an invalid spec fails only its own slot, and the shared
 /// reduction count is distributed across the group so per-query `probes`
-/// still sum to the real total.
+/// still sum to the real total. The run's pass timing feeds the worker's
+/// [`PassCostModel`] so future ladder widths follow measured cost.
 fn solve_group(
     backend: &mut dyn super::backend::DatasetBackend,
     id: DatasetId,
     specs: &[KSpec],
+    model: &mut PassCostModel,
 ) -> Vec<Result<QueryResult>> {
     let n = match backend.dataset_len(id) {
         Some(n) => n,
@@ -457,11 +612,14 @@ fn solve_group(
         (|| {
             let ev = backend.evaluator(id)?;
             let probes0 = ev.probes();
-            // Shared rounds ride the evaluator's native ladder width (one
-            // fused_ladder launch per round on the device backend).
-            let opts = select::MultisectOptions::for_evaluator(&*ev);
+            // Shared rounds ride the worker's measured pass-cost model
+            // (seeded to the evaluator's native ladder width).
+            let opts = select::MultisectOptions::for_evaluator_with(&*ev, model);
+            let t0 = Instant::now();
             let out = select::multisection::multi_order_statistics(ev, &valid, &opts)?;
-            Ok((out.values, out.passes, ev.probes() - probes0))
+            let reductions = ev.probes() - probes0;
+            model.observe_run(out.passes, out.rungs, reductions, n, t0.elapsed());
+            Ok((out.values, out.passes, reductions))
         })()
     };
     match solved {
@@ -491,7 +649,7 @@ fn solve_group(
                             method: Method::Multisection,
                             probes,
                             iterations: passes,
-                            wall: std::time::Duration::ZERO, // filled by the worker loop
+                            wall: Duration::ZERO, // filled by account_run
                         })
                     }
                 })
@@ -528,7 +686,7 @@ fn run_query(
         method,
         probes: r.probes,
         iterations: r.iterations,
-        wall: std::time::Duration::ZERO, // filled by the worker loop
+        wall: Duration::ZERO, // filled by account_run
     })
 }
 
@@ -557,7 +715,7 @@ mod tests {
         let r = svc.query(id, KSpec::Median).unwrap();
         assert_eq!(r.value, want);
         assert_eq!(r.k, 1001);
-        assert!(r.wall > std::time::Duration::ZERO);
+        assert!(r.wall > Duration::ZERO);
         svc.shutdown();
     }
 
@@ -691,6 +849,105 @@ mod tests {
     }
 
     #[test]
+    fn windowed_singles_coalesce_into_one_run() {
+        // 8 independent single-shot queries fired into one batching window
+        // coalesce exactly like an explicit query_many batch.
+        let svc = SelectionService::start_with(
+            1,
+            64,
+            Method::Multisection,
+            HostBackend::factory(),
+            CoordinatorOptions { batch_window: Duration::from_millis(100), batch_cap: 8 },
+        )
+        .unwrap();
+        let mut rng = Rng::seeded(177);
+        let data = Distribution::Normal.sample_vec(&mut rng, 1 << 13);
+        let want = sorted_median(&data);
+        let id = svc.upload(data, DType::F64).unwrap();
+        let p0 = svc.metrics.snapshot().probes;
+        let rxs: Vec<_> = (0..8)
+            .map(|_| svc.query_async(id, KSpec::Median, Method::Multisection).unwrap())
+            .collect();
+        for rx in rxs {
+            let r = rx.recv().unwrap().unwrap();
+            assert_eq!(r.value, want);
+            assert_eq!(r.method, Method::Multisection);
+        }
+        let snap = svc.metrics.snapshot();
+        assert_eq!(snap.coalesced, 8, "all 8 singles must land in one window");
+        // one shared run: strictly fewer reductions than 8 solo runs
+        let single = {
+            let mut ev = crate::select::HostEvaluator::new(
+                &Distribution::Normal.sample_vec(&mut Rng::seeded(177), 1 << 13),
+            );
+            crate::select::order_statistic(&mut ev, 1 << 12, Method::Multisection).unwrap();
+            ev.probes()
+        };
+        assert!(
+            snap.probes - p0 < 8 * single,
+            "windowed run used {} reductions vs 8x single {}",
+            snap.probes - p0,
+            8 * single
+        );
+        svc.shutdown();
+    }
+
+    #[test]
+    fn query_then_drop_in_one_window_keeps_fifo() {
+        // Regression: the old drained-batch sort keyed Drop ahead of Query,
+        // so a query→drop pair collected into one batch answered the drop
+        // first and failed the query with "unknown dataset".
+        let svc = SelectionService::start_with(
+            1,
+            64,
+            Method::Multisection,
+            HostBackend::factory(),
+            // each round's window holds exactly query+drop; cap 2 closes it
+            CoordinatorOptions { batch_window: Duration::from_millis(100), batch_cap: 2 },
+        )
+        .unwrap();
+        for round in 0..3 {
+            let id = svc.upload(vec![1.0, 2.0, 3.0, 4.0, 5.0], DType::F64).unwrap();
+            let rx = svc.query_async(id, KSpec::Median, Method::Multisection).unwrap();
+            svc.drop_dataset(id).unwrap();
+            let r = rx.recv().unwrap();
+            assert_eq!(
+                r.expect("query fired before the drop must succeed").value,
+                3.0,
+                "round {round}"
+            );
+            assert!(svc.query(id, KSpec::Median).is_err(), "round {round}: drop must stick");
+        }
+        svc.shutdown();
+    }
+
+    #[test]
+    fn coalesced_group_records_latency_once() {
+        // Regression: account() used to record the group's wall time once
+        // per member, inserting N identical histogram entries per shared
+        // run and inflating mean/p50/p99.
+        let svc = start_host(1);
+        let mut rng = Rng::seeded(178);
+        let data = Distribution::Uniform.sample_vec(&mut rng, 4096);
+        let id = svc.upload(data, DType::F64).unwrap();
+        assert_eq!(svc.metrics.count(), 0, "uploads record no query latency");
+        svc.query_many(id, vec![KSpec::Median; 8], Method::Multisection).unwrap();
+        let snap = svc.metrics.snapshot();
+        assert_eq!(snap.queries, 8);
+        assert_eq!(
+            svc.metrics.count(),
+            1,
+            "one shared run must contribute exactly one latency sample"
+        );
+        assert_eq!(snap.latency_samples, 1);
+        // a solo query adds exactly one more sample
+        svc.query(id, KSpec::Median).unwrap();
+        assert_eq!(svc.metrics.count(), 2);
+        assert_eq!(svc.metrics.snapshot().queries, 9);
+        svc.shutdown();
+    }
+
+    #[test]
     fn query_many_mixed_quantiles_are_exact() {
         let svc = start_host(2);
         let mut rng = Rng::seeded(176);
@@ -739,10 +996,11 @@ mod tests {
         let svc = start_host(1);
         let id = svc.upload(vec![1.0, 2.0, 3.0], DType::F64).unwrap();
         assert_eq!(svc.query(id, KSpec::Median).unwrap().value, 2.0);
-        svc.drop_dataset(id).unwrap();
-        // allow the worker to process the drop
-        std::thread::sleep(std::time::Duration::from_millis(20));
+        // synchronous drop: nothing to sleep on, the ack IS the ordering
+        svc.drop_dataset_sync(id).unwrap();
         assert!(svc.query(id, KSpec::Median).is_err());
+        // dropping an unknown dataset reports it
+        assert!(svc.drop_dataset_sync(id).is_err());
         svc.shutdown();
     }
 

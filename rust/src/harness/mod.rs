@@ -343,10 +343,27 @@ pub struct CoordinatorBench {
     pub sequential_fused_reductions: u64,
 }
 
+/// The time-windowed coalescing experiment: N *independent* single-shot
+/// `query()` clients (no `query_many`, no shared client-side state) fired
+/// concurrently at one dataset must land in one batching window and share
+/// ladder rounds.
+#[derive(Debug, Clone)]
+pub struct WindowBench {
+    pub queries: usize,
+    /// Batching window the service ran with.
+    pub window_us: u64,
+    /// Coordinator `coalesced` metric after the burst (≥ `queries` when
+    /// the window caught every client).
+    pub coalesced: u64,
+    /// Total fused reductions the burst cost.
+    pub fused_reductions: u64,
+}
+
 #[derive(Debug, Clone)]
 pub struct SelectBench {
     pub rows: Vec<SelectBenchRow>,
     pub coordinator: CoordinatorBench,
+    pub window: WindowBench,
     /// Native fused-ladder width advertised by the benched evaluator
     /// (`None` on the host oracle): the adaptive probes-per-pass the
     /// multisection rows actually ran with on a device backend.
@@ -423,7 +440,7 @@ pub fn bench_select(
         Method::Multisection,
         crate::coordinator::HostBackend::factory(),
     )?;
-    let id = svc.upload(data, DType::F64)?;
+    let id = svc.upload(data.clone(), DType::F64)?;
     let s0 = svc.metrics.snapshot().probes;
     for _ in 0..8 {
         svc.query_with(id, crate::coordinator::KSpec::Median, Method::Multisection)?;
@@ -434,6 +451,8 @@ pub fn bench_select(
     let concurrent = svc.metrics.snapshot().probes - c0;
     svc.shutdown();
 
+    let window = bench_window_coalescing(data, 8, 250_000)?;
+
     Ok(SelectBench {
         rows,
         coordinator: CoordinatorBench {
@@ -441,8 +460,73 @@ pub fn bench_select(
             concurrent_fused_reductions: concurrent,
             sequential_fused_reductions: sequential,
         },
+        window,
         ladder_width_hint,
     })
+}
+
+/// Drive the time-windowed coalescing experiment: `clients` threads each
+/// issue ONE blocking `query()` (released together through a barrier) at a
+/// single-worker service whose batching window is `window_us`; every
+/// client lands in the first window, so the burst plans into one shared
+/// ladder run. One retry absorbs a pathological scheduler stall (a client
+/// thread descheduled past the whole window would split the burst and
+/// read as a phantom coalescing regression in the CI gate).
+fn bench_window_coalescing(data: Vec<f64>, clients: usize, window_us: u64) -> Result<WindowBench> {
+    let first = run_window_burst(&data, clients, window_us)?;
+    if first.coalesced >= clients as u64 {
+        return Ok(first);
+    }
+    run_window_burst(&data, clients, window_us)
+}
+
+fn run_window_burst(data: &[f64], clients: usize, window_us: u64) -> Result<WindowBench> {
+    use crate::coordinator::{CoordinatorOptions, HostBackend, KSpec, SelectionService};
+    let svc = std::sync::Arc::new(SelectionService::start_with(
+        1,
+        64,
+        Method::Multisection,
+        HostBackend::factory(),
+        CoordinatorOptions {
+            batch_window: std::time::Duration::from_micros(window_us),
+            // the cap closes the window the instant the whole burst is in
+            // hand; the window itself is only straggler headroom
+            batch_cap: clients,
+        },
+    )?);
+    let id = svc.upload(data.to_vec(), DType::F64)?;
+    let p0 = svc.metrics.snapshot().probes;
+    let barrier = std::sync::Arc::new(std::sync::Barrier::new(clients));
+    let mut handles = Vec::with_capacity(clients);
+    for _ in 0..clients {
+        let svc = svc.clone();
+        let barrier = barrier.clone();
+        handles.push(std::thread::spawn(move || {
+            barrier.wait();
+            svc.query(id, KSpec::Median).map(|r| r.value)
+        }));
+    }
+    let mut values = Vec::with_capacity(clients);
+    for h in handles {
+        let v = h
+            .join()
+            .map_err(|_| crate::Error::Service("window-bench client panicked".into()))??;
+        values.push(v);
+    }
+    if values.iter().any(|&v| v != values[0]) {
+        return Err(crate::Error::Service("window-bench clients disagreed".into()));
+    }
+    let snap = svc.metrics.snapshot();
+    let bench = WindowBench {
+        queries: clients,
+        window_us,
+        coalesced: snap.coalesced,
+        fused_reductions: snap.probes - p0,
+    };
+    if let Ok(s) = std::sync::Arc::try_unwrap(svc) {
+        s.shutdown();
+    }
+    Ok(bench)
 }
 
 /// §IV ablation: hybrid iteration budget vs |z| and phase times.
@@ -542,6 +626,15 @@ mod tests {
             "{:?}",
             b.coordinator
         );
+        // acceptance: 8 single-shot clients through the batching window
+        // coalesce and cost strictly less than 8 solo runs
+        assert!(b.window.coalesced >= b.window.queries as u64, "{:?}", b.window);
+        assert!(
+            b.window.fused_reductions < b.coordinator.sequential_fused_reductions,
+            "window burst {:?} vs sequential {}",
+            b.window,
+            b.coordinator.sequential_fused_reductions
+        );
         let json = report::select_bench_json(&b, "f64", "host");
         let parsed = crate::util::json::Json::parse(&json).unwrap();
         assert_eq!(parsed.get("schema").unwrap().as_str().unwrap(), "cp-select/bench_select/v1");
@@ -551,6 +644,9 @@ mod tests {
         assert_eq!(parsed.get("rows").unwrap().as_arr().unwrap().len(), 8);
         let queries = parsed.get("coordinator").unwrap().get("queries").unwrap();
         assert_eq!(queries.as_usize().unwrap(), 8);
+        let w = parsed.get("window").unwrap();
+        assert_eq!(w.get("queries").unwrap().as_usize().unwrap(), 8);
+        assert!(w.get("coalesced").unwrap().as_usize().unwrap() >= 8);
     }
 
     #[test]

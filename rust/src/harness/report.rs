@@ -131,8 +131,17 @@ pub fn select_bench_json(b: &SelectBench, dtype: &str, backend: &str) -> String 
         ));
     }
     s.push_str("  ],\n");
-    // the coordinator experiment always runs on the host backend (its
-    // counts are substrate-independent), whatever the rows were measured on
+    // the coordinator + window experiments always run on the host backend
+    // (their counts are substrate-independent), whatever the rows were
+    // measured on
+    s.push_str(&format!(
+        "  \"window\": {{\"backend\": \"host\", \"queries\": {}, \"window_us\": {}, \
+         \"coalesced\": {}, \"fused_reductions\": {}}},\n",
+        b.window.queries,
+        b.window.window_us,
+        b.window.coalesced,
+        b.window.fused_reductions
+    ));
     s.push_str(&format!(
         "  \"coordinator\": {{\"backend\": \"host\", \"queries\": {}, \
          \"concurrent_fused_reductions\": {}, \

@@ -42,11 +42,48 @@
 //! - the [`coordinator`] coalesces concurrent queries against the same
 //!   resident dataset into shared `probe_many` rounds: the sufficient
 //!   statistics of a probe are rank-independent, so one ladder pass serves
-//!   every queued `k` simultaneously (`SelectionService::query_many`).
+//!   every queued `k` simultaneously (`SelectionService::query_many`, or
+//!   any singles caught by the batching window below).
 //!
 //! The tradeoff: wider ladders cost more per-element compare work per pass
 //! (still memory-bound for small `p` on the host) in exchange for fewer
-//! passes; `p` is tunable per method via its options struct.
+//! passes; `p` is tunable per method via its options struct and chosen by
+//! a measured cost model (below) when nothing pins it.
+//!
+//! ## The batching window and the coalescing planner
+//!
+//! Serving-side, the win scales with how many concurrent queries ride each
+//! ladder. Coordinator workers therefore batch their ingest queue over a
+//! **time window** (`coordinator::CoordinatorOptions { batch_window,
+//! batch_cap }`, CLI `--batch-window-us`/`--batch-cap`): a probe-based
+//! query at the head of a batch opens the window, and the worker keeps
+//! collecting (`recv_timeout`) until the deadline or the cap — so
+//! independent clients that arrive within one window coalesce even though
+//! none of them used `query_many`. Uploads, drops and download-method
+//! queries start drain-only batches (holding them buys no sharing), and a
+//! zero window — the library default; the deployment config defaults to
+//! 200 µs — degrades everything to the old drain-what's-queued
+//! micro-batching.
+//!
+//! Each collected window is compiled into an execution plan (the batch
+//! planner in `coordinator/planner.rs`): probe-based `Query` singles and
+//! `QueryMany` specs against the same dataset merge into **one** unified
+//! `multi_order_statistics` group per dataset, while uploads, drops and
+//! download-method queries keep per-dataset FIFO order (a drop never
+//! overtakes the query that preceded it, and an interleaved `QueryMany` no
+//! longer splits the singles around it). Groups ride a per-worker
+//! **measured pass-cost model** ([`select::PassCostModel`]): pass cost vs
+//! ladder width is seeded from the committed `BENCH_select.json`
+//! trajectory, refined online from the worker's own run timings, and
+//! consulted by `MultisectOptions::for_evaluator[_with]` so probes-per-pass
+//! follows measured cost (the device's native `fused_ladder` bucket, when
+//! advertised, stays the plan: padding makes narrower ladders cost the
+//! same launch and chunking shrinks less than adaptive passes).
+//!
+//! Accounting under coalescing: a shared group is **one run** — it records
+//! one latency sample (`Metrics::count()` tracks runs; `queries` tracks
+//! queries) and its fused reductions are split across members so per-query
+//! `probes` still sum to the real total.
 //!
 //! ## The device ladder path and probe accounting
 //!

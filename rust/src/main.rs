@@ -23,7 +23,7 @@ use std::path::PathBuf;
 use std::process::ExitCode;
 
 use cp_select::config::Config;
-use cp_select::coordinator::{HostBackend, KSpec, SelectionService};
+use cp_select::coordinator::{CoordinatorOptions, HostBackend, KSpec, SelectionService};
 use cp_select::harness::{self, report, Backend, Runner, TableConfig};
 use cp_select::regression::{self, HostSelector};
 use cp_select::runtime::{Flavor, Runtime};
@@ -159,7 +159,8 @@ fn print_usage() {
          subcommands: info select bench-table bench-select trace outliers\n\
          \x20             hybrid-sweep serve-demo regress knn\n\
          common flags: --config F --backend host|device --artifacts DIR\n\
-         \x20             --dtype f32|f64 --n N --method M --dist D --seed S --out DIR"
+         \x20             --dtype f32|f64 --n N --method M --dist D --seed S --out DIR\n\
+         serve-demo:   --batch-window-us US --batch-cap N (coalescing window)"
     );
 }
 
@@ -318,6 +319,11 @@ fn cmd_serve_demo(opts: &Opts) -> Result<()> {
     let n = opts.usize("n", 1 << 16)?;
     let queries = opts.usize("queries", 64)?;
     let seed = opts.u64("seed", 42)?;
+    // Batching window: how long a worker holds the first request of a
+    // batch so concurrent same-dataset queries coalesce into shared
+    // ladder rounds (config `[service] batch_window_us`, overridable here).
+    let window_us = opts.u64("batch-window-us", cfg.batch_window_us)?;
+    let batch_cap = opts.usize("batch-cap", cfg.batch_cap)?;
     // The service demo uses the host backend by default; `--backend device`
     // builds per-worker PJRT runtimes.
     let factory = match opts.get("backend").unwrap_or("host") {
@@ -327,7 +333,16 @@ fn cmd_serve_demo(opts: &Opts) -> Result<()> {
         ),
         _ => HostBackend::factory(),
     };
-    let svc = SelectionService::start(cfg.workers, cfg.queue_depth, cfg.default_method, factory)?;
+    let svc = SelectionService::start_with(
+        cfg.workers,
+        cfg.queue_depth,
+        cfg.default_method,
+        factory,
+        CoordinatorOptions {
+            batch_window: std::time::Duration::from_micros(window_us),
+            batch_cap,
+        },
+    )?;
     let mut rng = Rng::seeded(seed);
     let mut ids = Vec::new();
     for d in [Distribution::Normal, Distribution::HalfNormal, Distribution::Mixture1] {

@@ -31,6 +31,7 @@ pub mod transform;
 pub mod weighted;
 
 pub use cutting_plane::{CpOptions, CpOutcome, TracePoint};
+pub use gpu_model::PassCostModel;
 pub use hybrid::{HybridOptions, HybridOutcome};
 pub use multisection::{MultiOutcome, MultisectOptions, MultisectOutcome};
 pub use objective::{

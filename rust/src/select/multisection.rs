@@ -25,6 +25,7 @@
 use std::collections::HashMap;
 
 use super::exact;
+use super::gpu_model::PassCostModel;
 use super::objective::{Evaluator, ObjectiveSpec};
 use crate::util::PhaseTimer;
 use crate::Result;
@@ -47,18 +48,27 @@ impl Default for MultisectOptions {
 }
 
 impl MultisectOptions {
-    /// Ladder-width-adapted options: when the evaluator advertises a
-    /// native fused-ladder width ([`Evaluator::ladder_width_hint`] — the
-    /// device runtime's widest `fused_ladder` artifact bucket), probe that
-    /// many points per pass so each pass is exactly one device reduction;
-    /// otherwise keep the static default (the host oracle sweeps any width
-    /// in one pass).
+    /// Ladder-width-adapted options under the *seeded* pass-cost model:
+    /// when the evaluator advertises a native fused-ladder width
+    /// ([`Evaluator::ladder_width_hint`] — the device runtime's widest
+    /// `fused_ladder` artifact bucket) that width is the plan (each pass
+    /// is exactly one device reduction); otherwise the seeded
+    /// [`PassCostModel`] picks the width that minimizes modeled run cost
+    /// — which, by construction of the seed, is the committed
+    /// `BENCH_select.json` trajectory's width 15.
     pub fn for_evaluator(ev: &dyn Evaluator) -> Self {
-        let mut opts = Self::default();
-        if let Some(w) = ev.ladder_width_hint() {
-            opts.probes_per_pass = w.max(1);
+        Self::for_evaluator_with(ev, &PassCostModel::seeded())
+    }
+
+    /// Like [`MultisectOptions::for_evaluator`] but consulting a *measured*
+    /// cost model — the coordinator threads each worker's online-refined
+    /// [`PassCostModel`] through here, so probes-per-pass follows measured
+    /// pass cost vs ladder width rather than a hard-coded constant.
+    pub fn for_evaluator_with(ev: &dyn Evaluator, model: &PassCostModel) -> Self {
+        MultisectOptions {
+            probes_per_pass: model.best_width(ev.ladder_width_hint()).max(1),
+            ..Self::default()
         }
-        opts
     }
 }
 
@@ -153,6 +163,11 @@ pub struct MultiOutcome {
     /// Shared fused ladder passes (excludes the one shared seed reduction
     /// and the per-query exact-fixup tail).
     pub passes: usize,
+    /// Total ladder rungs actually evaluated across those passes — after
+    /// bracket dedup and budget splitting this can differ from
+    /// `passes × probes_per_pass`, and it is what a pass-cost model should
+    /// regress on.
+    pub rungs: u64,
 }
 
 /// Solve many order statistics of one array with **shared** ladder passes.
@@ -170,7 +185,7 @@ pub fn multi_order_statistics(
 ) -> Result<MultiOutcome> {
     let n = ev.n();
     if ks.is_empty() {
-        return Ok(MultiOutcome { values: Vec::new(), passes: 0 });
+        return Ok(MultiOutcome { values: Vec::new(), passes: 0, rungs: 0 });
     }
     let specs: Vec<ObjectiveSpec> = ks
         .iter()
@@ -202,6 +217,7 @@ pub fn multi_order_statistics(
     // resolve the fixup tail once per distinct rank.
     let mut memo: HashMap<usize, f64> = HashMap::new();
     let mut passes = 0;
+    let mut rungs: u64 = 0;
     while passes < opts.max_passes {
         let unresolved: Vec<usize> = (0..qs.len()).filter(|&i| qs[i].done.is_none()).collect();
         if unresolved.is_empty() {
@@ -229,6 +245,7 @@ pub fn multi_order_statistics(
         }
         let stats = ev.probe_many(&ys)?; // ONE fused pass serves every query
         passes += 1;
+        rungs += ys.len() as u64;
         for &i in &unresolved {
             {
                 let q = &mut qs[i];
@@ -291,6 +308,7 @@ pub fn multi_order_statistics(
     Ok(MultiOutcome {
         values: qs.into_iter().map(|q| q.done.expect("resolved")).collect(),
         passes,
+        rungs,
     })
 }
 
@@ -471,6 +489,30 @@ mod tests {
         // brackets dedupe to one set of rungs; the fixup tail may replay
         // per query, so allow a small additive slack)
         assert!(shared <= ev1.probes() + 16, "shared {} vs single {}", shared, ev1.probes());
+    }
+
+    #[test]
+    fn measured_cost_model_steers_the_planned_width() {
+        let data: Vec<f64> = (0..256).map(|i| i as f64).collect();
+        let ev = HostEvaluator::new(&data);
+        // seeded: the committed-trajectory width
+        assert_eq!(MultisectOptions::for_evaluator(&ev).probes_per_pass, 15);
+        // probe-heavy measurements (per-probe cost = sweep cost) narrow it
+        let mut model = PassCostModel::seeded();
+        for (i, &w) in [1usize, 3, 7, 15, 31, 2, 5, 11, 23, 63].iter().enumerate() {
+            let passes = 4 + i % 3;
+            let total = (passes + 2) as u64;
+            let n = 1usize << 12;
+            let secs = 1e-9 * (total as f64 + (passes * w + 2) as f64) * n as f64;
+            let rungs = (passes * w) as u64;
+            model.observe_run(passes, rungs, total, n, std::time::Duration::from_secs_f64(secs));
+        }
+        let opts = MultisectOptions::for_evaluator_with(&ev, &model);
+        assert!(opts.probes_per_pass < 15, "got {}", opts.probes_per_pass);
+        // whatever width the model picks, the answer stays exact
+        let mut ev = HostEvaluator::new(&data);
+        let out = multisection(&mut ev, 128, &opts).unwrap();
+        assert_eq!(out.value, 127.0);
     }
 
     #[test]

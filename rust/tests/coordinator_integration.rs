@@ -1,10 +1,12 @@
 //! Coordinator end-to-end: service over host and device backends, failure
-//! injection, concurrent load, metrics consistency.
+//! injection, concurrent load, window coalescing, metrics consistency.
 
-use std::sync::Arc;
+use std::sync::{Arc, Barrier};
+use std::time::Duration;
 
 use cp_select::coordinator::{
-    BackendFactory, DatasetBackend, DeviceBackend, HostBackend, KSpec, SelectionService,
+    BackendFactory, CoordinatorOptions, DatasetBackend, DeviceBackend, HostBackend, KSpec,
+    SelectionService,
 };
 use cp_select::runtime::{Flavor, Runtime};
 use cp_select::select::{DType, Method};
@@ -124,6 +126,191 @@ fn mixed_dtypes_one_service() {
     let r32 = svc.query(id32, KSpec::Median).unwrap().value;
     assert_eq!(r64, 0.3);
     assert_eq!(r32, 0.3f32 as f64);
+    svc.shutdown();
+}
+
+/// Acceptance: 8 threads issuing plain single-shot `query()` calls (no
+/// `query_many`, no shared client-side state) against one dataset land in
+/// one batching window, coalesce into shared ladder rounds
+/// (`coalesced` ≥ 8), and cost strictly less than 8× the single-query run.
+#[test]
+fn eight_concurrent_clients_coalesce_through_the_window() {
+    let svc = Arc::new(
+        SelectionService::start_with(
+            1,
+            64,
+            Method::Multisection,
+            HostBackend::factory(),
+            // cap 8 closes the window as soon as the whole burst is in
+            // hand; 250ms is straggler headroom, not a fixed wait
+            CoordinatorOptions { batch_window: Duration::from_millis(250), batch_cap: 8 },
+        )
+        .unwrap(),
+    );
+    let mut rng = Rng::seeded(305);
+    let data = Distribution::Uniform.sample_vec(&mut rng, 1 << 14);
+    let want = sorted_median(&data);
+
+    // single-query cost, measured outside the service
+    let single = {
+        let mut ev = cp_select::select::HostEvaluator::new(&data);
+        cp_select::select::median(&mut ev, Method::Multisection).unwrap();
+        ev.probes()
+    };
+
+    let id = svc.upload(data, DType::F64).unwrap();
+    let p0 = svc.metrics.snapshot().probes;
+    let barrier = Arc::new(Barrier::new(8));
+    let mut handles = Vec::new();
+    for _ in 0..8 {
+        let svc = svc.clone();
+        let barrier = barrier.clone();
+        handles.push(std::thread::spawn(move || {
+            barrier.wait();
+            svc.query(id, KSpec::Median).unwrap()
+        }));
+    }
+    for h in handles {
+        let r = h.join().unwrap();
+        assert_eq!(r.value, want);
+        assert_eq!(r.method, Method::Multisection, "coalesced singles ride the shared engine");
+    }
+    let snap = svc.metrics.snapshot();
+    assert!(snap.coalesced >= 8, "window caught {} of 8 clients", snap.coalesced);
+    let burst = snap.probes - p0;
+    assert!(
+        burst < 8 * single,
+        "8 windowed clients cost {burst} fused reductions, not below 8x single {single}"
+    );
+    // one shared run = one latency sample, 8 queries
+    assert_eq!(snap.queries, 8);
+    assert!(snap.latency_samples < 8, "expected shared-run latency accounting, {snap}");
+    if let Ok(s) = Arc::try_unwrap(svc) {
+        s.shutdown();
+    }
+}
+
+/// Parity: mixed probe-based `Query` singles and `QueryMany` batches
+/// against one dataset, planned into one unified group, return exactly the
+/// values a sequential run produces.
+#[test]
+fn mixed_singles_and_query_many_unified_plan_is_exact() {
+    let svc = Arc::new(
+        SelectionService::start_with(
+            1,
+            64,
+            Method::Multisection,
+            HostBackend::factory(),
+            // 5 requests total: 4 singles + 1 QueryMany; cap closes early
+            CoordinatorOptions { batch_window: Duration::from_millis(150), batch_cap: 5 },
+        )
+        .unwrap(),
+    );
+    let mut rng = Rng::seeded(306);
+    let data = Distribution::Mixture2.sample_vec(&mut rng, 5000);
+    let mut sorted = data.clone();
+    sorted.sort_by(|a, b| a.total_cmp(b));
+    let id = svc.upload(data, DType::F64).unwrap();
+
+    let single_ks = [100usize, 2500, 4900, 1];
+    let many_specs = vec![
+        KSpec::Quantile(0.2),
+        KSpec::Median,
+        KSpec::Rank(3333),
+        KSpec::Quantile(0.95),
+    ];
+    let barrier = Arc::new(Barrier::new(single_ks.len() + 1));
+    let mut singles = Vec::new();
+    for &k in &single_ks {
+        let svc = svc.clone();
+        let barrier = barrier.clone();
+        singles.push(std::thread::spawn(move || {
+            barrier.wait();
+            svc.query_with(id, KSpec::Rank(k), Method::Multisection).unwrap()
+        }));
+    }
+    let many = {
+        let svc = svc.clone();
+        let barrier = barrier.clone();
+        let specs = many_specs.clone();
+        std::thread::spawn(move || {
+            barrier.wait();
+            svc.query_many(id, specs, Method::Multisection).unwrap()
+        })
+    };
+    for (h, &k) in singles.into_iter().zip(&single_ks) {
+        let r = h.join().unwrap();
+        assert_eq!(r.k, k);
+        assert_eq!(r.value, sorted[k - 1], "single k={k}");
+    }
+    let rs = many.join().unwrap();
+    assert_eq!(rs.len(), many_specs.len());
+    for r in &rs {
+        assert_eq!(r.value, sorted[r.k - 1], "query_many k={}", r.k);
+    }
+    // the interleaved QueryMany no longer breaks single coalescing: the
+    // whole mixed burst shares one plan
+    let snap = svc.metrics.snapshot();
+    assert!(snap.coalesced >= 8, "mixed burst coalesced only {} of 8 specs", snap.coalesced);
+    if let Ok(s) = Arc::try_unwrap(svc) {
+        s.shutdown();
+    }
+}
+
+/// Regression (drained-batch reordering): a query fired before a drop of
+/// the same dataset must be answered even when both are collected into one
+/// batch at a busy worker — the old `(kind, id)` sort ran the drop first
+/// and failed the query with "unknown dataset". Window zero exercises the
+/// drain-only ingest path.
+#[test]
+fn query_then_drop_at_a_busy_worker_keeps_fifo() {
+    let svc = SelectionService::start_with(
+        1,
+        64,
+        Method::Multisection,
+        HostBackend::factory(),
+        CoordinatorOptions { batch_window: Duration::ZERO, batch_cap: 64 },
+    )
+    .unwrap();
+    let mut rng = Rng::seeded(307);
+    let busy_data = Distribution::Normal.sample_vec(&mut rng, 1 << 20);
+    let busy = svc.upload(busy_data, DType::F64).unwrap();
+    for round in 0..5 {
+        let id = svc.upload(vec![5.0, 1.0, 4.0, 2.0, 3.0], DType::F64).unwrap();
+        // occupy the worker so the query+drop pair queues up behind it
+        // and drains into a single batch
+        let slow = svc.query_async(busy, KSpec::Median, Method::Bisection).unwrap();
+        std::thread::sleep(Duration::from_millis(2));
+        let rx = svc.query_async(id, KSpec::Median, Method::Multisection).unwrap();
+        svc.drop_dataset(id).unwrap();
+        let r = rx.recv().unwrap();
+        assert_eq!(
+            r.expect("query fired before the drop must succeed").value,
+            3.0,
+            "round {round}"
+        );
+        assert!(slow.recv().unwrap().is_ok());
+        assert!(svc.query(id, KSpec::Median).is_err(), "round {round}: drop must stick");
+    }
+    svc.shutdown();
+}
+
+/// The synchronous drop ack replaces the sleep the fire-and-forget drop
+/// needed: the ack IS the ordering guarantee, even with traffic in flight.
+#[test]
+fn drop_dataset_sync_acks_under_load() {
+    let svc = SelectionService::start(2, 32, Method::Multisection, HostBackend::factory()).unwrap();
+    let mut rng = Rng::seeded(308);
+    for _ in 0..4 {
+        let data = Distribution::HalfNormal.sample_vec(&mut rng, 2048);
+        let want = sorted_median(&data);
+        let id = svc.upload(data, DType::F64).unwrap();
+        let inflight = svc.query_async(id, KSpec::Median, Method::Multisection).unwrap();
+        assert_eq!(inflight.recv().unwrap().unwrap().value, want);
+        svc.drop_dataset_sync(id).unwrap();
+        assert!(svc.query(id, KSpec::Median).is_err());
+        assert!(svc.drop_dataset_sync(id).is_err(), "double drop reports unknown dataset");
+    }
     svc.shutdown();
 }
 
