@@ -67,12 +67,28 @@ fn check_against_baseline(bench: &SelectBench) {
     );
     // window-coalescing counts (baselines written before the batching
     // window landed lack the key; skip silently then)
-    if let Some(wbase) = base.get("window") {
+    if let Some(wbase) = base.get_opt("window") {
         let fbase = wbase.get("fused_reductions").unwrap().as_usize().unwrap() as u64;
         assert!(
             bench.window.fused_reductions <= fbase,
             "window coalescing regressed: {} fused reductions > baseline {fbase}",
             bench.window.fused_reductions
+        );
+    }
+    // adaptive-controller counts (same skip rule for older baselines)
+    if let Some(abase) = base.get_opt("adaptive_window") {
+        let fbase = abase.get("fused_reductions").unwrap().as_usize().unwrap() as u64;
+        assert!(
+            bench.adaptive.fused_reductions <= fbase,
+            "adaptive-window coalescing regressed: {} fused reductions > baseline {fbase}",
+            bench.adaptive.fused_reductions
+        );
+        let ibase = abase.get("idle_added_window_us").unwrap().as_usize().unwrap() as u64;
+        assert!(
+            bench.adaptive.idle_added_window_us <= ibase.max(1_000),
+            "idle added window latency regressed: {}us > {}us",
+            bench.adaptive.idle_added_window_us,
+            ibase.max(1_000)
         );
     }
     println!("regression check vs {path}: {checked} rows + coalescing within baseline");
@@ -121,6 +137,29 @@ fn main() {
             row.fused_reductions
         );
     }
+    // adaptive controller: the same burst must coalesce to the fixed
+    // window's cost (parity with the 250 ms window row), the controller
+    // must actually have widened, and an idle single query after decay
+    // must pay ≤ 1 ms of (virtual) added window latency
+    let a = &bench.adaptive;
+    assert!(
+        a.coalesced >= a.queries as u64,
+        "adaptive window missed clients: coalesced {} < {} queries",
+        a.coalesced,
+        a.queries
+    );
+    assert!(
+        a.fused_reductions <= w.fused_reductions,
+        "adaptive burst cost {} fused reductions vs fixed window {}",
+        a.fused_reductions,
+        w.fused_reductions
+    );
+    assert!(a.window_after_burst_us > 0, "controller never widened: {a:?}");
+    assert!(
+        a.idle_added_window_us <= 1_000,
+        "idle query paid {}us of window latency (> 1ms)",
+        a.idle_added_window_us
+    );
     assert!(bench.rows.iter().all(|r| r.exact), "a method returned an inexact result");
     check_against_baseline(&bench);
 }

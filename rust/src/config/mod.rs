@@ -8,7 +8,9 @@
 pub mod toml;
 
 use std::path::{Path, PathBuf};
+use std::time::Duration;
 
+use crate::coordinator::{AdaptiveWindow, CoordinatorOptions};
 use crate::runtime::Flavor;
 use crate::select::{DType, Method};
 use crate::{Error, Result};
@@ -31,15 +33,31 @@ pub struct Config {
     pub workers: usize,
     /// Max queued requests before callers block.
     pub queue_depth: usize,
-    /// Coordinator batching window in microseconds: a probe-based query at
-    /// the head of a batch holds the worker collecting this long, so
-    /// concurrent same-dataset queries coalesce into shared ladder rounds
-    /// (0 = drain-only). Deployment default is 200 µs; the *library*
-    /// default (`CoordinatorOptions::default`) stays 0 so embedding
-    /// `SelectionService::start` keeps its drain-only latency profile.
+    /// Fixed coordinator batching window in microseconds — the *manual
+    /// override*: writing `[service] batch_window_us` turns the adaptive
+    /// controller off and pins this width (0 = drain-only). When the
+    /// controller is on (the deployment default) this value is unused.
+    /// The *library* default (`CoordinatorOptions::default`) stays 0 so
+    /// embedding `SelectionService::start` keeps its drain-only latency
+    /// profile.
     pub batch_window_us: u64,
+    /// Load-adaptive batching window (`[service] adaptive_window`,
+    /// deployment default on): the SLA-bounded controller widens the
+    /// window under observed concurrency and shrinks it to zero when
+    /// idle, so the latency/coalescing tradeoff leaves operator hands.
+    pub adaptive_window: bool,
+    /// p99 latency budget for the adaptive controller in microseconds
+    /// (`[service] latency_sla_us`, `--latency-sla-us`): batching window +
+    /// observed p99 run latency never exceeds it.
+    pub latency_sla_us: u64,
     /// Hard cap on requests collected into one planned batch.
     pub batch_cap: usize,
+    /// Cost-model sidecar path (`[service] cost_model_sidecar`): when set,
+    /// the service loads pooled pass-cost statistics from here at start
+    /// and persists them on shutdown (conventionally
+    /// `BENCH_select.cost_model.json` next to the committed
+    /// `BENCH_select.json`). Unset = in-memory pool only.
+    pub cost_model_sidecar: Option<PathBuf>,
     /// Hybrid CP iterations before compaction (paper: 7).
     pub hybrid_cp_iters: usize,
     /// Apply the log-transform guard automatically for extreme ranges.
@@ -63,7 +81,10 @@ impl Default for Config {
             workers: 1,
             queue_depth: 1024,
             batch_window_us: 200,
+            adaptive_window: true,
+            latency_sla_us: 5_000,
             batch_cap: 64,
+            cost_model_sidecar: None,
             hybrid_cp_iters: 7,
             guard_extremes: true,
             bench_reps: 3,
@@ -116,6 +137,18 @@ impl Config {
         }
         if let Some(v) = doc.get_int("service", "batch_window_us")? {
             c.batch_window_us = v.max(0) as u64;
+            // an explicitly pinned window is a manual override of the
+            // adaptive controller (re-enable with adaptive_window = true)
+            c.adaptive_window = false;
+        }
+        if let Some(v) = doc.get_bool("service", "adaptive_window")? {
+            c.adaptive_window = v;
+        }
+        if let Some(v) = doc.get_int("service", "latency_sla_us")? {
+            c.latency_sla_us = v.max(0) as u64;
+        }
+        if let Some(v) = doc.get_str("service", "cost_model_sidecar")? {
+            c.cost_model_sidecar = Some(PathBuf::from(v));
         }
         if let Some(v) = doc.get_int("service", "batch_cap")? {
             c.batch_cap = (v as usize).max(1);
@@ -131,6 +164,20 @@ impl Config {
         }
         Ok(c)
     }
+
+    /// The coordinator ingest options this config describes: the adaptive
+    /// controller bounded by `latency_sla_us` when `adaptive_window` is on,
+    /// the fixed `batch_window_us` otherwise.
+    pub fn coordinator_options(&self) -> CoordinatorOptions {
+        CoordinatorOptions {
+            batch_window: Duration::from_micros(self.batch_window_us),
+            batch_cap: self.batch_cap,
+            adaptive: self.adaptive_window.then(|| AdaptiveWindow {
+                latency_sla: Duration::from_micros(self.latency_sla_us),
+                ..AdaptiveWindow::default()
+            }),
+        }
+    }
 }
 
 #[cfg(test)]
@@ -145,6 +192,12 @@ mod tests {
         assert_eq!(c.kernel_flavor, Flavor::Jnp);
         assert_eq!(c.batch_window_us, 200);
         assert_eq!(c.batch_cap, 64);
+        assert!(c.adaptive_window, "deployment default is the adaptive controller");
+        assert_eq!(c.latency_sla_us, 5_000);
+        assert!(c.cost_model_sidecar.is_none());
+        let o = c.coordinator_options();
+        let a = o.adaptive.expect("adaptive on by default");
+        assert_eq!(a.latency_sla, std::time::Duration::from_micros(5_000));
     }
 
     #[test]
@@ -186,6 +239,8 @@ mod tests {
         assert_eq!(c.workers, 2);
         assert_eq!(c.queue_depth, 64);
         assert_eq!(c.batch_window_us, 750);
+        assert!(!c.adaptive_window, "a pinned batch_window_us is a manual override");
+        assert!(c.coordinator_options().adaptive.is_none());
         assert_eq!(c.batch_cap, 32);
         assert_eq!(c.bench_reps, 5);
         assert_eq!(c.bench_instances, 10);
@@ -197,6 +252,32 @@ mod tests {
         let c = Config::parse("[service]\nshards = 2\n").unwrap();
         assert_eq!(c.shards, 2);
         assert_eq!(c.default_method, Method::Hybrid);
+        assert!(c.adaptive_window);
+    }
+
+    #[test]
+    fn adaptive_window_config_roundtrip() {
+        // SLA + sidecar configured; no pinned window, so adaptive stays on
+        let c = Config::parse(
+            "[service]\nlatency_sla_us = 900\ncost_model_sidecar = \"results/cm.json\"\n",
+        )
+        .unwrap();
+        assert!(c.adaptive_window);
+        assert_eq!(c.latency_sla_us, 900);
+        assert_eq!(c.cost_model_sidecar, Some(PathBuf::from("results/cm.json")));
+        let a = c.coordinator_options().adaptive.unwrap();
+        assert_eq!(a.latency_sla, std::time::Duration::from_micros(900));
+
+        // explicit adaptive_window = true wins over a pinned window
+        let c = Config::parse("[service]\nbatch_window_us = 10\nadaptive_window = true\n").unwrap();
+        assert!(c.adaptive_window);
+        assert_eq!(c.batch_window_us, 10);
+
+        // and adaptive_window = false alone keeps the default fixed window
+        let c = Config::parse("[service]\nadaptive_window = false\n").unwrap();
+        assert!(c.coordinator_options().adaptive.is_none());
+        let window = c.coordinator_options().batch_window;
+        assert_eq!(window, std::time::Duration::from_micros(200));
     }
 
     #[test]

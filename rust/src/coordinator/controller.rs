@@ -1,0 +1,226 @@
+//! Load-adaptive batching window: an SLA-bounded controller that replaces
+//! the fixed `batch_window_us` knob.
+//!
+//! The paper's economics say the window should be *wide* exactly when
+//! concurrent traffic is there to coalesce (one shared ladder run amortizes
+//! its passes over every caught query) and *zero* when traffic is idle (a
+//! lone query gains nothing from being held). A fixed window forces the
+//! operator to pick one point on that tradeoff; [`WindowController`] moves
+//! along it automatically:
+//!
+//! - **widen** multiplicatively when the window that just closed caught ≥ 2
+//!   coalescable requests against one dataset (observed *same-dataset*
+//!   concurrency — the only traffic a wider window can actually merge, and
+//!   the only signal that predicts the next window will coalesce too);
+//! - **shrink** multiplicatively toward zero on idle windows (≤ 1
+//!   coalescable request), bottoming out at exactly zero so steady-idle
+//!   traffic pays no latency floor at all;
+//! - **clamp** to the latency SLA: the window is added head-of-batch
+//!   latency, so it never exceeds `latency_sla − observed p99 run latency`
+//!   (and never the hard `max_window`). A backend whose runs alone blow the
+//!   SLA gets a zero window — the controller can't fix the backend, but it
+//!   refuses to make the miss worse.
+//!
+//! Every decision is pure state → state on observed counts, so the
+//! controller is driven deterministically by the virtual-clock tests in
+//! this module and by `coordinator/service.rs`.
+
+use std::time::Duration;
+
+/// Adaptive-window configuration (`[service] latency_sla_us`,
+/// `--latency-sla-us`). `CoordinatorOptions::adaptive: Some(..)` turns the
+/// controller on; `None` keeps the fixed `batch_window` as a manual
+/// override.
+#[derive(Debug, Clone, Copy)]
+pub struct AdaptiveWindow {
+    /// p99 budget for (batch window + run execution): the controller keeps
+    /// `window ≤ latency_sla − p99(run)` at every decision.
+    pub latency_sla: Duration,
+    /// Smallest nonzero window (also the re-opening width after idle, and
+    /// the initial width so a fresh service can catch its first burst).
+    pub min_window: Duration,
+    /// Hard upper bound on the window regardless of SLA headroom.
+    pub max_window: Duration,
+}
+
+impl Default for AdaptiveWindow {
+    fn default() -> Self {
+        AdaptiveWindow {
+            latency_sla: Duration::from_micros(5_000),
+            min_window: Duration::from_micros(50),
+            max_window: Duration::from_micros(1_000),
+        }
+    }
+}
+
+/// What one [`WindowController::observe_batch`] call decided (surfaced as
+/// metrics counters: `window_widen` / `window_shrink` / `window_sla_clamp`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WindowDecision {
+    Widen,
+    Shrink,
+    /// Already at zero and still idle.
+    Hold,
+    /// The target width was cut to the SLA/max budget.
+    SlaClamp,
+}
+
+/// Per-worker adaptive window state; see the module docs for the policy.
+#[derive(Debug, Clone)]
+pub struct WindowController {
+    cfg: AdaptiveWindow,
+    window_us: u64,
+}
+
+impl WindowController {
+    pub fn new(cfg: AdaptiveWindow) -> WindowController {
+        let min = cfg.min_window.as_micros() as u64;
+        let max = cfg.max_window.as_micros() as u64;
+        let sla = cfg.latency_sla.as_micros() as u64;
+        // Start at min so the very first burst against a fresh service
+        // already has a (tiny) catchment; idle decay closes it promptly.
+        WindowController { cfg, window_us: min.min(max).min(sla) }
+    }
+
+    /// Current window the next coalescible-headed batch collects over.
+    pub fn window(&self) -> Duration {
+        Duration::from_micros(self.window_us)
+    }
+
+    pub fn window_us(&self) -> u64 {
+        self.window_us
+    }
+
+    /// Feed one closed batch: `coalescable` is the largest *same-dataset*
+    /// count of coalescible requests (probe-based queries / `QueryMany`)
+    /// the window caught — only same-dataset requests can share a ladder,
+    /// so lone queries of different datasets count as idle traffic — and
+    /// `run_p99_us` the observed p99 of run execution latency (the
+    /// non-window share of the client's wait). Returns the decision taken.
+    pub fn observe_batch(&mut self, coalescable: usize, run_p99_us: u64) -> WindowDecision {
+        let sla = self.cfg.latency_sla.as_micros() as u64;
+        let max = self.cfg.max_window.as_micros() as u64;
+        let min = self.cfg.min_window.as_micros() as u64;
+        let budget = sla.saturating_sub(run_p99_us).min(max);
+        let (target, decision) = if coalescable >= 2 {
+            (self.window_us.saturating_mul(2).max(min), WindowDecision::Widen)
+        } else if self.window_us > min {
+            (self.window_us / 2, WindowDecision::Shrink)
+        } else if self.window_us > 0 {
+            (0, WindowDecision::Shrink)
+        } else {
+            (0, WindowDecision::Hold)
+        };
+        if target > budget {
+            self.window_us = budget;
+            WindowDecision::SlaClamp
+        } else {
+            self.window_us = target;
+            decision
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(sla_us: u64, min_us: u64, max_us: u64) -> AdaptiveWindow {
+        AdaptiveWindow {
+            latency_sla: Duration::from_micros(sla_us),
+            min_window: Duration::from_micros(min_us),
+            max_window: Duration::from_micros(max_us),
+        }
+    }
+
+    #[test]
+    fn widens_under_a_sustained_arrival_burst() {
+        let mut c = WindowController::new(cfg(10_000, 50, 1_000));
+        assert_eq!(c.window_us(), 50, "fresh controller opens at min_window");
+        let mut widths = vec![c.window_us()];
+        let mut decisions = Vec::new();
+        for _ in 0..6 {
+            decisions.push(c.observe_batch(8, 100));
+            widths.push(c.window_us());
+        }
+        // doubling until the budget cuts the last doublings short
+        assert!(decisions[..4].iter().all(|d| *d == WindowDecision::Widen), "{decisions:?}");
+        assert!(widths.windows(2).all(|w| w[1] >= w[0]), "{widths:?}");
+        assert_eq!(c.window_us(), 1_000, "burst saturates at max_window");
+        // further bursts hold the max (widen target is cut by the budget)
+        assert_eq!(c.observe_batch(8, 100), WindowDecision::SlaClamp);
+        assert_eq!(c.window_us(), 1_000);
+    }
+
+    #[test]
+    fn decays_to_exactly_zero_when_idle() {
+        let mut c = WindowController::new(cfg(10_000, 50, 1_000));
+        for _ in 0..6 {
+            c.observe_batch(4, 0);
+        }
+        assert!(c.window_us() > 0);
+        let mut steps = 0;
+        while c.window_us() > 0 {
+            assert_eq!(c.observe_batch(1, 0), WindowDecision::Shrink);
+            steps += 1;
+            assert!(steps < 32, "idle decay must terminate");
+        }
+        assert_eq!(c.window_us(), 0);
+        // steady idle: zero stays zero, no flapping
+        assert_eq!(c.observe_batch(0, 0), WindowDecision::Hold);
+        assert_eq!(c.observe_batch(1, 0), WindowDecision::Hold);
+        assert_eq!(c.window_us(), 0);
+    }
+
+    #[test]
+    fn burst_then_silence_then_burst_reopens() {
+        let mut c = WindowController::new(cfg(10_000, 50, 1_000));
+        for _ in 0..5 {
+            c.observe_batch(8, 0);
+        }
+        assert_eq!(c.window_us(), 1_000);
+        while c.window_us() > 0 {
+            c.observe_batch(1, 0);
+        }
+        // a new burst re-opens from zero via min_window
+        assert_eq!(c.observe_batch(5, 0), WindowDecision::Widen);
+        assert_eq!(c.window_us(), 50);
+        assert_eq!(c.observe_batch(5, 0), WindowDecision::Widen);
+        assert_eq!(c.window_us(), 100);
+    }
+
+    #[test]
+    fn simulated_p99_never_exceeds_the_sla() {
+        // Time-stepped scenario: arrivals and run p99 both vary; at every
+        // step the simulated client p99 (run p99 + window) must respect
+        // the budget.
+        let sla = 2_000;
+        let mut c = WindowController::new(cfg(sla, 50, 10_000));
+        let bursts = [8, 8, 1, 8, 8, 8, 1, 1, 8, 8, 8, 8, 1, 8];
+        let p99s = [100, 500, 1_500, 1_900, 400, 0, 2_500, 100, 1_999, 2_000, 50, 800, 3_000, 0];
+        for (i, (&b, &p99)) in bursts.iter().zip(&p99s).enumerate() {
+            c.observe_batch(b, p99);
+            assert!(
+                c.window_us().saturating_add(p99) <= sla.max(p99),
+                "step {i}: window {} + p99 {p99} blows the {sla}us SLA",
+                c.window_us()
+            );
+            assert!(c.window_us() <= sla, "step {i}");
+        }
+        // runs alone already blow the SLA: the controller zeroes the window
+        c.observe_batch(8, sla + 1);
+        assert_eq!(c.window_us(), 0);
+    }
+
+    #[test]
+    fn clamp_is_reported_as_a_clamp() {
+        let mut c = WindowController::new(cfg(300, 50, 1_000));
+        // widen target 100 fits the 300us budget...
+        assert_eq!(c.observe_batch(4, 0), WindowDecision::Widen);
+        // ...but with p99 eating the budget the widen is clamped
+        assert_eq!(c.observe_batch(4, 250), WindowDecision::SlaClamp);
+        assert_eq!(c.window_us(), 50);
+        assert_eq!(c.observe_batch(4, 300), WindowDecision::SlaClamp);
+        assert_eq!(c.window_us(), 0);
+    }
+}

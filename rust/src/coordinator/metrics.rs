@@ -4,6 +4,8 @@
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Duration;
 
+use super::controller::WindowDecision;
+
 /// Log₂-bucketed latency histogram: bucket i covers [2^i, 2^(i+1)) µs.
 const BUCKETS: usize = 32;
 
@@ -18,6 +20,16 @@ pub struct Metrics {
     /// Queries answered through shared probe-ladder rounds (coalesced
     /// same-dataset batches — see `service::solve_group`).
     pub coalesced: AtomicU64,
+    /// Adaptive-controller gauge: the batching window (µs) currently in
+    /// force (last controller decision wins across workers; 0 when idle
+    /// or when the service runs a fixed window).
+    pub window_us: AtomicU64,
+    /// Controller decisions: window widened under observed concurrency.
+    pub window_widen: AtomicU64,
+    /// Controller decisions: window shrunk toward zero on idle batches.
+    pub window_shrink: AtomicU64,
+    /// Controller decisions cut short by the latency-SLA budget.
+    pub window_sla_clamp: AtomicU64,
     latency_us: [AtomicU64; BUCKETS],
     latency_sum_us: AtomicU64,
 }
@@ -71,6 +83,18 @@ impl Metrics {
         u64::MAX
     }
 
+    /// Record one adaptive-controller decision: refresh the window gauge
+    /// and count the decision kind (see `coordinator::WindowController`).
+    pub fn note_window(&self, window_us: u64, decision: WindowDecision) {
+        self.window_us.store(window_us, Ordering::Relaxed);
+        match decision {
+            WindowDecision::Widen => self.window_widen.fetch_add(1, Ordering::Relaxed),
+            WindowDecision::Shrink => self.window_shrink.fetch_add(1, Ordering::Relaxed),
+            WindowDecision::SlaClamp => self.window_sla_clamp.fetch_add(1, Ordering::Relaxed),
+            WindowDecision::Hold => 0,
+        };
+    }
+
     pub fn snapshot(&self) -> Snapshot {
         Snapshot {
             requests: self.requests.load(Ordering::Relaxed),
@@ -80,6 +104,10 @@ impl Metrics {
             probes: self.probes.load(Ordering::Relaxed),
             batched: self.batched.load(Ordering::Relaxed),
             coalesced: self.coalesced.load(Ordering::Relaxed),
+            window_us: self.window_us.load(Ordering::Relaxed),
+            window_widen: self.window_widen.load(Ordering::Relaxed),
+            window_shrink: self.window_shrink.load(Ordering::Relaxed),
+            window_sla_clamp: self.window_sla_clamp.load(Ordering::Relaxed),
             latency_samples: self.count(),
             mean_latency_us: self.mean_latency_us(),
             p50_us: self.latency_quantile_us(0.5),
@@ -98,6 +126,15 @@ pub struct Snapshot {
     pub probes: u64,
     pub batched: u64,
     pub coalesced: u64,
+    /// Adaptive batching window currently in force (µs; 0 when idle or
+    /// fixed-window).
+    pub window_us: u64,
+    /// Adaptive-controller widen decisions.
+    pub window_widen: u64,
+    /// Adaptive-controller shrink decisions.
+    pub window_shrink: u64,
+    /// Adaptive-controller decisions clamped by the latency SLA.
+    pub window_sla_clamp: u64,
     /// Latency samples recorded — one per executed *run*, so strictly
     /// fewer than `queries` when coalescing shares runs.
     pub latency_samples: u64,
@@ -111,7 +148,8 @@ impl std::fmt::Display for Snapshot {
         write!(
             f,
             "requests={} uploads={} queries={} errors={} probes={} batched={} \
-             coalesced={} latency(runs={} mean={:.0}us p50<{}us p99<{}us)",
+             coalesced={} window(us={} widen={} shrink={} clamps={}) \
+             latency(runs={} mean={:.0}us p50<{}us p99<{}us)",
             self.requests,
             self.uploads,
             self.queries,
@@ -119,6 +157,10 @@ impl std::fmt::Display for Snapshot {
             self.probes,
             self.batched,
             self.coalesced,
+            self.window_us,
+            self.window_widen,
+            self.window_shrink,
+            self.window_sla_clamp,
             self.latency_samples,
             self.mean_latency_us,
             self.p50_us,
@@ -171,5 +213,21 @@ mod tests {
         let s = m.snapshot().to_string();
         assert!(s.contains("requests=0"));
         assert!(s.contains("latency"));
+        assert!(s.contains("window(us=0"));
+    }
+
+    #[test]
+    fn controller_decisions_accumulate() {
+        let m = Metrics::new();
+        m.note_window(100, WindowDecision::Widen);
+        m.note_window(200, WindowDecision::Widen);
+        m.note_window(100, WindowDecision::Shrink);
+        m.note_window(50, WindowDecision::SlaClamp);
+        m.note_window(50, WindowDecision::Hold);
+        let s = m.snapshot();
+        assert_eq!(s.window_us, 50, "gauge tracks the last decision");
+        assert_eq!(s.window_widen, 2);
+        assert_eq!(s.window_shrink, 1);
+        assert_eq!(s.window_sla_clamp, 1);
     }
 }

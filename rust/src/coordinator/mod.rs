@@ -6,12 +6,17 @@
 //! kNN applications are exactly such workloads).
 
 pub mod backend;
+pub mod controller;
 pub mod eviction;
 pub mod metrics;
 mod planner;
 pub mod service;
 
 pub use backend::{BackendFactory, DatasetBackend, DeviceBackend, HostBackend};
+pub use controller::{AdaptiveWindow, WindowController, WindowDecision};
 pub use eviction::{lru_factory, LruBackend};
 pub use metrics::{Metrics, Snapshot};
 pub use service::{CoordinatorOptions, DatasetId, KSpec, QueryResult, SelectionService};
+// The cross-worker cost-model pool is defined next to `PassCostModel`
+// (select::gpu_model) but is coordinator infrastructure; re-export it here.
+pub use crate::select::gpu_model::CostModelPool;

@@ -9,12 +9,18 @@
 //!   channels.
 //! - Workers batch over a **time window** ([`CoordinatorOptions`]): a
 //!   probe-based query at the head of a batch opens a window during which
-//!   the worker keeps collecting (`recv_timeout`) up to `batch_cap`
-//!   requests, so concurrent traffic that arrives within one window is
-//!   planned together — not just whatever happened to be sitting in the
-//!   queue. Uploads/drops start drain-only batches (no latency floor for
-//!   non-coalescible traffic), and the library default window is zero —
-//!   serving deployments opt in through `start_with` or the config.
+//!   the worker keeps collecting up to `batch_cap` requests, so concurrent
+//!   traffic that arrives within one window is planned together — not just
+//!   whatever happened to be sitting in the queue. Uploads/drops start
+//!   drain-only batches (no latency floor for non-coalescible traffic),
+//!   and the library default window is zero — serving deployments opt in
+//!   through `start_with` or the config. With
+//!   `CoordinatorOptions::adaptive` set, the window is driven by the
+//!   SLA-bounded [`WindowController`] instead of the fixed knob: it widens
+//!   under observed concurrency, shrinks to zero when idle, and never
+//!   exceeds the latency budget. Every window wait and time read goes
+//!   through a [`Clock`] ([`SelectionService::start_full`]), so tests
+//!   drive this logic deterministically under virtual time.
 //! - Each collected window is turned into an execution plan by the batch
 //!   planner (`plan_batch`): probe-based `Query` singles **and**
 //!   `QueryMany` specs against the same dataset merge into one shared
@@ -22,26 +28,30 @@
 //!   rank-independent, so one fused ladder pass serves every collected `k`
 //!   simultaneously — while uploads/drops/download-method queries keep
 //!   per-dataset FIFO order.
-//! - Shared runs ride a per-worker measured [`PassCostModel`]: the ladder
-//!   width starts at the `BENCH_select.json`-seeded optimum (or the
-//!   device's native `fused_ladder` bucket) and refines online from the
-//!   worker's own pass timings.
+//! - Shared runs ride the measured pass-cost model of a cross-worker
+//!   [`CostModelPool`]: the ladder width starts at the
+//!   `BENCH_select.json`-seeded optimum (or the device's native
+//!   `fused_ladder` bucket), refines online from every worker's pass
+//!   timings merged as sufficient statistics, and persists to a sidecar so
+//!   restarts start measured rather than seeded.
 //! - PJRT handles are thread-confined; each worker builds its own backend
 //!   via the [`BackendFactory`].
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender, TryRecvError};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TryRecvError};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use super::backend::BackendFactory;
+use super::controller::{AdaptiveWindow, WindowController};
 use super::metrics::Metrics;
 use super::planner::{plan_batch, GroupMember, Step};
-use crate::select::gpu_model::PassCostModel;
+use crate::select::gpu_model::CostModelPool;
 use crate::select::objective::DType;
 use crate::select::{self, Method};
+use crate::testkit::Clock;
 use crate::{Error, Result};
 
 /// What to select.
@@ -113,11 +123,17 @@ pub struct CoordinatorOptions {
     /// Hard cap on requests collected into one planned batch; reaching it
     /// closes the window immediately.
     pub batch_cap: usize,
+    /// `Some` puts the window under the load-adaptive SLA-bounded
+    /// controller ([`super::WindowController`]): it widens under observed
+    /// concurrency, shrinks to zero when idle, and never exceeds
+    /// `latency_sla − p99(run)`. `None` keeps `batch_window` as the fixed
+    /// manual override (and the zero library default).
+    pub adaptive: Option<AdaptiveWindow>,
 }
 
 impl Default for CoordinatorOptions {
     fn default() -> Self {
-        CoordinatorOptions { batch_window: Duration::ZERO, batch_cap: 64 }
+        CoordinatorOptions { batch_window: Duration::ZERO, batch_cap: 64, adaptive: None }
     }
 }
 
@@ -152,6 +168,23 @@ pub(crate) enum Request {
     Shutdown,
 }
 
+impl Request {
+    /// The dataset this request could share a fused ladder on, if any.
+    /// (Probe-based queries can share; uploads, drops and download-method
+    /// queries cannot — holding them open buys nothing.)
+    fn coalescible_dataset(&self) -> Option<DatasetId> {
+        match self {
+            Request::Query { id, method, .. } if !method.needs_download() => Some(*id),
+            Request::QueryMany { id, .. } => Some(*id),
+            _ => None,
+        }
+    }
+
+    fn coalescible(&self) -> bool {
+        self.coalescible_dataset().is_some()
+    }
+}
+
 /// Handle to a running selection service.
 pub struct SelectionService {
     worker_txs: Vec<SyncSender<Request>>,
@@ -159,6 +192,8 @@ pub struct SelectionService {
     next_id: AtomicU64,
     pub metrics: Arc<Metrics>,
     default_method: Method,
+    clock: Clock,
+    pool: Arc<CostModelPool>,
 }
 
 impl SelectionService {
@@ -181,13 +216,41 @@ impl SelectionService {
     }
 
     /// Start `workers` threads, each owning a backend from `factory` and
-    /// batching its ingest queue over `opts.batch_window`.
+    /// batching its ingest queue over `opts.batch_window` (or the adaptive
+    /// controller when `opts.adaptive` is set), on the real clock with an
+    /// in-memory cost-model pool; see [`SelectionService::start_full`].
     pub fn start_with(
         workers: usize,
         queue_depth: usize,
         default_method: Method,
         factory: BackendFactory,
         opts: CoordinatorOptions,
+    ) -> Result<SelectionService> {
+        Self::start_full(
+            workers,
+            queue_depth,
+            default_method,
+            factory,
+            opts,
+            Clock::real(),
+            CostModelPool::seeded(),
+        )
+    }
+
+    /// Fully-parameterized start: `clock` drives every window wait and
+    /// time read (tests pass [`Clock::manual`] so window behavior is
+    /// deterministic under virtual time), and `pool` is the shared
+    /// cross-worker [`CostModelPool`] (sidecar-bound pools are persisted
+    /// on shutdown, so a restarted service plans with measured
+    /// coefficients).
+    pub fn start_full(
+        workers: usize,
+        queue_depth: usize,
+        default_method: Method,
+        factory: BackendFactory,
+        opts: CoordinatorOptions,
+        clock: Clock,
+        pool: Arc<CostModelPool>,
     ) -> Result<SelectionService> {
         if workers == 0 {
             return Err(crate::invalid_arg!("need at least one worker"));
@@ -202,9 +265,11 @@ impl SelectionService {
             let (tx, rx) = sync_channel::<Request>(queue_depth);
             let factory = factory.clone();
             let metrics = metrics.clone();
+            let clock = clock.clone();
+            let pool = pool.clone();
             let handle = std::thread::Builder::new()
                 .name(format!("cp-select-worker-{w}"))
-                .spawn(move || worker_loop(w, rx, factory, metrics, opts))
+                .spawn(move || worker_loop(w, rx, factory, metrics, opts, clock, pool))
                 .map_err(|e| Error::Service(format!("spawn failed: {e}")))?;
             worker_txs.push(tx);
             handles.push(handle);
@@ -215,11 +280,27 @@ impl SelectionService {
             next_id: AtomicU64::new(1),
             metrics,
             default_method,
+            clock,
+            pool,
         })
+    }
+
+    /// The shared cross-worker cost-model pool this service plans with.
+    pub fn cost_pool(&self) -> &Arc<CostModelPool> {
+        &self.pool
     }
 
     fn route(&self, id: DatasetId) -> &SyncSender<Request> {
         &self.worker_txs[(id as usize) % self.worker_txs.len()]
+    }
+
+    /// Route + send + waiter wakeup: a worker parked on a *virtual* window
+    /// deadline only re-checks its queue when notified, so every enqueue
+    /// funnels through here (no-op notify on the real clock).
+    fn dispatch(&self, id: DatasetId, req: Request) -> Result<()> {
+        self.route(id).send(req).map_err(|_| Error::Service("worker channel closed".into()))?;
+        self.clock.notify();
+        Ok(())
     }
 
     /// Upload a dataset; returns its id. Blocks until the device holds it.
@@ -227,9 +308,7 @@ impl SelectionService {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         self.metrics.requests.fetch_add(1, Ordering::Relaxed);
         let (reply, rx) = sync_channel(1);
-        self.route(id)
-            .send(Request::Upload { id, data: Arc::new(data), dtype, reply })
-            .map_err(|_| Error::Service("worker channel closed".into()))?;
+        self.dispatch(id, Request::Upload { id, data: Arc::new(data), dtype, reply })?;
         recv_reply(&rx)??;
         self.metrics.uploads.fetch_add(1, Ordering::Relaxed);
         Ok(id)
@@ -270,9 +349,7 @@ impl SelectionService {
         }
         self.metrics.requests.fetch_add(1, Ordering::Relaxed);
         let (reply, rx) = sync_channel(1);
-        self.route(id)
-            .send(Request::QueryMany { id, specs, reply })
-            .map_err(|_| Error::Service("worker channel closed".into()))?;
+        self.dispatch(id, Request::QueryMany { id, specs, reply })?;
         recv_reply(&rx)?
     }
 
@@ -285,17 +362,13 @@ impl SelectionService {
     ) -> Result<Receiver<Result<QueryResult>>> {
         self.metrics.requests.fetch_add(1, Ordering::Relaxed);
         let (reply, rx) = sync_channel(1);
-        self.route(id)
-            .send(Request::Query { id, k, method, reply })
-            .map_err(|_| Error::Service("worker channel closed".into()))?;
+        self.dispatch(id, Request::Query { id, k, method, reply })?;
         Ok(rx)
     }
 
     /// Drop a dataset (fire-and-forget).
     pub fn drop_dataset(&self, id: DatasetId) -> Result<()> {
-        self.route(id)
-            .send(Request::Drop { id, reply: None })
-            .map_err(|_| Error::Service("worker channel closed".into()))
+        self.dispatch(id, Request::Drop { id, reply: None })
     }
 
     /// Drop a dataset and block until the worker has processed the drop
@@ -303,31 +376,39 @@ impl SelectionService {
     /// the dataset was not resident on its worker.
     pub fn drop_dataset_sync(&self, id: DatasetId) -> Result<()> {
         let (reply, rx) = sync_channel(1);
-        self.route(id)
-            .send(Request::Drop { id, reply: Some(reply) })
-            .map_err(|_| Error::Service("worker channel closed".into()))?;
+        self.dispatch(id, Request::Drop { id, reply: Some(reply) })?;
         recv_reply(&rx)?
     }
 
-    /// Graceful shutdown: drain queues, join workers.
+    /// Graceful shutdown: drain queues, join workers, persist the
+    /// cost-model pool's sidecar (when it has one) so the next start plans
+    /// with this run's measured coefficients.
     pub fn shutdown(mut self) {
+        self.stop();
+    }
+
+    fn stop(&mut self) {
+        if self.workers.is_empty() {
+            return;
+        }
         for tx in &self.worker_txs {
             let _ = tx.send(Request::Shutdown);
+            // wake a worker parked on a virtual window so it sees the
+            // shutdown without any test having to advance time
+            self.clock.notify();
         }
         for h in self.workers.drain(..) {
             let _ = h.join();
+        }
+        if let Err(e) = self.pool.persist() {
+            eprintln!("cost-model sidecar persist failed: {e}");
         }
     }
 }
 
 impl Drop for SelectionService {
     fn drop(&mut self) {
-        for tx in &self.worker_txs {
-            let _ = tx.send(Request::Shutdown);
-        }
-        for h in self.workers.drain(..) {
-            let _ = h.join();
-        }
+        self.stop();
     }
 }
 
@@ -336,22 +417,22 @@ fn recv_reply<T>(rx: &Receiver<T>) -> Result<T> {
 }
 
 /// Collect one batch: the first request is already in `batch`; keep
-/// receiving until the window deadline passes, the cap fills, or a
-/// shutdown arrives. The window only opens when the batch starts with a
-/// coalescible probe-based query (holding an upload/drop/download query
-/// buys no sharing); otherwise — and with a zero window — this reduces to
-/// draining what is queued.
-fn collect_batch(rx: &Receiver<Request>, batch: &mut Vec<Request>, opts: &CoordinatorOptions) {
-    let window = match batch.last() {
-        Some(Request::Query { method, .. }) if !method.needs_download() => opts.batch_window,
-        Some(Request::QueryMany { .. }) => opts.batch_window,
-        _ => Duration::ZERO,
-    };
+/// receiving until the window deadline passes (on `clock` time — virtual
+/// in tests, so the wait is a parked condvar rather than a sleep), the cap
+/// fills, or a shutdown arrives. The caller passes `window = ZERO` for
+/// non-coalescible heads, which reduces this to draining what is queued.
+fn collect_batch(
+    rx: &Receiver<Request>,
+    batch: &mut Vec<Request>,
+    window: Duration,
+    cap: usize,
+    clock: &Clock,
+) {
     if matches!(batch.last(), Some(Request::Shutdown)) {
         return;
     }
-    let deadline = Instant::now() + window;
-    while batch.len() < opts.batch_cap {
+    let deadline = clock.now_us().saturating_add(window.as_micros() as u64);
+    while batch.len() < cap {
         match rx.try_recv() {
             Ok(r) => {
                 let stop = matches!(r, Request::Shutdown);
@@ -364,11 +445,10 @@ fn collect_batch(rx: &Receiver<Request>, batch: &mut Vec<Request>, opts: &Coordi
             Err(TryRecvError::Disconnected) => return,
             Err(TryRecvError::Empty) => {}
         }
-        let now = Instant::now();
-        if now >= deadline {
+        if clock.now_us() >= deadline {
             return;
         }
-        match rx.recv_timeout(deadline - now) {
+        match clock.recv_deadline(rx, deadline) {
             Ok(r) => {
                 let stop = matches!(r, Request::Shutdown);
                 batch.push(r);
@@ -376,7 +456,7 @@ fn collect_batch(rx: &Receiver<Request>, batch: &mut Vec<Request>, opts: &Coordi
                     return;
                 }
             }
-            Err(RecvTimeoutError::Timeout) | Err(RecvTimeoutError::Disconnected) => return,
+            Err(_) => return, // timeout or disconnect both close the batch
         }
     }
 }
@@ -387,6 +467,8 @@ fn worker_loop(
     factory: BackendFactory,
     metrics: Arc<Metrics>,
     opts: CoordinatorOptions,
+    clock: Clock,
+    pool: Arc<CostModelPool>,
 ) {
     let mut backend = match factory(worker_idx) {
         Ok(b) => b,
@@ -423,22 +505,45 @@ fn worker_loop(
         }
     };
 
-    // Per-worker measured pass-cost model: starts at the trajectory seed,
-    // refines from this worker's own shared-run timings.
-    let mut cost_model = PassCostModel::seeded();
+    // Load-adaptive batching window (None = fixed `opts.batch_window`).
+    let mut controller = opts.adaptive.map(WindowController::new);
     loop {
         let mut batch: Vec<Request> = Vec::new();
         match rx.recv() {
             Ok(r) => batch.push(r),
             Err(_) => break,
         }
-        collect_batch(&rx, &mut batch, &opts);
+        // The window only opens on coalescible heads (holding an
+        // upload/drop/download query buys no sharing).
+        let head_coalescible = batch.last().map(Request::coalescible).unwrap_or(false);
+        let window = if head_coalescible {
+            controller.as_ref().map(|c| c.window()).unwrap_or(opts.batch_window)
+        } else {
+            Duration::ZERO
+        };
+        collect_batch(&rx, &mut batch, window, opts.batch_cap, &clock);
         if batch.len() > 1 {
             metrics.batched.fetch_add(batch.len() as u64 - 1, Ordering::Relaxed);
         }
+        // Feed the controller what its window actually caught, BEFORE
+        // executing: replies thus always see the post-decision gauge. The
+        // widen signal is the max *same-dataset* coalescible count — only
+        // same-dataset requests can share a ladder, so two lone queries of
+        // different datasets are idle traffic, not coalescable concurrency.
+        if head_coalescible {
+            if let Some(c) = controller.as_mut() {
+                let mut per_dataset: HashMap<DatasetId, usize> = HashMap::new();
+                for id in batch.iter().filter_map(Request::coalescible_dataset) {
+                    *per_dataset.entry(id).or_insert(0) += 1;
+                }
+                let coalescable = per_dataset.values().copied().max().unwrap_or(0);
+                let decision = c.observe_batch(coalescable, metrics.latency_quantile_us(0.99));
+                metrics.note_window(c.window_us(), decision);
+            }
+        }
         let (steps, shutdown) = plan_batch(batch);
         for step in steps {
-            execute_step(backend.as_mut(), step, &metrics, &mut cost_model);
+            execute_step(backend.as_mut(), step, &metrics, &pool);
         }
         if shutdown {
             break;
@@ -451,7 +556,7 @@ fn execute_step(
     backend: &mut dyn super::backend::DatasetBackend,
     step: Step,
     metrics: &Metrics,
-    model: &mut PassCostModel,
+    pool: &CostModelPool,
 ) {
     match step {
         Step::Upload { id, data, dtype, reply } => {
@@ -474,7 +579,7 @@ fn execute_step(
         Step::Single { id, k, method, reply } => {
             answer_single(backend, id, k, method, &reply, metrics);
         }
-        Step::Group { id, members } => execute_group(backend, id, members, metrics, model),
+        Step::Group { id, members } => execute_group(backend, id, members, metrics, pool),
     }
 }
 
@@ -486,7 +591,7 @@ fn execute_group(
     id: DatasetId,
     members: Vec<GroupMember>,
     metrics: &Metrics,
-    model: &mut PassCostModel,
+    pool: &CostModelPool,
 ) {
     if let [GroupMember::Single { .. }] = members.as_slice() {
         if let Some(GroupMember::Single { k, method, reply }) = members.into_iter().next() {
@@ -513,7 +618,7 @@ fn execute_group(
         .copied()
         .collect();
     let t0 = Instant::now();
-    let mut results = solve_group(backend, id, &specs, model);
+    let mut results = solve_group(backend, id, &specs, pool);
     let wall = t0.elapsed();
     if total_specs > 1 {
         metrics.coalesced.fetch_add(total_specs as u64, Ordering::Relaxed);
@@ -587,13 +692,14 @@ fn answer_single(
 /// (`select::multisection::multi_order_statistics`). Per-item results align
 /// positionally; an invalid spec fails only its own slot, and the shared
 /// reduction count is distributed across the group so per-query `probes`
-/// still sum to the real total. The run's pass timing feeds the worker's
-/// [`PassCostModel`] so future ladder widths follow measured cost.
+/// still sum to the real total. The run plans with a snapshot of the
+/// shared [`CostModelPool`] (so every worker rides the fleet's pooled
+/// measurements) and feeds its pass timing back into the pool.
 fn solve_group(
     backend: &mut dyn super::backend::DatasetBackend,
     id: DatasetId,
     specs: &[KSpec],
-    model: &mut PassCostModel,
+    pool: &CostModelPool,
 ) -> Vec<Result<QueryResult>> {
     let n = match backend.dataset_len(id) {
         Some(n) => n,
@@ -612,13 +718,14 @@ fn solve_group(
         (|| {
             let ev = backend.evaluator(id)?;
             let probes0 = ev.probes();
-            // Shared rounds ride the worker's measured pass-cost model
+            // Shared rounds ride the pooled measured pass-cost model
             // (seeded to the evaluator's native ladder width).
-            let opts = select::MultisectOptions::for_evaluator_with(&*ev, model);
+            let model = pool.snapshot();
+            let opts = select::MultisectOptions::for_evaluator_with(&*ev, &model);
             let t0 = Instant::now();
             let out = select::multisection::multi_order_statistics(ev, &valid, &opts)?;
             let reductions = ev.probes() - probes0;
-            model.observe_run(out.passes, out.rungs, reductions, n, t0.elapsed());
+            pool.observe_run(out.passes, out.rungs, reductions, n, t0.elapsed());
             Ok((out.values, out.passes, reductions))
         })()
     };
@@ -851,13 +958,23 @@ mod tests {
     #[test]
     fn windowed_singles_coalesce_into_one_run() {
         // 8 independent single-shot queries fired into one batching window
-        // coalesce exactly like an explicit query_many batch.
-        let svc = SelectionService::start_with(
+        // coalesce exactly like an explicit query_many batch. The window
+        // runs on a virtual clock that is never advanced, so it cannot
+        // expire under a scheduler stall — the cap (8) is what closes it,
+        // deterministically, with zero real waiting.
+        let (clock, _vc) = Clock::manual();
+        let svc = SelectionService::start_full(
             1,
             64,
             Method::Multisection,
             HostBackend::factory(),
-            CoordinatorOptions { batch_window: Duration::from_millis(100), batch_cap: 8 },
+            CoordinatorOptions {
+                batch_window: Duration::from_millis(100),
+                batch_cap: 8,
+                adaptive: None,
+            },
+            clock,
+            crate::select::CostModelPool::seeded(),
         )
         .unwrap();
         let mut rng = Rng::seeded(177);
@@ -896,28 +1013,145 @@ mod tests {
     fn query_then_drop_in_one_window_keeps_fifo() {
         // Regression: the old drained-batch sort keyed Drop ahead of Query,
         // so a query→drop pair collected into one batch answered the drop
-        // first and failed the query with "unknown dataset".
-        let svc = SelectionService::start_with(
+        // first and failed the query with "unknown dataset". Virtual clock:
+        // the window cannot expire between the query and the drop, so the
+        // pair lands in one batch on every run (cap 2 closes it).
+        let (clock, vc) = Clock::manual();
+        let svc = SelectionService::start_full(
             1,
             64,
             Method::Multisection,
             HostBackend::factory(),
-            // each round's window holds exactly query+drop; cap 2 closes it
-            CoordinatorOptions { batch_window: Duration::from_millis(100), batch_cap: 2 },
+            CoordinatorOptions {
+                batch_window: Duration::from_millis(100),
+                batch_cap: 2,
+                adaptive: None,
+            },
+            clock,
+            crate::select::CostModelPool::seeded(),
         )
         .unwrap();
         for round in 0..3 {
             let id = svc.upload(vec![1.0, 2.0, 3.0, 4.0, 5.0], DType::F64).unwrap();
             let rx = svc.query_async(id, KSpec::Median, Method::Multisection).unwrap();
             svc.drop_dataset(id).unwrap();
+            // no clock advance: the cap, not the deadline, closed the batch
             let r = rx.recv().unwrap();
             assert_eq!(
                 r.expect("query fired before the drop must succeed").value,
                 3.0,
                 "round {round}"
             );
-            assert!(svc.query(id, KSpec::Median).is_err(), "round {round}: drop must stick");
+            // the follow-up probe opens a lone window; expire it manually
+            let rx = svc.query_async(id, KSpec::Median, Method::Multisection).unwrap();
+            vc.wait_for_waiters(1);
+            vc.advance(Duration::from_millis(101));
+            assert!(rx.recv().unwrap().is_err(), "round {round}: drop must stick");
         }
+        svc.shutdown();
+    }
+
+    #[test]
+    fn adaptive_window_coalesces_bursts_and_decays_to_zero_when_idle() {
+        // End-to-end controller behavior under virtual time: a burst of 8
+        // independent singles is caught by the fresh controller's
+        // min-window (frozen clock ⇒ it cannot expire early) and widens
+        // it; idle singles then decay it to exactly zero, after which a
+        // lone query pays no window latency at all.
+        let (clock, vc) = Clock::manual();
+        let svc = SelectionService::start_full(
+            1,
+            64,
+            Method::Multisection,
+            HostBackend::factory(),
+            CoordinatorOptions {
+                batch_window: Duration::ZERO,
+                batch_cap: 8,
+                adaptive: Some(AdaptiveWindow {
+                    latency_sla: Duration::from_millis(250),
+                    ..AdaptiveWindow::default()
+                }),
+            },
+            clock,
+            crate::select::CostModelPool::seeded(),
+        )
+        .unwrap();
+        let mut rng = Rng::seeded(179);
+        let data = Distribution::Normal.sample_vec(&mut rng, 1 << 13);
+        let want = sorted_median(&data);
+        let id = svc.upload(data, DType::F64).unwrap();
+
+        let rxs: Vec<_> = (0..8)
+            .map(|_| svc.query_async(id, KSpec::Median, Method::Multisection).unwrap())
+            .collect();
+        for rx in rxs {
+            assert_eq!(rx.recv().unwrap().unwrap().value, want);
+        }
+        let snap = svc.metrics.snapshot();
+        assert_eq!(snap.coalesced, 8, "adaptive window must coalesce the whole burst: {snap}");
+        assert!(snap.window_us > 0 && snap.window_widen >= 1, "burst must widen: {snap}");
+        assert!(
+            snap.window_us as u128 <= Duration::from_millis(250).as_micros(),
+            "window blew the SLA: {snap}"
+        );
+
+        // idle decay: each lone query opens the current window; expire it
+        let mut rounds = 0;
+        while svc.metrics.snapshot().window_us > 0 {
+            rounds += 1;
+            assert!(rounds <= 32, "idle decay must terminate");
+            let w = svc.metrics.snapshot().window_us;
+            let rx = svc.query_async(id, KSpec::Median, Method::Multisection).unwrap();
+            vc.wait_for_waiters(1);
+            vc.advance_us(w + 1);
+            assert_eq!(rx.recv().unwrap().unwrap().value, want);
+        }
+        assert!(svc.metrics.snapshot().window_shrink >= 1);
+
+        // at zero the worker never parks: an idle query costs no virtual
+        // time (the "~zero added window latency" acceptance property)
+        let t0 = vc.now_us();
+        assert_eq!(svc.query(id, KSpec::Median).unwrap().value, want);
+        assert_eq!(vc.now_us() - t0, 0, "idle query must pay no window latency");
+        svc.shutdown();
+    }
+
+    #[test]
+    fn cross_dataset_traffic_does_not_widen_the_adaptive_window() {
+        // Two lone queries of *different* datasets caught by one window
+        // cannot share a ladder (groups are per dataset), so they must
+        // read as idle traffic to the controller — not as coalescable
+        // concurrency that widens the window for zero payoff.
+        let (clock, _vc) = Clock::manual();
+        let svc = SelectionService::start_full(
+            1,
+            64,
+            Method::Multisection,
+            HostBackend::factory(),
+            CoordinatorOptions {
+                batch_window: Duration::ZERO,
+                batch_cap: 2,
+                adaptive: Some(AdaptiveWindow {
+                    latency_sla: Duration::from_millis(250),
+                    ..AdaptiveWindow::default()
+                }),
+            },
+            clock,
+            crate::select::CostModelPool::seeded(),
+        )
+        .unwrap();
+        let a = svc.upload(vec![1.0, 2.0, 3.0], DType::F64).unwrap();
+        let b = svc.upload(vec![4.0, 5.0, 6.0], DType::F64).unwrap();
+        // both routed to the single worker; cap 2 closes the window with
+        // one lone query per dataset in hand
+        let rx_a = svc.query_async(a, KSpec::Median, Method::Multisection).unwrap();
+        let rx_b = svc.query_async(b, KSpec::Median, Method::Multisection).unwrap();
+        assert_eq!(rx_a.recv().unwrap().unwrap().value, 2.0);
+        assert_eq!(rx_b.recv().unwrap().unwrap().value, 5.0);
+        let snap = svc.metrics.snapshot();
+        assert_eq!(snap.coalesced, 0, "different datasets must not share a group: {snap}");
+        assert_eq!(snap.window_widen, 0, "cross-dataset singles are idle traffic: {snap}");
+        assert!(snap.window_shrink >= 1, "{snap}");
         svc.shutdown();
     }
 

@@ -359,11 +359,33 @@ pub struct WindowBench {
     pub fused_reductions: u64,
 }
 
+/// The adaptive-controller experiment: the same 8-client burst as
+/// [`WindowBench`], but with the window under the SLA-bounded controller
+/// instead of a fixed knob, followed by an idle-decay phase — all on a
+/// virtual clock, so both numbers are exact, not statistical.
+#[derive(Debug, Clone)]
+pub struct AdaptiveWindowBench {
+    pub queries: usize,
+    /// Controller p99 budget the service ran with.
+    pub latency_sla_us: u64,
+    /// Coordinator `coalesced` metric after the burst.
+    pub coalesced: u64,
+    /// Total fused reductions the burst cost (parity target: the fixed
+    /// 250 ms `window` row).
+    pub fused_reductions: u64,
+    /// Controller window gauge right after the burst (must have widened).
+    pub window_after_burst_us: u64,
+    /// Virtual microseconds of window latency an idle single query paid
+    /// once the controller decayed to zero (acceptance: ≤ 1000).
+    pub idle_added_window_us: u64,
+}
+
 #[derive(Debug, Clone)]
 pub struct SelectBench {
     pub rows: Vec<SelectBenchRow>,
     pub coordinator: CoordinatorBench,
     pub window: WindowBench,
+    pub adaptive: AdaptiveWindowBench,
     /// Native fused-ladder width advertised by the benched evaluator
     /// (`None` on the host oracle): the adaptive probes-per-pass the
     /// multisection rows actually ran with on a device backend.
@@ -451,7 +473,8 @@ pub fn bench_select(
     let concurrent = svc.metrics.snapshot().probes - c0;
     svc.shutdown();
 
-    let window = bench_window_coalescing(data, 8, 250_000)?;
+    let window = bench_window_coalescing(&data, 8, 250_000)?;
+    let adaptive = bench_adaptive_window(&data, 8, 250_000)?;
 
     Ok(SelectBench {
         rows,
@@ -461,57 +484,46 @@ pub fn bench_select(
             sequential_fused_reductions: sequential,
         },
         window,
+        adaptive,
         ladder_width_hint,
     })
 }
 
-/// Drive the time-windowed coalescing experiment: `clients` threads each
-/// issue ONE blocking `query()` (released together through a barrier) at a
-/// single-worker service whose batching window is `window_us`; every
-/// client lands in the first window, so the burst plans into one shared
-/// ladder run. One retry absorbs a pathological scheduler stall (a client
-/// thread descheduled past the whole window would split the burst and
-/// read as a phantom coalescing regression in the CI gate).
-fn bench_window_coalescing(data: Vec<f64>, clients: usize, window_us: u64) -> Result<WindowBench> {
-    let first = run_window_burst(&data, clients, window_us)?;
-    if first.coalesced >= clients as u64 {
-        return Ok(first);
-    }
-    run_window_burst(&data, clients, window_us)
-}
-
-fn run_window_burst(data: &[f64], clients: usize, window_us: u64) -> Result<WindowBench> {
-    use crate::coordinator::{CoordinatorOptions, HostBackend, KSpec, SelectionService};
-    let svc = std::sync::Arc::new(SelectionService::start_with(
+/// Drive the time-windowed coalescing experiment: `clients` independent
+/// single-shot `query()` calls against a single-worker service whose fixed
+/// batching window is `window_us` of **virtual** time. The clock is never
+/// advanced, so the window cannot expire under a scheduler stall — the
+/// `batch_cap` (= `clients`) is what closes it, which makes the burst
+/// deterministically coalesce on every run. (This replaced a real-time
+/// version that needed a retry to absorb pathological scheduler stalls;
+/// under virtual time there is nothing to retry.)
+fn bench_window_coalescing(data: &[f64], clients: usize, window_us: u64) -> Result<WindowBench> {
+    use crate::coordinator::{
+        CoordinatorOptions, CostModelPool, HostBackend, KSpec, SelectionService,
+    };
+    let (clock, _vc) = crate::testkit::Clock::manual();
+    let svc = SelectionService::start_full(
         1,
         64,
         Method::Multisection,
         HostBackend::factory(),
         CoordinatorOptions {
             batch_window: std::time::Duration::from_micros(window_us),
-            // the cap closes the window the instant the whole burst is in
-            // hand; the window itself is only straggler headroom
             batch_cap: clients,
+            adaptive: None,
         },
-    )?);
+        clock,
+        CostModelPool::seeded(),
+    )?;
     let id = svc.upload(data.to_vec(), DType::F64)?;
     let p0 = svc.metrics.snapshot().probes;
-    let barrier = std::sync::Arc::new(std::sync::Barrier::new(clients));
-    let mut handles = Vec::with_capacity(clients);
-    for _ in 0..clients {
-        let svc = svc.clone();
-        let barrier = barrier.clone();
-        handles.push(std::thread::spawn(move || {
-            barrier.wait();
-            svc.query(id, KSpec::Median).map(|r| r.value)
-        }));
-    }
+    let rxs: Vec<_> = (0..clients)
+        .map(|_| svc.query_async(id, KSpec::Median, Method::Multisection))
+        .collect::<Result<_>>()?;
     let mut values = Vec::with_capacity(clients);
-    for h in handles {
-        let v = h
-            .join()
-            .map_err(|_| crate::Error::Service("window-bench client panicked".into()))??;
-        values.push(v);
+    for rx in rxs {
+        let dropped = || crate::Error::Service("window-bench reply dropped".into());
+        values.push(rx.recv().map_err(|_| dropped())??.value);
     }
     if values.iter().any(|&v| v != values[0]) {
         return Err(crate::Error::Service("window-bench clients disagreed".into()));
@@ -523,10 +535,85 @@ fn run_window_burst(data: &[f64], clients: usize, window_us: u64) -> Result<Wind
         coalesced: snap.coalesced,
         fused_reductions: snap.probes - p0,
     };
-    if let Ok(s) = std::sync::Arc::try_unwrap(svc) {
-        s.shutdown();
-    }
+    svc.shutdown();
     Ok(bench)
+}
+
+/// Drive the adaptive-controller experiment on a virtual clock: the same
+/// 8-client burst as [`bench_window_coalescing`] but with no fixed window
+/// at all — the controller's min-window catches the burst (frozen virtual
+/// time cannot expire it) and widens; idle singles then decay the window
+/// to zero, at which point a lone query pays zero virtual microseconds of
+/// window latency.
+fn bench_adaptive_window(
+    data: &[f64],
+    clients: usize,
+    latency_sla_us: u64,
+) -> Result<AdaptiveWindowBench> {
+    use crate::coordinator::{
+        AdaptiveWindow, CoordinatorOptions, CostModelPool, HostBackend, KSpec, SelectionService,
+    };
+    let (clock, vc) = crate::testkit::Clock::manual();
+    let svc = SelectionService::start_full(
+        1,
+        64,
+        Method::Multisection,
+        HostBackend::factory(),
+        CoordinatorOptions {
+            batch_window: std::time::Duration::ZERO,
+            batch_cap: clients,
+            adaptive: Some(AdaptiveWindow {
+                latency_sla: std::time::Duration::from_micros(latency_sla_us),
+                ..AdaptiveWindow::default()
+            }),
+        },
+        clock,
+        CostModelPool::seeded(),
+    )?;
+    let id = svc.upload(data.to_vec(), DType::F64)?;
+    let p0 = svc.metrics.snapshot().probes;
+    let rxs: Vec<_> = (0..clients)
+        .map(|_| svc.query_async(id, KSpec::Median, Method::Multisection))
+        .collect::<Result<_>>()?;
+    let dropped = || crate::Error::Service("adaptive-bench reply dropped".into());
+    for rx in rxs {
+        rx.recv().map_err(|_| dropped())??;
+    }
+    let snap = svc.metrics.snapshot();
+    let coalesced = snap.coalesced;
+    let fused_reductions = snap.probes - p0;
+    let window_after_burst_us = snap.window_us;
+
+    // idle decay: lone queries shrink the window step by step; each round
+    // parks the worker on the current window, which we expire by advancing
+    // virtual time
+    let mut rounds = 0;
+    while svc.metrics.snapshot().window_us > 0 {
+        rounds += 1;
+        if rounds > 64 {
+            return Err(crate::Error::Service("adaptive window failed to decay".into()));
+        }
+        let w = svc.metrics.snapshot().window_us;
+        let rx = svc.query_async(id, KSpec::Median, Method::Multisection)?;
+        vc.wait_for_waiters(1);
+        vc.advance_us(w + 1);
+        rx.recv().map_err(|_| dropped())??;
+    }
+
+    // idle single query at a closed window: no park, no advance — the
+    // virtual clock measures exactly the added window latency
+    let t0 = vc.now_us();
+    svc.query(id, KSpec::Median)?;
+    let idle_added_window_us = vc.now_us() - t0;
+    svc.shutdown();
+    Ok(AdaptiveWindowBench {
+        queries: clients,
+        latency_sla_us,
+        coalesced,
+        fused_reductions,
+        window_after_burst_us,
+        idle_added_window_us,
+    })
 }
 
 /// §IV ablation: hybrid iteration budget vs |z| and phase times.
@@ -635,6 +722,18 @@ mod tests {
             b.window,
             b.coordinator.sequential_fused_reductions
         );
+        // acceptance: the adaptive controller matches the fixed window's
+        // coalescing (same 8-client burst, same shared-run cost) while an
+        // idle query pays no window latency at all
+        assert!(b.adaptive.coalesced >= b.adaptive.queries as u64, "{:?}", b.adaptive);
+        assert_eq!(
+            b.adaptive.fused_reductions,
+            b.window.fused_reductions,
+            "adaptive burst must match the fixed-window run: {:?}",
+            b.adaptive
+        );
+        assert!(b.adaptive.window_after_burst_us > 0, "{:?}", b.adaptive);
+        assert_eq!(b.adaptive.idle_added_window_us, 0, "{:?}", b.adaptive);
         let json = report::select_bench_json(&b, "f64", "host");
         let parsed = crate::util::json::Json::parse(&json).unwrap();
         assert_eq!(parsed.get("schema").unwrap().as_str().unwrap(), "cp-select/bench_select/v1");
@@ -647,6 +746,10 @@ mod tests {
         let w = parsed.get("window").unwrap();
         assert_eq!(w.get("queries").unwrap().as_usize().unwrap(), 8);
         assert!(w.get("coalesced").unwrap().as_usize().unwrap() >= 8);
+        let a = parsed.get("adaptive_window").unwrap();
+        assert_eq!(a.get("queries").unwrap().as_usize().unwrap(), 8);
+        assert!(a.get("window_after_burst_us").unwrap().as_usize().unwrap() > 0);
+        assert_eq!(a.get("idle_added_window_us").unwrap().as_usize().unwrap(), 0);
     }
 
     #[test]

@@ -143,6 +143,17 @@ pub fn select_bench_json(b: &SelectBench, dtype: &str, backend: &str) -> String 
         b.window.fused_reductions
     ));
     s.push_str(&format!(
+        "  \"adaptive_window\": {{\"backend\": \"host\", \"queries\": {}, \
+         \"latency_sla_us\": {}, \"coalesced\": {}, \"fused_reductions\": {}, \
+         \"window_after_burst_us\": {}, \"idle_added_window_us\": {}}},\n",
+        b.adaptive.queries,
+        b.adaptive.latency_sla_us,
+        b.adaptive.coalesced,
+        b.adaptive.fused_reductions,
+        b.adaptive.window_after_burst_us,
+        b.adaptive.idle_added_window_us
+    ));
+    s.push_str(&format!(
         "  \"coordinator\": {{\"backend\": \"host\", \"queries\": {}, \
          \"concurrent_fused_reductions\": {}, \
          \"sequential_fused_reductions\": {}}}\n",

@@ -71,10 +71,10 @@
 //! `multi_order_statistics` group per dataset, while uploads, drops and
 //! download-method queries keep per-dataset FIFO order (a drop never
 //! overtakes the query that preceded it, and an interleaved `QueryMany` no
-//! longer splits the singles around it). Groups ride a per-worker
-//! **measured pass-cost model** ([`select::PassCostModel`]): pass cost vs
+//! longer splits the singles around it). Groups ride the **measured
+//! pass-cost model** ([`select::PassCostModel`]): pass cost vs
 //! ladder width is seeded from the committed `BENCH_select.json`
-//! trajectory, refined online from the worker's own run timings, and
+//! trajectory, refined online from measured run timings, and
 //! consulted by `MultisectOptions::for_evaluator[_with]` so probes-per-pass
 //! follows measured cost (the device's native `fused_ladder` bucket, when
 //! advertised, stays the plan: padding makes narrower ladders cost the
@@ -84,6 +84,47 @@
 //! one latency sample (`Metrics::count()` tracks runs; `queries` tracks
 //! queries) and its fused reductions are split across members so per-query
 //! `probes` still sum to the real total.
+//!
+//! ## The adaptive window and the cost-model pool
+//!
+//! Both knobs above started life static: the window was a fixed operator
+//! config, and every worker re-learned its cost model from scratch. The
+//! coordinator now closes both loops:
+//!
+//! - **Load-adaptive window** ([`coordinator::WindowController`],
+//!   `CoordinatorOptions::adaptive`, config `[service] latency_sla_us` /
+//!   `adaptive_window`, CLI `--latency-sla-us`): the window *widens*
+//!   multiplicatively while closed windows keep catching ≥ 2 *same-dataset*
+//!   coalescable arrivals (the only traffic a wider window can merge, and
+//!   the signal that predicts the next window coalesces too), *shrinks* to
+//!   exactly zero on idle
+//!   windows (steady-idle traffic pays no latency floor at all), and is
+//!   *clamped* so `window + p99(run) ≤ latency_sla` at every decision.
+//!   Writing `batch_window_us` explicitly remains the manual override.
+//!   Controller state is observable: `Snapshot { window_us, window_widen,
+//!   window_shrink, window_sla_clamp }`, and `BENCH_select.json` carries
+//!   an `adaptive_window` row (the 8-client burst coalesces to the same
+//!   21 fused reductions as the fixed 250 ms window, while an idle query
+//!   pays zero added window latency).
+//! - **Cross-worker cost-model pool** ([`select::CostModelPool`]): workers
+//!   plan each shared run from a snapshot of one pooled model and feed
+//!   their measured timings back as *sufficient statistics* (the normal-
+//!   equation accumulators merge associatively — order/partition of
+//!   observations cannot change the fit), so a new worker warm-starts
+//!   from the fleet's measurements and the identifiability guards act on
+//!   the best-posed statistics available. Sidecar persistence
+//!   (`[service] cost_model_sidecar`, `--cost-model-sidecar`,
+//!   conventionally `BENCH_select.cost_model.json` next to the committed
+//!   baseline) makes restarts start measured rather than seeded; corrupt
+//!   sidecars log and fall back to the seed.
+//!
+//! Time-dependent control logic is only trustworthy if it is testable:
+//! every window wait and time read goes through a [`testkit::Clock`]
+//! (real, or a [`testkit::VirtualClock`] that moves only under manual
+//! `advance`), so the whole coalescing/controller suite runs sleep-free
+//! and deterministic — an open window under a frozen clock literally
+//! cannot expire early, and `VirtualClock::wait_for_waiters` sequences
+//! tests against a parked worker instead of against the scheduler.
 //!
 //! ## The device ladder path and probe accounting
 //!

@@ -23,12 +23,13 @@ use std::path::PathBuf;
 use std::process::ExitCode;
 
 use cp_select::config::Config;
-use cp_select::coordinator::{CoordinatorOptions, HostBackend, KSpec, SelectionService};
+use cp_select::coordinator::{AdaptiveWindow, CostModelPool, HostBackend, KSpec, SelectionService};
 use cp_select::harness::{self, report, Backend, Runner, TableConfig};
 use cp_select::regression::{self, HostSelector};
 use cp_select::runtime::{Flavor, Runtime};
 use cp_select::select::{DType, Method};
 use cp_select::stats::{Distribution, Rng};
+use cp_select::testkit::Clock;
 use cp_select::Result;
 
 fn main() -> ExitCode {
@@ -160,7 +161,9 @@ fn print_usage() {
          \x20             hybrid-sweep serve-demo regress knn\n\
          common flags: --config F --backend host|device --artifacts DIR\n\
          \x20             --dtype f32|f64 --n N --method M --dist D --seed S --out DIR\n\
-         serve-demo:   --batch-window-us US --batch-cap N (coalescing window)"
+         serve-demo:   --latency-sla-us US (adaptive window p99 budget, default)\n\
+         \x20             --batch-window-us US (pin a fixed window instead)\n\
+         \x20             --batch-cap N --cost-model-sidecar FILE"
     );
 }
 
@@ -319,11 +322,39 @@ fn cmd_serve_demo(opts: &Opts) -> Result<()> {
     let n = opts.usize("n", 1 << 16)?;
     let queries = opts.usize("queries", 64)?;
     let seed = opts.u64("seed", 42)?;
-    // Batching window: how long a worker holds the first request of a
-    // batch so concurrent same-dataset queries coalesce into shared
-    // ladder rounds (config `[service] batch_window_us`, overridable here).
-    let window_us = opts.u64("batch-window-us", cfg.batch_window_us)?;
-    let batch_cap = opts.usize("batch-cap", cfg.batch_cap)?;
+    // Batching window: adaptive by default (the SLA-bounded controller —
+    // `--latency-sla-us` sets its p99 budget); `--batch-window-us` pins a
+    // fixed window instead (the manual override, matching the config's
+    // `[service] batch_window_us` semantics).
+    let mut copts = cfg.coordinator_options();
+    if let Some(us) = opts.get("latency-sla-us") {
+        let us: u64 = us
+            .parse()
+            .map_err(|_| cp_select::invalid_arg!("--latency-sla-us: bad integer {us:?}"))?;
+        copts.adaptive = Some(AdaptiveWindow {
+            latency_sla: std::time::Duration::from_micros(us),
+            ..AdaptiveWindow::default()
+        });
+    }
+    if let Some(us) = opts.get("batch-window-us") {
+        let us: u64 = us
+            .parse()
+            .map_err(|_| cp_select::invalid_arg!("--batch-window-us: bad integer {us:?}"))?;
+        copts.batch_window = std::time::Duration::from_micros(us);
+        copts.adaptive = None;
+    }
+    copts.batch_cap = opts.usize("batch-cap", copts.batch_cap)?;
+    // Cost-model pool: sidecar-bound when configured (`--cost-model-sidecar`
+    // or `[service] cost_model_sidecar`) so a restart plans with this run's
+    // measured pass costs; in-memory otherwise.
+    let pool = match opts
+        .get("cost-model-sidecar")
+        .map(PathBuf::from)
+        .or_else(|| cfg.cost_model_sidecar.clone())
+    {
+        Some(path) => CostModelPool::load_or_seed(path),
+        None => CostModelPool::seeded(),
+    };
     // The service demo uses the host backend by default; `--backend device`
     // builds per-worker PJRT runtimes.
     let factory = match opts.get("backend").unwrap_or("host") {
@@ -333,15 +364,14 @@ fn cmd_serve_demo(opts: &Opts) -> Result<()> {
         ),
         _ => HostBackend::factory(),
     };
-    let svc = SelectionService::start_with(
+    let svc = SelectionService::start_full(
         cfg.workers,
         cfg.queue_depth,
         cfg.default_method,
         factory,
-        CoordinatorOptions {
-            batch_window: std::time::Duration::from_micros(window_us),
-            batch_cap,
-        },
+        copts,
+        Clock::real(),
+        pool.clone(),
     )?;
     let mut rng = Rng::seeded(seed);
     let mut ids = Vec::new();
@@ -378,7 +408,13 @@ fn cmd_serve_demo(opts: &Opts) -> Result<()> {
         queries as f64 / wall
     );
     println!("metrics: {}", svc.metrics.snapshot());
-    svc.shutdown();
+    svc.shutdown(); // persists the sidecar when the pool is bound to one
+    println!(
+        "cost model: {} pooled runs, planned width {}{}",
+        pool.samples(),
+        pool.best_width(None),
+        pool.sidecar().map(|p| format!(", sidecar {}", p.display())).unwrap_or_default()
+    );
     Ok(())
 }
 

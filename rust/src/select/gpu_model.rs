@@ -18,9 +18,13 @@
 //!   consults it so the ladder width is chosen by cost rather than by a
 //!   hard-coded constant.
 
+use std::path::{Path, PathBuf};
+use std::sync::{Mutex, MutexGuard};
 use std::time::Duration;
 
 use super::quickselect::quickselect;
+use crate::util::json::Json;
+use crate::{Error, Result};
 
 /// Widest ladder the pass planner will consider on an evaluator with no
 /// native width limit (the host oracle sweeps any width in one pass; the
@@ -191,6 +195,221 @@ impl PassCostModel {
             .min_by(|&p1, &p2| score(p1).total_cmp(&score(p2)))
             .unwrap_or(15)
     }
+
+    /// The `(sweep, per_probe)` coefficients currently in force: the
+    /// identifiable fit, or the seed (see [`PassCostModel::observe_run`]'s
+    /// guards). Public so pooling/persistence tests can check fits against
+    /// raw observations.
+    pub fn coefficients(&self) -> (f64, f64) {
+        self.coeffs()
+    }
+
+    /// Fold `other`'s observations into `self`. The model keeps sufficient
+    /// statistics (normal-equation sums + ratio extrema), all of which are
+    /// associative and commutative, so merging per-worker models in any
+    /// order/partition yields the same pooled fit (up to float rounding of
+    /// the sums) as one model that saw every run directly.
+    pub fn merge(&mut self, other: &PassCostModel) {
+        self.s_aa += other.s_aa;
+        self.s_ab += other.s_ab;
+        self.s_bb += other.s_bb;
+        self.s_ay += other.s_ay;
+        self.s_by += other.s_by;
+        self.ratio_lo = self.ratio_lo.min(other.ratio_lo);
+        self.ratio_hi = self.ratio_hi.max(other.ratio_hi);
+        self.samples += other.samples;
+    }
+
+    /// Serialize the sufficient statistics (schema
+    /// `cp-select/cost_model/v1`) — the cost-model sidecar format. `{:e}`
+    /// with 17 significant digits round-trips every finite f64 exactly;
+    /// the empty-model `ratio_lo = +inf` sentinel becomes `null`.
+    pub fn to_json(&self) -> String {
+        let num = |v: f64| format!("{v:.17e}");
+        let ratio = |v: f64| if v.is_finite() { format!("{v:.17e}") } else { "null".to_string() };
+        format!(
+            "{{\n  \"schema\": \"cp-select/cost_model/v1\",\n  \"samples\": {},\n  \
+             \"s_aa\": {},\n  \"s_ab\": {},\n  \"s_bb\": {},\n  \"s_ay\": {},\n  \
+             \"s_by\": {},\n  \"ratio_lo\": {},\n  \"ratio_hi\": {},\n  \
+             \"fitted_width\": {}\n}}\n",
+            self.samples,
+            num(self.s_aa),
+            num(self.s_ab),
+            num(self.s_bb),
+            num(self.s_ay),
+            num(self.s_by),
+            ratio(self.ratio_lo),
+            ratio(self.ratio_hi),
+            self.best_width(None)
+        )
+    }
+
+    /// Parse a sidecar produced by [`PassCostModel::to_json`]. Strict:
+    /// wrong schema, missing fields, non-finite or negative accumulators
+    /// all error so a corrupt sidecar is *detected* (the pool logs and
+    /// falls back to the seed rather than serving garbage coefficients).
+    pub fn from_json(text: &str) -> Result<PassCostModel> {
+        let j = Json::parse(text)?;
+        let schema = j.get("schema")?.as_str()?;
+        if schema != "cp-select/cost_model/v1" {
+            return Err(Error::Parse(format!("unknown cost-model schema {schema:?}")));
+        }
+        let mut m = PassCostModel::seeded();
+        m.samples = j.get("samples")?.as_usize()? as u64;
+        let field = |key: &str| -> Result<f64> {
+            let v = j.get(key)?.as_f64()?;
+            if !v.is_finite() || v < 0.0 {
+                return Err(Error::Parse(format!("cost-model field {key} = {v} out of range")));
+            }
+            Ok(v)
+        };
+        m.s_aa = field("s_aa")?;
+        m.s_ab = field("s_ab")?;
+        m.s_bb = field("s_bb")?;
+        m.s_ay = field("s_ay")?;
+        m.s_by = field("s_by")?;
+        m.ratio_lo = match j.get_opt("ratio_lo") {
+            None => f64::INFINITY,
+            Some(v) => {
+                let v = v.as_f64()?;
+                if !(v.is_finite() && v >= 0.0) {
+                    return Err(Error::Parse(format!("cost-model ratio_lo = {v} out of range")));
+                }
+                v
+            }
+        };
+        m.ratio_hi = match j.get_opt("ratio_hi") {
+            None => 0.0,
+            Some(_) => field("ratio_hi")?,
+        };
+        if m.samples > 0 && m.ratio_lo.is_finite() && m.ratio_lo > m.ratio_hi {
+            return Err(Error::Parse(format!(
+                "cost-model ratio extrema inverted: {} > {}",
+                m.ratio_lo, m.ratio_hi
+            )));
+        }
+        Ok(m)
+    }
+}
+
+/// Cross-worker cost-model pool: one shared [`PassCostModel`] every
+/// coordinator worker reads its planning snapshot from and feeds its
+/// measured runs into.
+///
+/// Workers used to each refine a private model from their own runs — N
+/// workers re-learned the same curve N times, and a restart threw all of
+/// it away. The pool merges observations as **sufficient statistics** (the
+/// model's normal-equation accumulators, not raw samples), so:
+///
+/// - a new worker warm-starts from everything the fleet has measured
+///   ([`CostModelPool::snapshot`] at planning time — cross-worker sharing
+///   is live, not start-only);
+/// - the identifiability/conditioning guards apply to the *pooled* fit,
+///   which is strictly better posed than any single worker's (ratio spread
+///   and sample count only grow under merge);
+/// - the statistics persist to a JSON sidecar next to `BENCH_select.json`
+///   ([`CostModelPool::persist`] on service shutdown,
+///   [`CostModelPool::load_or_seed`] on start), so a restarted service
+///   plans with measured coefficients instead of the seed. A missing
+///   sidecar is a silent cold start; a corrupt one logs and seeds.
+pub struct CostModelPool {
+    inner: Mutex<PassCostModel>,
+    sidecar: Option<PathBuf>,
+}
+
+impl CostModelPool {
+    /// In-memory pool starting from the trajectory seed (no persistence).
+    pub fn seeded() -> std::sync::Arc<CostModelPool> {
+        std::sync::Arc::new(CostModelPool {
+            inner: Mutex::new(PassCostModel::seeded()),
+            sidecar: None,
+        })
+    }
+
+    /// Pool bound to a sidecar file: loads prior statistics when the file
+    /// parses, logs and seeds when it is corrupt, and silently seeds when
+    /// it does not exist yet (first boot). [`CostModelPool::persist`]
+    /// writes back to the same path.
+    pub fn load_or_seed(sidecar: impl Into<PathBuf>) -> std::sync::Arc<CostModelPool> {
+        let sidecar = sidecar.into();
+        let model = match std::fs::read_to_string(&sidecar) {
+            Err(_) => PassCostModel::seeded(),
+            Ok(text) => match PassCostModel::from_json(&text) {
+                Ok(m) => m,
+                Err(e) => {
+                    eprintln!(
+                        "cost-model sidecar {} unreadable ({e}); starting from the seed",
+                        sidecar.display()
+                    );
+                    PassCostModel::seeded()
+                }
+            },
+        };
+        std::sync::Arc::new(CostModelPool { inner: Mutex::new(model), sidecar: Some(sidecar) })
+    }
+
+    fn lock(&self) -> MutexGuard<'_, PassCostModel> {
+        self.inner.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Point-in-time copy of the pooled model (what a worker plans with).
+    pub fn snapshot(&self) -> PassCostModel {
+        self.lock().clone()
+    }
+
+    /// Pooled runs observed so far (across every worker + loaded sidecar).
+    pub fn samples(&self) -> u64 {
+        self.lock().samples()
+    }
+
+    /// Pooled-fit planned width (see [`PassCostModel::best_width`]).
+    pub fn best_width(&self, native: Option<usize>) -> usize {
+        self.lock().best_width(native)
+    }
+
+    /// Record one measured run into the pool (same contract as
+    /// [`PassCostModel::observe_run`]).
+    pub fn observe_run(
+        &self,
+        ladder_passes: usize,
+        ladder_rungs: u64,
+        total_reductions: u64,
+        n: usize,
+        wall: Duration,
+    ) {
+        self.lock().observe_run(ladder_passes, ladder_rungs, total_reductions, n, wall);
+    }
+
+    /// Fold a privately-refined model into the pool (sufficient-statistic
+    /// merge; see [`PassCostModel::merge`]).
+    pub fn merge(&self, worker_model: &PassCostModel) {
+        self.lock().merge(worker_model);
+    }
+
+    /// Path this pool persists to, when sidecar-bound.
+    pub fn sidecar(&self) -> Option<&Path> {
+        self.sidecar.as_deref()
+    }
+
+    /// Write the pooled statistics to the sidecar (no-op `Ok(None)` for
+    /// in-memory pools). Called by the service on shutdown. Writes a temp
+    /// file and renames it over the sidecar so a crash mid-write leaves
+    /// the previous statistics intact instead of a truncated document.
+    pub fn persist(&self) -> Result<Option<PathBuf>> {
+        let Some(path) = &self.sidecar else {
+            return Ok(None);
+        };
+        let json = self.lock().to_json();
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir).map_err(|e| Error::io(dir.display().to_string(), e))?;
+            }
+        }
+        let tmp = path.with_extension("json.tmp");
+        std::fs::write(&tmp, json).map_err(|e| Error::io(tmp.display().to_string(), e))?;
+        std::fs::rename(&tmp, path).map_err(|e| Error::io(path.display().to_string(), e))?;
+        Ok(Some(path.clone()))
+    }
 }
 
 /// Slowdown calibrated from the paper's own measurements:
@@ -268,18 +487,11 @@ mod tests {
         assert!(m.pass_cost(15, 1 << 14) > m.pass_cost(1, 1 << 14));
     }
 
-    /// Synthesize runs from known coefficients and check the fit drives
-    /// the planned width in the right direction.
+    /// Feed the canonical synthetic stream (`testkit::synthetic_cost_runs`)
+    /// and check the fit drives the planned width in the right direction.
     fn feed_synthetic(model: &mut PassCostModel, a: f64, b: f64) {
-        for (i, &w) in [1usize, 3, 7, 15, 31, 63, 2, 5, 11, 23].iter().enumerate() {
-            let passes = 4 + i % 3;
-            let fixups = 1 + i % 4;
-            let total = (passes + fixups) as u64;
-            let n = 1usize << (12 + i % 3);
-            let probes = (passes * w + fixups) as f64;
-            let secs = (a * total as f64 + b * probes) * n as f64;
-            let rungs = (passes * w) as u64;
-            model.observe_run(passes, rungs, total, n, Duration::from_secs_f64(secs));
+        for (passes, rungs, total, n, wall) in crate::testkit::synthetic_cost_runs(a, b) {
+            model.observe_run(passes, rungs, total, n, wall);
         }
     }
 
@@ -305,6 +517,90 @@ mod tests {
         // a native bucket stays the plan: chunked launches shrink less
         // than the same number of sequential adaptive passes
         assert_eq!(m.best_width(Some(15)), 15);
+    }
+
+    #[test]
+    fn merge_pools_observations_across_models() {
+        // two workers see disjoint halves of the synthetic stream; the
+        // merged model must fit like one model that saw everything
+        let mut whole = PassCostModel::seeded();
+        feed_synthetic(&mut whole, 1e-9, 1e-14);
+        let mut w1 = PassCostModel::seeded();
+        let mut w2 = PassCostModel::seeded();
+        let runs = crate::testkit::synthetic_cost_runs(1e-9, 1e-14);
+        for (i, (passes, rungs, total, n, wall)) in runs.into_iter().enumerate() {
+            let model = if i % 2 == 0 { &mut w1 } else { &mut w2 };
+            model.observe_run(passes, rungs, total, n, wall);
+        }
+        // neither half alone is identifiable (fewer than MIN_FIT_SAMPLES)
+        assert_eq!(w1.best_width(None), 15);
+        let mut pooled = PassCostModel::seeded();
+        pooled.merge(&w1);
+        pooled.merge(&w2);
+        assert_eq!(pooled.samples(), whole.samples());
+        assert_eq!(pooled.best_width(None), whole.best_width(None));
+        let (pa, pb) = pooled.coefficients();
+        let (wa, wb) = whole.coefficients();
+        // tolerances scale with the sweep coefficient: the tiny per-probe
+        // term is recovered through a cancellation-prone determinant, so
+        // only its contribution at the sweep's scale is meaningful
+        assert!((pa - wa).abs() <= 1e-9 * wa.abs(), "{pa} vs {wa}");
+        assert!((pb - wb).abs() <= 1e-9 * wa.abs(), "{pb} vs {wb}");
+    }
+
+    #[test]
+    fn sidecar_json_roundtrips_exactly() {
+        let mut m = PassCostModel::seeded();
+        feed_synthetic(&mut m, 2e-9, 3e-10);
+        let j = m.to_json();
+        let back = PassCostModel::from_json(&j).unwrap();
+        assert_eq!(back.samples(), m.samples());
+        assert_eq!(back.coefficients(), m.coefficients(), "17-sig-digit floats roundtrip");
+        assert_eq!(back.best_width(None), m.best_width(None));
+        // empty model roundtrips through the null ratio sentinel
+        let empty = PassCostModel::seeded();
+        let back = PassCostModel::from_json(&empty.to_json()).unwrap();
+        assert_eq!(back.samples(), 0);
+        assert_eq!(back.best_width(None), 15);
+    }
+
+    #[test]
+    fn from_json_rejects_garbage() {
+        assert!(PassCostModel::from_json("").is_err());
+        assert!(PassCostModel::from_json("not json at all").is_err());
+        // truncated document
+        let whole = PassCostModel::seeded().to_json();
+        assert!(PassCostModel::from_json(&whole[..whole.len() / 2]).is_err());
+        // wrong schema
+        assert!(PassCostModel::from_json("{\"schema\": \"other/v9\"}").is_err());
+        // out-of-range accumulator
+        let bad = whole.replace("\"s_aa\": 0.00000000000000000e0", "\"s_aa\": -1.0");
+        assert!(PassCostModel::from_json(&bad).is_err());
+    }
+
+    #[test]
+    fn pool_persists_and_reloads_measured_statistics() {
+        let dir = std::env::temp_dir().join(format!("cp_select_pool_{}", std::process::id()));
+        let path = dir.join("BENCH_select.cost_model.json");
+        let pool = CostModelPool::load_or_seed(&path);
+        assert_eq!(pool.samples(), 0, "missing sidecar is a cold start");
+        {
+            let mut m = PassCostModel::seeded();
+            feed_synthetic(&mut m, 1e-9, 1e-14);
+            pool.merge(&m);
+        }
+        let fitted = pool.best_width(None);
+        assert!(fitted >= 32, "synthetic overhead-heavy stream must widen, got {fitted}");
+        pool.persist().unwrap();
+        let reloaded = CostModelPool::load_or_seed(&path);
+        assert_eq!(reloaded.samples(), pool.samples());
+        assert_eq!(reloaded.best_width(None), fitted);
+        // corrupt the sidecar: next load logs and seeds instead of erroring
+        std::fs::write(&path, "{\"schema\": \"cp-select/cost_model/v1\", \"samples\":").unwrap();
+        let seeded = CostModelPool::load_or_seed(&path);
+        assert_eq!(seeded.samples(), 0);
+        assert_eq!(seeded.best_width(None), 15);
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -31,7 +31,7 @@ pub mod transform;
 pub mod weighted;
 
 pub use cutting_plane::{CpOptions, CpOutcome, TracePoint};
-pub use gpu_model::PassCostModel;
+pub use gpu_model::{CostModelPool, PassCostModel};
 pub use hybrid::{HybridOptions, HybridOutcome};
 pub use multisection::{MultiOutcome, MultisectOptions, MultisectOutcome};
 pub use objective::{

@@ -1,0 +1,290 @@
+//! Time source abstraction: real monotonic time or a virtual clock under
+//! manual test control.
+//!
+//! The coordinator's batching window is *time-dependent* control logic: a
+//! worker holds the head of a batch while more traffic accumulates, and the
+//! adaptive controller widens/shrinks that window from observed arrivals.
+//! Testing such logic against the wall clock means sleeps, retries and
+//! flakes — so every time read and every timed wait in the window path goes
+//! through [`Clock`]:
+//!
+//! - [`Clock::Real`] reads a process-monotonic microsecond counter and
+//!   waits with `recv_timeout` (production behavior, zero overhead);
+//! - [`Clock::Virtual`] reads a [`VirtualClock`] that only moves when a
+//!   test calls [`VirtualClock::advance`]. A worker waiting on a virtual
+//!   deadline parks on a condvar; it is woken by *time advancing* or by a
+//!   *waiter wakeup* ([`VirtualClock::notify`], issued by the service after
+//!   every channel send so a parked worker re-checks its queue). Tests
+//!   sequence deterministically with [`VirtualClock::wait_for_waiters`]:
+//!   once a worker is parked, nothing happens until the test advances time
+//!   — an open batching window is effectively infinite, which is exactly
+//!   what makes burst-coalescing tests scheduler-proof.
+
+use std::sync::mpsc::{Receiver, RecvTimeoutError, TryRecvError};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, OnceLock};
+use std::time::{Duration, Instant};
+
+/// A monotonic microsecond time source: the real clock, or a virtual one
+/// under manual control. Cloning is cheap; all clones of a virtual clock
+/// share the same timeline.
+#[derive(Clone)]
+pub enum Clock {
+    /// Process-monotonic wall time (`Instant`-backed).
+    Real,
+    /// Shared manually-advanced timeline (see [`VirtualClock`]).
+    Virtual(Arc<VirtualClock>),
+}
+
+impl Clock {
+    /// The production clock.
+    pub fn real() -> Clock {
+        Clock::Real
+    }
+
+    /// A fresh virtual clock at t = 0, plus the handle tests use to
+    /// advance it and await parked waiters.
+    pub fn manual() -> (Clock, Arc<VirtualClock>) {
+        let vc = Arc::new(VirtualClock::new());
+        (Clock::Virtual(vc.clone()), vc)
+    }
+
+    /// Microseconds since this clock's epoch (process start, or virtual 0).
+    pub fn now_us(&self) -> u64 {
+        match self {
+            Clock::Real => real_now_us(),
+            Clock::Virtual(vc) => vc.now_us(),
+        }
+    }
+
+    /// Waiter wakeup: callers that enqueue work for a thread which may be
+    /// parked on a virtual deadline must call this after the enqueue so
+    /// the waiter re-checks its queue. No-op on the real clock (there,
+    /// `recv_timeout` wakes on the send natively).
+    pub fn notify(&self) {
+        if let Clock::Virtual(vc) = self {
+            vc.notify();
+        }
+    }
+
+    /// Receive from `rx`, giving up once this clock reaches `deadline_us`.
+    ///
+    /// Real clock: plain `recv_timeout`. Virtual clock: drain/park loop —
+    /// the caller is woken by [`VirtualClock::advance`] (deadline may now
+    /// have passed) or [`VirtualClock::notify`] (a message may have
+    /// arrived), so no real time is ever spent waiting.
+    pub fn recv_deadline<T>(
+        &self,
+        rx: &Receiver<T>,
+        deadline_us: u64,
+    ) -> std::result::Result<T, RecvTimeoutError> {
+        match self {
+            Clock::Real => {
+                let now = real_now_us();
+                if now >= deadline_us {
+                    return match rx.try_recv() {
+                        Ok(v) => Ok(v),
+                        Err(TryRecvError::Empty) => Err(RecvTimeoutError::Timeout),
+                        Err(TryRecvError::Disconnected) => Err(RecvTimeoutError::Disconnected),
+                    };
+                }
+                rx.recv_timeout(Duration::from_micros(deadline_us - now))
+            }
+            Clock::Virtual(vc) => loop {
+                // Snapshot the wakeup generation BEFORE checking the
+                // channel: a send+notify landing between the check and the
+                // park bumps the generation, so the park returns
+                // immediately instead of missing the wakeup.
+                let gen = vc.generation();
+                match rx.try_recv() {
+                    Ok(v) => return Ok(v),
+                    Err(TryRecvError::Disconnected) => return Err(RecvTimeoutError::Disconnected),
+                    Err(TryRecvError::Empty) => {}
+                }
+                if vc.now_us() >= deadline_us {
+                    return Err(RecvTimeoutError::Timeout);
+                }
+                vc.park(gen, deadline_us);
+            },
+        }
+    }
+}
+
+fn real_now_us() -> u64 {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    EPOCH.get_or_init(Instant::now).elapsed().as_micros() as u64
+}
+
+#[derive(Default)]
+struct VcState {
+    now_us: u64,
+    /// Bumped by every wakeup-worthy event (advance or notify); parked
+    /// threads wait for it to change.
+    generation: u64,
+    /// Threads currently parked in [`VirtualClock::park`] — the test-side
+    /// handshake: once a worker is parked, the system is quiescent.
+    waiters: usize,
+}
+
+/// Manually-advanced shared timeline (the virtual half of [`Clock`]).
+#[derive(Default)]
+pub struct VirtualClock {
+    state: Mutex<VcState>,
+    cv: Condvar,
+}
+
+impl VirtualClock {
+    pub fn new() -> VirtualClock {
+        VirtualClock::default()
+    }
+
+    fn lock(&self) -> MutexGuard<'_, VcState> {
+        self.state.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Current virtual time in microseconds.
+    pub fn now_us(&self) -> u64 {
+        self.lock().now_us
+    }
+
+    /// Move time forward and wake every parked waiter to re-check its
+    /// deadline. Time never moves on its own.
+    pub fn advance(&self, d: Duration) {
+        self.advance_us(d.as_micros() as u64);
+    }
+
+    pub fn advance_us(&self, us: u64) {
+        let mut st = self.lock();
+        st.now_us = st.now_us.saturating_add(us);
+        st.generation += 1;
+        self.cv.notify_all();
+    }
+
+    /// Waiter wakeup: wake parked waiters so they re-check their queues
+    /// (called after enqueuing work for a potentially-parked thread).
+    pub fn notify(&self) {
+        let mut st = self.lock();
+        st.generation += 1;
+        self.cv.notify_all();
+    }
+
+    /// Number of threads currently parked on a virtual deadline.
+    pub fn waiters(&self) -> usize {
+        self.lock().waiters
+    }
+
+    /// Block (in real time) until at least `n` threads are parked on this
+    /// clock — the deterministic test handshake: once the worker under
+    /// test is parked, it cannot act until the test advances time.
+    pub fn wait_for_waiters(&self, n: usize) {
+        let mut st = self.lock();
+        while st.waiters < n {
+            st = self.cv.wait(st).unwrap_or_else(|e| e.into_inner());
+        }
+    }
+
+    fn generation(&self) -> u64 {
+        self.lock().generation
+    }
+
+    /// Park until the generation moves past `gen` or time reaches
+    /// `deadline_us`. Returns immediately if either already holds.
+    fn park(&self, gen: u64, deadline_us: u64) {
+        let mut st = self.lock();
+        if st.generation != gen || st.now_us >= deadline_us {
+            return;
+        }
+        st.waiters += 1;
+        self.cv.notify_all(); // unblock wait_for_waiters observers
+        while st.generation == gen && st.now_us < deadline_us {
+            st = self.cv.wait(st).unwrap_or_else(|e| e.into_inner());
+        }
+        st.waiters -= 1;
+        self.cv.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc::sync_channel;
+
+    #[test]
+    fn virtual_time_only_moves_on_advance() {
+        let (clock, vc) = Clock::manual();
+        assert_eq!(clock.now_us(), 0);
+        vc.advance(Duration::from_millis(3));
+        assert_eq!(clock.now_us(), 3000);
+        vc.advance_us(7);
+        assert_eq!(clock.now_us(), 3007);
+    }
+
+    #[test]
+    fn recv_deadline_times_out_at_the_virtual_deadline() {
+        let (clock, vc) = Clock::manual();
+        let (_tx, rx) = sync_channel::<u32>(1);
+        // deadline already passed: immediate timeout, no park
+        vc.advance_us(10);
+        assert!(matches!(clock.recv_deadline(&rx, 5), Err(RecvTimeoutError::Timeout)));
+        // park a waiter, then expire its deadline from another thread
+        let t = std::thread::spawn({
+            let clock = clock.clone();
+            move || clock.recv_deadline(&rx, 100)
+        });
+        vc.wait_for_waiters(1);
+        vc.advance_us(200);
+        assert!(matches!(t.join().unwrap(), Err(RecvTimeoutError::Timeout)));
+        assert_eq!(vc.waiters(), 0);
+    }
+
+    #[test]
+    fn notify_wakes_a_parked_receiver_for_a_new_message() {
+        let (clock, vc) = Clock::manual();
+        let (tx, rx) = sync_channel::<u32>(4);
+        let t = std::thread::spawn({
+            let clock = clock.clone();
+            move || clock.recv_deadline(&rx, 1_000_000)
+        });
+        vc.wait_for_waiters(1);
+        tx.send(42).unwrap();
+        vc.notify();
+        assert_eq!(t.join().unwrap().unwrap(), 42);
+        // virtual time never moved: the wakeup was the notify, not a sleep
+        assert_eq!(vc.now_us(), 0);
+    }
+
+    #[test]
+    fn send_before_park_is_never_missed() {
+        // The generation snapshot closes the check-then-park race: even a
+        // send+notify issued before the receiver parks is picked up.
+        let (clock, vc) = Clock::manual();
+        let (tx, rx) = sync_channel::<u32>(4);
+        tx.send(7).unwrap();
+        vc.notify();
+        assert_eq!(clock.recv_deadline(&rx, 50).unwrap(), 7);
+    }
+
+    #[test]
+    fn disconnected_sender_ends_the_wait() {
+        let (clock, vc) = Clock::manual();
+        let (tx, rx) = sync_channel::<u32>(1);
+        let t = std::thread::spawn({
+            let clock = clock.clone();
+            move || clock.recv_deadline(&rx, 1_000_000)
+        });
+        vc.wait_for_waiters(1);
+        drop(tx);
+        vc.notify();
+        assert!(matches!(t.join().unwrap(), Err(RecvTimeoutError::Disconnected)));
+    }
+
+    #[test]
+    fn real_clock_smoke() {
+        let clock = Clock::real();
+        let t0 = clock.now_us();
+        let (_tx, rx) = sync_channel::<u32>(1);
+        // 1ms real deadline: returns Timeout without hanging
+        let r = clock.recv_deadline(&rx, t0 + 1_000);
+        assert!(matches!(r, Err(RecvTimeoutError::Timeout)));
+        assert!(clock.now_us() >= t0);
+    }
+}

@@ -1,12 +1,43 @@
-//! Property-testing mini-framework (proptest is unavailable offline —
-//! DESIGN.md §7).
+//! Deterministic-testing toolkit: a property-testing mini-framework
+//! (proptest is unavailable offline — DESIGN.md §7) and the virtual-clock
+//! harness ([`clock`]) that time-dependent coordinator logic runs under in
+//! tests.
 //!
-//! Provides seeded generators over the paper's data regimes and a
-//! `forall`-style runner with failure shrinking: on a counterexample the
-//! runner tries to shrink the input vector (halving, then element
-//! simplification) before reporting, so failures are small and actionable.
+//! The property half provides seeded generators over the paper's data
+//! regimes and a `forall`-style runner with failure shrinking: on a
+//! counterexample the runner tries to shrink the input vector (halving,
+//! then element simplification) before reporting, so failures are small
+//! and actionable.
+
+pub mod clock;
+
+pub use clock::{Clock, VirtualClock};
+
+use std::time::Duration;
 
 use crate::stats::{Distribution, Rng};
+
+/// Deterministic width-varying synthetic run stream for `PassCostModel`
+/// tests: `(passes, rungs, total_reductions, n, wall)` tuples following
+/// the model's own cost law `wall = (a·total + b·probes)·n` where
+/// `probes = passes·width + fixups`. One canonical copy so the unit,
+/// integration and property suites all exercise the same regressor
+/// contract (`xb = rungs + total − passes`) and identifiability spread.
+pub fn synthetic_cost_runs(a: f64, b: f64) -> Vec<(usize, u64, u64, usize, Duration)> {
+    [1usize, 3, 7, 15, 31, 63, 2, 5, 11, 23]
+        .iter()
+        .enumerate()
+        .map(|(i, &w)| {
+            let passes = 4 + i % 3;
+            let fixups = 1 + i % 4;
+            let total = (passes + fixups) as u64;
+            let n = 1usize << (12 + i % 3);
+            let probes = (passes * w + fixups) as f64;
+            let secs = (a * total as f64 + b * probes) * n as f64;
+            (passes, (passes * w) as u64, total, n, Duration::from_secs_f64(secs))
+        })
+        .collect()
+}
 
 /// A generated selection-problem case.
 #[derive(Debug, Clone)]

@@ -1,16 +1,20 @@
 //! Coordinator end-to-end: service over host and device backends, failure
-//! injection, concurrent load, window coalescing, metrics consistency.
+//! injection, concurrent load, window coalescing (fixed and adaptive, all
+//! under virtual time — no test here sleeps for correctness), cost-model
+//! pooling/persistence, metrics consistency.
 
 use std::sync::{Arc, Barrier};
 use std::time::Duration;
 
 use cp_select::coordinator::{
-    BackendFactory, CoordinatorOptions, DatasetBackend, DeviceBackend, HostBackend, KSpec,
-    SelectionService,
+    AdaptiveWindow, BackendFactory, CoordinatorOptions, CostModelPool, DatasetBackend,
+    DeviceBackend, HostBackend, KSpec, SelectionService,
 };
 use cp_select::runtime::{Flavor, Runtime};
-use cp_select::select::{DType, Method};
+use cp_select::select::multisection::MultisectOptions;
+use cp_select::select::{DType, HostEvaluator, Method, PassCostModel};
 use cp_select::stats::{sorted_median, sorted_order_statistic, Distribution, Rng};
+use cp_select::testkit::Clock;
 
 fn artifacts() -> Option<std::path::PathBuf> {
     let dir = Runtime::default_dir();
@@ -133,17 +137,25 @@ fn mixed_dtypes_one_service() {
 /// `query_many`, no shared client-side state) against one dataset land in
 /// one batching window, coalesce into shared ladder rounds
 /// (`coalesced` ≥ 8), and cost strictly less than 8× the single-query run.
+/// The window runs on virtual time that is never advanced: it *cannot*
+/// expire under a scheduler stall, so the cap (8) is what closes it and
+/// the burst coalesces deterministically on every run.
 #[test]
 fn eight_concurrent_clients_coalesce_through_the_window() {
+    let (clock, _vc) = Clock::manual();
     let svc = Arc::new(
-        SelectionService::start_with(
+        SelectionService::start_full(
             1,
             64,
             Method::Multisection,
             HostBackend::factory(),
-            // cap 8 closes the window as soon as the whole burst is in
-            // hand; 250ms is straggler headroom, not a fixed wait
-            CoordinatorOptions { batch_window: Duration::from_millis(250), batch_cap: 8 },
+            CoordinatorOptions {
+                batch_window: Duration::from_millis(250),
+                batch_cap: 8,
+                adaptive: None,
+            },
+            clock,
+            CostModelPool::seeded(),
         )
         .unwrap(),
     );
@@ -195,14 +207,23 @@ fn eight_concurrent_clients_coalesce_through_the_window() {
 /// values a sequential run produces.
 #[test]
 fn mixed_singles_and_query_many_unified_plan_is_exact() {
+    // Virtual clock: the window cannot expire before all 5 requests
+    // (4 singles + 1 QueryMany) are in hand, so the mixed burst plans
+    // into one unified group deterministically.
+    let (clock, _vc) = Clock::manual();
     let svc = Arc::new(
-        SelectionService::start_with(
+        SelectionService::start_full(
             1,
             64,
             Method::Multisection,
             HostBackend::factory(),
-            // 5 requests total: 4 singles + 1 QueryMany; cap closes early
-            CoordinatorOptions { batch_window: Duration::from_millis(150), batch_cap: 5 },
+            CoordinatorOptions {
+                batch_window: Duration::from_millis(150),
+                batch_cap: 5,
+                adaptive: None,
+            },
+            clock,
+            CostModelPool::seeded(),
         )
         .unwrap(),
     );
@@ -260,27 +281,37 @@ fn mixed_singles_and_query_many_unified_plan_is_exact() {
 /// Regression (drained-batch reordering): a query fired before a drop of
 /// the same dataset must be answered even when both are collected into one
 /// batch at a busy worker — the old `(kind, id)` sort ran the drop first
-/// and failed the query with "unknown dataset". Window zero exercises the
-/// drain-only ingest path.
+/// and failed the query with "unknown dataset". Under virtual time the
+/// busy head query opens a window that cannot expire, so busy + query +
+/// drop deterministically form ONE batch (cap 3 closes it) on every run —
+/// the planner, not arrival luck, is what keeps the FIFO. (This test used
+/// to sleep 2 ms per round to line the batch up; the virtual clock makes
+/// the alignment a guarantee instead of a race.)
 #[test]
 fn query_then_drop_at_a_busy_worker_keeps_fifo() {
-    let svc = SelectionService::start_with(
+    let (clock, vc) = Clock::manual();
+    let svc = SelectionService::start_full(
         1,
         64,
         Method::Multisection,
         HostBackend::factory(),
-        CoordinatorOptions { batch_window: Duration::ZERO, batch_cap: 64 },
+        CoordinatorOptions {
+            batch_window: Duration::from_millis(250),
+            batch_cap: 3,
+            adaptive: None,
+        },
+        clock,
+        CostModelPool::seeded(),
     )
     .unwrap();
     let mut rng = Rng::seeded(307);
-    let busy_data = Distribution::Normal.sample_vec(&mut rng, 1 << 20);
+    let busy_data = Distribution::Normal.sample_vec(&mut rng, 1 << 12);
     let busy = svc.upload(busy_data, DType::F64).unwrap();
     for round in 0..5 {
         let id = svc.upload(vec![5.0, 1.0, 4.0, 2.0, 3.0], DType::F64).unwrap();
-        // occupy the worker so the query+drop pair queues up behind it
-        // and drains into a single batch
+        // the busy query heads the batch; query+drop queue up behind it
+        // inside the same (virtually frozen) window
         let slow = svc.query_async(busy, KSpec::Median, Method::Bisection).unwrap();
-        std::thread::sleep(Duration::from_millis(2));
         let rx = svc.query_async(id, KSpec::Median, Method::Multisection).unwrap();
         svc.drop_dataset(id).unwrap();
         let r = rx.recv().unwrap();
@@ -290,7 +321,12 @@ fn query_then_drop_at_a_busy_worker_keeps_fifo() {
             "round {round}"
         );
         assert!(slow.recv().unwrap().is_ok());
-        assert!(svc.query(id, KSpec::Median).is_err(), "round {round}: drop must stick");
+        // drop must stick: the follow-up probe opens a lone window that
+        // the cap will not fill — expire it by advancing virtual time
+        let rx = svc.query_async(id, KSpec::Median, Method::Multisection).unwrap();
+        vc.wait_for_waiters(1);
+        vc.advance(Duration::from_millis(251));
+        assert!(rx.recv().unwrap().is_err(), "round {round}: drop must stick");
     }
     svc.shutdown();
 }
@@ -312,6 +348,219 @@ fn drop_dataset_sync_acks_under_load() {
         assert!(svc.drop_dataset_sync(id).is_err(), "double drop reports unknown dataset");
     }
     svc.shutdown();
+}
+
+/// Acceptance: the *adaptive* controller matches the fixed window's
+/// coalescing on a real 8-thread burst — the fresh controller's min-window
+/// (frozen virtual time) holds the worker until the cap closes, whatever
+/// the thread scheduler does — then widens, and idle traffic decays it
+/// back to zero without ever blowing the SLA.
+#[test]
+fn adaptive_controller_coalesces_a_threaded_burst_and_respects_the_sla() {
+    let sla = Duration::from_millis(250);
+    let (clock, vc) = Clock::manual();
+    let svc = Arc::new(
+        SelectionService::start_full(
+            1,
+            64,
+            Method::Multisection,
+            HostBackend::factory(),
+            CoordinatorOptions {
+                batch_window: Duration::ZERO,
+                batch_cap: 8,
+                adaptive: Some(AdaptiveWindow { latency_sla: sla, ..AdaptiveWindow::default() }),
+            },
+            clock,
+            CostModelPool::seeded(),
+        )
+        .unwrap(),
+    );
+    let mut rng = Rng::seeded(309);
+    let data = Distribution::Uniform.sample_vec(&mut rng, 1 << 14);
+    let want = sorted_median(&data);
+
+    let single = {
+        let mut ev = HostEvaluator::new(&data);
+        cp_select::select::median(&mut ev, Method::Multisection).unwrap();
+        ev.probes()
+    };
+
+    let id = svc.upload(data, DType::F64).unwrap();
+    let p0 = svc.metrics.snapshot().probes;
+    let barrier = Arc::new(Barrier::new(8));
+    let mut handles = Vec::new();
+    for _ in 0..8 {
+        let svc = svc.clone();
+        let barrier = barrier.clone();
+        handles.push(std::thread::spawn(move || {
+            barrier.wait();
+            svc.query(id, KSpec::Median).unwrap()
+        }));
+    }
+    for h in handles {
+        assert_eq!(h.join().unwrap().value, want);
+    }
+    let snap = svc.metrics.snapshot();
+    assert_eq!(snap.coalesced, 8, "adaptive window caught {} of 8 clients", snap.coalesced);
+    assert!(snap.probes - p0 < 8 * single, "burst must share ladder passes");
+    assert!(snap.window_us > 0 && snap.window_widen >= 1, "burst must widen: {snap}");
+    assert!(snap.window_us as u128 <= sla.as_micros(), "SLA violated: {snap}");
+
+    // idle decay back to a zero window
+    let mut rounds = 0;
+    while svc.metrics.snapshot().window_us > 0 {
+        rounds += 1;
+        assert!(rounds <= 32, "idle decay must terminate");
+        let w = svc.metrics.snapshot().window_us;
+        let rx = svc.query_async(id, KSpec::Median, Method::Multisection).unwrap();
+        vc.wait_for_waiters(1);
+        vc.advance_us(w + 1);
+        assert_eq!(rx.recv().unwrap().unwrap().value, want);
+    }
+    // an idle query at the closed window costs zero virtual time
+    let t0 = vc.now_us();
+    assert_eq!(svc.query(id, KSpec::Median).unwrap().value, want);
+    assert_eq!(vc.now_us(), t0);
+    if let Ok(s) = Arc::try_unwrap(svc) {
+        s.shutdown();
+    }
+}
+
+/// Every worker feeds the same [`CostModelPool`]: runs executed by
+/// different workers (sticky datasets route `id % workers`) land in one
+/// set of pooled statistics.
+#[test]
+fn one_pool_collects_runs_from_every_worker() {
+    let pool = CostModelPool::seeded();
+    let svc = SelectionService::start_full(
+        2,
+        16,
+        Method::Multisection,
+        HostBackend::factory(),
+        CoordinatorOptions::default(),
+        Clock::real(),
+        pool.clone(),
+    )
+    .unwrap();
+    let mut rng = Rng::seeded(310);
+    // ids 1 and 2 route to different workers (1 % 2 vs 2 % 2)
+    let id1 = svc.upload(Distribution::Normal.sample_vec(&mut rng, 2048), DType::F64).unwrap();
+    let id2 = svc.upload(Distribution::Uniform.sample_vec(&mut rng, 2048), DType::F64).unwrap();
+    assert_eq!(pool.samples(), 0, "uploads observe nothing");
+    svc.query_many(id1, vec![KSpec::Median; 3], Method::Multisection).unwrap();
+    svc.query_many(id2, vec![KSpec::Median; 3], Method::Multisection).unwrap();
+    assert_eq!(pool.samples(), 2, "both workers' shared runs must pool");
+    svc.shutdown();
+}
+
+/// The canonical synthetic stream (`testkit::synthetic_cost_runs`) in its
+/// passes-dominate regime: per-probe cost negligible, so the identifiable
+/// fit plans the widest ladder, far from the seed's 15.
+fn feed_overhead_heavy(pool: &CostModelPool) {
+    for (passes, rungs, total, n, wall) in cp_select::testkit::synthetic_cost_runs(1e-9, 1e-14) {
+        pool.observe_run(passes, rungs, total, n, wall);
+    }
+}
+
+/// Acceptance: a restarted service loads the pooled coefficients its
+/// predecessor persisted, and its first `MultisectOptions::for_evaluator`
+/// argmin matches the pre-restart fitted width — restarts start measured,
+/// not seeded.
+#[test]
+fn restarted_service_plans_with_the_persisted_fitted_width() {
+    let dir = std::env::temp_dir().join(format!("cp_select_sidecar_{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    let sidecar = dir.join("BENCH_select.cost_model.json");
+
+    // pre-restart service: its pool carries an identifiable measured
+    // stream (stand-in for a long serving run; deterministic timings so
+    // the fitted width is reproducible, unlike live host wall clocks)
+    let pool = CostModelPool::load_or_seed(&sidecar);
+    feed_overhead_heavy(&pool);
+    let mut rng = Rng::seeded(311);
+    let data = Distribution::Normal.sample_vec(&mut rng, 4096);
+    {
+        let svc = SelectionService::start_full(
+            1,
+            16,
+            Method::Multisection,
+            HostBackend::factory(),
+            CoordinatorOptions::default(),
+            Clock::real(),
+            pool.clone(),
+        )
+        .unwrap();
+        let id = svc.upload(data.clone(), DType::F64).unwrap();
+        let want = sorted_median(&data);
+        assert_eq!(svc.query(id, KSpec::Median).unwrap().value, want);
+        svc.shutdown(); // persists the sidecar
+    }
+    let fitted = pool.best_width(None);
+    assert_ne!(fitted, 15, "the fitted width must have left the seed");
+    assert!(sidecar.exists(), "shutdown must write the sidecar");
+
+    // restart: a fresh pool + service over the same sidecar
+    let pool2 = CostModelPool::load_or_seed(&sidecar);
+    let svc2 = SelectionService::start_full(
+        1,
+        16,
+        Method::Multisection,
+        HostBackend::factory(),
+        CoordinatorOptions::default(),
+        Clock::real(),
+        pool2.clone(),
+    )
+    .unwrap();
+    assert_eq!(pool2.samples(), pool.samples());
+    assert_eq!(
+        pool2.best_width(None),
+        fitted,
+        "restart must plan with the pre-restart fitted width"
+    );
+    // the width the restarted service's first shared run would plan with
+    let model = svc2.cost_pool().snapshot();
+    let ev = HostEvaluator::new(&data);
+    let opts = MultisectOptions::for_evaluator_with(&ev, &model);
+    assert_eq!(opts.probes_per_pass, fitted);
+    svc2.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// A truncated or garbage sidecar must log and fall back to the seed —
+/// never error the service out of starting or serving.
+#[test]
+fn corrupt_cost_model_sidecar_falls_back_to_the_seed_and_serves() {
+    let dir = std::env::temp_dir().join(format!("cp_select_corrupt_{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::create_dir_all(&dir).unwrap();
+    let sidecar = dir.join("BENCH_select.cost_model.json");
+
+    // garbage, then a truncated-but-valid-prefix document
+    let mut m = PassCostModel::seeded();
+    m.observe_run(4, 60, 5, 1 << 12, Duration::from_millis(1));
+    let valid = m.to_json();
+    for corrupt in ["∞ not json ∞".to_string(), valid[..valid.len() / 2].to_string()] {
+        std::fs::write(&sidecar, &corrupt).unwrap();
+        let pool = CostModelPool::load_or_seed(&sidecar);
+        assert_eq!(pool.samples(), 0, "corrupt sidecar must seed, not load");
+        assert_eq!(pool.best_width(None), 15);
+        let svc = SelectionService::start_full(
+            1,
+            16,
+            Method::Multisection,
+            HostBackend::factory(),
+            CoordinatorOptions::default(),
+            Clock::real(),
+            pool,
+        )
+        .unwrap();
+        let id = svc.upload(vec![9.0, 1.0, 5.0], DType::F64).unwrap();
+        assert_eq!(svc.query(id, KSpec::Median).unwrap().value, 5.0);
+        svc.shutdown(); // overwrites the corrupt file with valid statistics
+        let healed = std::fs::read_to_string(&sidecar).unwrap();
+        assert!(PassCostModel::from_json(&healed).is_ok(), "shutdown must heal the sidecar");
+    }
+    std::fs::remove_dir_all(&dir).ok();
 }
 
 #[test]
