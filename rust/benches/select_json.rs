@@ -91,6 +91,32 @@ fn check_against_baseline(bench: &SelectBench) {
             ibase.max(1_000)
         );
     }
+    // chaos/overload invariants (baselines written before the overload
+    // harness landed lack the key; skip silently then). The counts are
+    // exact consequences of the scripted admission math, so they gate by
+    // equality — any drift means admission, deadlines, or fault isolation
+    // changed behavior.
+    if let Some(obase) = base.get_opt("overload") {
+        let o = &bench.overload;
+        for (key, got) in [
+            ("tenants", o.tenants as u64),
+            ("submitted", o.submitted as u64),
+            ("shed", o.shed),
+            ("deadline_exceeded", o.deadline_exceeded),
+            ("worker_faults", o.worker_faults),
+            ("ok", o.ok as u64),
+        ] {
+            let want = obase.get(key).unwrap().as_usize().unwrap() as u64;
+            assert!(got == want, "overload.{key} drifted: {got} != baseline {want}");
+        }
+        let bound = obase.get("fairness_ratio_bound").unwrap().as_f64().unwrap();
+        assert!(
+            o.fairness_ratio <= bound,
+            "tenant fairness regressed: max/min per-tenant completion ratio \
+             {:.3} > bound {bound}",
+            o.fairness_ratio
+        );
+    }
     println!("regression check vs {path}: {checked} rows + coalescing within baseline");
 }
 
@@ -161,5 +187,14 @@ fn main() {
         a.idle_added_window_us
     );
     assert!(bench.rows.iter().all(|r| r.exact), "a method returned an inexact result");
+    // overload harness: every submitted request must resolve (a result or
+    // a typed shed/deadline/fault error — never a hung reply channel), and
+    // fair-share planning must bound cross-tenant completion-time skew
+    let o = &bench.overload;
+    assert!(o.all_resolved, "a request hung or its reply channel was dropped: {o:?}");
+    assert!(
+        o.fairness_ratio >= 1.0 && o.fairness_ratio <= 3.0,
+        "per-tenant completion skew out of bounds: {o:?}"
+    );
     check_against_baseline(&bench);
 }

@@ -10,7 +10,7 @@ pub mod toml;
 use std::path::{Path, PathBuf};
 use std::time::Duration;
 
-use crate::coordinator::{AdaptiveWindow, CoordinatorOptions};
+use crate::coordinator::{AdaptiveWindow, CoordinatorOptions, ShedPolicy, TenantQuota};
 use crate::runtime::Flavor;
 use crate::select::{DType, Method};
 use crate::{Error, Result};
@@ -52,6 +52,18 @@ pub struct Config {
     pub latency_sla_us: u64,
     /// Hard cap on requests collected into one planned batch.
     pub batch_cap: usize,
+    /// Full-queue behavior for queries (`[service] shed_policy`,
+    /// `"block"` or `"shed"`): `shed` fails fast with a typed
+    /// `Overloaded` error instead of blocking the caller.
+    pub shed_policy: ShedPolicy,
+    /// Per-tenant admission quota (`[service] tenant_rate_per_sec` +
+    /// optional `tenant_burst`, which defaults to the rate). Unset admits
+    /// everything.
+    pub tenant_quota: Option<TenantQuota>,
+    /// Per-worker residency cap (`[service] max_resident_datasets`):
+    /// `Some` wraps the backend in LRU eviction; evicted datasets answer
+    /// with a "re-upload" error. Zero is rejected at parse time.
+    pub max_resident_datasets: Option<usize>,
     /// Cost-model sidecar path (`[service] cost_model_sidecar`): when set,
     /// the service loads pooled pass-cost statistics from here at start
     /// and persists them on shutdown (conventionally
@@ -84,6 +96,9 @@ impl Default for Config {
             adaptive_window: true,
             latency_sla_us: 5_000,
             batch_cap: 64,
+            shed_policy: ShedPolicy::Block,
+            tenant_quota: None,
+            max_resident_datasets: None,
             cost_model_sidecar: None,
             hybrid_cp_iters: 7,
             guard_extremes: true,
@@ -153,6 +168,43 @@ impl Config {
         if let Some(v) = doc.get_int("service", "batch_cap")? {
             c.batch_cap = (v as usize).max(1);
         }
+        if let Some(v) = doc.get_str("service", "shed_policy")? {
+            c.shed_policy = ShedPolicy::parse(&v)?;
+        }
+        let rate = doc.get_float("service", "tenant_rate_per_sec")?;
+        let burst = doc.get_float("service", "tenant_burst")?;
+        match (rate, burst) {
+            (Some(rate), burst) => {
+                let rate_ok = rate.is_finite() && rate > 0.0;
+                if !rate_ok {
+                    return Err(Error::Parse(format!(
+                        "tenant_rate_per_sec must be finite and > 0, got {rate}"
+                    )));
+                }
+                let burst = burst.unwrap_or(rate);
+                let burst_ok = burst.is_finite() && burst >= 1.0;
+                if !burst_ok {
+                    return Err(Error::Parse(format!(
+                        "tenant_burst must be finite and >= 1, got {burst}"
+                    )));
+                }
+                c.tenant_quota = Some(TenantQuota { rate_per_sec: rate, burst });
+            }
+            (None, Some(_)) => {
+                return Err(Error::Parse(
+                    "tenant_burst requires tenant_rate_per_sec".to_string(),
+                ));
+            }
+            (None, None) => {}
+        }
+        if let Some(v) = doc.get_int("service", "max_resident_datasets")? {
+            if v < 1 {
+                return Err(Error::Parse(format!(
+                    "max_resident_datasets must be at least 1, got {v}"
+                )));
+            }
+            c.max_resident_datasets = Some(v as usize);
+        }
         if let Some(v) = doc.get_int("bench", "reps")? {
             c.bench_reps = (v as usize).max(1);
         }
@@ -176,6 +228,9 @@ impl Config {
                 latency_sla: Duration::from_micros(self.latency_sla_us),
                 ..AdaptiveWindow::default()
             }),
+            shed_policy: self.shed_policy,
+            tenant_quota: self.tenant_quota,
+            queue_cap: Some(self.queue_depth),
         }
     }
 }
@@ -285,5 +340,42 @@ mod tests {
         assert!(Config::parse("[select]\nmethod = \"warp-speed\"\n").is_err());
         assert!(Config::parse("[select]\ndtype = \"f16\"\n").is_err());
         assert!(Config::parse("[runtime]\nkernel_flavor = \"cuda\"\n").is_err());
+    }
+
+    #[test]
+    fn overload_keys_parse_and_reach_coordinator_options() {
+        let c = Config::parse(
+            "[service]\nshed_policy = \"shed\"\ntenant_rate_per_sec = 50.0\n\
+             tenant_burst = 10.0\nmax_resident_datasets = 8\nqueue_depth = 32\n",
+        )
+        .unwrap();
+        assert_eq!(c.shed_policy, ShedPolicy::Shed);
+        let q = c.tenant_quota.expect("quota set");
+        assert_eq!(q.rate_per_sec, 50.0);
+        assert_eq!(q.burst, 10.0);
+        assert_eq!(c.max_resident_datasets, Some(8));
+        let o = c.coordinator_options();
+        assert_eq!(o.shed_policy, ShedPolicy::Shed);
+        assert!(o.tenant_quota.is_some());
+        assert_eq!(o.queue_cap, Some(32), "config queue depth rides the options struct");
+    }
+
+    #[test]
+    fn tenant_burst_defaults_to_the_rate() {
+        let c = Config::parse("[service]\ntenant_rate_per_sec = 4.0\n").unwrap();
+        let q = c.tenant_quota.unwrap();
+        assert_eq!(q.rate_per_sec, 4.0);
+        assert_eq!(q.burst, 4.0);
+    }
+
+    #[test]
+    fn rejects_bad_overload_values() {
+        assert!(Config::parse("[service]\nshed_policy = \"drop\"\n").is_err());
+        assert!(Config::parse("[service]\ntenant_rate_per_sec = 0.0\n").is_err());
+        assert!(Config::parse("[service]\ntenant_rate_per_sec = -1.0\n").is_err());
+        assert!(Config::parse("[service]\ntenant_burst = 3.0\n").is_err(), "burst without rate");
+        assert!(Config::parse("[service]\ntenant_rate_per_sec = 2.0\ntenant_burst = 0.5\n")
+            .is_err());
+        assert!(Config::parse("[service]\nmax_resident_datasets = 0\n").is_err());
     }
 }

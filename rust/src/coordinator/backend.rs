@@ -24,6 +24,13 @@ pub trait DatasetBackend {
     fn dataset_len(&self, id: u64) -> Option<usize>;
     /// Human-readable backend kind (metrics / logs).
     fn kind(&self) -> &'static str;
+    /// Drain the count of capacity evictions performed since the last
+    /// call (pressure-driven, not client-requested drops). The worker
+    /// polls this after each batch into `Metrics::evictions`. Backends
+    /// without capacity pressure report none.
+    fn take_evictions(&mut self) -> u64 {
+        0
+    }
 }
 
 /// Factory invoked inside each worker thread.

@@ -6,8 +6,15 @@
 //! evicts the least-recently-used dataset when the cap is exceeded —
 //! queries for an evicted dataset fail with a clear "re-upload" error,
 //! which the client can act on (the usual cache-miss contract).
+//!
+//! Recency is an O(1) structure (a sequence-stamped queue plus a
+//! `HashMap` index), so touches on a hot serving path never scan the
+//! resident set; evictions are counted only when the inner backend
+//! confirms it actually dropped the dataset, and are reported upstream
+//! through [`DatasetBackend::take_evictions`] so the coordinator's
+//! `evictions` metric reflects live pressure.
 
-use std::collections::VecDeque;
+use std::collections::{HashMap, VecDeque};
 
 use super::backend::DatasetBackend;
 use crate::select::objective::{DType, Evaluator};
@@ -15,38 +22,78 @@ use crate::{Error, Result};
 
 pub struct LruBackend {
     inner: Box<dyn DatasetBackend>,
-    /// Most-recent at the back.
-    order: VecDeque<u64>,
+    /// `(seq, id)` in stamp order, most-recent at the back. Touching a
+    /// dataset pushes a fresh stamp and leaves the old entry behind as a
+    /// stale tombstone; [`LruBackend::evict_to_fit`] skips entries whose
+    /// stamp no longer matches `index`.
+    order: VecDeque<(u64, u64)>,
+    /// Live datasets: id → its current (latest) stamp.
+    index: HashMap<u64, u64>,
+    next_seq: u64,
     capacity: usize,
     evictions: u64,
+    /// Evictions since the last [`DatasetBackend::take_evictions`] drain.
+    pending_evictions: u64,
 }
 
 impl LruBackend {
-    pub fn new(inner: Box<dyn DatasetBackend>, capacity: usize) -> Self {
-        assert!(capacity >= 1);
-        LruBackend { inner, order: VecDeque::new(), capacity, evictions: 0 }
+    /// Wrap `inner` with a residency cap. `capacity` of zero is a
+    /// configuration error (a worker that can hold nothing can answer
+    /// nothing), reported as a typed error rather than a panic so config
+    /// and CLI paths degrade cleanly.
+    pub fn new(inner: Box<dyn DatasetBackend>, capacity: usize) -> Result<Self> {
+        if capacity == 0 {
+            return Err(crate::invalid_arg!("LRU capacity must be at least 1 dataset"));
+        }
+        Ok(LruBackend {
+            inner,
+            order: VecDeque::new(),
+            index: HashMap::new(),
+            next_seq: 0,
+            capacity,
+            evictions: 0,
+            pending_evictions: 0,
+        })
     }
 
+    /// Total evictions over this backend's lifetime.
     pub fn evictions(&self) -> u64 {
         self.evictions
     }
 
     pub fn resident(&self) -> usize {
-        self.order.len()
+        self.index.len()
     }
 
     fn touch(&mut self, id: u64) {
-        if let Some(pos) = self.order.iter().position(|&d| d == id) {
-            self.order.remove(pos);
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        self.order.push_back((seq, id));
+        self.index.insert(id, seq);
+        // Stale tombstones accumulate one per touch; compact once they
+        // outnumber live entries enough to matter (amortized O(1)).
+        if self.order.len() > 2 * self.index.len().max(self.capacity) {
+            let index = &self.index;
+            self.order.retain(|&(seq, id)| index.get(&id) == Some(&seq));
         }
-        self.order.push_back(id);
     }
 
     fn evict_to_fit(&mut self) {
-        while self.order.len() > self.capacity {
-            if let Some(victim) = self.order.pop_front() {
-                self.inner.drop_dataset(victim);
+        while self.index.len() > self.capacity {
+            let (seq, victim) = match self.order.pop_front() {
+                Some(front) => front,
+                None => return, // index/order diverged; nothing to evict
+            };
+            if self.index.get(&victim) != Some(&seq) {
+                continue; // stale tombstone of a touched or dropped dataset
+            }
+            self.index.remove(&victim);
+            // Count only confirmed drops: an inner backend that no longer
+            // holds the victim (e.g. it failed mid-upload) must not
+            // inflate the eviction metric.
+            if self.inner.drop_dataset(victim) {
                 self.evictions += 1;
+                self.pending_evictions += 1;
             }
         }
     }
@@ -61,7 +108,7 @@ impl DatasetBackend for LruBackend {
     }
 
     fn evaluator(&mut self, id: u64) -> Result<&mut dyn Evaluator> {
-        if !self.order.contains(&id) {
+        if !self.index.contains_key(&id) {
             return Err(Error::Service(format!(
                 "dataset {id} not resident (evicted or never uploaded); re-upload it"
             )));
@@ -71,18 +118,21 @@ impl DatasetBackend for LruBackend {
     }
 
     fn drop_dataset(&mut self, id: u64) -> bool {
-        if let Some(pos) = self.order.iter().position(|&d| d == id) {
-            self.order.remove(pos);
-        }
+        // the order entry becomes a stale tombstone; evict/compact skip it
+        self.index.remove(&id);
         self.inner.drop_dataset(id)
     }
 
     fn dataset_len(&self, id: u64) -> Option<usize> {
-        if self.order.contains(&id) {
+        if self.index.contains_key(&id) {
             self.inner.dataset_len(id)
         } else {
             None
         }
+    }
+
+    fn take_evictions(&mut self) -> u64 {
+        std::mem::take(&mut self.pending_evictions)
     }
 
     fn kind(&self) -> &'static str {
@@ -96,7 +146,7 @@ pub fn lru_factory(
     capacity: usize,
 ) -> super::backend::BackendFactory {
     std::sync::Arc::new(move |worker| {
-        Ok(Box::new(LruBackend::new(inner(worker)?, capacity)) as Box<dyn DatasetBackend>)
+        Ok(Box::new(LruBackend::new(inner(worker)?, capacity)?) as Box<dyn DatasetBackend>)
     })
 }
 
@@ -108,7 +158,12 @@ mod tests {
     use crate::select::Method;
 
     fn lru(cap: usize) -> LruBackend {
-        LruBackend::new(Box::<HostBackend>::default(), cap)
+        LruBackend::new(Box::<HostBackend>::default(), cap).unwrap()
+    }
+
+    #[test]
+    fn zero_capacity_is_a_typed_error() {
+        assert!(LruBackend::new(Box::<HostBackend>::default(), 0).is_err());
     }
 
     #[test]
@@ -150,6 +205,34 @@ mod tests {
     }
 
     #[test]
+    fn hot_touches_stay_correct_through_compaction() {
+        // Hammer one dataset with touches so the order queue accumulates
+        // stale stamps and compacts, then check eviction still picks the
+        // true LRU victim.
+        let mut b = lru(2);
+        b.upload(1, &[1.0], DType::F64).unwrap();
+        b.upload(2, &[2.0], DType::F64).unwrap();
+        for _ in 0..64 {
+            b.evaluator(2).unwrap();
+        }
+        assert!(b.order.len() <= 2 * b.index.len().max(b.capacity), "compaction must bound growth");
+        b.upload(3, &[3.0], DType::F64).unwrap(); // evicts 1, the cold one
+        assert!(b.evaluator(1).is_err());
+        assert!(b.evaluator(2).is_ok());
+        assert_eq!(b.evictions(), 1);
+    }
+
+    #[test]
+    fn take_evictions_drains_pending() {
+        let mut b = lru(1);
+        b.upload(1, &[1.0], DType::F64).unwrap();
+        b.upload(2, &[2.0], DType::F64).unwrap(); // evicts 1
+        assert_eq!(b.take_evictions(), 1);
+        assert_eq!(b.take_evictions(), 0, "drain must reset the pending count");
+        assert_eq!(b.evictions(), 1, "lifetime counter is unaffected by draining");
+    }
+
+    #[test]
     fn lru_through_the_service() {
         let svc = SelectionService::start(
             1,
@@ -164,6 +247,7 @@ mod tests {
         assert!(svc.query(a, KSpec::Median).is_err());
         assert_eq!(svc.query(b, KSpec::Median).unwrap().value, 5.0);
         assert_eq!(svc.query(c, KSpec::Median).unwrap().value, 8.0);
+        assert_eq!(svc.metrics.snapshot().evictions, 1, "live pressure reaches the metric");
         svc.shutdown();
     }
 }

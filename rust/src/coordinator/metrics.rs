@@ -1,7 +1,9 @@
 //! Service observability: lock-free counters and a log-bucketed latency
 //! histogram, in the style of a serving router's metrics endpoint.
 
+use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
 use std::time::Duration;
 
 use super::controller::WindowDecision;
@@ -30,6 +32,20 @@ pub struct Metrics {
     pub window_shrink: AtomicU64,
     /// Controller decisions cut short by the latency-SLA budget.
     pub window_sla_clamp: AtomicU64,
+    /// Requests rejected by admission control (queue full under
+    /// `ShedPolicy::Shed`, or tenant token bucket empty).
+    pub shed: AtomicU64,
+    /// Queries abandoned (before or between fused passes) because their
+    /// deadline passed.
+    pub deadline_exceeded: AtomicU64,
+    /// Backend panics caught by worker fault isolation; each failed one
+    /// batch step with typed errors instead of killing the worker.
+    pub worker_faults: AtomicU64,
+    /// Datasets evicted under capacity pressure (LRU backend), polled from
+    /// the backend after each batch.
+    pub evictions: AtomicU64,
+    /// In-flight queries per tenant (admitted but not yet replied to).
+    tenant_depth: Mutex<HashMap<u32, u64>>,
     latency_us: [AtomicU64; BUCKETS],
     latency_sum_us: AtomicU64,
 }
@@ -95,6 +111,36 @@ impl Metrics {
         };
     }
 
+    /// A query for `tenant` was admitted: bump its in-flight depth gauge.
+    pub fn tenant_enter(&self, tenant: u32) {
+        let mut map = self.tenant_depth.lock().unwrap_or_else(|e| e.into_inner());
+        *map.entry(tenant).or_insert(0) += 1;
+    }
+
+    /// A query for `tenant` was replied to (result or typed error): drop
+    /// its in-flight depth gauge.
+    pub fn tenant_exit(&self, tenant: u32) {
+        let mut map = self.tenant_depth.lock().unwrap_or_else(|e| e.into_inner());
+        if let Some(d) = map.get_mut(&tenant) {
+            *d = d.saturating_sub(1);
+            if *d == 0 {
+                map.remove(&tenant);
+            }
+        }
+    }
+
+    /// Current in-flight depth for one tenant.
+    pub fn tenant_depth(&self, tenant: u32) -> u64 {
+        let map = self.tenant_depth.lock().unwrap_or_else(|e| e.into_inner());
+        map.get(&tenant).copied().unwrap_or(0)
+    }
+
+    /// Deepest per-tenant in-flight depth right now (0 when idle).
+    pub fn max_tenant_depth(&self) -> u64 {
+        let map = self.tenant_depth.lock().unwrap_or_else(|e| e.into_inner());
+        map.values().copied().max().unwrap_or(0)
+    }
+
     pub fn snapshot(&self) -> Snapshot {
         Snapshot {
             requests: self.requests.load(Ordering::Relaxed),
@@ -108,6 +154,11 @@ impl Metrics {
             window_widen: self.window_widen.load(Ordering::Relaxed),
             window_shrink: self.window_shrink.load(Ordering::Relaxed),
             window_sla_clamp: self.window_sla_clamp.load(Ordering::Relaxed),
+            shed: self.shed.load(Ordering::Relaxed),
+            deadline_exceeded: self.deadline_exceeded.load(Ordering::Relaxed),
+            worker_faults: self.worker_faults.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+            max_tenant_depth: self.max_tenant_depth(),
             latency_samples: self.count(),
             mean_latency_us: self.mean_latency_us(),
             p50_us: self.latency_quantile_us(0.5),
@@ -135,6 +186,16 @@ pub struct Snapshot {
     pub window_shrink: u64,
     /// Adaptive-controller decisions clamped by the latency SLA.
     pub window_sla_clamp: u64,
+    /// Requests shed by admission control (queue full / tenant bucket).
+    pub shed: u64,
+    /// Queries abandoned past their deadline.
+    pub deadline_exceeded: u64,
+    /// Backend panics caught and contained by worker fault isolation.
+    pub worker_faults: u64,
+    /// Capacity evictions performed by a pressure-managed backend.
+    pub evictions: u64,
+    /// Deepest per-tenant in-flight depth at snapshot time.
+    pub max_tenant_depth: u64,
     /// Latency samples recorded — one per executed *run*, so strictly
     /// fewer than `queries` when coalescing shares runs.
     pub latency_samples: u64,
@@ -149,6 +210,7 @@ impl std::fmt::Display for Snapshot {
             f,
             "requests={} uploads={} queries={} errors={} probes={} batched={} \
              coalesced={} window(us={} widen={} shrink={} clamps={}) \
+             overload(shed={} deadlines={} faults={} evictions={} depth={}) \
              latency(runs={} mean={:.0}us p50<{}us p99<{}us)",
             self.requests,
             self.uploads,
@@ -161,6 +223,11 @@ impl std::fmt::Display for Snapshot {
             self.window_widen,
             self.window_shrink,
             self.window_sla_clamp,
+            self.shed,
+            self.deadline_exceeded,
+            self.worker_faults,
+            self.evictions,
+            self.max_tenant_depth,
             self.latency_samples,
             self.mean_latency_us,
             self.p50_us,
@@ -214,6 +281,41 @@ mod tests {
         assert!(s.contains("requests=0"));
         assert!(s.contains("latency"));
         assert!(s.contains("window(us=0"));
+    }
+
+    #[test]
+    fn tenant_depth_gauge_tracks_in_flight_queries() {
+        let m = Metrics::new();
+        assert_eq!(m.max_tenant_depth(), 0);
+        m.tenant_enter(1);
+        m.tenant_enter(1);
+        m.tenant_enter(2);
+        assert_eq!(m.tenant_depth(1), 2);
+        assert_eq!(m.tenant_depth(2), 1);
+        assert_eq!(m.max_tenant_depth(), 2);
+        m.tenant_exit(1);
+        m.tenant_exit(2);
+        // exit below zero saturates instead of wrapping
+        m.tenant_exit(2);
+        assert_eq!(m.tenant_depth(1), 1);
+        assert_eq!(m.tenant_depth(2), 0);
+        assert_eq!(m.max_tenant_depth(), 1);
+    }
+
+    #[test]
+    fn overload_counters_reach_snapshot_and_display() {
+        let m = Metrics::new();
+        m.shed.fetch_add(3, Ordering::Relaxed);
+        m.deadline_exceeded.fetch_add(2, Ordering::Relaxed);
+        m.worker_faults.fetch_add(1, Ordering::Relaxed);
+        m.evictions.fetch_add(4, Ordering::Relaxed);
+        let s = m.snapshot();
+        assert_eq!(s.shed, 3);
+        assert_eq!(s.deadline_exceeded, 2);
+        assert_eq!(s.worker_faults, 1);
+        assert_eq!(s.evictions, 4);
+        let text = s.to_string();
+        assert!(text.contains("overload(shed=3 deadlines=2 faults=1 evictions=4 depth=0)"));
     }
 
     #[test]

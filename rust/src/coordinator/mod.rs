@@ -16,7 +16,10 @@ pub use backend::{BackendFactory, DatasetBackend, DeviceBackend, HostBackend};
 pub use controller::{AdaptiveWindow, WindowController, WindowDecision};
 pub use eviction::{lru_factory, LruBackend};
 pub use metrics::{Metrics, Snapshot};
-pub use service::{CoordinatorOptions, DatasetId, KSpec, QueryResult, SelectionService};
+pub use service::{
+    CoordinatorOptions, DatasetId, KSpec, QueryOptions, QueryResult, SelectionService, ShedPolicy,
+    TenantQuota,
+};
 // The cross-worker cost-model pool is defined next to `PassCostModel`
 // (select::gpu_model) but is coordinator infrastructure; re-export it here.
 pub use crate::select::gpu_model::CostModelPool;

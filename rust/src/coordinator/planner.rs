@@ -22,8 +22,17 @@
 //!   either side may still share one ladder without changing any answer.
 //! - **Shutdown** never jumps the queue: the plan executes fully, then the
 //!   worker exits.
+//! - **Fair share across tenants** — after the coalesce/barrier pass the
+//!   plan is re-ordered round-robin over tenants (in order of first
+//!   appearance), so a tenant with 1000 queued queries cannot starve a
+//!   tenant with 1: every tenant's head-of-line step executes within one
+//!   round. The re-order never violates a dataset's internal order (a
+//!   step only moves if every earlier step on its dataset has already
+//!   been emitted — a blocked tenant forfeits that round's turn), so
+//!   upload/drop barriers and group anchoring stay exactly as planned.
+//!   Single-tenant batches come out in arrival order, unchanged.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 
 use super::service::{DatasetId, Request};
 
@@ -44,10 +53,34 @@ pub(crate) enum Step {
         id: DatasetId,
         k: super::service::KSpec,
         method: crate::select::Method,
+        tenant: u32,
+        deadline_us: Option<u64>,
         reply: std::sync::mpsc::SyncSender<crate::Result<super::service::QueryResult>>,
     },
     /// Same-dataset probe-based queries unified into one shared-ladder run.
     Group { id: DatasetId, members: Vec<GroupMember> },
+}
+
+impl Step {
+    fn dataset(&self) -> DatasetId {
+        match self {
+            Step::Upload { id, .. }
+            | Step::Drop { id, .. }
+            | Step::Single { id, .. }
+            | Step::Group { id, .. } => *id,
+        }
+    }
+
+    /// Tenant a step is attributed to for fair-share ordering: a group
+    /// inherits its anchor (first) member's tenant; uploads and drops are
+    /// control-plane traffic attributed to tenant 0.
+    fn tenant(&self) -> u32 {
+        match self {
+            Step::Upload { .. } | Step::Drop { .. } => 0,
+            Step::Single { tenant, .. } => *tenant,
+            Step::Group { members, .. } => members.first().map_or(0, GroupMember::tenant),
+        }
+    }
 }
 
 /// A member of a coalesce group, in arrival order.
@@ -55,10 +88,14 @@ pub(crate) enum GroupMember {
     Single {
         k: super::service::KSpec,
         method: crate::select::Method,
+        tenant: u32,
+        deadline_us: Option<u64>,
         reply: std::sync::mpsc::SyncSender<crate::Result<super::service::QueryResult>>,
     },
     Many {
         specs: Vec<super::service::KSpec>,
+        tenant: u32,
+        deadline_us: Option<u64>,
         reply: std::sync::mpsc::SyncSender<crate::Result<Vec<super::service::QueryResult>>>,
     },
 }
@@ -69,6 +106,20 @@ impl GroupMember {
         match self {
             GroupMember::Single { .. } => 1,
             GroupMember::Many { specs, .. } => specs.len(),
+        }
+    }
+
+    pub(crate) fn tenant(&self) -> u32 {
+        match self {
+            GroupMember::Single { tenant, .. } | GroupMember::Many { tenant, .. } => *tenant,
+        }
+    }
+
+    pub(crate) fn deadline_us(&self) -> Option<u64> {
+        match self {
+            GroupMember::Single { deadline_us, .. } | GroupMember::Many { deadline_us, .. } => {
+                *deadline_us
+            }
         }
     }
 }
@@ -91,19 +142,73 @@ pub(crate) fn plan_batch(batch: Vec<Request>) -> (Vec<Step>, bool) {
                 open.remove(&id);
                 steps.push(Step::Drop { id, reply });
             }
-            Request::Query { id, k, method, reply } if method.needs_download() => {
-                steps.push(Step::Single { id, k, method, reply });
+            Request::Query { id, k, method, tenant, deadline_us, reply }
+                if method.needs_download() =>
+            {
+                steps.push(Step::Single { id, k, method, tenant, deadline_us, reply });
             }
-            Request::Query { id, k, method, reply } => {
-                push_member(&mut steps, &mut open, id, GroupMember::Single { k, method, reply });
+            Request::Query { id, k, method, tenant, deadline_us, reply } => {
+                let member = GroupMember::Single { k, method, tenant, deadline_us, reply };
+                push_member(&mut steps, &mut open, id, member);
             }
-            Request::QueryMany { id, specs, reply } => {
-                push_member(&mut steps, &mut open, id, GroupMember::Many { specs, reply });
+            Request::QueryMany { id, specs, tenant, deadline_us, reply } => {
+                let member = GroupMember::Many { specs, tenant, deadline_us, reply };
+                push_member(&mut steps, &mut open, id, member);
             }
             Request::Shutdown => shutdown = true,
         }
     }
-    (steps, shutdown)
+    (fair_order(steps), shutdown)
+}
+
+/// Round-robin the plan across tenants, preserving per-dataset order.
+///
+/// Tenants take turns in order of first appearance; on its turn a tenant
+/// emits its oldest unemitted step *if* every earlier planned step on that
+/// step's dataset has been emitted (otherwise it forfeits the turn — the
+/// barrier semantics of `plan_batch` are never violated). The globally
+/// oldest unemitted step is always eligible, so every round makes
+/// progress. With a single tenant (or an empty plan) the input order is
+/// returned untouched.
+fn fair_order(steps: Vec<Step>) -> Vec<Step> {
+    let tenants_of: Vec<u32> = steps.iter().map(Step::tenant).collect();
+    let mut tenants: Vec<u32> = Vec::new();
+    for &t in &tenants_of {
+        if !tenants.contains(&t) {
+            tenants.push(t);
+        }
+    }
+    if tenants.len() <= 1 {
+        return steps;
+    }
+    // Per-dataset planned index lists + emit cursors (order preservation).
+    let mut per_ds: HashMap<DatasetId, Vec<usize>> = HashMap::new();
+    for (i, s) in steps.iter().enumerate() {
+        per_ds.entry(s.dataset()).or_default().push(i);
+    }
+    let mut ds_pos: HashMap<DatasetId, usize> = HashMap::new();
+    // Per-tenant FIFO queues of step indices.
+    let mut queues: HashMap<u32, VecDeque<usize>> = HashMap::new();
+    for (i, &t) in tenants_of.iter().enumerate() {
+        queues.entry(t).or_default().push_back(i);
+    }
+    let mut slots: Vec<Option<Step>> = steps.into_iter().map(Some).collect();
+    let mut out: Vec<Step> = Vec::with_capacity(slots.len());
+    while out.len() < slots.len() {
+        for &t in &tenants {
+            let queue = queues.get_mut(&t).expect("every tenant has a queue");
+            let Some(&i) = queue.front() else { continue };
+            let ds = slots[i].as_ref().expect("unemitted step").dataset();
+            let pos = ds_pos.entry(ds).or_insert(0);
+            if per_ds[&ds][*pos] != i {
+                continue; // an earlier step on this dataset is still queued
+            }
+            queue.pop_front();
+            *pos += 1;
+            out.push(slots[i].take().expect("step emitted once"));
+        }
+    }
+    out
 }
 
 fn push_member(
@@ -145,13 +250,23 @@ mod tests {
     }
 
     fn query(id: DatasetId, method: Method) -> Request {
+        tenant_query(id, method, 0)
+    }
+
+    fn tenant_query(id: DatasetId, method: Method, tenant: u32) -> Request {
         let (reply, _rx) = sync_channel::<Result<QueryResult>>(1);
-        Request::Query { id, k: KSpec::Median, method, reply }
+        Request::Query { id, k: KSpec::Median, method, tenant, deadline_us: None, reply }
     }
 
     fn query_many(id: DatasetId, n: usize) -> Request {
         let (reply, _rx) = sync_channel::<Result<Vec<QueryResult>>>(1);
-        Request::QueryMany { id, specs: vec![KSpec::Median; n], reply }
+        Request::QueryMany {
+            id,
+            specs: vec![KSpec::Median; n],
+            tenant: 0,
+            deadline_us: None,
+            reply,
+        }
     }
 
     fn kinds(steps: &[Step]) -> Vec<String> {
@@ -232,5 +347,57 @@ mod tests {
             drop_req(2),
         ]);
         assert_eq!(kinds(&steps), ["group:2x2", "group:1x1", "drop:2"]);
+    }
+
+    #[test]
+    fn heavy_tenant_cannot_starve_a_light_one() {
+        // Tenant 1 floods four datasets; tenant 2's lone query arrived
+        // last but executes in the first round-robin round, not fifth.
+        let (steps, _) = plan_batch(vec![
+            tenant_query(10, Method::Multisection, 1),
+            tenant_query(11, Method::Multisection, 1),
+            tenant_query(12, Method::Multisection, 1),
+            tenant_query(13, Method::Multisection, 1),
+            tenant_query(20, Method::Multisection, 2),
+        ]);
+        assert_eq!(
+            kinds(&steps),
+            ["group:10x1", "group:20x1", "group:11x1", "group:12x1", "group:13x1"]
+        );
+    }
+
+    #[test]
+    fn fair_share_keeps_per_dataset_fifo_across_tenants() {
+        // Tenant 2's query on dataset 9 sits behind tenant 1's earlier
+        // group and the re-upload barrier: round-robin must not hoist it
+        // over either — tenants 0 and 2 forfeit turns until dataset 9's
+        // earlier steps have been emitted.
+        let (steps, _) = plan_batch(vec![
+            tenant_query(5, Method::Multisection, 1),
+            tenant_query(9, Method::Multisection, 1),
+            upload(9),
+            tenant_query(9, Method::Multisection, 2),
+        ]);
+        // Round 1: t1 → group:5; t0 (upload) and t2 both blocked on
+        // dataset 9's earlier steps. Round 2: t1 → group:9, unblocking
+        // the upload and then tenant 2 within the same round.
+        assert_eq!(
+            kinds(&steps),
+            ["group:5x1", "group:9x1", "upload:9", "group:9x1"]
+        );
+    }
+
+    #[test]
+    fn fair_share_round_robins_multi_step_tenants() {
+        let (steps, _) = plan_batch(vec![
+            tenant_query(10, Method::Multisection, 1),
+            tenant_query(11, Method::Multisection, 1),
+            tenant_query(20, Method::Multisection, 2),
+            tenant_query(21, Method::Multisection, 2),
+        ]);
+        assert_eq!(
+            kinds(&steps),
+            ["group:10x1", "group:20x1", "group:11x1", "group:21x1"]
+        );
     }
 }

@@ -38,9 +38,10 @@
 //!   via the [`BackendFactory`].
 
 use std::collections::HashMap;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TryRecvError};
-use std::sync::Arc;
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TryRecvError, TrySendError};
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -102,6 +103,11 @@ pub struct QueryResult {
     pub probes: u64,
     pub iterations: usize,
     pub wall: Duration,
+    /// Service-clock timestamp (µs) at which the run's replies were
+    /// issued. On a virtual clock this makes per-query completion times
+    /// exact, which is what the overload harness computes per-tenant
+    /// latency distributions from.
+    pub completed_us: u64,
 }
 
 pub type DatasetId = u64;
@@ -129,11 +135,104 @@ pub struct CoordinatorOptions {
     /// `latency_sla − p99(run)`. `None` keeps `batch_window` as the fixed
     /// manual override (and the zero library default).
     pub adaptive: Option<AdaptiveWindow>,
+    /// What happens when a worker's bounded ingest queue is full:
+    /// [`ShedPolicy::Block`] (library default — legacy backpressure)
+    /// blocks the caller; [`ShedPolicy::Shed`] fails fast with
+    /// [`Error::Overloaded`]. Queries only — uploads and drops are rare
+    /// control-plane traffic and always use blocking backpressure.
+    pub shed_policy: ShedPolicy,
+    /// `Some` enables the per-tenant token-bucket admission gate: a
+    /// tenant exceeding its refill rate (beyond its burst allowance) has
+    /// queries shed with [`Error::Overloaded`] before they reach any
+    /// queue. `None` (default) admits everything.
+    pub tenant_quota: Option<TenantQuota>,
+    /// Override of the per-worker bounded queue depth (`Some` wins over
+    /// the `queue_depth` start argument — lets config/CLI carry the cap
+    /// inside one options struct).
+    pub queue_cap: Option<usize>,
 }
 
 impl Default for CoordinatorOptions {
     fn default() -> Self {
-        CoordinatorOptions { batch_window: Duration::ZERO, batch_cap: 64, adaptive: None }
+        CoordinatorOptions {
+            batch_window: Duration::ZERO,
+            batch_cap: 64,
+            adaptive: None,
+            shed_policy: ShedPolicy::Block,
+            tenant_quota: None,
+            queue_cap: None,
+        }
+    }
+}
+
+/// Full-queue behavior for query dispatch (see
+/// [`CoordinatorOptions::shed_policy`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShedPolicy {
+    /// Block the caller until the worker drains (legacy backpressure).
+    Block,
+    /// Fail fast with [`Error::Overloaded`] carrying a retry hint.
+    Shed,
+}
+
+impl ShedPolicy {
+    /// Parse a config/CLI spelling.
+    pub fn parse(s: &str) -> Result<ShedPolicy> {
+        match s {
+            "block" => Ok(ShedPolicy::Block),
+            "shed" => Ok(ShedPolicy::Shed),
+            other => Err(Error::Parse(format!(
+                "shed_policy must be \"block\" or \"shed\", got {other:?}"
+            ))),
+        }
+    }
+}
+
+/// Per-tenant token-bucket admission quota: buckets hold at most `burst`
+/// tokens, refill at `rate_per_sec`, and each admitted query spends one.
+/// Refill runs on the service clock, so virtual-clock tests control
+/// admission exactly.
+#[derive(Debug, Clone, Copy)]
+pub struct TenantQuota {
+    pub rate_per_sec: f64,
+    pub burst: f64,
+}
+
+/// Per-query options: tenant attribution (admission + fair-share
+/// planning) and an optional deadline relative to dispatch.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct QueryOptions {
+    /// `None` runs the service default method.
+    pub method: Option<Method>,
+    /// Tenant this query is attributed to (0 = default tenant).
+    pub tenant: u32,
+    /// Give-up time relative to dispatch. Once passed, the coordinator
+    /// answers [`Error::DeadlineExceeded`] instead of (continuing to)
+    /// spend fused reductions; in-flight shared runs stop at the next
+    /// pass boundary.
+    pub deadline: Option<Duration>,
+}
+
+/// One tenant's token bucket (see [`TenantQuota`]).
+struct TokenBucket {
+    tokens: f64,
+    last_us: u64,
+}
+
+impl TokenBucket {
+    /// Try to spend one token at `now_us`; on refusal returns the
+    /// retry-after hint in µs.
+    fn admit(&mut self, quota: &TenantQuota, now_us: u64) -> std::result::Result<(), u64> {
+        let dt = now_us.saturating_sub(self.last_us) as f64 / 1e6;
+        self.tokens = (self.tokens + dt * quota.rate_per_sec).min(quota.burst);
+        self.last_us = now_us;
+        if self.tokens >= 1.0 {
+            self.tokens -= 1.0;
+            Ok(())
+        } else {
+            let deficit = 1.0 - self.tokens;
+            Err((deficit / quota.rate_per_sec.max(1e-9) * 1e6).ceil() as u64)
+        }
     }
 }
 
@@ -148,6 +247,9 @@ pub(crate) enum Request {
         id: DatasetId,
         k: KSpec,
         method: Method,
+        tenant: u32,
+        /// Absolute give-up time on the service clock (µs), if any.
+        deadline_us: Option<u64>,
         reply: SyncSender<Result<QueryResult>>,
     },
     /// A client-side batch: all specs resolve against one dataset in
@@ -157,6 +259,8 @@ pub(crate) enum Request {
     QueryMany {
         id: DatasetId,
         specs: Vec<KSpec>,
+        tenant: u32,
+        deadline_us: Option<u64>,
         reply: SyncSender<Result<Vec<QueryResult>>>,
     },
     Drop {
@@ -194,6 +298,10 @@ pub struct SelectionService {
     default_method: Method,
     clock: Clock,
     pool: Arc<CostModelPool>,
+    /// Shed/admission knobs (window knobs live in the workers).
+    opts: CoordinatorOptions,
+    /// Per-tenant token buckets (lazily created full).
+    admission: Mutex<HashMap<u32, TokenBucket>>,
 }
 
 impl SelectionService {
@@ -258,6 +366,22 @@ impl SelectionService {
         if opts.batch_cap == 0 {
             return Err(crate::invalid_arg!("batch_cap must be at least 1"));
         }
+        let queue_depth = opts.queue_cap.unwrap_or(queue_depth);
+        if queue_depth == 0 {
+            return Err(crate::invalid_arg!("queue depth must be at least 1"));
+        }
+        if let Some(q) = opts.tenant_quota {
+            let rate_ok = q.rate_per_sec.is_finite() && q.rate_per_sec > 0.0;
+            let burst_ok = q.burst.is_finite() && q.burst >= 1.0;
+            if !rate_ok || !burst_ok {
+                return Err(crate::invalid_arg!(
+                    "tenant quota needs rate_per_sec > 0 and burst >= 1 \
+                     (got rate={} burst={})",
+                    q.rate_per_sec,
+                    q.burst
+                ));
+            }
+        }
         let metrics = Arc::new(Metrics::new());
         let mut worker_txs = Vec::with_capacity(workers);
         let mut handles = Vec::with_capacity(workers);
@@ -282,6 +406,8 @@ impl SelectionService {
             default_method,
             clock,
             pool,
+            opts,
+            admission: Mutex::new(HashMap::new()),
         })
     }
 
@@ -303,25 +429,99 @@ impl SelectionService {
         Ok(())
     }
 
+    /// Admission-gated query dispatch: per-tenant token-bucket check,
+    /// then a queue send honoring the shed policy, tracking the tenant's
+    /// in-flight depth gauge across both outcomes.
+    fn dispatch_query(&self, id: DatasetId, tenant: u32, req: Request) -> Result<()> {
+        if let Some(quota) = self.opts.tenant_quota {
+            let now = self.clock.now_us();
+            let mut buckets = self.admission.lock().unwrap_or_else(|e| e.into_inner());
+            let bucket = buckets
+                .entry(tenant)
+                .or_insert_with(|| TokenBucket { tokens: quota.burst, last_us: now });
+            if let Err(retry_after_us) = bucket.admit(&quota, now) {
+                drop(buckets);
+                self.metrics.shed.fetch_add(1, Ordering::Relaxed);
+                return Err(Error::Overloaded { retry_after_us });
+            }
+        }
+        // Enter BEFORE the send: the worker may recv and reply (exiting
+        // the gauge) before this thread resumes, and the gauge must never
+        // underflow; un-enter on any failed send.
+        self.metrics.tenant_enter(tenant);
+        let sent = match self.opts.shed_policy {
+            ShedPolicy::Block => self
+                .route(id)
+                .send(req)
+                .map_err(|_| Error::Service("worker channel closed".into())),
+            ShedPolicy::Shed => match self.route(id).try_send(req) {
+                Ok(()) => Ok(()),
+                Err(TrySendError::Full(_)) => {
+                    self.metrics.shed.fetch_add(1, Ordering::Relaxed);
+                    // retry hint: roughly one run's p99 (floor 100µs
+                    // before any run has been measured)
+                    let retry_after_us = self.metrics.latency_quantile_us(0.99).max(100);
+                    Err(Error::Overloaded { retry_after_us })
+                }
+                Err(TrySendError::Disconnected(_)) => {
+                    Err(Error::Service("worker channel closed".into()))
+                }
+            },
+        };
+        if let Err(e) = sent {
+            self.metrics.tenant_exit(tenant);
+            return Err(e);
+        }
+        self.clock.notify();
+        Ok(())
+    }
+
+    /// Absolute service-clock deadline for a relative per-query deadline.
+    fn deadline_us(&self, deadline: Option<Duration>) -> Option<u64> {
+        deadline.map(|d| self.clock.now_us().saturating_add(d.as_micros() as u64))
+    }
+
     /// Upload a dataset; returns its id. Blocks until the device holds it.
     pub fn upload(&self, data: Vec<f64>, dtype: DType) -> Result<DatasetId> {
-        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-        self.metrics.requests.fetch_add(1, Ordering::Relaxed);
-        let (reply, rx) = sync_channel(1);
-        self.dispatch(id, Request::Upload { id, data: Arc::new(data), dtype, reply })?;
+        let (id, rx) = self.upload_async(data, dtype)?;
         recv_reply(&rx)??;
         self.metrics.uploads.fetch_add(1, Ordering::Relaxed);
         Ok(id)
     }
 
+    /// Enqueue an upload without waiting for the device: returns the new
+    /// dataset id plus the ack channel. Lets pipelined clients (and the
+    /// eviction tests) queue an upload behind in-flight work without a
+    /// second thread. Uploads are control-plane traffic: they use blocking
+    /// backpressure and bypass tenant admission.
+    pub fn upload_async(
+        &self,
+        data: Vec<f64>,
+        dtype: DType,
+    ) -> Result<(DatasetId, Receiver<Result<()>>)> {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        self.metrics.requests.fetch_add(1, Ordering::Relaxed);
+        let (reply, rx) = sync_channel(1);
+        self.dispatch(id, Request::Upload { id, data: Arc::new(data), dtype, reply })?;
+        Ok((id, rx))
+    }
+
     /// Blocking query with the service default method.
     pub fn query(&self, id: DatasetId, k: KSpec) -> Result<QueryResult> {
-        self.query_with(id, k, self.default_method)
+        self.query_opts(id, k, QueryOptions::default())
     }
 
     /// Blocking query with an explicit method.
     pub fn query_with(&self, id: DatasetId, k: KSpec, method: Method) -> Result<QueryResult> {
-        recv_reply(&self.query_async(id, k, method)?)?
+        self.query_opts(id, k, QueryOptions { method: Some(method), ..QueryOptions::default() })
+    }
+
+    /// Blocking query with full per-query options (method, tenant,
+    /// deadline). Sheds with [`Error::Overloaded`] before enqueueing when
+    /// the tenant is over quota or the queue is full under
+    /// [`ShedPolicy::Shed`].
+    pub fn query_opts(&self, id: DatasetId, k: KSpec, opts: QueryOptions) -> Result<QueryResult> {
+        recv_reply(&self.query_async_opts(id, k, opts)?)?
     }
 
     /// Solve many order statistics of one dataset in **shared** fused
@@ -338,9 +538,25 @@ impl SelectionService {
         specs: Vec<KSpec>,
         method: Method,
     ) -> Result<Vec<QueryResult>> {
+        self.query_many_opts(
+            id,
+            specs,
+            QueryOptions { method: Some(method), ..QueryOptions::default() },
+        )
+    }
+
+    /// [`SelectionService::query_many`] with per-query options. The whole
+    /// batch shares one tenant attribution and one deadline.
+    pub fn query_many_opts(
+        &self,
+        id: DatasetId,
+        specs: Vec<KSpec>,
+        opts: QueryOptions,
+    ) -> Result<Vec<QueryResult>> {
         if specs.is_empty() {
             return Ok(Vec::new());
         }
+        let method = opts.method.unwrap_or(self.default_method);
         if method.needs_download() {
             return Err(crate::invalid_arg!(
                 "query_many requires a probe-based method, got {}",
@@ -348,8 +564,13 @@ impl SelectionService {
             ));
         }
         self.metrics.requests.fetch_add(1, Ordering::Relaxed);
+        let deadline_us = self.deadline_us(opts.deadline);
         let (reply, rx) = sync_channel(1);
-        self.dispatch(id, Request::QueryMany { id, specs, reply })?;
+        self.dispatch_query(
+            id,
+            opts.tenant,
+            Request::QueryMany { id, specs, tenant: opts.tenant, deadline_us, reply },
+        )?;
         recv_reply(&rx)?
     }
 
@@ -360,9 +581,31 @@ impl SelectionService {
         k: KSpec,
         method: Method,
     ) -> Result<Receiver<Result<QueryResult>>> {
+        self.query_async_opts(
+            id,
+            k,
+            QueryOptions { method: Some(method), ..QueryOptions::default() },
+        )
+    }
+
+    /// Fire a query with per-query options; returns the reply channel.
+    /// Admission shedding reports through the returned `Result`, so a shed
+    /// query never allocates a reply channel a caller could hang on.
+    pub fn query_async_opts(
+        &self,
+        id: DatasetId,
+        k: KSpec,
+        opts: QueryOptions,
+    ) -> Result<Receiver<Result<QueryResult>>> {
         self.metrics.requests.fetch_add(1, Ordering::Relaxed);
+        let method = opts.method.unwrap_or(self.default_method);
+        let deadline_us = self.deadline_us(opts.deadline);
         let (reply, rx) = sync_channel(1);
-        self.dispatch(id, Request::Query { id, k, method, reply })?;
+        self.dispatch_query(
+            id,
+            opts.tenant,
+            Request::Query { id, k, method, tenant: opts.tenant, deadline_us, reply },
+        )?;
         Ok(rx)
     }
 
@@ -481,15 +724,17 @@ fn worker_loop(
                             "backend init failed: {e}"
                         ))));
                     }
-                    Request::Query { reply, .. } => {
+                    Request::Query { reply, tenant, .. } => {
                         let _ = reply.send(Err(Error::Service(format!(
                             "backend init failed: {e}"
                         ))));
+                        metrics.tenant_exit(tenant);
                     }
-                    Request::QueryMany { reply, .. } => {
+                    Request::QueryMany { reply, tenant, .. } => {
                         let _ = reply.send(Err(Error::Service(format!(
                             "backend init failed: {e}"
                         ))));
+                        metrics.tenant_exit(tenant);
                     }
                     Request::Drop { reply, .. } => {
                         if let Some(reply) = reply {
@@ -543,7 +788,13 @@ fn worker_loop(
         }
         let (steps, shutdown) = plan_batch(batch);
         for step in steps {
-            execute_step(backend.as_mut(), step, &metrics, &pool);
+            execute_step(backend.as_mut(), step, &metrics, &pool, &clock);
+        }
+        // Pressure-driven eviction accounting: backends that cap residency
+        // (e.g. [`super::LruBackend`]) report what each batch pushed out.
+        let evicted = backend.take_evictions();
+        if evicted > 0 {
+            metrics.evictions.fetch_add(evicted, Ordering::Relaxed);
         }
         if shutdown {
             break;
@@ -551,16 +802,27 @@ fn worker_loop(
     }
 }
 
-/// Execute one planned step against the worker's backend.
+/// Execute one planned step against the worker's backend. Backend panics
+/// are caught here (and in the group path): a fault fails the affected
+/// repliers with a typed error and bumps `worker_faults`, but the worker
+/// thread — and every other dataset it serves — keeps running.
 fn execute_step(
     backend: &mut dyn super::backend::DatasetBackend,
     step: Step,
     metrics: &Metrics,
     pool: &CostModelPool,
+    clock: &Clock,
 ) {
     match step {
         Step::Upload { id, data, dtype, reply } => {
-            let r = backend.upload(id, &data, dtype);
+            let r = catch_unwind(AssertUnwindSafe(|| backend.upload(id, &data, dtype)))
+                .unwrap_or_else(|p| {
+                    metrics.worker_faults.fetch_add(1, Ordering::Relaxed);
+                    Err(Error::Service(format!(
+                        "worker fault uploading dataset {id}: {}",
+                        panic_msg(&p)
+                    )))
+                });
             if r.is_err() {
                 metrics.errors.fetch_add(1, Ordering::Relaxed);
             }
@@ -576,10 +838,21 @@ fn execute_step(
                 });
             }
         }
-        Step::Single { id, k, method, reply } => {
-            answer_single(backend, id, k, method, &reply, metrics);
+        Step::Single { id, k, method, tenant, deadline_us, reply } => {
+            answer_single(backend, id, k, method, tenant, deadline_us, &reply, metrics, clock);
         }
-        Step::Group { id, members } => execute_group(backend, id, members, metrics, pool),
+        Step::Group { id, members } => execute_group(backend, id, members, metrics, pool, clock),
+    }
+}
+
+/// Best-effort rendering of a caught panic payload.
+fn panic_msg(p: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "panic".to_string()
     }
 }
 
@@ -592,10 +865,13 @@ fn execute_group(
     members: Vec<GroupMember>,
     metrics: &Metrics,
     pool: &CostModelPool,
+    clock: &Clock,
 ) {
     if let [GroupMember::Single { .. }] = members.as_slice() {
-        if let Some(GroupMember::Single { k, method, reply }) = members.into_iter().next() {
-            answer_single(backend, id, k, method, &reply, metrics);
+        if let Some(GroupMember::Single { k, method, tenant, deadline_us, reply }) =
+            members.into_iter().next()
+        {
+            answer_single(backend, id, k, method, tenant, deadline_us, &reply, metrics, clock);
         }
         return;
     }
@@ -603,8 +879,9 @@ fn execute_group(
     if total_specs == 0 {
         // empty QueryMany is answered client-side; defensive only
         for m in members {
-            if let GroupMember::Many { reply, .. } = m {
+            if let GroupMember::Many { reply, tenant, .. } = m {
                 let _ = reply.send(Ok(Vec::new()));
+                metrics.tenant_exit(tenant);
             }
         }
         return;
@@ -617,24 +894,60 @@ fn execute_group(
         })
         .copied()
         .collect();
+    // The shared run cancels (at pass boundaries) only when EVERY member
+    // carries a deadline — a no-deadline member's work must never be
+    // abandoned — and then the latest deadline is the binding one.
+    let cancel_at: Option<u64> = members
+        .iter()
+        .map(|m| m.deadline_us())
+        .collect::<Option<Vec<_>>>()
+        .and_then(|ds| ds.into_iter().max());
     let t0 = Instant::now();
-    let mut results = solve_group(backend, id, &specs, pool);
+    let mut results =
+        catch_unwind(AssertUnwindSafe(|| solve_group(backend, id, &specs, pool, clock, cancel_at)))
+            .unwrap_or_else(|p| {
+                metrics.worker_faults.fetch_add(1, Ordering::Relaxed);
+                let msg = panic_msg(&p);
+                specs
+                    .iter()
+                    .map(|_| {
+                        Err(Error::Service(format!("worker fault solving dataset {id}: {msg}")))
+                    })
+                    .collect()
+            });
     let wall = t0.elapsed();
+    // Per-member deadline override: a member whose own deadline passed
+    // while the shared run served the rest reports DeadlineExceeded even
+    // though its value happened to resolve.
+    let now = clock.now_us();
+    let mut idx = 0usize;
+    for m in &members {
+        let deadline = m.deadline_us();
+        for _ in 0..m.spec_count() {
+            if let (Some(d), Some(slot)) = (deadline, results.get_mut(idx)) {
+                if now > d && slot.is_ok() {
+                    *slot = Err(Error::DeadlineExceeded { late_us: now - d });
+                }
+            }
+            idx += 1;
+        }
+    }
     if total_specs > 1 {
         metrics.coalesced.fetch_add(total_specs as u64, Ordering::Relaxed);
     }
-    account_run(metrics, wall, &mut results);
+    account_run(metrics, wall, now, &mut results);
     let mut it = results.into_iter();
     for m in members {
         match m {
-            GroupMember::Single { reply, .. } => {
-                let _ = reply.send(it.next().expect("one result per spec"));
+            GroupMember::Single { tenant, reply, .. } => {
+                let _ = reply.send(it.next().unwrap_or_else(|| mismatch_error(id, metrics)));
+                metrics.tenant_exit(tenant);
             }
-            GroupMember::Many { specs, reply } => {
+            GroupMember::Many { specs, tenant, reply, .. } => {
                 let mut ok = Vec::with_capacity(specs.len());
                 let mut first_err = None;
                 for _ in 0..specs.len() {
-                    match it.next().expect("one result per spec") {
+                    match it.next().unwrap_or_else(|| mismatch_error(id, metrics)) {
                         Ok(q) => ok.push(q),
                         Err(e) => {
                             if first_err.is_none() {
@@ -647,9 +960,20 @@ fn execute_group(
                     None => Ok(ok),
                     Some(e) => Err(e),
                 });
+                metrics.tenant_exit(tenant);
             }
         }
     }
+}
+
+/// A plan/result count mismatch is a coordinator bug; it must fail the
+/// affected repliers with a typed error — never panic the worker and
+/// strand every waiting channel on the queue behind it.
+fn mismatch_error(id: DatasetId, metrics: &Metrics) -> Result<QueryResult> {
+    metrics.errors.fetch_add(1, Ordering::Relaxed);
+    Err(Error::Service(format!(
+        "internal: plan/result count mismatch for dataset {id}; batch failed"
+    )))
 }
 
 /// Per-run service accounting shared by every reply path: ONE latency
@@ -658,14 +982,23 @@ fn execute_group(
 /// instead of N copies of each shared wall time inflating mean/p50/p99 —
 /// then per-query counting: every member counts toward `queries`,
 /// contributes its probe share, and is stamped with the run's wall time.
-fn account_run(metrics: &Metrics, wall: Duration, results: &mut [Result<QueryResult>]) {
+fn account_run(
+    metrics: &Metrics,
+    wall: Duration,
+    now_us: u64,
+    results: &mut [Result<QueryResult>],
+) {
     metrics.record_latency(wall);
     for r in results.iter_mut() {
         metrics.queries.fetch_add(1, Ordering::Relaxed);
         match r {
             Ok(q) => {
                 q.wall = wall;
+                q.completed_us = now_us;
                 metrics.probes.fetch_add(q.probes, Ordering::Relaxed);
+            }
+            Err(Error::DeadlineExceeded { .. }) => {
+                metrics.deadline_exceeded.fetch_add(1, Ordering::Relaxed);
             }
             Err(_) => {
                 metrics.errors.fetch_add(1, Ordering::Relaxed);
@@ -674,18 +1007,35 @@ fn account_run(metrics: &Metrics, wall: Duration, results: &mut [Result<QueryRes
     }
 }
 
+#[allow(clippy::too_many_arguments)]
 fn answer_single(
     backend: &mut dyn super::backend::DatasetBackend,
     id: DatasetId,
     k: KSpec,
     method: Method,
+    tenant: u32,
+    deadline_us: Option<u64>,
     reply: &SyncSender<Result<QueryResult>>,
     metrics: &Metrics,
+    clock: &Clock,
 ) {
     let t0 = Instant::now();
-    let mut out = run_query(backend, id, k, method);
-    account_run(metrics, t0.elapsed(), std::slice::from_mut(&mut out));
+    let now = clock.now_us();
+    let mut out = match deadline_us.filter(|&d| now > d) {
+        // expired while queued: answer typed, spend nothing on the device
+        Some(d) => Err(Error::DeadlineExceeded { late_us: now - d }),
+        None => catch_unwind(AssertUnwindSafe(|| run_query(backend, id, k, method)))
+            .unwrap_or_else(|p| {
+                metrics.worker_faults.fetch_add(1, Ordering::Relaxed);
+                Err(Error::Service(format!(
+                    "worker fault solving dataset {id}: {}",
+                    panic_msg(&p)
+                )))
+            }),
+    };
+    account_run(metrics, t0.elapsed(), clock.now_us(), std::slice::from_mut(&mut out));
     let _ = reply.send(out);
+    metrics.tenant_exit(tenant);
 }
 
 /// Answer a group of same-dataset specs through shared fused ladder rounds
@@ -700,14 +1050,19 @@ fn solve_group(
     id: DatasetId,
     specs: &[KSpec],
     pool: &CostModelPool,
+    clock: &Clock,
+    cancel_at: Option<u64>,
 ) -> Vec<Result<QueryResult>> {
     let n = match backend.dataset_len(id) {
         Some(n) => n,
         None => {
-            return specs
-                .iter()
-                .map(|_| Err(Error::Service(format!("unknown dataset {id}"))))
-                .collect();
+            // Route the miss through the backend's own evaluator error so
+            // capped backends report their typed re-upload contract.
+            let msg = match backend.evaluator(id) {
+                Err(e) => e.to_string(),
+                Ok(_) => format!("unknown dataset {id}"),
+            };
+            return specs.iter().map(|_| Err(Error::Service(msg.clone()))).collect();
         }
     };
     let ranks: Vec<Result<usize>> = specs.iter().map(|k| k.rank_for(n)).collect();
@@ -723,7 +1078,23 @@ fn solve_group(
             let model = pool.snapshot();
             let opts = select::MultisectOptions::for_evaluator_with(&*ev, &model);
             let t0 = Instant::now();
-            let out = select::multisection::multi_order_statistics(ev, &valid, &opts)?;
+            // Cooperative deadline: polled at every pass boundary, so a
+            // run that outlives `cancel_at` stops before its next fused
+            // pass rather than running to convergence.
+            let mut cancel = || match cancel_at {
+                Some(d) => {
+                    let now = clock.now_us();
+                    if now > d {
+                        Some(Error::DeadlineExceeded { late_us: now - d })
+                    } else {
+                        None
+                    }
+                }
+                None => None,
+            };
+            let out = select::multisection::multi_order_statistics_cancellable(
+                ev, &valid, &opts, &mut cancel,
+            )?;
             let reductions = ev.probes() - probes0;
             pool.observe_run(out.passes, out.rungs, reductions, n, t0.elapsed());
             Ok((out.values, out.passes, reductions))
@@ -757,21 +1128,26 @@ fn solve_group(
                             probes,
                             iterations: passes,
                             wall: Duration::ZERO, // filled by account_run
+                            completed_us: 0,      // filled by account_run
                         })
                     }
                 })
                 .collect()
         }
-        Err(e) => {
-            let msg = e.to_string();
-            ranks
-                .into_iter()
-                .map(|r| match r {
-                    Err(e) => Err(e),
-                    Ok(_) => Err(Error::Service(msg.clone())),
-                })
-                .collect()
-        }
+        Err(e) => ranks
+            .into_iter()
+            .map(|r| match r {
+                Err(re) => Err(re),
+                // keep the deadline type visible to clients; everything
+                // else degrades to a service error string
+                Ok(_) => Err(match &e {
+                    Error::DeadlineExceeded { late_us } => {
+                        Error::DeadlineExceeded { late_us: *late_us }
+                    }
+                    other => Error::Service(other.to_string()),
+                }),
+            })
+            .collect(),
     }
 }
 
@@ -781,11 +1157,12 @@ fn run_query(
     k: KSpec,
     method: Method,
 ) -> Result<QueryResult> {
-    let n = backend
-        .dataset_len(id)
-        .ok_or_else(|| Error::Service(format!("unknown dataset {id}")))?;
-    let rank = k.rank_for(n)?;
+    // Resolve the evaluator FIRST so a missing dataset reports the
+    // backend's own typed message — a capped backend ([`super::LruBackend`])
+    // says "evicted …; re-upload it", the contract clients act on.
     let ev = backend.evaluator(id)?;
+    let n = ev.n();
+    let rank = k.rank_for(n)?;
     let r = select::order_statistic(ev, rank, method)?;
     Ok(QueryResult {
         value: r.value,
@@ -794,6 +1171,7 @@ fn run_query(
         probes: r.probes,
         iterations: r.iterations,
         wall: Duration::ZERO, // filled by account_run
+        completed_us: 0,      // filled by account_run
     })
 }
 
@@ -971,7 +1349,7 @@ mod tests {
             CoordinatorOptions {
                 batch_window: Duration::from_millis(100),
                 batch_cap: 8,
-                adaptive: None,
+                ..Default::default()
             },
             clock,
             crate::select::CostModelPool::seeded(),
@@ -1025,7 +1403,7 @@ mod tests {
             CoordinatorOptions {
                 batch_window: Duration::from_millis(100),
                 batch_cap: 2,
-                adaptive: None,
+                ..Default::default()
             },
             clock,
             crate::select::CostModelPool::seeded(),
@@ -1071,6 +1449,7 @@ mod tests {
                     latency_sla: Duration::from_millis(250),
                     ..AdaptiveWindow::default()
                 }),
+                ..Default::default()
             },
             clock,
             crate::select::CostModelPool::seeded(),
@@ -1135,6 +1514,7 @@ mod tests {
                     latency_sla: Duration::from_millis(250),
                     ..AdaptiveWindow::default()
                 }),
+                ..Default::default()
             },
             clock,
             crate::select::CostModelPool::seeded(),
@@ -1236,6 +1616,47 @@ mod tests {
         // dropping an unknown dataset reports it
         assert!(svc.drop_dataset_sync(id).is_err());
         svc.shutdown();
+    }
+
+    #[test]
+    fn token_bucket_refills_on_the_clock() {
+        let quota = TenantQuota { rate_per_sec: 2.0, burst: 2.0 };
+        let mut b = TokenBucket { tokens: quota.burst, last_us: 0 };
+        assert!(b.admit(&quota, 0).is_ok());
+        assert!(b.admit(&quota, 0).is_ok());
+        let retry = b.admit(&quota, 0).unwrap_err();
+        assert_eq!(retry, 500_000, "one token at 2/s is half a second away");
+        // exactly half a second refills exactly one token
+        assert!(b.admit(&quota, 500_000).is_ok());
+        assert!(b.admit(&quota, 500_000).is_err());
+    }
+
+    #[test]
+    fn shed_policy_parse_spellings() {
+        assert_eq!(ShedPolicy::parse("block").unwrap(), ShedPolicy::Block);
+        assert_eq!(ShedPolicy::parse("shed").unwrap(), ShedPolicy::Shed);
+        assert!(ShedPolicy::parse("drop").is_err());
+    }
+
+    #[test]
+    fn bad_overload_options_are_rejected_at_start() {
+        let bad = |opts: CoordinatorOptions| {
+            SelectionService::start_with(1, 64, Method::Hybrid, HostBackend::factory(), opts)
+                .is_err()
+        };
+        assert!(bad(CoordinatorOptions { queue_cap: Some(0), ..Default::default() }));
+        assert!(bad(CoordinatorOptions {
+            tenant_quota: Some(TenantQuota { rate_per_sec: 0.0, burst: 1.0 }),
+            ..Default::default()
+        }));
+        assert!(bad(CoordinatorOptions {
+            tenant_quota: Some(TenantQuota { rate_per_sec: 1.0, burst: 0.5 }),
+            ..Default::default()
+        }));
+        assert!(bad(CoordinatorOptions {
+            tenant_quota: Some(TenantQuota { rate_per_sec: f64::NAN, burst: 1.0 }),
+            ..Default::default()
+        }));
     }
 
     #[test]

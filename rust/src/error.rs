@@ -28,6 +28,21 @@ pub enum Error {
     /// Coordinator/service failures (queue closed, worker died, ...).
     Service(String),
 
+    /// Admission control shed the request: the worker's ingest queue was
+    /// full or the tenant exhausted its token bucket. `retry_after_us` is
+    /// the service's estimate of when retrying is worthwhile.
+    Overloaded {
+        retry_after_us: u64,
+    },
+
+    /// The request's deadline passed before it was (fully) served; the
+    /// coordinator abandoned it rather than spend more fused passes on a
+    /// caller that has given up. `late_us` is how far past the deadline
+    /// the service was when it gave up.
+    DeadlineExceeded {
+        late_us: u64,
+    },
+
     /// I/O errors with path context.
     Io {
         path: String,
@@ -44,6 +59,12 @@ impl fmt::Display for Error {
             Error::InvalidArg(m) => write!(f, "invalid argument: {m}"),
             Error::Algorithm(m) => write!(f, "algorithm: {m}"),
             Error::Service(m) => write!(f, "service: {m}"),
+            Error::Overloaded { retry_after_us } => {
+                write!(f, "overloaded: shed by admission control; retry after {retry_after_us}us")
+            }
+            Error::DeadlineExceeded { late_us } => {
+                write!(f, "deadline exceeded: abandoned {late_us}us past the deadline")
+            }
             Error::Io { path, source } => write!(f, "io: {path}: {source}"),
         }
     }
@@ -93,6 +114,8 @@ impl fmt::Display for ErrorKind {
             ErrorKind::InvalidArg => "invalid-arg",
             ErrorKind::Algorithm => "algorithm",
             ErrorKind::Service => "service",
+            ErrorKind::Overloaded => "overloaded",
+            ErrorKind::DeadlineExceeded => "deadline-exceeded",
             ErrorKind::Io => "io",
         };
         f.write_str(s)
@@ -108,6 +131,8 @@ pub enum ErrorKind {
     InvalidArg,
     Algorithm,
     Service,
+    Overloaded,
+    DeadlineExceeded,
     Io,
 }
 
@@ -120,6 +145,8 @@ impl Error {
             Error::InvalidArg(_) => ErrorKind::InvalidArg,
             Error::Algorithm(_) => ErrorKind::Algorithm,
             Error::Service(_) => ErrorKind::Service,
+            Error::Overloaded { .. } => ErrorKind::Overloaded,
+            Error::DeadlineExceeded { .. } => ErrorKind::DeadlineExceeded,
             Error::Io { .. } => ErrorKind::Io,
         }
     }
@@ -143,6 +170,17 @@ mod tests {
         assert!(matches!(e, Error::InvalidArg(_)));
         let e = algo_err!("diverged after {} iters", 3);
         assert!(matches!(e, Error::Algorithm(_)));
+    }
+
+    #[test]
+    fn overload_and_deadline_variants_are_typed() {
+        let e = Error::Overloaded { retry_after_us: 250 };
+        assert_eq!(e.kind(), ErrorKind::Overloaded);
+        assert!(e.to_string().contains("retry after 250us"));
+        let e = Error::DeadlineExceeded { late_us: 40 };
+        assert_eq!(e.kind(), ErrorKind::DeadlineExceeded);
+        assert!(e.to_string().contains("40us past the deadline"));
+        assert_eq!(ErrorKind::DeadlineExceeded.to_string(), "deadline-exceeded");
     }
 
     #[test]

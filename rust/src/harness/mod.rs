@@ -380,12 +380,39 @@ pub struct AdaptiveWindowBench {
     pub idle_added_window_us: u64,
 }
 
+/// The chaos/overload experiment: a Zipf-weighted multi-tenant burst
+/// against a single worker held busy by a scripted long run, with one
+/// injected backend error, one injected panic and one expiring deadline —
+/// all on the virtual clock, so every count below is an exact function of
+/// the admission math and the fault script, not of scheduler timing.
+#[derive(Debug, Clone)]
+pub struct OverloadBench {
+    pub tenants: usize,
+    /// Burst queries submitted across all tenants (Zipf ~16/t).
+    pub submitted: usize,
+    /// Queries shed by per-tenant token-bucket admission (burst 3 at
+    /// frozen virtual time ⇒ exactly `submitted − 3·tenants`).
+    pub shed: u64,
+    pub deadline_exceeded: u64,
+    pub worker_faults: u64,
+    /// Queries that returned a value (admitted − deadline − error − panic).
+    pub ok: usize,
+    /// Every submitted request resolved — a result or a typed error; no
+    /// reply channel hung and the worker survived the injected faults.
+    pub all_resolved: bool,
+    /// max over tenants of per-tenant p99 completion time divided by the
+    /// min — the fair-share acceptance gate (arrival-order execution of
+    /// the same burst scores ~2–3× worse).
+    pub fairness_ratio: f64,
+}
+
 #[derive(Debug, Clone)]
 pub struct SelectBench {
     pub rows: Vec<SelectBenchRow>,
     pub coordinator: CoordinatorBench,
     pub window: WindowBench,
     pub adaptive: AdaptiveWindowBench,
+    pub overload: OverloadBench,
     /// Native fused-ladder width advertised by the benched evaluator
     /// (`None` on the host oracle): the adaptive probes-per-pass the
     /// multisection rows actually ran with on a device backend.
@@ -475,6 +502,7 @@ pub fn bench_select(
 
     let window = bench_window_coalescing(&data, 8, 250_000)?;
     let adaptive = bench_adaptive_window(&data, 8, 250_000)?;
+    let overload = bench_overload()?;
 
     Ok(SelectBench {
         rows,
@@ -485,7 +513,160 @@ pub fn bench_select(
         },
         window,
         adaptive,
+        overload,
         ladder_width_hint,
+    })
+}
+
+/// Drive the chaos/overload experiment (see [`OverloadBench`]): six
+/// tenants fire a Zipf-weighted burst (~16/t queries each, 41 total) at a
+/// one-worker service whose backend is held mid-pass by a scripted
+/// [`crate::testkit::Fault::HoldUntil`], in the most adversarial arrival
+/// order (all of tenant 1, then tenant 2, …). Admission: token buckets
+/// with burst 3 at frozen virtual time admit exactly 3 per tenant and
+/// shed the rest with `Error::Overloaded`. While the worker is held, one
+/// admitted query's deadline expires, and two others carry scripted
+/// faults (an error and a panic). Every count in the result is exact;
+/// the fairness ratio measures how evenly fair-share planning spreads
+/// completion times across tenants once the plug releases.
+pub fn bench_overload() -> Result<OverloadBench> {
+    use crate::coordinator::{
+        CoordinatorOptions, CostModelPool, KSpec, QueryOptions, SelectionService, ShedPolicy,
+        TenantQuota,
+    };
+    use crate::testkit::{Fault, FaultInjectingBackend, FaultScript};
+    use crate::Error;
+    use std::time::Duration;
+
+    const TENANTS: usize = 6;
+    const ADMIT_BURST: usize = 3;
+    const PASS_COST_US: u64 = 500;
+    const PLUG_RELEASE_US: u64 = 1_000;
+    // generous real-time bound so a hung reply channel fails loudly
+    // instead of wedging the bench (virtual-time work is real-time fast)
+    const RECV_TIMEOUT: Duration = Duration::from_secs(60);
+    let per_tenant: Vec<usize> = (1..=TENANTS).map(|t| 16usize.div_ceil(t)).collect();
+
+    let (clock, vc) = crate::testkit::Clock::manual();
+    let script = FaultScript::new(vc.clone(), PASS_COST_US);
+    let svc = SelectionService::start_full(
+        1,
+        64,
+        Method::Multisection,
+        FaultInjectingBackend::factory(script.clone()),
+        CoordinatorOptions {
+            batch_cap: 64,
+            shed_policy: ShedPolicy::Shed,
+            tenant_quota: Some(TenantQuota { rate_per_sec: 1.0, burst: ADMIT_BURST as f64 }),
+            ..Default::default()
+        },
+        clock,
+        CostModelPool::seeded(),
+    )?;
+
+    // The plug: a query whose first pass parks the worker on the virtual
+    // clock, so the whole burst arrives while it is provably busy.
+    let mut rng = Rng::seeded(0x0BAD_CAFE);
+    let plug = svc.upload(Distribution::Normal.sample_vec(&mut rng, 4096), DType::F64)?;
+    script.fault_at(plug, 0, Fault::HoldUntil(PLUG_RELEASE_US));
+
+    // One private dataset per burst query (uploads are control-plane
+    // traffic: they bypass admission and block until resident).
+    let mut datasets: Vec<Vec<u64>> = Vec::new();
+    for &n_q in &per_tenant {
+        let mut ids = Vec::new();
+        for _ in 0..n_q {
+            ids.push(svc.upload(Distribution::Normal.sample_vec(&mut rng, 512), DType::F64)?);
+        }
+        datasets.push(ids);
+    }
+
+    let plug_rx = svc.query_async(plug, KSpec::Median, Method::Multisection)?;
+    vc.wait_for_waiters(1); // worker parked inside the plug's held pass
+
+    // Scripted faults on the 3rd admitted query of tenants 2 and 3: a
+    // typed backend error and a panic the worker must contain.
+    script.fault_at(datasets[1][2], 0, Fault::Error("injected backend error".into()));
+    script.fault_at(datasets[2][2], 0, Fault::Panic("injected backend panic".into()));
+
+    // Adversarial arrival order: every tenant-1 query first, then tenant
+    // 2, and so on. Admission at frozen time takes the first ADMIT_BURST
+    // per tenant and sheds the rest synchronously.
+    let mut shed_local = 0u64;
+    let mut pending: Vec<(usize, std::sync::mpsc::Receiver<Result<_>>)> = Vec::new();
+    for (ti, ids) in datasets.iter().enumerate() {
+        let tenant = (ti + 1) as u32;
+        for (qi, &id) in ids.iter().enumerate() {
+            // tenant 1's 3rd admitted query expires while the plug still
+            // holds the worker (release at 1000 + one 500us pass > 1200)
+            let deadline =
+                (ti == 0 && qi == 2).then_some(Duration::from_micros(1_200));
+            let opts = QueryOptions { method: None, tenant, deadline };
+            match svc.query_async_opts(id, KSpec::Median, opts) {
+                Ok(rx) => pending.push((ti, rx)),
+                Err(Error::Overloaded { retry_after_us }) => {
+                    if retry_after_us == 0 {
+                        return Err(Error::Service("shed without a retry hint".into()));
+                    }
+                    shed_local += 1;
+                }
+                Err(e) => return Err(e),
+            }
+        }
+    }
+    if pending.len() != TENANTS * ADMIT_BURST {
+        return Err(Error::Service(format!(
+            "admission admitted {} queries, expected {}",
+            pending.len(),
+            TENANTS * ADMIT_BURST
+        )));
+    }
+
+    // Release the plug; the queued burst then executes as one drain batch
+    // under fair-share planning, each pass advancing the virtual clock.
+    vc.advance_us(PLUG_RELEASE_US);
+
+    let dropped = || Error::Service("overload-bench reply dropped or hung".into());
+    let mut ok = 0usize;
+    let mut max_done = vec![0u64; TENANTS];
+    for (ti, rx) in pending {
+        match rx.recv_timeout(RECV_TIMEOUT).map_err(|_| dropped())? {
+            Ok(r) => {
+                ok += 1;
+                max_done[ti] = max_done[ti].max(r.completed_us);
+            }
+            Err(
+                Error::DeadlineExceeded { .. } | Error::Service(_) | Error::Overloaded { .. },
+            ) => {}
+            Err(e) => return Err(e),
+        }
+    }
+    plug_rx.recv_timeout(RECV_TIMEOUT).map_err(|_| dropped())??;
+
+    // Per-tenant p99 over ≤3 samples is the max completion time; burst
+    // submission happened at virtual time 0, so completed_us IS latency.
+    let slowest = max_done.iter().copied().max().unwrap_or(0);
+    let fastest = max_done.iter().copied().filter(|&v| v > 0).min().unwrap_or(0);
+    if fastest == 0 {
+        return Err(Error::Service("a tenant finished no queries at all".into()));
+    }
+    let snap = svc.metrics.snapshot();
+    svc.shutdown();
+    if snap.shed != shed_local {
+        return Err(Error::Service(format!(
+            "shed metric {} disagrees with client-side count {shed_local}",
+            snap.shed
+        )));
+    }
+    Ok(OverloadBench {
+        tenants: TENANTS,
+        submitted: per_tenant.iter().sum(),
+        shed: snap.shed,
+        deadline_exceeded: snap.deadline_exceeded,
+        worker_faults: snap.worker_faults,
+        ok,
+        all_resolved: true, // every recv above returned within the bound
+        fairness_ratio: slowest as f64 / fastest as f64,
     })
 }
 
@@ -510,7 +691,7 @@ fn bench_window_coalescing(data: &[f64], clients: usize, window_us: u64) -> Resu
         CoordinatorOptions {
             batch_window: std::time::Duration::from_micros(window_us),
             batch_cap: clients,
-            adaptive: None,
+            ..Default::default()
         },
         clock,
         CostModelPool::seeded(),
@@ -566,6 +747,7 @@ fn bench_adaptive_window(
                 latency_sla: std::time::Duration::from_micros(latency_sla_us),
                 ..AdaptiveWindow::default()
             }),
+            ..Default::default()
         },
         clock,
         CostModelPool::seeded(),
@@ -734,6 +916,22 @@ mod tests {
         );
         assert!(b.adaptive.window_after_burst_us > 0, "{:?}", b.adaptive);
         assert_eq!(b.adaptive.idle_added_window_us, 0, "{:?}", b.adaptive);
+        // acceptance: the chaos/overload run resolves every request and its
+        // counts are the exact consequences of the scripted admission math
+        // (6 tenants × burst 3 admitted out of 41; one deadline, one error,
+        // one panic among the admitted)
+        assert!(b.overload.all_resolved, "{:?}", b.overload);
+        assert_eq!(b.overload.tenants, 6, "{:?}", b.overload);
+        assert_eq!(b.overload.submitted, 41, "{:?}", b.overload);
+        assert_eq!(b.overload.shed, 23, "{:?}", b.overload);
+        assert_eq!(b.overload.deadline_exceeded, 1, "{:?}", b.overload);
+        assert_eq!(b.overload.worker_faults, 1, "{:?}", b.overload);
+        assert_eq!(b.overload.ok, 15, "{:?}", b.overload);
+        assert!(
+            b.overload.fairness_ratio >= 1.0 && b.overload.fairness_ratio <= 3.0,
+            "fair-share must bound tenant skew: {:?}",
+            b.overload
+        );
         let json = report::select_bench_json(&b, "f64", "host");
         let parsed = crate::util::json::Json::parse(&json).unwrap();
         assert_eq!(parsed.get("schema").unwrap().as_str().unwrap(), "cp-select/bench_select/v1");
@@ -750,6 +948,10 @@ mod tests {
         assert_eq!(a.get("queries").unwrap().as_usize().unwrap(), 8);
         assert!(a.get("window_after_burst_us").unwrap().as_usize().unwrap() > 0);
         assert_eq!(a.get("idle_added_window_us").unwrap().as_usize().unwrap(), 0);
+        let o = parsed.get("overload").unwrap();
+        assert_eq!(o.get("tenants").unwrap().as_usize().unwrap(), 6);
+        assert_eq!(o.get("shed").unwrap().as_usize().unwrap(), 23);
+        assert!(o.get("fairness_ratio").unwrap().as_f64().unwrap() >= 1.0);
     }
 
     #[test]

@@ -156,10 +156,26 @@ pub fn select_bench_json(b: &SelectBench, dtype: &str, backend: &str) -> String 
     s.push_str(&format!(
         "  \"coordinator\": {{\"backend\": \"host\", \"queries\": {}, \
          \"concurrent_fused_reductions\": {}, \
-         \"sequential_fused_reductions\": {}}}\n",
+         \"sequential_fused_reductions\": {}}},\n",
         b.coordinator.queries,
         b.coordinator.concurrent_fused_reductions,
         b.coordinator.sequential_fused_reductions
+    ));
+    // chaos/overload invariants: the counts are exact consequences of the
+    // scripted admission math (see `bench_overload`), so the baseline gate
+    // compares them by equality; only the fairness ratio is a bound.
+    s.push_str(&format!(
+        "  \"overload\": {{\"backend\": \"host\", \"tenants\": {}, \"submitted\": {}, \
+         \"shed\": {}, \"deadline_exceeded\": {}, \"worker_faults\": {}, \"ok\": {}, \
+         \"all_resolved\": {}, \"fairness_ratio\": {:.4}, \"fairness_ratio_bound\": 3.0}}\n",
+        b.overload.tenants,
+        b.overload.submitted,
+        b.overload.shed,
+        b.overload.deadline_exceeded,
+        b.overload.worker_faults,
+        b.overload.ok,
+        b.overload.all_resolved,
+        b.overload.fairness_ratio
     ));
     s.push_str("}\n");
     s

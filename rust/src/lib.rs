@@ -126,6 +126,60 @@
 //! cannot expire early, and `VirtualClock::wait_for_waiters` sequences
 //! tests against a parked worker instead of against the scheduler.
 //!
+//! ## Overload behavior and degradation semantics
+//!
+//! The coordinator is overload-hardened: a service under pressure degrades
+//! into **typed, actionable errors** — never hung reply channels, dead
+//! workers, or unbounded queues. The contract, end to end:
+//!
+//! - **Admission control** — per-tenant token buckets
+//!   ([`coordinator::CoordinatorOptions::tenant_quota`], config `[service]
+//!   tenant_rate_per_sec` / `tenant_burst`, CLI `--tenant-rate` /
+//!   `--tenant-burst`) gate queries *before* they enqueue. Buckets refill
+//!   on the service clock (virtual in tests, so refill instants are
+//!   exact). An over-quota query is shed synchronously with
+//!   [`Error::Overloaded`]`{ retry_after_us }` — the hint says exactly
+//!   when a token will exist. Uploads and drops are control-plane traffic
+//!   and bypass admission.
+//! - **Backpressure policy** — `shed_policy` (config `[service]
+//!   shed_policy = "block" | "shed"`, CLI `--shed-policy`) picks what a
+//!   full ingest queue does: `Block` (default) applies classic
+//!   backpressure by blocking the caller; `Shed` rejects with
+//!   `Overloaded`, hinting retry after the observed p99 run latency.
+//!   `queue_cap` (config `queue_depth`, CLI `--queue-cap`) bounds the
+//!   queue per worker.
+//! - **Deadlines** — [`coordinator::QueryOptions::deadline`] is a
+//!   per-query budget, converted to an absolute instant at dispatch and
+//!   checked before the run starts *and* cooperatively between fused
+//!   passes; an expired query resolves with
+//!   [`Error::DeadlineExceeded`]`{ late_us }`. In a coalesced group the
+//!   shared run cancels only when **every** member carries a deadline
+//!   (a no-deadline member's work is never abandoned); a member whose own
+//!   deadline lapsed while the shared run served the rest still reports
+//!   `DeadlineExceeded`.
+//! - **Fair-share planning** — each drained batch is round-robined across
+//!   tenants (order of first appearance) without ever violating
+//!   per-dataset FIFO barriers, so one tenant's flood cannot starve
+//!   another's lone query (`planner::fair_order`).
+//! - **Worker fault isolation** — every backend execution is wrapped in
+//!   `catch_unwind`: a panicking evaluator pass fails *that batch's*
+//!   repliers with a typed `worker fault …` error, bumps `worker_faults`,
+//!   and the worker keeps serving the queue behind it.
+//! - **Pressure-driven eviction** — [`coordinator::lru_factory`] (config
+//!   `[service] max_resident_datasets`, CLI `--max-resident`) caps
+//!   resident datasets per worker with O(1) LRU bookkeeping. A query for
+//!   an evicted dataset resolves with a typed *re-upload* error — the
+//!   cache-miss contract — and confirmed evictions surface in the
+//!   `evictions` metric, racing in-flight queries safely.
+//!
+//! Observability: `Metrics`/`Snapshot` carry `shed`, `deadline_exceeded`,
+//! `worker_faults`, `evictions`, and a live per-tenant queue-depth gauge
+//! (`tenant_depth`/`max_tenant_depth`). The deterministic chaos harness
+//! (`harness::bench_overload`: Zipf-weighted multi-tenant burst, scripted
+//! faults, frozen virtual clock) gates these semantics in
+//! `BENCH_select.json` — counts by equality, tenant fairness by a
+//! max/min completion-ratio bound.
+//!
 //! ## The device ladder path and probe accounting
 //!
 //! The AOT artifact set carries a `fused_ladder(p)` kernel family (emitted

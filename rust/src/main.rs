@@ -23,7 +23,10 @@ use std::path::PathBuf;
 use std::process::ExitCode;
 
 use cp_select::config::Config;
-use cp_select::coordinator::{AdaptiveWindow, CostModelPool, HostBackend, KSpec, SelectionService};
+use cp_select::coordinator::{
+    lru_factory, AdaptiveWindow, CostModelPool, HostBackend, KSpec, SelectionService, ShedPolicy,
+    TenantQuota,
+};
 use cp_select::harness::{self, report, Backend, Runner, TableConfig};
 use cp_select::regression::{self, HostSelector};
 use cp_select::runtime::{Flavor, Runtime};
@@ -163,7 +166,10 @@ fn print_usage() {
          \x20             --dtype f32|f64 --n N --method M --dist D --seed S --out DIR\n\
          serve-demo:   --latency-sla-us US (adaptive window p99 budget, default)\n\
          \x20             --batch-window-us US (pin a fixed window instead)\n\
-         \x20             --batch-cap N --cost-model-sidecar FILE"
+         \x20             --batch-cap N --cost-model-sidecar FILE\n\
+         \x20             --shed-policy block|shed --queue-cap N (overload shedding)\n\
+         \x20             --tenant-rate R [--tenant-burst B] (per-tenant admission)\n\
+         \x20             --max-resident N (LRU-evict beyond N datasets per worker)"
     );
 }
 
@@ -344,6 +350,30 @@ fn cmd_serve_demo(opts: &Opts) -> Result<()> {
         copts.adaptive = None;
     }
     copts.batch_cap = opts.usize("batch-cap", copts.batch_cap)?;
+    // Overload hardening: shed policy, per-tenant admission, queue cap.
+    if let Some(policy) = opts.get("shed-policy") {
+        copts.shed_policy = ShedPolicy::parse(policy)?;
+    }
+    if let Some(cap) = opts.get("queue-cap") {
+        let cap: usize = cap
+            .parse()
+            .map_err(|_| cp_select::invalid_arg!("--queue-cap: bad integer {cap:?}"))?;
+        copts.queue_cap = Some(cap);
+    }
+    if let Some(rate) = opts.get("tenant-rate") {
+        let rate: f64 = rate
+            .parse()
+            .map_err(|_| cp_select::invalid_arg!("--tenant-rate: bad number {rate:?}"))?;
+        let burst = match opts.get("tenant-burst") {
+            Some(b) => b
+                .parse()
+                .map_err(|_| cp_select::invalid_arg!("--tenant-burst: bad number {b:?}"))?,
+            None => rate,
+        };
+        copts.tenant_quota = Some(TenantQuota { rate_per_sec: rate, burst });
+    } else if opts.get("tenant-burst").is_some() {
+        return Err(cp_select::invalid_arg!("--tenant-burst requires --tenant-rate"));
+    }
     // Cost-model pool: sidecar-bound when configured (`--cost-model-sidecar`
     // or `[service] cost_model_sidecar`) so a restart plans with this run's
     // measured pass costs; in-memory otherwise.
@@ -363,6 +393,22 @@ fn cmd_serve_demo(opts: &Opts) -> Result<()> {
             cfg.kernel_flavor,
         ),
         _ => HostBackend::factory(),
+    };
+    // Residency cap (`--max-resident` / `[service] max_resident_datasets`):
+    // wrap each worker's backend in LRU eviction under device-memory
+    // pressure; evicted datasets answer with a "re-upload" error.
+    let max_resident = match opts.get("max-resident") {
+        Some(v) => {
+            let v: usize = v
+                .parse()
+                .map_err(|_| cp_select::invalid_arg!("--max-resident: bad integer {v:?}"))?;
+            Some(v)
+        }
+        None => cfg.max_resident_datasets,
+    };
+    let factory = match max_resident {
+        Some(cap) => lru_factory(factory, cap),
+        None => factory,
     };
     let svc = SelectionService::start_full(
         cfg.workers,

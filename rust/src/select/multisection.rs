@@ -183,6 +183,23 @@ pub fn multi_order_statistics(
     ks: &[usize],
     opts: &MultisectOptions,
 ) -> Result<MultiOutcome> {
+    multi_order_statistics_cancellable(ev, ks, opts, &mut || None)
+}
+
+/// [`multi_order_statistics`] with a cooperative cancellation hook.
+///
+/// `cancel` is polled at every **pass boundary** (before each shared
+/// ladder pass and before each exact-fixup resolution) — never mid-pass,
+/// so a fused reduction already in flight always completes. Returning
+/// `Some(err)` aborts the run with that error; the coordinator uses this
+/// to stop spending fused reductions on queries whose deadline has
+/// passed.
+pub fn multi_order_statistics_cancellable(
+    ev: &mut dyn Evaluator,
+    ks: &[usize],
+    opts: &MultisectOptions,
+    cancel: &mut dyn FnMut() -> Option<crate::Error>,
+) -> Result<MultiOutcome> {
     let n = ev.n();
     if ks.is_empty() {
         return Ok(MultiOutcome { values: Vec::new(), passes: 0, rungs: 0 });
@@ -222,6 +239,9 @@ pub fn multi_order_statistics(
         let unresolved: Vec<usize> = (0..qs.len()).filter(|&i| qs[i].done.is_none()).collect();
         if unresolved.is_empty() {
             break;
+        }
+        if let Some(err) = cancel() {
+            return Err(err);
         }
         // Distribute the pass budget over *distinct* open brackets, so N
         // identical queries (e.g. N concurrent medians) ride one
@@ -289,6 +309,9 @@ pub fn multi_order_statistics(
     // Pass budget exhausted with open queries: finish them individually.
     for (i, q) in qs.iter_mut().enumerate() {
         if q.done.is_none() {
+            if let Some(err) = cancel() {
+                return Err(err);
+            }
             let v = match memo.get(&ks[i]) {
                 Some(&v) => v,
                 None => {
@@ -513,6 +536,42 @@ mod tests {
         let mut ev = HostEvaluator::new(&data);
         let out = multisection(&mut ev, 128, &opts).unwrap();
         assert_eq!(out.value, 127.0);
+    }
+
+    #[test]
+    fn cancellation_stops_at_a_pass_boundary() {
+        let mut rng = Rng::seeded(70);
+        let data = Distribution::Normal.sample_vec(&mut rng, 4096);
+        // cancel after two shared passes
+        let mut remaining = 2u32;
+        let mut ev = HostEvaluator::new(&data);
+        let err = multi_order_statistics_cancellable(
+            &mut ev,
+            &[2048, 100],
+            &MultisectOptions::default(),
+            &mut || {
+                if remaining == 0 {
+                    Some(crate::Error::DeadlineExceeded { late_us: 1 })
+                } else {
+                    remaining -= 1;
+                    None
+                }
+            },
+        )
+        .unwrap_err();
+        assert!(matches!(err, crate::Error::DeadlineExceeded { .. }));
+        // seed + exactly the two granted passes, nothing mid-pass
+        assert_eq!(ev.probes(), 3, "cancel lands on the pass boundary");
+        // never cancelling reproduces multi_order_statistics exactly
+        let mut ev = HostEvaluator::new(&data);
+        let out = multi_order_statistics_cancellable(
+            &mut ev,
+            &[2048],
+            &MultisectOptions::default(),
+            &mut || None,
+        )
+        .unwrap();
+        assert_eq!(out.values[0], sorted_median(&data));
     }
 
     #[test]

@@ -182,6 +182,28 @@ impl VirtualClock {
         }
     }
 
+    /// Park the calling thread until virtual time reaches `deadline_us`
+    /// (immediately returns if it already has). The sleeper counts toward
+    /// [`VirtualClock::waiters`], so a test can handshake with
+    /// [`VirtualClock::wait_for_waiters`]: fault-injection backends use
+    /// this to hold a worker *provably mid-execution* while the test
+    /// stages queues around it, then release it with an advance. Unlike
+    /// the receive park, a [`VirtualClock::notify`] does not wake it —
+    /// only time passing does.
+    pub fn sleep_until(&self, deadline_us: u64) {
+        let mut st = self.lock();
+        if st.now_us >= deadline_us {
+            return;
+        }
+        st.waiters += 1;
+        self.cv.notify_all(); // unblock wait_for_waiters observers
+        while st.now_us < deadline_us {
+            st = self.cv.wait(st).unwrap_or_else(|e| e.into_inner());
+        }
+        st.waiters -= 1;
+        self.cv.notify_all();
+    }
+
     fn generation(&self) -> u64 {
         self.lock().generation
     }
@@ -275,6 +297,29 @@ mod tests {
         drop(tx);
         vc.notify();
         assert!(matches!(t.join().unwrap(), Err(RecvTimeoutError::Disconnected)));
+    }
+
+    #[test]
+    fn sleep_until_parks_and_releases_on_advance() {
+        let (_clock, vc) = Clock::manual();
+        // already-passed deadline: immediate return, no waiter
+        vc.advance_us(10);
+        vc.sleep_until(5);
+        assert_eq!(vc.waiters(), 0);
+        let t = std::thread::spawn({
+            let vc = vc.clone();
+            move || {
+                vc.sleep_until(1_000);
+                vc.now_us()
+            }
+        });
+        vc.wait_for_waiters(1);
+        // a bare notify must NOT release a time-sleeper
+        vc.notify();
+        assert_eq!(vc.waiters(), 1);
+        vc.advance_us(2_000);
+        assert!(t.join().unwrap() >= 1_000);
+        assert_eq!(vc.waiters(), 0);
     }
 
     #[test]

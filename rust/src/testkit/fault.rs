@@ -1,0 +1,274 @@
+//! Deterministic fault and cost injection for coordinator chaos tests.
+//!
+//! [`FaultInjectingBackend`] is a host-memory [`DatasetBackend`] whose
+//! evaluators route every fused pass through a shared [`FaultScript`]:
+//! the script can make the Nth pass *on a given dataset* return an error,
+//! panic (exercising worker `catch_unwind` isolation), or park the worker
+//! on the virtual clock until a scripted release time ([`Fault::HoldUntil`]
+//! — the deterministic "worker busy" gate overload tests stage queues
+//! behind). Every pass also advances the virtual clock by a fixed
+//! per-pass cost, so run latencies are exact functions of pass counts:
+//! the chaos/overload harness measures per-tenant p99s with zero real
+//! sleeps and zero scheduler dependence.
+//!
+//! Faults are keyed by `(dataset id, per-dataset pass index)` rather than
+//! a global call counter, so a script stays valid even when unrelated
+//! runs change their pass counts.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex, MutexGuard};
+
+use crate::coordinator::{BackendFactory, DatasetBackend};
+use crate::select::objective::{
+    DType, Evaluator, HostEvaluator, InitStats, IntervalCounts, Neighbors, ProbeStats,
+};
+use crate::testkit::VirtualClock;
+use crate::{Error, Result};
+
+/// One scripted fault, consumed by the pass it targets.
+#[derive(Debug, Clone)]
+pub enum Fault {
+    /// The pass returns `Error::Service(msg)` instead of running.
+    Error(String),
+    /// The pass panics with `msg` (contained by worker fault isolation).
+    Panic(String),
+    /// The pass parks the worker on the virtual clock until the given
+    /// absolute virtual time, then runs normally. While parked the worker
+    /// counts as a clock waiter, so tests can `wait_for_waiters` on it.
+    HoldUntil(u64),
+}
+
+#[derive(Default)]
+struct ScriptState {
+    /// Per-dataset fused-pass counters.
+    calls: HashMap<u64, u64>,
+    /// Scheduled faults by (dataset, per-dataset pass index).
+    faults: HashMap<(u64, u64), Fault>,
+}
+
+/// Shared fault schedule + virtual pass-cost model for a
+/// [`FaultInjectingBackend`]. Clone the `Arc` into tests to script faults
+/// while the service runs.
+pub struct FaultScript {
+    clock: Arc<VirtualClock>,
+    /// Virtual microseconds charged (clock-advanced) per fused pass.
+    pass_cost_us: u64,
+    state: Mutex<ScriptState>,
+}
+
+impl FaultScript {
+    pub fn new(clock: Arc<VirtualClock>, pass_cost_us: u64) -> Arc<FaultScript> {
+        Arc::new(FaultScript { clock, pass_cost_us, state: Mutex::new(ScriptState::default()) })
+    }
+
+    fn lock(&self) -> MutexGuard<'_, ScriptState> {
+        self.state.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Schedule `fault` for the `pass`-th fused pass (0-based) on
+    /// `dataset`. Each scheduled fault fires at most once.
+    pub fn fault_at(&self, dataset: u64, pass: u64, fault: Fault) {
+        self.lock().faults.insert((dataset, pass), fault);
+    }
+
+    /// Total fused passes observed on `dataset` so far.
+    pub fn calls(&self, dataset: u64) -> u64 {
+        self.lock().calls.get(&dataset).copied().unwrap_or(0)
+    }
+
+    /// Account one fused pass on `dataset`: fire any scheduled fault,
+    /// then charge the virtual pass cost.
+    fn on_pass(&self, dataset: u64) -> Result<()> {
+        let fault = {
+            let mut st = self.lock();
+            let c = st.calls.entry(dataset).or_insert(0);
+            let idx = *c;
+            *c += 1;
+            st.faults.remove(&(dataset, idx))
+        };
+        match fault {
+            None => {}
+            Some(Fault::Error(msg)) => return Err(Error::Service(msg)),
+            Some(Fault::Panic(msg)) => panic!("{msg}"),
+            Some(Fault::HoldUntil(t_us)) => self.clock.sleep_until(t_us),
+        }
+        if self.pass_cost_us > 0 {
+            self.clock.advance_us(self.pass_cost_us);
+        }
+        Ok(())
+    }
+}
+
+/// Host evaluator wrapper that charges scripted costs/faults per pass.
+pub struct ScriptedEvaluator {
+    id: u64,
+    inner: HostEvaluator,
+    script: Arc<FaultScript>,
+}
+
+impl Evaluator for ScriptedEvaluator {
+    fn n(&self) -> usize {
+        self.inner.n()
+    }
+
+    fn dtype(&self) -> DType {
+        self.inner.dtype()
+    }
+
+    fn init_stats(&mut self) -> Result<InitStats> {
+        self.script.on_pass(self.id)?;
+        self.inner.init_stats()
+    }
+
+    fn probe(&mut self, y: f64) -> Result<ProbeStats> {
+        self.script.on_pass(self.id)?;
+        self.inner.probe(y)
+    }
+
+    fn probe_many(&mut self, ys: &[f64]) -> Result<Vec<ProbeStats>> {
+        self.script.on_pass(self.id)?;
+        self.inner.probe_many(ys)
+    }
+
+    fn neighbors(&mut self, y: f64) -> Result<Neighbors> {
+        self.script.on_pass(self.id)?;
+        self.inner.neighbors(y)
+    }
+
+    fn interval(&mut self, lo: f64, hi: f64) -> Result<IntervalCounts> {
+        self.script.on_pass(self.id)?;
+        self.inner.interval(lo, hi)
+    }
+
+    fn compact(&mut self, lo: f64, hi: f64) -> Result<Vec<f64>> {
+        self.inner.compact(lo, hi)
+    }
+
+    fn download(&mut self) -> Result<Vec<f64>> {
+        self.inner.download()
+    }
+
+    fn probes(&self) -> u64 {
+        self.inner.probes()
+    }
+}
+
+/// Host-memory backend whose evaluators obey a shared [`FaultScript`].
+pub struct FaultInjectingBackend {
+    datasets: HashMap<u64, ScriptedEvaluator>,
+    script: Arc<FaultScript>,
+}
+
+impl FaultInjectingBackend {
+    pub fn factory(script: Arc<FaultScript>) -> BackendFactory {
+        Arc::new(move |_worker| {
+            Ok(Box::new(FaultInjectingBackend {
+                datasets: HashMap::new(),
+                script: script.clone(),
+            }) as Box<dyn DatasetBackend>)
+        })
+    }
+}
+
+impl DatasetBackend for FaultInjectingBackend {
+    fn upload(&mut self, id: u64, data: &[f64], dtype: DType) -> Result<()> {
+        let inner = match dtype {
+            DType::F64 => HostEvaluator::new(data),
+            DType::F32 => HostEvaluator::new_f32(data),
+        };
+        self.datasets.insert(id, ScriptedEvaluator { id, inner, script: self.script.clone() });
+        Ok(())
+    }
+
+    fn evaluator(&mut self, id: u64) -> Result<&mut dyn Evaluator> {
+        self.datasets
+            .get_mut(&id)
+            .map(|e| e as &mut dyn Evaluator)
+            .ok_or_else(|| Error::Service(format!("unknown dataset {id}")))
+    }
+
+    fn drop_dataset(&mut self, id: u64) -> bool {
+        self.datasets.remove(&id).is_some()
+    }
+
+    fn dataset_len(&self, id: u64) -> Option<usize> {
+        self.datasets.get(&id).map(|e| e.n())
+    }
+
+    fn kind(&self) -> &'static str {
+        "fault-injecting"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::Clock;
+
+    fn backend(script: &Arc<FaultScript>) -> Box<dyn DatasetBackend> {
+        FaultInjectingBackend::factory(script.clone())(0).unwrap()
+    }
+
+    #[test]
+    fn passes_charge_virtual_cost() {
+        let (_clock, vc) = Clock::manual();
+        let script = FaultScript::new(vc.clone(), 250);
+        let mut b = backend(&script);
+        b.upload(1, &[3.0, 1.0, 2.0], DType::F64).unwrap();
+        let ev = b.evaluator(1).unwrap();
+        ev.init_stats().unwrap();
+        ev.probe(2.0).unwrap();
+        ev.probe_many(&[1.0, 2.0]).unwrap();
+        assert_eq!(vc.now_us(), 750, "three fused passes at 250us each");
+        assert_eq!(script.calls(1), 3);
+    }
+
+    #[test]
+    fn scripted_error_fires_once_on_the_right_pass() {
+        let (_clock, vc) = Clock::manual();
+        let script = FaultScript::new(vc, 0);
+        script.fault_at(1, 1, Fault::Error("injected".into()));
+        let mut b = backend(&script);
+        b.upload(1, &[1.0, 2.0], DType::F64).unwrap();
+        b.upload(2, &[1.0, 2.0], DType::F64).unwrap();
+        // dataset 2 is unaffected by dataset 1's script
+        b.evaluator(2).unwrap().probe(1.0).unwrap();
+        let ev = b.evaluator(1).unwrap();
+        ev.probe(1.0).unwrap(); // pass 0: clean
+        let err = ev.probe(1.0).unwrap_err(); // pass 1: injected
+        assert!(err.to_string().contains("injected"));
+        ev.probe(1.0).unwrap(); // pass 2: fault consumed
+    }
+
+    #[test]
+    fn scripted_panic_fires() {
+        let (_clock, vc) = Clock::manual();
+        let script = FaultScript::new(vc, 0);
+        script.fault_at(7, 0, Fault::Panic("boom".into()));
+        let mut b = backend(&script);
+        b.upload(7, &[1.0], DType::F64).unwrap();
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _ = b.evaluator(7).unwrap().init_stats();
+        }));
+        assert!(r.is_err(), "pass 0 on dataset 7 panics");
+    }
+
+    #[test]
+    fn hold_until_parks_the_calling_thread() {
+        let (_clock, vc) = Clock::manual();
+        let script = FaultScript::new(vc.clone(), 100);
+        script.fault_at(1, 0, Fault::HoldUntil(5_000));
+        let t = std::thread::spawn({
+            let script = script.clone();
+            move || {
+                let mut b = backend(&script);
+                b.upload(1, &[2.0, 1.0], DType::F64).unwrap();
+                b.evaluator(1).unwrap().probe(1.5).unwrap();
+            }
+        });
+        vc.wait_for_waiters(1); // thread is provably parked mid-pass
+        vc.advance_us(5_000);
+        t.join().unwrap();
+        assert_eq!(vc.now_us(), 5_100, "release time plus one pass cost");
+    }
+}

@@ -10,8 +10,10 @@
 //! and actionable.
 
 pub mod clock;
+pub mod fault;
 
 pub use clock::{Clock, VirtualClock};
+pub use fault::{Fault, FaultInjectingBackend, FaultScript};
 
 use std::time::Duration;
 
