@@ -1,0 +1,245 @@
+//! In-repo static analysis: invariant lint for the conventions the
+//! coordinator's correctness rests on.
+//!
+//! The crate is offline and dependency-free, so this subsystem ships its
+//! own minimal tokenizer ([`tokenizer`]) and runs purely lexical rules
+//! ([`rules`]) over `rust/src` and `rust/tests`. It is wired to the
+//! `cp-select lint` subcommand and runs as a blocking CI leg.
+//!
+//! ## Rules
+//!
+//! - `clock_discipline` — no `Instant::now`/`SystemTime::now` outside the
+//!   wall-clock files (`testkit/clock.rs`, `util/timer.rs`, `main.rs`,
+//!   benches, harness) and no `thread::sleep` outside benches. All other
+//!   time flows through `testkit::Clock`, which is what keeps the
+//!   control plane deterministic under the virtual clock.
+//! - `poison_discipline` — every `.lock()` recovers from poisoning with
+//!   `unwrap_or_else(|e| e.into_inner())`; `.unwrap()`, `.expect(..)` and
+//!   `?` on lock results are findings.
+//! - `panic_boundary` — in `coordinator/service.rs`, `DatasetBackend`
+//!   method calls must sit inside a `catch_unwind` span (directly, or in
+//!   a function only ever entered through one), so a panicking backend is
+//!   contained as a worker fault instead of killing the worker thread.
+//! - `metrics_triple_entry` — every `pub … AtomicU64` counter on
+//!   `Metrics` also appears as a `Snapshot` field, is copied in
+//!   `Metrics::snapshot()`, and is rendered by `Display for Snapshot`.
+//! - `lock_order` — builds a cross-file lock-order graph from nested
+//!   `.lock()` scopes over the named lock fields and fails on cycles;
+//!   the runtime half of the same invariant is
+//!   [`crate::util::sync::OrderedMutex`].
+//!
+//! ## Pragmas
+//!
+//! A finding is suppressed by a plain `//` comment on the same line or
+//! the line directly above, of the form `lint: allow(<rule>) — <why>`.
+//! The justification is mandatory; a pragma naming an unknown rule or
+//! missing its justification is itself a finding (rule `pragma`, not
+//! suppressible). Doc comments (`///`, `//!`) are never read as pragmas,
+//! which is why this paragraph can spell the syntax out.
+
+pub mod rules;
+pub mod tokenizer;
+
+use std::collections::HashMap;
+use std::fmt;
+use std::path::{Path, PathBuf};
+
+use rules::FileTokens;
+use tokenizer::{tokenize, Token};
+
+/// Every rule the engine knows, in report order. `pragma` covers
+/// malformed suppression comments and cannot itself be suppressed.
+pub const RULE_NAMES: [&str; 6] = [
+    "clock_discipline",
+    "poison_discipline",
+    "panic_boundary",
+    "metrics_triple_entry",
+    "lock_order",
+    "pragma",
+];
+
+/// One file handed to the linter: a display path plus its full source.
+pub struct SourceFile {
+    pub path: String,
+    pub src: String,
+}
+
+/// One lint violation, anchored to a source line.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Finding {
+    pub rule: &'static str,
+    pub path: String,
+    pub line: u32,
+    pub message: String,
+}
+
+impl fmt::Display for Finding {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.path, self.line, self.rule, self.message)
+    }
+}
+
+/// Lint outcome over a file set: surviving findings (sorted by path,
+/// line, rule) plus the suppression tally.
+pub struct Report {
+    pub findings: Vec<Finding>,
+    pub files: usize,
+    pub suppressed: usize,
+}
+
+impl Report {
+    pub fn clean(&self) -> bool {
+        self.findings.is_empty()
+    }
+}
+
+impl fmt::Display for Report {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        for finding in &self.findings {
+            writeln!(f, "{finding}")?;
+        }
+        write!(
+            f,
+            "lint: {} file(s), {} finding(s), {} suppressed by pragma",
+            self.files,
+            self.findings.len(),
+            self.suppressed
+        )
+    }
+}
+
+struct Pragma {
+    rule: String,
+    line: u32,
+}
+
+/// Read suppression pragmas out of a file's comment tokens. Only plain
+/// `//` comments qualify — doc comments may quote the syntax freely.
+fn collect_pragmas(file: &SourceFile, toks: &[Token]) -> (Vec<Pragma>, Vec<Finding>) {
+    let mut pragmas = Vec::new();
+    let mut bad = Vec::new();
+    for t in toks {
+        if t.kind != tokenizer::TokenKind::LineComment {
+            continue;
+        }
+        let body = &t.text[2..];
+        if body.starts_with('/') || body.starts_with('!') {
+            continue;
+        }
+        let Some(at) = body.find("lint:") else { continue };
+        let rest = body[at + "lint:".len()..].trim_start();
+        let mut fail = |msg: &str| {
+            bad.push(Finding {
+                rule: "pragma",
+                path: file.path.clone(),
+                line: t.line,
+                message: msg.to_string(),
+            });
+        };
+        let Some(inner) = rest.strip_prefix("allow(") else {
+            fail("malformed pragma: expected `lint: allow(<rule>) — <justification>`");
+            continue;
+        };
+        let Some(close) = inner.find(')') else {
+            fail("malformed pragma: unclosed allow(...)");
+            continue;
+        };
+        let rule = inner[..close].trim().replace('-', "_");
+        if !RULE_NAMES.contains(&rule.as_str()) {
+            fail(&format!("pragma names unknown rule `{rule}`"));
+            continue;
+        }
+        let justification = inner[close + 1..].trim_matches(&[' ', '—', '-', ':', '–'][..]);
+        if justification.is_empty() {
+            fail("pragma needs a justification after allow(...)");
+            continue;
+        }
+        pragmas.push(Pragma { rule, line: t.line });
+    }
+    (pragmas, bad)
+}
+
+/// Run every rule over `files` and fold in pragma suppression.
+pub fn lint_files(files: &[SourceFile]) -> Report {
+    let streams: Vec<Vec<Token>> = files.iter().map(|f| tokenize(&f.src)).collect();
+    let mut findings = Vec::new();
+    let mut pragmas_by_path: HashMap<&str, Vec<Pragma>> = HashMap::new();
+    for (f, ts) in files.iter().zip(&streams) {
+        let (ps, mut bad) = collect_pragmas(f, ts);
+        pragmas_by_path.insert(f.path.as_str(), ps);
+        findings.append(&mut bad);
+    }
+    let fts: Vec<FileTokens> = files
+        .iter()
+        .zip(&streams)
+        .map(|(f, ts)| FileTokens {
+            file: f,
+            code: ts.iter().filter(|t| !t.is_comment()).cloned().collect(),
+        })
+        .collect();
+    for ft in &fts {
+        findings.extend(rules::clock_discipline(ft));
+        findings.extend(rules::poison_discipline(ft));
+    }
+    findings.extend(rules::panic_boundary(&fts));
+    findings.extend(rules::metrics_triple_entry(&fts));
+    findings.extend(rules::lock_order(&fts));
+
+    let mut kept = Vec::new();
+    let mut suppressed = 0usize;
+    for f in findings {
+        let covered = f.rule != "pragma"
+            && pragmas_by_path.get(f.path.as_str()).is_some_and(|ps| {
+                ps.iter().any(|p| p.rule == f.rule && (p.line == f.line || p.line + 1 == f.line))
+            });
+        if covered {
+            suppressed += 1;
+        } else {
+            kept.push(f);
+        }
+    }
+    kept.sort_by(|a, b| (&a.path, a.line, a.rule).cmp(&(&b.path, b.line, b.rule)));
+    Report { findings: kept, files: files.len(), suppressed }
+}
+
+/// Lint every `.rs` file under `roots` (files or directories; `target`
+/// subtrees are skipped). Paths are sorted so reports are deterministic.
+pub fn lint_paths(roots: &[PathBuf]) -> crate::Result<Report> {
+    let mut paths = Vec::new();
+    for r in roots {
+        collect_rs(r, &mut paths)?;
+    }
+    paths.sort();
+    paths.dedup();
+    let mut files = Vec::new();
+    for p in paths {
+        let src = std::fs::read_to_string(&p)
+            .map_err(|e| crate::Error::io(p.display().to_string(), e))?;
+        files.push(SourceFile { path: p.display().to_string(), src });
+    }
+    Ok(lint_files(&files))
+}
+
+fn collect_rs(path: &Path, out: &mut Vec<PathBuf>) -> crate::Result<()> {
+    if path.is_file() {
+        if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path.to_path_buf());
+        }
+        return Ok(());
+    }
+    let entries =
+        std::fs::read_dir(path).map_err(|e| crate::Error::io(path.display().to_string(), e))?;
+    for entry in entries {
+        let entry = entry.map_err(|e| crate::Error::io(path.display().to_string(), e))?;
+        let p = entry.path();
+        if p.is_dir() {
+            if p.file_name().is_some_and(|n| n == "target") {
+                continue;
+            }
+            collect_rs(&p, out)?;
+        } else if p.extension().is_some_and(|e| e == "rs") {
+            out.push(p);
+        }
+    }
+    Ok(())
+}

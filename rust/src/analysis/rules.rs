@@ -1,0 +1,800 @@
+//! The five invariant rules. Every rule is a lexical token-sequence
+//! analysis over the [`crate::analysis::tokenizer`] stream — no parse
+//! tree, just patterns plus balanced-delimiter spans. See the module docs
+//! in [`crate::analysis`] for what each rule enforces and why, and for
+//! the known approximations (one-level call expansion, lexical guard
+//! scopes).
+
+use std::collections::{BTreeSet, HashMap, HashSet};
+
+use super::tokenizer::{Token, TokenKind};
+use super::{Finding, SourceFile};
+
+/// One scanned file with its comment-stripped token stream (rules never
+/// match inside comments; the pragma engine reads them separately).
+pub(crate) struct FileTokens<'a> {
+    pub file: &'a SourceFile,
+    pub code: Vec<Token>,
+}
+
+fn norm(path: &str) -> String {
+    path.replace('\\', "/")
+}
+
+fn file_stem(path: &str) -> String {
+    let p = norm(path);
+    let base = p.rsplit('/').next().unwrap_or(&p);
+    base.strip_suffix(".rs").unwrap_or(base).to_string()
+}
+
+fn mk(rule: &'static str, file: &SourceFile, line: u32, message: String) -> Finding {
+    Finding { rule, path: file.path.clone(), line, message }
+}
+
+/// Index of the matching `}` for the `{` at `open` (end of stream if
+/// unbalanced — strings/comments are already opaque single tokens).
+fn match_brace(code: &[Token], open: usize) -> usize {
+    let mut depth = 0usize;
+    for (k, t) in code.iter().enumerate().skip(open) {
+        if t.is_punct('{') {
+            depth += 1;
+        } else if t.is_punct('}') {
+            depth = depth.saturating_sub(1);
+            if depth == 0 {
+                return k;
+            }
+        }
+    }
+    code.len().saturating_sub(1)
+}
+
+/// Index of the matching `)` for the `(` at `open`.
+fn match_paren(code: &[Token], open: usize) -> usize {
+    let mut depth = 0usize;
+    for (k, t) in code.iter().enumerate().skip(open) {
+        if t.is_punct('(') {
+            depth += 1;
+        } else if t.is_punct(')') {
+            depth = depth.saturating_sub(1);
+            if depth == 0 {
+                return k;
+            }
+        }
+    }
+    code.len().saturating_sub(1)
+}
+
+pub(crate) struct FnSpan {
+    pub name: String,
+    /// Token range of the body `{ … }` inclusive; `None` for bodyless
+    /// trait-method declarations.
+    pub body: Option<(usize, usize)>,
+}
+
+/// Every `fn name …` in the stream, nested functions included (their
+/// spans overlap; innermost wins for enclosing-fn lookup).
+pub(crate) fn fn_spans(code: &[Token]) -> Vec<FnSpan> {
+    let mut out = Vec::new();
+    let mut i = 0;
+    while i < code.len() {
+        let heads_fn = code[i].is_ident("fn")
+            && code.get(i + 1).is_some_and(|t| t.kind == TokenKind::Ident);
+        if !heads_fn {
+            i += 1;
+            continue;
+        }
+        let name = code[i + 1].text.clone();
+        let mut j = i + 2;
+        let mut depth = 0usize; // () and [] nesting inside the signature
+        let mut body = None;
+        while j < code.len() {
+            let t = &code[j];
+            if t.is_punct('(') || t.is_punct('[') {
+                depth += 1;
+            } else if t.is_punct(')') || t.is_punct(']') {
+                depth = depth.saturating_sub(1);
+            } else if depth == 0 && t.is_punct('{') {
+                body = Some((j, match_brace(code, j)));
+                break;
+            } else if depth == 0 && t.is_punct(';') {
+                break;
+            }
+            j += 1;
+        }
+        out.push(FnSpan { name, body });
+        i += 2;
+    }
+    out
+}
+
+fn enclosing_fn<'a>(spans: &'a [FnSpan], idx: usize) -> Option<&'a FnSpan> {
+    spans
+        .iter()
+        .filter(|s| s.body.is_some_and(|(b0, b1)| idx >= b0 && idx <= b1))
+        .max_by_key(|s| s.body.map(|(b0, _)| b0))
+}
+
+// ---------------------------------------------------------------------------
+// clock_discipline
+
+/// Files whose *job* is reading the wall clock: the real half of
+/// `testkit::Clock`, the phase-timer instruments, the CLI front end, and
+/// the bench/harness wall-timing sites.
+fn wall_clock_allowed(path: &str) -> bool {
+    let p = norm(path);
+    p.ends_with("testkit/clock.rs")
+        || p.ends_with("util/timer.rs")
+        || p.ends_with("main.rs")
+        || p.contains("benches/")
+        || p.contains("harness/")
+}
+
+/// No `Instant::now` / `SystemTime::now` outside the wall-clock files,
+/// and no `thread::sleep` anywhere but benches: coordinator and select
+/// code must take time from the service [`crate::testkit::Clock`] so the
+/// control plane stays deterministic under the virtual clock.
+pub(crate) fn clock_discipline(ft: &FileTokens) -> Vec<Finding> {
+    let mut out = Vec::new();
+    let code = &ft.code;
+    let allowed = wall_clock_allowed(&ft.file.path);
+    let benches = norm(&ft.file.path).contains("benches/");
+    for (i, t) in code.iter().enumerate() {
+        if t.kind != TokenKind::Ident {
+            continue;
+        }
+        let calls = |a: &str, b: &str| {
+            t.is_ident(a)
+                && code.get(i + 1).is_some_and(|x| x.is_punct(':'))
+                && code.get(i + 2).is_some_and(|x| x.is_punct(':'))
+                && code.get(i + 3).is_some_and(|x| x.is_ident(b))
+        };
+        if !allowed && (calls("Instant", "now") || calls("SystemTime", "now")) {
+            out.push(mk(
+                "clock_discipline",
+                ft.file,
+                t.line,
+                format!(
+                    "{}::now() bypasses testkit::Clock; read the service clock instead",
+                    t.text
+                ),
+            ));
+        } else if !benches && calls("thread", "sleep") {
+            out.push(mk(
+                "clock_discipline",
+                ft.file,
+                t.line,
+                "thread::sleep waits in wall time; park on the virtual clock instead".to_string(),
+            ));
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// poison_discipline
+
+/// Every `.lock()` on a poisonable mutex must recover the guard with
+/// `unwrap_or_else(|e| e.into_inner())` — the repo-wide idiom — rather
+/// than `.unwrap()`/`.expect()` (panic amplification: one poisoned lock
+/// cascades through every thread that touches it) or `?` (propagates a
+/// non-actionable error). A bare `.lock()` whose result is not consumed
+/// inline is fine: that is `util::sync::OrderedMutex` or a helper whose
+/// body is checked where it lives.
+pub(crate) fn poison_discipline(ft: &FileTokens) -> Vec<Finding> {
+    let mut out = Vec::new();
+    let code = &ft.code;
+    for i in 0..code.len() {
+        let is_lock_call = code[i].is_punct('.')
+            && code.get(i + 1).is_some_and(|t| t.is_ident("lock"))
+            && code.get(i + 2).is_some_and(|t| t.is_punct('('))
+            && code.get(i + 3).is_some_and(|t| t.is_punct(')'));
+        if !is_lock_call {
+            continue;
+        }
+        let line = code[i + 1].line;
+        let after = &code[i + 4..];
+        if after.first().is_some_and(|t| t.is_punct('?')) {
+            out.push(mk(
+                "poison_discipline",
+                ft.file,
+                line,
+                ".lock()? propagates poison; recover with unwrap_or_else(|e| e.into_inner())"
+                    .to_string(),
+            ));
+            continue;
+        }
+        if !after.first().is_some_and(|t| t.is_punct('.')) {
+            continue;
+        }
+        let Some(m) = after.get(1) else { continue };
+        if m.is_ident("unwrap") || m.is_ident("expect") {
+            out.push(mk(
+                "poison_discipline",
+                ft.file,
+                line,
+                format!(
+                    ".lock().{}() panics on poison; recover with unwrap_or_else(|e| e.into_inner())",
+                    m.text
+                ),
+            ));
+        } else if m.is_ident("unwrap_or_else")
+            && !after.iter().take(16).any(|t| t.is_ident("into_inner"))
+        {
+            out.push(mk(
+                "poison_discipline",
+                ft.file,
+                line,
+                ".lock().unwrap_or_else(..) must recover the guard via e.into_inner()".to_string(),
+            ));
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// panic_boundary
+
+fn backend_trait_methods(files: &[FileTokens]) -> HashSet<String> {
+    let mut methods = HashSet::new();
+    for ft in files {
+        let code = &ft.code;
+        for i in 0..code.len() {
+            if code[i].is_ident("trait")
+                && code.get(i + 1).is_some_and(|t| t.is_ident("DatasetBackend"))
+            {
+                let Some(open) = (i + 2..code.len()).find(|&j| code[j].is_punct('{')) else {
+                    continue;
+                };
+                let end = match_brace(code, open);
+                for k in open..end {
+                    if code[k].is_ident("fn") {
+                        if let Some(name) = code.get(k + 1) {
+                            methods.insert(name.text.clone());
+                        }
+                    }
+                }
+            }
+        }
+    }
+    methods
+}
+
+fn cfg_test_start(code: &[Token]) -> usize {
+    for i in 0..code.len() {
+        if code[i].is_punct('#')
+            && code.get(i + 1).is_some_and(|t| t.is_punct('['))
+            && code.get(i + 2).is_some_and(|t| t.is_ident("cfg"))
+            && code.get(i + 3).is_some_and(|t| t.is_punct('('))
+            && code.get(i + 4).is_some_and(|t| t.is_ident("test"))
+        {
+            return i;
+        }
+    }
+    code.len()
+}
+
+fn in_region(regions: &[(usize, usize)], idx: usize) -> bool {
+    regions.iter().any(|&(a, b)| idx > a && idx < b)
+}
+
+/// In the coordinator worker paths (`coordinator/service.rs`, test module
+/// excluded), every `backend.<DatasetBackend method>(…)` call must be
+/// lexically inside a `catch_unwind(…)` span — or inside a function whose
+/// every call site in the file is (`solve_group`/`run_query`, which are
+/// only ever entered through the fault-isolation boundary). The method
+/// set is read from the `DatasetBackend` trait declaration itself, and
+/// the receiver-name convention (`backend`) is the file's own.
+pub(crate) fn panic_boundary(files: &[FileTokens]) -> Vec<Finding> {
+    let methods = backend_trait_methods(files);
+    if methods.is_empty() {
+        return Vec::new();
+    }
+    let mut out = Vec::new();
+    for ft in files {
+        if !norm(&ft.file.path).ends_with("coordinator/service.rs") {
+            continue;
+        }
+        let limit = cfg_test_start(&ft.code);
+        let code = &ft.code[..limit];
+        let regions: Vec<(usize, usize)> = (0..code.len())
+            .filter(|&i| {
+                code[i].is_ident("catch_unwind") && code.get(i + 1).is_some_and(|t| t.is_punct('('))
+            })
+            .map(|i| (i, match_paren(code, i + 1)))
+            .collect();
+        let spans = fn_spans(code);
+        let mut protected: HashSet<&str> = HashSet::new();
+        for s in &spans {
+            let mut sites = 0usize;
+            let mut covered = true;
+            for i in 0..code.len() {
+                let own_body = s.body.is_some_and(|(b0, b1)| i >= b0 && i <= b1);
+                if code[i].is_ident(&s.name)
+                    && code.get(i + 1).is_some_and(|t| t.is_punct('('))
+                    && (i == 0 || !code[i - 1].is_ident("fn"))
+                    && !own_body
+                {
+                    sites += 1;
+                    covered &= in_region(&regions, i);
+                }
+            }
+            if sites > 0 && covered {
+                protected.insert(s.name.as_str());
+            }
+        }
+        for i in 0..code.len() {
+            let method = match code.get(i + 2) {
+                Some(t) if t.kind == TokenKind::Ident => &t.text,
+                _ => continue,
+            };
+            let is_backend_call = code[i].is_ident("backend")
+                && code.get(i + 1).is_some_and(|t| t.is_punct('.'))
+                && methods.contains(method);
+            if !is_backend_call || in_region(&regions, i) {
+                continue;
+            }
+            if enclosing_fn(&spans, i).is_some_and(|s| protected.contains(s.name.as_str())) {
+                continue;
+            }
+            out.push(mk(
+                "panic_boundary",
+                ft.file,
+                code[i + 2].line,
+                format!(
+                    "DatasetBackend::{method} runs outside catch_unwind; \
+                     a backend panic here kills the worker"
+                ),
+            ));
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// metrics_triple_entry
+
+struct Field {
+    name: String,
+    ty: String,
+    public: bool,
+    line: u32,
+}
+
+fn struct_fields(code: &[Token], name: &str) -> Option<Vec<Field>> {
+    for i in 0..code.len() {
+        if !(code[i].is_ident("struct") && code.get(i + 1).is_some_and(|t| t.is_ident(name))) {
+            continue;
+        }
+        let mut j = i + 2;
+        while j < code.len() && !code[j].is_punct('{') {
+            if code[j].is_punct(';') {
+                return Some(Vec::new());
+            }
+            j += 1;
+        }
+        let end = match_brace(code, j);
+        let mut fields = Vec::new();
+        for k in j + 1..end {
+            let is_field = code[k].kind == TokenKind::Ident
+                && code.get(k + 1).is_some_and(|t| t.is_punct(':'))
+                && !code.get(k + 2).is_some_and(|t| t.is_punct(':'))
+                && !code[k - 1].is_punct(':');
+            if is_field {
+                fields.push(Field {
+                    name: code[k].text.clone(),
+                    ty: code.get(k + 2).map(|t| t.text.clone()).unwrap_or_default(),
+                    public: code[k - 1].is_ident("pub"),
+                    line: code[k].line,
+                });
+            }
+        }
+        return Some(fields);
+    }
+    None
+}
+
+fn display_impl_span(code: &[Token], for_name: &str) -> Option<(usize, usize)> {
+    for i in 0..code.len() {
+        if code[i].is_ident("Display")
+            && code.get(i + 1).is_some_and(|t| t.is_ident("for"))
+            && code.get(i + 2).is_some_and(|t| t.is_ident(for_name))
+        {
+            let open = (i + 3..code.len()).find(|&j| code[j].is_punct('{'))?;
+            return Some((open, match_brace(code, open)));
+        }
+    }
+    None
+}
+
+fn span_has_field_init(code: &[Token], span: (usize, usize), name: &str) -> bool {
+    (span.0..=span.1).any(|k| {
+        code[k].is_ident(name)
+            && code.get(k + 1).is_some_and(|t| t.is_punct(':'))
+            && !code.get(k + 2).is_some_and(|t| t.is_punct(':'))
+    })
+}
+
+fn span_has_self_field(code: &[Token], span: (usize, usize), name: &str) -> bool {
+    (span.0..=span.1).any(|k| {
+        code[k].is_ident("self")
+            && code.get(k + 1).is_some_and(|t| t.is_punct('.'))
+            && code.get(k + 2).is_some_and(|t| t.is_ident(name))
+    })
+}
+
+/// Every `pub … : AtomicU64` counter declared on `Metrics`
+/// (`coordinator/metrics.rs`) must appear three more times, all
+/// maintained by hand today: as a `Snapshot` field, copied in
+/// `Metrics::snapshot()`, and rendered in `Display for Snapshot`. A
+/// counter that misses any leg silently vanishes from observability.
+pub(crate) fn metrics_triple_entry(files: &[FileTokens]) -> Vec<Finding> {
+    let mut out = Vec::new();
+    for ft in files {
+        if !norm(&ft.file.path).ends_with("coordinator/metrics.rs") {
+            continue;
+        }
+        let code = &ft.code;
+        let Some(metrics_fields) = struct_fields(code, "Metrics") else { continue };
+        let counters: Vec<&Field> =
+            metrics_fields.iter().filter(|f| f.public && f.ty == "AtomicU64").collect();
+        let snap_fields = struct_fields(code, "Snapshot");
+        let snap_body =
+            fn_spans(code).into_iter().find(|s| s.name == "snapshot").and_then(|s| s.body);
+        let display = display_impl_span(code, "Snapshot");
+        let (Some(snap_fields), Some(snap_body), Some(display)) = (snap_fields, snap_body, display)
+        else {
+            out.push(mk(
+                "metrics_triple_entry",
+                ft.file,
+                1,
+                "expected struct Snapshot, fn snapshot() and a Display impl alongside Metrics"
+                    .to_string(),
+            ));
+            continue;
+        };
+        for c in counters {
+            if !snap_fields.iter().any(|f| f.name == c.name) {
+                out.push(mk(
+                    "metrics_triple_entry",
+                    ft.file,
+                    c.line,
+                    format!("Metrics counter `{}` has no matching Snapshot field", c.name),
+                ));
+            }
+            if !span_has_field_init(code, snap_body, &c.name) {
+                out.push(mk(
+                    "metrics_triple_entry",
+                    ft.file,
+                    c.line,
+                    format!("Metrics counter `{}` is not copied in Metrics::snapshot()", c.name),
+                ));
+            }
+            if !span_has_self_field(code, display, &c.name) {
+                out.push(mk(
+                    "metrics_triple_entry",
+                    ft.file,
+                    c.line,
+                    format!("Metrics counter `{}` has no Display arm on Snapshot", c.name),
+                ));
+            }
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// lock_order
+
+#[derive(Clone)]
+struct Held {
+    node: usize,
+    depth: usize,
+    var: Option<String>,
+    temp: bool,
+}
+
+struct FnScan {
+    file: usize,
+    name: String,
+    body: (usize, usize),
+}
+
+/// Cross-file lock-order graph over the named lock fields (`name:
+/// Mutex<…>` / `name: OrderedMutex<…>` declarations; nodes are
+/// `<file stem>.<field>`). Within every function body, a resolved
+/// `receiver.lock()` acquisition draws an edge from each lock still
+/// lexically held (let-bound guards live to their block or `drop(var)`;
+/// temporaries to the end of the statement) to the acquired one; calls to
+/// named local functions are expanded through a name-keyed
+/// direct-lock-set fixpoint so helper-routed acquisitions still
+/// contribute edges. Any cycle in the resulting graph is a finding: two
+/// code paths that disagree about acquisition order are a deadlock
+/// waiting for a schedule.
+pub(crate) fn lock_order(files: &[FileTokens]) -> Vec<Finding> {
+    // Pass 0: discover lock-field nodes.
+    let mut nodes: Vec<String> = Vec::new();
+    let mut per_file: Vec<HashMap<String, usize>> = Vec::new();
+    let mut global: HashMap<String, Vec<usize>> = HashMap::new();
+    for ft in files {
+        let stem = file_stem(&ft.file.path);
+        let code = &ft.code;
+        let mut map = HashMap::new();
+        for i in 0..code.len() {
+            let is_decl = code[i].kind == TokenKind::Ident
+                && code.get(i + 1).is_some_and(|t| t.is_punct(':'))
+                && code
+                    .get(i + 2)
+                    .is_some_and(|t| t.is_ident("Mutex") || t.is_ident("OrderedMutex"))
+                && code.get(i + 3).is_some_and(|t| t.is_punct('<'))
+                && (i == 0 || !code[i - 1].is_punct(':'));
+            if !is_decl {
+                continue;
+            }
+            let field = code[i].text.clone();
+            let name = format!("{stem}.{field}");
+            let node = match nodes.iter().position(|n| *n == name) {
+                Some(p) => p,
+                None => {
+                    nodes.push(name);
+                    nodes.len() - 1
+                }
+            };
+            map.insert(field.clone(), node);
+            global.entry(field).or_default().push(node);
+        }
+        per_file.push(map);
+    }
+    if nodes.is_empty() {
+        return Vec::new();
+    }
+
+    // Resolve `receiver.lock()` at the `.` token `i`; empty = unresolved.
+    let resolve = |fidx: usize, code: &[Token], i: usize| -> Vec<usize> {
+        if i == 0 {
+            return Vec::new();
+        }
+        let recv = &code[i - 1];
+        if recv.kind != TokenKind::Ident {
+            return Vec::new();
+        }
+        if let Some(&n) = per_file[fidx].get(&recv.text) {
+            return vec![n];
+        }
+        global.get(&recv.text).cloned().unwrap_or_default()
+    };
+
+    let is_lock_call = |code: &[Token], i: usize| {
+        code[i].is_punct('.')
+            && code.get(i + 1).is_some_and(|t| t.is_ident("lock"))
+            && code.get(i + 2).is_some_and(|t| t.is_punct('('))
+            && code.get(i + 3).is_some_and(|t| t.is_punct(')'))
+    };
+
+    // Pass A: per-function direct lock sets, then a name-keyed fixpoint
+    // through calls (a helper that locks makes its callers lock too).
+    let mut fns: Vec<FnScan> = Vec::new();
+    for (fidx, ft) in files.iter().enumerate() {
+        for s in fn_spans(&ft.code) {
+            if let Some(body) = s.body {
+                fns.push(FnScan { file: fidx, name: s.name, body });
+            }
+        }
+    }
+    let mut locks_by_name: HashMap<String, BTreeSet<usize>> = HashMap::new();
+    let mut calls_by_fn: Vec<Vec<String>> = Vec::new();
+    for f in &fns {
+        let code = &files[f.file].code;
+        let mut direct = BTreeSet::new();
+        let mut calls = Vec::new();
+        for i in f.body.0..=f.body.1 {
+            if is_lock_call(code, i) && !resolve(f.file, code, i).is_empty() {
+                direct.extend(resolve(f.file, code, i));
+            } else if code[i].kind == TokenKind::Ident
+                && code.get(i + 1).is_some_and(|t| t.is_punct('('))
+                && !code[i - 1].is_ident("fn")
+            {
+                calls.push(code[i].text.clone());
+            }
+        }
+        locks_by_name.entry(f.name.clone()).or_default().extend(direct);
+        calls_by_fn.push(calls);
+    }
+    for _ in 0..12 {
+        let mut changed = false;
+        for (f, calls) in fns.iter().zip(&calls_by_fn) {
+            let mut add = BTreeSet::new();
+            for callee in calls {
+                if let Some(set) = locks_by_name.get(callee) {
+                    add.extend(set.iter().copied());
+                }
+            }
+            let mine = locks_by_name.entry(f.name.clone()).or_default();
+            let before = mine.len();
+            mine.extend(add);
+            changed |= mine.len() != before;
+        }
+        if !changed {
+            break;
+        }
+    }
+
+    // Pass B: held-scope walk per function, drawing held → acquired edges.
+    let mut edges: HashMap<(usize, usize), (String, u32)> = HashMap::new();
+    for f in &fns {
+        let code = &files[f.file].code;
+        let mut held: Vec<Held> = Vec::new();
+        let mut depth = 0usize;
+        let mut edge = |held: &[Held], to: usize, line: u32, edges: &mut HashMap<_, _>| {
+            for h in held {
+                if h.node != to {
+                    edges
+                        .entry((h.node, to))
+                        .or_insert_with(|| (files[f.file].file.path.clone(), line));
+                }
+            }
+        };
+        let mut i = f.body.0;
+        while i <= f.body.1 {
+            let t = &code[i];
+            if t.is_punct('{') {
+                depth += 1;
+            } else if t.is_punct('}') {
+                depth = depth.saturating_sub(1);
+                held.retain(|h| h.depth <= depth);
+            } else if t.is_punct(';') {
+                held.retain(|h| !h.temp);
+            } else if is_lock_call(code, i) {
+                let targets = resolve(f.file, code, i);
+                if targets.is_empty() {
+                    // unresolved receiver (`self.lock()` helpers): treat
+                    // as a call named `lock`, expanded below via i+1
+                } else {
+                    for &n in &targets {
+                        edge(&held, n, code[i + 1].line, &mut edges);
+                    }
+                    let (let_bound, var) = statement_binding(code, f.body.0, i);
+                    for &n in &targets {
+                        held.push(Held { node: n, depth, var: var.clone(), temp: !let_bound });
+                    }
+                    i += 4;
+                    continue;
+                }
+            } else if t.is_ident("drop")
+                && code.get(i + 1).is_some_and(|x| x.is_punct('('))
+                && code.get(i + 3).is_some_and(|x| x.is_punct(')'))
+            {
+                if let Some(v) = code.get(i + 2) {
+                    held.retain(|h| h.var.as_deref() != Some(v.text.as_str()));
+                }
+            }
+            // Call expansion (includes unresolved `.lock()` by name).
+            if !held.is_empty()
+                && t.kind == TokenKind::Ident
+                && code.get(i + 1).is_some_and(|x| x.is_punct('('))
+                && (i == 0 || !code[i - 1].is_ident("fn"))
+            {
+                let resolved_recv =
+                    i > 0 && is_lock_call(code, i - 1) && !resolve(f.file, code, i - 1).is_empty();
+                if !resolved_recv {
+                    if let Some(set) = locks_by_name.get(&t.text) {
+                        for &n in set {
+                            edge(&held, n, t.line, &mut edges);
+                        }
+                    }
+                }
+            }
+            i += 1;
+        }
+    }
+
+    // Cycle detection: one finding per nontrivial strongly-connected
+    // component, anchored at the lexically-last edge inside it.
+    let mut adj = vec![Vec::new(); nodes.len()];
+    for &(a, b) in edges.keys() {
+        adj[a].push(b);
+    }
+    let mut out = Vec::new();
+    for scc in tarjan_sccs(&adj) {
+        if scc.len() < 2 {
+            continue;
+        }
+        let in_scc: HashSet<usize> = scc.iter().copied().collect();
+        let mut names: Vec<&str> =
+            scc.iter().map(|&n| nodes[n].as_str()).collect::<Vec<_>>();
+        names.sort_unstable();
+        let site = edges
+            .iter()
+            .filter(|((a, b), _)| in_scc.contains(a) && in_scc.contains(b))
+            .map(|(_, site)| site)
+            .max_by(|a, b| (a.0.as_str(), a.1).cmp(&(b.0.as_str(), b.1)));
+        let Some((path, line)) = site else { continue };
+        out.push(Finding {
+            rule: "lock_order",
+            path: path.clone(),
+            line: *line,
+            message: format!(
+                "lock-order cycle among {{{}}}: acquisition order must be globally consistent \
+                 (see the rank table in util::sync)",
+                names.join(", ")
+            ),
+        });
+    }
+    out
+}
+
+/// Is the statement containing token `at` a `let` binding, and to which
+/// variable? Scans back to the nearest statement boundary.
+fn statement_binding(code: &[Token], lo: usize, at: usize) -> (bool, Option<String>) {
+    let mut k = at;
+    while k > lo {
+        k -= 1;
+        let t = &code[k];
+        if t.is_punct(';') || t.is_punct('{') || t.is_punct('}') {
+            return (false, None);
+        }
+        if t.is_ident("let") {
+            let mut v = k + 1;
+            if code.get(v).is_some_and(|t| t.is_ident("mut")) {
+                v += 1;
+            }
+            let var = code.get(v).filter(|t| t.kind == TokenKind::Ident).map(|t| t.text.clone());
+            return (true, var);
+        }
+    }
+    (false, None)
+}
+
+fn tarjan_sccs(adj: &[Vec<usize>]) -> Vec<Vec<usize>> {
+    struct State<'a> {
+        adj: &'a [Vec<usize>],
+        index: Vec<Option<u32>>,
+        low: Vec<u32>,
+        on_stack: Vec<bool>,
+        stack: Vec<usize>,
+        next: u32,
+        out: Vec<Vec<usize>>,
+    }
+    fn go(st: &mut State, v: usize) {
+        st.index[v] = Some(st.next);
+        st.low[v] = st.next;
+        st.next += 1;
+        st.stack.push(v);
+        st.on_stack[v] = true;
+        let neighbors = st.adj[v].clone();
+        for w in neighbors {
+            if st.index[w].is_none() {
+                go(st, w);
+                st.low[v] = st.low[v].min(st.low[w]);
+            } else if st.on_stack[w] {
+                st.low[v] = st.low[v].min(st.index[w].unwrap_or(0));
+            }
+        }
+        if Some(st.low[v]) == st.index[v] {
+            let mut scc = Vec::new();
+            while let Some(w) = st.stack.pop() {
+                st.on_stack[w] = false;
+                scc.push(w);
+                if w == v {
+                    break;
+                }
+            }
+            st.out.push(scc);
+        }
+    }
+    let n = adj.len();
+    let mut st = State {
+        adj,
+        index: vec![None; n],
+        low: vec![0; n],
+        on_stack: vec![false; n],
+        stack: Vec::new(),
+        next: 0,
+        out: Vec::new(),
+    };
+    for v in 0..n {
+        if st.index[v].is_none() {
+            go(&mut st, v);
+        }
+    }
+    st.out
+}

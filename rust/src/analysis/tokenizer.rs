@@ -1,0 +1,325 @@
+//! Minimal Rust tokenizer for the in-repo invariant lint.
+//!
+//! The crate is offline and dependency-free, so `crate::analysis` cannot
+//! lean on syn/proc-macro2. This module lexes just enough Rust to make
+//! token-sequence rules sound: string and char literals (so braces and
+//! keywords inside them are invisible to the rules), line and nested
+//! block comments (kept as tokens — the pragma engine reads them),
+//! identifiers, numbers, lifetimes, and single-character punctuation.
+//! There is no parse tree; every rule in `analysis::rules` works on token
+//! sequences plus balanced-delimiter spans.
+
+/// What a [`Token`] is. `Punct` is always a single character.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TokenKind {
+    Ident,
+    Num,
+    Str,
+    Char,
+    Lifetime,
+    LineComment,
+    BlockComment,
+    Punct,
+}
+
+/// One lexed token with its 1-based source line.
+#[derive(Debug, Clone)]
+pub struct Token {
+    pub kind: TokenKind,
+    pub text: String,
+    pub line: u32,
+}
+
+impl Token {
+    pub fn is_ident(&self, s: &str) -> bool {
+        self.kind == TokenKind::Ident && self.text == s
+    }
+
+    pub fn is_punct(&self, c: char) -> bool {
+        self.kind == TokenKind::Punct && self.text.chars().next() == Some(c)
+    }
+
+    pub fn is_comment(&self) -> bool {
+        matches!(self.kind, TokenKind::LineComment | TokenKind::BlockComment)
+    }
+}
+
+/// Lex `src` into a token stream (comments included).
+pub fn tokenize(src: &str) -> Vec<Token> {
+    Lexer { chars: src.chars().collect(), pos: 0, line: 1 }.run()
+}
+
+struct Lexer {
+    chars: Vec<char>,
+    pos: usize,
+    line: u32,
+}
+
+impl Lexer {
+    fn peek(&self, ahead: usize) -> Option<char> {
+        self.chars.get(self.pos + ahead).copied()
+    }
+
+    fn bump(&mut self) -> Option<char> {
+        let c = self.chars.get(self.pos).copied();
+        if let Some(c) = c {
+            self.pos += 1;
+            if c == '\n' {
+                self.line += 1;
+            }
+        }
+        c
+    }
+
+    fn run(mut self) -> Vec<Token> {
+        let mut out = Vec::new();
+        while let Some(c) = self.peek(0) {
+            let line = self.line;
+            if c.is_whitespace() {
+                self.bump();
+            } else if c == '/' && self.peek(1) == Some('/') {
+                out.push(self.line_comment(line));
+            } else if c == '/' && self.peek(1) == Some('*') {
+                out.push(self.block_comment(line));
+            } else if c == '"' {
+                out.push(self.string(line));
+            } else if c == '\'' {
+                out.push(self.quote(line));
+            } else if c.is_ascii_digit() {
+                out.push(self.number(line));
+            } else if c == '_' || c.is_alphabetic() {
+                out.push(self.ident_or_literal(line));
+            } else {
+                self.bump();
+                out.push(Token { kind: TokenKind::Punct, text: c.to_string(), line });
+            }
+        }
+        out
+    }
+
+    fn line_comment(&mut self, line: u32) -> Token {
+        let mut text = String::new();
+        while let Some(c) = self.peek(0) {
+            if c == '\n' {
+                break;
+            }
+            text.push(c);
+            self.bump();
+        }
+        Token { kind: TokenKind::LineComment, text, line }
+    }
+
+    fn block_comment(&mut self, line: u32) -> Token {
+        let mut text = String::new();
+        let mut depth = 0usize;
+        while let Some(c) = self.peek(0) {
+            if c == '/' && self.peek(1) == Some('*') {
+                depth += 1;
+                text.push_str("/*");
+                self.bump();
+                self.bump();
+            } else if c == '*' && self.peek(1) == Some('/') {
+                depth = depth.saturating_sub(1);
+                text.push_str("*/");
+                self.bump();
+                self.bump();
+                if depth == 0 {
+                    break;
+                }
+            } else {
+                text.push(c);
+                self.bump();
+            }
+        }
+        Token { kind: TokenKind::BlockComment, text, line }
+    }
+
+    /// `"..."` with `\x` escapes (each escape skips exactly one char,
+    /// which is enough to never terminate on an escaped quote).
+    fn string(&mut self, line: u32) -> Token {
+        let mut text = String::from('"');
+        self.bump();
+        while let Some(c) = self.bump() {
+            text.push(c);
+            if c == '\\' {
+                if let Some(e) = self.bump() {
+                    text.push(e);
+                }
+            } else if c == '"' {
+                break;
+            }
+        }
+        Token { kind: TokenKind::Str, text, line }
+    }
+
+    /// `r"…"`, `r#"…"#` (any hash count): ends only on `"` followed by
+    /// the opening hash count.
+    fn raw_string(&mut self, line: u32, prefix: &str) -> Token {
+        let mut text = String::from(prefix);
+        let mut hashes = 0usize;
+        while self.peek(0) == Some('#') {
+            hashes += 1;
+            text.push('#');
+            self.bump();
+        }
+        text.push('"');
+        self.bump();
+        while let Some(c) = self.bump() {
+            text.push(c);
+            if c == '"' && (0..hashes).all(|k| self.peek(k) == Some('#')) {
+                for _ in 0..hashes {
+                    text.push('#');
+                    self.bump();
+                }
+                break;
+            }
+        }
+        Token { kind: TokenKind::Str, text, line }
+    }
+
+    /// Disambiguate `'x'` / `'\n'` (char literal) from `'a` / `'static`
+    /// (lifetime): an escape or a close-quote two ahead means char.
+    fn quote(&mut self, line: u32) -> Token {
+        self.bump();
+        if self.peek(0) == Some('\\') || self.peek(1) == Some('\'') {
+            let mut text = String::from('\'');
+            while let Some(c) = self.bump() {
+                text.push(c);
+                if c == '\\' {
+                    if let Some(e) = self.bump() {
+                        text.push(e);
+                    }
+                } else if c == '\'' {
+                    break;
+                }
+            }
+            Token { kind: TokenKind::Char, text, line }
+        } else {
+            let mut text = String::from('\'');
+            while let Some(c) = self.peek(0) {
+                if c == '_' || c.is_alphanumeric() {
+                    text.push(c);
+                    self.bump();
+                } else {
+                    break;
+                }
+            }
+            Token { kind: TokenKind::Lifetime, text, line }
+        }
+    }
+
+    fn number(&mut self, line: u32) -> Token {
+        let mut text = String::new();
+        while let Some(c) = self.peek(0) {
+            if c.is_ascii_alphanumeric() || c == '_' {
+                text.push(c);
+                self.bump();
+            } else if c == '.' && self.peek(1).is_some_and(|d| d.is_ascii_digit()) {
+                text.push(c);
+                self.bump();
+            } else if (c == '+' || c == '-')
+                && !text.starts_with("0x")
+                && matches!(text.chars().last(), Some('e' | 'E'))
+                && self.peek(1).is_some_and(|d| d.is_ascii_digit())
+            {
+                text.push(c);
+                self.bump();
+            } else {
+                break;
+            }
+        }
+        Token { kind: TokenKind::Num, text, line }
+    }
+
+    /// An identifier, unless it turns out to prefix a string/char literal
+    /// (`r"…"`, `r#"…"#`, `b"…"`, `br"…"`, `b'…'`).
+    fn ident_or_literal(&mut self, line: u32) -> Token {
+        let mut text = String::new();
+        while let Some(c) = self.peek(0) {
+            if c == '_' || c.is_alphanumeric() {
+                text.push(c);
+                self.bump();
+            } else {
+                break;
+            }
+        }
+        let raw_str_follows = || {
+            let mut k = 0;
+            while self.peek(k) == Some('#') {
+                k += 1;
+            }
+            self.peek(k) == Some('"')
+        };
+        match (text.as_str(), self.peek(0)) {
+            ("r" | "br" | "rb", Some('"' | '#')) if raw_str_follows() => {
+                self.raw_string(line, &text)
+            }
+            ("b", Some('"')) => {
+                let mut t = self.string(line);
+                t.text.insert(0, 'b');
+                t
+            }
+            ("b", Some('\'')) => {
+                let mut t = self.quote(line);
+                t.text.insert(0, 'b');
+                t
+            }
+            _ => Token { kind: TokenKind::Ident, text, line },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn kinds(src: &str) -> Vec<(TokenKind, String)> {
+        tokenize(src).into_iter().map(|t| (t.kind, t.text)).collect()
+    }
+
+    #[test]
+    fn idents_puncts_numbers() {
+        let ts = kinds("let x = 1_000 + 0xFF * 1.5e-3;");
+        assert_eq!(ts[0], (TokenKind::Ident, "let".into()));
+        assert_eq!(ts[1], (TokenKind::Ident, "x".into()));
+        assert_eq!(ts[3], (TokenKind::Num, "1_000".into()));
+        assert_eq!(ts[5], (TokenKind::Num, "0xFF".into()));
+        assert_eq!(ts[7], (TokenKind::Num, "1.5e-3".into()));
+        assert_eq!(ts[8], (TokenKind::Punct, ";".into()));
+    }
+
+    #[test]
+    fn strings_hide_their_contents() {
+        let ts = kinds(r#"a("Instant::now() } \" quote", 'x', '\n')"#);
+        assert!(!ts.iter().any(|(k, t)| *k == TokenKind::Punct && t == "}"));
+        assert_eq!(ts.iter().filter(|(k, _)| *k == TokenKind::Str).count(), 1);
+        assert_eq!(ts.iter().filter(|(k, _)| *k == TokenKind::Char).count(), 2);
+        assert!(!ts.iter().any(|(k, t)| *k == TokenKind::Ident && t == "Instant"));
+    }
+
+    #[test]
+    fn raw_strings_and_byte_strings() {
+        let src = "x(r#\"inner \" quote and }\"#, b\"bytes\", br\"raw\")";
+        let ts = kinds(src);
+        assert_eq!(ts.iter().filter(|(k, _)| *k == TokenKind::Str).count(), 3);
+        // nothing inside the raw string leaked out as punctuation
+        assert!(!ts.iter().any(|(k, t)| *k == TokenKind::Punct && t == "}"));
+    }
+
+    #[test]
+    fn lifetimes_vs_char_literals() {
+        let ts = kinds("fn f<'a>(x: &'a str) -> char { '_' }");
+        assert!(ts.iter().any(|(k, t)| *k == TokenKind::Lifetime && t == "'a"));
+        assert!(ts.iter().any(|(k, t)| *k == TokenKind::Char && t == "'_'"));
+    }
+
+    #[test]
+    fn comments_carry_lines_and_nesting() {
+        let src = "a\n// one\n/* two\n /* nested */ still */\nb";
+        let ts = tokenize(src);
+        let comment_lines: Vec<(TokenKind, u32)> =
+            ts.iter().filter(|t| t.is_comment()).map(|t| (t.kind, t.line)).collect();
+        assert_eq!(comment_lines, vec![(TokenKind::LineComment, 2), (TokenKind::BlockComment, 3)]);
+        assert_eq!(ts.last().map(|t| (t.text.as_str(), t.line)), Some(("b", 5)));
+    }
+}

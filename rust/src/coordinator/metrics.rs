@@ -3,15 +3,15 @@
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
 use std::time::Duration;
 
 use super::controller::WindowDecision;
+use crate::util::sync::{OrderedMutex, RANK_TENANT_DEPTH};
 
 /// Log₂-bucketed latency histogram: bucket i covers [2^i, 2^(i+1)) µs.
 const BUCKETS: usize = 32;
 
-#[derive(Debug, Default)]
+#[derive(Debug)]
 pub struct Metrics {
     pub requests: AtomicU64,
     pub uploads: AtomicU64,
@@ -45,14 +45,43 @@ pub struct Metrics {
     /// the backend after each batch.
     pub evictions: AtomicU64,
     /// In-flight queries per tenant (admitted but not yet replied to).
-    tenant_depth: Mutex<HashMap<u32, u64>>,
+    tenant_depth: OrderedMutex<HashMap<u32, u64>>,
     latency_us: [AtomicU64; BUCKETS],
     latency_sum_us: AtomicU64,
 }
 
+impl Default for Metrics {
+    fn default() -> Self {
+        Metrics::new()
+    }
+}
+
 impl Metrics {
     pub fn new() -> Self {
-        Self::default()
+        Metrics {
+            requests: AtomicU64::new(0),
+            uploads: AtomicU64::new(0),
+            queries: AtomicU64::new(0),
+            errors: AtomicU64::new(0),
+            probes: AtomicU64::new(0),
+            batched: AtomicU64::new(0),
+            coalesced: AtomicU64::new(0),
+            window_us: AtomicU64::new(0),
+            window_widen: AtomicU64::new(0),
+            window_shrink: AtomicU64::new(0),
+            window_sla_clamp: AtomicU64::new(0),
+            shed: AtomicU64::new(0),
+            deadline_exceeded: AtomicU64::new(0),
+            worker_faults: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+            tenant_depth: OrderedMutex::new(
+                RANK_TENANT_DEPTH,
+                "metrics.tenant_depth",
+                HashMap::new(),
+            ),
+            latency_us: Default::default(),
+            latency_sum_us: AtomicU64::new(0),
+        }
     }
 
     /// Record one latency sample. The service records **one sample per
@@ -113,14 +142,14 @@ impl Metrics {
 
     /// A query for `tenant` was admitted: bump its in-flight depth gauge.
     pub fn tenant_enter(&self, tenant: u32) {
-        let mut map = self.tenant_depth.lock().unwrap_or_else(|e| e.into_inner());
+        let mut map = self.tenant_depth.lock();
         *map.entry(tenant).or_insert(0) += 1;
     }
 
     /// A query for `tenant` was replied to (result or typed error): drop
     /// its in-flight depth gauge.
     pub fn tenant_exit(&self, tenant: u32) {
-        let mut map = self.tenant_depth.lock().unwrap_or_else(|e| e.into_inner());
+        let mut map = self.tenant_depth.lock();
         if let Some(d) = map.get_mut(&tenant) {
             *d = d.saturating_sub(1);
             if *d == 0 {
@@ -131,13 +160,13 @@ impl Metrics {
 
     /// Current in-flight depth for one tenant.
     pub fn tenant_depth(&self, tenant: u32) -> u64 {
-        let map = self.tenant_depth.lock().unwrap_or_else(|e| e.into_inner());
+        let map = self.tenant_depth.lock();
         map.get(&tenant).copied().unwrap_or(0)
     }
 
     /// Deepest per-tenant in-flight depth right now (0 when idle).
     pub fn max_tenant_depth(&self) -> u64 {
-        let map = self.tenant_depth.lock().unwrap_or_else(|e| e.into_inner());
+        let map = self.tenant_depth.lock();
         map.values().copied().max().unwrap_or(0)
     }
 

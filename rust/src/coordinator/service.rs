@@ -41,9 +41,9 @@ use std::collections::HashMap;
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TryRecvError, TrySendError};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 use std::thread::JoinHandle;
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 use super::backend::BackendFactory;
 use super::controller::{AdaptiveWindow, WindowController};
@@ -53,6 +53,7 @@ use crate::select::gpu_model::CostModelPool;
 use crate::select::objective::DType;
 use crate::select::{self, Method};
 use crate::testkit::Clock;
+use crate::util::sync::{OrderedMutex, RANK_ADMISSION};
 use crate::{Error, Result};
 
 /// What to select.
@@ -300,8 +301,9 @@ pub struct SelectionService {
     pool: Arc<CostModelPool>,
     /// Shed/admission knobs (window knobs live in the workers).
     opts: CoordinatorOptions,
-    /// Per-tenant token buckets (lazily created full).
-    admission: Mutex<HashMap<u32, TokenBucket>>,
+    /// Per-tenant token buckets (lazily created full). Rank
+    /// [`RANK_ADMISSION`] — the outermost coordinator lock.
+    admission: OrderedMutex<HashMap<u32, TokenBucket>>,
 }
 
 impl SelectionService {
@@ -407,7 +409,7 @@ impl SelectionService {
             clock,
             pool,
             opts,
-            admission: Mutex::new(HashMap::new()),
+            admission: OrderedMutex::new(RANK_ADMISSION, "service.admission", HashMap::new()),
         })
     }
 
@@ -435,7 +437,7 @@ impl SelectionService {
     fn dispatch_query(&self, id: DatasetId, tenant: u32, req: Request) -> Result<()> {
         if let Some(quota) = self.opts.tenant_quota {
             let now = self.clock.now_us();
-            let mut buckets = self.admission.lock().unwrap_or_else(|e| e.into_inner());
+            let mut buckets = self.admission.lock();
             let bucket = buckets
                 .entry(tenant)
                 .or_insert_with(|| TokenBucket { tokens: quota.burst, last_us: now });
@@ -792,7 +794,13 @@ fn worker_loop(
         }
         // Pressure-driven eviction accounting: backends that cap residency
         // (e.g. [`super::LruBackend`]) report what each batch pushed out.
-        let evicted = backend.take_evictions();
+        // Same fault boundary as every other backend call: a panicking
+        // accounting hook must not kill the worker.
+        let evicted = catch_unwind(AssertUnwindSafe(|| backend.take_evictions()))
+            .unwrap_or_else(|_| {
+                metrics.worker_faults.fetch_add(1, Ordering::Relaxed);
+                0
+            });
         if evicted > 0 {
             metrics.evictions.fetch_add(evicted, Ordering::Relaxed);
         }
@@ -829,12 +837,15 @@ fn execute_step(
             let _ = reply.send(r);
         }
         Step::Drop { id, reply } => {
-            let existed = backend.drop_dataset(id);
+            let r = catch_unwind(AssertUnwindSafe(|| backend.drop_dataset(id))).map_err(|p| {
+                metrics.worker_faults.fetch_add(1, Ordering::Relaxed);
+                Error::Service(format!("worker fault dropping dataset {id}: {}", panic_msg(&p)))
+            });
             if let Some(reply) = reply {
-                let _ = reply.send(if existed {
-                    Ok(())
-                } else {
-                    Err(Error::Service(format!("unknown dataset {id}")))
+                let _ = reply.send(match r {
+                    Ok(true) => Ok(()),
+                    Ok(false) => Err(Error::Service(format!("unknown dataset {id}"))),
+                    Err(e) => Err(e),
                 });
             }
         }
@@ -902,7 +913,7 @@ fn execute_group(
         .map(|m| m.deadline_us())
         .collect::<Option<Vec<_>>>()
         .and_then(|ds| ds.into_iter().max());
-    let t0 = Instant::now();
+    let t0_us = clock.now_us();
     let mut results =
         catch_unwind(AssertUnwindSafe(|| solve_group(backend, id, &specs, pool, clock, cancel_at)))
             .unwrap_or_else(|p| {
@@ -915,11 +926,14 @@ fn execute_group(
                     })
                     .collect()
             });
-    let wall = t0.elapsed();
     // Per-member deadline override: a member whose own deadline passed
     // while the shared run served the rest reports DeadlineExceeded even
     // though its value happened to resolve.
     let now = clock.now_us();
+    // Run wall time on the service clock: under a virtual clock this is
+    // exactly the virtually-elapsed time, so the p99 feeding the SLA
+    // clamp is deterministic (clock_discipline lint rule).
+    let wall = Duration::from_micros(now.saturating_sub(t0_us));
     let mut idx = 0usize;
     for m in &members {
         let deadline = m.deadline_us();
@@ -1019,7 +1033,6 @@ fn answer_single(
     metrics: &Metrics,
     clock: &Clock,
 ) {
-    let t0 = Instant::now();
     let now = clock.now_us();
     let mut out = match deadline_us.filter(|&d| now > d) {
         // expired while queued: answer typed, spend nothing on the device
@@ -1033,7 +1046,9 @@ fn answer_single(
                 )))
             }),
     };
-    account_run(metrics, t0.elapsed(), clock.now_us(), std::slice::from_mut(&mut out));
+    let done_us = clock.now_us();
+    let wall = Duration::from_micros(done_us.saturating_sub(now));
+    account_run(metrics, wall, done_us, std::slice::from_mut(&mut out));
     let _ = reply.send(out);
     metrics.tenant_exit(tenant);
 }
@@ -1077,7 +1092,7 @@ fn solve_group(
             // (seeded to the evaluator's native ladder width).
             let model = pool.snapshot();
             let opts = select::MultisectOptions::for_evaluator_with(&*ev, &model);
-            let t0 = Instant::now();
+            let t0_us = clock.now_us();
             // Cooperative deadline: polled at every pass boundary, so a
             // run that outlives `cancel_at` stops before its next fused
             // pass rather than running to convergence.
@@ -1096,7 +1111,8 @@ fn solve_group(
                 ev, &valid, &opts, &mut cancel,
             )?;
             let reductions = ev.probes() - probes0;
-            pool.observe_run(out.passes, out.rungs, reductions, n, t0.elapsed());
+            let wall = Duration::from_micros(clock.now_us().saturating_sub(t0_us));
+            pool.observe_run(out.passes, out.rungs, reductions, n, wall);
             Ok((out.values, out.passes, reductions))
         })()
     };

@@ -208,6 +208,38 @@
 //!    launches and honestly counts one reduction per launch — counts are
 //!    never under-reported.
 //!
+//! ## Static analysis and concurrency invariants
+//!
+//! The control plane's correctness rests on conventions, and [`analysis`]
+//! makes them machine-checked: `cp-select lint` (a blocking CI leg) runs
+//! a dependency-free lexical pass over `src/` and `tests/` with five
+//! rules, each grounded in an existing repo idiom:
+//!
+//! - **clock_discipline** — `Instant::now`/`SystemTime::now` only in the
+//!   wall-clock files (`testkit/clock.rs`, `util/timer.rs`, `main.rs`,
+//!   benches, harness); `thread::sleep` only in benches. Everything else
+//!   reads time from [`testkit::Clock`], so the batching window, SLA
+//!   clamp, and latency accounting are deterministic under the virtual
+//!   clock.
+//! - **poison_discipline** — every `.lock()` recovers the guard with
+//!   `unwrap_or_else(|e| e.into_inner())`; `.unwrap()`/`.expect()`/`?`
+//!   on a lock result is an error (one poisoned lock must not cascade).
+//! - **panic_boundary** — `DatasetBackend` calls in
+//!   `coordinator/service.rs` stay inside `catch_unwind` fault isolation.
+//! - **metrics_triple_entry** — every `Metrics` counter also has a
+//!   `Snapshot` field, a `snapshot()` copy, and a `Display` arm.
+//! - **lock_order** — nested `.lock()` scopes form a cross-file graph
+//!   over the named lock fields; cycles fail the build. The runtime half
+//!   is [`util::sync::OrderedMutex`]: rank-annotated mutexes that panic
+//!   on out-of-order acquisition (thread-local held-ranks stack), with
+//!   the documented rank order admission (10) < tenant_depth (20) <
+//!   cost-model pool (30) < fault script (40) < virtual clock (50).
+//!
+//! A finding is suppressed by a plain `//` comment on the same line or
+//! the one above: `lint: allow(<rule>) — <justification>` (the
+//! justification is mandatory, and malformed pragmas are themselves
+//! findings). Doc comments never act as pragmas.
+//!
 //! ## Quick start
 //!
 //! ```no_run
@@ -221,6 +253,7 @@
 //! println!("median = {} in {} probes", res.value, res.probes);
 //! ```
 
+pub mod analysis;
 pub mod config;
 pub mod coordinator;
 pub mod device;

@@ -12,6 +12,7 @@
 //! cp-select serve-demo [opts]             drive the selection service
 //! cp-select regress  [opts]               LMS/LTS robust-regression demo
 //! cp-select knn      [opts]               kNN demo
+//! cp-select lint     [--root DIR]         in-repo invariant lint
 //! ```
 //!
 //! Common options: `--config FILE`, `--backend host|device`,
@@ -148,6 +149,7 @@ fn run(args: Vec<String>) -> Result<()> {
         "serve-demo" => cmd_serve_demo(&opts),
         "regress" => cmd_regress(&opts),
         "knn" => cmd_knn(&opts),
+        "lint" => cmd_lint(&opts),
         "help" | "--help" | "-h" => {
             print_usage();
             Ok(())
@@ -161,7 +163,7 @@ fn print_usage() {
         "cp-select — parallel median/order statistics via convex minimization\n\
          (reproduction of Beliakov 2011; see README.md)\n\n\
          subcommands: info select bench-table bench-select trace outliers\n\
-         \x20             hybrid-sweep serve-demo regress knn\n\
+         \x20             hybrid-sweep serve-demo regress knn lint\n\
          common flags: --config F --backend host|device --artifacts DIR\n\
          \x20             --dtype f32|f64 --n N --method M --dist D --seed S --out DIR\n\
          serve-demo:   --latency-sla-us US (adaptive window p99 budget, default)\n\
@@ -549,4 +551,35 @@ fn cmd_knn(opts: &Opts) -> Result<()> {
         t0.elapsed()
     );
     Ok(())
+}
+
+/// Run the in-repo invariant lint (`cp_select::analysis`) over the
+/// crate's sources and tests. Exits nonzero on any finding, which is what
+/// makes the CI `lint` leg blocking.
+fn cmd_lint(opts: &Opts) -> Result<()> {
+    let root = match opts.get("root") {
+        Some(dir) => PathBuf::from(dir),
+        // Works from either the repo root or `rust/` (the CI leg runs
+        // `cargo run` from `rust/`).
+        None if std::path::Path::new("src").is_dir() => PathBuf::from("."),
+        None => PathBuf::from("rust"),
+    };
+    let roots: Vec<PathBuf> = ["src", "tests", "benches"]
+        .iter()
+        .map(|d| root.join(d))
+        .filter(|p| p.is_dir())
+        .collect();
+    if roots.is_empty() {
+        return Err(cp_select::invalid_arg!("--root {root:?}: no src/tests/benches underneath"));
+    }
+    let report = cp_select::analysis::lint_paths(&roots)?;
+    println!("{report}");
+    if report.clean() {
+        Ok(())
+    } else {
+        Err(cp_select::Error::Service(format!(
+            "lint failed with {} finding(s)",
+            report.findings.len()
+        )))
+    }
 }

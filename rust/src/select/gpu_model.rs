@@ -19,11 +19,12 @@
 //!   hard-coded constant.
 
 use std::path::{Path, PathBuf};
-use std::sync::{Mutex, MutexGuard};
 use std::time::Duration;
 
 use super::quickselect::quickselect;
+use crate::testkit::Clock;
 use crate::util::json::Json;
+use crate::util::sync::{OrderedGuard, OrderedMutex, RANK_COST_MODEL_POOL};
 use crate::{Error, Result};
 
 /// Widest ladder the pass planner will consider on an evaluator with no
@@ -313,7 +314,8 @@ impl PassCostModel {
 ///   plans with measured coefficients instead of the seed. A missing
 ///   sidecar is a silent cold start; a corrupt one logs and seeds.
 pub struct CostModelPool {
-    inner: Mutex<PassCostModel>,
+    /// Rank [`RANK_COST_MODEL_POOL`] in the coordinator lock order.
+    inner: OrderedMutex<PassCostModel>,
     sidecar: Option<PathBuf>,
 }
 
@@ -321,7 +323,11 @@ impl CostModelPool {
     /// In-memory pool starting from the trajectory seed (no persistence).
     pub fn seeded() -> std::sync::Arc<CostModelPool> {
         std::sync::Arc::new(CostModelPool {
-            inner: Mutex::new(PassCostModel::seeded()),
+            inner: OrderedMutex::new(
+                RANK_COST_MODEL_POOL,
+                "gpu_model.inner",
+                PassCostModel::seeded(),
+            ),
             sidecar: None,
         })
     }
@@ -345,11 +351,14 @@ impl CostModelPool {
                 }
             },
         };
-        std::sync::Arc::new(CostModelPool { inner: Mutex::new(model), sidecar: Some(sidecar) })
+        std::sync::Arc::new(CostModelPool {
+            inner: OrderedMutex::new(RANK_COST_MODEL_POOL, "gpu_model.inner", model),
+            sidecar: Some(sidecar),
+        })
     }
 
-    fn lock(&self) -> MutexGuard<'_, PassCostModel> {
-        self.inner.lock().unwrap_or_else(|e| e.into_inner())
+    fn lock(&self) -> OrderedGuard<'_, PassCostModel> {
+        self.inner.lock()
     }
 
     /// Point-in-time copy of the pooled model (what a worker plans with).
@@ -437,11 +446,19 @@ pub struct ModeledRun {
 }
 
 impl GpuQuickselectModel {
+    /// Run against the production clock (see [`GpuQuickselectModel::run_on`]).
     pub fn run(&self, data: &[f64], k: usize) -> ModeledRun {
+        self.run_on(&Clock::real(), data, k)
+    }
+
+    /// Run the real quickselect, timing it on `clock` — under a virtual
+    /// clock the measured wall is exactly the virtually-elapsed time, so
+    /// tests of the modeled slowdown are deterministic.
+    pub fn run_on(&self, clock: &Clock, data: &[f64], k: usize) -> ModeledRun {
         let mut scratch = data.to_vec();
-        let t0 = std::time::Instant::now();
+        let t0_us = clock.now_us();
         let value = quickselect(&mut scratch, k);
-        let measured = t0.elapsed();
+        let measured = Duration::from_micros(clock.now_us().saturating_sub(t0_us));
         ModeledRun {
             value,
             measured,
@@ -458,9 +475,10 @@ mod tests {
     #[test]
     fn value_is_exact_time_is_scaled() {
         let mut rng = Rng::seeded(95);
-        let data = Distribution::Normal.sample_vec(&mut rng, 10_000);
+        // large enough that the µs-resolution clock sees a nonzero wall
+        let data = Distribution::Normal.sample_vec(&mut rng, 100_000);
         let m = GpuQuickselectModel::default();
-        let run = m.run(&data, 5_000);
+        let run = m.run(&data, 50_000);
         assert_eq!(run.value, sorted_median(&data));
         let ratio = run.modeled.as_secs_f64() / run.measured.as_secs_f64().max(1e-12);
         assert!((ratio - PAPER_SLOWDOWN).abs() < 0.5, "ratio {ratio}");

@@ -21,8 +21,10 @@
 //!   what makes burst-coalescing tests scheduler-proof.
 
 use std::sync::mpsc::{Receiver, RecvTimeoutError, TryRecvError};
-use std::sync::{Arc, Condvar, Mutex, MutexGuard, OnceLock};
+use std::sync::{Arc, Condvar, OnceLock};
 use std::time::{Duration, Instant};
+
+use crate::util::sync::{OrderedGuard, OrderedMutex, RANK_VIRTUAL_CLOCK};
 
 /// A monotonic microsecond time source: the real clock, or a virtual one
 /// under manual control. Cloning is cheap; all clones of a virtual clock
@@ -126,10 +128,21 @@ struct VcState {
 }
 
 /// Manually-advanced shared timeline (the virtual half of [`Clock`]).
-#[derive(Default)]
 pub struct VirtualClock {
-    state: Mutex<VcState>,
+    /// Rank [`RANK_VIRTUAL_CLOCK`] — the innermost lock in the rank
+    /// table: anything may consult the clock while holding its own lock,
+    /// and the clock never calls out.
+    state: OrderedMutex<VcState>,
     cv: Condvar,
+}
+
+impl Default for VirtualClock {
+    fn default() -> Self {
+        VirtualClock {
+            state: OrderedMutex::new(RANK_VIRTUAL_CLOCK, "clock.state", VcState::default()),
+            cv: Condvar::new(),
+        }
+    }
 }
 
 impl VirtualClock {
@@ -137,8 +150,8 @@ impl VirtualClock {
         VirtualClock::default()
     }
 
-    fn lock(&self) -> MutexGuard<'_, VcState> {
-        self.state.lock().unwrap_or_else(|e| e.into_inner())
+    fn lock(&self) -> OrderedGuard<'_, VcState> {
+        self.state.lock()
     }
 
     /// Current virtual time in microseconds.
@@ -178,7 +191,7 @@ impl VirtualClock {
     pub fn wait_for_waiters(&self, n: usize) {
         let mut st = self.lock();
         while st.waiters < n {
-            st = self.cv.wait(st).unwrap_or_else(|e| e.into_inner());
+            st = st.wait(&self.cv);
         }
     }
 
@@ -198,7 +211,7 @@ impl VirtualClock {
         st.waiters += 1;
         self.cv.notify_all(); // unblock wait_for_waiters observers
         while st.now_us < deadline_us {
-            st = self.cv.wait(st).unwrap_or_else(|e| e.into_inner());
+            st = st.wait(&self.cv);
         }
         st.waiters -= 1;
         self.cv.notify_all();
@@ -218,7 +231,7 @@ impl VirtualClock {
         st.waiters += 1;
         self.cv.notify_all(); // unblock wait_for_waiters observers
         while st.generation == gen && st.now_us < deadline_us {
-            st = self.cv.wait(st).unwrap_or_else(|e| e.into_inner());
+            st = st.wait(&self.cv);
         }
         st.waiters -= 1;
         self.cv.notify_all();

@@ -16,13 +16,14 @@
 //! runs change their pass counts.
 
 use std::collections::HashMap;
-use std::sync::{Arc, Mutex, MutexGuard};
+use std::sync::Arc;
 
 use crate::coordinator::{BackendFactory, DatasetBackend};
 use crate::select::objective::{
     DType, Evaluator, HostEvaluator, InitStats, IntervalCounts, Neighbors, ProbeStats,
 };
 use crate::testkit::VirtualClock;
+use crate::util::sync::{OrderedGuard, OrderedMutex, RANK_FAULT_SCRIPT};
 use crate::{Error, Result};
 
 /// One scripted fault, consumed by the pass it targets.
@@ -53,16 +54,23 @@ pub struct FaultScript {
     clock: Arc<VirtualClock>,
     /// Virtual microseconds charged (clock-advanced) per fused pass.
     pass_cost_us: u64,
-    state: Mutex<ScriptState>,
+    /// Rank [`RANK_FAULT_SCRIPT`]: below the clock, above the service
+    /// locks — `on_pass` may park on the virtual clock, never the
+    /// reverse.
+    state: OrderedMutex<ScriptState>,
 }
 
 impl FaultScript {
     pub fn new(clock: Arc<VirtualClock>, pass_cost_us: u64) -> Arc<FaultScript> {
-        Arc::new(FaultScript { clock, pass_cost_us, state: Mutex::new(ScriptState::default()) })
+        Arc::new(FaultScript {
+            clock,
+            pass_cost_us,
+            state: OrderedMutex::new(RANK_FAULT_SCRIPT, "fault.state", ScriptState::default()),
+        })
     }
 
-    fn lock(&self) -> MutexGuard<'_, ScriptState> {
-        self.state.lock().unwrap_or_else(|e| e.into_inner())
+    fn lock(&self) -> OrderedGuard<'_, ScriptState> {
+        self.state.lock()
     }
 
     /// Schedule `fault` for the `pass`-th fused pass (0-based) on

@@ -1,14 +1,17 @@
 //! Shared low-level utilities: float ordering keys, compensated summation,
-//! timers, tiny JSON parser, and the dense linear-algebra substrate.
+//! timers, rank-ordered mutexes, tiny JSON parser, and the dense
+//! linear-algebra substrate.
 
 pub mod fkey;
 pub mod json;
 pub mod kahan;
 pub mod linalg;
+pub mod sync;
 pub mod timer;
 
 pub use fkey::{f32_key, f64_key, key_f32, key_f64, total_cmp_f64};
 pub use kahan::KahanSum;
+pub use sync::{OrderedGuard, OrderedMutex};
 pub use timer::{PhaseTimer, Stopwatch};
 
 /// Round `n` up to the next power of two (n >= 1).

@@ -1,0 +1,203 @@
+//! Rank-ordered mutexes: the runtime half of the `lock_order` lint rule.
+//!
+//! The static pass in [`crate::analysis`] proves the *lexical* nesting of
+//! `.lock()` scopes acyclic, but cannot see orders that only exist at
+//! runtime (locks reached through trait objects, closures, or channels).
+//! [`OrderedMutex`] closes that gap: every coordinator mutex carries a
+//! rank, each thread keeps a stack of the ranks it holds, and acquiring
+//! a lock whose rank is not strictly above the top of the stack panics —
+//! in the thread that would have deadlocked, before it blocks. The check
+//! is unconditional (not `debug_assert!`): the stress/chaos CI legs run
+//! `--release`, and an O(1) compare against the stack top is noise next
+//! to the lock itself.
+//!
+//! ## Rank table
+//!
+//! | rank | constant                | lock                                  |
+//! |------|-------------------------|---------------------------------------|
+//! | 10   | [`RANK_ADMISSION`]      | `service.admission` (token buckets)   |
+//! | 20   | [`RANK_TENANT_DEPTH`]   | `metrics.tenant_depth`                |
+//! | 30   | [`RANK_COST_MODEL_POOL`]| `gpu_model.inner` (shared cost model) |
+//! | 40   | [`RANK_FAULT_SCRIPT`]   | `fault.state` (test fault script)     |
+//! | 50   | [`RANK_VIRTUAL_CLOCK`]  | `clock.state` (virtual clock)         |
+//!
+//! The virtual clock is ranked last because everything may consult the
+//! clock while holding its own lock, and the clock never calls out.
+
+use std::cell::RefCell;
+use std::fmt;
+use std::mem::ManuallyDrop;
+use std::ops::{Deref, DerefMut};
+use std::sync::{Condvar, Mutex, MutexGuard};
+
+pub const RANK_ADMISSION: u32 = 10;
+pub const RANK_TENANT_DEPTH: u32 = 20;
+pub const RANK_COST_MODEL_POOL: u32 = 30;
+pub const RANK_FAULT_SCRIPT: u32 = 40;
+pub const RANK_VIRTUAL_CLOCK: u32 = 50;
+
+thread_local! {
+    /// Ranks (with lock names, for the panic message) this thread holds,
+    /// in acquisition order.
+    static HELD: RefCell<Vec<(u32, &'static str)>> = const { RefCell::new(Vec::new()) };
+}
+
+/// A mutex that enforces a global acquisition order by rank. Poisoning
+/// is always recovered (the repo-wide `.lock()` idiom), so the guard
+/// type never carries a `Result`.
+pub struct OrderedMutex<T> {
+    rank: u32,
+    name: &'static str,
+    inner: Mutex<T>,
+}
+
+impl<T: fmt::Debug> fmt::Debug for OrderedMutex<T> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("OrderedMutex")
+            .field("rank", &self.rank)
+            .field("name", &self.name)
+            .field("inner", &self.inner)
+            .finish()
+    }
+}
+
+impl<T> OrderedMutex<T> {
+    pub fn new(rank: u32, name: &'static str, value: T) -> Self {
+        OrderedMutex { rank, name, inner: Mutex::new(value) }
+    }
+
+    /// Acquire the lock. Panics if this thread already holds a lock of
+    /// equal or higher rank — checked *before* blocking, so the inversion
+    /// is reported by the thread that would have deadlocked.
+    pub fn lock(&self) -> OrderedGuard<'_, T> {
+        HELD.with(|h| {
+            if let Some(&(top, top_name)) = h.borrow().last() {
+                assert!(
+                    self.rank > top,
+                    "lock-order violation: acquiring {} (rank {}) while holding {} (rank {})",
+                    self.name,
+                    self.rank,
+                    top_name,
+                    top
+                );
+            }
+        });
+        let guard = self.inner.lock().unwrap_or_else(|e| e.into_inner());
+        HELD.with(|h| h.borrow_mut().push((self.rank, self.name)));
+        OrderedGuard { guard: ManuallyDrop::new(guard), rank: self.rank }
+    }
+}
+
+/// Guard returned by [`OrderedMutex::lock`]; pops its rank from the
+/// thread's held stack on drop.
+pub struct OrderedGuard<'a, T> {
+    guard: ManuallyDrop<MutexGuard<'a, T>>,
+    rank: u32,
+}
+
+impl<'a, T> OrderedGuard<'a, T> {
+    /// Block on `cv`, atomically releasing the mutex and re-acquiring it
+    /// on wake. The rank entry stays on the held stack across the wait:
+    /// rank-wise the lock never leaves this thread, which keeps
+    /// wait-loops (`while !ready { g = g.wait(&cv) }`) order-correct.
+    pub fn wait(mut self, cv: &Condvar) -> OrderedGuard<'a, T> {
+        let rank = self.rank;
+        // SAFETY: `self` is forgotten immediately after the take, so the
+        // guard is dropped exactly once (inside cv.wait's re-acquire).
+        let inner = unsafe { ManuallyDrop::take(&mut self.guard) };
+        std::mem::forget(self);
+        let inner = cv.wait(inner).unwrap_or_else(|e| e.into_inner());
+        OrderedGuard { guard: ManuallyDrop::new(inner), rank }
+    }
+}
+
+impl<T> Deref for OrderedGuard<'_, T> {
+    type Target = T;
+
+    fn deref(&self) -> &T {
+        &self.guard
+    }
+}
+
+impl<T> DerefMut for OrderedGuard<'_, T> {
+    fn deref_mut(&mut self) -> &mut T {
+        &mut self.guard
+    }
+}
+
+impl<T> Drop for OrderedGuard<'_, T> {
+    fn drop(&mut self) {
+        HELD.with(|h| {
+            let mut held = h.borrow_mut();
+            if let Some(i) = held.iter().rposition(|&(r, _)| r == self.rank) {
+                held.remove(i);
+            }
+        });
+        // SAFETY: drop runs once; `wait` forgets `self` before this could.
+        unsafe { ManuallyDrop::drop(&mut self.guard) };
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use std::panic::{catch_unwind, AssertUnwindSafe};
+    use std::sync::{Arc, Condvar};
+
+    use super::*;
+
+    #[test]
+    fn in_order_nesting_is_fine() {
+        let low = OrderedMutex::new(10, "low", 1u32);
+        let high = OrderedMutex::new(20, "high", 2u32);
+        {
+            let a = low.lock();
+            let mut b = high.lock();
+            *b += *a;
+        }
+        // both ranks popped: re-acquiring from scratch still works
+        assert_eq!(*high.lock(), 3);
+        assert_eq!(*low.lock(), 1);
+    }
+
+    #[test]
+    fn out_of_order_acquisition_panics() {
+        let low = OrderedMutex::new(10, "low", ());
+        let high = OrderedMutex::new(20, "high", ());
+        let err = catch_unwind(AssertUnwindSafe(|| {
+            let _g = high.lock();
+            let _bad = low.lock();
+        }))
+        .unwrap_err();
+        let msg = err.downcast_ref::<String>().cloned().unwrap_or_default();
+        assert!(msg.contains("lock-order violation"), "unexpected panic: {msg}");
+        // the unwind released `high`; the correct order works afterwards
+        let _a = low.lock();
+        let _b = high.lock();
+    }
+
+    #[test]
+    fn guard_survives_a_condvar_wait() {
+        let shared = Arc::new((OrderedMutex::new(30, "flag", false), Condvar::new()));
+        let peer = Arc::clone(&shared);
+        let t = std::thread::spawn(move || {
+            let (m, cv) = &*peer;
+            *m.lock() = true;
+            cv.notify_one();
+        });
+        let (m, cv) = &*shared;
+        let mut g = m.lock();
+        while !*g {
+            g = g.wait(cv);
+        }
+        // the rank is still held after the wait: a lower rank must panic
+        let low = OrderedMutex::new(10, "late-low", ());
+        assert!(catch_unwind(AssertUnwindSafe(|| {
+            let _bad = low.lock();
+        }))
+        .is_err());
+        drop(g);
+        // ...and is released with the guard
+        let _ok = low.lock();
+        t.join().unwrap();
+    }
+}

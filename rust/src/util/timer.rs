@@ -96,6 +96,7 @@ mod tests {
     fn time_closure_records_something() {
         let mut t = PhaseTimer::new();
         let v = t.time("work", || {
+            // lint: allow(clock_discipline) — wall-clock self-test of the wall-clock instrument
             std::thread::sleep(Duration::from_millis(2));
             42
         });

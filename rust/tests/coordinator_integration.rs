@@ -808,6 +808,52 @@ fn overload_chaos_counts_are_stable_across_repetitions() {
     }
 }
 
+/// Clock routing end to end: with every `Instant::now` in the run
+/// accounting re-routed through `testkit::Clock`, a run's *recorded*
+/// latency is exactly the virtual time its scripted passes cost. A wall
+/// clock anywhere on the path (the old `t0.elapsed()` sites) would make
+/// `wall` a host-dependent nonzero-noise value instead of this identity.
+#[test]
+fn recorded_run_latency_is_exactly_the_virtually_elapsed_time() {
+    let (clock, vc) = Clock::manual();
+    let script = FaultScript::new(vc.clone(), 250);
+    let svc = SelectionService::start_full(
+        1,
+        64,
+        Method::Multisection,
+        FaultInjectingBackend::factory(script.clone()),
+        CoordinatorOptions::default(),
+        clock,
+        CostModelPool::seeded(),
+    )
+    .unwrap();
+    let mut rng = Rng::seeded(404);
+    let data = Distribution::Normal.sample_vec(&mut rng, 4096);
+    let want = sorted_median(&data);
+    let id = svc.upload(data, DType::F64).unwrap();
+
+    let passes_before = script.calls(id);
+    let t0 = vc.now_us();
+    let r = svc.query(id, KSpec::Median).unwrap();
+    let elapsed = vc.now_us() - t0;
+    let passes = script.calls(id) - passes_before;
+
+    assert_eq!(r.value, want);
+    assert!(passes > 0, "the scripted backend must have run fused passes");
+    assert_eq!(elapsed, passes * 250, "virtual time advances only through scripted pass costs");
+    assert_eq!(
+        r.wall,
+        Duration::from_micros(elapsed),
+        "recorded run latency must equal the virtually-elapsed time"
+    );
+    assert_eq!(r.completed_us, t0 + elapsed, "completion stamp rides the service clock");
+    let snap = svc.metrics.snapshot();
+    assert_eq!(snap.latency_samples, 1);
+    assert_eq!(snap.mean_latency_us, elapsed as f64, "one sample, recorded at face value");
+    assert!(snap.p99_us >= elapsed, "bucketed p99 upper-bounds the sample: {snap}");
+    svc.shutdown();
+}
+
 #[test]
 fn quantile_ladder_consistency() {
     let svc = SelectionService::start(2, 64, Method::CuttingPlane, HostBackend::factory()).unwrap();

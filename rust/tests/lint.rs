@@ -1,0 +1,385 @@
+//! Fixture tests for the in-repo invariant linter (`cp_select::analysis`).
+//! Every rule is exercised three ways — a known-bad snippet that must
+//! fire, a clean snippet that must not, and a pragma-suppressed snippet —
+//! plus a self-check that the real tree is lint-clean.
+
+use cp_select::analysis::{lint_files, Report, SourceFile};
+
+fn lint_one(path: &str, src: &str) -> Report {
+    lint_files(&[SourceFile { path: path.to_string(), src: src.to_string() }])
+}
+
+fn lint_two(a: (&str, &str), b: (&str, &str)) -> Report {
+    lint_files(&[
+        SourceFile { path: a.0.to_string(), src: a.1.to_string() },
+        SourceFile { path: b.0.to_string(), src: b.1.to_string() },
+    ])
+}
+
+fn rules_of(report: &Report) -> Vec<&'static str> {
+    report.findings.iter().map(|f| f.rule).collect()
+}
+
+// ---------------------------------------------------------------------------
+// clock_discipline
+
+#[test]
+fn clock_discipline_fires_outside_wall_clock_files() {
+    let report = lint_one(
+        "src/coordinator/worker.rs",
+        r#"
+use std::time::Instant;
+fn stamp() {
+    let t0 = Instant::now();
+    let _ = t0;
+}
+"#,
+    );
+    assert_eq!(rules_of(&report), ["clock_discipline"]);
+    assert_eq!(report.findings[0].line, 4);
+}
+
+#[test]
+fn clock_discipline_flags_sleep_outside_benches() {
+    let report = lint_one(
+        "src/select/pump.rs",
+        "fn nap() {\n    std::thread::sleep(std::time::Duration::from_millis(1));\n}\n",
+    );
+    assert_eq!(rules_of(&report), ["clock_discipline"]);
+}
+
+#[test]
+fn clock_discipline_allows_the_wall_clock_files() {
+    let src = "fn stamp() -> std::time::Instant {\n    std::time::Instant::now()\n}\n";
+    assert!(lint_one("src/testkit/clock.rs", src).clean());
+    assert!(lint_one("src/harness/mod.rs", src).clean());
+    let nap = "fn nap() {\n    std::thread::sleep(std::time::Duration::from_millis(1));\n}\n";
+    assert!(lint_one("benches/scaling.rs", nap).clean());
+}
+
+#[test]
+fn clock_discipline_pragma_suppresses_with_justification() {
+    let report = lint_one(
+        "src/select/pump.rs",
+        "fn nap() {\n    // lint: allow(clock_discipline) — fixture exercises suppression\n    std::thread::sleep(std::time::Duration::from_millis(1));\n}\n",
+    );
+    assert!(report.clean(), "{report}");
+    assert_eq!(report.suppressed, 1);
+}
+
+// ---------------------------------------------------------------------------
+// poison_discipline
+
+#[test]
+fn poison_discipline_flags_unwrap_expect_and_question_mark() {
+    let report = lint_one(
+        "src/coordinator/state.rs",
+        r#"
+fn read(m: &std::sync::Mutex<u32>) -> u32 {
+    *m.lock().unwrap()
+}
+fn read2(m: &std::sync::Mutex<u32>) -> u32 {
+    *m.lock().expect("poisoned")
+}
+fn read3(m: &std::sync::Mutex<u32>) -> Result<u32, Box<dyn std::error::Error>> {
+    Ok(*m.lock()?)
+}
+"#,
+    );
+    assert_eq!(rules_of(&report), ["poison_discipline"; 3]);
+}
+
+#[test]
+fn poison_discipline_rejects_recovery_that_drops_the_guard() {
+    let report = lint_one(
+        "src/coordinator/state.rs",
+        "fn read(m: &std::sync::Mutex<u32>) -> u32 {\n    *m.lock().unwrap_or_else(|_| todo!())\n}\n",
+    );
+    assert_eq!(rules_of(&report), ["poison_discipline"]);
+}
+
+#[test]
+fn poison_discipline_accepts_recovery_and_bare_lock() {
+    let report = lint_one(
+        "src/coordinator/state.rs",
+        r#"
+fn read(m: &std::sync::Mutex<u32>) -> u32 {
+    *m.lock().unwrap_or_else(|e| e.into_inner())
+}
+fn guard(m: &OrderedMutex<u32>) -> u32 {
+    let g = m.lock();
+    *g
+}
+"#,
+    );
+    assert!(report.clean(), "{report}");
+}
+
+#[test]
+fn poison_discipline_pragma_suppresses() {
+    let report = lint_one(
+        "src/coordinator/state.rs",
+        r#"
+fn read(m: &std::sync::Mutex<u32>) -> u32 {
+    // lint: allow(poison_discipline) — fixture exercises suppression
+    *m.lock().unwrap()
+}
+"#,
+    );
+    assert!(report.clean(), "{report}");
+    assert_eq!(report.suppressed, 1);
+}
+
+// ---------------------------------------------------------------------------
+// panic_boundary
+
+const BACKEND_TRAIT: &str = r#"
+pub trait DatasetBackend {
+    fn upload(&mut self, n: usize) -> bool;
+    fn drop_dataset(&mut self, id: u32) -> bool;
+}
+"#;
+
+#[test]
+fn panic_boundary_fires_on_unprotected_backend_call() {
+    let report = lint_two(
+        ("src/coordinator/backend.rs", BACKEND_TRAIT),
+        (
+            "src/coordinator/service.rs",
+            r#"
+fn worker(backend: &mut dyn DatasetBackend) {
+    backend.upload(3);
+}
+"#,
+        ),
+    );
+    assert_eq!(rules_of(&report), ["panic_boundary"]);
+    assert!(report.findings[0].message.contains("upload"));
+}
+
+#[test]
+fn panic_boundary_accepts_catch_unwind_and_protected_helpers() {
+    let report = lint_two(
+        ("src/coordinator/backend.rs", BACKEND_TRAIT),
+        (
+            "src/coordinator/service.rs",
+            r#"
+fn run_query(backend: &mut dyn DatasetBackend) -> bool {
+    backend.upload(3)
+}
+fn worker(backend: &mut dyn DatasetBackend) {
+    let _ = catch_unwind(AssertUnwindSafe(|| backend.upload(1)));
+    let _ = catch_unwind(AssertUnwindSafe(|| run_query(backend)));
+}
+"#,
+        ),
+    );
+    assert!(report.clean(), "{report}");
+}
+
+#[test]
+fn panic_boundary_only_applies_to_the_service_file() {
+    let report = lint_two(
+        ("src/coordinator/backend.rs", BACKEND_TRAIT),
+        (
+            "src/coordinator/ingest.rs",
+            "fn feed(backend: &mut dyn DatasetBackend) {\n    backend.upload(3);\n}\n",
+        ),
+    );
+    assert!(report.clean(), "{report}");
+}
+
+#[test]
+fn panic_boundary_pragma_suppresses() {
+    let report = lint_two(
+        ("src/coordinator/backend.rs", BACKEND_TRAIT),
+        (
+            "src/coordinator/service.rs",
+            r#"
+fn worker(backend: &mut dyn DatasetBackend) {
+    // lint: allow(panic_boundary) — fixture exercises suppression
+    backend.upload(3);
+}
+"#,
+        ),
+    );
+    assert!(report.clean(), "{report}");
+    assert_eq!(report.suppressed, 1);
+}
+
+// ---------------------------------------------------------------------------
+// metrics_triple_entry
+
+const METRICS_CLEAN: &str = r#"
+use std::fmt;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+pub struct Metrics {
+    pub uploads: AtomicU64,
+}
+
+pub struct Snapshot {
+    pub uploads: u64,
+}
+
+impl Metrics {
+    pub fn snapshot(&self) -> Snapshot {
+        Snapshot { uploads: self.uploads.load(Ordering::Relaxed) }
+    }
+}
+
+impl fmt::Display for Snapshot {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(f, "uploads {}", self.uploads)
+    }
+}
+"#;
+
+#[test]
+fn metrics_triple_entry_clean_when_all_legs_present() {
+    let report = lint_one("src/coordinator/metrics.rs", METRICS_CLEAN);
+    assert!(report.clean(), "{report}");
+}
+
+#[test]
+fn metrics_triple_entry_fires_once_per_missing_leg() {
+    let src = METRICS_CLEAN.replace(
+        "pub uploads: AtomicU64,",
+        "pub uploads: AtomicU64,\n    pub shed: AtomicU64,",
+    );
+    let report = lint_one("src/coordinator/metrics.rs", &src);
+    assert_eq!(rules_of(&report), ["metrics_triple_entry"; 3]);
+    for f in &report.findings {
+        assert!(f.message.contains("`shed`"), "{f}");
+    }
+}
+
+#[test]
+fn metrics_triple_entry_pragma_suppresses_all_legs() {
+    let src = METRICS_CLEAN.replace(
+        "pub uploads: AtomicU64,",
+        "pub uploads: AtomicU64,\n    // lint: allow(metrics_triple_entry) — fixture counter is deliberately unplumbed\n    pub shed: AtomicU64,",
+    );
+    let report = lint_one("src/coordinator/metrics.rs", &src);
+    assert!(report.clean(), "{report}");
+    assert_eq!(report.suppressed, 3);
+}
+
+#[test]
+fn metrics_triple_entry_requires_the_snapshot_plumbing() {
+    let report = lint_one(
+        "src/coordinator/metrics.rs",
+        "use std::sync::atomic::AtomicU64;\npub struct Metrics {\n    pub uploads: AtomicU64,\n}\n",
+    );
+    assert_eq!(rules_of(&report), ["metrics_triple_entry"]);
+    assert!(report.findings[0].message.contains("Snapshot"));
+}
+
+// ---------------------------------------------------------------------------
+// lock_order
+
+const LOCK_CYCLE: &str = r#"
+use std::sync::Mutex;
+
+pub struct Pair {
+    a: Mutex<u32>,
+    b: Mutex<u32>,
+}
+
+impl Pair {
+    fn ab(&self) -> u32 {
+        let ga = self.a.lock().unwrap_or_else(|e| e.into_inner());
+        let gb = self.b.lock().unwrap_or_else(|e| e.into_inner());
+        *ga + *gb
+    }
+    fn ba(&self) -> u32 {
+        let gb = self.b.lock().unwrap_or_else(|e| e.into_inner());
+        let ga = self.a.lock().unwrap_or_else(|e| e.into_inner());
+        *ga + *gb
+    }
+}
+"#;
+
+#[test]
+fn lock_order_cycle_is_a_finding() {
+    let report = lint_one("src/coordinator/pair.rs", LOCK_CYCLE);
+    assert_eq!(rules_of(&report), ["lock_order"]);
+    let msg = &report.findings[0].message;
+    assert!(msg.contains("pair.a") && msg.contains("pair.b"), "{msg}");
+}
+
+#[test]
+fn lock_order_consistent_nesting_is_clean() {
+    let src = LOCK_CYCLE.replace(
+        "let gb = self.b.lock().unwrap_or_else(|e| e.into_inner());\n        let ga = self.a.lock().unwrap_or_else(|e| e.into_inner());",
+        "let ga = self.a.lock().unwrap_or_else(|e| e.into_inner());\n        let gb = self.b.lock().unwrap_or_else(|e| e.into_inner());",
+    );
+    let report = lint_one("src/coordinator/pair.rs", &src);
+    assert!(report.clean(), "{report}");
+}
+
+#[test]
+fn lock_order_drop_releases_the_guard() {
+    let src = LOCK_CYCLE.replace(
+        "let gb = self.b.lock().unwrap_or_else(|e| e.into_inner());\n        let ga = self.a.lock().unwrap_or_else(|e| e.into_inner());\n        *ga + *gb",
+        "let gb = self.b.lock().unwrap_or_else(|e| e.into_inner());\n        let x = *gb;\n        drop(gb);\n        let ga = self.a.lock().unwrap_or_else(|e| e.into_inner());\n        *ga + x",
+    );
+    let report = lint_one("src/coordinator/pair.rs", &src);
+    assert!(report.clean(), "dropping the guard ends its held scope:\n{report}");
+}
+
+#[test]
+fn lock_order_pragma_suppresses_at_the_cycle_anchor() {
+    let src = LOCK_CYCLE.replace(
+        "let gb = self.b.lock().unwrap_or_else(|e| e.into_inner());\n        let ga =",
+        "let gb = self.b.lock().unwrap_or_else(|e| e.into_inner());\n        // lint: allow(lock_order) — fixture exercises suppression\n        let ga =",
+    );
+    let report = lint_one("src/coordinator/pair.rs", &src);
+    assert!(report.clean(), "{report}");
+    assert_eq!(report.suppressed, 1);
+}
+
+// ---------------------------------------------------------------------------
+// pragma hygiene
+
+#[test]
+fn malformed_pragmas_are_findings_and_not_suppressible() {
+    let report = lint_one(
+        "src/coordinator/worker.rs",
+        "// lint: allow(pragma) — an attempt to silence the checker below\n// lint: allow(totally_unknown) — no such rule\n",
+    );
+    assert_eq!(rules_of(&report), ["pragma"]);
+    assert!(report.findings[0].message.contains("totally_unknown"));
+    assert_eq!(report.suppressed, 0);
+}
+
+#[test]
+fn pragmas_require_a_justification() {
+    let report = lint_one("src/x.rs", "// lint: allow(clock_discipline)\n");
+    assert_eq!(rules_of(&report), ["pragma"]);
+    assert!(report.findings[0].message.contains("justification"));
+}
+
+#[test]
+fn pragmas_only_cover_their_rule_and_adjacent_line() {
+    let report = lint_one(
+        "src/select/pump.rs",
+        "// lint: allow(poison_discipline) — wrong rule on purpose\nfn nap() {\n    std::thread::sleep(std::time::Duration::from_millis(1));\n}\n",
+    );
+    assert_eq!(rules_of(&report), ["clock_discipline"]);
+    assert_eq!(report.suppressed, 0);
+}
+
+// ---------------------------------------------------------------------------
+// the real tree
+
+#[test]
+fn real_tree_is_lint_clean() {
+    let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR"));
+    let roots: Vec<std::path::PathBuf> =
+        ["src", "tests", "benches"].iter().map(|d| root.join(d)).collect();
+    let report = cp_select::analysis::lint_paths(&roots).expect("lint walks the tree");
+    assert!(report.clean(), "expected a lint-clean tree, got:\n{report}");
+    assert!(report.files > 50, "expected to scan the whole crate, saw {} files", report.files);
+    assert!(report.suppressed >= 1, "the util/timer.rs sleep pragma should be tallied");
+}
