@@ -31,6 +31,23 @@ fn check_against_baseline(bench: &SelectBench) {
         }
     };
     let base = Json::parse(&text).expect("baseline BENCH_select.json parses");
+    // Wall-time rows are only comparable like-for-like: the baseline's
+    // host fingerprint must equal this machine's (cpu + cores + rustc),
+    // otherwise every wall comparison is skipped and only counts gate.
+    // (Baselines written before schema v2 carry no fingerprint: skip.)
+    let same_host = base.get_opt("host").is_some_and(|h| {
+        h.get("cpu").and_then(|v| v.as_str()).ok() == Some(bench.host.cpu.as_str())
+            && h.get("logical_cores").and_then(|v| v.as_usize()).ok()
+                == Some(bench.host.logical_cores)
+            && h.get("rustc").and_then(|v| v.as_str()).ok() == Some(bench.host.rustc.as_str())
+    });
+    if !same_host {
+        println!(
+            "baseline fingerprint differs from this host ({}, {} cores); \
+             wall-time comparisons skipped, counts still gate",
+            bench.host.cpu, bench.host.logical_cores
+        );
+    }
     let mut checked = 0usize;
     for b in base.get("rows").unwrap().as_arr().unwrap() {
         let method = b.get("method").unwrap().as_str().unwrap();
@@ -44,6 +61,24 @@ fn check_against_baseline(bench: &SelectBench) {
                 r.fused_reductions
             );
             checked += 1;
+            // Informational wall ratchet, same fingerprint only: warn on a
+            // large median drift so a trajectory regression is visible in
+            // the log, but never fail — wall time on shared runners is
+            // noisy and the counts above are the hard gate.
+            if same_host {
+                if let Some(base_wall) =
+                    b.get_opt("wall_ms").and_then(|v| v.as_f64().ok()).filter(|w| *w > 0.0)
+                {
+                    let ratio = r.wall_ms / base_wall;
+                    if ratio > 1.5 {
+                        println!(
+                            "WARN wall_ms drift for {method} n={n}: {:.3}ms vs \
+                             baseline {base_wall:.3}ms ({ratio:.2}x, informational)",
+                            r.wall_ms
+                        );
+                    }
+                }
+            }
         }
     }
     // Zero overlap means the gate checked nothing (renamed method, shifted
@@ -125,7 +160,7 @@ fn main() {
     let mut runner = common::runner();
     let max = common::env_usize("CP_BENCH_MAX_LOG2N", if common::fast() { 16 } else { 20 }) as u32;
     let sizes: Vec<u32> = (14..=max).step_by(2).collect();
-    let bench = harness::bench_select(&mut runner, &sizes, 42, DType::F64).expect("bench");
+    let bench = harness::bench_select(&mut runner, &sizes, 42, DType::F64, 3).expect("bench");
     let json = report::select_bench_json(
         &bench,
         "f64",

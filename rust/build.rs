@@ -1,0 +1,20 @@
+//! Captures the compiler version into `CP_RUSTC_VERSION` so the wall-clock
+//! host fingerprint (`harness::wall::HostFingerprint`) can record which
+//! rustc produced the measured binary — wall rows are only comparable
+//! like-for-like, and a toolchain bump is a fingerprint change.
+
+use std::process::Command;
+
+fn main() {
+    let rustc = std::env::var("RUSTC").unwrap_or_else(|_| "rustc".to_string());
+    let version = Command::new(&rustc)
+        .arg("--version")
+        .output()
+        .ok()
+        .and_then(|o| String::from_utf8(o.stdout).ok())
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .unwrap_or_else(|| "unknown".to_string());
+    println!("cargo:rustc-env=CP_RUSTC_VERSION={version}");
+    println!("cargo:rerun-if-changed=build.rs");
+}

@@ -80,6 +80,12 @@ pub struct Config {
     pub bench_instances: usize,
     /// Largest log2(n) the benches sweep.
     pub bench_max_log2n: u32,
+    /// Measured repetitions per `bench-wall` row (`[bench] wall_reps`; one
+    /// extra warmup run is always discarded). Higher than `bench_reps`
+    /// because wall medians/p99s are what gets committed to the
+    /// trajectory, and a committed number deserves more samples than a
+    /// CI count check.
+    pub bench_wall_reps: usize,
 }
 
 impl Default for Config {
@@ -105,6 +111,7 @@ impl Default for Config {
             bench_reps: 3,
             bench_instances: 3,
             bench_max_log2n: 22,
+            bench_wall_reps: 7,
         }
     }
 }
@@ -214,6 +221,9 @@ impl Config {
         if let Some(v) = doc.get_int("bench", "max_log2n")? {
             c.bench_max_log2n = v as u32;
         }
+        if let Some(v) = doc.get_int("bench", "wall_reps")? {
+            c.bench_wall_reps = (v as usize).max(1);
+        }
         Ok(c)
     }
 
@@ -243,6 +253,7 @@ mod tests {
     fn defaults_are_sane() {
         let c = Config::default();
         assert_eq!(c.default_method, Method::Hybrid);
+        assert_eq!(c.bench_wall_reps, 7);
         assert_eq!(c.hybrid_cp_iters, 7);
         assert_eq!(c.kernel_flavor, Flavor::Jnp);
         assert_eq!(c.batch_window_us, 200);
@@ -281,6 +292,7 @@ mod tests {
             reps = 5
             instances = 10
             max_log2n = 25
+            wall_reps = 11
             "#,
         )
         .unwrap();
@@ -300,6 +312,7 @@ mod tests {
         assert_eq!(c.bench_reps, 5);
         assert_eq!(c.bench_instances, 10);
         assert_eq!(c.bench_max_log2n, 25);
+        assert_eq!(c.bench_wall_reps, 11);
     }
 
     #[test]

@@ -13,6 +13,7 @@
 //! crossovers fall) is the reproduction target — see EXPERIMENTS.md.
 
 pub mod report;
+pub mod wall;
 
 use std::rc::Rc;
 use std::time::Instant;
@@ -255,6 +256,8 @@ fn paper_label(m: Method) -> &'static str {
         Method::CuttingPlane => "Cutting Plane (pure)",
         Method::GoldenSection => "Golden section",
         Method::Bfprt => "BFPRT",
+        Method::Multisection => "p-section (batched bisection)",
+        Method::FixedPivot => "Fixed-pivot (Azzini-Perrotta)",
     }
 }
 
@@ -330,7 +333,14 @@ pub struct SelectBenchRow {
     /// ladder counts once on natively batched evaluators).
     pub fused_reductions: u64,
     pub iterations: usize,
+    /// Median wall time across the measured repetitions (one warmup run is
+    /// discarded; summarized by [`wall::summarize_ms`], so this agrees
+    /// exactly with the `bench-wall` path).
     pub wall_ms: f64,
+    /// p99 wall time across the same repetitions (the max for the usual
+    /// handful of reps — still worth committing: a median that holds while
+    /// the p99 drifts is a scheduling story, not a kernel story).
+    pub wall_p99_ms: f64,
     pub exact: bool,
 }
 
@@ -417,6 +427,17 @@ pub struct SelectBench {
     /// (`None` on the host oracle): the adaptive probes-per-pass the
     /// multisection rows actually ran with on a device backend.
     pub ladder_width_hint: Option<usize>,
+    /// Machine the wall-time rows were measured on. Consumers must skip
+    /// wall comparisons across differing fingerprints (counts stay
+    /// comparable everywhere).
+    pub host: wall::HostFingerprint,
+    /// Bin-sweep throughput race (vectorized vs scalar kernel), populated
+    /// by the `bench-wall` path; `None` from the count-focused
+    /// `select_json` bench leg.
+    pub bin_sweep: Option<wall::BinSweepBench>,
+    /// Measured pass-cost coefficients (the `PassCostModel` measured-seed
+    /// path), populated by `bench-wall`; `None` otherwise.
+    pub pass_cost: Option<wall::PassCostFit>,
 }
 
 /// Probe-based methods tracked by the perf-trajectory bench.
@@ -433,11 +454,18 @@ pub fn bench_select_methods() -> Vec<Method> {
 /// coalescing experiment; the result serializes to `BENCH_select.json`
 /// (see `report::select_bench_json`) so future changes can track the
 /// passes/wall trajectory.
+///
+/// Each (method, n) row runs once untimed (warmup: cache/frequency
+/// settling, device executable reuse) and then `reps` timed repetitions;
+/// `wall_ms`/`wall_p99_ms` are the [`wall::summarize_ms`] median/p99 of
+/// those samples — the same summarization `bench-wall` commits, so
+/// harness rows and bench rows agree by construction.
 pub fn bench_select(
     runner: &mut Runner,
     log2_sizes: &[u32],
     seed: u64,
     dtype: DType,
+    reps: usize,
 ) -> Result<SelectBench> {
     let mut rng = Rng::seeded(seed);
     let mut rows = Vec::new();
@@ -464,15 +492,30 @@ pub fn bench_select(
             let _ = ev.interval(0.2, 0.8);
         }
         for m in bench_select_methods() {
-            let mut ev = runner.evaluator(&data, dtype)?;
-            let t0 = Instant::now();
-            let r = select::order_statistic(ev.as_mut(), k, m)?;
+            // warmup rep: not measured, and not the row's count source
+            // either (counts are deterministic — every rep agrees)
+            {
+                let mut ev = runner.evaluator(&data, dtype)?;
+                let _ = select::order_statistic(ev.as_mut(), k, m)?;
+            }
+            let mut samples = Vec::with_capacity(reps.max(1));
+            let mut measured = None;
+            for _ in 0..reps.max(1) {
+                let mut ev = runner.evaluator(&data, dtype)?;
+                let t0 = Instant::now();
+                let r = select::order_statistic(ev.as_mut(), k, m)?;
+                samples.push(t0.elapsed().as_secs_f64() * 1e3);
+                measured = Some(r);
+            }
+            let r = measured.expect("at least one rep");
+            let (wall_ms, wall_p99_ms) = wall::summarize_ms(&samples);
             rows.push(SelectBenchRow {
                 method: m.name(),
                 n,
                 fused_reductions: r.probes,
                 iterations: r.iterations,
-                wall_ms: t0.elapsed().as_secs_f64() * 1e3,
+                wall_ms,
+                wall_p99_ms,
                 exact: r.value == want
                     || (dtype == DType::F32 && (r.value - want).abs() <= want.abs() * 1e-6),
             });
@@ -515,6 +558,9 @@ pub fn bench_select(
         adaptive,
         overload,
         ladder_width_hint,
+        host: wall::HostFingerprint::detect(),
+        bin_sweep: None,
+        pass_cost: None,
     })
 }
 
@@ -886,9 +932,16 @@ mod tests {
     #[test]
     fn bench_select_emits_valid_json_and_coalescing_wins() {
         let mut runner = Runner::new(Backend::Host).unwrap();
-        let b = bench_select(&mut runner, &[10, 12], 7, DType::F64).unwrap();
+        let b = bench_select(&mut runner, &[10, 12], 7, DType::F64, 3).unwrap();
         assert_eq!(b.rows.len(), 8); // 4 methods × 2 sizes
         assert!(b.rows.iter().all(|r| r.exact), "{:?}", b.rows);
+        // wall summaries are real medians/p99s of the reps: positive, and
+        // the p99 can never sit below the median
+        assert!(
+            b.rows.iter().all(|r| r.wall_ms > 0.0 && r.wall_p99_ms >= r.wall_ms),
+            "{:?}",
+            b.rows
+        );
         assert!(
             b.coordinator.concurrent_fused_reductions
                 < b.coordinator.sequential_fused_reductions,
@@ -934,11 +987,22 @@ mod tests {
         );
         let json = report::select_bench_json(&b, "f64", "host");
         let parsed = crate::util::json::Json::parse(&json).unwrap();
-        assert_eq!(parsed.get("schema").unwrap().as_str().unwrap(), "cp-select/bench_select/v1");
+        assert_eq!(parsed.get("schema").unwrap().as_str().unwrap(), "cp-select/bench_select/v2");
         // host oracle has no native ladder-width limit
         assert!(b.ladder_width_hint.is_none());
         assert!(json.contains("\"ladder_width_hint\": null"), "{json}");
+        // the host fingerprint block gates like-for-like wall comparison
+        let host = parsed.get("host").unwrap();
+        assert!(!host.get("cpu").unwrap().as_str().unwrap().is_empty());
+        assert!(host.get("logical_cores").unwrap().as_usize().unwrap() >= 1);
+        assert!(!host.get("rustc").unwrap().as_str().unwrap().is_empty());
+        // bench_select leaves the bench-wall-only blocks null
+        assert!(json.contains("\"bin_sweep\": null"), "{json}");
+        assert!(json.contains("\"pass_cost\": null"), "{json}");
         assert_eq!(parsed.get("rows").unwrap().as_arr().unwrap().len(), 8);
+        let row0 = &parsed.get("rows").unwrap().as_arr().unwrap()[0];
+        assert!(row0.get("wall_ms").unwrap().as_f64().unwrap() > 0.0);
+        assert!(row0.get("wall_p99_ms").unwrap().as_f64().unwrap() > 0.0);
         let queries = parsed.get("coordinator").unwrap().get("queries").unwrap();
         assert_eq!(queries.as_usize().unwrap(), 8);
         let w = parsed.get("window").unwrap();

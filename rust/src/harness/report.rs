@@ -103,15 +103,44 @@ pub fn hybrid_sweep_csv(points: &[HybridSweepPoint]) -> String {
     s
 }
 
+/// Minimal JSON string escape for the hand-rolled writer (fingerprint
+/// strings carry arbitrary `/proc/cpuinfo` content).
+fn json_str(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
 /// Machine-readable `BENCH_select.json` (hand-rolled writer; serde is
-/// unavailable offline). Schema `cp-select/bench_select/v1`:
-/// method × n × fused reductions × wall-ms rows plus the coordinator
-/// coalescing counts, so future PRs can diff the perf trajectory.
+/// unavailable offline). Schema `cp-select/bench_select/v2`:
+/// method × n × fused reductions × wall-ms (median + p99 of the reps)
+/// rows under a `host` fingerprint, plus the coordinator coalescing
+/// counts and — from the `bench-wall` path — the bin-sweep throughput
+/// race and the measured pass-cost coefficients, so future PRs can diff
+/// both the count trajectory (hard gate, host-independent) and the
+/// wall-clock trajectory (informational, fingerprint-scoped).
 pub fn select_bench_json(b: &SelectBench, dtype: &str, backend: &str) -> String {
     let mut s = String::from("{\n");
-    s.push_str("  \"schema\": \"cp-select/bench_select/v1\",\n");
+    s.push_str("  \"schema\": \"cp-select/bench_select/v2\",\n");
     s.push_str(&format!("  \"backend\": \"{backend}\",\n"));
     s.push_str(&format!("  \"dtype\": \"{dtype}\",\n"));
+    s.push_str(&format!(
+        "  \"host\": {{\"cpu\": {}, \"logical_cores\": {}, \"rustc\": {}}},\n",
+        json_str(&b.host.cpu),
+        b.host.logical_cores,
+        json_str(&b.host.rustc)
+    ));
     s.push_str(&format!(
         "  \"ladder_width_hint\": {},\n",
         b.ladder_width_hint.map_or("null".to_string(), |w| w.to_string())
@@ -120,17 +149,40 @@ pub fn select_bench_json(b: &SelectBench, dtype: &str, backend: &str) -> String 
     for (i, r) in b.rows.iter().enumerate() {
         s.push_str(&format!(
             "    {{\"method\": \"{}\", \"n\": {}, \"fused_reductions\": {}, \
-             \"iterations\": {}, \"wall_ms\": {:.4}, \"exact\": {}}}{}\n",
+             \"iterations\": {}, \"wall_ms\": {:.4}, \"wall_p99_ms\": {:.4}, \
+             \"exact\": {}}}{}\n",
             r.method,
             r.n,
             r.fused_reductions,
             r.iterations,
             r.wall_ms,
+            r.wall_p99_ms,
             r.exact,
             if i + 1 < b.rows.len() { "," } else { "" }
         ));
     }
     s.push_str("  ],\n");
+    // bench-wall-only blocks: the kernel throughput race and the measured
+    // pass-cost seed; null when the count-focused bench leg produced the
+    // document.
+    match &b.bin_sweep {
+        None => s.push_str("  \"bin_sweep\": null,\n"),
+        Some(bs) => s.push_str(&format!(
+            "  \"bin_sweep\": {{\"n\": {}, \"width\": {}, \"reps\": {}, \
+             \"vector_ms\": {:.4}, \"scalar_ms\": {:.4}, \"vector_gbps\": {:.3}, \
+             \"scalar_gbps\": {:.3}, \"speedup\": {:.3}}},\n",
+            bs.n, bs.width, bs.reps, bs.vector_ms, bs.scalar_ms, bs.vector_gbps,
+            bs.scalar_gbps, bs.speedup
+        )),
+    }
+    match &b.pass_cost {
+        None => s.push_str("  \"pass_cost\": null,\n"),
+        Some(pc) => s.push_str(&format!(
+            "  \"pass_cost\": {{\"sweep_s_per_elem\": {:.6e}, \
+             \"per_probe_s_per_elem\": {:.6e}}},\n",
+            pc.sweep, pc.per_probe
+        )),
+    }
     // the coordinator + window experiments always run on the host backend
     // (their counts are substrate-independent), whatever the rows were
     // measured on

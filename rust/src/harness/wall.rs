@@ -1,0 +1,229 @@
+//! Wall-clock measurement: the `bench-wall` half of the perf trajectory.
+//!
+//! Everything here produces the numbers `BENCH_select.json` commits under
+//! a [`HostFingerprint`]: repetition summaries (median + p99, computed
+//! with the repo's *own* order-statistics code — the bench eats its own
+//! dogfood), bin-sweep throughput in GB/s for the vectorized and scalar
+//! ladder kernels, and a two-width fit of the pass-cost coefficients that
+//! seeds [`crate::select::PassCostModel`] with measured numbers
+//! ([`crate::select::PassCostModel::seeded_from_measured`]).
+//!
+//! Wall times are only comparable on the machine that produced them, so
+//! every consumer (the `select_json` gate, the CI perf-smoke leg) first
+//! checks [`HostFingerprint::matches`] and degrades to count-only
+//! comparison across differing hosts — counts are the hard gate, wall
+//! time is the trajectory.
+
+use std::time::Instant;
+
+use crate::select::{fixed_pivot::fixed_pivot_select, ladder_sweep, ladder_sweep_scalar};
+use crate::stats::Rng;
+use crate::{Error, Result};
+
+/// Identity of the machine a wall-time row was measured on. Two rows are
+/// comparable iff their fingerprints are equal ([`HostFingerprint::matches`]);
+/// the committed trajectory's fingerprint additionally tells a reader
+/// exactly which hardware the numbers describe.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct HostFingerprint {
+    /// CPU model string (`/proc/cpuinfo` "model name"; "unknown" when the
+    /// platform does not expose it).
+    pub cpu: String,
+    /// Logical core count (`std::thread::available_parallelism`).
+    pub logical_cores: usize,
+    /// Compiler that built the binary (`rustc --version`, captured at
+    /// build time by `build.rs` into `CP_RUSTC_VERSION`).
+    pub rustc: String,
+}
+
+impl HostFingerprint {
+    /// Fingerprint of the machine running this process.
+    pub fn detect() -> HostFingerprint {
+        let cpu = std::fs::read_to_string("/proc/cpuinfo")
+            .ok()
+            .and_then(|text| {
+                text.lines()
+                    .find(|l| l.starts_with("model name"))
+                    .and_then(|l| l.split(':').nth(1))
+                    .map(|v| v.trim().to_string())
+            })
+            .filter(|s| !s.is_empty())
+            .unwrap_or_else(|| "unknown".to_string());
+        let logical_cores = std::thread::available_parallelism().map_or(1, |c| c.get());
+        HostFingerprint {
+            cpu,
+            logical_cores,
+            rustc: env!("CP_RUSTC_VERSION").to_string(),
+        }
+    }
+
+    /// Whether wall times measured under `other` are comparable to ours.
+    pub fn matches(&self, other: &HostFingerprint) -> bool {
+        self == other
+    }
+}
+
+/// Summarize repetition samples (milliseconds) as `(median, p99)` — with
+/// the repo's own selection code ([`fixed_pivot_select`]), not a sort.
+/// The p99 is the `ceil(0.99·n)`-th order statistic, which for the usual
+/// handful of reps is the max; both use the paper's `x_([(n+1)/2])` rank
+/// convention via [`crate::util::median_rank`].
+pub fn summarize_ms(samples: &[f64]) -> (f64, f64) {
+    assert!(!samples.is_empty(), "summarize_ms needs at least one sample");
+    let n = samples.len();
+    let mut scratch = samples.to_vec();
+    let median = fixed_pivot_select(&mut scratch, crate::util::median_rank(n));
+    let p99_rank = ((0.99 * n as f64).ceil() as usize).clamp(1, n);
+    let mut scratch = samples.to_vec();
+    let p99 = fixed_pivot_select(&mut scratch, p99_rank);
+    (median, p99)
+}
+
+/// The bin-sweep throughput race: the vectorized lane-split kernel
+/// ([`ladder_sweep`]) vs the scalar oracle ([`ladder_sweep_scalar`]) over
+/// the same data and ladder. `speedup` is what the CI perf-smoke leg
+/// gates (≥ 1.5× at n = 2²²).
+#[derive(Debug, Clone)]
+pub struct BinSweepBench {
+    pub n: usize,
+    /// Ladder width swept (the committed trajectory's planning width, 15).
+    pub width: usize,
+    /// Measured repetitions per kernel (after one warmup each).
+    pub reps: usize,
+    pub vector_ms: f64,
+    pub scalar_ms: f64,
+    /// Median data throughput, GB/s of f64 payload (`8·n / median_s / 1e9`).
+    pub vector_gbps: f64,
+    pub scalar_gbps: f64,
+    /// `vector_gbps / scalar_gbps`.
+    pub speedup: f64,
+}
+
+fn rungs_for(width: usize) -> Vec<f64> {
+    (1..=width).map(|i| i as f64 / (width + 1) as f64).collect()
+}
+
+/// Median milliseconds of `reps` timed calls of `f` (one untimed warmup).
+fn time_reps_ms<R>(reps: usize, mut f: impl FnMut() -> R) -> f64 {
+    std::hint::black_box(f());
+    let mut samples = Vec::with_capacity(reps);
+    for _ in 0..reps.max(1) {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        samples.push(t0.elapsed().as_secs_f64() * 1e3);
+    }
+    summarize_ms(&samples).0
+}
+
+/// Race the two sweep kernels over `n` uniform elements against a
+/// `width`-rung ladder. Before timing, the two partials are checked for
+/// exact `cnt`/`eq` agreement — a throughput number from a kernel that
+/// miscounts would poison the trajectory, so disagreement is an error,
+/// not a row.
+pub fn bench_bin_sweep(n: usize, width: usize, reps: usize, seed: u64) -> Result<BinSweepBench> {
+    let mut rng = Rng::seeded(seed);
+    let data: Vec<f64> = (0..n).map(|_| rng.f64()).collect();
+    let ys = rungs_for(width);
+    let vec_part = ladder_sweep(&data, &ys);
+    let sca_part = ladder_sweep_scalar(&data, &ys);
+    if vec_part.cnt != sca_part.cnt || vec_part.eq != sca_part.eq {
+        return Err(Error::Service(
+            "bin-sweep bench: vectorized kernel disagrees with the scalar oracle".into(),
+        ));
+    }
+    let reps = reps.max(1);
+    let vector_ms = time_reps_ms(reps, || ladder_sweep(&data, &ys));
+    let scalar_ms = time_reps_ms(reps, || ladder_sweep_scalar(&data, &ys));
+    let gbps = |ms: f64| (n as f64 * 8.0) / (ms.max(1e-9) * 1e-3) / 1e9;
+    let (vector_gbps, scalar_gbps) = (gbps(vector_ms), gbps(scalar_ms));
+    Ok(BinSweepBench {
+        n,
+        width,
+        reps,
+        vector_ms,
+        scalar_ms,
+        vector_gbps,
+        scalar_gbps,
+        speedup: vector_gbps / scalar_gbps.max(1e-12),
+    })
+}
+
+/// Measured pass-cost coefficients: one `p`-rung fused pass over `n`
+/// elements costs `(sweep + per_probe·p)·n` seconds (the
+/// [`crate::select::PassCostModel`] shape). Fitted from a two-width
+/// kernel sweep; feed into
+/// [`crate::select::PassCostModel::seeded_from_measured`].
+#[derive(Debug, Clone, Copy)]
+pub struct PassCostFit {
+    /// Fixed per-element sweep cost, seconds.
+    pub sweep: f64,
+    /// Incremental per-element per-rung compare cost, seconds.
+    pub per_probe: f64,
+}
+
+/// Fit `(sweep, per_probe)` from the vectorized kernel at widths 1 and
+/// 15 (the committed trajectory's planning width): two points determine
+/// the linear model exactly, and the width-15 point anchors the fit
+/// where the planner actually operates. A quick noisy run can produce a
+/// non-physical pair (e.g. width-15 faster than width-1);
+/// `seeded_from_measured` guards against that downstream, so the raw fit
+/// is reported as measured.
+pub fn measure_pass_cost(n: usize, reps: usize, seed: u64) -> PassCostFit {
+    const WIDE: usize = 15;
+    let mut rng = Rng::seeded(seed);
+    let data: Vec<f64> = (0..n).map(|_| rng.f64()).collect();
+    let narrow = rungs_for(1);
+    let wide = rungs_for(WIDE);
+    let t1 = time_reps_ms(reps, || ladder_sweep(&data, &narrow)) * 1e-3;
+    let tw = time_reps_ms(reps, || ladder_sweep(&data, &wide)) * 1e-3;
+    let per_probe = (tw - t1) / ((WIDE - 1) as f64 * n as f64);
+    let sweep = t1 / n as f64 - per_probe;
+    PassCostFit { sweep, per_probe }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summaries_use_the_paper_rank_convention() {
+        // odd count: median is the exact middle, p99 rank ceil(.99·5)=5
+        assert_eq!(summarize_ms(&[5.0, 1.0, 4.0, 2.0, 3.0]), (3.0, 5.0));
+        // even count: x_([(n+1)/2]) is the lower middle
+        assert_eq!(summarize_ms(&[4.0, 1.0, 3.0, 2.0]), (2.0, 4.0));
+        assert_eq!(summarize_ms(&[7.5]), (7.5, 7.5));
+        // 100+ samples: p99 stops being the max
+        let v: Vec<f64> = (1..=200).map(|i| i as f64).collect();
+        assert_eq!(summarize_ms(&v), (100.0, 198.0));
+    }
+
+    #[test]
+    fn fingerprint_detects_and_compares() {
+        let f = HostFingerprint::detect();
+        assert!(f.logical_cores >= 1);
+        assert!(!f.cpu.is_empty());
+        assert!(!f.rustc.is_empty());
+        assert!(f.matches(&f.clone()));
+        let other = HostFingerprint { cpu: "different".into(), ..f.clone() };
+        assert!(!f.matches(&other));
+    }
+
+    #[test]
+    fn bin_sweep_bench_produces_consistent_rows() {
+        // small n: this is a schema/consistency test, not a perf assertion
+        // (the 1.5× gate lives in the CI perf-smoke leg at n = 2²²)
+        let b = bench_bin_sweep(1 << 14, 15, 3, 9).unwrap();
+        assert_eq!(b.n, 1 << 14);
+        assert_eq!(b.width, 15);
+        assert!(b.vector_ms > 0.0 && b.scalar_ms > 0.0);
+        assert!(b.vector_gbps > 0.0 && b.scalar_gbps > 0.0);
+        assert!(b.speedup > 0.0);
+    }
+
+    #[test]
+    fn pass_cost_fit_is_finite() {
+        let fit = measure_pass_cost(1 << 14, 3, 11);
+        assert!(fit.sweep.is_finite());
+        assert!(fit.per_probe.is_finite());
+    }
+}

@@ -180,6 +180,50 @@
 //! `BENCH_select.json` — counts by equality, tenant fairness by a
 //! max/min completion-ratio bound.
 //!
+//! ## The wall-clock trajectory and the vectorized host sweep
+//!
+//! Pass counts are the portable, host-independent trajectory — but the
+//! paper's claims are ultimately about wall time, so the repo now tracks
+//! both. Two coupled pieces:
+//!
+//! - **Lane-split binned sweep** — the host ladder kernel
+//!   ([`select::ladder_sweep`], the engine under every `probe_many`) is a
+//!   tiled, branch-free loop: each 8-element tile ([`select::LADDER_LANES`])
+//!   computes its bin index as a sum of `(rung < x) as usize` compares —
+//!   one SIMD compare per rung across the whole tile — and scatters into
+//!   **lane-private** accumulators laid out bin-major × lane-minor
+//!   (`cnt[bin * LANES + lane]`). The old scalar kernel accumulated all
+//!   lanes into one shared bin array, so consecutive same-bin elements
+//!   formed a store-to-load forwarding chain (~4–5 cycles/element) that
+//!   also blocked autovectorization; giving every lane its own column
+//!   breaks the dependence and lets LLVM vectorize the compare ladder.
+//!   NaN elements route to a private trash slot and never surface; lanes
+//!   fold into one [`select::LadderPartial`] per chunk via
+//!   `LadderPartial::merge`, so the threaded scoped-chunk path and every
+//!   caller above it are unchanged. Counts (`cnt`/`eq`) are bit-identical
+//!   to the retained scalar oracle ([`select::ladder_sweep_scalar`], pinned
+//!   by `tests/ladder_wall.rs`); `sum` may reassociate per lane, the same
+//!   O(ε·Σ|x|) license the threaded reduction already claims.
+//! - **`bench-wall`** — `cargo run --release -- bench-wall` (from
+//!   `rust/`) measures the real trajectory: per-(method, n) wall medians
+//!   and p99s over warmup + N reps (summarized by the repo's *own*
+//!   order-statistic code — [`select::fixed_pivot`] at the paper's rank
+//!   convention), the vector-vs-scalar bin-sweep throughput race in GB/s,
+//!   and a measured `(sweep, per_probe)` pass-cost fit that seeds
+//!   [`select::PassCostModel`] via `seeded_from_measured`. Everything
+//!   lands in `BENCH_select.json` (schema v2) under a host fingerprint
+//!   (cpu model, logical cores, rustc); the `select_json` gate compares
+//!   wall numbers only between identical fingerprints — counts stay the
+//!   hard cross-host gate, wall time is the informational per-host ratchet.
+//!   `--quick 1` shrinks the grid for CI's perf-smoke leg, and `--smoke 1`
+//!   additionally asserts the vectorized sweep beats the scalar oracle by
+//!   ≥ 1.5× at n = 2²².
+//!
+//! [`Method::FixedPivot`](select::Method::FixedPivot) rides along as a
+//! host baseline: the Azzini–Perrotta single-pass fixed-pivot selector
+//! (pivot = `A[k]` each round), the simplest credible download-method
+//! yardstick for the wall table.
+//!
 //! ## The device ladder path and probe accounting
 //!
 //! The AOT artifact set carries a `fused_ladder(p)` kernel family (emitted

@@ -10,6 +10,7 @@
 //! cp-select outliers [opts]               Fig 5 sensitivity sweep
 //! cp-select hybrid-sweep [opts]           §IV iteration-budget ablation
 //! cp-select serve-demo [opts]             drive the selection service
+//! cp-select bench-wall [opts]             wall-clock trajectory + kernel race
 //! cp-select regress  [opts]               LMS/LTS robust-regression demo
 //! cp-select knn      [opts]               kNN demo
 //! cp-select lint     [--root DIR]         in-repo invariant lint
@@ -143,6 +144,7 @@ fn run(args: Vec<String>) -> Result<()> {
         "select" => cmd_select(&opts),
         "bench-table" => cmd_bench_table(&opts),
         "bench-select" => cmd_bench_select(&opts),
+        "bench-wall" => cmd_bench_wall(&opts),
         "trace" => cmd_trace(&opts),
         "outliers" => cmd_outliers(&opts),
         "hybrid-sweep" => cmd_hybrid_sweep(&opts),
@@ -162,10 +164,13 @@ fn print_usage() {
     println!(
         "cp-select — parallel median/order statistics via convex minimization\n\
          (reproduction of Beliakov 2011; see README.md)\n\n\
-         subcommands: info select bench-table bench-select trace outliers\n\
+         subcommands: info select bench-table bench-select bench-wall trace outliers\n\
          \x20             hybrid-sweep serve-demo regress knn lint\n\
          common flags: --config F --backend host|device --artifacts DIR\n\
          \x20             --dtype f32|f64 --n N --method M --dist D --seed S --out DIR\n\
+         bench-wall:   --quick 1 (small sizes + 3 reps) --smoke 1 (fail if the\n\
+         \x20             vectorized bin sweep is < 1.5x the scalar kernel)\n\
+         \x20             --reps N --sweep-n N (kernel-race size, default 2^22)\n\
          serve-demo:   --latency-sla-us US (adaptive window p99 budget, default)\n\
          \x20             --batch-window-us US (pin a fixed window instead)\n\
          \x20             --batch-cap N --cost-model-sidecar FILE\n\
@@ -267,8 +272,10 @@ fn cmd_bench_select(opts: &Opts) -> Result<()> {
     let max_log2 = opts.usize("max-log2n", 20)? as u32;
     let min_log2 = opts.usize("min-log2n", 14)? as u32;
     let sizes: Vec<u32> = (min_log2..=max_log2).step_by(2).collect();
+    let reps = opts.usize("reps", cfg.bench_reps)?;
     let mut runner = opts.runner(&cfg)?;
-    let bench = harness::bench_select(&mut runner, &sizes, opts.u64("seed", 42)?, cfg.dtype)?;
+    let bench =
+        harness::bench_select(&mut runner, &sizes, opts.u64("seed", 42)?, cfg.dtype, reps)?;
     let json = report::select_bench_json(
         &bench,
         cfg.dtype.name(),
@@ -283,6 +290,63 @@ fn cmd_bench_select(opts: &Opts) -> Result<()> {
         "coordinator: {} coalesced queries = {} fused reductions vs {} sequential",
         c.queries, c.concurrent_fused_reductions, c.sequential_fused_reductions
     );
+    Ok(())
+}
+
+fn cmd_bench_wall(opts: &Opts) -> Result<()> {
+    // The wall-clock trajectory: warmup + N reps per (method, n) row
+    // summarized as median/p99, the vectorized-vs-scalar bin-sweep
+    // throughput race, and a measured pass-cost fit — all committed to
+    // BENCH_select.json under this host's fingerprint. `--quick 1` is the
+    // CI perf-smoke shape (small sizes, 3 reps); `--smoke 1` turns the
+    // ≥1.5× kernel-speedup assertion into a hard failure.
+    let cfg = opts.config()?;
+    let quick = opts.usize("quick", 0)? != 0;
+    let smoke = opts.usize("smoke", 0)? != 0;
+    let max_log2 = opts.usize("max-log2n", if quick { 16 } else { 20 })? as u32;
+    let min_log2 = opts.usize("min-log2n", 14)? as u32;
+    let sizes: Vec<u32> = (min_log2..=max_log2).step_by(2).collect();
+    let reps = opts.usize("reps", if quick { 3 } else { cfg.bench_wall_reps })?;
+    let seed = opts.u64("seed", 42)?;
+    let sweep_n = opts.usize("sweep-n", 1 << 22)?;
+    let mut runner = opts.runner(&cfg)?;
+    let mut bench = harness::bench_select(&mut runner, &sizes, seed, cfg.dtype, reps)?;
+
+    // Kernel throughput race at the gate size (always 2^22 by default:
+    // big enough that the scalar scatter dependence, not L1 residency,
+    // is what's measured).
+    let sweep = harness::wall::bench_bin_sweep(sweep_n, 15, reps, seed)?;
+    println!(
+        "bin sweep n={} width={}: vector {:.2} GB/s vs scalar {:.2} GB/s ({:.2}x)",
+        sweep.n, sweep.width, sweep.vector_gbps, sweep.scalar_gbps, sweep.speedup
+    );
+
+    // Measured pass-cost coefficients -> the PassCostModel seed path.
+    let fit = harness::wall::measure_pass_cost(sweep_n, reps, seed);
+    let seeded = cp_select::select::PassCostModel::seeded_from_measured(fit.sweep, fit.per_probe);
+    println!(
+        "pass cost: sweep {:.3e} s/elem, per-probe {:.3e} s/elem -> planned width {}",
+        fit.sweep,
+        fit.per_probe,
+        seeded.best_width(None)
+    );
+    bench.bin_sweep = Some(sweep.clone());
+    bench.pass_cost = Some(fit);
+
+    let json = report::select_bench_json(
+        &bench,
+        cfg.dtype.name(),
+        if runner.is_device() { "pjrt-device" } else { "host" },
+    );
+    let out = PathBuf::from(opts.get("out").unwrap_or("."));
+    let p = report::write_result(&out, "BENCH_select.json", &json)?;
+    println!("wrote {} (host: {})", p.display(), bench.host.cpu);
+    if smoke && sweep.speedup < 1.5 {
+        return Err(cp_select::Error::Service(format!(
+            "perf smoke: vectorized bin sweep only {:.2}x the scalar kernel (need >= 1.5x)",
+            sweep.speedup
+        )));
+    }
     Ok(())
 }
 

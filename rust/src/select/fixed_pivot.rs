@@ -1,0 +1,140 @@
+//! Azzini–Perrotta fixed-pivot selection (arxiv 2302.05705) — the
+//! single-pass host baseline the wall-clock trajectory races.
+//!
+//! Wirth-style `kSmallest` with the pivot *fixed at the target rank's
+//! current occupant* (`A[k]`) instead of a sampled or median-of-3 pivot:
+//! after each Hoare partition the element that lands at position `k` is
+//! the next pivot, so the window `[lo, hi]` collapses onto `k` from both
+//! sides and the expected scan cost is a small constant number of passes
+//! over the shrinking window — no recursion, no scratch allocation, no
+//! three-way pass. On the throughput axis this is the strongest simple
+//! host selector we know of, which is exactly why `bench-wall` uses it
+//! as the baseline for the vectorized bin-sweep trajectory (see the
+//! crate docs §"The wall-clock trajectory and the vectorized host
+//! sweep").
+//!
+//! NaN handling: every comparison against NaN is false, so both scan
+//! loops stop *earlier* than they would under a total order — the
+//! explicit `i < hi` / `j > lo` bounds make that safe (no sentinel
+//! argument needed) and the routine always terminates, but the returned
+//! rank is unspecified when NaNs are present. That matches the other
+//! download baselines ([`super::quickselect`]); callers that may carry
+//! NaN payloads use the probe-based methods, whose NaN semantics are
+//! pinned by the evaluator contract.
+
+/// k-th smallest (1-indexed, matching [`super::quickselect::quickselect`])
+/// via the Azzini–Perrotta fixed-pivot partition. Operates on a scratch
+/// copy the caller provides (mutated in place).
+pub fn fixed_pivot_select(data: &mut [f64], k: usize) -> f64 {
+    assert!((1..=data.len()).contains(&k), "k={k} n={}", data.len());
+    let kk = (k - 1) as isize;
+    let mut lo = 0isize;
+    let mut hi = data.len() as isize - 1;
+    while lo < hi {
+        // The fixed pivot: whatever currently occupies the target rank.
+        let pivot = data[kk as usize];
+        let mut i = lo;
+        let mut j = hi;
+        loop {
+            // Hoare scans. Under a total order the pivot value itself
+            // bounds both scans (it sits inside [i, j]); the explicit
+            // index guards only matter when NaNs have broken the order,
+            // and then they guarantee termination instead of UB.
+            while i < hi && data[i as usize] < pivot {
+                i += 1;
+            }
+            while j > lo && pivot < data[j as usize] {
+                j -= 1;
+            }
+            if i <= j {
+                data.swap(i as usize, j as usize);
+                i += 1;
+                j -= 1;
+            }
+            if i > j {
+                break;
+            }
+        }
+        // Keep only the side still holding rank kk; when the crossing
+        // straddles kk both fire and the loop exits with data[kk] final.
+        if j < kk {
+            lo = i;
+        }
+        if kk < i {
+            hi = j;
+        }
+    }
+    data[kk as usize]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stats::{sorted_order_statistic, Distribution, Rng};
+
+    #[test]
+    fn matches_sort_oracle() {
+        let mut rng = Rng::seeded(71);
+        for d in Distribution::ALL {
+            let data = d.sample_vec(&mut rng, 3001);
+            for k in [1, 2, 1500, 1501, 3000, 3001] {
+                let want = sorted_order_statistic(&data, k);
+                let mut scratch = data.clone();
+                assert_eq!(fixed_pivot_select(&mut scratch, k), want, "{} k={k}", d.name());
+            }
+        }
+    }
+
+    #[test]
+    fn adversarial_patterns() {
+        for pattern in ["sorted", "reverse", "constant", "organ"] {
+            let n = 1024usize;
+            let data: Vec<f64> = match pattern {
+                "sorted" => (0..n).map(|i| i as f64).collect(),
+                "reverse" => (0..n).rev().map(|i| i as f64).collect(),
+                "constant" => vec![5.0; n],
+                _ => (0..n).map(|i| (i.min(n - i)) as f64).collect(),
+            };
+            for k in [1, 2, n / 2, n - 1, n] {
+                let want = sorted_order_statistic(&data, k);
+                let mut s = data.clone();
+                assert_eq!(fixed_pivot_select(&mut s, k), want, "{pattern} k={k}");
+            }
+        }
+    }
+
+    #[test]
+    fn duplicates_heavy() {
+        let mut rng = Rng::seeded(72);
+        let data: Vec<f64> = (0..5000).map(|_| (rng.below(7)) as f64).collect();
+        for k in [1, 13, 2500, 4999, 5000] {
+            let want = sorted_order_statistic(&data, k);
+            let mut s = data.clone();
+            assert_eq!(fixed_pivot_select(&mut s, k), want, "k={k}");
+        }
+    }
+
+    #[test]
+    fn tiny_inputs() {
+        assert_eq!(fixed_pivot_select(&mut [3.0], 1), 3.0);
+        assert_eq!(fixed_pivot_select(&mut [3.0, 1.0], 1), 1.0);
+        assert_eq!(fixed_pivot_select(&mut [3.0, 1.0], 2), 3.0);
+        assert_eq!(fixed_pivot_select(&mut [2.0, 2.0, 1.0], 2), 2.0);
+    }
+
+    #[test]
+    fn terminates_on_nan_payloads() {
+        // Result is unspecified with NaNs present; the contract is only
+        // that the bounds-guarded scans terminate without panicking.
+        let mut rng = Rng::seeded(73);
+        for frac in [1, 3, 7] {
+            let data: Vec<f64> = (0..999)
+                .map(|i| if i % frac == 0 { f64::NAN } else { rng.f64() })
+                .collect();
+            for k in [1, 500, 999] {
+                let mut s = data.clone();
+                let _ = fixed_pivot_select(&mut s, k);
+            }
+        }
+    }
+}

@@ -110,6 +110,27 @@ impl PassCostModel {
         }
     }
 
+    /// Model seeded from *measured* sweep coefficients instead of the
+    /// committed-trajectory ratio: `bench-wall` fits `(a, b)` from a
+    /// two-width kernel sweep on the local host
+    /// ([`crate::harness::wall::measure_pass_cost`]) and hands them here,
+    /// so a fresh model plans from this machine's real throughput before
+    /// any coordinator runs have been observed. The measured pair replaces
+    /// only the *seed*; the online normal-equation refinement and all its
+    /// identifiability guards behave exactly as with [`PassCostModel::seeded`].
+    /// Non-physical measurements (non-finite, zero or negative sweep cost,
+    /// negative per-probe cost — what a mis-timed quick run produces)
+    /// fall back to the trajectory seed rather than poisoning the planner.
+    pub fn seeded_from_measured(sweep: f64, per_probe: f64) -> Self {
+        if !(sweep.is_finite() && sweep > 0.0 && per_probe.is_finite() && per_probe >= 0.0) {
+            return Self::seeded();
+        }
+        let mut m = Self::seeded();
+        m.seed_sweep = sweep;
+        m.seed_per_probe = per_probe;
+        m
+    }
+
     /// Number of runs observed so far.
     pub fn samples(&self) -> u64 {
         self.samples
@@ -336,6 +357,17 @@ impl CostModelPool {
     /// parses, logs and seeds when it is corrupt, and silently seeds when
     /// it does not exist yet (first boot). [`CostModelPool::persist`]
     /// writes back to the same path.
+    ///
+    /// The "seed" here is the committed-trajectory ratio
+    /// ([`PassCostModel::seeded`]). A host that has run `bench-wall` can
+    /// do better: the harness fits real `(sweep, per_probe)` coefficients
+    /// from the kernel sweep and constructs the starting model with
+    /// [`PassCostModel::seeded_from_measured`], merging any sidecar
+    /// statistics on top — so a cold pool on a measured machine plans
+    /// from that machine's actual memory bandwidth, not the trajectory's.
+    /// Because the committed trajectory was recorded at the width-15
+    /// argmin, any faithfully measured host lands in the same argmin
+    /// basin (see `measured_seed_still_yields_the_trajectory_width`).
     pub fn load_or_seed(sidecar: impl Into<PathBuf>) -> std::sync::Arc<CostModelPool> {
         let sidecar = sidecar.into();
         let model = match std::fs::read_to_string(&sidecar) {
@@ -510,6 +542,34 @@ mod tests {
     fn feed_synthetic(model: &mut PassCostModel, a: f64, b: f64) {
         for (passes, rungs, total, n, wall) in crate::testkit::synthetic_cost_runs(a, b) {
             model.observe_run(passes, rungs, total, n, wall);
+        }
+    }
+
+    #[test]
+    fn measured_seed_still_yields_the_trajectory_width() {
+        // bench-wall on the build host measured ~these shapes: a full
+        // sweep costs a fraction of a ns per element and the per-probe
+        // compare sits near the committed trajectory's indifference ratio
+        // a/b = 16·ln 16 − 15 ≈ 29.36. Any measured pair inside the
+        // width-15 argmin basin (ratio ∈ ~(27.96, 30.76)) must reproduce
+        // the committed trajectory's plan — at *any* absolute scale,
+        // since only the ratio enters the argmin.
+        for scale in [1.0, 0.37, 4.2] {
+            let sweep = 0.9e-9 * scale;
+            for ratio in [28.5, 29.36, 30.5] {
+                let m = PassCostModel::seeded_from_measured(sweep, sweep / ratio);
+                assert_eq!(m.best_width(None), 15, "scale={scale} ratio={ratio}");
+                assert_eq!(m.best_width(Some(7)), 7);
+            }
+        }
+        // out-of-basin measurements move the plan (the point of measuring)
+        let sweep = 0.9e-9;
+        assert!(PassCostModel::seeded_from_measured(sweep, sweep).best_width(None) <= 4);
+        // non-physical measurements fall back to the trajectory seed
+        for (a, b) in [(f64::NAN, 1e-11), (0.0, 1e-11), (1e-9, f64::NAN), (1e-9, -1e-11)] {
+            let m = PassCostModel::seeded_from_measured(a, b);
+            assert_eq!(m.best_width(None), 15);
+            assert_eq!(m.coefficients(), PassCostModel::seeded().coefficients());
         }
     }
 

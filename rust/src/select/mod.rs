@@ -11,6 +11,7 @@
 //! | Brent's nonlinear eqn         | [`brent::brent_root`]                 |
 //! | (excluded: golden section)    | [`golden::golden_section`] (ablation) |
 //! | (beyond the paper) p-section  | [`multisection::multisection`] — p probes per fused pass |
+//! | (beyond the paper) fixed-pivot | [`fixed_pivot::fixed_pivot_select`] (Azzini–Perrotta) |
 //!
 //! All probe-based methods drive the [`Evaluator`] abstraction and therefore
 //! run unchanged against the host oracle, the PJRT device runtime, or the
@@ -20,6 +21,7 @@ pub mod bisection;
 pub mod brent;
 pub mod cutting_plane;
 pub mod exact;
+pub mod fixed_pivot;
 pub mod golden;
 pub mod gpu_model;
 pub mod hybrid;
@@ -35,8 +37,8 @@ pub use gpu_model::{CostModelPool, PassCostModel};
 pub use hybrid::{HybridOptions, HybridOutcome};
 pub use multisection::{MultiOutcome, MultisectOptions, MultisectOutcome};
 pub use objective::{
-    DType, Evaluator, HostEvaluator, InitStats, IntervalCounts, Neighbors, ObjectiveSpec,
-    ProbeStats,
+    ladder_sweep, ladder_sweep_scalar, DType, Evaluator, HostEvaluator, InitStats, IntervalCounts,
+    LadderPartial, Neighbors, ObjectiveSpec, ProbeStats, LADDER_LANES,
 };
 
 use crate::util::PhaseTimer;
@@ -62,10 +64,14 @@ pub enum Method {
     Bfprt,
     /// Full radix sort on downloaded data, index k.
     SortRadix,
+    /// Azzini–Perrotta fixed-pivot selector on downloaded data (arxiv
+    /// 2302.05705): the single-pass host baseline the wall-clock
+    /// trajectory races the vectorized bin sweep against.
+    FixedPivot,
 }
 
 impl Method {
-    pub const ALL: [Method; 10] = [
+    pub const ALL: [Method; 11] = [
         Method::CuttingPlane,
         Method::Hybrid,
         Method::Bisection,
@@ -76,6 +82,7 @@ impl Method {
         Method::Quickselect,
         Method::Bfprt,
         Method::SortRadix,
+        Method::FixedPivot,
     ];
 
     pub fn name(&self) -> &'static str {
@@ -90,6 +97,7 @@ impl Method {
             Method::Quickselect => "quickselect",
             Method::Bfprt => "bfprt",
             Method::SortRadix => "sort-radix",
+            Method::FixedPivot => "fixed-pivot",
         }
     }
 
@@ -100,7 +108,10 @@ impl Method {
     /// Probe-based methods never leave the device; data-movement methods
     /// download the array first (the paper's "copy to CPU" cost).
     pub fn needs_download(&self) -> bool {
-        matches!(self, Method::Quickselect | Method::Bfprt | Method::SortRadix)
+        matches!(
+            self,
+            Method::Quickselect | Method::Bfprt | Method::SortRadix | Method::FixedPivot
+        )
     }
 }
 
@@ -175,6 +186,12 @@ pub fn order_statistic(ev: &mut dyn Evaluator, k: usize, method: Method) -> Resu
                     radix::sort_select_f32(&f, k) as f64
                 }
             });
+            (v, 0, phases)
+        }
+        Method::FixedPivot => {
+            let mut phases = PhaseTimer::new();
+            let mut data = phases.time("copy_to_host", || ev.download())?;
+            let v = phases.time("algorithm", || fixed_pivot::fixed_pivot_select(&mut data, k));
             (v, 0, phases)
         }
     };

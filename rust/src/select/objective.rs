@@ -404,8 +404,10 @@ fn default_threads(n: usize) -> usize {
     hw.min(n / PAR_MIN_CHUNK).max(1)
 }
 
-/// Run `map` over ≤ `threads` chunks of `data` (4-aligned for the unrolled
-/// kernels) in a thread scope and fold the partials with `merge`.
+/// Run `map` over ≤ `threads` chunks of `data` (aligned to the widest
+/// kernel tile, [`LADDER_LANES`], so every worker's unrolled body sees
+/// full tiles and only the last chunk carries a remainder) in a thread
+/// scope and fold the partials with `merge`.
 fn par_reduce<T: Sync, R: Send>(
     data: &[T],
     threads: usize,
@@ -416,7 +418,8 @@ fn par_reduce<T: Sync, R: Send>(
     if t == 1 {
         return map(data);
     }
-    let chunk = ((data.len().div_ceil(t) + 3) & !3usize).max(4);
+    let align = LADDER_LANES;
+    let chunk = ((data.len().div_ceil(t) + (align - 1)) & !(align - 1)).max(align);
     let partials: Vec<R> = std::thread::scope(|s| {
         let map = &map;
         let handles: Vec<_> = data.chunks(chunk).map(|c| s.spawn(move || map(c))).collect();
@@ -572,20 +575,25 @@ macro_rules! minmaxsum_kernel {
 /// Per-chunk partials of one fused ladder pass (`probe_many`): bin `j`
 /// holds the count/sum of elements in `(y_{j-1}, y_j]` against the sorted
 /// ladder, plus the per-rung equality count. Mergeable across chunks and
-/// shards like every other partial in the system.
-#[derive(Debug, Clone)]
-struct LadderPartial {
-    cnt: Vec<u64>,
-    sum: Vec<f64>,
-    eq: Vec<u64>,
+/// shards like every other partial in the system. Public so the bench-wall
+/// harness and the kernel-parity property tests can drive the two sweep
+/// kernels ([`ladder_sweep`], [`ladder_sweep_scalar`]) directly.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LadderPartial {
+    /// `cnt[j]` = elements in `(y_{j-1}, y_j]` (`cnt[p]` = above the top rung).
+    pub cnt: Vec<u64>,
+    /// `sum[j]` = sum of those elements.
+    pub sum: Vec<f64>,
+    /// `eq[j]` = elements exactly equal to rung `y_j`.
+    pub eq: Vec<u64>,
 }
 
 impl LadderPartial {
-    fn zero(p: usize) -> LadderPartial {
+    pub fn zero(p: usize) -> LadderPartial {
         LadderPartial { cnt: vec![0; p + 1], sum: vec![0.0; p + 1], eq: vec![0; p] }
     }
 
-    fn merge(mut self, other: LadderPartial) -> LadderPartial {
+    pub fn merge(mut self, other: LadderPartial) -> LadderPartial {
         for (a, b) in self.cnt.iter_mut().zip(&other.cnt) {
             *a += b;
         }
@@ -599,7 +607,20 @@ impl LadderPartial {
     }
 }
 
-macro_rules! ladder_kernel {
+/// Lanes per tile of the vectorized ladder sweep: one AVX-512 f64 compare
+/// vector (two AVX2 vectors), and small enough that the lane-private bin
+/// columns stay L1-resident at every planned width (`8·(p+2)·16` bytes
+/// ≈ 8 KiB at [`gpu_model::MAX_PLANNED_WIDTH`](super::gpu_model::MAX_PLANNED_WIDTH)).
+pub const LADDER_LANES: usize = 8;
+
+/// The pre-vectorization reference kernel: one element at a time, scatter
+/// into *shared* bins. Two consecutive elements landing in the same bin
+/// serialize on the same memory address (a store-to-load dependence ~4–5
+/// cycles long), which is what caps the scalar sweep's throughput and why
+/// LLVM cannot vectorize it. Kept as the exact-count oracle for the tiled
+/// kernel's property tests and as the denominator of the CI perf-smoke
+/// speedup gate (see [`ladder_sweep_scalar`]).
+macro_rules! ladder_kernel_scalar {
     ($data:expr, $ys:expr) => {{
         let ys: &[f64] = $ys;
         let p = ys.len();
@@ -611,7 +632,7 @@ macro_rules! ladder_kernel {
             }
             // Branchless ladder scan: b = #{y in ladder : y < x}, i.e. the
             // bin (y_{b-1}, y_b] the element falls into. Linear in p, which
-            // is small (≲ 64) and vectorizes; a binary search would branch.
+            // is small (≲ 64); a binary search would branch.
             let mut b = 0usize;
             for &y in ys {
                 b += (y < x) as usize;
@@ -624,6 +645,97 @@ macro_rules! ladder_kernel {
         }
         part
     }};
+}
+
+/// The tiled, lane-split ladder sweep — the `probe_many` hot kernel.
+///
+/// Two restructurings over [`ladder_kernel_scalar!`], both needed:
+///
+/// 1. **Branchless bin indices per lane.** The `b += (y < x)` rung scan is
+///    hoisted into a lane-wise loop over a [`LADDER_LANES`]-element tile,
+///    so the inner loop is a fixed-width compare over 8 independent lanes —
+///    the shape LLVM turns into SIMD compares (`vcmpltpd`/`vpsubq` on
+///    AVX2+). This is the O(n·p) term of the sweep.
+/// 2. **Lane-private accumulators.** Each lane scatters into its own
+///    column of a bin-major `(p+2)×LANES` accumulator block
+///    (`cnt[bin·LANES + lane]`), so consecutive elements *never* write the
+///    same address even when they land in the same bin — the scalar
+///    kernel's store-to-load dependence is gone and the O(n) scatter
+///    pipelines. The columns merge once per chunk (O(p), amortized to
+///    nothing), and the chunk partials merge through the same
+///    [`LadderPartial::merge`] the multi-device shards use.
+///
+/// Slot `p+1` of the block is a trash bin for NaN elements: every rung
+/// compare is false on NaN, so `b = 0` — rerouting to the discarded slot
+/// keeps NaN elements uncounted (matching the scalar oracle and the device
+/// kernels) without a branch in the scatter. Counts (`cnt`, `eq`) are
+/// bit-identical to the scalar kernel; `sum` reassociates per lane, so it
+/// carries the usual O(ε·Σ|x|) chunked-summation bound — the same contract
+/// as the multi-threaded and sharded paths.
+macro_rules! ladder_kernel {
+    ($data:expr, $ys:expr) => {{
+        let ys: &[f64] = $ys;
+        let p = ys.len();
+        const L: usize = LADDER_LANES;
+        let mut cnt = vec![0u64; (p + 2) * L];
+        let mut sum = vec![0.0f64; (p + 2) * L];
+        let mut eq = vec![0u64; p.max(1) * L];
+        let mut x = [0.0f64; L];
+        let mut b = [0usize; L];
+        let mut tiles = $data.chunks_exact(L);
+        for tile in &mut tiles {
+            for l in 0..L {
+                x[l] = tile[l] as f64;
+                b[l] = 0;
+            }
+            for &y in ys {
+                for l in 0..L {
+                    b[l] += (y < x[l]) as usize; // SIMD compare across lanes
+                }
+            }
+            for l in 0..L {
+                let bin = if x[l].is_nan() { p + 1 } else { b[l] };
+                cnt[bin * L + l] += 1;
+                sum[bin * L + l] += x[l];
+                if bin < p && ys[bin] == x[l] {
+                    eq[bin * L + l] += 1;
+                }
+            }
+        }
+        // Merge the lane columns once per chunk (bins 0..=p; the NaN trash
+        // slot p+1 is dropped)…
+        let mut part = LadderPartial::zero(p);
+        for j in 0..=p {
+            let mut c = 0u64;
+            let mut s = 0.0f64;
+            for l in 0..L {
+                c += cnt[j * L + l];
+                s += sum[j * L + l];
+            }
+            part.cnt[j] = c;
+            part.sum[j] = s;
+        }
+        for (j, e) in part.eq.iter_mut().enumerate() {
+            *e = eq[j * L..(j + 1) * L].iter().sum();
+        }
+        // …and fold the sub-tile remainder through the scalar kernel.
+        part.merge(ladder_kernel_scalar!(tiles.remainder(), ys))
+    }};
+}
+
+/// One vectorized binned sweep of `data` against the sorted rung ladder
+/// `ys` (sequential; `probe_many` fans the same kernel across cores).
+/// Public entry point for the bench-wall throughput harness and the
+/// kernel-parity property tests.
+pub fn ladder_sweep(data: &[f64], ys: &[f64]) -> LadderPartial {
+    ladder_kernel!(data, ys)
+}
+
+/// The scalar reference sweep (see [`ladder_kernel_scalar!`]): the exact
+/// oracle [`ladder_sweep`] is pinned against, and the baseline the CI
+/// perf-smoke leg requires the vectorized kernel to beat by ≥ 1.5×.
+pub fn ladder_sweep_scalar(data: &[f64], ys: &[f64]) -> LadderPartial {
+    ladder_kernel_scalar!(data, ys)
 }
 
 /// Recover per-probe sufficient statistics from the bin partials:

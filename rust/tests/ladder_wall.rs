@@ -1,0 +1,134 @@
+//! Parity pins for the wall-clock PR: the vectorized lane-split ladder
+//! kernel must agree with the retained scalar oracle on adversarial
+//! inputs (exact `cnt`/`eq`, bounded `sum` drift from per-lane
+//! reassociation), and the fixed-pivot host selector must match the
+//! sort oracle wherever the total order holds.
+
+use cp_select::select::fixed_pivot::fixed_pivot_select;
+use cp_select::select::{ladder_sweep, ladder_sweep_scalar, LadderPartial};
+use cp_select::stats::{sorted_order_statistic, Rng};
+
+/// Exact equality on `cnt`/`eq`; tolerant compare on `sum`, whose only
+/// licensed deviation is per-lane reassociation of a finite series.
+fn assert_parity(v: &LadderPartial, s: &LadderPartial, ctx: &str) {
+    assert_eq!(v.cnt, s.cnt, "cnt diverged ({ctx})");
+    assert_eq!(v.eq, s.eq, "eq diverged ({ctx})");
+    assert_eq!(v.sum.len(), s.sum.len(), "sum length diverged ({ctx})");
+    for (j, (&a, &b)) in v.sum.iter().zip(&s.sum).enumerate() {
+        if a.is_nan() && b.is_nan() {
+            continue; // e.g. +inf and -inf landed in one bin on both sides
+        }
+        if a == b {
+            continue; // covers equal infinities and exact finite agreement
+        }
+        let scale = a.abs().max(b.abs()).max(1.0);
+        assert!(
+            (a - b).abs() <= 1e-9 * scale,
+            "sum[{j}] diverged beyond reassociation bound ({ctx}): {a} vs {b}"
+        );
+    }
+}
+
+/// Adversarial element corpora: every tile-remainder length, NaN and
+/// ±inf payloads, heavy duplicates, and constant arrays.
+fn corpus(len: usize, flavor: usize, rng: &mut Rng) -> Vec<f64> {
+    (0..len)
+        .map(|i| match flavor {
+            0 => rng.range(-100.0, 100.0),
+            1 => match rng.below(8) {
+                0 => f64::NAN,
+                1 => f64::INFINITY,
+                2 => f64::NEG_INFINITY,
+                _ => rng.range(-10.0, 10.0),
+            },
+            2 => rng.below(7) as f64, // heavy duplicates across 7 values
+            3 => 3.25,                // constant array
+            _ => (i as f64) * if i % 2 == 0 { 1.0 } else { -1.0 },
+        })
+        .collect()
+}
+
+/// Ladder corpora: sorted rung sets, including ±inf endpoints and
+/// duplicate-colliding rungs; `p = 0` exercises the no-rung edge.
+fn ladders(flavor: usize) -> Vec<Vec<f64>> {
+    match flavor {
+        1 => vec![
+            vec![],
+            vec![f64::NEG_INFINITY],
+            vec![f64::NEG_INFINITY, 0.0, f64::INFINITY],
+            vec![-5.0, 5.0],
+        ],
+        2 => vec![vec![3.0], vec![0.0, 2.0, 4.0, 6.0], (0..15).map(|i| i as f64 * 0.5).collect()],
+        3 => vec![vec![3.25], vec![1.0, 3.25, 7.0]],
+        _ => vec![
+            vec![],
+            vec![0.0],
+            vec![-50.0, 0.0, 50.0],
+            (0..15).map(|i| -70.0 + 10.0 * i as f64).collect(),
+        ],
+    }
+}
+
+#[test]
+fn vectorized_ladder_matches_scalar_oracle_on_adversarial_corpora() {
+    let mut rng = Rng::seeded(0x1adde2);
+    for flavor in 0..5 {
+        // 0..=40 covers every mod-8 remainder path with multi-tile bodies;
+        // 1037 adds a long run with a 5-element remainder.
+        for len in (0..=40).chain([1037]) {
+            let data = corpus(len, flavor, &mut rng);
+            for ys in ladders(flavor) {
+                let v = ladder_sweep(&data, &ys);
+                let s = ladder_sweep_scalar(&data, &ys);
+                assert_parity(&v, &s, &format!("flavor={flavor} len={len} p={}", ys.len()));
+            }
+        }
+    }
+}
+
+#[test]
+fn vectorized_ladder_counts_partition_n_without_nans() {
+    // With no NaN payloads every element lands in exactly one real bin,
+    // so cnt sums to n and the trash bin stays empty.
+    let mut rng = Rng::seeded(0xc0de);
+    for len in [0, 1, 7, 8, 9, 255, 1024] {
+        let data: Vec<f64> = (0..len).map(|_| rng.normal()).collect();
+        let ys = vec![-1.0, -0.25, 0.25, 1.0];
+        let part = ladder_sweep(&data, &ys);
+        assert_eq!(part.cnt.iter().sum::<u64>(), len as u64, "len={len}");
+    }
+}
+
+#[test]
+fn vectorized_ladder_routes_nan_elements_to_no_bin() {
+    // NaN compares false against every rung: the scalar oracle never
+    // counts it, and the lane-split kernel must agree (trash slot is
+    // internal — it may not leak into any public bin).
+    let data = [1.0, f64::NAN, 2.0, f64::NAN, f64::NAN, 3.0, 4.0, 5.0, 6.0];
+    let ys = vec![1.5, 3.5];
+    let v = ladder_sweep(&data, &ys);
+    let s = ladder_sweep_scalar(&data, &ys);
+    assert_parity(&v, &s, "explicit NaN payload");
+    assert_eq!(v.cnt.iter().sum::<u64>(), 6, "only the 6 non-NaN elements count");
+}
+
+#[test]
+fn fixed_pivot_matches_sort_oracle_on_the_same_corpus() {
+    let mut rng = Rng::seeded(0xf1ed);
+    for flavor in [0usize, 2, 3, 4] {
+        // NaN-free flavors only: selection is specified via the total order
+        for len in [1usize, 2, 3, 17, 64, 1037] {
+            let data = corpus(len, flavor, &mut rng);
+            for k in [1, (len + 1) / 2, len] {
+                let mut scratch = data.clone();
+                let got = fixed_pivot_select(&mut scratch, k);
+                let want = sorted_order_statistic(&data, k);
+                assert_eq!(
+                    got.to_bits(),
+                    want.to_bits(),
+                    "flavor={flavor} len={len} k={k}: {got} vs {want}"
+                );
+            }
+        }
+    }
+}

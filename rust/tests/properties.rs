@@ -39,9 +39,10 @@ fn prop_every_probe_method_matches_sort_oracle() {
 
 #[test]
 fn prop_download_methods_match_sort_oracle() {
-    for (i, method) in [Method::Quickselect, Method::Bfprt, Method::SortRadix]
-        .into_iter()
-        .enumerate()
+    for (i, method) in
+        [Method::Quickselect, Method::Bfprt, Method::SortRadix, Method::FixedPivot]
+            .into_iter()
+            .enumerate()
     {
         check(2000 + i as u64, 120, &CaseGen::default(), |c| {
             let mut ev = HostEvaluator::new(&c.data);
