@@ -1,0 +1,327 @@
+//! Shared structural layer for the semantic rules: item/function/block
+//! spans over the token stream, per-function call sets, and a reusable
+//! name-keyed call graph with transitive closure.
+//!
+//! This is the dataflow-lite substrate the PR 7 rules grew toward — the
+//! per-function lock-set fixpoint originally buried in `lock_order` now
+//! rides [`CallGraph::fixpoint_union`], and the reachability queries the
+//! cancellation rule needs ride [`CallGraph::reachable_from`]. Resolution
+//! is by bare function name across every scanned file (no paths, no
+//! receiver types), which over-approximates: a call `probe(..)` reaches
+//! every function named `probe` anywhere in the tree. For lint purposes
+//! an over-approximation errs toward reporting, which is the safe side.
+
+use std::collections::{BTreeSet, HashMap};
+
+use super::tokenizer::{Token, TokenKind};
+use super::SourceFile;
+
+/// One scanned file with its comment-stripped token stream (rules never
+/// match inside comments; the pragma engine reads them separately).
+pub(crate) struct FileTokens<'a> {
+    pub file: &'a SourceFile,
+    pub code: Vec<Token>,
+}
+
+pub(crate) fn norm(path: &str) -> String {
+    path.replace('\\', "/")
+}
+
+pub(crate) fn file_stem(path: &str) -> String {
+    let p = norm(path);
+    let base = p.rsplit('/').next().unwrap_or(&p);
+    base.strip_suffix(".rs").unwrap_or(base).to_string()
+}
+
+/// Index of the matching `}` for the `{` at `open` (end of stream if
+/// unbalanced — strings/comments are already opaque single tokens).
+pub(crate) fn match_brace(code: &[Token], open: usize) -> usize {
+    let mut depth = 0usize;
+    for (k, t) in code.iter().enumerate().skip(open) {
+        if t.is_punct('{') {
+            depth += 1;
+        } else if t.is_punct('}') {
+            depth = depth.saturating_sub(1);
+            if depth == 0 {
+                return k;
+            }
+        }
+    }
+    code.len().saturating_sub(1)
+}
+
+/// Index of the matching `)` for the `(` at `open`.
+pub(crate) fn match_paren(code: &[Token], open: usize) -> usize {
+    let mut depth = 0usize;
+    for (k, t) in code.iter().enumerate().skip(open) {
+        if t.is_punct('(') {
+            depth += 1;
+        } else if t.is_punct(')') {
+            depth = depth.saturating_sub(1);
+            if depth == 0 {
+                return k;
+            }
+        }
+    }
+    code.len().saturating_sub(1)
+}
+
+pub(crate) struct FnSpan {
+    pub name: String,
+    /// Line of the `fn` name token.
+    pub line: u32,
+    /// Token range of the body `{ … }` inclusive; `None` for bodyless
+    /// trait-method declarations.
+    pub body: Option<(usize, usize)>,
+}
+
+/// Every `fn name …` in the stream, nested functions included (their
+/// spans overlap; innermost wins for enclosing-fn lookup).
+pub(crate) fn fn_spans(code: &[Token]) -> Vec<FnSpan> {
+    let mut out = Vec::new();
+    let mut i = 0;
+    while i < code.len() {
+        let heads_fn = code[i].is_ident("fn")
+            && code.get(i + 1).is_some_and(|t| t.kind == TokenKind::Ident);
+        if !heads_fn {
+            i += 1;
+            continue;
+        }
+        let name = code[i + 1].text.clone();
+        let line = code[i + 1].line;
+        let mut j = i + 2;
+        let mut depth = 0usize; // () and [] nesting inside the signature
+        let mut body = None;
+        while j < code.len() {
+            let t = &code[j];
+            if t.is_punct('(') || t.is_punct('[') {
+                depth += 1;
+            } else if t.is_punct(')') || t.is_punct(']') {
+                depth = depth.saturating_sub(1);
+            } else if depth == 0 && t.is_punct('{') {
+                body = Some((j, match_brace(code, j)));
+                break;
+            } else if depth == 0 && t.is_punct(';') {
+                break;
+            }
+            j += 1;
+        }
+        out.push(FnSpan { name, line, body });
+        i += 2;
+    }
+    out
+}
+
+pub(crate) fn enclosing_fn<'a>(spans: &'a [FnSpan], idx: usize) -> Option<&'a FnSpan> {
+    spans
+        .iter()
+        .filter(|s| s.body.is_some_and(|(b0, b1)| idx >= b0 && idx <= b1))
+        .max_by_key(|s| s.body.map(|(b0, _)| b0))
+}
+
+/// First token of the file's `#[cfg(test)]` region (end of stream when
+/// absent): the conventional cut between library code and its test module.
+pub(crate) fn cfg_test_start(code: &[Token]) -> usize {
+    for i in 0..code.len() {
+        if code[i].is_punct('#')
+            && code.get(i + 1).is_some_and(|t| t.is_punct('['))
+            && code.get(i + 2).is_some_and(|t| t.is_ident("cfg"))
+            && code.get(i + 3).is_some_and(|t| t.is_punct('('))
+            && code.get(i + 4).is_some_and(|t| t.is_ident("test"))
+        {
+            return i;
+        }
+    }
+    code.len()
+}
+
+pub(crate) fn in_region(regions: &[(usize, usize)], idx: usize) -> bool {
+    regions.iter().any(|&(a, b)| idx > a && idx < b)
+}
+
+/// One call site inside a function body: the callee name (bare — method
+/// calls and free calls alike) and the token index of its ident.
+pub(crate) struct Call {
+    pub name: String,
+    pub at: usize,
+}
+
+/// One function with a body, as a call-graph node.
+pub(crate) struct FnNode {
+    /// Index into the scanned file slice.
+    pub file: usize,
+    pub name: String,
+    /// Line of the `fn` name token.
+    pub line: u32,
+    /// Token range of the body `{ … }` inclusive.
+    pub body: (usize, usize),
+    /// Body starts at or after the file's `#[cfg(test)]` cut.
+    pub in_test: bool,
+    /// Every `ident (`-shaped call site in the body, in order.
+    pub calls: Vec<Call>,
+}
+
+/// Cross-file call graph, name-keyed: an edge `f → g` exists when f's
+/// body contains a call site named like any function g in the scan.
+pub(crate) struct CallGraph {
+    pub fns: Vec<FnNode>,
+    by_name: HashMap<String, Vec<usize>>,
+}
+
+impl CallGraph {
+    pub fn build(files: &[FileTokens]) -> CallGraph {
+        let mut fns = Vec::new();
+        for (fidx, ft) in files.iter().enumerate() {
+            let code = &ft.code;
+            let test_at = cfg_test_start(code);
+            for s in fn_spans(code) {
+                let Some(body) = s.body else { continue };
+                let mut calls = Vec::new();
+                for i in body.0..=body.1 {
+                    if code[i].kind == TokenKind::Ident
+                        && code.get(i + 1).is_some_and(|t| t.is_punct('('))
+                        && (i == 0 || !code[i - 1].is_ident("fn"))
+                    {
+                        calls.push(Call { name: code[i].text.clone(), at: i });
+                    }
+                }
+                fns.push(FnNode {
+                    file: fidx,
+                    name: s.name,
+                    line: s.line,
+                    body,
+                    in_test: body.0 >= test_at,
+                    calls,
+                });
+            }
+        }
+        let mut by_name: HashMap<String, Vec<usize>> = HashMap::new();
+        for (id, f) in fns.iter().enumerate() {
+            by_name.entry(f.name.clone()).or_default().push(id);
+        }
+        CallGraph { fns, by_name }
+    }
+
+    /// Node ids of every function with the given name (empty if none).
+    pub fn ids_named(&self, name: &str) -> &[usize] {
+        self.by_name.get(name).map(Vec::as_slice).unwrap_or(&[])
+    }
+
+    /// Per-node reachability from the named roots through the call edges
+    /// (the roots themselves included).
+    pub fn reachable_from(&self, roots: &[&str]) -> Vec<bool> {
+        let mut reach = vec![false; self.fns.len()];
+        let mut queue: Vec<usize> = Vec::new();
+        for r in roots {
+            for &id in self.ids_named(r) {
+                if !reach[id] {
+                    reach[id] = true;
+                    queue.push(id);
+                }
+            }
+        }
+        while let Some(id) = queue.pop() {
+            for call in &self.fns[id].calls {
+                for &cid in self.ids_named(&call.name) {
+                    if !reach[cid] {
+                        reach[cid] = true;
+                        queue.push(cid);
+                    }
+                }
+            }
+        }
+        reach
+    }
+
+    /// Name-keyed union fixpoint: seed every function with a direct fact
+    /// set, then propagate callee sets to callers until stable (same-named
+    /// functions share one accumulator, matching the by-name resolution).
+    /// `keep_call` filters call sites before expansion — e.g. `lock_order`
+    /// drops sites it already resolved as field acquisitions.
+    pub fn fixpoint_union<D, K>(&self, direct: D, keep_call: K) -> HashMap<String, BTreeSet<usize>>
+    where
+        D: Fn(&FnNode) -> BTreeSet<usize>,
+        K: Fn(&FnNode, &Call) -> bool,
+    {
+        let mut by_name: HashMap<String, BTreeSet<usize>> = HashMap::new();
+        for f in &self.fns {
+            by_name.entry(f.name.clone()).or_default().extend(direct(f));
+        }
+        for _ in 0..12 {
+            let mut changed = false;
+            for f in &self.fns {
+                let mut add = BTreeSet::new();
+                for call in &f.calls {
+                    if keep_call(f, call) {
+                        if let Some(set) = by_name.get(&call.name) {
+                            add.extend(set.iter().copied());
+                        }
+                    }
+                }
+                let mine = by_name.entry(f.name.clone()).or_default();
+                let before = mine.len();
+                mine.extend(add);
+                changed |= mine.len() != before;
+            }
+            if !changed {
+                break;
+            }
+        }
+        by_name
+    }
+}
+
+pub(crate) fn tarjan_sccs(adj: &[Vec<usize>]) -> Vec<Vec<usize>> {
+    struct State<'a> {
+        adj: &'a [Vec<usize>],
+        index: Vec<Option<u32>>,
+        low: Vec<u32>,
+        on_stack: Vec<bool>,
+        stack: Vec<usize>,
+        next: u32,
+        out: Vec<Vec<usize>>,
+    }
+    fn go(st: &mut State, v: usize) {
+        st.index[v] = Some(st.next);
+        st.low[v] = st.next;
+        st.next += 1;
+        st.stack.push(v);
+        st.on_stack[v] = true;
+        let neighbors = st.adj[v].clone();
+        for w in neighbors {
+            if st.index[w].is_none() {
+                go(st, w);
+                st.low[v] = st.low[v].min(st.low[w]);
+            } else if st.on_stack[w] {
+                st.low[v] = st.low[v].min(st.index[w].unwrap_or(0));
+            }
+        }
+        if Some(st.low[v]) == st.index[v] {
+            let mut scc = Vec::new();
+            while let Some(w) = st.stack.pop() {
+                st.on_stack[w] = false;
+                scc.push(w);
+                if w == v {
+                    break;
+                }
+            }
+            st.out.push(scc);
+        }
+    }
+    let n = adj.len();
+    let mut st = State {
+        adj,
+        index: vec![None; n],
+        low: vec![0; n],
+        on_stack: vec![false; n],
+        stack: Vec::new(),
+        next: 0,
+        out: Vec::new(),
+    };
+    for v in 0..n {
+        if st.index[v].is_none() {
+            go(&mut st, v);
+        }
+    }
+    st.out
+}

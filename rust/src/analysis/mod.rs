@@ -2,11 +2,16 @@
 //! coordinator's correctness rests on.
 //!
 //! The crate is offline and dependency-free, so this subsystem ships its
-//! own minimal tokenizer ([`tokenizer`]) and runs purely lexical rules
-//! ([`rules`]) over `rust/src` and `rust/tests`. It is wired to the
-//! `cp-select lint` subcommand and runs as a blocking CI leg.
+//! own minimal tokenizer ([`tokenizer`]), a shared structural layer
+//! ([`callgraph`]: function spans, per-function call sets, a name-keyed
+//! cross-file call graph with reachability and a reusable fact-set
+//! fixpoint), and the rules themselves ([`rules`]) over `rust/src` and
+//! `rust/tests`. It is wired to the `cp-select lint` subcommand (text or
+//! `--format json`, see [`report`]) and runs as a blocking CI leg.
 //!
 //! ## Rules
+//!
+//! Per-file, lexical:
 //!
 //! - `clock_discipline` — no `Instant::now`/`SystemTime::now` outside the
 //!   wall-clock files (`testkit/clock.rs`, `util/timer.rs`, `main.rs`,
@@ -16,6 +21,19 @@
 //! - `poison_discipline` — every `.lock()` recovers from poisoning with
 //!   `unwrap_or_else(|e| e.into_inner())`; `.unwrap()`, `.expect(..)` and
 //!   `?` on lock results are findings.
+//! - `float_order_discipline` — in `src/select/` and `src/stats/`, float
+//!   ordering goes through `total_cmp` or `util::fkey`: `.partial_cmp(`
+//!   and raw relational operators inside `sort_by`-family comparator
+//!   closures are findings. Raw comparisons outside comparator closures
+//!   (convergence checks, NaN-propagating guards) stay legal — IEEE
+//!   semantics are load-bearing there.
+//! - `error_discipline` — no `.unwrap()`/`.expect(..)`/`panic!`/
+//!   `unreachable!` in `src/coordinator/`, `src/runtime/`, `src/select/`
+//!   (test modules excluded); worker paths return `crate::Error`. The
+//!   escape hatch is a justified suppression pragma on the site.
+//!
+//! Cross-file, on the shared call graph:
+//!
 //! - `panic_boundary` — in `coordinator/service.rs`, `DatasetBackend`
 //!   method calls must sit inside a `catch_unwind` span (directly, or in
 //!   a function only ever entered through one), so a panicking backend is
@@ -23,10 +41,25 @@
 //! - `metrics_triple_entry` — every `pub … AtomicU64` counter on
 //!   `Metrics` also appears as a `Snapshot` field, is copied in
 //!   `Metrics::snapshot()`, and is rendered by `Display for Snapshot`.
+//! - `atomic_ordering` — every access to a `Metrics` `AtomicU64` counter
+//!   uses `Ordering::Relaxed`; the counters are statistical and nothing
+//!   synchronizes through them.
 //! - `lock_order` — builds a cross-file lock-order graph from nested
-//!   `.lock()` scopes over the named lock fields and fails on cycles;
-//!   the runtime half of the same invariant is
+//!   `.lock()` scopes over the named lock fields (helper-routed
+//!   acquisitions expanded through [`callgraph::CallGraph::fixpoint_union`])
+//!   and fails on cycles; the runtime half of the same invariant is
 //!   [`crate::util::sync::OrderedMutex`].
+//! - `cancellation_discipline` — every pass loop (a loop issuing fused
+//!   reductions) in a function reachable from `order_statistic`/
+//!   `solve_group` polls the cooperative cancel hook. Functions named
+//!   like the pass primitives (`probe`, `probe_many`, `interval`) are
+//!   the pass implementations — their fan-out loops run within one pass
+//!   — and single-pass download methods are exempt via a registry that
+//!   is itself checked for staleness ([`rules::CANCEL_EXEMPT`]).
+//!
+//! Call resolution is by bare function name across the scanned set —
+//! an over-approximation (no receiver types, no module paths) that errs
+//! toward reporting, which for a lint is the safe side.
 //!
 //! ## Pragmas
 //!
@@ -35,8 +68,12 @@
 //! The justification is mandatory; a pragma naming an unknown rule or
 //! missing its justification is itself a finding (rule `pragma`, not
 //! suppressible). Doc comments (`///`, `//!`) are never read as pragmas,
-//! which is why this paragraph can spell the syntax out.
+//! which is why this paragraph can spell the syntax out. Suppressed
+//! findings are retained on the [`Report`] (and tagged in the JSON
+//! output) so the suppression inventory stays auditable.
 
+pub mod callgraph;
+pub mod report;
 pub mod rules;
 pub mod tokenizer;
 
@@ -44,17 +81,21 @@ use std::collections::HashMap;
 use std::fmt;
 use std::path::{Path, PathBuf};
 
-use rules::FileTokens;
+use callgraph::{CallGraph, FileTokens};
 use tokenizer::{tokenize, Token};
 
 /// Every rule the engine knows, in report order. `pragma` covers
 /// malformed suppression comments and cannot itself be suppressed.
-pub const RULE_NAMES: [&str; 6] = [
+pub const RULE_NAMES: [&str; 10] = [
     "clock_discipline",
     "poison_discipline",
     "panic_boundary",
     "metrics_triple_entry",
     "lock_order",
+    "float_order_discipline",
+    "cancellation_discipline",
+    "error_discipline",
+    "atomic_ordering",
     "pragma",
 ];
 
@@ -80,16 +121,23 @@ impl fmt::Display for Finding {
 }
 
 /// Lint outcome over a file set: surviving findings (sorted by path,
-/// line, rule) plus the suppression tally.
+/// line, rule) plus the pragma-suppressed findings, retained so the
+/// suppression inventory is auditable (and lands in the JSON output).
 pub struct Report {
     pub findings: Vec<Finding>,
     pub files: usize,
-    pub suppressed: usize,
+    pub suppressed: Vec<Finding>,
 }
 
 impl Report {
     pub fn clean(&self) -> bool {
         self.findings.is_empty()
+    }
+
+    /// Serialize to the stable machine-readable schema
+    /// ([`report::SCHEMA_VERSION`]).
+    pub fn to_json(&self) -> String {
+        report::to_json(self)
     }
 }
 
@@ -103,7 +151,7 @@ impl fmt::Display for Report {
             "lint: {} file(s), {} finding(s), {} suppressed by pragma",
             self.files,
             self.findings.len(),
-            self.suppressed
+            self.suppressed.len()
         )
     }
 }
@@ -177,28 +225,34 @@ pub fn lint_files(files: &[SourceFile]) -> Report {
             code: ts.iter().filter(|t| !t.is_comment()).cloned().collect(),
         })
         .collect();
+    let cg = CallGraph::build(&fts);
     for ft in &fts {
         findings.extend(rules::clock_discipline(ft));
         findings.extend(rules::poison_discipline(ft));
+        findings.extend(rules::float_order_discipline(ft));
+        findings.extend(rules::error_discipline(ft));
     }
     findings.extend(rules::panic_boundary(&fts));
     findings.extend(rules::metrics_triple_entry(&fts));
-    findings.extend(rules::lock_order(&fts));
+    findings.extend(rules::atomic_ordering(&fts));
+    findings.extend(rules::lock_order(&fts, &cg));
+    findings.extend(rules::cancellation_discipline(&fts, &cg));
 
     let mut kept = Vec::new();
-    let mut suppressed = 0usize;
+    let mut suppressed = Vec::new();
     for f in findings {
         let covered = f.rule != "pragma"
             && pragmas_by_path.get(f.path.as_str()).is_some_and(|ps| {
                 ps.iter().any(|p| p.rule == f.rule && (p.line == f.line || p.line + 1 == f.line))
             });
         if covered {
-            suppressed += 1;
+            suppressed.push(f);
         } else {
             kept.push(f);
         }
     }
     kept.sort_by(|a, b| (&a.path, a.line, a.rule).cmp(&(&b.path, b.line, b.rule)));
+    suppressed.sort_by(|a, b| (&a.path, a.line, a.rule).cmp(&(&b.path, b.line, b.rule)));
     Report { findings: kept, files: files.len(), suppressed }
 }
 

@@ -1,0 +1,103 @@
+//! Machine-readable lint output.
+//!
+//! `cp-select lint --format json` emits one JSON object with a stable,
+//! versioned schema so CI can turn findings into annotations and archive
+//! them without scraping the text report:
+//!
+//! ```json
+//! {
+//!   "version": 1,
+//!   "files": 74,
+//!   "findings": [
+//!     {"rule": "…", "file": "…", "line": 12, "message": "…", "suppressed": false}
+//!   ],
+//!   "suppressed": 4
+//! }
+//! ```
+//!
+//! `findings` carries active and pragma-suppressed findings merged, in
+//! (file, line, rule) order, each tagged with `suppressed`; the top-level
+//! `suppressed` count is the suppressed tally (so `findings` minus the
+//! suppressed entries is what gates CI). The crate ships no JSON writer
+//! ([`crate::util::json`] is read-only), so the escaping lives here.
+
+use std::fmt::Write as _;
+
+use super::{Finding, Report};
+
+/// Schema version; bump on any field change.
+pub const SCHEMA_VERSION: u32 = 1;
+
+fn escape_into(out: &mut String, s: &str) {
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+}
+
+fn finding_into(out: &mut String, f: &Finding, suppressed: bool) {
+    out.push_str("{\"rule\":\"");
+    escape_into(out, f.rule);
+    out.push_str("\",\"file\":\"");
+    escape_into(out, &f.path);
+    let _ = write!(out, "\",\"line\":{},\"message\":\"", f.line);
+    escape_into(out, &f.message);
+    let _ = write!(out, "\",\"suppressed\":{suppressed}}}");
+}
+
+/// Serialize a [`Report`] to the versioned JSON schema above.
+pub fn to_json(report: &Report) -> String {
+    let mut rows: Vec<(&Finding, bool)> = report
+        .findings
+        .iter()
+        .map(|f| (f, false))
+        .chain(report.suppressed.iter().map(|f| (f, true)))
+        .collect();
+    rows.sort_by(|(a, _), (b, _)| (&a.path, a.line, a.rule).cmp(&(&b.path, b.line, b.rule)));
+    let mut out = String::new();
+    let _ = write!(
+        out,
+        "{{\"version\":{},\"files\":{},\"findings\":[",
+        SCHEMA_VERSION, report.files
+    );
+    for (i, (f, suppressed)) in rows.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        finding_into(&mut out, f, *suppressed);
+    }
+    let _ = write!(out, "],\"suppressed\":{}}}", report.suppressed.len());
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn escapes_specials() {
+        let mut s = String::new();
+        escape_into(&mut s, "a\"b\\c\nd\te\u{1}");
+        assert_eq!(s, "a\\\"b\\\\c\\nd\\te\\u0001");
+    }
+
+    #[test]
+    fn empty_report_round_trips() {
+        let r = Report { findings: Vec::new(), files: 3, suppressed: Vec::new() };
+        let j = to_json(&r);
+        let v = crate::util::json::Json::parse(&j).expect("valid json");
+        assert_eq!(v.get("version").unwrap().as_usize().unwrap(), 1);
+        assert_eq!(v.get("files").unwrap().as_usize().unwrap(), 3);
+        assert!(v.get("findings").unwrap().as_arr().unwrap().is_empty());
+        assert_eq!(v.get("suppressed").unwrap().as_usize().unwrap(), 0);
+    }
+}

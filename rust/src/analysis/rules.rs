@@ -1,117 +1,22 @@
-//! The five invariant rules. Every rule is a lexical token-sequence
-//! analysis over the [`crate::analysis::tokenizer`] stream — no parse
-//! tree, just patterns plus balanced-delimiter spans. See the module docs
+//! The invariant rules. Every rule is a token-sequence analysis over the
+//! [`crate::analysis::tokenizer`] stream — no parse tree, just patterns
+//! plus balanced-delimiter spans and, for the cross-file rules, the
+//! shared [`crate::analysis::callgraph::CallGraph`]. See the module docs
 //! in [`crate::analysis`] for what each rule enforces and why, and for
-//! the known approximations (one-level call expansion, lexical guard
-//! scopes).
+//! the known approximations (name-keyed call resolution, lexical guard
+//! scopes, comparator-closure detection).
 
 use std::collections::{BTreeSet, HashMap, HashSet};
 
+use super::callgraph::{
+    cfg_test_start, enclosing_fn, file_stem, fn_spans, in_region, match_brace, match_paren, norm,
+    tarjan_sccs, Call, CallGraph, FileTokens, FnNode,
+};
 use super::tokenizer::{Token, TokenKind};
 use super::{Finding, SourceFile};
 
-/// One scanned file with its comment-stripped token stream (rules never
-/// match inside comments; the pragma engine reads them separately).
-pub(crate) struct FileTokens<'a> {
-    pub file: &'a SourceFile,
-    pub code: Vec<Token>,
-}
-
-fn norm(path: &str) -> String {
-    path.replace('\\', "/")
-}
-
-fn file_stem(path: &str) -> String {
-    let p = norm(path);
-    let base = p.rsplit('/').next().unwrap_or(&p);
-    base.strip_suffix(".rs").unwrap_or(base).to_string()
-}
-
 fn mk(rule: &'static str, file: &SourceFile, line: u32, message: String) -> Finding {
     Finding { rule, path: file.path.clone(), line, message }
-}
-
-/// Index of the matching `}` for the `{` at `open` (end of stream if
-/// unbalanced — strings/comments are already opaque single tokens).
-fn match_brace(code: &[Token], open: usize) -> usize {
-    let mut depth = 0usize;
-    for (k, t) in code.iter().enumerate().skip(open) {
-        if t.is_punct('{') {
-            depth += 1;
-        } else if t.is_punct('}') {
-            depth = depth.saturating_sub(1);
-            if depth == 0 {
-                return k;
-            }
-        }
-    }
-    code.len().saturating_sub(1)
-}
-
-/// Index of the matching `)` for the `(` at `open`.
-fn match_paren(code: &[Token], open: usize) -> usize {
-    let mut depth = 0usize;
-    for (k, t) in code.iter().enumerate().skip(open) {
-        if t.is_punct('(') {
-            depth += 1;
-        } else if t.is_punct(')') {
-            depth = depth.saturating_sub(1);
-            if depth == 0 {
-                return k;
-            }
-        }
-    }
-    code.len().saturating_sub(1)
-}
-
-pub(crate) struct FnSpan {
-    pub name: String,
-    /// Token range of the body `{ … }` inclusive; `None` for bodyless
-    /// trait-method declarations.
-    pub body: Option<(usize, usize)>,
-}
-
-/// Every `fn name …` in the stream, nested functions included (their
-/// spans overlap; innermost wins for enclosing-fn lookup).
-pub(crate) fn fn_spans(code: &[Token]) -> Vec<FnSpan> {
-    let mut out = Vec::new();
-    let mut i = 0;
-    while i < code.len() {
-        let heads_fn = code[i].is_ident("fn")
-            && code.get(i + 1).is_some_and(|t| t.kind == TokenKind::Ident);
-        if !heads_fn {
-            i += 1;
-            continue;
-        }
-        let name = code[i + 1].text.clone();
-        let mut j = i + 2;
-        let mut depth = 0usize; // () and [] nesting inside the signature
-        let mut body = None;
-        while j < code.len() {
-            let t = &code[j];
-            if t.is_punct('(') || t.is_punct('[') {
-                depth += 1;
-            } else if t.is_punct(')') || t.is_punct(']') {
-                depth = depth.saturating_sub(1);
-            } else if depth == 0 && t.is_punct('{') {
-                body = Some((j, match_brace(code, j)));
-                break;
-            } else if depth == 0 && t.is_punct(';') {
-                break;
-            }
-            j += 1;
-        }
-        out.push(FnSpan { name, body });
-        i += 2;
-    }
-    out
-}
-
-fn enclosing_fn<'a>(spans: &'a [FnSpan], idx: usize) -> Option<&'a FnSpan> {
-    spans
-        .iter()
-        .filter(|s| s.body.is_some_and(|(b0, b1)| idx >= b0 && idx <= b1))
-        .max_by_key(|s| s.body.map(|(b0, _)| b0))
 }
 
 // ---------------------------------------------------------------------------
@@ -257,24 +162,6 @@ fn backend_trait_methods(files: &[FileTokens]) -> HashSet<String> {
         }
     }
     methods
-}
-
-fn cfg_test_start(code: &[Token]) -> usize {
-    for i in 0..code.len() {
-        if code[i].is_punct('#')
-            && code.get(i + 1).is_some_and(|t| t.is_punct('['))
-            && code.get(i + 2).is_some_and(|t| t.is_ident("cfg"))
-            && code.get(i + 3).is_some_and(|t| t.is_punct('('))
-            && code.get(i + 4).is_some_and(|t| t.is_ident("test"))
-        {
-            return i;
-        }
-    }
-    code.len()
-}
-
-fn in_region(regions: &[(usize, usize)], idx: usize) -> bool {
-    regions.iter().any(|&(a, b)| idx > a && idx < b)
 }
 
 /// In the coordinator worker paths (`coordinator/service.rs`, test module
@@ -493,24 +380,18 @@ struct Held {
     temp: bool,
 }
 
-struct FnScan {
-    file: usize,
-    name: String,
-    body: (usize, usize),
-}
-
 /// Cross-file lock-order graph over the named lock fields (`name:
 /// Mutex<…>` / `name: OrderedMutex<…>` declarations; nodes are
 /// `<file stem>.<field>`). Within every function body, a resolved
 /// `receiver.lock()` acquisition draws an edge from each lock still
 /// lexically held (let-bound guards live to their block or `drop(var)`;
 /// temporaries to the end of the statement) to the acquired one; calls to
-/// named local functions are expanded through a name-keyed
+/// named local functions are expanded through the call graph's name-keyed
 /// direct-lock-set fixpoint so helper-routed acquisitions still
 /// contribute edges. Any cycle in the resulting graph is a finding: two
 /// code paths that disagree about acquisition order are a deadlock
 /// waiting for a schedule.
-pub(crate) fn lock_order(files: &[FileTokens]) -> Vec<Finding> {
+pub(crate) fn lock_order(files: &[FileTokens], cg: &CallGraph) -> Vec<Finding> {
     // Pass 0: discover lock-field nodes.
     let mut nodes: Vec<String> = Vec::new();
     let mut per_file: Vec<HashMap<String, usize>> = Vec::new();
@@ -570,57 +451,35 @@ pub(crate) fn lock_order(files: &[FileTokens]) -> Vec<Finding> {
             && code.get(i + 3).is_some_and(|t| t.is_punct(')'))
     };
 
-    // Pass A: per-function direct lock sets, then a name-keyed fixpoint
-    // through calls (a helper that locks makes its callers lock too).
-    let mut fns: Vec<FnScan> = Vec::new();
-    for (fidx, ft) in files.iter().enumerate() {
-        for s in fn_spans(&ft.code) {
-            if let Some(body) = s.body {
-                fns.push(FnScan { file: fidx, name: s.name, body });
-            }
-        }
-    }
-    let mut locks_by_name: HashMap<String, BTreeSet<usize>> = HashMap::new();
-    let mut calls_by_fn: Vec<Vec<String>> = Vec::new();
-    for f in &fns {
-        let code = &files[f.file].code;
-        let mut direct = BTreeSet::new();
-        let mut calls = Vec::new();
-        for i in f.body.0..=f.body.1 {
-            if is_lock_call(code, i) && !resolve(f.file, code, i).is_empty() {
-                direct.extend(resolve(f.file, code, i));
-            } else if code[i].kind == TokenKind::Ident
-                && code.get(i + 1).is_some_and(|t| t.is_punct('('))
-                && !code[i - 1].is_ident("fn")
-            {
-                calls.push(code[i].text.clone());
-            }
-        }
-        locks_by_name.entry(f.name.clone()).or_default().extend(direct);
-        calls_by_fn.push(calls);
-    }
-    for _ in 0..12 {
-        let mut changed = false;
-        for (f, calls) in fns.iter().zip(&calls_by_fn) {
-            let mut add = BTreeSet::new();
-            for callee in calls {
-                if let Some(set) = locks_by_name.get(callee) {
-                    add.extend(set.iter().copied());
+    // Pass A: per-function direct lock sets, propagated through calls by
+    // the shared call-graph fixpoint (a helper that locks makes its
+    // callers lock too). A `.lock()` site that resolved to a known field
+    // is dropped from call expansion: its lock is already in the direct
+    // set, and following the bare name `lock` from there would smear
+    // util::sync's internal mutex over every caller.
+    let locks_by_name = cg.fixpoint_union(
+        |f: &FnNode| {
+            let code = &files[f.file].code;
+            let mut direct = BTreeSet::new();
+            for i in f.body.0..=f.body.1 {
+                if is_lock_call(code, i) {
+                    direct.extend(resolve(f.file, code, i));
                 }
             }
-            let mine = locks_by_name.entry(f.name.clone()).or_default();
-            let before = mine.len();
-            mine.extend(add);
-            changed |= mine.len() != before;
-        }
-        if !changed {
-            break;
-        }
-    }
+            direct
+        },
+        |f: &FnNode, call: &Call| {
+            let code = &files[f.file].code;
+            !(call.name == "lock"
+                && call.at > 0
+                && is_lock_call(code, call.at - 1)
+                && !resolve(f.file, code, call.at - 1).is_empty())
+        },
+    );
 
     // Pass B: held-scope walk per function, drawing held → acquired edges.
     let mut edges: HashMap<(usize, usize), (String, u32)> = HashMap::new();
-    for f in &fns {
+    for f in &cg.fns {
         let code = &files[f.file].code;
         let mut held: Vec<Held> = Vec::new();
         let mut depth = 0usize;
@@ -744,57 +603,369 @@ fn statement_binding(code: &[Token], lo: usize, at: usize) -> (bool, Option<Stri
     (false, None)
 }
 
-fn tarjan_sccs(adj: &[Vec<usize>]) -> Vec<Vec<usize>> {
-    struct State<'a> {
-        adj: &'a [Vec<usize>],
-        index: Vec<Option<u32>>,
-        low: Vec<u32>,
-        on_stack: Vec<bool>,
-        stack: Vec<usize>,
-        next: u32,
-        out: Vec<Vec<usize>>,
+// ---------------------------------------------------------------------------
+// float_order_discipline
+
+/// Slice/iterator sinks whose closure argument is an `Ordering`
+/// comparator. Key-extraction sinks (`sort_by_key`, `min_by_key`, …) are
+/// exempt: their closures return keys, not comparisons.
+const COMPARATOR_SINKS: [&str; 5] =
+    ["sort_by", "sort_unstable_by", "binary_search_by", "min_by", "max_by"];
+
+/// In the numeric core (`src/select/`, `src/stats/`; test modules
+/// excluded), float ordering must go through a total order:
+/// `f64::total_cmp` or the `util::fkey` key maps. Two shapes are
+/// findings: any `.partial_cmp(` call (its `unwrap()`/`unwrap_or(..)`
+/// recoveries silently misplace NaN), and raw relational operators
+/// (`<`, `>`, `<=`, `>=`, `==`, `!=`) inside a comparator closure passed
+/// directly to a `sort_by`-family sink. Raw comparisons *outside*
+/// comparator closures stay legal — IEEE semantics (`lo < hi`
+/// convergence checks, NaN-propagating guards) are load-bearing there.
+pub(crate) fn float_order_discipline(ft: &FileTokens) -> Vec<Finding> {
+    let p = norm(&ft.file.path);
+    if !(p.contains("src/select/") || p.contains("src/stats/")) {
+        return Vec::new();
     }
-    fn go(st: &mut State, v: usize) {
-        st.index[v] = Some(st.next);
-        st.low[v] = st.next;
-        st.next += 1;
-        st.stack.push(v);
-        st.on_stack[v] = true;
-        let neighbors = st.adj[v].clone();
-        for w in neighbors {
-            if st.index[w].is_none() {
-                go(st, w);
-                st.low[v] = st.low[v].min(st.low[w]);
-            } else if st.on_stack[w] {
-                st.low[v] = st.low[v].min(st.index[w].unwrap_or(0));
+    let limit = cfg_test_start(&ft.code);
+    let code = &ft.code[..limit];
+    let mut out = Vec::new();
+    for i in 0..code.len() {
+        if code[i].is_punct('.')
+            && code.get(i + 1).is_some_and(|t| t.is_ident("partial_cmp"))
+            && code.get(i + 2).is_some_and(|t| t.is_punct('('))
+        {
+            out.push(mk(
+                "float_order_discipline",
+                ft.file,
+                code[i + 1].line,
+                "partial_cmp is not a total order over floats (NaN breaks it); \
+                 compare with total_cmp or a util::fkey key"
+                    .to_string(),
+            ));
+        }
+        // `sink(|a, b| …)` — a closure literal in argument position.
+        let sink = code[i].kind == TokenKind::Ident
+            && COMPARATOR_SINKS.contains(&code[i].text.as_str())
+            && code.get(i + 1).is_some_and(|t| t.is_punct('('))
+            && code.get(i + 2).is_some_and(|t| t.is_punct('|'));
+        if !sink {
+            continue;
+        }
+        let close = match_paren(code, i + 1);
+        let Some(params_end) = (i + 3..close).find(|&j| code[j].is_punct('|')) else { continue };
+        for k in params_end + 1..close {
+            let t = &code[k];
+            if t.kind != TokenKind::Punct {
+                continue;
+            }
+            let c = t.text.chars().next().unwrap_or(' ');
+            let punct_at = |j: usize| -> char {
+                match code.get(j) {
+                    Some(t) if t.kind == TokenKind::Punct => t.text.chars().next().unwrap_or(' '),
+                    _ => ' ',
+                }
+            };
+            let prev = if k > 0 { punct_at(k - 1) } else { ' ' };
+            let next = punct_at(k + 1);
+            // Raw relational operator, with arrows (`->`, `=>`), paths
+            // (`::<`), shifts and compound assignment shapes filtered by
+            // their neighbor characters.
+            let raw = match c {
+                '<' | '>' => {
+                    !matches!(prev, '-' | '=' | ':' | '<' | '>') && !matches!(next, '<' | '>')
+                }
+                '=' => next == '=' && !matches!(prev, '=' | '!' | '<' | '>'),
+                '!' => next == '=',
+                _ => false,
+            };
+            if raw {
+                out.push(mk(
+                    "float_order_discipline",
+                    ft.file,
+                    t.line,
+                    format!(
+                        "raw `{}` comparison inside a `{}` comparator closure; \
+                         use total_cmp or a util::fkey key for a total order",
+                        if next == '=' && (c == '<' || c == '>' || c == '=' || c == '!') {
+                            format!("{c}=")
+                        } else {
+                            c.to_string()
+                        },
+                        code[i].text
+                    ),
+                ));
+                break;
             }
         }
-        if Some(st.low[v]) == st.index[v] {
-            let mut scc = Vec::new();
-            while let Some(w) = st.stack.pop() {
-                st.on_stack[w] = false;
-                scc.push(w);
-                if w == v {
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// cancellation_discipline
+
+/// Entry points whose call trees carry a cooperative-cancel hook.
+const CANCEL_ROOTS: [&str; 2] = ["order_statistic", "solve_group"];
+
+/// Functions allowed to run probe loops without polling the hook. Every
+/// entry is itself checked: an entry whose function no longer exists in
+/// the call tree, or which has since grown a poll, is a stale-registry
+/// finding.
+pub const CANCEL_EXEMPT: [(&str, &str); 6] = [
+    (
+        "bisect_resolve",
+        "exact-fixup tail: a handful of probes after convergence, hard-capped by MAX_STEPS; \
+         callers poll at their own pass boundaries",
+    ),
+    ("quickselect", "download-based single pass: no fused passes after the copy"),
+    ("bfprt", "download-based single pass: no fused passes after the copy"),
+    ("sort_select_f64", "download-based single pass: no fused passes after the copy"),
+    ("sort_select_f32", "download-based single pass: no fused passes after the copy"),
+    ("fixed_pivot_select", "download-based single pass: no fused passes after the copy"),
+];
+
+/// The pass-primitive method names. A function *named* like a primitive
+/// (an `Evaluator` impl, or the sharded group's fan-out) IS the pass
+/// implementation: any loop inside it — shard fan-out, chunked ladder
+/// launches — runs *within* one logical pass, so the boundary the rule
+/// polices lies between its invocations, which the rule checks in every
+/// caller.
+const PASS_PRIMITIVES: [&str; 3] = ["probe", "probe_many", "interval"];
+
+fn span_polls_cancel(code: &[Token], span: (usize, usize)) -> bool {
+    (span.0..=span.1).any(|k| {
+        code[k].is_ident("cancel") && code.get(k + 1).is_some_and(|t| t.is_punct('('))
+    })
+}
+
+/// Every pass loop — a `loop`/`while`/`for` whose body issues fused
+/// reductions (`.probe(`, `.probe_many(`, `.interval(`) — in a function
+/// reachable from a cancel root (`order_statistic`, `solve_group`) must
+/// poll the cancel hook (`cancel()`), so deadline aborts land at pass
+/// boundaries instead of after an unbounded pass sequence. Only the
+/// outermost pass loop per nest is checked: pass boundaries are top-level
+/// iterations, and inner loops run *within* a pass by design. Functions
+/// named like the primitives themselves ([`PASS_PRIMITIVES`]) are the
+/// pass *implementations* — their internal fan-out loops are one pass —
+/// and functions in [`CANCEL_EXEMPT`] are skipped, with the registry
+/// itself checked for staleness. The rule arms only when a root function
+/// is present in the scanned set, so fixture scans stay quiet.
+pub(crate) fn cancellation_discipline(files: &[FileTokens], cg: &CallGraph) -> Vec<Finding> {
+    if CANCEL_ROOTS.iter().all(|r| cg.ids_named(r).is_empty()) {
+        return Vec::new();
+    }
+    let reach = cg.reachable_from(&CANCEL_ROOTS);
+    let mut out = Vec::new();
+    let issues_pass = |code: &[Token], span: (usize, usize)| {
+        (span.0..=span.1).any(|k| {
+            code[k].is_punct('.')
+                && code.get(k + 1).is_some_and(|t| {
+                    t.is_ident("probe") || t.is_ident("probe_many") || t.is_ident("interval")
+                })
+                && code.get(k + 2).is_some_and(|t| t.is_punct('('))
+        })
+    };
+    for (id, f) in cg.fns.iter().enumerate() {
+        if f.in_test || !reach[id] {
+            continue;
+        }
+        if CANCEL_EXEMPT.iter().any(|(n, _)| *n == f.name)
+            || PASS_PRIMITIVES.contains(&f.name.as_str())
+        {
+            continue;
+        }
+        let code = &files[f.file].code;
+        let mut i = f.body.0 + 1;
+        while i < f.body.1 {
+            let heads_loop =
+                code[i].is_ident("loop") || code[i].is_ident("while") || code[i].is_ident("for");
+            if !heads_loop {
+                i += 1;
+                continue;
+            }
+            // Loop body: next `{` outside the header's parens/brackets.
+            let mut j = i + 1;
+            let mut depth = 0usize;
+            let mut open = None;
+            while j <= f.body.1 {
+                let t = &code[j];
+                if t.is_punct('(') || t.is_punct('[') {
+                    depth += 1;
+                } else if t.is_punct(')') || t.is_punct(']') {
+                    depth = depth.saturating_sub(1);
+                } else if depth == 0 && t.is_punct('{') {
+                    open = Some(j);
+                    break;
+                } else if depth == 0 && t.is_punct(';') {
                     break;
                 }
+                j += 1;
             }
-            st.out.push(scc);
+            let Some(open) = open else {
+                i += 1;
+                continue;
+            };
+            let end = match_brace(code, open);
+            if issues_pass(code, (open, end)) && !span_polls_cancel(code, (open, end)) {
+                out.push(mk(
+                    "cancellation_discipline",
+                    files[f.file].file,
+                    code[i].line,
+                    format!(
+                        "pass loop in `{}` (reachable from order_statistic/solve_group) issues \
+                         fused reductions without polling the cancel hook",
+                        f.name
+                    ),
+                ));
+            }
+            i = end + 1;
         }
     }
-    let n = adj.len();
-    let mut st = State {
-        adj,
-        index: vec![None; n],
-        low: vec![0; n],
-        on_stack: vec![false; n],
-        stack: Vec::new(),
-        next: 0,
-        out: Vec::new(),
-    };
-    for v in 0..n {
-        if st.index[v].is_none() {
-            go(&mut st, v);
+    for (name, _) in CANCEL_EXEMPT {
+        for &id in cg.ids_named(name) {
+            let f = &cg.fns[id];
+            if f.in_test {
+                continue;
+            }
+            if !reach[id] {
+                out.push(mk(
+                    "cancellation_discipline",
+                    files[f.file].file,
+                    f.line,
+                    format!(
+                        "`{name}` is exempt in the cancellation registry but is no longer \
+                         reachable from a cancel root; remove the stale entry"
+                    ),
+                ));
+            } else if span_polls_cancel(&files[f.file].code, f.body) {
+                out.push(mk(
+                    "cancellation_discipline",
+                    files[f.file].file,
+                    f.line,
+                    format!(
+                        "`{name}` is exempt in the cancellation registry but now polls the \
+                         cancel hook; remove the stale entry"
+                    ),
+                ));
+            }
         }
     }
-    st.out
+    out
+}
+
+// ---------------------------------------------------------------------------
+// error_discipline
+
+/// No `.unwrap()` / `.expect(..)` / `panic!` / `unreachable!` in the
+/// worker-path directories (`src/coordinator/`, `src/runtime/`,
+/// `src/select/`; test modules excluded): a panic there rides the
+/// fault-isolation machinery at best and kills a worker at worst, and
+/// either way turns a query error into a process-level event. Fallible
+/// paths return `crate::Error`. The escape hatch is a justified
+/// suppression pragma on the site — the `unwrap_or_*` family and
+/// `assert!` invariant checks are not findings.
+pub(crate) fn error_discipline(ft: &FileTokens) -> Vec<Finding> {
+    let p = norm(&ft.file.path);
+    if !(p.contains("src/coordinator/") || p.contains("src/runtime/") || p.contains("src/select/"))
+    {
+        return Vec::new();
+    }
+    let limit = cfg_test_start(&ft.code);
+    let code = &ft.code[..limit];
+    let mut out = Vec::new();
+    for i in 0..code.len() {
+        if code[i].is_punct('.')
+            && code
+                .get(i + 1)
+                .is_some_and(|t| t.is_ident("unwrap") || t.is_ident("expect"))
+            && code.get(i + 2).is_some_and(|t| t.is_punct('('))
+        {
+            out.push(mk(
+                "error_discipline",
+                ft.file,
+                code[i + 1].line,
+                format!(
+                    ".{}() can panic on a worker path; return a crate::Error or justify a \
+                     suppression",
+                    code[i + 1].text
+                ),
+            ));
+        } else if (code[i].is_ident("panic") || code[i].is_ident("unreachable"))
+            && code.get(i + 1).is_some_and(|t| t.is_punct('!'))
+        {
+            out.push(mk(
+                "error_discipline",
+                ft.file,
+                code[i].line,
+                format!(
+                    "{}! aborts the worker thread; return a crate::Error or justify a \
+                     suppression",
+                    code[i].text
+                ),
+            ));
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// atomic_ordering
+
+const ATOMIC_OPS: [&str; 7] =
+    ["fetch_add", "fetch_sub", "fetch_max", "fetch_min", "store", "load", "swap"];
+
+/// Every access to a `Metrics` `AtomicU64` counter must use
+/// `Ordering::Relaxed`. The counters are statistical — nothing
+/// synchronizes *through* them — so an `Acquire`/`Release`/`SeqCst`
+/// access either signals a misunderstanding (someone thinks a counter
+/// publishes data) or buys fence traffic on the hot path for nothing.
+/// The counter-name set is read from the `Metrics` struct declaration in
+/// `coordinator/metrics.rs` (any visibility; the histogram array is out
+/// of scope), and accesses are matched tree-wide, tests included.
+pub(crate) fn atomic_ordering(files: &[FileTokens]) -> Vec<Finding> {
+    let mut counters: HashSet<String> = HashSet::new();
+    for ft in files {
+        if !norm(&ft.file.path).ends_with("coordinator/metrics.rs") {
+            continue;
+        }
+        if let Some(fields) = struct_fields(&ft.code, "Metrics") {
+            counters.extend(
+                fields.iter().filter(|f| f.ty == "AtomicU64").map(|f| f.name.clone()),
+            );
+        }
+    }
+    if counters.is_empty() {
+        return Vec::new();
+    }
+    let mut out = Vec::new();
+    let is_op = |t: &Token| t.kind == TokenKind::Ident && ATOMIC_OPS.contains(&t.text.as_str());
+    for ft in files {
+        let code = &ft.code;
+        for i in 0..code.len() {
+            let hit = code[i].is_punct('.')
+                && code
+                    .get(i + 1)
+                    .is_some_and(|t| t.kind == TokenKind::Ident && counters.contains(&t.text))
+                && code.get(i + 2).is_some_and(|t| t.is_punct('.'))
+                && code.get(i + 3).is_some_and(is_op)
+                && code.get(i + 4).is_some_and(|t| t.is_punct('('));
+            if !hit {
+                continue;
+            }
+            let close = match_paren(code, i + 4);
+            if !(i + 4..=close).any(|k| code[k].is_ident("Relaxed")) {
+                out.push(mk(
+                    "atomic_ordering",
+                    ft.file,
+                    code[i + 3].line,
+                    format!(
+                        "Metrics counter `{}` must use Ordering::Relaxed — counters are \
+                         statistical, nothing synchronizes through them",
+                        code[i + 1].text
+                    ),
+                ));
+            }
+        }
+    }
+    out
 }

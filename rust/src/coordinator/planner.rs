@@ -195,17 +195,33 @@ fn fair_order(steps: Vec<Step>) -> Vec<Step> {
     let mut slots: Vec<Option<Step>> = steps.into_iter().map(Some).collect();
     let mut out: Vec<Step> = Vec::with_capacity(slots.len());
     while out.len() < slots.len() {
+        let emitted_before = out.len();
         for &t in &tenants {
-            let queue = queues.get_mut(&t).expect("every tenant has a queue");
+            // Tenants were collected from the steps themselves, and a
+            // queued index is only taken below after popping it, so both
+            // lookups always hit; `continue` keeps the round-robin alive
+            // even if that invariant ever breaks.
+            let Some(queue) = queues.get_mut(&t) else { continue };
             let Some(&i) = queue.front() else { continue };
-            let ds = slots[i].as_ref().expect("unemitted step").dataset();
+            let Some(ds) = slots[i].as_ref().map(|s| s.dataset()) else {
+                queue.pop_front();
+                continue;
+            };
             let pos = ds_pos.entry(ds).or_insert(0);
             if per_ds[&ds][*pos] != i {
                 continue; // an earlier step on this dataset is still queued
             }
             queue.pop_front();
             *pos += 1;
-            out.push(slots[i].take().expect("step emitted once"));
+            if let Some(step) = slots[i].take() {
+                out.push(step);
+            }
+        }
+        if out.len() == emitted_before {
+            // The oldest unemitted step is always eligible, so a full
+            // no-progress round means the bookkeeping above was violated;
+            // flush the remainder in slot order instead of spinning.
+            out.extend(slots.iter_mut().filter_map(Option::take));
         }
     }
     out

@@ -1037,7 +1037,7 @@ fn answer_single(
     let mut out = match deadline_us.filter(|&d| now > d) {
         // expired while queued: answer typed, spend nothing on the device
         Some(d) => Err(Error::DeadlineExceeded { late_us: now - d }),
-        None => catch_unwind(AssertUnwindSafe(|| run_query(backend, id, k, method)))
+        None => catch_unwind(AssertUnwindSafe(|| run_query(backend, id, k, method, clock, deadline_us)))
             .unwrap_or_else(|p| {
                 metrics.worker_faults.fetch_add(1, Ordering::Relaxed);
                 Err(Error::Service(format!(
@@ -1172,6 +1172,8 @@ fn run_query(
     id: DatasetId,
     k: KSpec,
     method: Method,
+    clock: &Clock,
+    deadline_us: Option<u64>,
 ) -> Result<QueryResult> {
     // Resolve the evaluator FIRST so a missing dataset reports the
     // backend's own typed message — a capped backend ([`super::LruBackend`])
@@ -1179,7 +1181,21 @@ fn run_query(
     let ev = backend.evaluator(id)?;
     let n = ev.n();
     let rank = k.rank_for(n)?;
-    let r = select::order_statistic(ev, rank, method)?;
+    // Cooperative deadline: polled at every pass boundary, so a
+    // single-query run that outlives its deadline stops before its next
+    // fused reduction instead of running to convergence.
+    let mut cancel = || match deadline_us {
+        Some(d) => {
+            let now = clock.now_us();
+            if now > d {
+                Some(Error::DeadlineExceeded { late_us: now - d })
+            } else {
+                None
+            }
+        }
+        None => None,
+    };
+    let r = select::order_statistic_cancellable(ev, rank, method, &mut cancel)?;
     Ok(QueryResult {
         value: r.value,
         k: rank,

@@ -255,9 +255,13 @@
 //! ## Static analysis and concurrency invariants
 //!
 //! The control plane's correctness rests on conventions, and [`analysis`]
-//! makes them machine-checked: `cp-select lint` (a blocking CI leg) runs
-//! a dependency-free lexical pass over `src/` and `tests/` with five
-//! rules, each grounded in an existing repo idiom:
+//! makes them machine-checked: `cp-select lint` (a blocking CI leg;
+//! `--format json` emits a stable versioned schema that CI turns into
+//! inline annotations) runs a dependency-free pass over `src/` and
+//! `tests/`. Rules share a structural layer — [`analysis::callgraph`]:
+//! function spans, per-function call sets, a name-keyed cross-file call
+//! graph with reachability and a reusable fact-set fixpoint — and each
+//! is grounded in an existing repo idiom:
 //!
 //! - **clock_discipline** — `Instant::now`/`SystemTime::now` only in the
 //!   wall-clock files (`testkit/clock.rs`, `util/timer.rs`, `main.rs`,
@@ -268,21 +272,45 @@
 //! - **poison_discipline** — every `.lock()` recovers the guard with
 //!   `unwrap_or_else(|e| e.into_inner())`; `.unwrap()`/`.expect()`/`?`
 //!   on a lock result is an error (one poisoned lock must not cascade).
+//! - **float_order_discipline** — in the numeric core (`src/select/`,
+//!   `src/stats/`), float ordering goes through `f64::total_cmp` or a
+//!   `util::fkey` key: `.partial_cmp(` and raw relational operators in
+//!   `sort_by`-family comparator closures are findings. Raw comparisons
+//!   outside comparators (convergence checks, NaN-propagating guards)
+//!   stay legal — IEEE semantics are load-bearing there.
+//! - **error_discipline** — no `.unwrap()`/`.expect()`/`panic!`/
+//!   `unreachable!` on the worker-path directories (`coordinator/`,
+//!   `runtime/`, `select/`; test modules excluded): fallible paths
+//!   return [`Error`] instead of riding the fault-isolation machinery.
 //! - **panic_boundary** — `DatasetBackend` calls in
 //!   `coordinator/service.rs` stay inside `catch_unwind` fault isolation.
 //! - **metrics_triple_entry** — every `Metrics` counter also has a
 //!   `Snapshot` field, a `snapshot()` copy, and a `Display` arm.
+//! - **atomic_ordering** — every `Metrics` counter access uses
+//!   `Ordering::Relaxed`; the counters are statistical, and nothing may
+//!   synchronize through them.
 //! - **lock_order** — nested `.lock()` scopes form a cross-file graph
-//!   over the named lock fields; cycles fail the build. The runtime half
-//!   is [`util::sync::OrderedMutex`]: rank-annotated mutexes that panic
-//!   on out-of-order acquisition (thread-local held-ranks stack), with
-//!   the documented rank order admission (10) < tenant_depth (20) <
-//!   cost-model pool (30) < fault script (40) < virtual clock (50).
+//!   over the named lock fields (helper-routed acquisitions expanded
+//!   through the call-graph fixpoint); cycles fail the build. The
+//!   runtime half is [`util::sync::OrderedMutex`]: rank-annotated
+//!   mutexes that panic on out-of-order acquisition (thread-local
+//!   held-ranks stack), with the documented rank order admission (10) <
+//!   tenant_depth (20) < cost-model pool (30) < fault script (40) <
+//!   virtual clock (50).
+//! - **cancellation_discipline** — every pass loop reachable from
+//!   `order_statistic`/`solve_group` polls the cooperative cancel hook,
+//!   so deadline aborts land at pass boundaries; single-pass download
+//!   methods are exempt via a registry
+//!   ([`analysis::rules::CANCEL_EXEMPT`]) that is itself checked for
+//!   staleness.
 //!
 //! A finding is suppressed by a plain `//` comment on the same line or
 //! the one above: `lint: allow(<rule>) — <justification>` (the
 //! justification is mandatory, and malformed pragmas are themselves
-//! findings). Doc comments never act as pragmas.
+//! findings). Doc comments never act as pragmas. Suppressed findings
+//! stay on the report — tagged in the JSON output and pinned by an
+//! exact-inventory test — so every pragma in the tree is a reviewed,
+//! deliberate act.
 //!
 //! ## Quick start
 //!

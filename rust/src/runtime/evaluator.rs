@@ -123,7 +123,9 @@ impl DeviceEvaluator {
     /// One `fused_ladder` launch over a ladder chunk padded to width `p`.
     fn run_ladder_chunk(&mut self, chunk: &[f64], p: usize) -> Result<Vec<ProbeStats>> {
         let mut rungs = chunk.to_vec();
-        let last = *rungs.last().expect("non-empty ladder chunk");
+        let Some(&last) = rungs.last() else {
+            return Err(Error::Xla("fused_ladder launch on an empty chunk".into()));
+        };
         rungs.resize(p, last); // pad to the bucket by repeating the last probe
         let exe = self.rt.executable(
             Kernel::FusedLadder,
@@ -223,8 +225,8 @@ impl Evaluator for DeviceEvaluator {
         if ys.is_empty() {
             return Ok(Vec::new());
         }
-        let widest = self.rt.manifest.widest_ladder(self.flavor, self.dtype, self.bucket);
-        if widest.is_none() {
+        let maybe_widest = self.rt.manifest.widest_ladder(self.flavor, self.dtype, self.bucket);
+        let Some(widest) = maybe_widest else {
             // No `fused_ladder` artifacts at this bucket (pre-ladder
             // artifact set): forward the batch in one round-trip — resolve
             // the executable once, upload every probe scalar up front, then
@@ -248,13 +250,12 @@ impl Evaluator for DeviceEvaluator {
                 raw.push(exe.run(&args)?);
             }
             return raw.iter().map(|out| parse_probe_stats(out, self.dtype)).collect();
-        }
+        };
         // Fused path: sort/dedup the (canonicalized) ladder exactly like
         // the host oracle, pad each chunk up to the nearest width bucket by
         // repeating the last probe, and run ONE `fused_ladder` reduction
         // per chunk — so a whole multisection pass costs one launch and the
         // probe counter matches the host/sharded accounting.
-        let widest = widest.expect("checked above");
         let (canon, ladder) = crate::select::objective::fused_ladder_rungs(ys, self.dtype);
         let mut stats = Vec::with_capacity(ladder.len());
         for chunk in ladder.chunks(widest) {
@@ -262,7 +263,9 @@ impl Evaluator for DeviceEvaluator {
                 .rt
                 .manifest
                 .ladder_bucket(self.flavor, self.dtype, self.bucket, chunk.len())
-                .expect("ladder widths checked non-empty");
+                .ok_or_else(|| {
+                    Error::Xla(format!("no fused_ladder bucket covers width {}", chunk.len()))
+                })?;
             stats.extend(self.run_ladder_chunk(chunk, p)?);
         }
         // Back to the caller's probe order; duplicates share one rung,

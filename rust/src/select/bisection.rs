@@ -35,6 +35,18 @@ pub struct BisectOutcome {
 
 /// Bisection for the k-th smallest element; exact via rank resolution.
 pub fn bisection(ev: &mut dyn Evaluator, k: usize, opts: &BisectOptions) -> Result<BisectOutcome> {
+    bisection_cancellable(ev, k, opts, &mut || None)
+}
+
+/// [`bisection`] with a cooperative cancellation hook, polled at every
+/// pass boundary (before each probe reduction) — never mid-pass. The
+/// coordinator wires deadline expiry through this hook.
+pub fn bisection_cancellable(
+    ev: &mut dyn Evaluator,
+    k: usize,
+    opts: &BisectOptions,
+    cancel: &mut dyn FnMut() -> Option<crate::Error>,
+) -> Result<BisectOutcome> {
     let n = ev.n();
     let spec = ObjectiveSpec::order(n, k)?;
     let mut phases = PhaseTimer::new();
@@ -49,6 +61,9 @@ pub fn bisection(ev: &mut dyn Evaluator, k: usize, opts: &BisectOptions) -> Resu
     let mut iterations = 0;
     let mut mid = 0.5 * (lo + hi);
     while iterations < opts.max_iters {
+        if let Some(err) = cancel() {
+            return Err(err);
+        }
         mid = 0.5 * (lo + hi);
         if mid <= lo || mid >= hi {
             break; // adjacent floats

@@ -42,6 +42,17 @@ pub fn brent_minimize(
     k: usize,
     opts: &BrentOptions,
 ) -> Result<BrentOutcome> {
+    brent_minimize_cancellable(ev, k, opts, &mut || None)
+}
+
+/// [`brent_minimize`] with a cooperative cancellation hook, polled at
+/// every pass boundary (before each probe reduction) — never mid-pass.
+pub fn brent_minimize_cancellable(
+    ev: &mut dyn Evaluator,
+    k: usize,
+    opts: &BrentOptions,
+    cancel: &mut dyn FnMut() -> Option<crate::Error>,
+) -> Result<BrentOutcome> {
     let n = ev.n();
     let spec = ObjectiveSpec::order(n, k)?;
     let mut phases = PhaseTimer::new();
@@ -63,6 +74,9 @@ pub fn brent_minimize(
     let mut iterations = 1;
 
     while iterations < opts.max_iters {
+        if let Some(err) = cancel() {
+            return Err(err);
+        }
         let xm = 0.5 * (a + b);
         let tol1 = opts.tol * x.abs().max(1.0);
         let tol2 = 2.0 * tol1;
@@ -145,6 +159,17 @@ pub fn brent_minimize(
 
 /// Brent–Dekker root finding on the subgradient point value.
 pub fn brent_root(ev: &mut dyn Evaluator, k: usize, opts: &BrentOptions) -> Result<BrentOutcome> {
+    brent_root_cancellable(ev, k, opts, &mut || None)
+}
+
+/// [`brent_root`] with a cooperative cancellation hook, polled at every
+/// pass boundary (before each probe reduction) — never mid-pass.
+pub fn brent_root_cancellable(
+    ev: &mut dyn Evaluator,
+    k: usize,
+    opts: &BrentOptions,
+    cancel: &mut dyn FnMut() -> Option<crate::Error>,
+) -> Result<BrentOutcome> {
     let n = ev.n();
     let spec = ObjectiveSpec::order(n, k)?;
     let mut phases = PhaseTimer::new();
@@ -164,6 +189,9 @@ pub fn brent_root(ev: &mut dyn Evaluator, k: usize, opts: &BrentOptions) -> Resu
     let mut iterations = 0;
 
     while iterations < opts.max_iters {
+        if let Some(err) = cancel() {
+            return Err(err);
+        }
         if (fb > 0.0 && fc > 0.0) || (fb < 0.0 && fc < 0.0) {
             c = a;
             fc = fa;

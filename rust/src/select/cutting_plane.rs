@@ -96,6 +96,18 @@ pub struct CpOutcome {
 /// iteration stops early and the (bracket, iterations) are returned for the
 /// hybrid path.
 pub fn cutting_plane(ev: &mut dyn Evaluator, k: usize, opts: &CpOptions) -> Result<CpOutcome> {
+    cutting_plane_cancellable(ev, k, opts, &mut || None)
+}
+
+/// [`cutting_plane`] with a cooperative cancellation hook, polled at
+/// every pass boundary (before each fused candidate-pair reduction) —
+/// never mid-pass, so an in-flight reduction always completes.
+pub fn cutting_plane_cancellable(
+    ev: &mut dyn Evaluator,
+    k: usize,
+    opts: &CpOptions,
+    cancel: &mut dyn FnMut() -> Option<crate::Error>,
+) -> Result<CpOutcome> {
     let n = ev.n();
     let spec = ObjectiveSpec::order(n, k)?;
     let mut phases = PhaseTimer::new();
@@ -142,6 +154,9 @@ pub fn cutting_plane(ev: &mut dyn Evaluator, k: usize, opts: &CpOptions) -> Resu
     let mut optimal_at = None;
 
     'outer: while iterations < budget {
+        if let Some(err) = cancel() {
+            return Err(err);
+        }
         // Fused candidate pair, ONE probe-ladder pass per iteration: the
         // Kelley model minimizer (step 1.1) and the bisection midpoint
         // safeguard travel together through `probe_many`. The model cut
@@ -168,7 +183,7 @@ pub fn cutting_plane(ev: &mut dyn Evaluator, k: usize, opts: &CpOptions) -> Resu
         if m == 0 {
             break; // bracket exhausted to adjacent floats
         }
-        cands[..m].sort_by(|a, b| a.total_cmp(b));
+        cands[..m].sort_by(crate::util::total_cmp_f64);
 
         let stats = phases.time("cp_iterations", || ev.probe_many(&cands[..m]))?;
         iterations += 1;

@@ -36,6 +36,17 @@ pub fn golden_section(
     k: usize,
     opts: &GoldenOptions,
 ) -> Result<GoldenOutcome> {
+    golden_section_cancellable(ev, k, opts, &mut || None)
+}
+
+/// [`golden_section`] with a cooperative cancellation hook, polled at
+/// every pass boundary (before each probe reduction) — never mid-pass.
+pub fn golden_section_cancellable(
+    ev: &mut dyn Evaluator,
+    k: usize,
+    opts: &GoldenOptions,
+    cancel: &mut dyn FnMut() -> Option<crate::Error>,
+) -> Result<GoldenOutcome> {
     let n = ev.n();
     let spec = ObjectiveSpec::order(n, k)?;
     let mut phases = PhaseTimer::new();
@@ -54,6 +65,9 @@ pub fn golden_section(
     let mut iterations = 2;
 
     while iterations < opts.max_iters {
+        if let Some(err) = cancel() {
+            return Err(err);
+        }
         if (b - a) <= opts.tol * a.abs().max(b.abs()).max(1.0) {
             break;
         }

@@ -214,7 +214,7 @@ impl PassCostModel {
         let (a, b) = self.coeffs();
         let score = |p: usize| (a + b * p as f64) / (p as f64 + 1.0).ln();
         (1..=MAX_PLANNED_WIDTH)
-            .min_by(|&p1, &p2| score(p1).total_cmp(&score(p2)))
+            .min_by_key(|&p| crate::util::f64_key(score(p)))
             .unwrap_or(15)
     }
 

@@ -8,7 +8,7 @@
 //! (pivot interval under 2¹⁹ elements). `hybrid_sweep` in the ablations
 //! bench reproduces that tuning curve.
 
-use super::cutting_plane::{cutting_plane, CpOptions};
+use super::cutting_plane::{cutting_plane_cancellable, CpOptions};
 use super::exact;
 use super::objective::{DType, Evaluator, IntervalCounts};
 use super::radix::{radix_sort_f32, radix_sort_f64};
@@ -46,6 +46,19 @@ pub fn hybrid_select(
     k: usize,
     opts: &HybridOptions,
 ) -> Result<HybridOutcome> {
+    hybrid_select_cancellable(ev, k, opts, &mut || None)
+}
+
+/// [`hybrid_select`] with a cooperative cancellation hook, polled at
+/// every pass boundary (between cutting-plane rounds and before the
+/// occupancy peek) and threaded through the inner cutting plane — never
+/// mid-pass.
+pub fn hybrid_select_cancellable(
+    ev: &mut dyn Evaluator,
+    k: usize,
+    opts: &HybridOptions,
+    cancel: &mut dyn FnMut() -> Option<crate::Error>,
+) -> Result<HybridOutcome> {
     let n = ev.n();
     let mut phases = PhaseTimer::new();
 
@@ -55,10 +68,14 @@ pub fn hybrid_select(
     let (mut bracket, mut cp_iterations, mut maybe_exact);
     let mut peeked: Option<IntervalCounts> = None;
     loop {
-        let cp = cutting_plane(
+        if let Some(err) = cancel() {
+            return Err(err);
+        }
+        let cp = cutting_plane_cancellable(
             ev,
             k,
             &CpOptions { stop_after: Some(budget), ..CpOptions::default() },
+            cancel,
         )?;
         phases.merge(&cp.phases);
         bracket = cp.bracket;

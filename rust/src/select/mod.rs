@@ -130,18 +130,40 @@ pub struct SelectResult {
 
 /// Compute the k-th smallest element with the chosen method.
 pub fn order_statistic(ev: &mut dyn Evaluator, k: usize, method: Method) -> Result<SelectResult> {
+    order_statistic_cancellable(ev, k, method, &mut || None)
+}
+
+/// [`order_statistic`] with a cooperative cancellation hook.
+///
+/// Every multi-pass method polls `cancel` at its pass boundaries (before
+/// each fused reduction, never mid-pass); returning `Some(err)` aborts
+/// the run with that error. Download-based single-pass methods
+/// (`Quickselect`, `Bfprt`, `SortRadix`, `FixedPivot`) issue no fused
+/// passes after the copy and run to completion — they are registered
+/// exemptions in the `cancellation_discipline` lint rule.
+pub fn order_statistic_cancellable(
+    ev: &mut dyn Evaluator,
+    k: usize,
+    method: Method,
+    cancel: &mut dyn FnMut() -> Option<crate::Error>,
+) -> Result<SelectResult> {
     let probes0 = ev.probes();
     let (value, iterations, phases) = match method {
         Method::CuttingPlane => {
-            let o = cutting_plane::cutting_plane(ev, k, &CpOptions::default())?;
+            let o = cutting_plane::cutting_plane_cancellable(ev, k, &CpOptions::default(), cancel)?;
             (o.value, o.iterations, o.phases)
         }
         Method::Hybrid => {
-            let o = hybrid::hybrid_select(ev, k, &HybridOptions::default())?;
+            let o = hybrid::hybrid_select_cancellable(ev, k, &HybridOptions::default(), cancel)?;
             (o.value, o.cp_iterations, o.phases)
         }
         Method::Bisection => {
-            let o = bisection::bisection(ev, k, &bisection::BisectOptions::default())?;
+            let o = bisection::bisection_cancellable(
+                ev,
+                k,
+                &bisection::BisectOptions::default(),
+                cancel,
+            )?;
             (o.value, o.iterations, o.phases)
         }
         Method::Multisection => {
@@ -149,19 +171,21 @@ pub fn order_statistic(ev: &mut dyn Evaluator, k: usize, method: Method) -> Resu
             // advertises its widest fused_ladder bucket so every pass is
             // exactly one launch; the host default stays 15.
             let opts = MultisectOptions::for_evaluator(&*ev);
-            let o = multisection::multisection(ev, k, &opts)?;
+            let o = multisection::multisection_cancellable(ev, k, &opts, cancel)?;
             (o.value, o.passes, o.phases)
         }
         Method::BrentMinimize => {
-            let o = brent::brent_minimize(ev, k, &brent::BrentOptions::default())?;
+            let o =
+                brent::brent_minimize_cancellable(ev, k, &brent::BrentOptions::default(), cancel)?;
             (o.value, o.iterations, o.phases)
         }
         Method::BrentRoot => {
-            let o = brent::brent_root(ev, k, &brent::BrentOptions::default())?;
+            let o = brent::brent_root_cancellable(ev, k, &brent::BrentOptions::default(), cancel)?;
             (o.value, o.iterations, o.phases)
         }
         Method::GoldenSection => {
-            let o = golden::golden_section(ev, k, &golden::GoldenOptions::default())?;
+            let o =
+                golden::golden_section_cancellable(ev, k, &golden::GoldenOptions::default(), cancel)?;
             (o.value, o.iterations, o.phases)
         }
         Method::Quickselect => {
@@ -259,6 +283,37 @@ mod tests {
         let r = median(&mut ev, Method::Quickselect).unwrap();
         assert!(r.phases.get_ms("algorithm") >= 0.0);
         assert_eq!(r.probes, 0, "quickselect must not issue device reductions");
+    }
+
+    #[test]
+    fn probe_methods_cancel_at_pass_boundaries() {
+        let mut rng = Rng::seeded(105);
+        let data = Distribution::Normal.sample_vec(&mut rng, 4096);
+        for m in Method::ALL.iter().copied().filter(|m| !m.needs_download()) {
+            // Cancel at the third poll: the run must stop with the injected
+            // error after a bounded number of fused reductions.
+            let mut ev = HostEvaluator::new(&data);
+            let mut polls = 0;
+            let err = order_statistic_cancellable(&mut ev, 2048, m, &mut || {
+                polls += 1;
+                (polls > 2).then_some(crate::Error::DeadlineExceeded { late_us: 1 })
+            })
+            .unwrap_err();
+            assert!(
+                matches!(err, crate::Error::DeadlineExceeded { .. }),
+                "{}: {err}",
+                m.name()
+            );
+            assert!(ev.probes() <= 6, "{}: {} probes after cancel", m.name(), ev.probes());
+        }
+        // Download methods are single-pass: nothing to cancel between, so
+        // an always-firing hook must not abort them.
+        let mut ev = HostEvaluator::new(&data);
+        let r = order_statistic_cancellable(&mut ev, 2048, Method::FixedPivot, &mut || {
+            Some(crate::Error::DeadlineExceeded { late_us: 1 })
+        })
+        .unwrap();
+        assert_eq!(r.value, sorted_order_statistic(&data, 2048));
     }
 
     #[test]

@@ -101,6 +101,17 @@ pub fn multisection(
     k: usize,
     opts: &MultisectOptions,
 ) -> Result<MultisectOutcome> {
+    multisection_cancellable(ev, k, opts, &mut || None)
+}
+
+/// [`multisection`] with a cooperative cancellation hook, polled at every
+/// pass boundary (before each fused ladder pass) — never mid-pass.
+pub fn multisection_cancellable(
+    ev: &mut dyn Evaluator,
+    k: usize,
+    opts: &MultisectOptions,
+    cancel: &mut dyn FnMut() -> Option<crate::Error>,
+) -> Result<MultisectOutcome> {
     let n = ev.n();
     let spec = ObjectiveSpec::order(n, k)?;
     let mut phases = PhaseTimer::new();
@@ -116,6 +127,9 @@ pub fn multisection(
     let mut passes = 0;
     let mut resolved = None;
     while passes < opts.max_passes {
+        if let Some(err) = cancel() {
+            return Err(err);
+        }
         let ys = ladder_points(lo, hi, p);
         if ys.is_empty() {
             break; // bracket exhausted to adjacent floats
@@ -258,7 +272,7 @@ pub fn multi_order_statistics_cancellable(
         for &(lo, hi) in &brackets {
             ys.extend(ladder_points(lo, hi, per_b));
         }
-        ys.sort_by(|a, b| a.total_cmp(b));
+        ys.sort_by(crate::util::total_cmp_f64);
         ys.dedup();
         if ys.is_empty() {
             break;
@@ -329,6 +343,7 @@ pub fn multi_order_statistics_cancellable(
         }
     }
     Ok(MultiOutcome {
+        // lint: allow(error_discipline) — the budget-exhausted tail above resolves every open query; a None here is a logic bug worth a loud panic
         values: qs.into_iter().map(|q| q.done.expect("resolved")).collect(),
         passes,
         rungs,

@@ -238,7 +238,7 @@ pub(crate) fn canon_value(y: f64, dtype: DType) -> f64 {
 pub(crate) fn fused_ladder_rungs(ys: &[f64], dtype: DType) -> (Vec<f64>, Vec<f64>) {
     let canon: Vec<f64> = ys.iter().map(|&y| canon_value(y, dtype)).collect();
     let mut ladder: Vec<f64> = canon.iter().copied().filter(|y| !y.is_nan()).collect();
-    ladder.sort_by(|a, b| a.total_cmp(b));
+    ladder.sort_by(crate::util::total_cmp_f64);
     ladder.dedup();
     (canon, ladder)
 }
@@ -425,9 +425,11 @@ fn par_reduce<T: Sync, R: Send>(
         let handles: Vec<_> = data.chunks(chunk).map(|c| s.spawn(move || map(c))).collect();
         handles
             .into_iter()
+            // lint: allow(error_discipline) — join() only fails if a scoped worker panicked; re-raising that panic on the caller thread is the intended propagation
             .map(|h| h.join().expect("host evaluator worker panicked"))
             .collect()
     });
+    // lint: allow(error_discipline) — t >= 1 and data is non-empty here (t == 1 early-returns above), so chunks() yields at least one partial
     partials.into_iter().reduce(merge).expect("at least one chunk")
 }
 

@@ -125,7 +125,7 @@ mod tests {
             let mut a = d.sample_vec(&mut rng, 3000);
             let mut b = a.clone();
             radix_sort_f64(&mut a);
-            b.sort_by(|x, y| x.total_cmp(y));
+            b.sort_by(crate::util::total_cmp_f64);
             assert_eq!(a, b, "{}", d.name());
         }
     }
@@ -136,7 +136,7 @@ mod tests {
         let mut a: Vec<f32> = (0..5000).map(|_| rng.normal() as f32).collect();
         let mut b = a.clone();
         radix_sort_f32(&mut a);
-        b.sort_by(|x, y| x.total_cmp(y));
+        b.sort_by_key(|&x| crate::util::f32_key(x));
         assert_eq!(a, b);
     }
 
@@ -174,7 +174,7 @@ mod tests {
         let mut rng = Rng::seeded(74);
         rng.shuffle(&mut v);
         radix_sort_f64(&mut v);
-        b.sort_by(|x, y| x.total_cmp(y));
+        b.sort_by(crate::util::total_cmp_f64);
         assert_eq!(v, b);
     }
 

@@ -203,7 +203,7 @@ pub fn weighted_median(x: &[f64], w: &[f64]) -> Result<f64> {
 /// Sort-based oracle for tests: smallest x with cumulative weight ≥ q·W.
 pub fn weighted_quantile_oracle(x: &[f64], w: &[f64], q: f64) -> f64 {
     let mut idx: Vec<usize> = (0..x.len()).collect();
-    idx.sort_by(|&a, &b| x[a].total_cmp(&x[b]));
+    idx.sort_by_key(|&i| crate::util::f64_key(x[i]));
     let total: f64 = w.iter().sum();
     let target = q * total;
     let mut acc = 0.0;
@@ -213,7 +213,7 @@ pub fn weighted_quantile_oracle(x: &[f64], w: &[f64], q: f64) -> f64 {
             return x[i];
         }
     }
-    x[*idx.last().unwrap()]
+    idx.last().map_or(f64::NAN, |&i| x[i])
 }
 
 #[cfg(test)]

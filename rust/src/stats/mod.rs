@@ -12,7 +12,7 @@ pub use rng::Rng;
 pub fn sorted_order_statistic(data: &[f64], k: usize) -> f64 {
     assert!((1..=data.len()).contains(&k));
     let mut v = data.to_vec();
-    v.sort_by(|a, b| a.total_cmp(b));
+    v.sort_by(crate::util::total_cmp_f64);
     v[k - 1]
 }
 

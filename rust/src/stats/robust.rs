@@ -82,7 +82,7 @@ pub fn trimmed_mean(x: &[f64], alpha: f64, selector: &mut dyn MedianSelector) ->
     if remaining != 0 {
         // duplicates straddle both cuts; fall back to the exact definition
         let mut v = x.to_vec();
-        v.sort_by(|a, b| a.total_cmp(b));
+        v.sort_by(crate::util::total_cmp_f64);
         let inner = &v[cut..n - cut];
         return Ok(inner.iter().sum::<f64>() / inner.len() as f64);
     }
@@ -177,7 +177,7 @@ mod tests {
             for alpha in [0.05, 0.1, 0.25] {
                 let got = trimmed_mean(&x, alpha, &mut sel()).unwrap();
                 let mut v = x.clone();
-                v.sort_by(|a, b| a.total_cmp(b));
+                v.sort_by(crate::util::total_cmp_f64);
                 let cut = (alpha * n as f64).floor() as usize;
                 let inner = &v[cut..n - cut];
                 let want = inner.iter().sum::<f64>() / inner.len() as f64;
