@@ -1,10 +1,11 @@
 //! BENCH_select.json — the machine-readable perf-trajectory artifact:
 //! method × n × fused reductions × wall-ms for the probe-based methods,
 //! plus the coordinator coalescing experiment (8 concurrent same-dataset
-//! medians vs 8 sequential runs) and the time-windowed coalescing
-//! experiment (8 *independent* single-shot clients caught by one batching
-//! window). Future PRs diff this file to track both the pass-count and
-//! wall-clock trajectories.
+//! medians vs 8 sequential runs), the time-windowed coalescing experiment
+//! (8 *independent* single-shot clients caught by one batching window),
+//! and the cluster-parity experiment (the same burst answered through
+//! remote backends over loopback wires). Future PRs diff this file to
+//! track both the pass-count and wall-clock trajectories.
 //!
 //! Writes to `CP_BENCH_OUT` (default `results/`); run the CLI's
 //! `bench-select` from the repo root to refresh the committed copy.
@@ -152,6 +153,25 @@ fn check_against_baseline(bench: &SelectBench) {
             o.fairness_ratio
         );
     }
+    // cluster parity (baselines written before cluster mode landed lack
+    // the key; skip silently then). Fused parity gates by equality: the
+    // wire path shares the in-process planner, so any drift means the
+    // remote-backend seam changed the plan.
+    if let Some(clbase) = base.get_opt("cluster") {
+        let cl = &bench.cluster;
+        let fbase = clbase.get("fused_reductions").unwrap().as_usize().unwrap() as u64;
+        assert!(
+            cl.fused_reductions <= fbase,
+            "cluster coalescing regressed: {} fused reductions > baseline {fbase}",
+            cl.fused_reductions
+        );
+        let wbase = clbase.get("workers").unwrap().as_usize().unwrap();
+        assert!(
+            cl.workers == wbase,
+            "cluster.workers drifted: {} != baseline {wbase}",
+            cl.workers
+        );
+    }
     println!("regression check vs {path}: {checked} rows + coalescing within baseline");
 }
 
@@ -230,6 +250,24 @@ fn main() {
     assert!(
         o.fairness_ratio >= 1.0 && o.fairness_ratio <= 3.0,
         "per-tenant completion skew out of bounds: {o:?}"
+    );
+    // cluster mode: the same windowed burst answered through remote
+    // backends over loopback wires must return bit-exact values and cost
+    // exactly the in-process fused-reduction count — the wire is a
+    // transport, not a second planner
+    let cl = &bench.cluster;
+    assert!(cl.value_parity, "a cluster answer diverged from the host oracle: {cl:?}");
+    assert!(
+        cl.coalesced >= cl.queries as u64,
+        "cluster window missed clients: coalesced {} < {} queries",
+        cl.coalesced,
+        cl.queries
+    );
+    assert!(
+        cl.fused_reductions == w.fused_reductions,
+        "cluster burst cost {} fused reductions vs in-process window {}",
+        cl.fused_reductions,
+        w.fused_reductions
     );
     check_against_baseline(&bench);
 }

@@ -28,16 +28,18 @@
 //!   (convergence checks, NaN-propagating guards) stay legal — IEEE
 //!   semantics are load-bearing there.
 //! - `error_discipline` — no `.unwrap()`/`.expect(..)`/`panic!`/
-//!   `unreachable!` in `src/coordinator/`, `src/runtime/`, `src/select/`
-//!   (test modules excluded); worker paths return `crate::Error`. The
-//!   escape hatch is a justified suppression pragma on the site.
+//!   `unreachable!` in `src/coordinator/`, `src/runtime/`, `src/select/`,
+//!   `src/cluster/` (test modules excluded); worker paths return
+//!   `crate::Error`. The escape hatch is a justified suppression pragma
+//!   on the site.
 //!
 //! Cross-file, on the shared call graph:
 //!
-//! - `panic_boundary` — in `coordinator/service.rs`, `DatasetBackend`
-//!   method calls must sit inside a `catch_unwind` span (directly, or in
-//!   a function only ever entered through one), so a panicking backend is
-//!   contained as a worker fault instead of killing the worker thread.
+//! - `panic_boundary` — in `coordinator/dispatch.rs` and
+//!   `cluster/worker.rs`, `DatasetBackend` method calls must sit inside a
+//!   `catch_unwind` span (directly, or in a function only ever entered
+//!   through one), so a panicking backend is contained as a worker fault
+//!   instead of killing the worker thread.
 //! - `metrics_triple_entry` — every `pub … AtomicU64` counter on
 //!   `Metrics` also appears as a `Snapshot` field, is copied in
 //!   `Metrics::snapshot()`, and is rendered by `Display for Snapshot`.

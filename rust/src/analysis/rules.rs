@@ -164,13 +164,15 @@ fn backend_trait_methods(files: &[FileTokens]) -> HashSet<String> {
     methods
 }
 
-/// In the coordinator worker paths (`coordinator/service.rs`, test module
-/// excluded), every `backend.<DatasetBackend method>(…)` call must be
-/// lexically inside a `catch_unwind(…)` span — or inside a function whose
-/// every call site in the file is (`solve_group`/`run_query`, which are
-/// only ever entered through the fault-isolation boundary). The method
-/// set is read from the `DatasetBackend` trait declaration itself, and
-/// the receiver-name convention (`backend`) is the file's own.
+/// In the worker execution paths (`coordinator/dispatch.rs` for the
+/// in-process loop, `cluster/worker.rs` for the wire serve loop; test
+/// modules excluded), every `backend.<DatasetBackend method>(…)` call must
+/// be lexically inside a `catch_unwind(…)` span — or inside a function
+/// whose every call site in the file is (`solve_group`/`run_query`/
+/// `handle_shard_op`, which are only ever entered through the
+/// fault-isolation boundary). The method set is read from the
+/// `DatasetBackend` trait declaration itself, and the receiver-name
+/// convention (`backend`) is shared by both files.
 pub(crate) fn panic_boundary(files: &[FileTokens]) -> Vec<Finding> {
     let methods = backend_trait_methods(files);
     if methods.is_empty() {
@@ -178,7 +180,8 @@ pub(crate) fn panic_boundary(files: &[FileTokens]) -> Vec<Finding> {
     }
     let mut out = Vec::new();
     for ft in files {
-        if !norm(&ft.file.path).ends_with("coordinator/service.rs") {
+        let path = norm(&ft.file.path);
+        if !path.ends_with("coordinator/dispatch.rs") && !path.ends_with("cluster/worker.rs") {
             continue;
         }
         let limit = cfg_test_start(&ft.code);
@@ -858,15 +861,18 @@ pub(crate) fn cancellation_discipline(files: &[FileTokens], cg: &CallGraph) -> V
 
 /// No `.unwrap()` / `.expect(..)` / `panic!` / `unreachable!` in the
 /// worker-path directories (`src/coordinator/`, `src/runtime/`,
-/// `src/select/`; test modules excluded): a panic there rides the
-/// fault-isolation machinery at best and kills a worker at worst, and
-/// either way turns a query error into a process-level event. Fallible
-/// paths return `crate::Error`. The escape hatch is a justified
+/// `src/select/`, `src/cluster/`; test modules excluded): a panic there
+/// rides the fault-isolation machinery at best and kills a worker at
+/// worst, and either way turns a query error into a process-level event.
+/// Fallible paths return `crate::Error`. The escape hatch is a justified
 /// suppression pragma on the site — the `unwrap_or_*` family and
 /// `assert!` invariant checks are not findings.
 pub(crate) fn error_discipline(ft: &FileTokens) -> Vec<Finding> {
     let p = norm(&ft.file.path);
-    if !(p.contains("src/coordinator/") || p.contains("src/runtime/") || p.contains("src/select/"))
+    if !(p.contains("src/coordinator/")
+        || p.contains("src/runtime/")
+        || p.contains("src/select/")
+        || p.contains("src/cluster/"))
     {
         return Vec::new();
     }

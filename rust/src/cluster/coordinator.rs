@@ -1,0 +1,526 @@
+//! Coordinator-side cluster plumbing: the worker [`Registry`] (who is
+//! connected, at what registration version), per-worker [`ConnState`]
+//! (request/response calls with reconnect-on-transport-failure), and the
+//! [`RemoteBackend`]/[`RemoteEvaluator`] pair that makes a TCP worker look
+//! like any other [`DatasetBackend`].
+//!
+//! Because a remote worker plugs into the unchanged
+//! [`SelectionService`](crate::coordinator::SelectionService) through the
+//! ordinary [`BackendFactory`], the wire path inherits admission control,
+//! deadlines, micro-batch planning, and the [`CostModelPool`] by
+//! construction — there is no second dispatch path to keep in sync.
+//!
+//! ## Registration versions and stale statistics
+//!
+//! Every (re)registration of a worker id bumps a monotonically increasing
+//! *version*. The version travels with the connection and with every
+//! shipped statistics bundle; the coordinator merges worker-side cost-model
+//! sums into the shared pool only when the bundle's version matches both
+//! the connection it arrived on *and* the registry's current version for
+//! that worker. A worker that crashed and re-registered mid-pull therefore
+//! cannot smuggle pre-crash sums into the pool.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::rc::Rc;
+use std::sync::{Arc, Condvar};
+use std::time::Duration;
+
+use crate::coordinator::messages::{WireRequest, WireResponse};
+use crate::coordinator::service::DatasetId;
+use crate::coordinator::{BackendFactory, DatasetBackend};
+use crate::select::gpu_model::{CostModelPool, PassCostModel};
+use crate::select::{DType, Evaluator, InitStats, IntervalCounts, Neighbors, ProbeStats};
+use crate::util::sync::{OrderedMutex, RANK_CLUSTER_REGISTRY};
+use crate::{Error, Result};
+
+use super::transport::Wire;
+
+/// One registered worker: its parked connection (taken while a call is in
+/// flight), registration version, and last observed heartbeat.
+struct WorkerSlot {
+    conn: Option<Box<dyn Wire>>,
+    version: u64,
+    last_seen_us: u64,
+}
+
+/// Tracks which workers are connected. Connections are *checked out* for
+/// the duration of a call ([`take_conn`](Registry::take_conn) /
+/// [`put_conn`](Registry::put_conn)) so the rank-25 lock is never held
+/// across wire I/O.
+pub struct Registry {
+    slots: OrderedMutex<HashMap<u32, WorkerSlot>>,
+    cv: Condvar,
+}
+
+impl Default for Registry {
+    fn default() -> Self {
+        Registry {
+            slots: OrderedMutex::new(RANK_CLUSTER_REGISTRY, "cluster.registry", HashMap::new()),
+            cv: Condvar::new(),
+        }
+    }
+}
+
+impl Registry {
+    pub fn new() -> Arc<Registry> {
+        Arc::new(Registry::default())
+    }
+
+    /// Register (or re-register) `worker_id`, acknowledging over `wire`
+    /// before the connection becomes available for checkout. Two-phase on
+    /// purpose: the version is bumped and read under the lock, the
+    /// `Registered` ack is sent with the lock *released*, and the
+    /// connection is installed only if no newer registration raced in
+    /// between (newest registration wins). Returns the assigned version.
+    pub fn register(
+        &self,
+        worker_id: u32,
+        mut wire: Box<dyn Wire>,
+        now_us: u64,
+    ) -> Result<u64> {
+        let version = {
+            let mut slots = self.slots.lock();
+            let slot = slots.entry(worker_id).or_insert(WorkerSlot {
+                conn: None,
+                version: 0,
+                last_seen_us: now_us,
+            });
+            slot.version += 1;
+            slot.last_seen_us = now_us;
+            // A re-registration replaces any parked connection: the old
+            // one is dead or about to be.
+            slot.conn = None;
+            slot.version
+        };
+        wire.send(&WireResponse::Registered { worker_id, version }.encode())?;
+        let mut slots = self.slots.lock();
+        if let Some(slot) = slots.get_mut(&worker_id) {
+            if slot.version == version {
+                slot.conn = Some(wire);
+                self.cv.notify_all();
+            }
+        }
+        Ok(version)
+    }
+
+    /// Check out `worker_id`'s connection, waiting up to `timeout` for the
+    /// worker to (re)register if it is currently absent.
+    pub fn take_conn(&self, worker_id: u32, timeout: Duration) -> Result<(Box<dyn Wire>, u64)> {
+        let mut slots = self.slots.lock();
+        loop {
+            if let Some(slot) = slots.get_mut(&worker_id) {
+                if let Some(conn) = slot.conn.take() {
+                    return Ok((conn, slot.version));
+                }
+            }
+            let (again, timed_out) = slots.wait_timeout(&self.cv, timeout);
+            slots = again;
+            if timed_out {
+                if let Some(slot) = slots.get_mut(&worker_id) {
+                    if let Some(conn) = slot.conn.take() {
+                        return Ok((conn, slot.version));
+                    }
+                }
+                return Err(Error::Disconnected {
+                    peer: format!("worker-{worker_id} (not registered)"),
+                });
+            }
+        }
+    }
+
+    /// Return a checked-out connection. Dropped silently if the worker
+    /// re-registered in the meantime (`version` stale) or a fresh
+    /// connection is already parked.
+    pub fn put_conn(&self, worker_id: u32, wire: Box<dyn Wire>, version: u64) {
+        let mut slots = self.slots.lock();
+        if let Some(slot) = slots.get_mut(&worker_id) {
+            if slot.version == version && slot.conn.is_none() {
+                slot.conn = Some(wire);
+                self.cv.notify_all();
+            }
+        }
+    }
+
+    /// Record a heartbeat for `worker_id` (no-op for unknown workers).
+    pub fn heartbeat(&self, worker_id: u32, now_us: u64) {
+        let mut slots = self.slots.lock();
+        if let Some(slot) = slots.get_mut(&worker_id) {
+            slot.last_seen_us = now_us;
+        }
+    }
+
+    /// Current registration version for `worker_id` (0 = never seen).
+    pub fn current_version(&self, worker_id: u32) -> u64 {
+        self.slots.lock().get(&worker_id).map(|s| s.version).unwrap_or(0)
+    }
+
+    /// Microseconds of the last heartbeat/registration (None = never seen).
+    pub fn last_seen_us(&self, worker_id: u32) -> Option<u64> {
+        self.slots.lock().get(&worker_id).map(|s| s.last_seen_us)
+    }
+
+    /// Take every parked connection (shutdown propagation).
+    pub fn drain_conns(&self) -> Vec<Box<dyn Wire>> {
+        let mut slots = self.slots.lock();
+        slots.values_mut().filter_map(|s| s.conn.take()).collect()
+    }
+}
+
+/// One coordinator worker thread's view of its remote peer. Each call
+/// checks the connection out of the [`Registry`], runs one exchange, and
+/// parks it again — so an *idle* cluster always has every worker
+/// connection in the registry, where shutdown propagation and
+/// re-registration can reach it.
+pub struct ConnState {
+    registry: Arc<Registry>,
+    worker_id: u32,
+    acquire_timeout: Duration,
+}
+
+impl ConnState {
+    pub fn new(registry: Arc<Registry>, worker_id: u32, acquire_timeout: Duration) -> ConnState {
+        ConnState { registry, worker_id, acquire_timeout }
+    }
+
+    pub fn worker_id(&self) -> u32 {
+        self.worker_id
+    }
+
+    pub fn registry(&self) -> &Arc<Registry> {
+        &self.registry
+    }
+
+    /// One request/response exchange; see [`ConnState::call_versioned`].
+    pub fn call(&mut self, req: &WireRequest) -> Result<WireResponse> {
+        self.call_versioned(req, self.acquire_timeout).map(|(resp, _)| resp)
+    }
+
+    /// One request/response exchange, also reporting the registration
+    /// version of the connection that carried it (the stale-statistics
+    /// fence needs it). A *protocol* error (the worker answered with
+    /// [`WireResponse::Err`]) parks the connection again — the stream is
+    /// still framed correctly. A *transport* error (send, recv, or an
+    /// undecodable frame) drops it, so the next call waits for the
+    /// worker's reconnect instead of reusing a broken stream.
+    pub fn call_versioned(
+        &mut self,
+        req: &WireRequest,
+        acquire_timeout: Duration,
+    ) -> Result<(WireResponse, u64)> {
+        let (mut wire, version) = self.registry.take_conn(self.worker_id, acquire_timeout)?;
+        let exchange = (|| -> Result<WireResponse> {
+            wire.send(&req.encode())?;
+            WireResponse::decode(&wire.recv()?)
+        })();
+        match exchange {
+            Ok(resp) => {
+                self.registry.put_conn(self.worker_id, wire, version);
+                if matches!(resp, WireResponse::Err { .. }) {
+                    return Err(resp.into_error().unwrap_or_else(|| {
+                        Error::Service("worker sent an unintelligible error".into())
+                    }));
+                }
+                Ok((resp, version))
+            }
+            Err(e) => Err(e),
+        }
+    }
+}
+
+fn unexpected(op: &str) -> Error {
+    Error::Service(format!("unexpected reply to {op}"))
+}
+
+/// Coordinator-side proxy for one dataset living on a remote worker. Every
+/// probe ladder the cutting-plane solver issues becomes one
+/// [`WireRequest::ShardProbe`] round trip — the fused-pass batching the
+/// paper's Algorithm 1 relies on survives the wire unchanged.
+pub struct RemoteEvaluator {
+    conn: Rc<RefCell<ConnState>>,
+    dataset: DatasetId,
+    n: usize,
+    dtype: DType,
+    hint: Option<usize>,
+    probes: u64,
+}
+
+impl Evaluator for RemoteEvaluator {
+    fn n(&self) -> usize {
+        self.n
+    }
+
+    fn dtype(&self) -> DType {
+        self.dtype
+    }
+
+    fn init_stats(&mut self) -> Result<InitStats> {
+        let req = WireRequest::ShardInit { dataset: self.dataset };
+        match self.conn.borrow_mut().call(&req)? {
+            WireResponse::ShardInit { stats, probes } => {
+                self.probes = probes;
+                Ok(stats)
+            }
+            _ => Err(unexpected("shard_init")),
+        }
+    }
+
+    fn probe(&mut self, y: f64) -> Result<ProbeStats> {
+        let mut stats = self.probe_many(std::slice::from_ref(&y))?;
+        stats.pop().ok_or_else(|| unexpected("shard_probe"))
+    }
+
+    fn probe_many(&mut self, ys: &[f64]) -> Result<Vec<ProbeStats>> {
+        let req = WireRequest::ShardProbe { dataset: self.dataset, ys: ys.to_vec() };
+        match self.conn.borrow_mut().call(&req)? {
+            WireResponse::ShardProbes { stats, probes } => {
+                if stats.len() != ys.len() {
+                    return Err(Error::Service(format!(
+                        "shard_probe answered {} stats for {} probes",
+                        stats.len(),
+                        ys.len()
+                    )));
+                }
+                self.probes = probes;
+                Ok(stats)
+            }
+            _ => Err(unexpected("shard_probe")),
+        }
+    }
+
+    fn neighbors(&mut self, y: f64) -> Result<Neighbors> {
+        let req = WireRequest::ShardNeighbors { dataset: self.dataset, y };
+        match self.conn.borrow_mut().call(&req)? {
+            WireResponse::ShardNeighbors { stats, probes } => {
+                self.probes = probes;
+                Ok(stats)
+            }
+            _ => Err(unexpected("shard_neighbors")),
+        }
+    }
+
+    fn interval(&mut self, lo: f64, hi: f64) -> Result<IntervalCounts> {
+        let req = WireRequest::ShardInterval { dataset: self.dataset, lo, hi };
+        match self.conn.borrow_mut().call(&req)? {
+            WireResponse::ShardInterval { counts, probes } => {
+                self.probes = probes;
+                Ok(counts)
+            }
+            _ => Err(unexpected("shard_interval")),
+        }
+    }
+
+    fn compact(&mut self, lo: f64, hi: f64) -> Result<Vec<f64>> {
+        let req = WireRequest::ShardCompact { dataset: self.dataset, lo, hi };
+        match self.conn.borrow_mut().call(&req)? {
+            WireResponse::ShardValues { values, probes } => {
+                self.probes = probes;
+                Ok(values)
+            }
+            _ => Err(unexpected("shard_compact")),
+        }
+    }
+
+    fn download(&mut self) -> Result<Vec<f64>> {
+        let req = WireRequest::ShardDownload { dataset: self.dataset };
+        match self.conn.borrow_mut().call(&req)? {
+            WireResponse::ShardValues { values, probes } => {
+                self.probes = probes;
+                Ok(values)
+            }
+            _ => Err(unexpected("shard_download")),
+        }
+    }
+
+    fn probes(&self) -> u64 {
+        self.probes
+    }
+
+    fn ladder_width_hint(&self) -> Option<usize> {
+        self.hint
+    }
+}
+
+/// [`DatasetBackend`] whose datasets live on one remote worker. Thread
+/// confined like every backend; the shared [`ConnState`] lets the backend
+/// and its evaluators reuse one checked-out connection.
+pub struct RemoteBackend {
+    conn: Rc<RefCell<ConnState>>,
+    pool: Arc<CostModelPool>,
+    datasets: HashMap<u64, RemoteEvaluator>,
+}
+
+impl RemoteBackend {
+    pub fn new(
+        registry: Arc<Registry>,
+        pool: Arc<CostModelPool>,
+        worker_id: u32,
+        acquire_timeout: Duration,
+    ) -> RemoteBackend {
+        RemoteBackend {
+            conn: Rc::new(RefCell::new(ConnState::new(registry, worker_id, acquire_timeout))),
+            pool,
+            datasets: HashMap::new(),
+        }
+    }
+
+    /// [`BackendFactory`] mapping coordinator worker-thread index `i` to
+    /// remote worker id `i % workers`. Run the service with as many worker
+    /// threads as remote workers for a 1:1 pinning (the cluster CLI does).
+    pub fn factory(
+        registry: Arc<Registry>,
+        pool: Arc<CostModelPool>,
+        workers: u32,
+        acquire_timeout: Duration,
+    ) -> BackendFactory {
+        let workers = workers.max(1);
+        Arc::new(move |worker_idx| {
+            let id = (worker_idx as u32) % workers;
+            Ok(Box::new(RemoteBackend::new(
+                Arc::clone(&registry),
+                Arc::clone(&pool),
+                id,
+                acquire_timeout,
+            )) as Box<dyn DatasetBackend>)
+        })
+    }
+
+    /// Pull the worker's cost-model sufficient statistics and merge them
+    /// into the shared pool, with the double version fence described in
+    /// the module docs. Best-effort: transport trouble here must never
+    /// fail a batch, so errors are swallowed, and the registry acquire
+    /// uses a near-zero timeout — a batch boundary never waits for an
+    /// absent worker.
+    fn pull_stats(&mut self) {
+        let mut conn = self.conn.borrow_mut();
+        let worker_id = conn.worker_id();
+        let registry = Arc::clone(conn.registry());
+        if let Ok((WireResponse::ShardStats { model_json, version }, conn_version)) =
+            conn.call_versioned(&WireRequest::ShardStatsPull, Duration::from_millis(5))
+        {
+            if version == conn_version && registry.current_version(worker_id) == version {
+                if let Ok(model) = PassCostModel::from_json(&model_json) {
+                    self.pool.merge(&model);
+                }
+            }
+        }
+    }
+}
+
+impl DatasetBackend for RemoteBackend {
+    fn upload(&mut self, id: u64, data: &[f64], dtype: DType) -> Result<()> {
+        let req = WireRequest::ShardUpload { dataset: id, data: data.to_vec(), dtype };
+        match self.conn.borrow_mut().call(&req)? {
+            WireResponse::ShardUploaded { n, dtype, ladder_width_hint, probes } => {
+                self.datasets.insert(
+                    id,
+                    RemoteEvaluator {
+                        conn: Rc::clone(&self.conn),
+                        dataset: id,
+                        n: n as usize,
+                        dtype,
+                        hint: ladder_width_hint.map(|h| h as usize),
+                        probes,
+                    },
+                );
+                Ok(())
+            }
+            _ => Err(unexpected("shard_upload")),
+        }
+    }
+
+    fn evaluator(&mut self, id: u64) -> Result<&mut dyn Evaluator> {
+        self.datasets
+            .get_mut(&id)
+            .map(|ev| ev as &mut dyn Evaluator)
+            .ok_or_else(|| Error::InvalidArg(format!("unknown dataset {id}")))
+    }
+
+    fn drop_dataset(&mut self, id: u64) -> bool {
+        let known = self.datasets.remove(&id).is_some();
+        if known {
+            // Best-effort: the worker garbage-collects on reconnect anyway.
+            let _ = self.conn.borrow_mut().call(&WireRequest::ShardDrop { dataset: id });
+        }
+        known
+    }
+
+    fn dataset_len(&self, id: u64) -> Option<usize> {
+        self.datasets.get(&id).map(|ev| ev.n)
+    }
+
+    fn kind(&self) -> &'static str {
+        "remote"
+    }
+
+    fn take_evictions(&mut self) -> u64 {
+        // Batch boundary: opportunistically fold the worker's cost-model
+        // sums into the shared pool. Remote workers never self-evict.
+        self.pull_stats();
+        0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::transport::loopback_pair;
+
+    #[test]
+    fn registry_register_take_put_roundtrip() {
+        let reg = Registry::new();
+        let (coord_side, _worker_side) = loopback_pair("worker-7", "coordinator");
+        let v = reg.register(7, Box::new(coord_side), 10).expect("register");
+        assert_eq!(v, 1);
+        assert_eq!(reg.current_version(7), 1);
+        let (conn, version) = reg.take_conn(7, Duration::from_millis(50)).expect("take");
+        assert_eq!(version, 1);
+        reg.put_conn(7, conn, version);
+        let again = reg.take_conn(7, Duration::from_millis(50));
+        assert!(again.is_ok(), "reinstalled conn must be takeable");
+    }
+
+    #[test]
+    fn take_conn_times_out_as_disconnected_for_unknown_worker() {
+        let reg = Registry::new();
+        let e = reg.take_conn(3, Duration::from_millis(10)).expect_err("no worker 3");
+        assert_eq!(e.kind(), crate::error::ErrorKind::Disconnected);
+        assert!(e.to_string().contains("worker-3"), "{e}");
+    }
+
+    #[test]
+    fn reregistration_bumps_version_and_invalidates_stale_put() {
+        let reg = Registry::new();
+        let (a, _ka) = loopback_pair("worker-1", "coordinator");
+        let v1 = reg.register(1, Box::new(a), 0).expect("first registration");
+        let (old_conn, old_version) = reg.take_conn(1, Duration::from_millis(50)).expect("take");
+        let (b, _kb) = loopback_pair("worker-1", "coordinator");
+        let v2 = reg.register(1, Box::new(b), 5).expect("second registration");
+        assert!(v2 > v1);
+        // Returning the pre-restart connection must be a no-op...
+        reg.put_conn(1, old_conn, old_version);
+        // ...so the parked connection is the *new* one, at the new version.
+        let (_conn, version) = reg.take_conn(1, Duration::from_millis(50)).expect("take new");
+        assert_eq!(version, v2);
+    }
+
+    #[test]
+    fn registration_ack_carries_id_and_version() {
+        let reg = Registry::new();
+        let (coord_side, mut worker_side) = loopback_pair("worker-2", "coordinator");
+        reg.register(2, Box::new(coord_side), 0).expect("register");
+        let ack = WireResponse::decode(&worker_side.recv().expect("ack frame")).expect("decode");
+        assert_eq!(ack, WireResponse::Registered { worker_id: 2, version: 1 });
+    }
+
+    #[test]
+    fn heartbeat_updates_last_seen_for_known_workers_only() {
+        let reg = Registry::new();
+        let (coord_side, _keep) = loopback_pair("worker-4", "coordinator");
+        reg.register(4, Box::new(coord_side), 100).expect("register");
+        reg.heartbeat(4, 250);
+        assert_eq!(reg.last_seen_us(4), Some(250));
+        reg.heartbeat(99, 300);
+        assert_eq!(reg.last_seen_us(99), None);
+    }
+}

@@ -1,0 +1,339 @@
+//! Out-of-process cluster mode: a TCP coordinator front-end over the
+//! unchanged [`SelectionService`], plus the worker process body and a
+//! typed client.
+//!
+//! ## Shape
+//!
+//! ```text
+//!  clients ── TCP ──▶ coordinator (accept loop)
+//!                        │  SelectionService (admission, deadlines,
+//!                        │  batching/coalescing, CostModelPool)
+//!                        │     └─ RemoteBackend per worker thread
+//!                        └── TCP ──▶ worker processes (serve loop over a
+//!                                    local DatasetBackend)
+//! ```
+//!
+//! The coordinator embeds the ordinary [`SelectionService`]; its worker
+//! threads talk to remote workers through
+//! [`RemoteBackend`](coordinator::RemoteBackend), a
+//! [`DatasetBackend`](crate::coordinator::DatasetBackend) whose probes
+//! travel over TCP. That is the whole trick: because the wire path enters
+//! through the same [`BackendFactory`](crate::coordinator::BackendFactory)
+//! as an in-process backend, admission control, deadline enforcement,
+//! micro-batch
+//! planning, query coalescing, and cost-model pooling apply to cluster
+//! traffic *by construction* — there is no second dispatch path.
+//!
+//! Connection roles are decided by the first frame a peer sends:
+//! [`WireRequest::Register`] parks the connection in the worker
+//! [`Registry`](coordinator::Registry), [`WireRequest::Heartbeat`] is a
+//! one-shot liveness ping, and anything else starts a client session
+//! served until the peer hangs up (or sends
+//! [`WireRequest::Shutdown`], which stops the whole coordinator and
+//! propagates shutdown to every parked worker).
+
+pub mod coordinator;
+pub mod transport;
+pub mod worker;
+
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::coordinator::messages::{WireRequest, WireResponse};
+use crate::coordinator::service::{DatasetId, KSpec, QueryOptions, QueryResult};
+use crate::coordinator::SelectionService;
+use crate::select::{DType, Method};
+use crate::testkit::Clock;
+use crate::{Error, Result};
+
+use coordinator::Registry;
+use transport::{TcpWire, Wire};
+
+pub use coordinator::{ConnState, RemoteBackend, RemoteEvaluator};
+pub use worker::{run_worker, serve, ServeExit, WorkerOptions};
+
+/// Knobs for [`run_coordinator`].
+#[derive(Debug, Clone)]
+pub struct ServeOptions {
+    /// Read deadline on client connections. Idle clients are *not*
+    /// disconnected — a timed-out read just re-checks the stop flag — so
+    /// this bounds how long shutdown convergence can take.
+    pub client_poll: Duration,
+    /// Read/write deadline for coordinator→worker shard calls: a hung
+    /// worker fails the in-flight batch instead of wedging a coordinator
+    /// worker thread forever.
+    pub shard_io_timeout: Duration,
+}
+
+impl Default for ServeOptions {
+    fn default() -> Self {
+        ServeOptions {
+            client_poll: Duration::from_secs(1),
+            shard_io_timeout: Duration::from_secs(30),
+        }
+    }
+}
+
+/// Serve a coordinator on `listener` until a client sends
+/// [`WireRequest::Shutdown`]. Owns the service: on shutdown it joins the
+/// client sessions, shuts the service down (which persists the cost-model
+/// pool's sidecar), and then propagates [`WireRequest::Shutdown`] to
+/// every parked worker connection so worker processes exit too.
+pub fn run_coordinator(
+    listener: TcpListener,
+    svc: SelectionService,
+    registry: Arc<Registry>,
+    clock: Clock,
+    opts: ServeOptions,
+) -> Result<()> {
+    let svc = Arc::new(svc);
+    let stop = Arc::new(AtomicBool::new(false));
+    let local = listener.local_addr().map_err(|e| Error::io("cluster-listener", e))?;
+    let mut sessions: Vec<std::thread::JoinHandle<()>> = Vec::new();
+    loop {
+        let stream = match listener.accept() {
+            Ok((s, _)) => s,
+            Err(_) => {
+                if stop.load(Ordering::SeqCst) {
+                    break;
+                }
+                continue;
+            }
+        };
+        if stop.load(Ordering::SeqCst) {
+            break;
+        }
+        let svc = Arc::clone(&svc);
+        let registry = Arc::clone(&registry);
+        let stop = Arc::clone(&stop);
+        let clock = clock.clone();
+        let conn_opts = opts.clone();
+        sessions.push(std::thread::spawn(move || {
+            handle_connection(stream, svc, registry, stop, clock, conn_opts, local);
+        }));
+        sessions.retain(|h| !h.is_finished());
+    }
+    drop(listener);
+    for h in sessions {
+        let _ = h.join();
+    }
+    // All sessions joined: this is the last Arc. Shutting the service
+    // down joins its worker threads, which parks every live worker
+    // connection back in the registry — where shutdown can reach it.
+    match Arc::try_unwrap(svc) {
+        Ok(svc) => svc.shutdown(),
+        Err(_) => return Err(Error::Service("cluster session leaked the service".into())),
+    }
+    for mut conn in registry.drain_conns() {
+        if conn.send(&WireRequest::Shutdown.encode()).is_ok() {
+            let _ = conn.recv();
+        }
+    }
+    Ok(())
+}
+
+/// First-frame routing: workers register, heartbeats ack and close,
+/// everything else becomes a client session.
+fn handle_connection(
+    stream: TcpStream,
+    svc: Arc<SelectionService>,
+    registry: Arc<Registry>,
+    stop: Arc<AtomicBool>,
+    clock: Clock,
+    opts: ServeOptions,
+    local: std::net::SocketAddr,
+) {
+    let Ok(mut wire) = TcpWire::from_stream(stream, opts.client_poll) else { return };
+    let first = loop {
+        match wire.recv() {
+            Ok(frame) => break frame,
+            // poll timeout: an idle peer that has not identified itself yet
+            Err(Error::Service(_)) => {
+                if stop.load(Ordering::SeqCst) {
+                    return;
+                }
+            }
+            Err(_) => return,
+        }
+    };
+    match WireRequest::decode(&first) {
+        Ok(WireRequest::Register { worker_id }) => {
+            // Worker calls block for up to a shard's compute time, not a
+            // client poll tick.
+            wire.set_io_timeout(opts.shard_io_timeout);
+            let _ = registry.register(worker_id, Box::new(wire), clock.now_us());
+        }
+        Ok(WireRequest::Heartbeat { worker_id }) => {
+            registry.heartbeat(worker_id, clock.now_us());
+            let _ = wire.send(&WireResponse::Ok.encode());
+        }
+        first_req => {
+            let mut pending = Some(first_req);
+            loop {
+                let req = match pending.take() {
+                    Some(r) => r,
+                    None => match wire.recv() {
+                        Ok(frame) => WireRequest::decode(&frame),
+                        Err(Error::Service(_)) => {
+                            if stop.load(Ordering::SeqCst) {
+                                return;
+                            }
+                            continue;
+                        }
+                        Err(_) => return,
+                    },
+                };
+                let (resp, shutdown) = match req {
+                    Err(e) => (WireResponse::from_error(&e), false),
+                    Ok(req) => answer_client(&svc, req),
+                };
+                if wire.send(&resp.encode()).is_err() {
+                    return;
+                }
+                if shutdown {
+                    stop.store(true, Ordering::SeqCst);
+                    // Wake the blocking accept so the loop observes stop.
+                    let _ = TcpStream::connect(local);
+                    return;
+                }
+            }
+        }
+    }
+}
+
+/// Execute one client op against the embedded service. Returns the reply
+/// and whether it was a shutdown request.
+fn answer_client(svc: &SelectionService, req: WireRequest) -> (WireResponse, bool) {
+    let resp = match req {
+        WireRequest::Upload { data, dtype } => svc
+            .upload(data, dtype)
+            .map(|dataset| WireResponse::Uploaded { dataset }),
+        WireRequest::Query { dataset, spec, method, tenant, deadline_rel_us } => svc
+            .query_opts(
+                dataset,
+                spec,
+                QueryOptions {
+                    method,
+                    tenant,
+                    deadline: deadline_rel_us.map(Duration::from_micros),
+                },
+            )
+            .map(|result| WireResponse::Result { result }),
+        WireRequest::QueryMany { dataset, specs, method, tenant, deadline_rel_us } => svc
+            .query_many_opts(
+                dataset,
+                specs,
+                QueryOptions {
+                    method,
+                    tenant,
+                    deadline: deadline_rel_us.map(Duration::from_micros),
+                },
+            )
+            .map(|results| WireResponse::Results { results }),
+        WireRequest::Drop { dataset } => {
+            svc.drop_dataset_sync(dataset).map(|()| WireResponse::Ok)
+        }
+        WireRequest::Stats => Ok(WireResponse::StatsText {
+            text: svc.metrics.snapshot().to_string(),
+        }),
+        WireRequest::Shutdown => return (WireResponse::Ok, true),
+        WireRequest::Register { .. } | WireRequest::Heartbeat { .. } => Err(Error::Service(
+            "register/heartbeat must be a connection's first frame".into(),
+        )),
+        _ => Err(Error::Service(
+            "shard ops go to workers, not the coordinator".into(),
+        )),
+    };
+    (resp.unwrap_or_else(|e| WireResponse::from_error(&e)), false)
+}
+
+/// Typed client for a cluster coordinator: one request/response exchange
+/// per call over a single connection. Protocol errors come back as the
+/// same typed [`Error`] values the in-process service returns — including
+/// the µs payloads of `Overloaded`/`DeadlineExceeded`.
+pub struct ClusterClient {
+    wire: Box<dyn Wire>,
+}
+
+impl ClusterClient {
+    /// Dial a coordinator.
+    pub fn connect(addr: &str, connect_timeout: Duration, io_timeout: Duration) -> Result<Self> {
+        Ok(ClusterClient { wire: Box::new(TcpWire::connect(addr, connect_timeout, io_timeout)?) })
+    }
+
+    /// Wrap an existing wire (loopback tests).
+    pub fn from_wire(wire: Box<dyn Wire>) -> Self {
+        ClusterClient { wire }
+    }
+
+    fn call(&mut self, req: &WireRequest) -> Result<WireResponse> {
+        self.wire.send(&req.encode())?;
+        let resp = WireResponse::decode(&self.wire.recv()?)?;
+        if matches!(resp, WireResponse::Err { .. }) {
+            return Err(resp.into_error().unwrap_or_else(|| {
+                Error::Service("coordinator sent an unintelligible error".into())
+            }));
+        }
+        Ok(resp)
+    }
+
+    pub fn upload(&mut self, data: Vec<f64>, dtype: DType) -> Result<DatasetId> {
+        match self.call(&WireRequest::Upload { data, dtype })? {
+            WireResponse::Uploaded { dataset } => Ok(dataset),
+            _ => Err(Error::Service("unexpected reply to upload".into())),
+        }
+    }
+
+    pub fn query(
+        &mut self,
+        dataset: DatasetId,
+        spec: KSpec,
+        method: Option<Method>,
+        tenant: u32,
+        deadline_rel_us: Option<u64>,
+    ) -> Result<QueryResult> {
+        let req = WireRequest::Query { dataset, spec, method, tenant, deadline_rel_us };
+        match self.call(&req)? {
+            WireResponse::Result { result } => Ok(result),
+            _ => Err(Error::Service("unexpected reply to query".into())),
+        }
+    }
+
+    pub fn query_many(
+        &mut self,
+        dataset: DatasetId,
+        specs: Vec<KSpec>,
+        method: Option<Method>,
+        tenant: u32,
+        deadline_rel_us: Option<u64>,
+    ) -> Result<Vec<QueryResult>> {
+        let req = WireRequest::QueryMany { dataset, specs, method, tenant, deadline_rel_us };
+        match self.call(&req)? {
+            WireResponse::Results { results } => Ok(results),
+            _ => Err(Error::Service("unexpected reply to query_many".into())),
+        }
+    }
+
+    pub fn drop_dataset(&mut self, dataset: DatasetId) -> Result<()> {
+        match self.call(&WireRequest::Drop { dataset })? {
+            WireResponse::Ok => Ok(()),
+            _ => Err(Error::Service("unexpected reply to drop".into())),
+        }
+    }
+
+    pub fn stats(&mut self) -> Result<String> {
+        match self.call(&WireRequest::Stats)? {
+            WireResponse::StatsText { text } => Ok(text),
+            _ => Err(Error::Service("unexpected reply to stats".into())),
+        }
+    }
+
+    pub fn shutdown(&mut self) -> Result<()> {
+        match self.call(&WireRequest::Shutdown)? {
+            WireResponse::Ok => Ok(()),
+            _ => Err(Error::Service("unexpected reply to shutdown".into())),
+        }
+    }
+}

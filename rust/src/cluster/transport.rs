@@ -1,0 +1,220 @@
+//! Wire transports for cluster mode: a byte-frame pipe abstraction
+//! ([`Wire`]) with two implementations — an in-process loopback pair for
+//! deterministic tests, and TCP with connect/read/write deadlines for real
+//! deployments. Framing and payload encoding live in
+//! [`crate::coordinator::messages`]; a transport only moves frames and
+//! classifies its failures.
+//!
+//! ## Failure taxonomy
+//!
+//! Peer-gone conditions (EOF, connection reset, broken pipe, a dropped
+//! loopback channel) become [`Error::Disconnected`] with the peer's name
+//! attached — the typed contract callers use to fail exactly the in-flight
+//! batch and then re-acquire a fresh connection. I/O *timeouts* become
+//! [`Error::Service`]: the peer may still be alive, the caller just gave
+//! up waiting. Everything else stays [`Error::Io`] with context.
+
+use std::io::ErrorKind;
+use std::net::{TcpStream, ToSocketAddrs};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::time::Duration;
+
+use crate::coordinator::messages::{read_frame, write_frame};
+use crate::{Error, Result};
+
+/// One side of a bidirectional frame pipe. Implementations move whole
+/// frames (length-prefixed on TCP, whole `Vec<u8>` messages on loopback)
+/// and classify transport failures per the module docs.
+pub trait Wire: Send {
+    /// Send one frame payload.
+    fn send(&mut self, payload: &[u8]) -> Result<()>;
+    /// Receive one frame payload; blocks until a frame, a timeout, or a
+    /// peer-gone condition.
+    fn recv(&mut self) -> Result<Vec<u8>>;
+    /// Human-readable name of the other end (error messages and logs).
+    fn peer(&self) -> String;
+    /// Adjust the per-op I/O deadline where the transport supports one
+    /// (`Duration::ZERO` disables it). Deadline-free transports ignore it.
+    fn set_io_timeout(&mut self, _t: Duration) {}
+}
+
+// ---------------------------------------------------------------------------
+// loopback
+
+/// In-process [`Wire`] backed by a pair of channels. Dropping either side
+/// closes both directions, which is how tests simulate a peer vanishing
+/// mid-conversation: the survivor's next `send`/`recv` reports
+/// [`Error::Disconnected`], exactly like a TCP reset.
+pub struct LoopbackWire {
+    tx: SyncSender<Vec<u8>>,
+    rx: Receiver<Vec<u8>>,
+    peer: String,
+}
+
+/// Build a connected loopback pair; `a_peer`/`b_peer` name what each side
+/// talks *to* (side A reports `a_peer` in its errors).
+pub fn loopback_pair(a_peer: &str, b_peer: &str) -> (LoopbackWire, LoopbackWire) {
+    // Request/response protocols keep at most one frame in flight per
+    // direction; the slack only decouples shutdown ordering.
+    let (a_tx, b_rx) = sync_channel(16);
+    let (b_tx, a_rx) = sync_channel(16);
+    (
+        LoopbackWire { tx: a_tx, rx: a_rx, peer: a_peer.to_string() },
+        LoopbackWire { tx: b_tx, rx: b_rx, peer: b_peer.to_string() },
+    )
+}
+
+impl Wire for LoopbackWire {
+    fn send(&mut self, payload: &[u8]) -> Result<()> {
+        self.tx
+            .send(payload.to_vec())
+            .map_err(|_| Error::Disconnected { peer: self.peer.clone() })
+    }
+
+    fn recv(&mut self) -> Result<Vec<u8>> {
+        self.rx.recv().map_err(|_| Error::Disconnected { peer: self.peer.clone() })
+    }
+
+    fn peer(&self) -> String {
+        self.peer.clone()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// TCP
+
+/// TCP-backed [`Wire`]: length-prefixed frames over one stream, with
+/// connect/read/write deadlines so a hung peer cannot wedge a worker
+/// thread forever.
+pub struct TcpWire {
+    stream: TcpStream,
+    peer: String,
+}
+
+impl TcpWire {
+    /// Dial `addr` with a connect deadline, then apply `io_timeout` to
+    /// every read and write (`Duration::ZERO` disables the I/O deadline —
+    /// used by serve loops that legitimately block waiting for work).
+    pub fn connect(addr: &str, connect_timeout: Duration, io_timeout: Duration) -> Result<TcpWire> {
+        let sa = addr
+            .to_socket_addrs()
+            .map_err(|e| Error::io(addr, e))?
+            .next()
+            .ok_or_else(|| Error::Parse(format!("address {addr:?} resolves to nothing")))?;
+        let stream = if connect_timeout.is_zero() {
+            TcpStream::connect(sa).map_err(|e| Error::io(addr, e))?
+        } else {
+            TcpStream::connect_timeout(&sa, connect_timeout).map_err(|e| Error::io(addr, e))?
+        };
+        Self::from_stream(stream, io_timeout)
+    }
+
+    /// Wrap an accepted stream (coordinator side).
+    pub fn from_stream(stream: TcpStream, io_timeout: Duration) -> Result<TcpWire> {
+        let peer = stream
+            .peer_addr()
+            .map(|a| a.to_string())
+            .unwrap_or_else(|_| "tcp-peer".to_string());
+        stream.set_nodelay(true).map_err(|e| Error::io(&*peer, e))?;
+        let t = if io_timeout.is_zero() { None } else { Some(io_timeout) };
+        stream.set_read_timeout(t).map_err(|e| Error::io(&*peer, e))?;
+        stream.set_write_timeout(t).map_err(|e| Error::io(&*peer, e))?;
+        Ok(TcpWire { stream, peer })
+    }
+
+    fn classify(peer: &str, e: std::io::Error) -> Error {
+        match e.kind() {
+            ErrorKind::UnexpectedEof
+            | ErrorKind::ConnectionReset
+            | ErrorKind::ConnectionAborted
+            | ErrorKind::BrokenPipe
+            | ErrorKind::NotConnected => Error::Disconnected { peer: peer.to_string() },
+            // read/write deadline expiry surfaces as WouldBlock on Unix
+            // and TimedOut elsewhere; either way the peer may be alive
+            ErrorKind::TimedOut | ErrorKind::WouldBlock => {
+                Error::Service(format!("wire timeout talking to {peer}: {e}"))
+            }
+            _ => Error::io(peer.to_string(), e),
+        }
+    }
+}
+
+impl Wire for TcpWire {
+    fn send(&mut self, payload: &[u8]) -> Result<()> {
+        write_frame(&mut self.stream, payload).map_err(|e| Self::classify(&self.peer, e))
+    }
+
+    fn recv(&mut self) -> Result<Vec<u8>> {
+        read_frame(&mut self.stream).map_err(|e| Self::classify(&self.peer, e))
+    }
+
+    fn peer(&self) -> String {
+        self.peer.clone()
+    }
+
+    fn set_io_timeout(&mut self, t: Duration) {
+        let t = if t.is_zero() { None } else { Some(t) };
+        let _ = self.stream.set_read_timeout(t);
+        let _ = self.stream.set_write_timeout(t);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn loopback_frames_roundtrip_both_ways() {
+        let (mut a, mut b) = loopback_pair("side-b", "side-a");
+        a.send(b"ping").expect("a sends");
+        assert_eq!(b.recv().expect("b receives"), b"ping");
+        b.send(b"pong").expect("b sends");
+        assert_eq!(a.recv().expect("a receives"), b"pong");
+        assert_eq!(a.peer(), "side-b");
+        assert_eq!(b.peer(), "side-a");
+    }
+
+    #[test]
+    fn dropping_one_side_disconnects_the_other() {
+        let (mut a, b) = loopback_pair("side-b", "side-a");
+        drop(b);
+        let e = a.send(b"into the void").expect_err("send must fail");
+        assert!(matches!(e, Error::Disconnected { ref peer } if peer == "side-b"), "{e:?}");
+        let e = a.recv().expect_err("recv must fail");
+        assert!(matches!(e, Error::Disconnected { .. }), "{e:?}");
+    }
+
+    #[test]
+    fn tcp_wire_roundtrips_and_reports_eof_as_disconnected() {
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").expect("bind");
+        let addr = listener.local_addr().expect("addr").to_string();
+        let t = std::thread::spawn(move || {
+            let (stream, _) = listener.accept().expect("accept");
+            let mut srv =
+                TcpWire::from_stream(stream, Duration::from_secs(5)).expect("server wire");
+            let got = srv.recv().expect("server receives");
+            srv.send(&got).expect("server echoes");
+            // server exits: stream closes, client sees EOF
+        });
+        let mut cli = TcpWire::connect(&addr, Duration::from_secs(5), Duration::from_secs(5))
+            .expect("client connects");
+        cli.send(b"echo me").expect("client sends");
+        assert_eq!(cli.recv().expect("client receives"), b"echo me");
+        t.join().expect("server thread");
+        let e = cli.recv().expect_err("EOF after server exit");
+        assert!(matches!(e, Error::Disconnected { .. }), "{e:?}");
+    }
+
+    #[test]
+    fn tcp_read_deadline_is_a_service_error_not_a_disconnect() {
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").expect("bind");
+        let addr = listener.local_addr().expect("addr").to_string();
+        // server accepts and then says nothing
+        let t = std::thread::spawn(move || listener.accept().expect("accept"));
+        let mut cli = TcpWire::connect(&addr, Duration::from_secs(5), Duration::from_millis(30))
+            .expect("client connects");
+        let (_held, _) = t.join().expect("server thread");
+        let e = cli.recv().expect_err("silent peer must time out");
+        assert!(matches!(e, Error::Service(_)), "timeout must stay retryable: {e:?}");
+    }
+}

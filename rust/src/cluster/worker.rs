@@ -1,0 +1,406 @@
+//! Worker-side serve loop: answer shard-level requests (`Shard*` in
+//! [`crate::coordinator::messages`]) against a local [`DatasetBackend`],
+//! with the same fault-isolation contract as the in-process worker loop —
+//! a panicking or erroring backend fails exactly the request that hit it,
+//! reported to the coordinator as a typed error frame, never the process.
+//!
+//! ## Cost-model shipping
+//!
+//! The worker accumulates [`PassCostModel`] sufficient statistics locally
+//! (one observation per fused probe ladder, timed on the worker's own
+//! clock — compute-only, no RTT) and ships them on
+//! [`WireRequest::ShardStatsPull`], resetting its accumulator afterwards
+//! so sums are merged into the coordinator's pool exactly once. The reply
+//! carries the connection's registration version; the coordinator drops
+//! bundles whose version is stale (see `crate::cluster::coordinator`).
+//!
+//! ## Reconnect semantics
+//!
+//! [`run_worker`] creates its backend **once** and keeps it across
+//! reconnects: a worker that loses its coordinator keeps its uploaded
+//! datasets, so after re-registration the next query on them succeeds
+//! without a re-upload. A backend that *itself* reports
+//! [`Error::Disconnected`] (a sharded device losing a peer) tears the
+//! coordinator connection down without a reply — the coordinator must see
+//! a transport failure, not a typed answer, so it fails only the in-flight
+//! batch and waits for re-registration.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError};
+use std::time::Duration;
+
+use crate::coordinator::dispatch::panic_msg;
+use crate::coordinator::messages::{WireRequest, WireResponse};
+use crate::coordinator::{BackendFactory, DatasetBackend};
+use crate::select::PassCostModel;
+use crate::testkit::Clock;
+use crate::{Error, Result};
+
+use super::transport::{TcpWire, Wire};
+
+/// Why [`serve`] returned.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ServeExit {
+    /// The wire (or the backend's own cluster link) died; the caller
+    /// should reconnect and re-register.
+    Disconnected,
+    /// The coordinator asked the worker to exit.
+    Shutdown,
+}
+
+/// Serve one registered connection until the coordinator shuts the worker
+/// down or the wire dies. `version` is the registration version assigned
+/// by the coordinator's `Registered` ack; it stamps every shipped
+/// statistics bundle.
+pub fn serve(
+    wire: &mut dyn Wire,
+    backend: &mut dyn DatasetBackend,
+    stats: &mut PassCostModel,
+    version: u64,
+    clock: &Clock,
+) -> ServeExit {
+    loop {
+        let frame = match wire.recv() {
+            Ok(f) => f,
+            Err(_) => return ServeExit::Disconnected,
+        };
+        let resp = match WireRequest::decode(&frame) {
+            Err(e) => WireResponse::from_error(&e),
+            Ok(WireRequest::Shutdown) => {
+                let _ = wire.send(&WireResponse::Ok.encode());
+                return ServeExit::Shutdown;
+            }
+            Ok(WireRequest::ShardStatsPull) => {
+                // Ship-and-reset: these sums leave the worker exactly once.
+                let shipped = WireResponse::ShardStats { model_json: stats.to_json(), version };
+                *stats = PassCostModel::seeded();
+                shipped
+            }
+            Ok(req) => {
+                match catch_unwind(AssertUnwindSafe(|| {
+                    handle_shard_op(backend, &req, stats, clock)
+                })) {
+                    Ok(Ok(r)) => r,
+                    // The backend lost ITS peer: drop this connection with
+                    // no reply so the coordinator sees a transport failure.
+                    Ok(Err(Error::Disconnected { .. })) => return ServeExit::Disconnected,
+                    Ok(Err(e)) => WireResponse::from_error(&e),
+                    Err(p) => WireResponse::from_error(&Error::Service(format!(
+                        "worker fault: {}",
+                        panic_msg(p.as_ref())
+                    ))),
+                }
+            }
+        };
+        if wire.send(&resp.encode()).is_err() {
+            return ServeExit::Disconnected;
+        }
+    }
+}
+
+/// Execute one shard-level operation. The only call site is inside
+/// [`serve`]'s `catch_unwind`, which is what lets a panicking backend fail
+/// a single request instead of the worker process.
+fn handle_shard_op(
+    backend: &mut dyn DatasetBackend,
+    req: &WireRequest,
+    stats: &mut PassCostModel,
+    clock: &Clock,
+) -> Result<WireResponse> {
+    match req {
+        WireRequest::ShardUpload { dataset, data, dtype } => {
+            backend.upload(*dataset, data, *dtype)?;
+            let ev = backend.evaluator(*dataset)?;
+            Ok(WireResponse::ShardUploaded {
+                n: ev.n() as u64,
+                dtype: ev.dtype(),
+                ladder_width_hint: ev.ladder_width_hint().map(|h| h as u64),
+                probes: ev.probes(),
+            })
+        }
+        WireRequest::ShardInit { dataset } => {
+            let ev = backend.evaluator(*dataset)?;
+            let out = ev.init_stats()?;
+            Ok(WireResponse::ShardInit { stats: out, probes: ev.probes() })
+        }
+        WireRequest::ShardProbe { dataset, ys } => {
+            let t0_us = clock.now_us();
+            let ev = backend.evaluator(*dataset)?;
+            let n = ev.n();
+            let before = ev.probes();
+            let out = ev.probe_many(ys)?;
+            let after = ev.probes();
+            let wall = Duration::from_micros(clock.now_us().saturating_sub(t0_us));
+            // One fused ladder pass, compute-only wall time. Under a frozen
+            // virtual clock this observes zero wall, which the fit guards
+            // discard (`coefficients` requires a positive sweep cost).
+            stats.observe_run(1, ys.len() as u64, after.saturating_sub(before).max(1), n, wall);
+            Ok(WireResponse::ShardProbes { stats: out, probes: after })
+        }
+        WireRequest::ShardNeighbors { dataset, y } => {
+            let ev = backend.evaluator(*dataset)?;
+            let out = ev.neighbors(*y)?;
+            Ok(WireResponse::ShardNeighbors { stats: out, probes: ev.probes() })
+        }
+        WireRequest::ShardInterval { dataset, lo, hi } => {
+            let ev = backend.evaluator(*dataset)?;
+            let out = ev.interval(*lo, *hi)?;
+            Ok(WireResponse::ShardInterval { counts: out, probes: ev.probes() })
+        }
+        WireRequest::ShardCompact { dataset, lo, hi } => {
+            let ev = backend.evaluator(*dataset)?;
+            let values = ev.compact(*lo, *hi)?;
+            Ok(WireResponse::ShardValues { values, probes: ev.probes() })
+        }
+        WireRequest::ShardDownload { dataset } => {
+            let ev = backend.evaluator(*dataset)?;
+            let values = ev.download()?;
+            Ok(WireResponse::ShardValues { values, probes: ev.probes() })
+        }
+        WireRequest::ShardLen { dataset } => {
+            let n = backend
+                .dataset_len(*dataset)
+                .ok_or_else(|| Error::InvalidArg(format!("unknown dataset {dataset}")))?;
+            Ok(WireResponse::ShardLen { n: n as u64 })
+        }
+        WireRequest::ShardDrop { dataset } => {
+            backend.drop_dataset(*dataset);
+            Ok(WireResponse::Ok)
+        }
+        _ => Err(Error::Service(
+            "not a shard op: client requests go to the coordinator, not a worker".into(),
+        )),
+    }
+}
+
+/// Knobs for [`run_worker`].
+#[derive(Debug, Clone)]
+pub struct WorkerOptions {
+    /// TCP connect deadline for dialing the coordinator.
+    pub connect_timeout: Duration,
+    /// Pause between reconnect attempts after a lost connection.
+    pub reconnect_backoff: Duration,
+    /// Interval between heartbeat dials (zero disables the heartbeat).
+    pub heartbeat: Duration,
+}
+
+impl Default for WorkerOptions {
+    fn default() -> Self {
+        WorkerOptions {
+            connect_timeout: Duration::from_secs(5),
+            reconnect_backoff: Duration::from_millis(200),
+            heartbeat: Duration::from_secs(2),
+        }
+    }
+}
+
+/// Park this thread for `dur` without `thread::sleep`: wait on a channel
+/// nobody writes to, via the clock so virtual-clock tests stay in control.
+fn park(clock: &Clock, rx: &Receiver<()>, dur: Duration) {
+    let deadline = clock.now_us().saturating_add(dur.as_micros() as u64);
+    let _ = clock.recv_deadline(rx, deadline);
+}
+
+/// Run a worker process body: dial the coordinator, register, serve until
+/// shutdown, reconnecting (with backoff) whenever the wire drops. The
+/// backend is created once and survives reconnects, so uploaded datasets
+/// outlive a coordinator hiccup.
+pub fn run_worker(
+    addr: &str,
+    worker_id: u32,
+    factory: BackendFactory,
+    clock: Clock,
+    opts: WorkerOptions,
+) -> Result<()> {
+    let mut backend = factory(worker_id as usize)?;
+    let mut stats = PassCostModel::seeded();
+    // Held-open parking channel (never written) for backoff waits.
+    let (_park_tx, park_rx) = channel::<()>();
+    // Heartbeat thread stops when this sender drops.
+    let (hb_stop_tx, hb_stop_rx) = channel::<()>();
+    let hb = if opts.heartbeat.is_zero() {
+        None
+    } else {
+        let hb_addr = addr.to_string();
+        let hb_clock = clock.clone();
+        let hb_opts = opts.clone();
+        Some(std::thread::spawn(move || {
+            heartbeat_loop(&hb_addr, worker_id, &hb_clock, &hb_opts, &hb_stop_rx)
+        }))
+    };
+    loop {
+        // Serve connections block indefinitely waiting for work: no I/O
+        // deadline (Duration::ZERO disables it).
+        let mut wire = match TcpWire::connect(addr, opts.connect_timeout, Duration::ZERO) {
+            Ok(w) => w,
+            Err(_) => {
+                park(&clock, &park_rx, opts.reconnect_backoff);
+                continue;
+            }
+        };
+        if wire.send(&WireRequest::Register { worker_id }.encode()).is_err() {
+            park(&clock, &park_rx, opts.reconnect_backoff);
+            continue;
+        }
+        let version = match wire.recv().and_then(|b| WireResponse::decode(&b)) {
+            Ok(WireResponse::Registered { version, .. }) => version,
+            _ => {
+                park(&clock, &park_rx, opts.reconnect_backoff);
+                continue;
+            }
+        };
+        match serve(&mut wire, backend.as_mut(), &mut stats, version, &clock) {
+            ServeExit::Shutdown => break,
+            ServeExit::Disconnected => park(&clock, &park_rx, opts.reconnect_backoff),
+        }
+    }
+    drop(hb_stop_tx);
+    if let Some(h) = hb {
+        let _ = h.join();
+    }
+    Ok(())
+}
+
+/// Heartbeat sidecar: dial the coordinator on its own short-lived
+/// connections at a fixed cadence until the stop channel closes. Best
+/// effort — a missed beat only ages `last_seen_us`.
+fn heartbeat_loop(
+    addr: &str,
+    worker_id: u32,
+    clock: &Clock,
+    opts: &WorkerOptions,
+    stop_rx: &Receiver<()>,
+) {
+    loop {
+        let deadline = clock.now_us().saturating_add(opts.heartbeat.as_micros() as u64);
+        match clock.recv_deadline(stop_rx, deadline) {
+            Ok(()) | Err(RecvTimeoutError::Disconnected) => return,
+            Err(RecvTimeoutError::Timeout) => {}
+        }
+        if let Ok(mut wire) =
+            TcpWire::connect(addr, opts.connect_timeout, opts.connect_timeout)
+        {
+            if wire.send(&WireRequest::Heartbeat { worker_id }.encode()).is_ok() {
+                let _ = wire.recv();
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::transport::loopback_pair;
+    use crate::coordinator::HostBackend;
+    use crate::select::DType;
+
+    fn exchange(coord: &mut dyn Wire, req: WireRequest) -> WireResponse {
+        coord.send(&req.encode()).expect("send");
+        WireResponse::decode(&coord.recv().expect("recv")).expect("decode")
+    }
+
+    /// Drive a serve loop over loopback from the "coordinator" side.
+    fn with_serve<T>(body: impl FnOnce(&mut dyn Wire) -> T) -> (T, ServeExit) {
+        let (mut coord_side, mut worker_side) = loopback_pair("worker-0", "coordinator");
+        let server = std::thread::spawn(move || {
+            let mut backend = HostBackend::default();
+            let mut stats = PassCostModel::seeded();
+            let (clock, _ctl) = Clock::manual();
+            serve(&mut worker_side, &mut backend, &mut stats, 1, &clock)
+        });
+        let out = body(&mut coord_side);
+        drop(coord_side);
+        (out, server.join().expect("serve thread"))
+    }
+
+    #[test]
+    fn upload_probe_and_shutdown_roundtrip() {
+        let ((), exit) = with_serve(|coord| {
+            let up = exchange(
+                coord,
+                WireRequest::ShardUpload {
+                    dataset: 9,
+                    data: vec![5.0, 1.0, 4.0, 2.0, 3.0],
+                    dtype: DType::F64,
+                },
+            );
+            match up {
+                WireResponse::ShardUploaded { n, dtype, .. } => {
+                    assert_eq!(n, 5);
+                    assert_eq!(dtype, DType::F64);
+                }
+                other => panic!("unexpected upload reply: {other:?}"),
+            }
+            match exchange(coord, WireRequest::ShardProbe { dataset: 9, ys: vec![2.5, 3.5] }) {
+                WireResponse::ShardProbes { stats, .. } => {
+                    assert_eq!(stats.len(), 2);
+                    assert_eq!(stats[0].c_lt, 2); // {1,2} < 2.5
+                    assert_eq!(stats[1].c_lt, 3); // {1,2,3} < 3.5
+                }
+                other => panic!("unexpected probe reply: {other:?}"),
+            }
+            match exchange(coord, WireRequest::ShardLen { dataset: 9 }) {
+                WireResponse::ShardLen { n } => assert_eq!(n, 5),
+                other => panic!("unexpected len reply: {other:?}"),
+            }
+            assert_eq!(exchange(coord, WireRequest::Shutdown), WireResponse::Ok);
+        });
+        assert_eq!(exit, ServeExit::Shutdown);
+    }
+
+    #[test]
+    fn bad_frames_and_bad_ops_get_error_replies_and_serving_continues() {
+        let ((), exit) = with_serve(|coord| {
+            coord.send(b"not json at all").expect("send garbage");
+            let resp = WireResponse::decode(&coord.recv().expect("recv")).expect("decode");
+            assert!(matches!(resp, WireResponse::Err { .. }), "{resp:?}");
+            // unknown dataset: typed error, connection stays up
+            let resp = exchange(coord, WireRequest::ShardInit { dataset: 404 });
+            assert!(matches!(resp, WireResponse::Err { .. }), "{resp:?}");
+            // a client-side op on a worker is a protocol error
+            let resp = exchange(coord, WireRequest::Stats);
+            assert!(matches!(resp, WireResponse::Err { .. }), "{resp:?}");
+            assert_eq!(exchange(coord, WireRequest::Shutdown), WireResponse::Ok);
+        });
+        assert_eq!(exit, ServeExit::Shutdown);
+    }
+
+    #[test]
+    fn coordinator_vanishing_ends_serve_with_disconnected() {
+        let ((), exit) = with_serve(|_coord| ());
+        assert_eq!(exit, ServeExit::Disconnected);
+    }
+
+    #[test]
+    fn stats_pull_ships_and_resets() {
+        let ((), exit) = with_serve(|coord| {
+            let _ = exchange(
+                coord,
+                WireRequest::ShardUpload {
+                    dataset: 1,
+                    data: (0..64).map(|i| i as f64).collect(),
+                    dtype: DType::F64,
+                },
+            );
+            let _ = exchange(coord, WireRequest::ShardProbe { dataset: 1, ys: vec![31.5] });
+            match exchange(coord, WireRequest::ShardStatsPull) {
+                WireResponse::ShardStats { model_json, version } => {
+                    assert_eq!(version, 1);
+                    let shipped = PassCostModel::from_json(&model_json).expect("parse");
+                    assert_eq!(shipped.samples(), 1);
+                }
+                other => panic!("unexpected stats reply: {other:?}"),
+            }
+            // after the reset a second pull ships an empty accumulator
+            match exchange(coord, WireRequest::ShardStatsPull) {
+                WireResponse::ShardStats { model_json, .. } => {
+                    let shipped = PassCostModel::from_json(&model_json).expect("parse");
+                    assert_eq!(shipped.samples(), 0, "ship-and-reset must not double-count");
+                }
+                other => panic!("unexpected stats reply: {other:?}"),
+            }
+            assert_eq!(exchange(coord, WireRequest::Shutdown), WireResponse::Ok);
+        });
+        assert_eq!(exit, ServeExit::Shutdown);
+    }
+}

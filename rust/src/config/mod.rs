@@ -86,6 +86,39 @@ pub struct Config {
     /// trajectory, and a committed number deserves more samples than a
     /// CI count check.
     pub bench_wall_reps: usize,
+    /// Cluster-mode settings (`[cluster]`), shared by the coordinator and
+    /// worker subcommands so one config file describes a deployment.
+    pub cluster: ClusterConfig,
+}
+
+/// `[cluster]` section: where the coordinator listens and how the
+/// processes pace their wire I/O.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClusterConfig {
+    /// Coordinator listen / worker dial address (`listen`).
+    pub listen: String,
+    /// Remote worker count (`workers`); the coordinator runs one service
+    /// worker thread per remote worker (1:1 pinning).
+    pub workers: u32,
+    /// TCP connect deadline in ms (`connect_timeout_ms`).
+    pub connect_timeout_ms: u64,
+    /// Coordinator→worker per-op read/write deadline in ms
+    /// (`io_timeout_ms`): a hung worker fails its batch, not the process.
+    pub io_timeout_ms: u64,
+    /// Worker heartbeat cadence in ms (`heartbeat_ms`, 0 disables).
+    pub heartbeat_ms: u64,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        ClusterConfig {
+            listen: "127.0.0.1:7171".to_string(),
+            workers: 2,
+            connect_timeout_ms: 5_000,
+            io_timeout_ms: 30_000,
+            heartbeat_ms: 2_000,
+        }
+    }
 }
 
 impl Default for Config {
@@ -112,6 +145,7 @@ impl Default for Config {
             bench_instances: 3,
             bench_max_log2n: 22,
             bench_wall_reps: 7,
+            cluster: ClusterConfig::default(),
         }
     }
 }
@@ -223,6 +257,31 @@ impl Config {
         }
         if let Some(v) = doc.get_int("bench", "wall_reps")? {
             c.bench_wall_reps = (v as usize).max(1);
+        }
+        if let Some(v) = doc.get_str("cluster", "listen")? {
+            if !v.contains(':') {
+                return Err(Error::Parse(format!(
+                    "cluster listen must be host:port, got {v:?}"
+                )));
+            }
+            c.cluster.listen = v;
+        }
+        if let Some(v) = doc.get_int("cluster", "workers")? {
+            if v < 1 {
+                return Err(Error::Parse(format!(
+                    "cluster workers must be at least 1, got {v}"
+                )));
+            }
+            c.cluster.workers = v as u32;
+        }
+        if let Some(v) = doc.get_int("cluster", "connect_timeout_ms")? {
+            c.cluster.connect_timeout_ms = v.max(0) as u64;
+        }
+        if let Some(v) = doc.get_int("cluster", "io_timeout_ms")? {
+            c.cluster.io_timeout_ms = v.max(0) as u64;
+        }
+        if let Some(v) = doc.get_int("cluster", "heartbeat_ms")? {
+            c.cluster.heartbeat_ms = v.max(0) as u64;
         }
         Ok(c)
     }
@@ -346,6 +405,32 @@ mod tests {
         assert!(c.coordinator_options().adaptive.is_none());
         let window = c.coordinator_options().batch_window;
         assert_eq!(window, std::time::Duration::from_micros(200));
+    }
+
+    #[test]
+    fn cluster_section_parses_and_defaults() {
+        let c = Config::default();
+        assert_eq!(c.cluster.listen, "127.0.0.1:7171");
+        assert_eq!(c.cluster.workers, 2);
+        assert_eq!(c.cluster.io_timeout_ms, 30_000);
+        assert_eq!(c.cluster.heartbeat_ms, 2_000);
+
+        let c = Config::parse(
+            "[cluster]\nlisten = \"0.0.0.0:9001\"\nworkers = 4\n\
+             connect_timeout_ms = 250\nio_timeout_ms = 1500\nheartbeat_ms = 0\n",
+        )
+        .unwrap();
+        assert_eq!(c.cluster.listen, "0.0.0.0:9001");
+        assert_eq!(c.cluster.workers, 4);
+        assert_eq!(c.cluster.connect_timeout_ms, 250);
+        assert_eq!(c.cluster.io_timeout_ms, 1500);
+        assert_eq!(c.cluster.heartbeat_ms, 0, "zero disables the heartbeat");
+    }
+
+    #[test]
+    fn rejects_bad_cluster_values() {
+        assert!(Config::parse("[cluster]\nlisten = \"no-port\"\n").is_err());
+        assert!(Config::parse("[cluster]\nworkers = 0\n").is_err());
     }
 
     #[test]

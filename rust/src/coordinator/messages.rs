@@ -1,0 +1,1081 @@
+//! Transport-agnostic message layer for cluster mode.
+//!
+//! Typed request/response enums ([`WireRequest`], [`WireResponse`]) plus a
+//! length-prefixed JSON codec over [`crate::util::json`]. The same frames
+//! travel over the in-process loopback transport and TCP
+//! ([`crate::cluster::transport`]); nothing here knows which.
+//!
+//! ## Wire schema
+//!
+//! A frame is a 4-byte big-endian payload length followed by that many
+//! bytes of UTF-8 JSON. The JSON document is an object tagged by `"op"`
+//! (requests) or `"re"` (responses); remaining keys are the variant's
+//! fields. Two encoding rules keep the schema lossless over
+//! [`crate::util::json`], whose only number type is `f64`:
+//!
+//! - **`u64` fields travel as decimal strings.** `retry_after_us`,
+//!   `late_us`, dataset ids, counts and version counters may exceed 2⁵³,
+//!   where `f64` silently rounds; `"18446744073709551615"` does not.
+//! - **`f64` fields travel as JSON numbers when finite** (Rust's shortest
+//!   round-trip display) **and as the strings `"NaN"`/`"Inf"`/`"-Inf"`
+//!   otherwise** — `Neighbors` legitimately carries ±∞ sentinels, and
+//!   bare `NaN` is not JSON.
+//!
+//! Frames larger than [`MAX_FRAME_BYTES`] are rejected on both send and
+//! receive: an oversized header is how a corrupt stream or a non-protocol
+//! peer shows up, and the guard bounds the allocation a hostile or broken
+//! peer can force.
+//!
+//! Deadlines cross the wire **relative** (`deadline_rel_us`): the
+//! coordinator stamps the absolute give-up time on its own service clock
+//! at dispatch, so `Overloaded` retry hints and `DeadlineExceeded`
+//! lateness are always computed on one clock (the coordinator's) no
+//! matter which host executed the passes.
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::time::Duration;
+
+use super::service::{DatasetId, KSpec, QueryResult};
+use crate::select::objective::{DType, InitStats, IntervalCounts, Neighbors, ProbeStats};
+use crate::select::Method;
+use crate::util::json::Json;
+use crate::{Error, Result};
+
+/// Hard cap on one frame's payload (64 MiB). Upload frames carry whole
+/// datasets, so the cap is generous; anything larger is treated as stream
+/// corruption rather than trusted as an allocation size.
+pub const MAX_FRAME_BYTES: usize = 64 << 20;
+
+// ---------------------------------------------------------------------------
+// framing
+
+/// Write one length-prefixed frame. I/O errors are returned raw so the
+/// transport can classify them (EOF kinds become
+/// [`Error::Disconnected`] with the peer's name attached).
+pub fn write_frame(w: &mut dyn Write, payload: &[u8]) -> std::io::Result<()> {
+    if payload.len() > MAX_FRAME_BYTES {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidData,
+            format!("frame of {} bytes exceeds the {MAX_FRAME_BYTES}-byte cap", payload.len()),
+        ));
+    }
+    let len = payload.len() as u32;
+    w.write_all(&len.to_be_bytes())?;
+    w.write_all(payload)?;
+    w.flush()
+}
+
+/// Read one length-prefixed frame (see [`write_frame`]).
+pub fn read_frame(r: &mut dyn Read) -> std::io::Result<Vec<u8>> {
+    let mut hdr = [0u8; 4];
+    r.read_exact(&mut hdr)?;
+    let len = u32::from_be_bytes(hdr) as usize;
+    if len > MAX_FRAME_BYTES {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidData,
+            format!("frame header claims {len} bytes (cap {MAX_FRAME_BYTES}): corrupt stream"),
+        ));
+    }
+    let mut buf = vec![0u8; len];
+    r.read_exact(&mut buf)?;
+    Ok(buf)
+}
+
+// ---------------------------------------------------------------------------
+// JSON rendering (util::json only parses)
+
+fn render(j: &Json, out: &mut String) {
+    match j {
+        Json::Null => out.push_str("null"),
+        Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+        // Non-finite numbers never occur: f64 fields go through `jf64`,
+        // which diverts them to strings. `null` keeps render total anyway.
+        Json::Num(x) if x.is_finite() => {
+            // Rust's shortest-round-trip float display parses back to the
+            // identical f64, and is valid JSON for finite values.
+            let mut s = format!("{x}");
+            if !s.contains(['.', 'e', 'E']) {
+                s.push_str(".0");
+            }
+            out.push_str(&s);
+        }
+        Json::Num(_) => out.push_str("null"),
+        Json::Str(s) => render_str(s, out),
+        Json::Arr(a) => {
+            out.push('[');
+            for (i, v) in a.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                render(v, out);
+            }
+            out.push(']');
+        }
+        Json::Obj(m) => {
+            out.push('{');
+            for (i, (k, v)) in m.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                render_str(k, out);
+                out.push(':');
+                render(v, out);
+            }
+            out.push('}');
+        }
+    }
+}
+
+fn render_str(s: &str, out: &mut String) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+/// Serialize a [`Json`] value to compact text (the codec's output side;
+/// the input side is [`Json::parse`]).
+pub fn to_text(j: &Json) -> String {
+    let mut out = String::new();
+    render(j, &mut out);
+    out
+}
+
+// ---------------------------------------------------------------------------
+// field codecs
+
+fn jobj(pairs: Vec<(&str, Json)>) -> Json {
+    let mut m = BTreeMap::new();
+    for (k, v) in pairs {
+        m.insert(k.to_string(), v);
+    }
+    Json::Obj(m)
+}
+
+/// `u64` → decimal string (width-lossless; see module docs).
+fn ju64(v: u64) -> Json {
+    Json::Str(v.to_string())
+}
+
+fn u64_of(j: &Json, what: &str) -> Result<u64> {
+    j.as_str()
+        .map_err(|_| Error::Parse(format!("{what}: u64 fields travel as decimal strings")))?
+        .parse::<u64>()
+        .map_err(|_| Error::Parse(format!("{what}: not a u64 decimal string")))
+}
+
+fn u32_of(j: &Json, what: &str) -> Result<u32> {
+    let v = u64_of(j, what)?;
+    u32::try_from(v).map_err(|_| Error::Parse(format!("{what}: {v} exceeds u32")))
+}
+
+fn usize_of(j: &Json, what: &str) -> Result<usize> {
+    let v = u64_of(j, what)?;
+    usize::try_from(v).map_err(|_| Error::Parse(format!("{what}: {v} exceeds usize")))
+}
+
+/// `f64` → number when finite, `"NaN"`/`"Inf"`/`"-Inf"` otherwise.
+fn jf64(v: f64) -> Json {
+    if v.is_finite() {
+        Json::Num(v)
+    } else if v.is_nan() {
+        Json::Str("NaN".into())
+    } else if v > 0.0 {
+        Json::Str("Inf".into())
+    } else {
+        Json::Str("-Inf".into())
+    }
+}
+
+fn f64_of(j: &Json, what: &str) -> Result<f64> {
+    match j {
+        Json::Num(x) => Ok(*x),
+        Json::Str(s) => match s.as_str() {
+            "NaN" => Ok(f64::NAN),
+            "Inf" => Ok(f64::INFINITY),
+            "-Inf" => Ok(f64::NEG_INFINITY),
+            other => Err(Error::Parse(format!("{what}: unexpected float string {other:?}"))),
+        },
+        other => Err(Error::Parse(format!("{what}: expected float, got {other:?}"))),
+    }
+}
+
+fn jf64s(vs: &[f64]) -> Json {
+    Json::Arr(vs.iter().map(|&v| jf64(v)).collect())
+}
+
+fn f64s_of(j: &Json, what: &str) -> Result<Vec<f64>> {
+    j.as_arr()?.iter().map(|v| f64_of(v, what)).collect()
+}
+
+fn opt_u64_of(j: &Json, key: &str) -> Result<Option<u64>> {
+    j.get_opt(key).map(|v| u64_of(v, key)).transpose()
+}
+
+fn opt_str_of(j: &Json, key: &str) -> Result<Option<String>> {
+    j.get_opt(key).map(|v| v.as_str().map(str::to_string)).transpose()
+}
+
+fn dtype_json(d: DType) -> Json {
+    Json::Str(d.name().into())
+}
+
+fn dtype_of(j: &Json) -> Result<DType> {
+    let s = j.as_str()?;
+    DType::from_name(s).ok_or_else(|| Error::Parse(format!("unknown dtype {s:?}")))
+}
+
+fn method_of(j: &Json) -> Result<Method> {
+    let s = j.as_str()?;
+    Method::from_name(s).ok_or_else(|| Error::Parse(format!("unknown method {s:?}")))
+}
+
+fn kspec_json(k: &KSpec) -> Json {
+    match *k {
+        KSpec::Median => jobj(vec![("kind", Json::Str("median".into()))]),
+        KSpec::Rank(r) => {
+            jobj(vec![("kind", Json::Str("rank".into())), ("k", ju64(r as u64))])
+        }
+        KSpec::Quantile(q) => {
+            jobj(vec![("kind", Json::Str("quantile".into())), ("q", jf64(q))])
+        }
+    }
+}
+
+fn kspec_of(j: &Json) -> Result<KSpec> {
+    match j.get("kind")?.as_str()? {
+        "median" => Ok(KSpec::Median),
+        "rank" => Ok(KSpec::Rank(usize_of(j.get("k")?, "kspec.k")?)),
+        "quantile" => Ok(KSpec::Quantile(f64_of(j.get("q")?, "kspec.q")?)),
+        other => Err(Error::Parse(format!("unknown kspec kind {other:?}"))),
+    }
+}
+
+fn probe_stats_json(p: &ProbeStats) -> Json {
+    jobj(vec![
+        ("s_lo", jf64(p.s_lo)),
+        ("s_hi", jf64(p.s_hi)),
+        ("c_lt", ju64(p.c_lt)),
+        ("c_eq", ju64(p.c_eq)),
+        ("c_gt", ju64(p.c_gt)),
+    ])
+}
+
+fn probe_stats_of(j: &Json) -> Result<ProbeStats> {
+    Ok(ProbeStats {
+        s_lo: f64_of(j.get("s_lo")?, "probe.s_lo")?,
+        s_hi: f64_of(j.get("s_hi")?, "probe.s_hi")?,
+        c_lt: u64_of(j.get("c_lt")?, "probe.c_lt")?,
+        c_eq: u64_of(j.get("c_eq")?, "probe.c_eq")?,
+        c_gt: u64_of(j.get("c_gt")?, "probe.c_gt")?,
+    })
+}
+
+fn result_json(r: &QueryResult) -> Json {
+    jobj(vec![
+        ("value", jf64(r.value)),
+        ("k", ju64(r.k as u64)),
+        ("method", Json::Str(r.method.name().into())),
+        ("probes", ju64(r.probes)),
+        ("iterations", ju64(r.iterations as u64)),
+        ("wall_ns", ju64(r.wall.as_nanos().min(u64::MAX as u128) as u64)),
+        ("completed_us", ju64(r.completed_us)),
+    ])
+}
+
+fn result_of(j: &Json) -> Result<QueryResult> {
+    Ok(QueryResult {
+        value: f64_of(j.get("value")?, "result.value")?,
+        k: usize_of(j.get("k")?, "result.k")?,
+        method: method_of(j.get("method")?)?,
+        probes: u64_of(j.get("probes")?, "result.probes")?,
+        iterations: usize_of(j.get("iterations")?, "result.iterations")?,
+        wall: Duration::from_nanos(u64_of(j.get("wall_ns")?, "result.wall_ns")?),
+        completed_us: u64_of(j.get("completed_us")?, "result.completed_us")?,
+    })
+}
+
+// ---------------------------------------------------------------------------
+// requests
+
+/// Everything a peer can ask over the wire.
+///
+/// Client-facing ops (`Upload`…`Shutdown`) are what `cluster client` /
+/// the smoke harness sends to a coordinator; `Register`/`Heartbeat` and
+/// the `Shard*` family are the coordinator↔worker protocol — each shard
+/// op is one `Evaluator` pass primitive, so a remote worker ships the
+/// paper's sufficient statistics (sums + counts), never raw data, per
+/// fused pass.
+#[derive(Debug, Clone, PartialEq)]
+pub enum WireRequest {
+    /// Worker announces itself (or re-announces after a reconnect). The
+    /// coordinator bumps the worker's version counter and replies
+    /// [`WireResponse::Registered`].
+    Register { worker_id: u32 },
+    /// Worker liveness ping on a short-lived side connection.
+    Heartbeat { worker_id: u32 },
+    /// Client: upload a dataset, receive its id.
+    Upload { data: Vec<f64>, dtype: DType },
+    /// Client: one order statistic. `deadline_rel_us` is relative to the
+    /// coordinator's dispatch (see module docs).
+    Query {
+        dataset: DatasetId,
+        spec: KSpec,
+        method: Option<Method>,
+        tenant: u32,
+        deadline_rel_us: Option<u64>,
+    },
+    /// Client: many order statistics of one dataset in shared rounds.
+    QueryMany {
+        dataset: DatasetId,
+        specs: Vec<KSpec>,
+        method: Option<Method>,
+        tenant: u32,
+        deadline_rel_us: Option<u64>,
+    },
+    /// Client: drop a dataset.
+    Drop { dataset: DatasetId },
+    /// Client: coordinator metrics snapshot (rendered text).
+    Stats,
+    /// Client: stop the coordinator (and its workers' serve loops).
+    Shutdown,
+    /// Coordinator→worker: host this shard.
+    ShardUpload { dataset: DatasetId, data: Vec<f64>, dtype: DType },
+    /// Coordinator→worker: `Evaluator::init_stats` on a shard.
+    ShardInit { dataset: DatasetId },
+    /// Coordinator→worker: one fused multi-probe ladder pass
+    /// (`Evaluator::probe_many`).
+    ShardProbe { dataset: DatasetId, ys: Vec<f64> },
+    /// Coordinator→worker: `Evaluator::neighbors`.
+    ShardNeighbors { dataset: DatasetId, y: f64 },
+    /// Coordinator→worker: `Evaluator::interval`.
+    ShardInterval { dataset: DatasetId, lo: f64, hi: f64 },
+    /// Coordinator→worker: `Evaluator::compact` (the hybrid's copy_if).
+    ShardCompact { dataset: DatasetId, lo: f64, hi: f64 },
+    /// Coordinator→worker: `Evaluator::download` (host baselines).
+    ShardDownload { dataset: DatasetId },
+    /// Coordinator→worker: shard length probe.
+    ShardLen { dataset: DatasetId },
+    /// Coordinator→worker: drop a shard.
+    ShardDrop { dataset: DatasetId },
+    /// Coordinator→worker: ship-and-reset the worker's locally
+    /// accumulated cost-model statistics (see
+    /// [`WireResponse::ShardStats`]).
+    ShardStatsPull,
+}
+
+impl WireRequest {
+    /// Encode to one frame payload (JSON bytes, no length prefix).
+    pub fn encode(&self) -> Vec<u8> {
+        let j = match self {
+            WireRequest::Register { worker_id } => jobj(vec![
+                ("op", Json::Str("register".into())),
+                ("worker_id", ju64(*worker_id as u64)),
+            ]),
+            WireRequest::Heartbeat { worker_id } => jobj(vec![
+                ("op", Json::Str("heartbeat".into())),
+                ("worker_id", ju64(*worker_id as u64)),
+            ]),
+            WireRequest::Upload { data, dtype } => jobj(vec![
+                ("op", Json::Str("upload".into())),
+                ("data", jf64s(data)),
+                ("dtype", dtype_json(*dtype)),
+            ]),
+            WireRequest::Query { dataset, spec, method, tenant, deadline_rel_us } => {
+                let mut pairs = vec![
+                    ("op", Json::Str("query".into())),
+                    ("dataset", ju64(*dataset)),
+                    ("spec", kspec_json(spec)),
+                    ("tenant", ju64(*tenant as u64)),
+                ];
+                if let Some(m) = method {
+                    pairs.push(("method", Json::Str(m.name().into())));
+                }
+                if let Some(d) = deadline_rel_us {
+                    pairs.push(("deadline_rel_us", ju64(*d)));
+                }
+                jobj(pairs)
+            }
+            WireRequest::QueryMany { dataset, specs, method, tenant, deadline_rel_us } => {
+                let mut pairs = vec![
+                    ("op", Json::Str("query_many".into())),
+                    ("dataset", ju64(*dataset)),
+                    ("specs", Json::Arr(specs.iter().map(kspec_json).collect())),
+                    ("tenant", ju64(*tenant as u64)),
+                ];
+                if let Some(m) = method {
+                    pairs.push(("method", Json::Str(m.name().into())));
+                }
+                if let Some(d) = deadline_rel_us {
+                    pairs.push(("deadline_rel_us", ju64(*d)));
+                }
+                jobj(pairs)
+            }
+            WireRequest::Drop { dataset } => jobj(vec![
+                ("op", Json::Str("drop".into())),
+                ("dataset", ju64(*dataset)),
+            ]),
+            WireRequest::Stats => jobj(vec![("op", Json::Str("stats".into()))]),
+            WireRequest::Shutdown => jobj(vec![("op", Json::Str("shutdown".into()))]),
+            WireRequest::ShardUpload { dataset, data, dtype } => jobj(vec![
+                ("op", Json::Str("shard_upload".into())),
+                ("dataset", ju64(*dataset)),
+                ("data", jf64s(data)),
+                ("dtype", dtype_json(*dtype)),
+            ]),
+            WireRequest::ShardInit { dataset } => jobj(vec![
+                ("op", Json::Str("shard_init".into())),
+                ("dataset", ju64(*dataset)),
+            ]),
+            WireRequest::ShardProbe { dataset, ys } => jobj(vec![
+                ("op", Json::Str("shard_probe".into())),
+                ("dataset", ju64(*dataset)),
+                ("ys", jf64s(ys)),
+            ]),
+            WireRequest::ShardNeighbors { dataset, y } => jobj(vec![
+                ("op", Json::Str("shard_neighbors".into())),
+                ("dataset", ju64(*dataset)),
+                ("y", jf64(*y)),
+            ]),
+            WireRequest::ShardInterval { dataset, lo, hi } => jobj(vec![
+                ("op", Json::Str("shard_interval".into())),
+                ("dataset", ju64(*dataset)),
+                ("lo", jf64(*lo)),
+                ("hi", jf64(*hi)),
+            ]),
+            WireRequest::ShardCompact { dataset, lo, hi } => jobj(vec![
+                ("op", Json::Str("shard_compact".into())),
+                ("dataset", ju64(*dataset)),
+                ("lo", jf64(*lo)),
+                ("hi", jf64(*hi)),
+            ]),
+            WireRequest::ShardDownload { dataset } => jobj(vec![
+                ("op", Json::Str("shard_download".into())),
+                ("dataset", ju64(*dataset)),
+            ]),
+            WireRequest::ShardLen { dataset } => jobj(vec![
+                ("op", Json::Str("shard_len".into())),
+                ("dataset", ju64(*dataset)),
+            ]),
+            WireRequest::ShardDrop { dataset } => jobj(vec![
+                ("op", Json::Str("shard_drop".into())),
+                ("dataset", ju64(*dataset)),
+            ]),
+            WireRequest::ShardStatsPull => {
+                jobj(vec![("op", Json::Str("shard_stats_pull".into()))])
+            }
+        };
+        to_text(&j).into_bytes()
+    }
+
+    /// Decode one frame payload.
+    pub fn decode(bytes: &[u8]) -> Result<WireRequest> {
+        let text = std::str::from_utf8(bytes)
+            .map_err(|_| Error::Parse("request frame is not UTF-8".into()))?;
+        let j = Json::parse(text)?;
+        let dataset = |j: &Json| u64_of(j.get("dataset")?, "dataset");
+        match j.get("op")?.as_str()? {
+            "register" => {
+                Ok(WireRequest::Register { worker_id: u32_of(j.get("worker_id")?, "worker_id")? })
+            }
+            "heartbeat" => {
+                Ok(WireRequest::Heartbeat { worker_id: u32_of(j.get("worker_id")?, "worker_id")? })
+            }
+            "upload" => Ok(WireRequest::Upload {
+                data: f64s_of(j.get("data")?, "data")?,
+                dtype: dtype_of(j.get("dtype")?)?,
+            }),
+            "query" => Ok(WireRequest::Query {
+                dataset: dataset(&j)?,
+                spec: kspec_of(j.get("spec")?)?,
+                method: j.get_opt("method").map(method_of).transpose()?,
+                tenant: u32_of(j.get("tenant")?, "tenant")?,
+                deadline_rel_us: opt_u64_of(&j, "deadline_rel_us")?,
+            }),
+            "query_many" => Ok(WireRequest::QueryMany {
+                dataset: dataset(&j)?,
+                specs: j.get("specs")?.as_arr()?.iter().map(kspec_of).collect::<Result<_>>()?,
+                method: j.get_opt("method").map(method_of).transpose()?,
+                tenant: u32_of(j.get("tenant")?, "tenant")?,
+                deadline_rel_us: opt_u64_of(&j, "deadline_rel_us")?,
+            }),
+            "drop" => Ok(WireRequest::Drop { dataset: dataset(&j)? }),
+            "stats" => Ok(WireRequest::Stats),
+            "shutdown" => Ok(WireRequest::Shutdown),
+            "shard_upload" => Ok(WireRequest::ShardUpload {
+                dataset: dataset(&j)?,
+                data: f64s_of(j.get("data")?, "data")?,
+                dtype: dtype_of(j.get("dtype")?)?,
+            }),
+            "shard_init" => Ok(WireRequest::ShardInit { dataset: dataset(&j)? }),
+            "shard_probe" => Ok(WireRequest::ShardProbe {
+                dataset: dataset(&j)?,
+                ys: f64s_of(j.get("ys")?, "ys")?,
+            }),
+            "shard_neighbors" => Ok(WireRequest::ShardNeighbors {
+                dataset: dataset(&j)?,
+                y: f64_of(j.get("y")?, "y")?,
+            }),
+            "shard_interval" => Ok(WireRequest::ShardInterval {
+                dataset: dataset(&j)?,
+                lo: f64_of(j.get("lo")?, "lo")?,
+                hi: f64_of(j.get("hi")?, "hi")?,
+            }),
+            "shard_compact" => Ok(WireRequest::ShardCompact {
+                dataset: dataset(&j)?,
+                lo: f64_of(j.get("lo")?, "lo")?,
+                hi: f64_of(j.get("hi")?, "hi")?,
+            }),
+            "shard_download" => Ok(WireRequest::ShardDownload { dataset: dataset(&j)? }),
+            "shard_len" => Ok(WireRequest::ShardLen { dataset: dataset(&j)? }),
+            "shard_drop" => Ok(WireRequest::ShardDrop { dataset: dataset(&j)? }),
+            "shard_stats_pull" => Ok(WireRequest::ShardStatsPull),
+            other => Err(Error::Parse(format!("unknown wire request op {other:?}"))),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// responses
+
+/// Every reply a peer can send. Shard replies carry `probes`: the delta
+/// of the executing evaluator's reduction counter attributable to the
+/// op, which the coordinator-side proxy mirrors into its own counter so
+/// fused-reduction accounting is bit-identical to the in-process path.
+#[derive(Debug, Clone, PartialEq)]
+pub enum WireResponse {
+    /// Generic ack (drop, shutdown, heartbeat).
+    Ok,
+    /// Registration ack: the version the coordinator will tag this
+    /// connection's cost statistics with (stale-stat fencing; see
+    /// [`WireResponse::ShardStats`]).
+    Registered { worker_id: u32, version: u64 },
+    /// Upload ack with the assigned dataset id.
+    Uploaded { dataset: DatasetId },
+    /// One query's answer.
+    Result { result: QueryResult },
+    /// `query_many` answers, positionally aligned with the specs.
+    Results { results: Vec<QueryResult> },
+    /// Rendered metrics snapshot.
+    StatsText { text: String },
+    /// Shard-upload ack: the worker evaluator's shape facts, cached by
+    /// the coordinator-side proxy (`n` is the evaluator's count, the
+    /// hint sizes fused ladders).
+    ShardUploaded { n: u64, dtype: DType, ladder_width_hint: Option<u64>, probes: u64 },
+    /// `init_stats` sufficient statistics.
+    ShardInit { stats: InitStats, probes: u64 },
+    /// One ladder pass's per-rung sufficient statistics.
+    ShardProbes { stats: Vec<ProbeStats>, probes: u64 },
+    /// `neighbors` reply.
+    ShardNeighbors { stats: Neighbors, probes: u64 },
+    /// `interval` reply.
+    ShardInterval { counts: IntervalCounts, probes: u64 },
+    /// `compact`/`download` reply (the only ops that move raw values).
+    ShardValues { values: Vec<f64>, probes: u64 },
+    /// Shard length.
+    ShardLen { n: u64 },
+    /// Ship-and-reset cost statistics: the worker's locally accumulated
+    /// `PassCostModel` document (its own sufficient-statistic sums since
+    /// the previous pull) plus the registration version they were
+    /// accumulated under. The coordinator merges them into the
+    /// [`crate::coordinator::CostModelPool`] only while the version is
+    /// current — a restarted worker re-registers under a bumped version,
+    /// so statistics from before the restart are dropped, not merged.
+    ShardStats { model_json: String, version: u64 },
+    /// Typed failure. `kind` is the [`crate::error::ErrorKind`] kebab
+    /// name; the µs payloads of `Overloaded`/`DeadlineExceeded` and the
+    /// peer of `Disconnected` survive the round trip losslessly.
+    Err {
+        kind: String,
+        message: String,
+        retry_after_us: Option<u64>,
+        late_us: Option<u64>,
+        peer: Option<String>,
+    },
+}
+
+impl WireResponse {
+    /// Wrap a service error for the wire, preserving the typed payloads.
+    pub fn from_error(e: &Error) -> WireResponse {
+        WireResponse::Err {
+            kind: e.kind().to_string(),
+            message: e.to_string(),
+            retry_after_us: match e {
+                Error::Overloaded { retry_after_us } => Some(*retry_after_us),
+                _ => None,
+            },
+            late_us: match e {
+                Error::DeadlineExceeded { late_us } => Some(*late_us),
+                _ => None,
+            },
+            peer: match e {
+                Error::Disconnected { peer } => Some(peer.clone()),
+                _ => None,
+            },
+        }
+    }
+
+    /// Rebuild the typed error a [`WireResponse::Err`] carries; non-error
+    /// responses return `None`.
+    pub fn into_error(self) -> Option<Error> {
+        let WireResponse::Err { kind, message, retry_after_us, late_us, peer } = self else {
+            return None;
+        };
+        Some(match kind.as_str() {
+            "overloaded" => Error::Overloaded { retry_after_us: retry_after_us.unwrap_or(100) },
+            "deadline-exceeded" => Error::DeadlineExceeded { late_us: late_us.unwrap_or(0) },
+            "disconnected" => Error::Disconnected { peer: peer.unwrap_or(message) },
+            "invalid-arg" => Error::InvalidArg(message),
+            "parse" => Error::Parse(message),
+            "algorithm" => Error::Algorithm(message),
+            "xla" => Error::Xla(message),
+            "artifact" => Error::Artifact(message),
+            "io" => Error::io(
+                "remote",
+                std::io::Error::new(std::io::ErrorKind::Other, message),
+            ),
+            _ => Error::Service(message),
+        })
+    }
+
+    /// Encode to one frame payload (JSON bytes, no length prefix).
+    pub fn encode(&self) -> Vec<u8> {
+        let j = match self {
+            WireResponse::Ok => jobj(vec![("re", Json::Str("ok".into()))]),
+            WireResponse::Registered { worker_id, version } => jobj(vec![
+                ("re", Json::Str("registered".into())),
+                ("worker_id", ju64(*worker_id as u64)),
+                ("version", ju64(*version)),
+            ]),
+            WireResponse::Uploaded { dataset } => jobj(vec![
+                ("re", Json::Str("uploaded".into())),
+                ("dataset", ju64(*dataset)),
+            ]),
+            WireResponse::Result { result } => jobj(vec![
+                ("re", Json::Str("result".into())),
+                ("result", result_json(result)),
+            ]),
+            WireResponse::Results { results } => jobj(vec![
+                ("re", Json::Str("results".into())),
+                ("results", Json::Arr(results.iter().map(result_json).collect())),
+            ]),
+            WireResponse::StatsText { text } => jobj(vec![
+                ("re", Json::Str("stats_text".into())),
+                ("text", Json::Str(text.clone())),
+            ]),
+            WireResponse::ShardUploaded { n, dtype, ladder_width_hint, probes } => {
+                let mut pairs = vec![
+                    ("re", Json::Str("shard_uploaded".into())),
+                    ("n", ju64(*n)),
+                    ("dtype", dtype_json(*dtype)),
+                    ("probes", ju64(*probes)),
+                ];
+                if let Some(h) = ladder_width_hint {
+                    pairs.push(("ladder_width_hint", ju64(*h)));
+                }
+                jobj(pairs)
+            }
+            WireResponse::ShardInit { stats, probes } => jobj(vec![
+                ("re", Json::Str("shard_init".into())),
+                ("min", jf64(stats.min)),
+                ("max", jf64(stats.max)),
+                ("sum", jf64(stats.sum)),
+                ("probes", ju64(*probes)),
+            ]),
+            WireResponse::ShardProbes { stats, probes } => jobj(vec![
+                ("re", Json::Str("shard_probes".into())),
+                ("stats", Json::Arr(stats.iter().map(probe_stats_json).collect())),
+                ("probes", ju64(*probes)),
+            ]),
+            WireResponse::ShardNeighbors { stats, probes } => jobj(vec![
+                ("re", Json::Str("shard_neighbors".into())),
+                ("lower", jf64(stats.lower)),
+                ("upper", jf64(stats.upper)),
+                ("c_le", ju64(stats.c_le)),
+                ("probes", ju64(*probes)),
+            ]),
+            WireResponse::ShardInterval { counts, probes } => jobj(vec![
+                ("re", Json::Str("shard_interval".into())),
+                ("c_le", ju64(counts.c_le)),
+                ("c_in", ju64(counts.c_in)),
+                ("c_ge", ju64(counts.c_ge)),
+                ("probes", ju64(*probes)),
+            ]),
+            WireResponse::ShardValues { values, probes } => jobj(vec![
+                ("re", Json::Str("shard_values".into())),
+                ("values", jf64s(values)),
+                ("probes", ju64(*probes)),
+            ]),
+            WireResponse::ShardLen { n } => jobj(vec![
+                ("re", Json::Str("shard_len".into())),
+                ("n", ju64(*n)),
+            ]),
+            WireResponse::ShardStats { model_json, version } => jobj(vec![
+                ("re", Json::Str("shard_stats".into())),
+                ("model_json", Json::Str(model_json.clone())),
+                ("version", ju64(*version)),
+            ]),
+            WireResponse::Err { kind, message, retry_after_us, late_us, peer } => {
+                let mut pairs = vec![
+                    ("re", Json::Str("err".into())),
+                    ("kind", Json::Str(kind.clone())),
+                    ("message", Json::Str(message.clone())),
+                ];
+                if let Some(v) = retry_after_us {
+                    pairs.push(("retry_after_us", ju64(*v)));
+                }
+                if let Some(v) = late_us {
+                    pairs.push(("late_us", ju64(*v)));
+                }
+                if let Some(p) = peer {
+                    pairs.push(("peer", Json::Str(p.clone())));
+                }
+                jobj(pairs)
+            }
+        };
+        to_text(&j).into_bytes()
+    }
+
+    /// Decode one frame payload.
+    pub fn decode(bytes: &[u8]) -> Result<WireResponse> {
+        let text = std::str::from_utf8(bytes)
+            .map_err(|_| Error::Parse("response frame is not UTF-8".into()))?;
+        let j = Json::parse(text)?;
+        let probes = |j: &Json| u64_of(j.get("probes")?, "probes");
+        match j.get("re")?.as_str()? {
+            "ok" => Ok(WireResponse::Ok),
+            "registered" => Ok(WireResponse::Registered {
+                worker_id: u32_of(j.get("worker_id")?, "worker_id")?,
+                version: u64_of(j.get("version")?, "version")?,
+            }),
+            "uploaded" => {
+                Ok(WireResponse::Uploaded { dataset: u64_of(j.get("dataset")?, "dataset")? })
+            }
+            "result" => Ok(WireResponse::Result { result: result_of(j.get("result")?)? }),
+            "results" => Ok(WireResponse::Results {
+                results: j.get("results")?.as_arr()?.iter().map(result_of).collect::<Result<_>>()?,
+            }),
+            "stats_text" => {
+                Ok(WireResponse::StatsText { text: j.get("text")?.as_str()?.to_string() })
+            }
+            "shard_uploaded" => Ok(WireResponse::ShardUploaded {
+                n: u64_of(j.get("n")?, "n")?,
+                dtype: dtype_of(j.get("dtype")?)?,
+                ladder_width_hint: opt_u64_of(&j, "ladder_width_hint")?,
+                probes: probes(&j)?,
+            }),
+            "shard_init" => Ok(WireResponse::ShardInit {
+                stats: InitStats {
+                    min: f64_of(j.get("min")?, "init.min")?,
+                    max: f64_of(j.get("max")?, "init.max")?,
+                    sum: f64_of(j.get("sum")?, "init.sum")?,
+                },
+                probes: probes(&j)?,
+            }),
+            "shard_probes" => Ok(WireResponse::ShardProbes {
+                stats: j
+                    .get("stats")?
+                    .as_arr()?
+                    .iter()
+                    .map(probe_stats_of)
+                    .collect::<Result<_>>()?,
+                probes: probes(&j)?,
+            }),
+            "shard_neighbors" => Ok(WireResponse::ShardNeighbors {
+                stats: Neighbors {
+                    lower: f64_of(j.get("lower")?, "neighbors.lower")?,
+                    upper: f64_of(j.get("upper")?, "neighbors.upper")?,
+                    c_le: u64_of(j.get("c_le")?, "neighbors.c_le")?,
+                },
+                probes: probes(&j)?,
+            }),
+            "shard_interval" => Ok(WireResponse::ShardInterval {
+                counts: IntervalCounts {
+                    c_le: u64_of(j.get("c_le")?, "interval.c_le")?,
+                    c_in: u64_of(j.get("c_in")?, "interval.c_in")?,
+                    c_ge: u64_of(j.get("c_ge")?, "interval.c_ge")?,
+                },
+                probes: probes(&j)?,
+            }),
+            "shard_values" => Ok(WireResponse::ShardValues {
+                values: f64s_of(j.get("values")?, "values")?,
+                probes: probes(&j)?,
+            }),
+            "shard_len" => Ok(WireResponse::ShardLen { n: u64_of(j.get("n")?, "n")? }),
+            "shard_stats" => Ok(WireResponse::ShardStats {
+                model_json: j.get("model_json")?.as_str()?.to_string(),
+                version: u64_of(j.get("version")?, "version")?,
+            }),
+            "err" => Ok(WireResponse::Err {
+                kind: j.get("kind")?.as_str()?.to_string(),
+                message: j.get("message")?.as_str()?.to_string(),
+                retry_after_us: opt_u64_of(&j, "retry_after_us")?,
+                late_us: opt_u64_of(&j, "late_us")?,
+                peer: opt_str_of(&j, "peer")?,
+            }),
+            other => Err(Error::Parse(format!("unknown wire response tag {other:?}"))),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stats::Rng;
+
+    fn rt_req(r: WireRequest) {
+        let bytes = r.encode();
+        let back = WireRequest::decode(&bytes).expect("request decodes");
+        assert_eq!(back, r, "payload: {}", String::from_utf8_lossy(&bytes));
+    }
+
+    fn rt_resp(r: WireResponse) {
+        let bytes = r.encode();
+        let back = WireResponse::decode(&bytes).expect("response decodes");
+        assert_eq!(back, r, "payload: {}", String::from_utf8_lossy(&bytes));
+    }
+
+    #[test]
+    fn every_request_variant_roundtrips() {
+        rt_req(WireRequest::Register { worker_id: 7 });
+        rt_req(WireRequest::Heartbeat { worker_id: u32::MAX });
+        rt_req(WireRequest::Upload { data: vec![1.5, -0.25, 1e300], dtype: DType::F64 });
+        rt_req(WireRequest::Query {
+            dataset: u64::MAX,
+            spec: KSpec::Median,
+            method: None,
+            tenant: 0,
+            deadline_rel_us: None,
+        });
+        rt_req(WireRequest::Query {
+            dataset: 3,
+            spec: KSpec::Rank(usize::MAX >> 1),
+            method: Some(Method::Hybrid),
+            tenant: 42,
+            deadline_rel_us: Some(u64::MAX),
+        });
+        rt_req(WireRequest::QueryMany {
+            dataset: 9,
+            specs: vec![KSpec::Median, KSpec::Quantile(0.25), KSpec::Rank(1)],
+            method: Some(Method::Multisection),
+            tenant: 1,
+            deadline_rel_us: Some(200),
+        });
+        rt_req(WireRequest::Drop { dataset: 11 });
+        rt_req(WireRequest::Stats);
+        rt_req(WireRequest::Shutdown);
+        rt_req(WireRequest::ShardUpload {
+            dataset: 2,
+            data: vec![0.1, 0.2, 0.3],
+            dtype: DType::F32,
+        });
+        rt_req(WireRequest::ShardInit { dataset: 2 });
+        rt_req(WireRequest::ShardProbe { dataset: 2, ys: vec![-1.0, 0.0, 1.0] });
+        rt_req(WireRequest::ShardNeighbors { dataset: 2, y: 0.125 });
+        rt_req(WireRequest::ShardInterval { dataset: 2, lo: -1.0, hi: 1.0 });
+        rt_req(WireRequest::ShardCompact { dataset: 2, lo: -0.5, hi: 0.5 });
+        rt_req(WireRequest::ShardDownload { dataset: 2 });
+        rt_req(WireRequest::ShardLen { dataset: 2 });
+        rt_req(WireRequest::ShardDrop { dataset: 2 });
+        rt_req(WireRequest::ShardStatsPull);
+    }
+
+    #[test]
+    fn every_response_variant_roundtrips() {
+        rt_resp(WireResponse::Ok);
+        rt_resp(WireResponse::Registered { worker_id: 1, version: u64::MAX });
+        rt_resp(WireResponse::Uploaded { dataset: 17 });
+        rt_resp(WireResponse::Result {
+            result: QueryResult {
+                value: -0.015625,
+                k: 500,
+                method: Method::Multisection,
+                probes: 21,
+                iterations: 3,
+                wall: Duration::from_nanos(123_456_789),
+                completed_us: 42,
+            },
+        });
+        rt_resp(WireResponse::Results { results: vec![] });
+        rt_resp(WireResponse::StatsText { text: "requests=8\nerrors=0 \"quoted\"".into() });
+        rt_resp(WireResponse::ShardUploaded {
+            n: 1 << 40,
+            dtype: DType::F64,
+            ladder_width_hint: Some(15),
+            probes: 0,
+        });
+        rt_resp(WireResponse::ShardUploaded {
+            n: 3,
+            dtype: DType::F32,
+            ladder_width_hint: None,
+            probes: 0,
+        });
+        rt_resp(WireResponse::ShardInit {
+            stats: InitStats { min: -3.5, max: 7.25, sum: 11.0 },
+            probes: 1,
+        });
+        rt_resp(WireResponse::ShardProbes {
+            stats: vec![
+                ProbeStats { s_lo: 1.0, s_hi: 2.0, c_lt: 3, c_eq: 0, c_gt: u64::MAX },
+                ProbeStats { s_lo: -1.0, s_hi: 0.0, c_lt: 0, c_eq: 1, c_gt: 0 },
+            ],
+            probes: 1,
+        });
+        // ±∞ sentinels are the Neighbors contract — must survive JSON
+        rt_resp(WireResponse::ShardNeighbors {
+            stats: Neighbors { lower: f64::NEG_INFINITY, upper: f64::INFINITY, c_le: 0 },
+            probes: 1,
+        });
+        rt_resp(WireResponse::ShardInterval {
+            counts: IntervalCounts { c_le: 1, c_in: 2, c_ge: 3 },
+            probes: 1,
+        });
+        rt_resp(WireResponse::ShardValues { values: vec![0.5, 0.25], probes: 1 });
+        rt_resp(WireResponse::ShardLen { n: 4096 });
+        rt_resp(WireResponse::ShardStats {
+            model_json: "{\"schema\":\"cp-select/cost_model/v1\"}".into(),
+            version: 3,
+        });
+        rt_resp(WireResponse::Err {
+            kind: "service".into(),
+            message: "boom".into(),
+            retry_after_us: None,
+            late_us: None,
+            peer: None,
+        });
+    }
+
+    #[test]
+    fn nan_floats_survive_the_codec() {
+        let bytes = WireRequest::ShardNeighbors { dataset: 1, y: f64::NAN }.encode();
+        let back = WireRequest::decode(&bytes).expect("decodes");
+        match back {
+            WireRequest::ShardNeighbors { dataset: 1, y } => assert!(y.is_nan()),
+            other => panic!("wrong variant: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn prop_error_us_payloads_survive_roundtrip_without_width_loss() {
+        // Satellite bugfix pin: `retry_after_us`/`late_us` are u64 and may
+        // exceed 2^53, where a JSON double silently rounds. The codec
+        // ships them as decimal strings, so every u64 — including
+        // u64::MAX — must come back bit-identical, with the error type
+        // preserved.
+        let mut rng = Rng::seeded(505);
+        let mut cases: Vec<u64> = (0..200).map(|_| rng.next_u64()).collect();
+        cases.extend([0, 1, (1 << 53) - 1, 1 << 53, (1 << 53) + 1, u64::MAX - 1, u64::MAX]);
+        for us in cases {
+            let e = Error::Overloaded { retry_after_us: us };
+            let bytes = WireResponse::from_error(&e).encode();
+            let back = WireResponse::decode(&bytes)
+                .expect("decodes")
+                .into_error()
+                .expect("is an error");
+            match back {
+                Error::Overloaded { retry_after_us } => assert_eq!(retry_after_us, us),
+                other => panic!("overloaded became {other:?}"),
+            }
+
+            let e = Error::DeadlineExceeded { late_us: us };
+            let bytes = WireResponse::from_error(&e).encode();
+            let back = WireResponse::decode(&bytes)
+                .expect("decodes")
+                .into_error()
+                .expect("is an error");
+            match back {
+                Error::DeadlineExceeded { late_us } => assert_eq!(late_us, us),
+                other => panic!("deadline became {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn disconnected_error_keeps_its_peer_across_the_wire() {
+        let e = Error::Disconnected { peer: "worker-2@127.0.0.1:7171".into() };
+        let back = WireResponse::decode(&WireResponse::from_error(&e).encode())
+            .expect("decodes")
+            .into_error()
+            .expect("is an error");
+        match back {
+            Error::Disconnected { peer } => assert_eq!(peer, "worker-2@127.0.0.1:7171"),
+            other => panic!("disconnected became {other:?}"),
+        }
+    }
+
+    #[test]
+    fn prop_f64_numbers_roundtrip_bit_exact() {
+        // shortest-display + strict parse must be the identity on finite
+        // doubles, including subnormals and huge magnitudes
+        let mut rng = Rng::seeded(506);
+        let mut cases: Vec<f64> = Vec::new();
+        for _ in 0..300 {
+            let bits = rng.next_u64();
+            let x = f64::from_bits(bits);
+            if x.is_finite() {
+                cases.push(x);
+            }
+        }
+        cases.extend([0.0, -0.0, f64::MIN_POSITIVE, f64::MAX, f64::MIN, 5e-324, 0.1, 1e300]);
+        for x in cases {
+            let bytes = WireRequest::ShardNeighbors { dataset: 0, y: x }.encode();
+            match WireRequest::decode(&bytes).expect("decodes") {
+                WireRequest::ShardNeighbors { y, .. } => {
+                    assert_eq!(y.to_bits(), x.to_bits(), "{x:?} mangled by the codec")
+                }
+                other => panic!("wrong variant: {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn frames_roundtrip_and_guard_against_corruption() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, b"hello").expect("write");
+        write_frame(&mut buf, b"").expect("write empty");
+        let mut r = &buf[..];
+        assert_eq!(read_frame(&mut r).expect("frame 1"), b"hello");
+        assert_eq!(read_frame(&mut r).expect("frame 2"), b"");
+        assert!(read_frame(&mut r).is_err(), "EOF must error, not hang");
+
+        // oversized header: rejected before allocating
+        let mut huge = Vec::new();
+        huge.extend_from_slice(&(u32::MAX).to_be_bytes());
+        huge.extend_from_slice(b"x");
+        let err = read_frame(&mut &huge[..]).expect_err("oversized header");
+        assert_eq!(err.kind(), std::io::ErrorKind::InvalidData);
+
+        // truncated payload: read_exact reports UnexpectedEof
+        let mut trunc = Vec::new();
+        trunc.extend_from_slice(&8u32.to_be_bytes());
+        trunc.extend_from_slice(b"abc");
+        let err = read_frame(&mut &trunc[..]).expect_err("truncated payload");
+        assert_eq!(err.kind(), std::io::ErrorKind::UnexpectedEof);
+    }
+
+    #[test]
+    fn garbage_payloads_decode_to_parse_errors() {
+        for bad in [
+            &b"\xff\xfe"[..],
+            b"not json",
+            b"{}",
+            b"{\"op\":\"no_such_op\"}",
+            b"{\"op\":\"query\",\"dataset\":7}",
+            b"{\"op\":\"query\",\"dataset\":\"7\",\"spec\":{\"kind\":\"median\"},\"tenant\":\"0\",\"deadline_rel_us\":\"-1\"}",
+        ] {
+            let e = WireRequest::decode(bad).expect_err("must not decode");
+            assert!(matches!(e, Error::Parse(_)), "{e:?}");
+        }
+        assert!(WireResponse::decode(b"{\"re\":\"nope\"}").is_err());
+    }
+}

@@ -125,7 +125,14 @@ impl Metrics {
                 return 1u64 << (i + 1);
             }
         }
-        u64::MAX
+        // The scan can fall through when recorders race it: `count()` and
+        // the per-bucket loads are separate Relaxed reads, so `target` may
+        // be computed from increments the scan then misses (and for huge n
+        // the f64 rounding of q*n can overshoot the true sum). The honest
+        // answer is the top bucket edge — never `u64::MAX`, which would
+        // flow into `Error::Overloaded { retry_after_us }` as an absurd
+        // backoff hint.
+        1u64 << BUCKETS
     }
 
     /// Record one adaptive-controller decision: refresh the window gauge
@@ -345,6 +352,45 @@ mod tests {
         assert_eq!(s.evictions, 4);
         let text = s.to_string();
         assert!(text.contains("overload(shed=3 deadlines=2 faults=1 evictions=4 depth=0)"));
+    }
+
+    #[test]
+    fn quantile_never_returns_sentinel_under_recorder_race() {
+        // Regression for the fall-through at the end of the bucket scan:
+        // recorders racing the reader could make it return u64::MAX, which
+        // flowed into `Error::Overloaded { retry_after_us }` as an absurd
+        // backoff hint. The fall-through is now clamped to the top bucket
+        // edge, so every value the reader observes is a sane upper bound.
+        use std::sync::atomic::AtomicBool;
+        use std::sync::Arc;
+
+        let m = Arc::new(Metrics::new());
+        let stop = Arc::new(AtomicBool::new(false));
+        let recorders: Vec<_> = (0..3)
+            .map(|t| {
+                let m = Arc::clone(&m);
+                let stop = Arc::clone(&stop);
+                std::thread::spawn(move || {
+                    let mut us = 1u64;
+                    while !stop.load(Ordering::Relaxed) {
+                        m.record_latency(Duration::from_micros(us));
+                        us = us.wrapping_mul(7).wrapping_add(t) % 1_000_000 + 1;
+                    }
+                })
+            })
+            .collect();
+        let top_edge = 1u64 << BUCKETS;
+        for _ in 0..20_000 {
+            let p99 = m.latency_quantile_us(0.99);
+            assert_ne!(p99, u64::MAX, "sentinel leaked out of the bucket scan");
+            assert!(p99 <= top_edge, "quantile {p99} above the top bucket edge");
+        }
+        stop.store(true, Ordering::Relaxed);
+        for r in recorders {
+            r.join().expect("recorder thread panicked");
+        }
+        // sanity: with samples present the quantile is still a real edge
+        assert!(m.latency_quantile_us(0.5) >= 1);
     }
 
     #[test]

@@ -7,7 +7,9 @@
 
 pub mod backend;
 pub mod controller;
+pub(crate) mod dispatch;
 pub mod eviction;
+pub mod messages;
 pub mod metrics;
 mod planner;
 pub mod service;

@@ -38,26 +38,25 @@
 //!   via the [`BackendFactory`].
 
 use std::collections::HashMap;
-use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TryRecvError, TrySendError};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::Duration;
 
 use super::backend::BackendFactory;
-use super::controller::{AdaptiveWindow, WindowController};
+use super::controller::AdaptiveWindow;
+use super::dispatch::worker_loop;
 use super::metrics::Metrics;
-use super::planner::{plan_batch, GroupMember, Step};
 use crate::select::gpu_model::CostModelPool;
 use crate::select::objective::DType;
-use crate::select::{self, Method};
+use crate::select::Method;
 use crate::testkit::Clock;
 use crate::util::sync::{OrderedMutex, RANK_ADMISSION};
 use crate::{Error, Result};
 
 /// What to select.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub enum KSpec {
     /// The paper's median, `x_([(n+1)/2])`.
     Median,
@@ -89,7 +88,7 @@ impl KSpec {
 }
 
 /// Answer to a query.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct QueryResult {
     pub value: f64,
     pub k: usize,
@@ -277,7 +276,7 @@ impl Request {
     /// The dataset this request could share a fused ladder on, if any.
     /// (Probe-based queries can share; uploads, drops and download-method
     /// queries cannot — holding them open buys nothing.)
-    fn coalescible_dataset(&self) -> Option<DatasetId> {
+    pub(crate) fn coalescible_dataset(&self) -> Option<DatasetId> {
         match self {
             Request::Query { id, method, .. } if !method.needs_download() => Some(*id),
             Request::QueryMany { id, .. } => Some(*id),
@@ -285,7 +284,7 @@ impl Request {
         }
     }
 
-    fn coalescible(&self) -> bool {
+    pub(crate) fn coalescible(&self) -> bool {
         self.coalescible_dataset().is_some()
     }
 }
@@ -659,552 +658,6 @@ impl Drop for SelectionService {
 
 fn recv_reply<T>(rx: &Receiver<T>) -> Result<T> {
     rx.recv().map_err(|_| Error::Service("worker dropped the reply channel".into()))
-}
-
-/// Collect one batch: the first request is already in `batch`; keep
-/// receiving until the window deadline passes (on `clock` time — virtual
-/// in tests, so the wait is a parked condvar rather than a sleep), the cap
-/// fills, or a shutdown arrives. The caller passes `window = ZERO` for
-/// non-coalescible heads, which reduces this to draining what is queued.
-fn collect_batch(
-    rx: &Receiver<Request>,
-    batch: &mut Vec<Request>,
-    window: Duration,
-    cap: usize,
-    clock: &Clock,
-) {
-    if matches!(batch.last(), Some(Request::Shutdown)) {
-        return;
-    }
-    let deadline = clock.now_us().saturating_add(window.as_micros() as u64);
-    while batch.len() < cap {
-        match rx.try_recv() {
-            Ok(r) => {
-                let stop = matches!(r, Request::Shutdown);
-                batch.push(r);
-                if stop {
-                    return;
-                }
-                continue;
-            }
-            Err(TryRecvError::Disconnected) => return,
-            Err(TryRecvError::Empty) => {}
-        }
-        if clock.now_us() >= deadline {
-            return;
-        }
-        match clock.recv_deadline(rx, deadline) {
-            Ok(r) => {
-                let stop = matches!(r, Request::Shutdown);
-                batch.push(r);
-                if stop {
-                    return;
-                }
-            }
-            Err(_) => return, // timeout or disconnect both close the batch
-        }
-    }
-}
-
-fn worker_loop(
-    worker_idx: usize,
-    rx: Receiver<Request>,
-    factory: BackendFactory,
-    metrics: Arc<Metrics>,
-    opts: CoordinatorOptions,
-    clock: Clock,
-    pool: Arc<CostModelPool>,
-) {
-    let mut backend = match factory(worker_idx) {
-        Ok(b) => b,
-        Err(e) => {
-            // Fail every request with a clear error rather than panicking.
-            while let Ok(req) = rx.recv() {
-                match req {
-                    Request::Upload { reply, .. } => {
-                        let _ = reply.send(Err(Error::Service(format!(
-                            "backend init failed: {e}"
-                        ))));
-                    }
-                    Request::Query { reply, tenant, .. } => {
-                        let _ = reply.send(Err(Error::Service(format!(
-                            "backend init failed: {e}"
-                        ))));
-                        metrics.tenant_exit(tenant);
-                    }
-                    Request::QueryMany { reply, tenant, .. } => {
-                        let _ = reply.send(Err(Error::Service(format!(
-                            "backend init failed: {e}"
-                        ))));
-                        metrics.tenant_exit(tenant);
-                    }
-                    Request::Drop { reply, .. } => {
-                        if let Some(reply) = reply {
-                            let _ = reply.send(Err(Error::Service(format!(
-                                "backend init failed: {e}"
-                            ))));
-                        }
-                    }
-                    Request::Shutdown => return,
-                }
-            }
-            return;
-        }
-    };
-
-    // Load-adaptive batching window (None = fixed `opts.batch_window`).
-    let mut controller = opts.adaptive.map(WindowController::new);
-    loop {
-        let mut batch: Vec<Request> = Vec::new();
-        match rx.recv() {
-            Ok(r) => batch.push(r),
-            Err(_) => break,
-        }
-        // The window only opens on coalescible heads (holding an
-        // upload/drop/download query buys no sharing).
-        let head_coalescible = batch.last().map(Request::coalescible).unwrap_or(false);
-        let window = if head_coalescible {
-            controller.as_ref().map(|c| c.window()).unwrap_or(opts.batch_window)
-        } else {
-            Duration::ZERO
-        };
-        collect_batch(&rx, &mut batch, window, opts.batch_cap, &clock);
-        if batch.len() > 1 {
-            metrics.batched.fetch_add(batch.len() as u64 - 1, Ordering::Relaxed);
-        }
-        // Feed the controller what its window actually caught, BEFORE
-        // executing: replies thus always see the post-decision gauge. The
-        // widen signal is the max *same-dataset* coalescible count — only
-        // same-dataset requests can share a ladder, so two lone queries of
-        // different datasets are idle traffic, not coalescable concurrency.
-        if head_coalescible {
-            if let Some(c) = controller.as_mut() {
-                let mut per_dataset: HashMap<DatasetId, usize> = HashMap::new();
-                for id in batch.iter().filter_map(Request::coalescible_dataset) {
-                    *per_dataset.entry(id).or_insert(0) += 1;
-                }
-                let coalescable = per_dataset.values().copied().max().unwrap_or(0);
-                let decision = c.observe_batch(coalescable, metrics.latency_quantile_us(0.99));
-                metrics.note_window(c.window_us(), decision);
-            }
-        }
-        let (steps, shutdown) = plan_batch(batch);
-        for step in steps {
-            execute_step(backend.as_mut(), step, &metrics, &pool, &clock);
-        }
-        // Pressure-driven eviction accounting: backends that cap residency
-        // (e.g. [`super::LruBackend`]) report what each batch pushed out.
-        // Same fault boundary as every other backend call: a panicking
-        // accounting hook must not kill the worker.
-        let evicted = catch_unwind(AssertUnwindSafe(|| backend.take_evictions()))
-            .unwrap_or_else(|_| {
-                metrics.worker_faults.fetch_add(1, Ordering::Relaxed);
-                0
-            });
-        if evicted > 0 {
-            metrics.evictions.fetch_add(evicted, Ordering::Relaxed);
-        }
-        if shutdown {
-            break;
-        }
-    }
-}
-
-/// Execute one planned step against the worker's backend. Backend panics
-/// are caught here (and in the group path): a fault fails the affected
-/// repliers with a typed error and bumps `worker_faults`, but the worker
-/// thread — and every other dataset it serves — keeps running.
-fn execute_step(
-    backend: &mut dyn super::backend::DatasetBackend,
-    step: Step,
-    metrics: &Metrics,
-    pool: &CostModelPool,
-    clock: &Clock,
-) {
-    match step {
-        Step::Upload { id, data, dtype, reply } => {
-            let r = catch_unwind(AssertUnwindSafe(|| backend.upload(id, &data, dtype)))
-                .unwrap_or_else(|p| {
-                    metrics.worker_faults.fetch_add(1, Ordering::Relaxed);
-                    Err(Error::Service(format!(
-                        "worker fault uploading dataset {id}: {}",
-                        panic_msg(&p)
-                    )))
-                });
-            if r.is_err() {
-                metrics.errors.fetch_add(1, Ordering::Relaxed);
-            }
-            let _ = reply.send(r);
-        }
-        Step::Drop { id, reply } => {
-            let r = catch_unwind(AssertUnwindSafe(|| backend.drop_dataset(id))).map_err(|p| {
-                metrics.worker_faults.fetch_add(1, Ordering::Relaxed);
-                Error::Service(format!("worker fault dropping dataset {id}: {}", panic_msg(&p)))
-            });
-            if let Some(reply) = reply {
-                let _ = reply.send(match r {
-                    Ok(true) => Ok(()),
-                    Ok(false) => Err(Error::Service(format!("unknown dataset {id}"))),
-                    Err(e) => Err(e),
-                });
-            }
-        }
-        Step::Single { id, k, method, tenant, deadline_us, reply } => {
-            answer_single(backend, id, k, method, tenant, deadline_us, &reply, metrics, clock);
-        }
-        Step::Group { id, members } => execute_group(backend, id, members, metrics, pool, clock),
-    }
-}
-
-/// Best-effort rendering of a caught panic payload.
-fn panic_msg(p: &(dyn std::any::Any + Send)) -> String {
-    if let Some(s) = p.downcast_ref::<&str>() {
-        (*s).to_string()
-    } else if let Some(s) = p.downcast_ref::<String>() {
-        s.clone()
-    } else {
-        "panic".to_string()
-    }
-}
-
-/// Answer one coalesce group: a lone single runs its requested method; any
-/// larger (or `QueryMany`-bearing) group solves through shared fused
-/// ladder rounds and replies are distributed back in member order.
-fn execute_group(
-    backend: &mut dyn super::backend::DatasetBackend,
-    id: DatasetId,
-    members: Vec<GroupMember>,
-    metrics: &Metrics,
-    pool: &CostModelPool,
-    clock: &Clock,
-) {
-    if let [GroupMember::Single { .. }] = members.as_slice() {
-        if let Some(GroupMember::Single { k, method, tenant, deadline_us, reply }) =
-            members.into_iter().next()
-        {
-            answer_single(backend, id, k, method, tenant, deadline_us, &reply, metrics, clock);
-        }
-        return;
-    }
-    let total_specs: usize = members.iter().map(|m| m.spec_count()).sum();
-    if total_specs == 0 {
-        // empty QueryMany is answered client-side; defensive only
-        for m in members {
-            if let GroupMember::Many { reply, tenant, .. } = m {
-                let _ = reply.send(Ok(Vec::new()));
-                metrics.tenant_exit(tenant);
-            }
-        }
-        return;
-    }
-    let specs: Vec<KSpec> = members
-        .iter()
-        .flat_map(|m| match m {
-            GroupMember::Single { k, .. } => std::slice::from_ref(k),
-            GroupMember::Many { specs, .. } => specs.as_slice(),
-        })
-        .copied()
-        .collect();
-    // The shared run cancels (at pass boundaries) only when EVERY member
-    // carries a deadline — a no-deadline member's work must never be
-    // abandoned — and then the latest deadline is the binding one.
-    let cancel_at: Option<u64> = members
-        .iter()
-        .map(|m| m.deadline_us())
-        .collect::<Option<Vec<_>>>()
-        .and_then(|ds| ds.into_iter().max());
-    let t0_us = clock.now_us();
-    let mut results =
-        catch_unwind(AssertUnwindSafe(|| solve_group(backend, id, &specs, pool, clock, cancel_at)))
-            .unwrap_or_else(|p| {
-                metrics.worker_faults.fetch_add(1, Ordering::Relaxed);
-                let msg = panic_msg(&p);
-                specs
-                    .iter()
-                    .map(|_| {
-                        Err(Error::Service(format!("worker fault solving dataset {id}: {msg}")))
-                    })
-                    .collect()
-            });
-    // Per-member deadline override: a member whose own deadline passed
-    // while the shared run served the rest reports DeadlineExceeded even
-    // though its value happened to resolve.
-    let now = clock.now_us();
-    // Run wall time on the service clock: under a virtual clock this is
-    // exactly the virtually-elapsed time, so the p99 feeding the SLA
-    // clamp is deterministic (clock_discipline lint rule).
-    let wall = Duration::from_micros(now.saturating_sub(t0_us));
-    let mut idx = 0usize;
-    for m in &members {
-        let deadline = m.deadline_us();
-        for _ in 0..m.spec_count() {
-            if let (Some(d), Some(slot)) = (deadline, results.get_mut(idx)) {
-                if now > d && slot.is_ok() {
-                    *slot = Err(Error::DeadlineExceeded { late_us: now - d });
-                }
-            }
-            idx += 1;
-        }
-    }
-    if total_specs > 1 {
-        metrics.coalesced.fetch_add(total_specs as u64, Ordering::Relaxed);
-    }
-    account_run(metrics, wall, now, &mut results);
-    let mut it = results.into_iter();
-    for m in members {
-        match m {
-            GroupMember::Single { tenant, reply, .. } => {
-                let _ = reply.send(it.next().unwrap_or_else(|| mismatch_error(id, metrics)));
-                metrics.tenant_exit(tenant);
-            }
-            GroupMember::Many { specs, tenant, reply, .. } => {
-                let mut ok = Vec::with_capacity(specs.len());
-                let mut first_err = None;
-                for _ in 0..specs.len() {
-                    match it.next().unwrap_or_else(|| mismatch_error(id, metrics)) {
-                        Ok(q) => ok.push(q),
-                        Err(e) => {
-                            if first_err.is_none() {
-                                first_err = Some(e);
-                            }
-                        }
-                    }
-                }
-                let _ = reply.send(match first_err {
-                    None => Ok(ok),
-                    Some(e) => Err(e),
-                });
-                metrics.tenant_exit(tenant);
-            }
-        }
-    }
-}
-
-/// A plan/result count mismatch is a coordinator bug; it must fail the
-/// affected repliers with a typed error — never panic the worker and
-/// strand every waiting channel on the queue behind it.
-fn mismatch_error(id: DatasetId, metrics: &Metrics) -> Result<QueryResult> {
-    metrics.errors.fetch_add(1, Ordering::Relaxed);
-    Err(Error::Service(format!(
-        "internal: plan/result count mismatch for dataset {id}; batch failed"
-    )))
-}
-
-/// Per-run service accounting shared by every reply path: ONE latency
-/// sample per executed run — a coalesced group is one run, so recording
-/// its wall time once keeps the histogram a distribution over runs
-/// instead of N copies of each shared wall time inflating mean/p50/p99 —
-/// then per-query counting: every member counts toward `queries`,
-/// contributes its probe share, and is stamped with the run's wall time.
-fn account_run(
-    metrics: &Metrics,
-    wall: Duration,
-    now_us: u64,
-    results: &mut [Result<QueryResult>],
-) {
-    metrics.record_latency(wall);
-    for r in results.iter_mut() {
-        metrics.queries.fetch_add(1, Ordering::Relaxed);
-        match r {
-            Ok(q) => {
-                q.wall = wall;
-                q.completed_us = now_us;
-                metrics.probes.fetch_add(q.probes, Ordering::Relaxed);
-            }
-            Err(Error::DeadlineExceeded { .. }) => {
-                metrics.deadline_exceeded.fetch_add(1, Ordering::Relaxed);
-            }
-            Err(_) => {
-                metrics.errors.fetch_add(1, Ordering::Relaxed);
-            }
-        }
-    }
-}
-
-#[allow(clippy::too_many_arguments)]
-fn answer_single(
-    backend: &mut dyn super::backend::DatasetBackend,
-    id: DatasetId,
-    k: KSpec,
-    method: Method,
-    tenant: u32,
-    deadline_us: Option<u64>,
-    reply: &SyncSender<Result<QueryResult>>,
-    metrics: &Metrics,
-    clock: &Clock,
-) {
-    let now = clock.now_us();
-    let mut out = match deadline_us.filter(|&d| now > d) {
-        // expired while queued: answer typed, spend nothing on the device
-        Some(d) => Err(Error::DeadlineExceeded { late_us: now - d }),
-        None => catch_unwind(AssertUnwindSafe(|| run_query(backend, id, k, method, clock, deadline_us)))
-            .unwrap_or_else(|p| {
-                metrics.worker_faults.fetch_add(1, Ordering::Relaxed);
-                Err(Error::Service(format!(
-                    "worker fault solving dataset {id}: {}",
-                    panic_msg(&p)
-                )))
-            }),
-    };
-    let done_us = clock.now_us();
-    let wall = Duration::from_micros(done_us.saturating_sub(now));
-    account_run(metrics, wall, done_us, std::slice::from_mut(&mut out));
-    let _ = reply.send(out);
-    metrics.tenant_exit(tenant);
-}
-
-/// Answer a group of same-dataset specs through shared fused ladder rounds
-/// (`select::multisection::multi_order_statistics`). Per-item results align
-/// positionally; an invalid spec fails only its own slot, and the shared
-/// reduction count is distributed across the group so per-query `probes`
-/// still sum to the real total. The run plans with a snapshot of the
-/// shared [`CostModelPool`] (so every worker rides the fleet's pooled
-/// measurements) and feeds its pass timing back into the pool.
-fn solve_group(
-    backend: &mut dyn super::backend::DatasetBackend,
-    id: DatasetId,
-    specs: &[KSpec],
-    pool: &CostModelPool,
-    clock: &Clock,
-    cancel_at: Option<u64>,
-) -> Vec<Result<QueryResult>> {
-    let n = match backend.dataset_len(id) {
-        Some(n) => n,
-        None => {
-            // Route the miss through the backend's own evaluator error so
-            // capped backends report their typed re-upload contract.
-            let msg = match backend.evaluator(id) {
-                Err(e) => e.to_string(),
-                Ok(_) => format!("unknown dataset {id}"),
-            };
-            return specs.iter().map(|_| Err(Error::Service(msg.clone()))).collect();
-        }
-    };
-    let ranks: Vec<Result<usize>> = specs.iter().map(|k| k.rank_for(n)).collect();
-    let valid: Vec<usize> = ranks.iter().filter_map(|r| r.as_ref().ok().copied()).collect();
-    let solved: Result<(Vec<f64>, usize, u64)> = if valid.is_empty() {
-        Ok((Vec::new(), 0, 0))
-    } else {
-        (|| {
-            let ev = backend.evaluator(id)?;
-            let probes0 = ev.probes();
-            // Shared rounds ride the pooled measured pass-cost model
-            // (seeded to the evaluator's native ladder width).
-            let model = pool.snapshot();
-            let opts = select::MultisectOptions::for_evaluator_with(&*ev, &model);
-            let t0_us = clock.now_us();
-            // Cooperative deadline: polled at every pass boundary, so a
-            // run that outlives `cancel_at` stops before its next fused
-            // pass rather than running to convergence.
-            let mut cancel = || match cancel_at {
-                Some(d) => {
-                    let now = clock.now_us();
-                    if now > d {
-                        Some(Error::DeadlineExceeded { late_us: now - d })
-                    } else {
-                        None
-                    }
-                }
-                None => None,
-            };
-            let out = select::multisection::multi_order_statistics_cancellable(
-                ev, &valid, &opts, &mut cancel,
-            )?;
-            let reductions = ev.probes() - probes0;
-            let wall = Duration::from_micros(clock.now_us().saturating_sub(t0_us));
-            pool.observe_run(out.passes, out.rungs, reductions, n, wall);
-            Ok((out.values, out.passes, reductions))
-        })()
-    };
-    match solved {
-        Ok((values, passes, total)) => {
-            let m = valid.len().max(1) as u64;
-            let base = total / m;
-            let mut rem = total % m;
-            let mut vi = 0usize;
-            ranks
-                .into_iter()
-                .map(|r| match r {
-                    Err(e) => Err(e),
-                    Ok(rank) => {
-                        let value = values[vi];
-                        vi += 1;
-                        let probes = base
-                            + if rem > 0 {
-                                rem -= 1;
-                                1
-                            } else {
-                                0
-                            };
-                        Ok(QueryResult {
-                            value,
-                            k: rank,
-                            // what actually ran (see QueryResult::method)
-                            method: Method::Multisection,
-                            probes,
-                            iterations: passes,
-                            wall: Duration::ZERO, // filled by account_run
-                            completed_us: 0,      // filled by account_run
-                        })
-                    }
-                })
-                .collect()
-        }
-        Err(e) => ranks
-            .into_iter()
-            .map(|r| match r {
-                Err(re) => Err(re),
-                // keep the deadline type visible to clients; everything
-                // else degrades to a service error string
-                Ok(_) => Err(match &e {
-                    Error::DeadlineExceeded { late_us } => {
-                        Error::DeadlineExceeded { late_us: *late_us }
-                    }
-                    other => Error::Service(other.to_string()),
-                }),
-            })
-            .collect(),
-    }
-}
-
-fn run_query(
-    backend: &mut dyn super::backend::DatasetBackend,
-    id: DatasetId,
-    k: KSpec,
-    method: Method,
-    clock: &Clock,
-    deadline_us: Option<u64>,
-) -> Result<QueryResult> {
-    // Resolve the evaluator FIRST so a missing dataset reports the
-    // backend's own typed message — a capped backend ([`super::LruBackend`])
-    // says "evicted …; re-upload it", the contract clients act on.
-    let ev = backend.evaluator(id)?;
-    let n = ev.n();
-    let rank = k.rank_for(n)?;
-    // Cooperative deadline: polled at every pass boundary, so a
-    // single-query run that outlives its deadline stops before its next
-    // fused reduction instead of running to convergence.
-    let mut cancel = || match deadline_us {
-        Some(d) => {
-            let now = clock.now_us();
-            if now > d {
-                Some(Error::DeadlineExceeded { late_us: now - d })
-            } else {
-                None
-            }
-        }
-        None => None,
-    };
-    let r = select::order_statistic_cancellable(ev, rank, method, &mut cancel)?;
-    Ok(QueryResult {
-        value: r.value,
-        k: rank,
-        method,
-        probes: r.probes,
-        iterations: r.iterations,
-        wall: Duration::ZERO, // filled by account_run
-        completed_us: 0,      // filled by account_run
-    })
 }
 
 /// Batch-of-datasets convenience: a `HashMap` of names to ids.

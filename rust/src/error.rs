@@ -43,6 +43,15 @@ pub enum Error {
         late_us: u64,
     },
 
+    /// A cluster peer (remote worker or client connection) went away
+    /// mid-conversation: EOF, reset pipe, or a closed loopback channel.
+    /// Fails only the in-flight batch — the same isolation contract a
+    /// backend panic gets from `catch_unwind` — and the peer may
+    /// re-register afterwards. `peer` names the other end for logs.
+    Disconnected {
+        peer: String,
+    },
+
     /// I/O errors with path context.
     Io {
         path: String,
@@ -64,6 +73,9 @@ impl fmt::Display for Error {
             }
             Error::DeadlineExceeded { late_us } => {
                 write!(f, "deadline exceeded: abandoned {late_us}us past the deadline")
+            }
+            Error::Disconnected { peer } => {
+                write!(f, "disconnected: lost cluster peer {peer} mid-conversation")
             }
             Error::Io { path, source } => write!(f, "io: {path}: {source}"),
         }
@@ -116,6 +128,7 @@ impl fmt::Display for ErrorKind {
             ErrorKind::Service => "service",
             ErrorKind::Overloaded => "overloaded",
             ErrorKind::DeadlineExceeded => "deadline-exceeded",
+            ErrorKind::Disconnected => "disconnected",
             ErrorKind::Io => "io",
         };
         f.write_str(s)
@@ -133,6 +146,7 @@ pub enum ErrorKind {
     Service,
     Overloaded,
     DeadlineExceeded,
+    Disconnected,
     Io,
 }
 
@@ -147,6 +161,7 @@ impl Error {
             Error::Service(_) => ErrorKind::Service,
             Error::Overloaded { .. } => ErrorKind::Overloaded,
             Error::DeadlineExceeded { .. } => ErrorKind::DeadlineExceeded,
+            Error::Disconnected { .. } => ErrorKind::Disconnected,
             Error::Io { .. } => ErrorKind::Io,
         }
     }
@@ -181,6 +196,14 @@ mod tests {
         assert_eq!(e.kind(), ErrorKind::DeadlineExceeded);
         assert!(e.to_string().contains("40us past the deadline"));
         assert_eq!(ErrorKind::DeadlineExceeded.to_string(), "deadline-exceeded");
+    }
+
+    #[test]
+    fn disconnected_variant_is_typed() {
+        let e = Error::Disconnected { peer: "worker-1".into() };
+        assert_eq!(e.kind(), ErrorKind::Disconnected);
+        assert!(e.to_string().contains("worker-1"));
+        assert_eq!(ErrorKind::Disconnected.to_string(), "disconnected");
     }
 
     #[test]

@@ -416,6 +416,30 @@ pub struct OverloadBench {
     pub fairness_ratio: f64,
 }
 
+/// The out-of-process cluster experiment: the same 8-client windowed burst
+/// as [`WindowBench`], but answered over the cluster message layer — the
+/// service's backends are [`crate::cluster::RemoteBackend`]s talking to
+/// loopback worker serve loops, so every probe ladder crosses the wire.
+/// Acceptance is *parity*: identical answers (bit-exact) and identical
+/// fused-reduction count to the in-process window run, because the wire
+/// path enters through the same `BackendFactory` seam.
+#[derive(Debug, Clone)]
+pub struct ClusterBench {
+    pub queries: usize,
+    /// Remote worker serve loops (and coordinator worker threads, 1:1).
+    pub workers: usize,
+    /// Wire used for the experiment (`"loopback"` here; the CI smoke job
+    /// repeats the scenario over real TCP processes).
+    pub transport: &'static str,
+    /// Coordinator `coalesced` metric after the burst.
+    pub coalesced: u64,
+    /// Total fused reductions the burst cost (parity target: the
+    /// [`WindowBench`] count on the same data).
+    pub fused_reductions: u64,
+    /// Every cluster answer was bit-identical to the host-oracle median.
+    pub value_parity: bool,
+}
+
 #[derive(Debug, Clone)]
 pub struct SelectBench {
     pub rows: Vec<SelectBenchRow>,
@@ -423,6 +447,7 @@ pub struct SelectBench {
     pub window: WindowBench,
     pub adaptive: AdaptiveWindowBench,
     pub overload: OverloadBench,
+    pub cluster: ClusterBench,
     /// Native fused-ladder width advertised by the benched evaluator
     /// (`None` on the host oracle): the adaptive probes-per-pass the
     /// multisection rows actually ran with on a device backend.
@@ -546,6 +571,7 @@ pub fn bench_select(
     let window = bench_window_coalescing(&data, 8, 250_000)?;
     let adaptive = bench_adaptive_window(&data, 8, 250_000)?;
     let overload = bench_overload()?;
+    let cluster = bench_cluster(&data, 8, 2)?;
 
     Ok(SelectBench {
         rows,
@@ -557,6 +583,7 @@ pub fn bench_select(
         window,
         adaptive,
         overload,
+        cluster,
         ladder_width_hint,
         host: wall::HostFingerprint::detect(),
         bin_sweep: None,
@@ -844,6 +871,104 @@ fn bench_adaptive_window(
     })
 }
 
+/// Drive the cluster-parity experiment (see [`ClusterBench`]): register
+/// `workers` loopback serve loops (each a [`crate::cluster::worker::serve`]
+/// thread over a local host backend) in a cluster
+/// [`Registry`](crate::cluster::coordinator::Registry), start the ordinary
+/// service with [`crate::cluster::RemoteBackend`]s as its backends, and
+/// replay the [`bench_window_coalescing`] burst: `clients` single-shot
+/// medians against one dataset under a frozen virtual clock, so the
+/// `batch_cap` closes the window deterministically. Every probe ladder the
+/// coalesced plan issues crosses the wire as one `ShardProbe` frame;
+/// parity with the in-process run is the acceptance.
+fn bench_cluster(data: &[f64], clients: usize, workers: usize) -> Result<ClusterBench> {
+    use crate::cluster::coordinator::Registry;
+    use crate::cluster::transport::loopback_pair;
+    use crate::cluster::{serve, RemoteBackend, ServeExit};
+    use crate::coordinator::messages::WireRequest;
+    use crate::coordinator::{
+        CoordinatorOptions, CostModelPool, HostBackend, KSpec, SelectionService,
+    };
+    use crate::select::PassCostModel;
+
+    let (clock, _vc) = crate::testkit::Clock::manual();
+    let registry = Registry::new();
+    let mut serves = Vec::with_capacity(workers);
+    for w in 0..workers as u32 {
+        let (coord_side, mut worker_side) = loopback_pair(&format!("worker-{w}"), "coordinator");
+        let version = registry.register(w, Box::new(coord_side), 0)?;
+        let w_clock = clock.clone();
+        serves.push(std::thread::spawn(move || {
+            // consume the Registered ack `register` already sent
+            let _ = worker_side.recv();
+            let mut backend = HostBackend::default();
+            let mut stats = PassCostModel::seeded();
+            serve(&mut worker_side, &mut backend, &mut stats, version, &w_clock)
+        }));
+    }
+    let pool = CostModelPool::seeded();
+    let factory = RemoteBackend::factory(
+        std::sync::Arc::clone(&registry),
+        std::sync::Arc::clone(&pool),
+        workers as u32,
+        std::time::Duration::from_secs(10),
+    );
+    let svc = SelectionService::start_full(
+        workers,
+        64,
+        Method::Multisection,
+        factory,
+        CoordinatorOptions {
+            batch_window: std::time::Duration::from_micros(250_000),
+            batch_cap: clients,
+            ..Default::default()
+        },
+        clock,
+        pool,
+    )?;
+    let want = crate::stats::sorted_median(data);
+    let id = svc.upload(data.to_vec(), DType::F64)?;
+    let p0 = svc.metrics.snapshot().probes;
+    let rxs: Vec<_> = (0..clients)
+        .map(|_| svc.query_async(id, KSpec::Median, Method::Multisection))
+        .collect::<Result<_>>()?;
+    let mut value_parity = true;
+    for rx in rxs {
+        let dropped = || crate::Error::Service("cluster-bench reply dropped".into());
+        let r = rx.recv().map_err(|_| dropped())??;
+        value_parity &= r.value.to_bits() == want.to_bits();
+    }
+    let snap = svc.metrics.snapshot();
+    let bench = ClusterBench {
+        queries: clients,
+        workers,
+        transport: "loopback",
+        coalesced: snap.coalesced,
+        fused_reductions: snap.probes - p0,
+        value_parity,
+    };
+    // Service shutdown parks every worker connection back in the registry;
+    // draining it propagates shutdown to the serve loops (same sequence as
+    // `cluster::run_coordinator`).
+    svc.shutdown();
+    for mut conn in registry.drain_conns() {
+        if conn.send(&WireRequest::Shutdown.encode()).is_ok() {
+            let _ = conn.recv();
+        }
+    }
+    for h in serves {
+        let exit = h
+            .join()
+            .map_err(|_| crate::Error::Service("cluster-bench serve thread panicked".into()))?;
+        if exit != ServeExit::Shutdown {
+            return Err(crate::Error::Service(
+                "cluster-bench worker exited without a shutdown handshake".into(),
+            ));
+        }
+    }
+    Ok(bench)
+}
+
 /// §IV ablation: hybrid iteration budget vs |z| and phase times.
 #[derive(Debug, Clone)]
 pub struct HybridSweepPoint {
@@ -985,6 +1110,17 @@ mod tests {
             "fair-share must bound tenant skew: {:?}",
             b.overload
         );
+        // acceptance: the cluster path (remote backends over loopback
+        // wires) answers the same windowed burst with bit-exact values and
+        // the exact fused-reduction count of the in-process run
+        assert!(b.cluster.value_parity, "{:?}", b.cluster);
+        assert_eq!(b.cluster.workers, 2, "{:?}", b.cluster);
+        assert!(b.cluster.coalesced >= b.cluster.queries as u64, "{:?}", b.cluster);
+        assert_eq!(
+            b.cluster.fused_reductions, b.window.fused_reductions,
+            "cluster burst must match the in-process window run: {:?} vs {:?}",
+            b.cluster, b.window
+        );
         let json = report::select_bench_json(&b, "f64", "host");
         let parsed = crate::util::json::Json::parse(&json).unwrap();
         assert_eq!(parsed.get("schema").unwrap().as_str().unwrap(), "cp-select/bench_select/v2");
@@ -1016,6 +1152,14 @@ mod tests {
         assert_eq!(o.get("tenants").unwrap().as_usize().unwrap(), 6);
         assert_eq!(o.get("shed").unwrap().as_usize().unwrap(), 23);
         assert!(o.get("fairness_ratio").unwrap().as_f64().unwrap() >= 1.0);
+        let cl = parsed.get("cluster").unwrap();
+        assert_eq!(cl.get("transport").unwrap().as_str().unwrap(), "loopback");
+        assert_eq!(cl.get("queries").unwrap().as_usize().unwrap(), 8);
+        assert_eq!(cl.get("workers").unwrap().as_usize().unwrap(), 2);
+        assert_eq!(
+            cl.get("fused_reductions").unwrap().as_usize().unwrap() as u64,
+            b.window.fused_reductions
+        );
     }
 
     #[test]

@@ -126,7 +126,8 @@ fn json_str(s: &str) -> String {
 /// unavailable offline). Schema `cp-select/bench_select/v2`:
 /// method × n × fused reductions × wall-ms (median + p99 of the reps)
 /// rows under a `host` fingerprint, plus the coordinator coalescing
-/// counts and — from the `bench-wall` path — the bin-sweep throughput
+/// counts, the cluster-parity block (the windowed burst over loopback
+/// wires) and — from the `bench-wall` path — the bin-sweep throughput
 /// race and the measured pass-cost coefficients, so future PRs can diff
 /// both the count trajectory (hard gate, host-independent) and the
 /// wall-clock trajectory (informational, fingerprint-scoped).
@@ -219,7 +220,7 @@ pub fn select_bench_json(b: &SelectBench, dtype: &str, backend: &str) -> String 
     s.push_str(&format!(
         "  \"overload\": {{\"backend\": \"host\", \"tenants\": {}, \"submitted\": {}, \
          \"shed\": {}, \"deadline_exceeded\": {}, \"worker_faults\": {}, \"ok\": {}, \
-         \"all_resolved\": {}, \"fairness_ratio\": {:.4}, \"fairness_ratio_bound\": 3.0}}\n",
+         \"all_resolved\": {}, \"fairness_ratio\": {:.4}, \"fairness_ratio_bound\": 3.0}},\n",
         b.overload.tenants,
         b.overload.submitted,
         b.overload.shed,
@@ -228,6 +229,20 @@ pub fn select_bench_json(b: &SelectBench, dtype: &str, backend: &str) -> String 
         b.overload.ok,
         b.overload.all_resolved,
         b.overload.fairness_ratio
+    ));
+    // cluster parity: the same windowed burst answered over the cluster
+    // message layer (loopback wires) must coalesce identically — value
+    // parity is bit-exact, fused parity gates by equality with `window`.
+    s.push_str(&format!(
+        "  \"cluster\": {{\"backend\": \"host\", \"transport\": \"{}\", \"queries\": {}, \
+         \"workers\": {}, \"coalesced\": {}, \"fused_reductions\": {}, \
+         \"value_parity\": {}}}\n",
+        b.cluster.transport,
+        b.cluster.queries,
+        b.cluster.workers,
+        b.cluster.coalesced,
+        b.cluster.fused_reductions,
+        b.cluster.value_parity
     ));
     s.push_str("}\n");
     s

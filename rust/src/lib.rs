@@ -252,6 +252,41 @@
 //!    launches and honestly counts one reduction per launch — counts are
 //!    never under-reported.
 //!
+//! ## Cluster mode and the message layer
+//!
+//! [`cluster`] splits the service across processes: `cp-select cluster
+//! coordinator` serves clients over TCP, and `cp-select cluster worker`
+//! processes host dataset shards. One wire protocol
+//! ([`coordinator::messages`]) covers both hops — length-prefixed JSON
+//! frames with typed request/response enums, `u64` payloads as decimal
+//! strings (no width loss), non-finite `f64` as tagged strings, and
+//! errors as a typed frame that preserves [`Error::Overloaded`]'s
+//! `retry_after_us` and [`Error::DeadlineExceeded`]'s `late_us` (both on
+//! the coordinator's clock) plus [`Error::Disconnected`]'s peer.
+//!
+//! The load-bearing design decision: a remote worker is *just a
+//! [`coordinator::DatasetBackend`]* ([`cluster::RemoteBackend`]) whose
+//! `Evaluator` primitives each travel as one `Shard*` round trip, so a
+//! fused probe ladder is still one wire exchange shipping per-rung
+//! sufficient statistics, never raw data. Plugged in through the ordinary
+//! `BackendFactory`, the wire path shares admission control, deadlines,
+//! coalescing, and the [`coordinator::CostModelPool`] with the
+//! in-process path by construction.
+//!
+//! Failure semantics mirror the in-process fault isolation: a worker
+//! connection dying mid-batch surfaces as [`Error::Disconnected`] and
+//! fails only that batch; the worker re-registers (each registration
+//! bumps a **version** counter) and later queries proceed — workers keep
+//! their backends across reconnects, so datasets survive a coordinator
+//! hiccup without re-upload. Worker-side cost-model statistics ship on a
+//! pull/reset protocol stamped with the registration version; the
+//! coordinator merges sums only while the version is current, so a
+//! restarted worker cannot smuggle stale timings into the pool. Probe
+//! passes are timed on *both* clocks deliberately: the worker observes
+//! compute-only wall time, the coordinator observes end-to-end wall time
+//! including RTT — bracketing measurements for the same cost law, and
+//! the pool's identifiability guards arbitrate.
+//!
 //! ## Static analysis and concurrency invariants
 //!
 //! The control plane's correctness rests on conventions, and [`analysis`]
@@ -283,7 +318,8 @@
 //!   `runtime/`, `select/`; test modules excluded): fallible paths
 //!   return [`Error`] instead of riding the fault-isolation machinery.
 //! - **panic_boundary** — `DatasetBackend` calls in
-//!   `coordinator/service.rs` stay inside `catch_unwind` fault isolation.
+//!   `coordinator/dispatch.rs` and `cluster/worker.rs` stay inside
+//!   `catch_unwind` fault isolation.
 //! - **metrics_triple_entry** — every `Metrics` counter also has a
 //!   `Snapshot` field, a `snapshot()` copy, and a `Display` arm.
 //! - **atomic_ordering** — every `Metrics` counter access uses
@@ -326,6 +362,7 @@
 //! ```
 
 pub mod analysis;
+pub mod cluster;
 pub mod config;
 pub mod coordinator;
 pub mod device;

@@ -14,6 +14,9 @@
 //! cp-select regress  [opts]               LMS/LTS robust-regression demo
 //! cp-select knn      [opts]               kNN demo
 //! cp-select lint     [--root DIR] [--format text|json]  in-repo invariant lint
+//! cp-select cluster coordinator [opts]    TCP coordinator (serves clients + workers)
+//! cp-select cluster worker --id N [opts]  TCP worker process (hosts dataset shards)
+//! cp-select cluster smoke [opts]          8-client end-to-end smoke against a coordinator
 //! ```
 //!
 //! Common options: `--config FILE`, `--backend host|device`,
@@ -24,6 +27,9 @@ use std::collections::HashMap;
 use std::path::PathBuf;
 use std::process::ExitCode;
 
+use cp_select::cluster::{
+    self, run_coordinator, run_worker, ClusterClient, RemoteBackend, ServeOptions, WorkerOptions,
+};
 use cp_select::config::Config;
 use cp_select::coordinator::{
     lru_factory, AdaptiveWindow, CostModelPool, HostBackend, KSpec, SelectionService, ShedPolicy,
@@ -142,6 +148,22 @@ fn run_cli(args: Vec<String>) -> Result<()> {
         print_usage();
         return Ok(());
     };
+    if cmd == "cluster" {
+        let Some((mode, cluster_rest)) = rest.split_first() else {
+            return Err(cp_select::invalid_arg!(
+                "cluster needs a mode: coordinator|worker|smoke"
+            ));
+        };
+        let opts = Opts::parse(cluster_rest)?;
+        return match mode.as_str() {
+            "coordinator" => cmd_cluster_coordinator(&opts),
+            "worker" => cmd_cluster_worker(&opts),
+            "smoke" => cmd_cluster_smoke(&opts),
+            other => Err(cp_select::invalid_arg!(
+                "unknown cluster mode {other:?} (coordinator|worker|smoke)"
+            )),
+        };
+    }
     let opts = Opts::parse(rest)?;
     match cmd.as_str() {
         "info" => cmd_info(&opts),
@@ -169,12 +191,16 @@ fn print_usage() {
         "cp-select — parallel median/order statistics via convex minimization\n\
          (reproduction of Beliakov 2011; see README.md)\n\n\
          subcommands: info select bench-table bench-select bench-wall trace outliers\n\
-         \x20             hybrid-sweep serve-demo regress knn lint\n\
+         \x20             hybrid-sweep serve-demo regress knn lint cluster\n\
          common flags: --config F --backend host|device --artifacts DIR\n\
          \x20             --dtype f32|f64 --n N --method M --dist D --seed S --out DIR\n\
          bench-wall:   --quick 1 (small sizes + 3 reps) --smoke 1 (fail if the\n\
          \x20             vectorized bin sweep is < 1.5x the scalar kernel)\n\
          \x20             --reps N --sweep-n N (kernel-race size, default 2^22)\n\
+         cluster:      coordinator|worker|smoke --config F (reads [cluster]);\n\
+         \x20             coordinator --listen HOST:PORT --workers N;\n\
+         \x20             worker --id N --addr HOST:PORT --backend host|device;\n\
+         \x20             smoke --addr HOST:PORT --n N --shutdown 0|1\n\
          serve-demo:   --latency-sla-us US (adaptive window p99 budget, default)\n\
          \x20             --batch-window-us US (pin a fixed window instead)\n\
          \x20             --batch-cap N --cost-model-sidecar FILE\n\
@@ -619,6 +645,158 @@ fn cmd_knn(opts: &Opts) -> Result<()> {
         worst,
         t0.elapsed()
     );
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// cluster mode
+
+fn ms(v: u64) -> std::time::Duration {
+    std::time::Duration::from_millis(v)
+}
+
+/// Serve a TCP coordinator: the plain [`SelectionService`] wired to
+/// remote workers through `RemoteBackend` (one service worker thread per
+/// remote worker), plus the accept loop that routes client sessions and
+/// worker registrations. Blocks until a client sends shutdown.
+fn cmd_cluster_coordinator(opts: &Opts) -> Result<()> {
+    let cfg = opts.config()?;
+    let listen = opts.get("listen").unwrap_or(cfg.cluster.listen.as_str()).to_string();
+    let workers = opts.u64("workers", cfg.cluster.workers as u64)?.max(1) as u32;
+    let pool = match cfg.cost_model_sidecar.clone() {
+        Some(path) => CostModelPool::load_or_seed(path),
+        None => CostModelPool::seeded(),
+    };
+    let registry = cluster::coordinator::Registry::new();
+    let factory = RemoteBackend::factory(
+        registry.clone(),
+        pool.clone(),
+        workers,
+        ms(cfg.cluster.connect_timeout_ms.max(1)),
+    );
+    let clock = Clock::real();
+    let svc = SelectionService::start_full(
+        workers as usize,
+        cfg.queue_depth,
+        cfg.default_method,
+        factory,
+        cfg.coordinator_options(),
+        clock.clone(),
+        pool,
+    )?;
+    let listener = std::net::TcpListener::bind(&listen)
+        .map_err(|e| cp_select::Error::io(listen.clone(), e))?;
+    println!("cluster coordinator listening on {listen} ({workers} remote workers)");
+    run_coordinator(
+        listener,
+        svc,
+        registry,
+        clock,
+        ServeOptions {
+            client_poll: std::time::Duration::from_millis(500),
+            shard_io_timeout: ms(cfg.cluster.io_timeout_ms),
+        },
+    )?;
+    println!("cluster coordinator stopped");
+    Ok(())
+}
+
+/// Run a worker process body: host (default) or device backend, serving
+/// shard ops until the coordinator shuts the cluster down.
+fn cmd_cluster_worker(opts: &Opts) -> Result<()> {
+    let cfg = opts.config()?;
+    let id = opts
+        .get("id")
+        .ok_or_else(|| cp_select::invalid_arg!("cluster worker needs --id N"))?;
+    let id: u32 = id
+        .parse()
+        .map_err(|_| cp_select::invalid_arg!("--id: bad integer {id:?}"))?;
+    let addr = opts.get("addr").unwrap_or(cfg.cluster.listen.as_str()).to_string();
+    let factory = match opts.get("backend").unwrap_or("host") {
+        "device" => cp_select::coordinator::DeviceBackend::factory(
+            cfg.artifacts_dir.clone(),
+            cfg.kernel_flavor,
+        ),
+        _ => HostBackend::factory(),
+    };
+    let wopts = WorkerOptions {
+        connect_timeout: ms(cfg.cluster.connect_timeout_ms),
+        reconnect_backoff: std::time::Duration::from_millis(200),
+        heartbeat: ms(cfg.cluster.heartbeat_ms),
+    };
+    println!("cluster worker {id} dialing {addr}");
+    run_worker(&addr, id, factory, Clock::real(), wopts)?;
+    println!("cluster worker {id} stopped");
+    Ok(())
+}
+
+/// End-to-end smoke against a live coordinator: upload one dataset, fan
+/// out N concurrent clients querying distinct ranks, and verify every
+/// answer bit-exactly against a host-side sort. `--shutdown 1` (default)
+/// stops the whole cluster afterwards, so CI can tear down by exit code.
+fn cmd_cluster_smoke(opts: &Opts) -> Result<()> {
+    let cfg = opts.config()?;
+    let addr = opts.get("addr").unwrap_or(cfg.cluster.listen.as_str()).to_string();
+    let n = opts.usize("n", 1 << 14)?;
+    let seed = opts.u64("seed", 42)?;
+    let clients = opts.usize("clients", 8)?.max(1);
+    let shutdown = opts.usize("shutdown", 1)? != 0;
+    let connect = ms(cfg.cluster.connect_timeout_ms.max(1));
+    let io = ms(cfg.cluster.io_timeout_ms.max(1));
+
+    let mut rng = Rng::seeded(seed);
+    let data = Distribution::Normal.sample_vec(&mut rng, n);
+    let mut sorted = data.clone();
+    sorted.sort_by(f64::total_cmp);
+
+    // The coordinator may still be binding its listener: retry briefly,
+    // parking on the clock (thread::sleep is banned outside benches).
+    let clock = Clock::real();
+    let (_keep_alive, parker) = std::sync::mpsc::channel::<()>();
+    let dial = || -> Result<ClusterClient> {
+        let mut last = cp_select::Error::Service(format!("never dialed {addr}"));
+        for _ in 0..50 {
+            match ClusterClient::connect(&addr, connect, io) {
+                Ok(c) => return Ok(c),
+                Err(e) => last = e,
+            }
+            let _ = clock.recv_deadline(&parker, clock.now_us() + 100_000);
+        }
+        Err(last)
+    };
+
+    let mut main_client = dial()?;
+    let dataset = main_client.upload(data, DType::F64)?;
+    let handles: Vec<_> = (0..clients)
+        .map(|i| {
+            let rank = ((i + 1) * n / (clients + 1)).clamp(1, n);
+            let addr = addr.clone();
+            std::thread::spawn(move || -> Result<(usize, f64)> {
+                let mut c = ClusterClient::connect(&addr, connect, io)?;
+                let r = c.query(dataset, KSpec::Rank(rank), None, i as u32, None)?;
+                Ok((rank, r.value))
+            })
+        })
+        .collect();
+    let mut checked = 0usize;
+    for h in handles {
+        let (rank, value) = h
+            .join()
+            .map_err(|_| cp_select::Error::Service("smoke client panicked".into()))??;
+        let expected = sorted[rank - 1];
+        if value.to_bits() != expected.to_bits() {
+            return Err(cp_select::Error::Service(format!(
+                "rank {rank}: cluster answered {value}, host sort says {expected}"
+            )));
+        }
+        checked += 1;
+    }
+    println!("cluster smoke ok: {checked}/{clients} client answers bit-exact vs host sort (n={n})");
+    println!("coordinator metrics: {}", main_client.stats()?);
+    if shutdown {
+        main_client.shutdown()?;
+        println!("cluster shut down");
+    }
     Ok(())
 }
 

@@ -436,6 +436,10 @@ impl CostModelPool {
     /// in-memory pools). Called by the service on shutdown. Writes a temp
     /// file and renames it over the sidecar so a crash mid-write leaves
     /// the previous statistics intact instead of a truncated document.
+    /// The temp name carries the writing pid: two processes sharing one
+    /// sidecar (coordinator + workers, or concurrent test binaries) must
+    /// not interleave bytes into the same staging file, or the rename
+    /// publishes a mix of both documents.
     pub fn persist(&self) -> Result<Option<PathBuf>> {
         let Some(path) = &self.sidecar else {
             return Ok(None);
@@ -446,7 +450,7 @@ impl CostModelPool {
                 std::fs::create_dir_all(dir).map_err(|e| Error::io(dir.display().to_string(), e))?;
             }
         }
-        let tmp = path.with_extension("json.tmp");
+        let tmp = path.with_extension(format!("json.{}.tmp", std::process::id()));
         std::fs::write(&tmp, json).map_err(|e| Error::io(tmp.display().to_string(), e))?;
         std::fs::rename(&tmp, path).map_err(|e| Error::io(path.display().to_string(), e))?;
         Ok(Some(path.clone()))

@@ -37,6 +37,10 @@ pub enum Fault {
     /// absolute virtual time, then runs normally. While parked the worker
     /// counts as a clock waiter, so tests can `wait_for_waiters` on it.
     HoldUntil(u64),
+    /// The pass returns [`Error::Disconnected`] — the typed signal a
+    /// cluster worker emits when its wire dies mid-ladder. Cluster tests
+    /// use it to script a disconnect at an exact fused-pass index.
+    Disconnect,
 }
 
 #[derive(Default)]
@@ -99,6 +103,9 @@ impl FaultScript {
             Some(Fault::Error(msg)) => return Err(Error::Service(msg)),
             Some(Fault::Panic(msg)) => panic!("{msg}"),
             Some(Fault::HoldUntil(t_us)) => self.clock.sleep_until(t_us),
+            Some(Fault::Disconnect) => {
+                return Err(Error::Disconnected { peer: "fault-script".into() })
+            }
         }
         if self.pass_cost_us > 0 {
             self.clock.advance_us(self.pass_cost_us);
@@ -246,6 +253,19 @@ mod tests {
         let err = ev.probe(1.0).unwrap_err(); // pass 1: injected
         assert!(err.to_string().contains("injected"));
         ev.probe(1.0).unwrap(); // pass 2: fault consumed
+    }
+
+    #[test]
+    fn scripted_disconnect_is_a_typed_disconnected_error() {
+        let (_clock, vc) = Clock::manual();
+        let script = FaultScript::new(vc, 0);
+        script.fault_at(3, 0, Fault::Disconnect);
+        let mut b = backend(&script);
+        b.upload(3, &[1.0, 2.0], DType::F64).unwrap();
+        let ev = b.evaluator(3).unwrap();
+        let err = ev.probe(1.5).unwrap_err();
+        assert_eq!(err.kind(), crate::error::ErrorKind::Disconnected);
+        ev.probe(1.5).unwrap(); // fault consumed: next pass is clean
     }
 
     #[test]

@@ -17,6 +17,7 @@
 //! |------|-------------------------|---------------------------------------|
 //! | 10   | [`RANK_ADMISSION`]      | `service.admission` (token buckets)   |
 //! | 20   | [`RANK_TENANT_DEPTH`]   | `metrics.tenant_depth`                |
+//! | 25   | [`RANK_CLUSTER_REGISTRY`]| `cluster.registry` (worker slots)    |
 //! | 30   | [`RANK_COST_MODEL_POOL`]| `gpu_model.inner` (shared cost model) |
 //! | 40   | [`RANK_FAULT_SCRIPT`]   | `fault.state` (test fault script)     |
 //! | 50   | [`RANK_VIRTUAL_CLOCK`]  | `clock.state` (virtual clock)         |
@@ -32,6 +33,7 @@ use std::sync::{Condvar, Mutex, MutexGuard};
 
 pub const RANK_ADMISSION: u32 = 10;
 pub const RANK_TENANT_DEPTH: u32 = 20;
+pub const RANK_CLUSTER_REGISTRY: u32 = 25;
 pub const RANK_COST_MODEL_POOL: u32 = 30;
 pub const RANK_FAULT_SCRIPT: u32 = 40;
 pub const RANK_VIRTUAL_CLOCK: u32 = 50;
@@ -108,6 +110,26 @@ impl<'a, T> OrderedGuard<'a, T> {
         std::mem::forget(self);
         let inner = cv.wait(inner).unwrap_or_else(|e| e.into_inner());
         OrderedGuard { guard: ManuallyDrop::new(inner), rank }
+    }
+
+    /// Like [`wait`](Self::wait) but gives up after `dur`. Returns the
+    /// re-acquired guard and whether the wait timed out. The rank entry
+    /// stays on the held stack across the wait, same as `wait`.
+    pub fn wait_timeout(
+        mut self,
+        cv: &Condvar,
+        dur: std::time::Duration,
+    ) -> (OrderedGuard<'a, T>, bool) {
+        let rank = self.rank;
+        // SAFETY: `self` is forgotten immediately after the take, so the
+        // guard is dropped exactly once (inside cv.wait_timeout's
+        // re-acquire).
+        let inner = unsafe { ManuallyDrop::take(&mut self.guard) };
+        std::mem::forget(self);
+        let (inner, res) = cv
+            .wait_timeout(inner, dur)
+            .unwrap_or_else(|e| e.into_inner());
+        (OrderedGuard { guard: ManuallyDrop::new(inner), rank }, res.timed_out())
     }
 }
 
@@ -198,6 +220,39 @@ mod tests {
         drop(g);
         // ...and is released with the guard
         let _ok = low.lock();
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn wait_timeout_reports_expiry_and_keeps_rank_protocol() {
+        let shared = Arc::new((OrderedMutex::new(30, "slot", false), Condvar::new()));
+        // nothing signals: the wait must expire and hand the guard back
+        let (m, cv) = &*shared;
+        let g = m.lock();
+        let (g, timed_out) = g.wait_timeout(cv, std::time::Duration::from_millis(5));
+        assert!(timed_out);
+        assert!(!*g);
+        drop(g);
+
+        // a signalled wait returns before the (long) timeout
+        let peer = Arc::clone(&shared);
+        let t = std::thread::spawn(move || {
+            let (m, cv) = &*peer;
+            *m.lock() = true;
+            cv.notify_one();
+        });
+        let (m, cv) = &*shared;
+        let mut g = m.lock();
+        let mut expired = false;
+        while !*g && !expired {
+            let (g2, to) = g.wait_timeout(cv, std::time::Duration::from_secs(5));
+            g = g2;
+            expired = to;
+        }
+        assert!(*g, "condvar signal lost");
+        // the rank was held across the timed wait and releases with the guard
+        drop(g);
+        let _ok = OrderedMutex::new(10, "after-low", ()).lock();
         t.join().unwrap();
     }
 }

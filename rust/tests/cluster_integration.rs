@@ -1,0 +1,313 @@
+//! Cluster mode end-to-end: loopback-wire coordinator/worker stacks under
+//! a frozen virtual clock (deterministic coalescing parity with the
+//! in-process service), scripted mid-ladder disconnects (fault isolation,
+//! reconnect, dataset survival), and one real-TCP run of the full
+//! coordinator/worker/client stack.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use cp_select::cluster::coordinator::Registry;
+use cp_select::cluster::transport::loopback_pair;
+use cp_select::cluster::{
+    run_coordinator, run_worker, serve, ClusterClient, RemoteBackend, ServeExit, ServeOptions,
+    WorkerOptions,
+};
+use cp_select::coordinator::messages::WireRequest;
+use cp_select::coordinator::{
+    CoordinatorOptions, CostModelPool, HostBackend, KSpec, SelectionService,
+};
+use cp_select::error::ErrorKind;
+use cp_select::select::{DType, Method, PassCostModel};
+use cp_select::stats::{sorted_median, Distribution, Rng};
+use cp_select::testkit::{Clock, Fault, FaultInjectingBackend, FaultScript};
+
+/// Start `workers` loopback serve loops over host backends, registered in
+/// `registry` as worker ids `0..workers`. Returns the join handles; each
+/// exits with the [`ServeExit`] its serve loop reported.
+fn spawn_loopback_workers(
+    registry: &Arc<Registry>,
+    clock: &Clock,
+    workers: u32,
+) -> Vec<std::thread::JoinHandle<ServeExit>> {
+    (0..workers)
+        .map(|w| {
+            let (coord_side, mut worker_side) =
+                loopback_pair(&format!("worker-{w}"), "coordinator");
+            let version = registry
+                .register(w, Box::new(coord_side), clock.now_us())
+                .expect("register");
+            let w_clock = clock.clone();
+            std::thread::spawn(move || {
+                let _ = worker_side.recv(); // Registered ack
+                let mut backend = HostBackend::default();
+                let mut stats = PassCostModel::seeded();
+                serve(&mut worker_side, &mut backend, &mut stats, version, &w_clock)
+            })
+        })
+        .collect()
+}
+
+/// Shut a cluster service down the way `run_coordinator` does: the service
+/// first (parks every wire back in the registry), then shutdown frames to
+/// every parked worker connection.
+fn shutdown_cluster(svc: SelectionService, registry: &Registry) {
+    svc.shutdown();
+    for mut conn in registry.drain_conns() {
+        if conn.send(&WireRequest::Shutdown.encode()).is_ok() {
+            let _ = conn.recv();
+        }
+    }
+}
+
+/// Acceptance: the 8-client windowed burst answered over the cluster
+/// message layer (2 remote workers behind loopback wires) returns
+/// bit-exact values and costs exactly the fused reductions of the same
+/// burst on the in-process service — the wire path enters through the same
+/// `BackendFactory` seam, so the planner cannot tell the difference.
+#[test]
+fn eight_clients_two_workers_match_the_in_process_run_exactly() {
+    let mut rng = Rng::seeded(42);
+    let data = Distribution::Uniform.sample_vec(&mut rng, 1 << 14);
+    let want = sorted_median(&data);
+    let opts = || CoordinatorOptions {
+        batch_window: Duration::from_millis(250),
+        batch_cap: 8,
+        ..Default::default()
+    };
+
+    // In-process reference run: frozen virtual window, cap closes it.
+    let in_process_fused = {
+        let (clock, _vc) = Clock::manual();
+        let svc = SelectionService::start_full(
+            1,
+            64,
+            Method::Multisection,
+            HostBackend::factory(),
+            opts(),
+            clock,
+            CostModelPool::seeded(),
+        )
+        .unwrap();
+        let id = svc.upload(data.clone(), DType::F64).unwrap();
+        let p0 = svc.metrics.snapshot().probes;
+        let rxs: Vec<_> = (0..8)
+            .map(|_| svc.query_async(id, KSpec::Median, Method::Multisection).unwrap())
+            .collect();
+        for rx in rxs {
+            let r = rx.recv().expect("reply").expect("query");
+            assert_eq!(r.value.to_bits(), want.to_bits());
+        }
+        let fused = svc.metrics.snapshot().probes - p0;
+        svc.shutdown();
+        fused
+    };
+
+    // Same burst, but every probe ladder crosses a wire.
+    let (clock, _vc) = Clock::manual();
+    let registry = Registry::new();
+    let serves = spawn_loopback_workers(&registry, &clock, 2);
+    let pool = CostModelPool::seeded();
+    let factory = RemoteBackend::factory(
+        Arc::clone(&registry),
+        Arc::clone(&pool),
+        2,
+        Duration::from_secs(10),
+    );
+    let svc = SelectionService::start_full(
+        2,
+        64,
+        Method::Multisection,
+        factory,
+        opts(),
+        clock,
+        pool,
+    )
+    .unwrap();
+    let id = svc.upload(data, DType::F64).unwrap();
+    let p0 = svc.metrics.snapshot().probes;
+    let rxs: Vec<_> = (0..8)
+        .map(|_| svc.query_async(id, KSpec::Median, Method::Multisection).unwrap())
+        .collect();
+    for rx in rxs {
+        let r = rx.recv().expect("reply").expect("cluster query");
+        assert_eq!(r.value.to_bits(), want.to_bits(), "cluster answer must be bit-exact");
+    }
+    let snap = svc.metrics.snapshot();
+    assert!(snap.coalesced >= 8, "cluster window caught {} of 8 clients", snap.coalesced);
+    assert_eq!(
+        snap.probes - p0,
+        in_process_fused,
+        "cluster burst must cost exactly the in-process fused reductions"
+    );
+    shutdown_cluster(svc, &registry);
+    for h in serves {
+        assert_eq!(h.join().expect("serve thread"), ServeExit::Shutdown);
+    }
+}
+
+/// A worker whose backend reports `Disconnected` mid-ladder (a scripted
+/// [`Fault::Disconnect`] on the 4th fused pass) drops its coordinator
+/// connection without a reply. The in-flight batch — and only it — fails
+/// with a typed `Disconnected` error; the worker re-registers (version
+/// bump) keeping its backend, so the next query on the same dataset
+/// succeeds without a re-upload.
+#[test]
+fn mid_ladder_disconnect_fails_one_batch_and_reconnect_recovers() {
+    let (clock, vc) = Clock::manual();
+    let script = FaultScript::new(vc, 0);
+    let registry = Registry::new();
+    let worker = std::thread::spawn({
+        let registry = Arc::clone(&registry);
+        let clock = clock.clone();
+        let factory = FaultInjectingBackend::factory(script.clone());
+        move || {
+            // run_worker's shape without TCP: one backend across
+            // reconnects, a fresh wire + registration per serve loop.
+            let mut backend = factory(0).expect("worker backend");
+            let mut stats = PassCostModel::seeded();
+            loop {
+                let (coord_side, mut worker_side) = loopback_pair("worker-0", "coordinator");
+                let version = registry
+                    .register(0, Box::new(coord_side), clock.now_us())
+                    .expect("register");
+                let _ = worker_side.recv(); // Registered ack
+                match serve(&mut worker_side, backend.as_mut(), &mut stats, version, &clock) {
+                    ServeExit::Shutdown => break,
+                    ServeExit::Disconnected => continue,
+                }
+            }
+        }
+    });
+    let pool = CostModelPool::seeded();
+    let factory = RemoteBackend::factory(
+        Arc::clone(&registry),
+        Arc::clone(&pool),
+        1,
+        Duration::from_secs(10),
+    );
+    let svc = SelectionService::start_full(
+        1,
+        64,
+        Method::Multisection,
+        factory,
+        CoordinatorOptions::default(),
+        clock,
+        pool,
+    )
+    .unwrap();
+    let mut rng = Rng::seeded(7);
+    let data = Distribution::Mixture2.sample_vec(&mut rng, 4096);
+    let want = sorted_median(&data);
+    let id = svc.upload(data, DType::F64).unwrap();
+
+    // Healthy query first: the ladder works end to end over the wire.
+    assert_eq!(svc.query(id, KSpec::Median).unwrap().value.to_bits(), want.to_bits());
+
+    // Script a disconnect mid-ladder on this dataset's next run. Passes
+    // are counted per dataset: the healthy run consumed some, so schedule
+    // relative to the current count (init + 3 passes into the new run).
+    let burned = script.calls(id);
+    script.fault_at(id, burned + 3, Fault::Disconnect);
+    let err = svc.query(id, KSpec::Median).unwrap_err();
+    assert_eq!(err.kind(), ErrorKind::Disconnected, "typed disconnect, got {err}");
+
+    // Only that batch failed: the worker re-registered with its datasets
+    // intact, so the same query now succeeds without any re-upload.
+    assert_eq!(svc.query(id, KSpec::Median).unwrap().value.to_bits(), want.to_bits());
+    assert!(
+        registry.current_version(0) >= 2,
+        "reconnect must bump the registration version, got {}",
+        registry.current_version(0)
+    );
+
+    shutdown_cluster(svc, &registry);
+    worker.join().expect("worker thread");
+}
+
+/// The full TCP stack in one process: `run_coordinator` + two `run_worker`
+/// bodies + a `ClusterClient`, on an OS-assigned port. Mirrors the CI
+/// cluster-smoke job (which runs the same roles as separate processes via
+/// the CLI).
+#[test]
+fn tcp_coordinator_two_workers_and_a_client_round_trip() {
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").expect("bind");
+    let addr = listener.local_addr().expect("addr").to_string();
+    let registry = Registry::new();
+    let pool = CostModelPool::seeded();
+    let factory = RemoteBackend::factory(
+        Arc::clone(&registry),
+        Arc::clone(&pool),
+        2,
+        Duration::from_secs(10),
+    );
+    let svc = SelectionService::start_full(
+        2,
+        64,
+        Method::Multisection,
+        factory,
+        CoordinatorOptions::default(),
+        Clock::real(),
+        pool,
+    )
+    .unwrap();
+    let coordinator = std::thread::spawn({
+        let registry = Arc::clone(&registry);
+        move || {
+            run_coordinator(
+                listener,
+                svc,
+                registry,
+                Clock::real(),
+                ServeOptions {
+                    client_poll: Duration::from_millis(100),
+                    shard_io_timeout: Duration::from_secs(10),
+                },
+            )
+        }
+    });
+    let workers: Vec<_> = (0..2u32)
+        .map(|id| {
+            let addr = addr.clone();
+            std::thread::spawn(move || {
+                run_worker(
+                    &addr,
+                    id,
+                    HostBackend::factory(),
+                    Clock::real(),
+                    WorkerOptions {
+                        connect_timeout: Duration::from_secs(5),
+                        reconnect_backoff: Duration::from_millis(50),
+                        heartbeat: Duration::ZERO,
+                    },
+                )
+            })
+        })
+        .collect();
+
+    let mut rng = Rng::seeded(11);
+    let data = Distribution::HalfNormal.sample_vec(&mut rng, 4096);
+    let mut sorted = data.clone();
+    sorted.sort_by(f64::total_cmp);
+    let want_med = sorted_median(&data);
+
+    let mut client =
+        ClusterClient::connect(&addr, Duration::from_secs(5), Duration::from_secs(30))
+            .expect("client connects");
+    let id = client.upload(data, DType::F64).expect("upload");
+    let r = client.query(id, KSpec::Median, None, 0, None).expect("median");
+    assert_eq!(r.value.to_bits(), want_med.to_bits());
+    let many = client
+        .query_many(id, vec![KSpec::Rank(100), KSpec::Quantile(0.9)], None, 0, None)
+        .expect("query_many");
+    assert_eq!(many.len(), 2);
+    assert_eq!(many[0].value.to_bits(), sorted[99].to_bits());
+    let stats = client.stats().expect("stats");
+    assert!(stats.contains("queries="), "{stats}");
+    client.shutdown().expect("shutdown");
+
+    assert!(coordinator.join().expect("coordinator thread").is_ok());
+    for w in workers {
+        assert!(w.join().expect("worker thread").is_ok());
+    }
+}

@@ -8,7 +8,7 @@
 
 use std::time::Duration;
 
-use cp_select::select::PassCostModel;
+use cp_select::select::{CostModelPool, PassCostModel};
 use cp_select::stats::Rng;
 
 /// One `observe_run` call's arguments (a measured shared-ladder run).
@@ -171,4 +171,59 @@ fn prop_pooled_fit_never_has_worse_residual_than_any_single_worker() {
         }
     }
     assert!(checked > 0, "no identifiable pooled fit in 40 trials");
+}
+
+#[test]
+fn sidecar_persist_is_crash_safe_against_truncated_writes() {
+    // `persist` must stage into a temp file and atomically rename, so a
+    // crash mid-write can only ever leave (a) the previous intact sidecar
+    // plus an orphaned staging file, or (b) the new intact sidecar —
+    // never a truncated document at the sidecar path. `load_or_seed`
+    // therefore either sees real statistics or (for a corrupt document
+    // someone else produced) falls back to the seed, but it never parses
+    // half a write into a mangled model.
+    let dir = std::env::temp_dir().join(format!("cp_select_cost_pool_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).expect("create test dir");
+    let sidecar = dir.join("BENCH_select.cost_model.json");
+
+    // boot 1: observe identifiable runs and persist a full document
+    let pool = CostModelPool::load_or_seed(&sidecar);
+    let mut rng = Rng::seeded(504);
+    for _ in 0..12 {
+        let o = random_obs(&mut rng, 2e-9, 4e-10, 0.02);
+        pool.observe_run(o.passes, o.rungs, o.total, o.n, o.wall);
+    }
+    let written = pool.persist().expect("persist").expect("sidecar-bound");
+    assert_eq!(written, sidecar);
+    let samples = pool.samples();
+    assert!(samples >= 12);
+    let full = std::fs::read_to_string(&sidecar).expect("read sidecar");
+
+    // crash simulation: a writer died after staging only a prefix of the
+    // next document. The staging path is pid-qualified and distinct from
+    // the sidecar, so the intact previous document is what loaders see.
+    let staged = sidecar.with_extension(format!("json.{}.tmp", std::process::id()));
+    std::fs::write(&staged, &full[..full.len() / 2]).expect("stage truncated write");
+    let reloaded = CostModelPool::load_or_seed(&sidecar);
+    assert_eq!(reloaded.samples(), samples, "truncated staging write was observed");
+    assert_eq!(
+        reloaded.snapshot().coefficients(),
+        pool.snapshot().coefficients(),
+        "reloaded model differs from the persisted one"
+    );
+
+    // a truncated document AT the sidecar path (legacy in-place writer
+    // crashed) parses strictly and reseeds instead of loading garbage
+    std::fs::write(&sidecar, &full[..full.len() / 2]).expect("truncate sidecar");
+    let seeded = CostModelPool::load_or_seed(&sidecar);
+    assert_eq!(seeded.samples(), 0, "truncated sidecar must reseed, not half-load");
+    assert_eq!(seeded.snapshot().coefficients(), PassCostModel::seeded().coefficients());
+
+    // and persisting over the truncated file repairs it atomically
+    seeded.persist().expect("persist over truncated").expect("sidecar-bound");
+    let repaired = std::fs::read_to_string(&sidecar).expect("read repaired");
+    PassCostModel::from_json(&repaired).expect("repaired sidecar parses");
+
+    let _ = std::fs::remove_dir_all(&dir);
 }

@@ -156,7 +156,7 @@ fn panic_boundary_fires_on_unprotected_backend_call() {
     let report = lint_two(
         ("src/coordinator/backend.rs", BACKEND_TRAIT),
         (
-            "src/coordinator/service.rs",
+            "src/coordinator/dispatch.rs",
             r#"
 fn worker(backend: &mut dyn DatasetBackend) {
     backend.upload(3);
@@ -169,11 +169,27 @@ fn worker(backend: &mut dyn DatasetBackend) {
 }
 
 #[test]
+fn panic_boundary_covers_the_cluster_serve_loop_too() {
+    let report = lint_two(
+        ("src/coordinator/backend.rs", BACKEND_TRAIT),
+        (
+            "src/cluster/worker.rs",
+            r#"
+fn serve(backend: &mut dyn DatasetBackend) {
+    backend.upload(3);
+}
+"#,
+        ),
+    );
+    assert_eq!(rules_of(&report), ["panic_boundary"]);
+}
+
+#[test]
 fn panic_boundary_accepts_catch_unwind_and_protected_helpers() {
     let report = lint_two(
         ("src/coordinator/backend.rs", BACKEND_TRAIT),
         (
-            "src/coordinator/service.rs",
+            "src/coordinator/dispatch.rs",
             r#"
 fn run_query(backend: &mut dyn DatasetBackend) -> bool {
     backend.upload(3)
@@ -189,11 +205,21 @@ fn worker(backend: &mut dyn DatasetBackend) {
 }
 
 #[test]
-fn panic_boundary_only_applies_to_the_service_file() {
+fn panic_boundary_only_applies_to_the_worker_loop_files() {
+    // Neither an unrelated coordinator file nor service.rs (the worker
+    // loop moved to dispatch.rs) is in the rule's scope.
     let report = lint_two(
         ("src/coordinator/backend.rs", BACKEND_TRAIT),
         (
             "src/coordinator/ingest.rs",
+            "fn feed(backend: &mut dyn DatasetBackend) {\n    backend.upload(3);\n}\n",
+        ),
+    );
+    assert!(report.clean(), "{report}");
+    let report = lint_two(
+        ("src/coordinator/backend.rs", BACKEND_TRAIT),
+        (
+            "src/coordinator/service.rs",
             "fn feed(backend: &mut dyn DatasetBackend) {\n    backend.upload(3);\n}\n",
         ),
     );
@@ -205,7 +231,7 @@ fn panic_boundary_pragma_suppresses() {
     let report = lint_two(
         ("src/coordinator/backend.rs", BACKEND_TRAIT),
         (
-            "src/coordinator/service.rs",
+            "src/coordinator/dispatch.rs",
             r#"
 fn worker(backend: &mut dyn DatasetBackend) {
     // lint: allow(panic_boundary) — fixture exercises suppression
@@ -549,6 +575,7 @@ fn error_discipline_scope_excludes_util_and_test_modules() {
     let src = "fn f(v: Option<u32>) -> u32 {\n    v.unwrap()\n}\n";
     assert!(lint_one("src/util/fx.rs", src).clean());
     assert!(lint_one("src/testkit/fx.rs", src).clean());
+    assert_eq!(rules_of(&lint_one("src/cluster/fx.rs", src)), ["error_discipline"]);
     let test_mod = "#[cfg(test)]\nmod tests {\n    #[test]\n    fn t() {\n        Some(1).unwrap();\n        panic!(\"fine in tests\");\n    }\n}\n";
     assert!(lint_one("src/select/fx.rs", test_mod).clean());
 }
